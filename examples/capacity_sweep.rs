@@ -1,0 +1,70 @@
+//! Capacity sweep: find every policy's max sustainable load (the paper's
+//! headline "increases the max request capacity by up to 45%"). A load is
+//! sustainable while P99 TTFT stays under 25× the light-load latency
+//! (Fig. 8's normalization).
+//!
+//! Run: `cargo run --release --example capacity_sweep -- --trace medium --n 120`
+
+use tetris::config::Policy;
+use tetris::metrics::{max_sustainable_rate, SloCriterion};
+use tetris::sched::{ImprovementController, RateProfile};
+use tetris::sim::SimBuilder;
+use tetris::util::bench::{fmt_secs, Table};
+use tetris::util::cli::Args;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{scale_rate, TraceKind, WorkloadGen};
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let kind = TraceKind::parse(&args.str_or("trace", "medium")).unwrap_or(TraceKind::Medium);
+    let n = args.usize_or("n", 120);
+    let gen = WorkloadGen::paper_trace(kind);
+    let mut rng = Pcg64::new(args.u64_or("seed", 42));
+    let base = gen.generate(n, 1.0, &mut rng);
+
+    let run = |policy: Policy, rate: f64| {
+        let mut b = SimBuilder::paper_8b(policy);
+        b.controller =
+            ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
+        b.run(&scale_rate(&base, rate))
+    };
+
+    // Light-load reference from the best baseline (paper normalizes all
+    // systems to the same 25x light-load threshold).
+    let light = run(Policy::FixedSp(8), 0.05).ttft_summary().mean;
+    let slo = SloCriterion { light_load: light, factor: 25.0 };
+    println!(
+        "light-load P99 TTFT = {} -> sustainable threshold {}",
+        fmt_secs(light),
+        fmt_secs(slo.threshold())
+    );
+
+    let rates: Vec<f64> = (1..=16).map(|i| i as f64 * 0.5).collect();
+    let mut table = Table::new(&["policy", "max sustainable rate (req/s)", "vs fixed-sp8"]);
+    let mut results = Vec::new();
+    for policy in [
+        Policy::Cdsp,
+        Policy::CdspSingleChunk,
+        Policy::LoongServe,
+        Policy::LoongServeDisagg,
+        Policy::FixedSp(8),
+        Policy::FixedSp(16),
+    ] {
+        let cap = max_sustainable_rate(&rates, &slo, |r| run(policy, r).ttft_summary().p99)
+            .unwrap_or(0.0);
+        results.push((policy, cap));
+    }
+    let baseline = results
+        .iter()
+        .find(|(p, _)| *p == Policy::FixedSp(8))
+        .map(|(_, c)| *c)
+        .unwrap_or(1.0);
+    for (policy, cap) in &results {
+        table.row(vec![
+            policy.name(),
+            format!("{cap:.2}"),
+            format!("{:+.0}%", 100.0 * (cap / baseline - 1.0)),
+        ]);
+    }
+    table.print();
+}

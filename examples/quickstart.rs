@@ -1,0 +1,50 @@
+//! Quickstart: the three things Tetris does, in 60 lines.
+//!
+//! 1. Calibrate the Eq. (1) latency model from the paper's Table 1.
+//! 2. Build a CDSP plan for a long request on a fragmented cluster — watch
+//!    it fill the idle gap with an early small-SP chunk (the tetris move).
+//! 3. Run a small simulated serving campaign and print TTFT percentiles.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tetris::cluster::PoolView;
+use tetris::config::{Policy, SchedConfig};
+use tetris::latency::calibration::table1_model;
+use tetris::sched::CdspScheduler;
+use tetris::sim::SimBuilder;
+use tetris::util::bench::fmt_secs;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{TraceKind, WorkloadGen};
+
+fn main() {
+    // 1. The latency model the scheduler plans with.
+    let model = table1_model();
+    println!("Eq.(1) model: prefill(SP=8, 128k tokens) = {}",
+             fmt_secs(model.predict(8, 0.0, 131_072.0)));
+    println!("              prefill(SP=16, 128k tokens) = {}",
+             fmt_secs(model.predict(16, 0.0, 131_072.0)));
+
+    // 2. A CDSP plan on a fragmented pool: 8 instances idle, 8 busy for 1 s.
+    let sched = CdspScheduler::new(model, SchedConfig::default());
+    let mut pool = PoolView::idle(4, 4);
+    for i in 8..16 {
+        pool.delays[i] = 1.0;
+    }
+    let plan = sched.schedule(131_072, &pool, 0.1).expect("plan");
+    println!("\nCDSP plan for a 128k-token request (8 idle + 8 busy instances):");
+    for (i, c) in plan.chunks.iter().enumerate() {
+        println!("  chunk {i}: {} tokens on SP={} (instances {:?})",
+                 c.len, c.sp(), c.group);
+    }
+    println!("  estimated TTFT: {}", fmt_secs(plan.est_ttft));
+
+    // 3. A small simulated campaign.
+    let gen = WorkloadGen::paper_trace(TraceKind::Medium);
+    let mut rng = Pcg64::new(7);
+    let trace = gen.generate(40, 1.5, &mut rng);
+    let m = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+    let s = m.ttft_summary();
+    println!("\nSimulated 40 requests @1.5 req/s on the paper's 8B cluster:");
+    println!("  TTFT p50={} p99={}  throughput {:.0} tok/s",
+             fmt_secs(s.p50), fmt_secs(s.p99), m.token_throughput());
+}

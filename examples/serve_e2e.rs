@@ -1,0 +1,94 @@
+//! End-to-end driver (the harness-mandated E2E validation): load the real
+//! tiny model compiled from JAX/Pallas, serve batched requests through the
+//! full Tetris stack — CDSP dispatcher → prefill worker threads (barrier-
+//! synchronized instance groups) → KV handoff → continuous-batching decode —
+//! and report latency/throughput. Results are recorded in EXPERIMENTS.md.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example serve_e2e [-- --requests 12 --workers 4]
+
+use std::sync::Arc;
+use tetris::config::SchedConfig;
+use tetris::latency::a100_model_for;
+use tetris::modelcfg::ModelArch;
+use tetris::runtime::{artifacts_dir, Engine};
+use tetris::serve::{ServeRequest, Server};
+use tetris::util::bench::{fmt_secs, Table};
+use tetris::util::cli::Args;
+use tetris::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let n_requests = args.usize_or("requests", 12);
+    let workers = args.usize_or("workers", 4);
+    let out_len = args.usize_or("output-len", 6);
+
+    println!("loading artifacts from {:?} ...", artifacts_dir());
+    let engine = Arc::new(Engine::load(&artifacts_dir())?);
+    let a = engine.arch.clone();
+    println!(
+        "tiny-llama: {} layers, d_model {}, {} heads, vocab {} (buckets: L={}, C={})",
+        a.n_layers, a.d_model, a.n_heads, a.vocab, a.l_bucket, a.c_bucket
+    );
+
+    // Scheduler model with SP shape so CDSP paths are exercised (DESIGN §3).
+    let sched_model = a100_model_for(&ModelArch::llama3_8b(), 1, &[1, 2, 4]);
+    let mut cfg = SchedConfig::default();
+    cfg.sp_candidates = vec![1, 2, 4];
+    cfg.min_chunk = 32;
+    let mut server = Server::start(Arc::clone(&engine), workers, sched_model, cfg)?;
+
+    // A mixed-length batch: short chats + long documents (scaled to the
+    // tiny model's cache bucket).
+    let mut rng = Pcg64::new(11);
+    let reqs: Vec<ServeRequest> = (0..n_requests as u64)
+        .map(|id| {
+            let len = if rng.bool(0.5) {
+                rng.range_u64(24, 80) as usize
+            } else {
+                rng.range_u64(200, 420) as usize
+            };
+            ServeRequest {
+                id,
+                prompt: (0..len)
+                    .map(|i| ((i * 31 + id as usize * 7) % a.vocab) as i32)
+                    .collect(),
+                output_len: out_len,
+            }
+        })
+        .collect();
+
+    println!("serving {} requests on {} prefill workers ...", reqs.len(), workers);
+    let m = server.run_trace(&reqs, 0.01)?;
+
+    let mut t = Table::new(&["req", "prompt", "outputs", "TTFT", "mean TBT"]);
+    for r in &m.requests {
+        let mean_tbt = if r.tbt.is_empty() {
+            f64::NAN
+        } else {
+            r.tbt.iter().sum::<f64>() / r.tbt.len() as f64
+        };
+        t.row(vec![
+            r.id.to_string(),
+            r.prompt_len.to_string(),
+            r.output_len.to_string(),
+            fmt_secs(r.ttft()),
+            fmt_secs(mean_tbt),
+        ]);
+    }
+    t.print();
+    let ttft = m.ttft_summary();
+    let tbt = m.tbt_summary();
+    println!(
+        "\nE2E summary: {} requests in {} — TTFT p50={} p99={} | TBT p50={} p99={} | {:.0} tok/s",
+        m.requests.len(),
+        fmt_secs(m.span),
+        fmt_secs(ttft.p50),
+        fmt_secs(ttft.p99),
+        fmt_secs(tbt.p50),
+        fmt_secs(tbt.p99),
+        m.token_throughput()
+    );
+    server.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Trace replay: generate (or load) a paper-shaped production trace, replay
+//! it through the simulator under every policy, and print the Fig. 8-style
+//! comparison row plus per-policy TTFT CDFs (Fig. 9 shape).
+//!
+//! Run: `cargo run --release --example trace_replay -- --trace long --rate 2.0 --n 150`
+
+use tetris::config::Policy;
+use tetris::sched::{ImprovementController, RateProfile};
+use tetris::sim::SimBuilder;
+use tetris::util::bench::{fmt_secs, Table};
+use tetris::util::cli::Args;
+use tetris::util::json::Json;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{trace_from_json, TraceKind, WorkloadGen};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let kind = TraceKind::parse(&args.str_or("trace", "medium")).unwrap_or(TraceKind::Medium);
+    let rate = args.f64_or("rate", 2.0);
+    let n = args.usize_or("n", 150);
+
+    let trace = match args.get("file") {
+        Some(path) => {
+            println!("replaying {path}");
+            trace_from_json(&Json::from_file(std::path::Path::new(path))?)?
+        }
+        None => {
+            println!("synthesizing {} trace: {} requests @ {} req/s", kind.name(), n, rate);
+            let gen = WorkloadGen::paper_trace(kind);
+            let mut rng = Pcg64::new(args.u64_or("seed", 42));
+            gen.generate(n, rate, &mut rng)
+        }
+    };
+    let lens: Vec<f64> = trace.iter().map(|r| r.prompt_len as f64).collect();
+    println!(
+        "lengths: min {:.0} max {:.0} mean {:.0}\n",
+        lens.iter().cloned().fold(f64::INFINITY, f64::min),
+        lens.iter().cloned().fold(0.0, f64::max),
+        lens.iter().sum::<f64>() / lens.len() as f64
+    );
+
+    let mut table = Table::new(&["policy", "ttft p50", "ttft p99", "tbt p50", "tok/s"]);
+    let mut cdfs = Vec::new();
+    for policy in [
+        Policy::Cdsp,
+        Policy::CdspSingleChunk,
+        Policy::LoongServe,
+        Policy::LoongServeDisagg,
+        Policy::FixedSp(8),
+        Policy::FixedSp(16),
+    ] {
+        let mut b = SimBuilder::paper_8b(policy);
+        b.controller =
+            ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
+        let m = b.run(&trace);
+        let ttft = m.ttft_summary();
+        table.row(vec![
+            policy.name(),
+            fmt_secs(ttft.p50),
+            fmt_secs(ttft.p99),
+            fmt_secs(m.tbt_summary().p50),
+            format!("{:.0}", m.token_throughput()),
+        ]);
+        cdfs.push((policy.name(), m.ttft_cdf(8)));
+    }
+    table.print();
+
+    println!("\nTTFT CDFs (Fig. 9 shape):");
+    for (name, cdf) in cdfs {
+        let pts: Vec<String> =
+            cdf.iter().map(|(x, f)| format!("{}:{:.2}", fmt_secs(*x), f)).collect();
+        println!("  {:<20} {}", name, pts.join("  "));
+    }
+    Ok(())
+}

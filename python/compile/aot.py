@@ -1,0 +1,176 @@
+"""AOT compile path: lower the L2 model to HLO text + export weights.
+
+Outputs (``make artifacts``):
+
+* ``artifacts/prefill_chunk.hlo.txt`` — one CDSP chunk forward.
+* ``artifacts/decode_step.hlo.txt``  — one decode token forward.
+* ``artifacts/weights.bin``          — f32 little-endian weights, flat, in
+  ``model.PARAM_ORDER`` order.
+* ``artifacts/manifest.json``        — everything the rust runtime needs:
+  arch constants, shape buckets, weight table (name/shape/offset), artifact
+  input signatures.
+
+Interchange format is **HLO text**, not serialized proto: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_specs():
+    shapes = M.param_shapes()
+    specs = []
+    offset = 0
+    for name in M.PARAM_ORDER:
+        shape = shapes[name]
+        n = int(np.prod(shape))
+        specs.append({
+            "name": name,
+            "shape": list(shape),
+            "offset_bytes": offset,
+            "elems": n,
+        })
+        offset += n * 4
+    return specs, offset
+
+
+def lower_prefill():
+    """jit-lower prefill_chunk with every input a separate HLO parameter."""
+    flat_shapes = [
+        jax.ShapeDtypeStruct(tuple(s["shape"]), jnp.float32)
+        for s in weight_specs()[0]
+    ]
+    kv_shape = (M.N_LAYERS, M.C_BUCKET, M.N_HEADS, M.HEAD_DIM)
+
+    def fn(*args):
+        nw = len(M.PARAM_ORDER)
+        flat = args[:nw]
+        tokens, hk, hv, hist_len, chunk_len = args[nw:]
+        return M.prefill_chunk(
+            flat, tokens, hk, hv, hist_len.reshape(()), chunk_len.reshape(())
+        )
+
+    args = (
+        *flat_shapes,
+        jax.ShapeDtypeStruct((M.L_BUCKET,), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def lower_decode():
+    flat_shapes = [
+        jax.ShapeDtypeStruct(tuple(s["shape"]), jnp.float32)
+        for s in weight_specs()[0]
+    ]
+    kv_shape = (M.N_LAYERS, M.DECODE_C_BUCKET, M.N_HEADS, M.HEAD_DIM)
+
+    def fn(*args):
+        nw = len(M.PARAM_ORDER)
+        flat = args[:nw]
+        token, hk, hv, hist_len = args[nw:]
+        return M.decode_step(flat, token, hk, hv, hist_len.reshape(()))
+
+    args = (
+        *flat_shapes,
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # 1. Weights.
+    params = M.init_params(args.seed)
+    specs, total_bytes = weight_specs()
+    buf = bytearray(total_bytes)
+    for s in specs:
+        arr = np.asarray(params[s["name"]], dtype="<f4").ravel()
+        buf[s["offset_bytes"]:s["offset_bytes"] + arr.nbytes] = arr.tobytes()
+    with open(os.path.join(args.out_dir, "weights.bin"), "wb") as f:
+        f.write(bytes(buf))
+    print(f"weights.bin: {total_bytes} bytes, {len(specs)} tensors")
+
+    # 2. HLO text.
+    for name, lowered in [("prefill_chunk", lower_prefill()),
+                          ("decode_step", lower_decode())]:
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"{name}.hlo.txt: {len(text)} chars")
+
+    # 3. Manifest.
+    manifest = {
+        "arch": {
+            "name": "tiny-llama",
+            "n_layers": M.N_LAYERS,
+            "d_model": M.D_MODEL,
+            "n_heads": M.N_HEADS,
+            "head_dim": M.HEAD_DIM,
+            "d_ff": M.D_FF,
+            "vocab": M.VOCAB,
+        },
+        "buckets": {
+            "l_bucket": M.L_BUCKET,
+            "c_bucket": M.C_BUCKET,
+            "decode_c_bucket": M.DECODE_C_BUCKET,
+        },
+        "weights": specs,
+        "param_order": M.PARAM_ORDER,
+        "artifacts": {
+            "prefill": {
+                "file": "prefill_chunk.hlo.txt",
+                # positional inputs after the weights:
+                "extra_inputs": ["tokens[i32,L]", "hist_k", "hist_v",
+                                  "hist_len[i32,1]", "chunk_len[i32,1]"],
+                "outputs": ["logits[vocab]", "new_k[NL,L,H,HD]",
+                             "new_v[NL,L,H,HD]"],
+            },
+            "decode": {
+                "file": "decode_step.hlo.txt",
+                "extra_inputs": ["token[i32,1]", "hist_k", "hist_v",
+                                  "hist_len[i32,1]"],
+                "outputs": ["logits[vocab]", "new_k[NL,1,H,HD]",
+                             "new_v[NL,1,H,HD]"],
+            },
+        },
+        "seed": args.seed,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: chunked causal prefill attention (the CDSP hot-spot).
+
+FlashAttention-style online-softmax attention of one CDSP chunk against
+(history ++ chunk) keys/values, with the causal offset the chunk's global
+position induces.
+
+Hardware adaptation (DESIGN.md §4): the paper's A100 implementation tiles
+with threadblocks over shared memory and tensor cores. On TPU the same
+insight maps to a `(heads, q_blocks, kv_blocks)` Pallas grid: the q tile is
+resident in VMEM, KV tiles stream HBM→VMEM under `BlockSpec`, the two
+matmuls (`QKᵀ`, `PV`) are MXU-shaped `jnp.dot`s with f32 accumulation, and
+the online-softmax running state `(m, l, acc)` lives in VMEM scratch across
+the kv-block grid dimension. KV tiles strictly in the past skip masking
+entirely (dense MXU work); only the diagonal tile pays for the iota mask.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter (identical
+semantics, plain HLO ops). Real-TPU performance is *estimated* from the
+BlockSpec's VMEM footprint (see `vmem_bytes`) in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30  # large-but-finite: avoids inf-inf NaNs in the recurrence
+
+
+def _chunk_attn_kernel(hist_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, block_q, block_k, scale):
+    """One (head, q-block, kv-block) grid cell."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hist = hist_ref[0]
+    kvlen = kvlen_ref[0]
+
+    q = q_ref[0].astype(jnp.float32)            # [block_q, d]
+    k = k_ref[0].astype(jnp.float32)            # [block_k, d]
+    v = v_ref[0].astype(jnp.float32)            # [block_k, d]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                    # [block_q, block_k]
+
+    # Causal + validity mask in *global* positions.
+    q_pos = hist + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (k_pos <= q_pos) & (k_pos < kvlen)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # [block_q]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)      # fully-masked (padded) rows
+        o_ref[0, :, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def chunk_attention(q, k, v, hist_len, kv_len, *, block_q=32, block_k=64,
+                    interpret=True):
+    """Chunked causal attention. Semantics of `ref.chunk_attention_ref`.
+
+    Args:
+      q: [H, Lq, D] chunk queries (global positions hist_len + i).
+      k, v: [H, Lk, D] (history ++ chunk) keys/values, padded to Lk.
+      hist_len: int32 scalar or shape-(1,) array — real history length.
+      kv_len: int32 scalar or shape-(1,) array — total real keys.
+      block_q, block_k: tile sizes (Lq % block_q == Lk % block_k == 0).
+    """
+    h, lq, d = q.shape
+    lk = k.shape[1]
+    assert k.shape == (h, lk, d) and v.shape == (h, lk, d)
+    assert lq % block_q == 0, f"Lq={lq} % block_q={block_q}"
+    assert lk % block_k == 0, f"Lk={lk} % block_k={block_k}"
+    hist_len = jnp.asarray(hist_len, jnp.int32).reshape((1,))
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape((1,))
+    grid = (h, lq // block_q, lk // block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _chunk_attn_kernel, block_q=block_q, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh, qq, kk: (0,)),            # hist
+            pl.BlockSpec((1,), lambda hh, qq, kk: (0,)),            # kvlen
+            pl.BlockSpec((1, block_q, d), lambda hh, qq, kk: (hh, qq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qq, kk: (hh, kk, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qq, kk: (hh, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hh, qq, kk: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),     # m — running max
+            pltpu.VMEM((block_q,), jnp.float32),     # l — running denom
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc — running numerator
+        ],
+        interpret=interpret,
+    )(hist_len, kv_len, q, k, v)
+
+
+def vmem_bytes(d, block_q=32, block_k=64, bytes_per_el=4):
+    """Estimated VMEM working set of one grid cell (perf-model input for
+    DESIGN.md §8): q tile + k tile + v tile + scratch (m, l, acc) + s/p."""
+    tiles = (block_q * d) + 2 * (block_k * d)            # q, k, v
+    scratch = 2 * block_q + block_q * d                  # m, l, acc
+    inter = block_q * block_k                            # s / p
+    return (tiles + scratch + inter) * bytes_per_el

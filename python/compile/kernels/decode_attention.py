@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: single-token decode attention (flash-decoding style).
+
+Decode attention is bandwidth-bound: one query row against the full KV
+cache. The paper's implementation uses Flash Decoding (split-K across the
+cache). The TPU mapping: grid over (heads, kv_blocks) — the kv dimension is
+the split-K axis; each step streams one KV tile HBM→VMEM, updates the
+online-softmax state in VMEM scratch, and the final step normalizes. The
+single query row stays resident.
+
+`interpret=True` as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, block_k, scale):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kvlen = kvlen_ref[0]
+    q = q_ref[0].astype(jnp.float32)             # [1, d]
+    k = k_ref[0].astype(jnp.float32)             # [block_k, d]
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * scale                                     # [1, block_k]
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < kvlen
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # [1]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, block_k=64, interpret=True):
+    """Decode attention. Semantics of `ref.decode_attention_ref`.
+
+    Args:
+      q: [H, D] the new token's queries (its own k/v already in the cache at
+        position kv_len - 1).
+      k, v: [H, Lk, D] padded KV cache.
+      kv_len: int32 scalar / shape-(1,) — real cache length.
+    """
+    h, d = q.shape
+    lk = k.shape[1]
+    assert k.shape == (h, lk, d) and v.shape == (h, lk, d)
+    assert lk % block_k == 0, f"Lk={lk} % block_k={block_k}"
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape((1,))
+    grid = (h, lk // block_k)
+    scale = 1.0 / (d ** 0.5)
+    q3 = q[:, None, :]  # [H, 1, D]
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh, kk: (0,)),
+            pl.BlockSpec((1, 1, d), lambda hh, kk: (hh, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, kk: (hh, kk, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, kk: (hh, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda hh, kk: (hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, q3, k, v)
+    return out[:, 0, :]

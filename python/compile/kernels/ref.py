@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: straightforward, obviously-right
+implementations of the two attention hot-spots, with explicit masks and no
+blocking. ``python/tests/test_kernels.py`` sweeps the Pallas kernels against
+them with hypothesis.
+"""
+
+import jax.numpy as jnp
+
+
+def chunk_attention_ref(q, k, v, hist_len, kv_len=None):
+    """Chunked causal prefill attention (the CDSP hot-spot).
+
+    The chunk's queries sit at global positions ``hist_len + i``; keys/values
+    cover global positions ``0 .. kv_len`` (history followed by the chunk
+    itself). Query i may attend to keys at positions ``<= hist_len + i``.
+
+    Args:
+      q: [H, Lq, D] chunk queries.
+      k: [H, Lk, D] keys (history ++ chunk; may be padded beyond kv_len).
+      v: [H, Lk, D] values.
+      hist_len: scalar int — number of (real) historical tokens preceding
+        the chunk. The chunk's first real key sits at index hist_len.
+      kv_len: scalar int — total real keys (hist_len + real chunk length).
+        Defaults to Lk (no padding).
+
+    Returns:
+      [H, Lq, D] attention outputs. Padded query rows (global position
+      >= kv_len) produce values the caller must mask out.
+    """
+    h, lq, d = q.shape
+    lk = k.shape[1]
+    if kv_len is None:
+        kv_len = lk
+    scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=jnp.float32))
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    q_pos = hist_len + jnp.arange(lq)[:, None]          # [Lq, 1] global position
+    k_pos = jnp.arange(lk)[None, :]                      # [1, Lk]
+    mask = (k_pos <= q_pos) & (k_pos < kv_len)
+    logits = jnp.where(mask[None, :, :], logits, -jnp.inf)
+    # Guard all-masked rows (padded queries): give them a uniform row
+    # instead of NaN so downstream masking stays simple.
+    all_masked = ~mask.any(axis=-1)                      # [Lq]
+    logits = jnp.where(all_masked[None, :, None], 0.0, logits)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len=None):
+    """Single-token decode attention (flash-decoding oracle).
+
+    Args:
+      q: [H, D] the new token's queries.
+      k: [H, Lk, D] cached keys (possibly padded).
+      v: [H, Lk, D] cached values.
+      kv_len: scalar int — number of real cache entries (the new token's own
+        k/v must already be appended, i.e. position kv_len-1).
+
+    Returns:
+      [H, D].
+    """
+    if kv_len is None:
+        kv_len = k.shape[1]
+    out = chunk_attention_ref(q[:, None, :], k, v, hist_len=kv_len - 1, kv_len=kv_len)
+    return out[:, 0, :]

@@ -1,0 +1,241 @@
+"""L2: the tiny-LLaMA decoder in JAX, calling the L1 Pallas kernels.
+
+Architecture (must match `rust/src/modelcfg::ModelArch::tiny()`):
+RMSNorm → attention (RoPE, MHA) → residual → RMSNorm → SwiGLU MLP →
+residual, × N layers, then final RMSNorm + LM head.
+
+Two entry points are AOT-lowered for the rust serving engine:
+
+* ``prefill_chunk`` — process one CDSP chunk of padded length ``L_BUCKET``
+  against a padded history KV cache (``C_BUCKET``), returning the
+  last-real-token logits and the chunk's new KV shard. The rust coordinator
+  calls this once per (chunk, instance-group) and redistributes the returned
+  KV shard across the group's worker threads (cache balancing with real
+  data movement).
+* ``decode_step`` — one token against the padded cache.
+
+Weights travel as a *flat tuple* in `PARAM_ORDER` order; `aot.py` exports
+them to ``artifacts/weights.bin`` + ``manifest.json`` so the rust runtime
+feeds them positionally. Python never runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.chunk_attention import chunk_attention
+from compile.kernels.decode_attention import decode_attention
+
+# ---- architecture (keep in sync with rust modelcfg::tiny) ------------------
+N_LAYERS = 2
+D_MODEL = 128
+N_HEADS = 4
+HEAD_DIM = D_MODEL // N_HEADS
+D_FF = 384
+VOCAB = 512
+
+# AOT shape buckets.
+L_BUCKET = 64        # max chunk tokens per prefill call
+C_BUCKET = 448       # max history tokens held in the padded cache
+DECODE_C_BUCKET = 512
+
+ROPE_BASE = 10000.0
+
+
+def param_order():
+    """Flat parameter order shared with the rust runtime."""
+    names = ["embed"]
+    for i in range(N_LAYERS):
+        names += [
+            f"l{i}.attn_norm", f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.mlp_norm", f"l{i}.w_gate", f"l{i}.w_up", f"l{i}.w_down",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+PARAM_ORDER = param_order()
+
+
+def param_shapes():
+    shapes = {"embed": (VOCAB, D_MODEL)}
+    for i in range(N_LAYERS):
+        shapes[f"l{i}.attn_norm"] = (D_MODEL,)
+        shapes[f"l{i}.wq"] = (D_MODEL, D_MODEL)
+        shapes[f"l{i}.wk"] = (D_MODEL, D_MODEL)
+        shapes[f"l{i}.wv"] = (D_MODEL, D_MODEL)
+        shapes[f"l{i}.wo"] = (D_MODEL, D_MODEL)
+        shapes[f"l{i}.mlp_norm"] = (D_MODEL,)
+        shapes[f"l{i}.w_gate"] = (D_MODEL, D_FF)
+        shapes[f"l{i}.w_up"] = (D_MODEL, D_FF)
+        shapes[f"l{i}.w_down"] = (D_FF, D_MODEL)
+    shapes["final_norm"] = (D_MODEL,)
+    shapes["lm_head"] = (D_MODEL, VOCAB)
+    return shapes
+
+
+def init_params(seed=0):
+    """Deterministic random init (serving benchmarks don't need training)."""
+    key = jax.random.PRNGKey(seed)
+    shapes = param_shapes()
+    params = {}
+    for name in PARAM_ORDER:
+        key, sub = jax.random.split(key)
+        shape = shapes[name]
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return params
+
+
+def params_to_flat(params):
+    return tuple(params[n] for n in PARAM_ORDER)
+
+
+def flat_to_params(flat):
+    return dict(zip(PARAM_ORDER, flat))
+
+
+# ---- building blocks --------------------------------------------------------
+
+def rms_norm(x, g, eps=1e-5):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)
+
+
+def rope(x, positions):
+    """Rotary embedding. x: [T, H, D]; positions: [T] global indices."""
+    t, h, d = x.shape
+    half = d // 2
+    freqs = ROPE_BASE ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attn_block(p, i, x, hist_k_l, hist_v_l, hist_len, kv_len, positions,
+                decode):
+    """One layer's attention. x: [T, D_MODEL]. Returns (out, new_k, new_v)
+    where new_k/new_v are this chunk's [T, H, HD] KV contributions."""
+    xn = rms_norm(x, p[f"l{i}.attn_norm"])
+    t = x.shape[0]
+    q = (xn @ p[f"l{i}.wq"]).reshape(t, N_HEADS, HEAD_DIM)
+    k = (xn @ p[f"l{i}.wk"]).reshape(t, N_HEADS, HEAD_DIM)
+    v = (xn @ p[f"l{i}.wv"]).reshape(t, N_HEADS, HEAD_DIM)
+    q = rope(q, positions)
+    k = rope(k, positions)
+
+    # Scatter the chunk's k/v into the padded cache at [hist_len, hist_len+t).
+    # The caches are [C, H, HD]; dynamic_update_slice handles the offset.
+    cache_k = jax.lax.dynamic_update_slice(hist_k_l, k, (hist_len, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(hist_v_l, v, (hist_len, 0, 0))
+
+    # Kernel layout is head-major [H, T, D].
+    kh = jnp.transpose(cache_k, (1, 0, 2))
+    vh = jnp.transpose(cache_v, (1, 0, 2))
+    if decode:
+        o = decode_attention(q[0], kh, vh, kv_len)[None, :, :]  # [1, H, HD]
+    else:
+        qh = jnp.transpose(q, (1, 0, 2))
+        o = chunk_attention(qh, kh, vh, hist_len, kv_len)
+        o = jnp.transpose(o, (1, 0, 2))  # [T, H, HD]
+    o = o.reshape(t, D_MODEL) @ p[f"l{i}.wo"]
+    return x + o, k, v
+
+
+def _mlp_block(p, i, x):
+    xn = rms_norm(x, p[f"l{i}.mlp_norm"])
+    gate = jax.nn.silu(xn @ p[f"l{i}.w_gate"])
+    up = xn @ p[f"l{i}.w_up"]
+    return x + (gate * up) @ p[f"l{i}.w_down"]
+
+
+def _forward(p, tokens, hist_k, hist_v, hist_len, chunk_len, decode):
+    """Shared forward. tokens: [T] int32 (padded); hist_k/v:
+    [N_LAYERS, C, H, HD]. Returns (last-token logits, new_k, new_v) with
+    new_k/new_v: [N_LAYERS, T, H, HD]."""
+    t = tokens.shape[0]
+    positions = hist_len + jnp.arange(t, dtype=jnp.int32)
+    kv_len = hist_len + chunk_len
+    x = p["embed"][tokens]
+    new_ks, new_vs = [], []
+    for i in range(N_LAYERS):
+        x, nk, nv = _attn_block(
+            p, i, x, hist_k[i], hist_v[i], hist_len, kv_len, positions, decode)
+        x = _mlp_block(p, i, x)
+        new_ks.append(nk)
+        new_vs.append(nv)
+    x = rms_norm(x, p["final_norm"])
+    logits = x @ p["lm_head"]  # [T, VOCAB]
+    # Last *real* token's logits (chunk_len >= 1).
+    last = jax.lax.dynamic_index_in_dim(logits, chunk_len - 1, axis=0,
+                                        keepdims=False)
+    return last, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def prefill_chunk(flat_params, tokens, hist_k, hist_v, hist_len, chunk_len):
+    """AOT entry point: one CDSP chunk forward.
+
+    Args:
+      flat_params: weights in PARAM_ORDER.
+      tokens: [L_BUCKET] int32 (padded with anything beyond chunk_len).
+      hist_k, hist_v: [N_LAYERS, C_BUCKET, N_HEADS, HEAD_DIM] padded cache.
+      hist_len: () int32 — real history tokens.
+      chunk_len: () int32 — real chunk tokens (1..L_BUCKET).
+
+    Returns:
+      (logits [VOCAB] of the chunk's last real token,
+       new_k [N_LAYERS, L_BUCKET, N_HEADS, HEAD_DIM],
+       new_v likewise) — callers slice [:chunk_len].
+    """
+    p = flat_to_params(flat_params)
+    return _forward(p, tokens, hist_k, hist_v, hist_len, chunk_len, decode=False)
+
+
+def decode_step(flat_params, token, hist_k, hist_v, hist_len):
+    """AOT entry point: one decode token forward.
+
+    Args:
+      token: [1] int32 — the previous output token.
+      hist_k, hist_v: [N_LAYERS, DECODE_C_BUCKET, N_HEADS, HEAD_DIM].
+      hist_len: () int32 — cache entries already present.
+
+    Returns:
+      (logits [VOCAB], new_k [N_LAYERS, 1, N_HEADS, HEAD_DIM], new_v).
+    """
+    p = flat_to_params(flat_params)
+    return _forward(p, token, hist_k, hist_v, hist_len,
+                    jnp.asarray(1, jnp.int32), decode=True)
+
+
+# ---- pure-jnp reference forward (oracle for the full model) ----------------
+
+def reference_forward(params, tokens):
+    """Un-chunked, un-padded full-prompt forward using the jnp oracle
+    attention — the ground truth `prefill_chunk` composition must match.
+    tokens: [T] int32. Returns logits [T, VOCAB]."""
+    from compile.kernels.ref import chunk_attention_ref
+
+    t = tokens.shape[0]
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = params["embed"][tokens]
+    for i in range(N_LAYERS):
+        xn = rms_norm(x, params[f"l{i}.attn_norm"])
+        q = rope((xn @ params[f"l{i}.wq"]).reshape(t, N_HEADS, HEAD_DIM), positions)
+        k = rope((xn @ params[f"l{i}.wk"]).reshape(t, N_HEADS, HEAD_DIM), positions)
+        v = (xn @ params[f"l{i}.wv"]).reshape(t, N_HEADS, HEAD_DIM)
+        o = chunk_attention_ref(
+            jnp.transpose(q, (1, 0, 2)),
+            jnp.transpose(k, (1, 0, 2)),
+            jnp.transpose(v, (1, 0, 2)),
+            hist_len=0,
+        )
+        x = x + jnp.transpose(o, (1, 0, 2)).reshape(t, D_MODEL) @ params[f"l{i}.wo"]
+        x = _mlp_block(params, i, x)
+    x = rms_norm(x, params["final_norm"])
+    return x @ params["lm_head"]

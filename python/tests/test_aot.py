@@ -1,0 +1,92 @@
+"""AOT path: manifest/weights consistency and HLO text sanity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import model as M
+from compile.aot import weight_specs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """Build artifacts if missing (CI runs `make artifacts` first; this is a
+    safety net for direct pytest invocations)."""
+    manifest = os.path.join(ART, "manifest.json")
+    if not os.path.exists(manifest):
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", ART],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            check=True,
+        )
+    with open(manifest) as f:
+        return json.load(f)
+
+
+def test_weight_specs_contiguous():
+    specs, total = weight_specs()
+    offset = 0
+    for s in specs:
+        assert s["offset_bytes"] == offset
+        assert s["elems"] == int(np.prod(s["shape"]))
+        offset += s["elems"] * 4
+    assert offset == total
+
+
+def test_manifest_matches_model(artifacts):
+    a = artifacts["arch"]
+    assert a["n_layers"] == M.N_LAYERS
+    assert a["d_model"] == M.D_MODEL
+    assert a["vocab"] == M.VOCAB
+    assert artifacts["buckets"]["l_bucket"] == M.L_BUCKET
+    assert artifacts["param_order"] == M.PARAM_ORDER
+
+
+def test_weights_bin_size_and_content(artifacts):
+    path = os.path.join(ART, "weights.bin")
+    specs, total = weight_specs()
+    assert os.path.getsize(path) == total
+    # spot-check: the embed tensor round-trips against a fresh init
+    params = M.init_params(artifacts["seed"])
+    raw = np.fromfile(path, dtype="<f4", count=specs[0]["elems"])
+    np.testing.assert_allclose(
+        raw, np.asarray(params["embed"]).ravel(), rtol=1e-7, atol=1e-7)
+
+
+def test_hlo_text_parses_as_hlo(artifacts):
+    for art in artifacts["artifacts"].values():
+        path = os.path.join(ART, art["file"])
+        with open(path) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), f"{art['file']} not HLO text"
+        assert "ENTRY" in text
+        # the xla 0.5.1 text parser chokes on 64-bit ids only in protos; text
+        # must not embed serialized protos
+        assert "\\x" not in text[:1000]
+
+
+def test_hlo_parameter_count(artifacts):
+    import re
+
+    nw = len(M.PARAM_ORDER)
+
+    def entry_arity(path):
+        # nested computations also declare parameter(0..k); the ENTRY arity
+        # is the max parameter index + 1.
+        with open(path) as f:
+            text = f.read()
+        ids = [int(m) for m in re.findall(r"parameter\((\d+)\)", text)]
+        return max(ids) + 1
+
+    # weights + tokens + hk + hv + hist_len + chunk_len
+    assert entry_arity(os.path.join(ART, "prefill_chunk.hlo.txt")) == nw + 5
+    # weights + token + hk + hv + hist_len
+    assert entry_arity(os.path.join(ART, "decode_step.hlo.txt")) == nw + 4

@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (heads, chunk length, history length, head dim),
+dtypes, and block sizes — the CORE correctness signal for the AOT path.
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.chunk_attention import chunk_attention, vmem_bytes
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ref import chunk_attention_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_qkv(rng, h, lq, lk, d, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(h, lq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(h, lk, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(h, lk, d)), dtype)
+    return q, k, v
+
+
+# ---- chunk attention --------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    lq_blocks=st.integers(1, 3),
+    lk_blocks=st.integers(1, 4),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_chunk_attention_matches_ref(h, lq_blocks, lk_blocks, d, seed, data):
+    block_q, block_k = 16, 32
+    lq = lq_blocks * block_q
+    lk = lk_blocks * block_k
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, h, lq, lk, d)
+    # hist_len + real chunk must fit the kv buffer
+    hist = data.draw(st.integers(0, max(0, lk - 1)), label="hist")
+    real_chunk = data.draw(st.integers(1, min(lq, lk - hist)), label="real_chunk")
+    kvlen = hist + real_chunk
+    got = chunk_attention(q, k, v, hist, kvlen, block_q=block_q, block_k=block_k)
+    want = chunk_attention_ref(q, k, v, hist, kvlen)
+    np.testing.assert_allclose(
+        np.asarray(got[:, :real_chunk]),
+        np.asarray(want[:, :real_chunk]),
+        rtol=3e-5, atol=3e-5,
+    )
+
+
+def test_chunk_attention_no_history_is_plain_causal():
+    rng = np.random.default_rng(0)
+    q, k, v = make_qkv(rng, 2, 32, 32, 32)
+    got = chunk_attention(q, k, v, 0, 32, block_q=16, block_k=16)
+    # manual causal softmax
+    want = chunk_attention_ref(q, k, v, 0, 32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_chunk_attention_first_token_sees_history_only():
+    rng = np.random.default_rng(1)
+    q, k, v = make_qkv(rng, 1, 16, 64, 16)
+    hist = 40
+    got = chunk_attention(q, k, v, hist, hist + 16, block_q=16, block_k=16)
+    # Query 0 (global pos 40) must equal softmax over keys 0..40 only.
+    qf = np.asarray(q[0, 0]).astype(np.float64)
+    kf = np.asarray(k[0]).astype(np.float64)
+    vf = np.asarray(v[0]).astype(np.float64)
+    s = kf[: hist + 1] @ qf / np.sqrt(16)
+    w = np.exp(s - s.max())
+    w /= w.sum()
+    want = w @ vf[: hist + 1]
+    np.testing.assert_allclose(np.asarray(got[0, 0]), want, rtol=1e-4, atol=1e-4)
+
+
+def test_chunk_attention_bf16():
+    rng = np.random.default_rng(2)
+    q, k, v = make_qkv(rng, 2, 16, 32, 32, jnp.bfloat16)
+    got = chunk_attention(q, k, v, 8, 24, block_q=16, block_k=16)
+    want = chunk_attention_ref(q, k, v, 8, 24)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got[:, :16], dtype=np.float32),
+        np.asarray(want[:, :16], dtype=np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_chunk_attention_rejects_misaligned_blocks():
+    rng = np.random.default_rng(3)
+    q, k, v = make_qkv(rng, 1, 20, 32, 16)
+    with pytest.raises(AssertionError):
+        chunk_attention(q, k, v, 0, 20, block_q=16, block_k=16)
+
+
+def test_vmem_estimate_positive_and_sane():
+    b = vmem_bytes(d=128, block_q=128, block_k=128)
+    assert 0 < b < 16 * 2**20, "one tile set must fit VMEM (16 MB)"
+
+
+# ---- decode attention -------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    lk_blocks=st.integers(1, 6),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_decode_attention_matches_ref(h, lk_blocks, d, seed, data):
+    block_k = 32
+    lk = lk_blocks * block_k
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+    _, k, v = make_qkv(rng, h, 1, lk, d)
+    kvlen = data.draw(st.integers(1, lk), label="kvlen")
+    got = decode_attention(q, k, v, kvlen, block_k=block_k)
+    want = decode_attention_ref(q, k, v, kvlen)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_decode_equals_chunk_with_one_query():
+    rng = np.random.default_rng(5)
+    d, lk = 32, 64
+    q = jnp.asarray(rng.normal(size=(2, d)), jnp.float32)
+    _, k, v = make_qkv(rng, 2, 1, lk, d)
+    kvlen = 50
+    dec = decode_attention(q, k, v, kvlen, block_k=32)
+    chk = chunk_attention(q[:, None, :].repeat(16, 1), k, v, kvlen - 1, kvlen,
+                          block_q=16, block_k=32)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(chk[:, 0]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_kvlen_one():
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.normal(size=(1, 16)), jnp.float32)
+    _, k, v = make_qkv(rng, 1, 1, 32, 16)
+    got = decode_attention(q, k, v, 1, block_k=32)
+    # only key 0 is visible -> output == v[0]
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(v[0, 0]),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,157 @@
+"""L2 correctness: the tiny-LLaMA forward, CDSP chunk composition, and the
+prefill/decode consistency the rust engine relies on."""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(0)
+
+
+@pytest.fixture(scope="module")
+def flat(params):
+    return M.params_to_flat(params)
+
+
+def pad_tokens(t):
+    out = np.zeros(M.L_BUCKET, np.int32)
+    out[: len(t)] = t
+    return jnp.asarray(out)
+
+
+def empty_cache(c=M.C_BUCKET):
+    z = jnp.zeros((M.N_LAYERS, c, M.N_HEADS, M.HEAD_DIM), jnp.float32)
+    return z, jnp.zeros_like(z)
+
+
+def i32(x):
+    return jnp.asarray(x, jnp.int32)
+
+
+def run_chunked(flat, tokens, splits):
+    """Run prefill in chunks of the given lengths, maintaining the cache the
+    way the rust engine does. Returns final logits."""
+    hk, hv = empty_cache()
+    hist = 0
+    logits = None
+    for ln in splits:
+        chunk = tokens[hist : hist + ln]
+        logits, nk, nv = M.prefill_chunk(
+            flat, pad_tokens(chunk), hk, hv, i32(hist), i32(ln))
+        hk = jax.lax.dynamic_update_slice(hk, nk[:, :ln], (0, hist, 0, 0))
+        hv = jax.lax.dynamic_update_slice(hv, nv[:, :ln], (0, hist, 0, 0))
+        hist += ln
+    return logits, hk, hv, hist
+
+
+def test_param_order_covers_shapes():
+    shapes = M.param_shapes()
+    assert set(M.PARAM_ORDER) == set(shapes)
+    assert len(M.PARAM_ORDER) == 1 + 9 * M.N_LAYERS + 2
+
+
+def test_flat_roundtrip(params):
+    flat = M.params_to_flat(params)
+    back = M.flat_to_params(flat)
+    for n in M.PARAM_ORDER:
+        assert back[n] is params[n]
+
+
+def test_single_chunk_matches_reference(params, flat):
+    rng = np.random.default_rng(1)
+    tokens = rng.integers(0, M.VOCAB, 40).astype(np.int32)
+    ref = M.reference_forward(params, jnp.asarray(tokens))
+    logits, _, _, _ = run_chunked(flat, tokens, [40])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref[-1]),
+                               rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    total=st.integers(8, 96),
+    n_chunks=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_chunk_composition_invariant(total, n_chunks, seed):
+    """CDSP's core compositional property: any chunking of the prompt gives
+    the same final logits as the whole prompt at once."""
+    params = M.init_params(0)
+    flat = M.params_to_flat(params)
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, M.VOCAB, total).astype(np.int32)
+    # random split into n_chunks parts, each 1..L_BUCKET
+    cuts = sorted(rng.choice(np.arange(1, total), size=min(n_chunks - 1, total - 1),
+                             replace=False).tolist()) if n_chunks > 1 else []
+    splits = np.diff([0] + cuts + [total]).tolist()
+    splits = [s for s in splits if s > 0]
+    if any(s > M.L_BUCKET for s in splits):
+        splits = [total]  # fall back when a part exceeds the bucket
+    if total > M.L_BUCKET:
+        return  # single-chunk fallback wouldn't fit either
+    ref = M.reference_forward(params, jnp.asarray(tokens))
+    logits, _, _, _ = run_chunked(flat, tokens, splits)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref[-1]),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_decode_continues_prefill(params, flat):
+    """Greedy generation via decode_step must match teacher-forced reference
+    logits at each position."""
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, M.VOCAB, 20).astype(np.int32)
+    # reference over prompt + 3 forced tokens
+    forced = rng.integers(0, M.VOCAB, 3).astype(np.int32)
+    full = np.concatenate([prompt, forced])
+    ref = M.reference_forward(params, jnp.asarray(full))
+
+    # prefill the prompt, then decode the forced tokens one by one
+    _, hk, hv, hist = run_chunked(flat, prompt, [20])
+    dk = jnp.zeros((M.N_LAYERS, M.DECODE_C_BUCKET, M.N_HEADS, M.HEAD_DIM))
+    dv = jnp.zeros_like(dk)
+    dk = jax.lax.dynamic_update_slice(dk, hk[:, :hist], (0, 0, 0, 0))
+    dv = jax.lax.dynamic_update_slice(dv, hv[:, :hist], (0, 0, 0, 0))
+    for step, tok in enumerate(forced):
+        logits, nk, nv = M.decode_step(flat, i32([tok]), dk, dv, i32(hist))
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(ref[20 + step]), rtol=5e-4, atol=5e-4,
+            err_msg=f"decode step {step}")
+        dk = jax.lax.dynamic_update_slice(dk, nk, (0, hist, 0, 0))
+        dv = jax.lax.dynamic_update_slice(dv, nv, (0, hist, 0, 0))
+        hist += 1
+
+
+def test_padding_is_inert(flat):
+    """Garbage in padded token positions must not affect the output."""
+    rng = np.random.default_rng(4)
+    tokens = rng.integers(0, M.VOCAB, 10).astype(np.int32)
+    hk, hv = empty_cache()
+    a = np.zeros(M.L_BUCKET, np.int32)
+    a[:10] = tokens
+    b = a.copy()
+    b[10:] = rng.integers(0, M.VOCAB, M.L_BUCKET - 10)
+    la, _, _ = M.prefill_chunk(flat, jnp.asarray(a), hk, hv, i32(0), i32(10))
+    lb, _, _ = M.prefill_chunk(flat, jnp.asarray(b), hk, hv, i32(0), i32(10))
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=1e-6, atol=1e-6)
+
+
+def test_logits_shape_and_finiteness(flat):
+    hk, hv = empty_cache()
+    tokens = pad_tokens(np.arange(5, dtype=np.int32))
+    logits, nk, nv = M.prefill_chunk(flat, tokens, hk, hv, i32(0), i32(5))
+    assert logits.shape == (M.VOCAB,)
+    assert nk.shape == (M.N_LAYERS, M.L_BUCKET, M.N_HEADS, M.HEAD_DIM)
+    assert nv.shape == nk.shape
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(nk[:, :5]).all())

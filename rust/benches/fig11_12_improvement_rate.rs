@@ -1,0 +1,58 @@
+//! Figs. 11-12: improvement-rate analysis — TTFT under fixed improvement
+//! rates across loads, normalized to the dynamic controller.
+//!
+//! Expected shape (paper Sec. 7.3): small rates win at light load (prefill-
+//! dominated), large rates win at heavy load (queuing-dominated), and the
+//! dynamic controller tracks the winner; at saturation sensitivity fades.
+
+use tetris::config::Policy;
+use tetris::sched::{ImprovementController, RateProfile};
+use tetris::sim::profiler::{profile, ProfileParams};
+use tetris::sim::SimBuilder;
+use tetris::util::bench::Table;
+use tetris::util::cli::Args;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{scale_rate, TraceKind, WorkloadGen};
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let n = args.usize_or("n", 100);
+    let kind = TraceKind::Medium;
+    let gen = WorkloadGen::paper_trace(kind);
+    let mut rng = Pcg64::new(11);
+    let base = gen.generate(n, 1.0, &mut rng);
+    let fixed_rates = [0.1, 0.3, 0.5, 0.7];
+    let loads = [0.5, 1.5, 2.5, 3.5];
+
+    // dynamic = profiled table (the real Sec. 5.1 pipeline, small sweep)
+    let params = ProfileParams {
+        rates: loads.to_vec(),
+        improvement_rates: fixed_rates.to_vec(),
+        n_requests: n.min(80),
+        seed: 5,
+    };
+    let sweep = profile(SimBuilder::paper_8b, kind, &params);
+    let dynamic_profile = sweep.best_profile();
+    println!("profiled optimal rates: {:?}", dynamic_profile.entries);
+
+    println!("\n=== Fig. 11: mean TTFT normalized to dynamic rate (LLaMA3-8B, medium trace) ===");
+    let mut t = Table::new(&["load (req/s)", "rate 0.1", "rate 0.3", "rate 0.5", "rate 0.7", "dynamic (s)"]);
+    for &load in &loads {
+        let trace = scale_rate(&base, load);
+        let run = |ctl: ImprovementController| {
+            let mut b = SimBuilder::paper_8b(Policy::Cdsp);
+            b.controller = ctl;
+            b.run(&trace).ttft_summary().mean
+        };
+        let dyn_ttft = run(ImprovementController::new(dynamic_profile.clone(), 30.0, 30.0));
+        let mut cells = vec![format!("{load:.1}")];
+        for &r in &fixed_rates {
+            let v = run(ImprovementController::fixed(r));
+            cells.push(format!("{:.2}x", v / dyn_ttft));
+        }
+        cells.push(format!("{dyn_ttft:.2}"));
+        t.row(cells);
+    }
+    t.print();
+    println!("(values are fixed-rate TTFT / dynamic-rate TTFT; >= ~1.0 expected)");
+}

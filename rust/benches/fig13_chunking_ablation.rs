@@ -1,0 +1,43 @@
+//! Fig. 13: TTFT slowdown of single-chunk scheduling vs full CDSP —
+//! the chunking ablation (skip Algorithm 1 lines 5-21).
+//!
+//! Paper: single-chunk incurs up to 2.33-4.17x higher P50 on 8B, with gains
+//! small at light load (no fragmentation to exploit) and fading again at
+//! saturation (queuing dominates).
+
+use tetris::config::Policy;
+use tetris::sched::{ImprovementController, RateProfile};
+use tetris::sim::SimBuilder;
+use tetris::util::bench::Table;
+use tetris::util::cli::Args;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{scale_rate, TraceKind, WorkloadGen};
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let n = args.usize_or("n", 120);
+    for kind in [TraceKind::Medium, TraceKind::Long] {
+        let gen = WorkloadGen::paper_trace(kind);
+        let mut rng = Pcg64::new(13);
+        let base = gen.generate(n, 1.0, &mut rng);
+        println!("\n=== Fig. 13 [{} trace]: single-chunk / CDSP TTFT ratio ===", kind.name());
+        let mut t = Table::new(&["load (req/s)", "p50 ratio", "p99 ratio"]);
+        for load in [0.5, 1.5, 2.5, 3.5] {
+            let trace = scale_rate(&base, load);
+            let run = |policy: Policy| {
+                let mut b = SimBuilder::paper_8b(policy);
+                b.controller = ImprovementController::new(
+                    RateProfile::default_trend(4.0), 30.0, 30.0);
+                b.run(&trace).ttft_summary()
+            };
+            let cdsp = run(Policy::Cdsp);
+            let single = run(Policy::CdspSingleChunk);
+            t.row(vec![
+                format!("{load:.1}"),
+                format!("{:.2}x", single.p50 / cdsp.p50),
+                format!("{:.2}x", single.p99 / cdsp.p99),
+            ]);
+        }
+        t.print();
+    }
+}

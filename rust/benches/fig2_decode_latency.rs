@@ -1,0 +1,49 @@
+//! Fig. 2: decoding latency analysis.
+//!
+//! (a) TP scaling: TP=1/2/4 vs TP=8 (paper: up to 5.73x/3.87x/1.93x).
+//! (b) SP-vs-TP at equal GPU budget: (SP8,TP1)/(SP4,TP2)/(SP2,TP4) vs
+//!     (SP1,TP8) (paper: up to 1.83x/1.41x/1.15x).
+
+use tetris::latency::DecodeModel;
+use tetris::modelcfg::ModelArch;
+use tetris::util::bench::Table;
+
+fn main() {
+    let m = DecodeModel::a100(&ModelArch::llama3_8b());
+    let ctx = 8_192u64;
+    let batch = 32u64;
+
+    println!("=== Fig. 2-(a): decode latency vs TP (LLaMA3-8B, batch {batch}, ctx {ctx}) ===");
+    let base = m.tp_step_secs(ctx, batch, 8);
+    let mut t = Table::new(&["TP", "step (ms)", "vs TP=8", "paper (up to)"]);
+    for (tp, paper) in [(1usize, "5.73x"), (2, "3.87x"), (4, "1.93x"), (8, "1.00x")] {
+        let s = m.tp_step_secs(ctx, batch, tp);
+        t.row(vec![
+            tp.to_string(),
+            format!("{:.2}", s * 1e3),
+            format!("{:.2}x", s / base),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== Fig. 2-(b): (SP,TP) combos on 8 GPUs ===");
+    let mut t = Table::new(&["(SP,TP)", "step (ms)", "vs (SP1,TP8)", "paper (up to)"]);
+    for (sp, tp, paper) in [(8usize, 1usize, "1.83x"), (4, 2, "1.41x"), (2, 4, "1.15x"), (1, 8, "1.00x")] {
+        let s = m.step_secs(ctx, batch, sp, tp);
+        t.row(vec![
+            format!("(SP{sp},TP{tp})"),
+            format!("{:.2}", s * 1e3),
+            format!("{:.2}x", s / base),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\ncontext scaling (TP=8):");
+    let mut t = Table::new(&["ctx", "step (ms)"]);
+    for ctx in [4_096u64, 16_384, 65_536, 131_072] {
+        t.row(vec![format!("{}k", ctx / 1024), format!("{:.2}", m.tp_step_secs(ctx, batch, 8) * 1e3)]);
+    }
+    t.print();
+}

@@ -1,0 +1,65 @@
+//! Fig. 8: comparison against baselines under increasing load.
+//!
+//! For each trace family and each policy, sweeps the arrival rate and
+//! prints TTFT/TBT P50/P99 — the series behind the paper's 24 sub-plots
+//! (here: LLaMA3-8B, all three traces; pass --model 70b for the 70B rows).
+//! Expected shape: Fixed-SP16 degrades first (over-provision), LoongServe's
+//! ESP decode shows elevated TBT P50, Tetris sustains the highest load.
+
+use tetris::config::Policy;
+use tetris::sched::{ImprovementController, RateProfile};
+use tetris::sim::SimBuilder;
+use tetris::util::bench::{fmt_secs, Table};
+use tetris::util::cli::Args;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{scale_rate, TraceKind, WorkloadGen};
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let model = args.str_or("model", "8b");
+    let n = args.usize_or("n", 120);
+    let rates: Vec<f64> = if model == "70b" {
+        vec![0.2, 0.4, 0.8, 1.2]
+    } else {
+        vec![0.5, 1.0, 2.0, 3.0]
+    };
+    let policies = [
+        Policy::Cdsp,
+        Policy::LoongServe,
+        Policy::LoongServeDisagg,
+        Policy::FixedSp(8),
+        Policy::FixedSp(16),
+    ];
+    for kind in [TraceKind::Short, TraceKind::Medium, TraceKind::Long] {
+        println!("\n=== Fig. 8 [{} trace, {}]===", kind.name(), model);
+        let gen = WorkloadGen::paper_trace(kind);
+        let mut rng = Pcg64::new(42);
+        let base = gen.generate(n, 1.0, &mut rng);
+        let mut t = Table::new(&[
+            "policy", "rate", "ttft p50", "ttft p99", "tbt p50", "tbt p99",
+        ]);
+        for policy in policies {
+            for &rate in &rates {
+                let mut b = if model == "70b" {
+                    SimBuilder::paper_70b(policy)
+                } else {
+                    SimBuilder::paper_8b(policy)
+                };
+                b.controller = ImprovementController::new(
+                    RateProfile::default_trend(4.0), 30.0, 30.0);
+                let m = b.run(&scale_rate(&base, rate));
+                let ttft = m.ttft_summary();
+                let tbt = m.tbt_summary();
+                t.row(vec![
+                    policy.name(),
+                    format!("{rate:.1}"),
+                    fmt_secs(ttft.p50),
+                    fmt_secs(ttft.p99),
+                    fmt_secs(tbt.p50),
+                    fmt_secs(tbt.p99),
+                ]);
+            }
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,46 @@
+//! Table 1: prefill latency vs SP size × prompt length (LLaMA3-8B, TP=1).
+//!
+//! Regenerates the paper's Table 1 from the calibrated Eq. (1) model and
+//! prints paper-vs-model rows with the optimal-SP diagonal. Also times the
+//! model evaluation itself (it sits on the scheduler's hot path).
+
+use tetris::latency::calibration::{table1_model, TABLE1_LENS, TABLE1_SECS, TABLE1_SPS};
+use tetris::util::bench::{bench_quick, black_box, Table};
+
+fn main() {
+    println!("=== Table 1: prefill latency (s), LLaMA3-8B, A100-calibrated ===");
+    let model = table1_model();
+    let mut t = Table::new(&["prompt", "SP=1", "SP=2", "SP=4", "SP=8", "SP=16", "best SP (paper best)"]);
+    for (i, &len) in TABLE1_LENS.iter().enumerate() {
+        let mut cells = vec![format!("{}k", len / 1024)];
+        let mut best = (f64::INFINITY, 0usize);
+        for &sp in TABLE1_SPS.iter() {
+            let pred = model.predict(sp, 0.0, len as f64);
+            if pred < best.0 {
+                best = (pred, sp);
+            }
+            cells.push(format!("{pred:.2}"));
+        }
+        // paper's bold cell
+        let paper_best = TABLE1_SPS
+            .iter()
+            .enumerate()
+            .filter_map(|(j, &sp)| TABLE1_SECS[i][j].map(|s| (s, sp)))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap()
+            .1;
+        cells.push(format!("{} ({})", best.1, paper_best));
+        t.row(cells);
+    }
+    t.print();
+
+    println!("\n=== model-evaluation microbench (scheduler hot path) ===");
+    let r = bench_quick("Eq.(1) predict", || {
+        for &sp in &TABLE1_SPS {
+            for &len in &TABLE1_LENS {
+                black_box(model.predict(sp, 8192.0, len as f64));
+            }
+        }
+    });
+    r.print();
+}

@@ -1,0 +1,56 @@
+//! Table 2: CDSP scheduling latency under different max SP sizes.
+//!
+//! The paper reports avg/max ≤ 86.8 µs up to SP=128 — the scheduler must
+//! meet online real-time requirements. Random request lengths + random
+//! instance queuing delays, 1000 trials per SP size, exactly as Sec. 7.4.
+
+use tetris::cluster::PoolView;
+use tetris::config::SchedConfig;
+use tetris::latency::a100_model_for;
+use tetris::modelcfg::ModelArch;
+use tetris::sched::CdspScheduler;
+use tetris::util::bench::{black_box, Table};
+use tetris::util::rng::Pcg64;
+use std::time::Instant;
+
+fn main() {
+    println!("=== Table 2: scheduler overhead vs max SP size ===");
+    let arch = ModelArch::llama3_8b();
+    let mut t = Table::new(&["max SP", "avg (us)", "max (us)", "paper avg/max (us)"]);
+    let paper = [(8, "22.8/52.5"), (16, "25.8/86.8"), (32, "22.9/53.4"), (64, "24.9/45.1"), (128, "30.6/73.7")];
+    for &(max_sp, paper_cell) in &paper {
+        let sp_candidates: Vec<usize> =
+            (0..=7).map(|e| 1usize << e).filter(|&s| s <= max_sp).collect();
+        let model = a100_model_for(&arch, 1, &sp_candidates);
+        let mut cfg = SchedConfig::default();
+        cfg.sp_candidates = sp_candidates;
+        let sched = CdspScheduler::new(model, cfg);
+        let per_node = 8usize;
+        let n_nodes = max_sp / per_node.min(max_sp).max(1);
+        let mut pool = PoolView::idle(n_nodes.max(1), per_node.min(max_sp));
+        let mut rng = Pcg64::new(0x7ab1e2 + max_sp as u64);
+
+        let trials = 1000;
+        let mut total = 0.0f64;
+        let mut worst = 0.0f64;
+        for _ in 0..trials {
+            for d in pool.delays.iter_mut() {
+                *d = rng.range_f64(0.0, 4.0);
+            }
+            let len = rng.range_u64(4_000, 250_000) as usize;
+            let rate = rng.range_f64(0.05, 0.75);
+            let t0 = Instant::now();
+            black_box(sched.schedule(len, &pool, rate));
+            let dt = t0.elapsed().as_secs_f64() * 1e6;
+            total += dt;
+            worst = worst.max(dt);
+        }
+        t.row(vec![
+            max_sp.to_string(),
+            format!("{:.1}", total / trials as f64),
+            format!("{worst:.1}"),
+            paper_cell.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,262 @@
+//! Baseline prefill schedulers the paper compares against (Sec. 7.1).
+//!
+//! All baselines and Tetris implement [`PrefillScheduler`], so the simulator
+//! and the bench harnesses swap policies without special-casing:
+//!
+//! * **LoongServe** (ESP): one unified SP pool shared by prefill and
+//!   decode. The scheduler greedily picks the SP size minimizing the
+//!   request's own TTFT (dynamic-programming over batch in the original;
+//!   the paper's evaluation configures *single-request scheduling* to avoid
+//!   TTFT interference, which reduces the DP to a per-request argmin — that
+//!   is what we implement). Decode batches reserve instances from the same
+//!   pool, shrinking what prefill can use.
+//! * **LoongServe-Disaggregated**: the same greedy single-request policy on
+//!   a disaggregated cluster (prefill-only pool — our `PoolView` already
+//!   models exactly that pool).
+//! * **Fixed-SP(k)**: prefill instances pre-partitioned into rigid groups
+//!   of k; requests go to the group with the lowest queuing delay
+//!   (estimated via Eq. (1), as in the paper).
+
+use crate::cluster::{InstanceId, PoolView};
+use crate::latency::PrefillModel;
+use crate::sched::plan::{CdspPlan, ChunkPlan};
+use crate::sched::CdspScheduler;
+
+/// A prefill scheduling policy: map (prompt, pool snapshot, improvement
+/// rate) to an execution plan. Baselines ignore `rate`.
+pub trait PrefillScheduler: Send + Sync {
+    fn schedule(&self, prompt_len: usize, pool: &PoolView, rate: f64) -> Option<CdspPlan>;
+    fn name(&self) -> String;
+}
+
+impl PrefillScheduler for CdspScheduler {
+    fn schedule(&self, prompt_len: usize, pool: &PoolView, rate: f64) -> Option<CdspPlan> {
+        CdspScheduler::schedule(self, prompt_len, pool, rate)
+    }
+    fn name(&self) -> String {
+        if self.single_chunk_only {
+            "tetris-single-chunk".into()
+        } else {
+            "tetris-cdsp".into()
+        }
+    }
+}
+
+/// LoongServe's greedy per-request ESP allocation: among SP candidates pick
+/// the TTFT-minimizing size with no expansion throttle and no chunking.
+#[derive(Clone, Debug)]
+pub struct LoongServeScheduler {
+    pub model: PrefillModel,
+    pub sp_candidates: Vec<usize>,
+    /// Instances reserved for decoding batches (ESP shares one pool; the
+    /// disaggregated variant sets this to 0 because its pool is prefill-only).
+    pub decode_reserved: usize,
+    pub disaggregated: bool,
+}
+
+impl LoongServeScheduler {
+    pub fn new(model: PrefillModel, sp_candidates: Vec<usize>, disaggregated: bool) -> Self {
+        LoongServeScheduler { model, sp_candidates, decode_reserved: 0, disaggregated }
+    }
+}
+
+impl PrefillScheduler for LoongServeScheduler {
+    fn schedule(&self, prompt_len: usize, pool: &PoolView, _rate: f64) -> Option<CdspPlan> {
+        if pool.is_empty() || prompt_len == 0 {
+            return None;
+        }
+        let usable = pool.len().saturating_sub(self.decode_reserved);
+        if usable == 0 {
+            return None;
+        }
+        let mut best: Option<(Vec<InstanceId>, f64)> = None;
+        for &s in &self.sp_candidates {
+            if s > usable {
+                continue;
+            }
+            let Some(group) = pool.get_group(&[], s) else { continue };
+            let ttft =
+                pool.group_ready(&group) + self.model.predict(s, 0.0, prompt_len as f64);
+            if best.as_ref().map(|(_, t)| ttft < *t).unwrap_or(true) {
+                best = Some((group, ttft));
+            }
+        }
+        let (group, ttft) = best?;
+        Some(CdspPlan {
+            chunks: vec![ChunkPlan { len: prompt_len, group }],
+            est_ttft: ttft,
+        })
+    }
+
+    fn name(&self) -> String {
+        if self.disaggregated {
+            "loongserve-disagg".into()
+        } else {
+            "loongserve".into()
+        }
+    }
+}
+
+/// Fixed-SP(k): rigid groups of k instances, route to the least-loaded
+/// group. Groups are instance-id-contiguous (co-located on nodes where the
+/// pool layout allows, matching the paper's setup).
+#[derive(Clone, Debug)]
+pub struct FixedSpScheduler {
+    pub model: PrefillModel,
+    pub sp: usize,
+}
+
+impl FixedSpScheduler {
+    pub fn new(model: PrefillModel, sp: usize) -> Self {
+        FixedSpScheduler { model, sp }
+    }
+
+    fn groups(&self, pool: &PoolView) -> Vec<Vec<InstanceId>> {
+        (0..pool.len() / self.sp)
+            .map(|g| (g * self.sp..(g + 1) * self.sp).collect())
+            .collect()
+    }
+}
+
+impl PrefillScheduler for FixedSpScheduler {
+    fn schedule(&self, prompt_len: usize, pool: &PoolView, _rate: f64) -> Option<CdspPlan> {
+        if prompt_len == 0 || pool.len() < self.sp {
+            return None;
+        }
+        let t_prefill = self.model.predict(self.sp, 0.0, prompt_len as f64);
+        let (group, t_queue) = self
+            .groups(pool)
+            .into_iter()
+            .map(|g| {
+                let q = pool.group_ready(&g);
+                (g, q)
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        Some(CdspPlan {
+            chunks: vec![ChunkPlan { len: prompt_len, group }],
+            est_ttft: t_queue + t_prefill,
+        })
+    }
+
+    fn name(&self) -> String {
+        format!("fixed-sp{}", self.sp)
+    }
+}
+
+/// Construct the scheduler for a `config::Policy`.
+pub fn make_scheduler(
+    policy: crate::config::Policy,
+    model: PrefillModel,
+    sched_cfg: crate::config::SchedConfig,
+) -> Box<dyn PrefillScheduler> {
+    use crate::config::Policy;
+    match policy {
+        Policy::Cdsp => Box::new(CdspScheduler::new(model, sched_cfg)),
+        Policy::CdspSingleChunk => {
+            let mut s = CdspScheduler::new(model, sched_cfg);
+            s.single_chunk_only = true;
+            Box::new(s)
+        }
+        Policy::LoongServe => Box::new(LoongServeScheduler::new(
+            model,
+            sched_cfg.sp_candidates,
+            false,
+        )),
+        Policy::LoongServeDisagg => Box::new(LoongServeScheduler::new(
+            model,
+            sched_cfg.sp_candidates,
+            true,
+        )),
+        Policy::FixedSp(k) => Box::new(FixedSpScheduler::new(model, k)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::calibration::table1_model;
+
+    fn pool() -> PoolView {
+        PoolView::idle(4, 4)
+    }
+
+    #[test]
+    fn loongserve_greedy_max_sp_for_long() {
+        let s = LoongServeScheduler::new(table1_model(), vec![1, 2, 4, 8, 16], false);
+        let plan = s.schedule(131_072, &pool(), 0.9).unwrap();
+        // rate must be ignored — greedy picks SP16 regardless
+        assert_eq!(plan.max_sp(), 16);
+        assert_eq!(plan.n_chunks(), 1);
+        plan.validate(131_072).unwrap();
+    }
+
+    #[test]
+    fn loongserve_moderate_sp_for_short() {
+        let s = LoongServeScheduler::new(table1_model(), vec![1, 2, 4, 8, 16], false);
+        let plan = s.schedule(4_096, &pool(), 0.0).unwrap();
+        assert!(plan.max_sp() <= 4, "{}", plan.max_sp());
+    }
+
+    #[test]
+    fn loongserve_reservation_shrinks_pool() {
+        let mut s = LoongServeScheduler::new(table1_model(), vec![1, 2, 4, 8, 16], false);
+        s.decode_reserved = 12;
+        let plan = s.schedule(131_072, &pool(), 0.0).unwrap();
+        assert!(plan.max_sp() <= 4, "decode reservation must cap SP: {}", plan.max_sp());
+    }
+
+    #[test]
+    fn fixed_sp_uses_rigid_groups() {
+        let s = FixedSpScheduler::new(table1_model(), 8);
+        let mut p = pool();
+        // first group busy
+        for i in 0..8 {
+            p.delays[i] = 4.0;
+        }
+        let plan = s.schedule(16_384, &p, 0.0).unwrap();
+        assert_eq!(plan.max_sp(), 8);
+        assert_eq!(plan.chunks[0].group, (8..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fixed_sp16_single_group() {
+        let s = FixedSpScheduler::new(table1_model(), 16);
+        let plan = s.schedule(4_096, &pool(), 0.0).unwrap();
+        assert_eq!(plan.chunks[0].group.len(), 16);
+    }
+
+    #[test]
+    fn make_scheduler_names() {
+        use crate::config::{Policy, SchedConfig};
+        for (p, n) in [
+            (Policy::Cdsp, "tetris-cdsp"),
+            (Policy::CdspSingleChunk, "tetris-single-chunk"),
+            (Policy::LoongServe, "loongserve"),
+            (Policy::LoongServeDisagg, "loongserve-disagg"),
+            (Policy::FixedSp(8), "fixed-sp8"),
+        ] {
+            let s = make_scheduler(p, table1_model(), SchedConfig::default());
+            assert_eq!(s.name(), n);
+        }
+    }
+
+    #[test]
+    fn all_schedulers_produce_valid_plans() {
+        use crate::config::{Policy, SchedConfig};
+        let p = pool();
+        for policy in [
+            Policy::Cdsp,
+            Policy::CdspSingleChunk,
+            Policy::LoongServe,
+            Policy::LoongServeDisagg,
+            Policy::FixedSp(8),
+            Policy::FixedSp(16),
+        ] {
+            let s = make_scheduler(policy, table1_model(), SchedConfig::default());
+            for len in [1_000usize, 30_000, 150_000] {
+                let plan = s.schedule(len, &p, 0.2).unwrap();
+                plan.validate(len).unwrap_or_else(|e| panic!("{}: {e}", s.name()));
+            }
+        }
+    }
+}

@@ -1,0 +1,351 @@
+//! Prefill instance pool: queue clocks, node topology, and the paper's
+//! `GetGroup` instance-extension strategy (Sec. 5.1).
+//!
+//! A *prefill instance* is one TP group of GPUs; SP spans instances. Each
+//! instance carries a queue clock `T_i` — the delay until it can start new
+//! work. The CDSP scheduler reasons over a cheap snapshot (`PoolView`)
+//! because Algorithm 1 explores many hypothetical allocations per request.
+
+/// Identifier of a prefill instance (dense, 0-based).
+pub type InstanceId = usize;
+
+/// Snapshot of the prefill pool the scheduler plans against.
+///
+/// `delays[i]` is instance i's queuing delay **relative to now** (seconds,
+/// ≥ 0). `node_of[i]` maps instances to nodes; nodes host `per_node`
+/// instances each (prefill occupies whole nodes under disaggregation).
+#[derive(Clone, Debug)]
+pub struct PoolView {
+    pub delays: Vec<f64>,
+    pub node_of: Vec<usize>,
+    pub per_node: usize,
+}
+
+// Reusable per-thread scratch for `get_group` — the scheduler calls it
+// thousands of times per second and the per-call Vec allocations dominated
+// its profile (see EXPERIMENTS.md §Perf).
+thread_local! {
+    static GG_SCRATCH: std::cell::RefCell<GgScratch> =
+        std::cell::RefCell::new(GgScratch::default());
+}
+
+#[derive(Default)]
+struct GgScratch {
+    in_group: Vec<bool>,
+    node_used: Vec<bool>,
+    by_node: Vec<Vec<InstanceId>>,
+}
+
+impl PoolView {
+    /// A fresh pool: `n_nodes × per_node` idle instances.
+    pub fn idle(n_nodes: usize, per_node: usize) -> Self {
+        let n = n_nodes * per_node;
+        PoolView {
+            delays: vec![0.0; n],
+            node_of: (0..n).map(|i| i / per_node).collect(),
+            per_node,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.delays.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.delays.is_empty()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.node_of.last().map(|n| n + 1).unwrap_or(0)
+    }
+
+    /// Max queue delay across a group — the time the group can start a ring
+    /// together (ring attention mandates a synchronous start).
+    pub fn group_ready(&self, group: &[InstanceId]) -> f64 {
+        group.iter().map(|&i| self.delays[i]).fold(0.0, f64::max)
+    }
+
+    /// Mark each group member busy until `finish` (relative seconds).
+    pub fn commit(&mut self, group: &[InstanceId], finish: f64) {
+        for &i in group {
+            if self.delays[i] < finish {
+                self.delays[i] = finish;
+            }
+        }
+    }
+
+    /// Advance wall-clock by `dt`: every delay shrinks toward 0.
+    pub fn advance(&mut self, dt: f64) {
+        for d in &mut self.delays {
+            *d = (*d - dt).max(0.0);
+        }
+    }
+
+    /// The paper's `GetGroup`: extend `initial_group` to exactly `s`
+    /// instances. Returns `None` when the pool cannot supply `s` instances.
+    ///
+    /// Selection order (Sec. 5.1, *instance group extension*):
+    /// 1. If `initial_group` is non-empty, first add the shortest-queued
+    ///    instances from the nodes that already host group members
+    ///    (avoids cross-node fragmentation and keeps cache balancing local).
+    /// 2. For what remains: if it fits within one node, pick the node whose
+    ///    r-th shortest-queued instance is minimal and take its r best;
+    ///    if it spans k full nodes, take the top-k nodes by readiness; the
+    ///    remainder again via the intra-node rule.
+    pub fn get_group(&self, initial_group: &[InstanceId], s: usize) -> Option<Vec<InstanceId>> {
+        if s < initial_group.len() || s > self.len() {
+            return None;
+        }
+        GG_SCRATCH.with(|cell| {
+            let mut sc = cell.borrow_mut();
+            self.get_group_with(&mut sc, initial_group, s)
+        })
+    }
+
+    fn get_group_with(
+        &self,
+        sc: &mut GgScratch,
+        initial_group: &[InstanceId],
+        s: usize,
+    ) -> Option<Vec<InstanceId>> {
+        let n = self.len();
+        let n_nodes = self.n_nodes();
+        sc.in_group.clear();
+        sc.in_group.resize(n, false);
+        sc.node_used.clear();
+        sc.node_used.resize(n_nodes, false);
+        if sc.by_node.len() < n_nodes {
+            sc.by_node.resize(n_nodes, Vec::new());
+        }
+        for b in sc.by_node.iter_mut() {
+            b.clear();
+        }
+
+        let mut group = Vec::with_capacity(s);
+        group.extend_from_slice(initial_group);
+        for &i in initial_group {
+            sc.in_group[i] = true;
+            sc.node_used[self.node_of[i]] = true;
+        }
+
+        // One pass: bucket non-member instances by node; sort lazily.
+        for i in 0..n {
+            if !sc.in_group[i] {
+                sc.by_node[self.node_of[i]].push(i);
+            }
+        }
+        let delays = &self.delays;
+        // Group membership is a set — only *which* instances are selected
+        // matters, so O(n) selection replaces O(n log n) sorts throughout
+        // (ties broken by id; the selected set is still deterministic).
+        let cmp = |a: &InstanceId, b: &InstanceId| {
+            delays[*a].partial_cmp(&delays[*b]).unwrap().then(a.cmp(b))
+        };
+
+        // Step 1: top up from nodes already hosting the group.
+        if !group.is_empty() && group.len() < s {
+            let mut cands: Vec<InstanceId> = Vec::new();
+            for node in 0..n_nodes {
+                if sc.node_used[node] {
+                    cands.extend(sc.by_node[node].iter().copied());
+                }
+            }
+            let take = (s - group.len()).min(cands.len());
+            if take > 0 && take < cands.len() {
+                cands.select_nth_unstable_by(take - 1, cmp);
+            }
+            for &c in cands.iter().take(take) {
+                sc.in_group[c] = true;
+                group.push(c);
+            }
+        }
+
+        // Step 2: fill the remainder from nodes with no group members.
+        while group.len() < s {
+            let need = s - group.len();
+            let mut best: Option<(f64, usize)> = None;
+            for node in 0..n_nodes {
+                if sc.node_used[node] || sc.by_node[node].is_empty() {
+                    continue;
+                }
+                // key: need-th shortest delay (full-node take: max delay).
+                let bucket = &mut sc.by_node[node];
+                let key = if need >= self.per_node {
+                    bucket.iter().map(|&i| delays[i]).fold(f64::NEG_INFINITY, f64::max)
+                } else if bucket.len() >= need {
+                    if need < bucket.len() {
+                        bucket.select_nth_unstable_by(need - 1, cmp);
+                    }
+                    delays[bucket[need - 1]]
+                } else {
+                    continue; // node cannot satisfy an intra-node pick
+                };
+                match best {
+                    None => best = Some((key, node)),
+                    Some((bk, bn)) => {
+                        if key < bk || (key == bk && node < bn) {
+                            best = Some((key, node));
+                        }
+                    }
+                }
+            }
+            // Fallback: if no single node can host an intra-node remainder,
+            // relax to whole-node packing over the readiest node.
+            let node = match best {
+                Some((_, node)) => node,
+                None => {
+                    let mut fb: Option<(f64, usize)> = None;
+                    for node in 0..n_nodes {
+                        if sc.node_used[node] || sc.by_node[node].is_empty() {
+                            continue;
+                        }
+                        let key = sc.by_node[node]
+                            .iter()
+                            .map(|&i| delays[i])
+                            .fold(f64::NEG_INFINITY, f64::max);
+                        if fb.map(|(bk, _)| key < bk).unwrap_or(true) {
+                            fb = Some((key, node));
+                        }
+                    }
+                    fb?.1
+                }
+            };
+            sc.node_used[node] = true;
+            let bucket = &mut sc.by_node[node];
+            let take = need.min(bucket.len());
+            if take > 0 && take < bucket.len() {
+                // partition so the `take` shortest-queued come first
+                bucket.select_nth_unstable_by(take - 1, cmp);
+            }
+            for &c in bucket.iter().take(take) {
+                sc.in_group[c] = true;
+                group.push(c);
+            }
+            bucket.clear();
+        }
+        debug_assert_eq!(group.len(), s);
+        Some(group)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool_4x4() -> PoolView {
+        PoolView::idle(4, 4)
+    }
+
+    #[test]
+    fn idle_pool_layout() {
+        let p = pool_4x4();
+        assert_eq!(p.len(), 16);
+        assert_eq!(p.n_nodes(), 4);
+        assert_eq!(p.node_of[0], 0);
+        assert_eq!(p.node_of[15], 3);
+        assert_eq!(p.group_ready(&[0, 5, 10]), 0.0);
+    }
+
+    #[test]
+    fn get_group_prefers_single_node() {
+        let mut p = pool_4x4();
+        // node 0 busy; others idle
+        for i in 0..4 {
+            p.delays[i] = 5.0;
+        }
+        let g = p.get_group(&[], 4).unwrap();
+        let node = p.node_of[g[0]];
+        assert!(g.iter().all(|&i| p.node_of[i] == node), "single-node group: {g:?}");
+        assert_ne!(node, 0, "must avoid the busy node");
+    }
+
+    #[test]
+    fn get_group_picks_kth_shortest_node() {
+        let mut p = pool_4x4();
+        // node 0: delays [0,0,9,9] — 2 great instances, 2 awful
+        p.delays[2] = 9.0;
+        p.delays[3] = 9.0;
+        // node 1: delays [1,1,1,1] — uniformly okay
+        for i in 4..8 {
+            p.delays[i] = 1.0;
+        }
+        // all other nodes worse
+        for i in 8..16 {
+            p.delays[i] = 3.0;
+        }
+        // For s=2 the 2nd-shortest on node 0 is 0.0 -> pick node 0.
+        let g2 = p.get_group(&[], 2).unwrap();
+        assert!(g2.iter().all(|&i| p.node_of[i] == 0), "{g2:?}");
+        // For s=4 node 0's 4th-shortest is 9.0, node 1's is 1.0 -> node 1.
+        let g4 = p.get_group(&[], 4).unwrap();
+        assert!(g4.iter().all(|&i| p.node_of[i] == 1), "{g4:?}");
+    }
+
+    #[test]
+    fn get_group_spans_full_nodes_for_large_s() {
+        let mut p = pool_4x4();
+        for i in 12..16 {
+            p.delays[i] = 8.0; // node 3 busy
+        }
+        let g = p.get_group(&[], 8).unwrap();
+        assert_eq!(g.len(), 8);
+        let mut nodes: Vec<usize> = g.iter().map(|&i| p.node_of[i]).collect();
+        nodes.sort();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 2, "8 = 2 full nodes: {g:?}");
+        assert!(!nodes.contains(&3), "busy node avoided");
+    }
+
+    #[test]
+    fn get_group_extends_superset() {
+        let p = pool_4x4();
+        let g2 = p.get_group(&[], 2).unwrap();
+        let g4 = p.get_group(&g2, 4).unwrap();
+        let g8 = p.get_group(&g4, 8).unwrap();
+        for i in &g2 {
+            assert!(g4.contains(i));
+        }
+        for i in &g4 {
+            assert!(g8.contains(i));
+        }
+    }
+
+    #[test]
+    fn get_group_extension_prefers_host_nodes() {
+        let mut p = pool_4x4();
+        // group on node 1; node 1 has idle peers even though node 0 is idle too
+        p.delays[4] = 0.5;
+        let initial = vec![4, 5];
+        let g = p.get_group(&initial, 4).unwrap();
+        assert!(g.contains(&6) && g.contains(&7), "extend within node 1 first: {g:?}");
+    }
+
+    #[test]
+    fn get_group_too_big_fails() {
+        let p = pool_4x4();
+        assert!(p.get_group(&[], 17).is_none());
+        assert!(p.get_group(&[0, 1, 2], 2).is_none(), "s < |initial| is invalid");
+        assert_eq!(p.get_group(&[], 16).unwrap().len(), 16);
+    }
+
+    #[test]
+    fn commit_and_advance() {
+        let mut p = pool_4x4();
+        p.commit(&[0, 1], 2.0);
+        assert_eq!(p.delays[0], 2.0);
+        assert_eq!(p.group_ready(&[0, 2]), 2.0);
+        p.advance(1.5);
+        assert!((p.delays[0] - 0.5).abs() < 1e-12);
+        assert_eq!(p.delays[2], 0.0);
+        p.advance(10.0);
+        assert_eq!(p.delays[0], 0.0);
+    }
+
+    #[test]
+    fn commit_never_shrinks() {
+        let mut p = pool_4x4();
+        p.commit(&[3], 5.0);
+        p.commit(&[3], 1.0);
+        assert_eq!(p.delays[3], 5.0);
+    }
+}

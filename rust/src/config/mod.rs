@@ -1,0 +1,338 @@
+//! Serving configuration: cluster topology, parallelism, scheduler knobs,
+//! and workload selection — with JSON round-trip so deployments are
+//! reproducible from a single config file (`tetris simulate --config x.json`).
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Which prefill scheduling policy drives the cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's contribution: chunkwise dynamic SP (Algorithms 1–3).
+    Cdsp,
+    /// CDSP with chunk exploration disabled (single-chunk plans only) —
+    /// the Fig. 13 ablation.
+    CdspSingleChunk,
+    /// LoongServe-style ESP over a unified pool (greedy max-SP,
+    /// decode shares the pool with reservation).
+    LoongServe,
+    /// LoongServe scheduling on a disaggregated cluster.
+    LoongServeDisagg,
+    /// Fixed SP groups of the given size.
+    FixedSp(usize),
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Cdsp => "tetris-cdsp".into(),
+            Policy::CdspSingleChunk => "tetris-single-chunk".into(),
+            Policy::LoongServe => "loongserve".into(),
+            Policy::LoongServeDisagg => "loongserve-disagg".into(),
+            Policy::FixedSp(k) => format!("fixed-sp{k}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "tetris-cdsp" | "cdsp" | "tetris" => Some(Policy::Cdsp),
+            "tetris-single-chunk" | "single-chunk" => Some(Policy::CdspSingleChunk),
+            "loongserve" => Some(Policy::LoongServe),
+            "loongserve-disagg" => Some(Policy::LoongServeDisagg),
+            _ => s.strip_prefix("fixed-sp").and_then(|k| k.parse().ok().map(Policy::FixedSp)),
+        }
+    }
+}
+
+/// Cluster topology: nodes × GPUs, prefill/decode split, TP sizes.
+///
+/// The paper's LLaMA3-8B testbed: 4 nodes × 8 A100; P/D 1:1; prefill TP=1,
+/// decode TP=8 (disaggregated). One *prefill instance* = one TP group of
+/// `prefill_tp` GPUs; SP spans instances.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    /// Fraction of GPUs dedicated to prefill (0..1]; paper uses 0.5 (1:1).
+    pub prefill_fraction: f64,
+    pub prefill_tp: usize,
+    pub decode_tp: usize,
+    /// Intra-node interconnect bandwidth per GPU (bytes/s), NVLink-class.
+    pub intra_node_bw: f64,
+    /// Inter-node bandwidth per GPU (bytes/s), IB-class (200 Gbps).
+    pub inter_node_bw: f64,
+}
+
+impl ClusterConfig {
+    /// Paper's LLaMA3-8B cluster: 4 nodes × 8 A100, P/D 1:1, TP 1/8.
+    pub fn paper_8b() -> Self {
+        ClusterConfig {
+            n_nodes: 4,
+            gpus_per_node: 8,
+            prefill_fraction: 0.5,
+            prefill_tp: 1,
+            decode_tp: 8,
+            intra_node_bw: 300.0e9, // NVLink ~300 GB/s effective per GPU
+            inter_node_bw: 25.0e9,  // 200 Gbps IB = 25 GB/s
+        }
+    }
+
+    /// Paper's LLaMA3-70B cluster: 8 nodes × 8 A100, P/D 1:1, TP 4/4.
+    pub fn paper_70b() -> Self {
+        ClusterConfig {
+            n_nodes: 8,
+            gpus_per_node: 8,
+            prefill_fraction: 0.5,
+            prefill_tp: 4,
+            decode_tp: 4,
+            intra_node_bw: 300.0e9,
+            inter_node_bw: 25.0e9,
+        }
+    }
+
+    /// A small cluster for the real threaded E2E engine.
+    pub fn tiny(n_prefill: usize, n_decode: usize) -> Self {
+        ClusterConfig {
+            n_nodes: 1,
+            gpus_per_node: n_prefill + n_decode,
+            prefill_fraction: n_prefill as f64 / (n_prefill + n_decode) as f64,
+            prefill_tp: 1,
+            decode_tp: 1,
+            intra_node_bw: 10.0e9,
+            inter_node_bw: 10.0e9,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    /// Number of prefill instances (TP groups).
+    pub fn n_prefill_instances(&self) -> usize {
+        let prefill_gpus =
+            (self.total_gpus() as f64 * self.prefill_fraction).round() as usize;
+        prefill_gpus / self.prefill_tp
+    }
+
+    /// Number of decode instances (TP groups).
+    pub fn n_decode_instances(&self) -> usize {
+        let prefill_gpus =
+            (self.total_gpus() as f64 * self.prefill_fraction).round() as usize;
+        (self.total_gpus() - prefill_gpus) / self.decode_tp
+    }
+
+    /// Prefill instances per node.
+    pub fn prefill_instances_per_node(&self) -> usize {
+        // Prefill occupies whole nodes first (disaggregation places P and D
+        // on disjoint nodes when the split allows, as in the paper's 1:1).
+        let per_node = self.gpus_per_node / self.prefill_tp;
+        per_node
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("n_nodes", self.n_nodes)
+            .set("gpus_per_node", self.gpus_per_node)
+            .set("prefill_fraction", self.prefill_fraction)
+            .set("prefill_tp", self.prefill_tp)
+            .set("decode_tp", self.decode_tp)
+            .set("intra_node_bw", self.intra_node_bw)
+            .set("inter_node_bw", self.inter_node_bw)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(ClusterConfig {
+            n_nodes: j.req_usize("n_nodes")?,
+            gpus_per_node: j.req_usize("gpus_per_node")?,
+            prefill_fraction: j.req_f64("prefill_fraction")?,
+            prefill_tp: j.req_usize("prefill_tp")?,
+            decode_tp: j.req_usize("decode_tp")?,
+            intra_node_bw: j.req_f64("intra_node_bw")?,
+            inter_node_bw: j.req_f64("inter_node_bw")?,
+        })
+    }
+}
+
+/// Scheduler knobs (CDSP + decode routing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedConfig {
+    /// SP size candidates; the paper uses powers of two.
+    pub sp_candidates: Vec<usize>,
+    /// Minimum chunk length (tokens) for a CDSP chunk to be legal.
+    pub min_chunk: usize,
+    /// Improvement-rate threshold used when no dynamic profile is loaded.
+    pub improvement_rate: f64,
+    /// Sliding window (seconds) for arrival-rate observation.
+    pub rate_window: f64,
+    /// How often (seconds) the dynamic improvement rate is refreshed.
+    pub rate_refresh: f64,
+    /// Maximum recursion depth of Algorithm 1 (chunks per request).
+    pub max_chunks: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            sp_candidates: vec![1, 2, 4, 8, 16],
+            min_chunk: 512,
+            improvement_rate: 0.3,
+            rate_window: 30.0,
+            rate_refresh: 30.0,
+            max_chunks: 4,
+        }
+    }
+}
+
+impl SchedConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("sp_candidates", self.sp_candidates.clone())
+            .set("min_chunk", self.min_chunk)
+            .set("improvement_rate", self.improvement_rate)
+            .set("rate_window", self.rate_window)
+            .set("rate_refresh", self.rate_refresh)
+            .set("max_chunks", self.max_chunks)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let sp = j
+            .req_arr("sp_candidates")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad sp candidate")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SchedConfig {
+            sp_candidates: sp,
+            min_chunk: j.req_usize("min_chunk")?,
+            improvement_rate: j.req_f64("improvement_rate")?,
+            rate_window: j.req_f64("rate_window")?,
+            rate_refresh: j.req_f64("rate_refresh")?,
+            max_chunks: j.req_usize("max_chunks")?,
+        })
+    }
+}
+
+/// Top-level experiment/serving config.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub model: String,
+    pub cluster: ClusterConfig,
+    pub sched: SchedConfig,
+    pub policy: Policy,
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn paper_8b() -> Self {
+        Config {
+            model: "llama3-8b".into(),
+            cluster: ClusterConfig::paper_8b(),
+            sched: SchedConfig::default(),
+            policy: Policy::Cdsp,
+            seed: 42,
+        }
+    }
+
+    pub fn paper_70b() -> Self {
+        let mut sched = SchedConfig::default();
+        // 70B: 8 prefill instances of TP4 across 8 nodes (paper setup).
+        sched.sp_candidates = vec![1, 2, 4, 8];
+        Config {
+            model: "llama3-70b".into(),
+            cluster: ClusterConfig::paper_70b(),
+            sched,
+            policy: Policy::Cdsp,
+            seed: 42,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("model", self.model.as_str())
+            .set("cluster", self.cluster.to_json())
+            .set("sched", self.sched.to_json())
+            .set("policy", self.policy.name())
+            .set("seed", self.seed)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Config {
+            model: j.req_str("model")?.to_string(),
+            cluster: ClusterConfig::from_json(
+                j.get("cluster").ok_or_else(|| anyhow::anyhow!("missing cluster"))?,
+            )?,
+            sched: SchedConfig::from_json(
+                j.get("sched").ok_or_else(|| anyhow::anyhow!("missing sched"))?,
+            )?,
+            policy: Policy::parse(j.req_str("policy")?)
+                .ok_or_else(|| anyhow::anyhow!("unknown policy"))?,
+            seed: j.req_f64("seed")? as u64,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&Json::from_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        self.to_json().to_file(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_8b_instance_counts() {
+        let c = ClusterConfig::paper_8b();
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.n_prefill_instances(), 16); // 16 GPUs, TP=1
+        assert_eq!(c.n_decode_instances(), 2); // 16 GPUs, TP=8
+    }
+
+    #[test]
+    fn paper_70b_instance_counts() {
+        let c = ClusterConfig::paper_70b();
+        assert_eq!(c.total_gpus(), 64);
+        assert_eq!(c.n_prefill_instances(), 8); // 32 GPUs, TP=4
+        assert_eq!(c.n_decode_instances(), 8); // 32 GPUs, TP=4
+    }
+
+    #[test]
+    fn policy_name_parse_roundtrip() {
+        for p in [
+            Policy::Cdsp,
+            Policy::CdspSingleChunk,
+            Policy::LoongServe,
+            Policy::LoongServeDisagg,
+            Policy::FixedSp(8),
+            Policy::FixedSp(16),
+        ] {
+            assert_eq!(Policy::parse(&p.name()), Some(p), "roundtrip {}", p.name());
+        }
+        assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let c = Config::paper_8b();
+        let j = c.to_json();
+        let back = Config::from_json(&j).unwrap();
+        assert_eq!(back.model, c.model);
+        assert_eq!(back.cluster, c.cluster);
+        assert_eq!(back.sched, c.sched);
+        assert_eq!(back.policy, c.policy);
+        assert_eq!(back.seed, c.seed);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("tetris_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        let c = Config::paper_70b();
+        c.save(&p).unwrap();
+        let back = Config::load(&p).unwrap();
+        assert_eq!(back.cluster, c.cluster);
+    }
+}

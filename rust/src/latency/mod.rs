@@ -1,0 +1,31 @@
+//! Latency models — the scheduler's view of time.
+//!
+//! The paper's CDSP scheduler never measures hardware online; it schedules
+//! against Eq. (1), a FLOPs-shaped analytic model fit offline by least
+//! squares (Sec. 5.1). We do the same, with the twist that our "offline
+//! measurements" come from two sources:
+//!
+//! 1. the paper's own published A100 numbers (Table 1 prefill latencies,
+//!    Fig. 2 decode trends), and
+//! 2. an analytic A100 roofline (`calibration`) that extends those published
+//!    points to every `(C, L, SP)` the simulator asks about, keeping the
+//!    published points as anchors.
+//!
+//! Sub-modules:
+//! * [`prefill`]  — Eq. (1): `T_s(R) = a_s + b_s·L + c_s·(C·L) + d_s·L²`,
+//!   per-SP coefficient tables, least-squares fitting, and the inverse
+//!   solve (given a time budget, how many tokens fit?) used by Algorithm 3.
+//! * [`calibration`] — A100 roofline generator + the paper's Table 1 data.
+//! * [`decode`] — decode step latency vs (TP, SP, batch, context) (Fig. 2).
+//! * [`transfer`] — KV-cache movement costs (cache balancing, P2P ring,
+//!   prefill→decode streaming) over NVLink/IB-class links.
+
+pub mod prefill;
+pub mod calibration;
+pub mod decode;
+pub mod transfer;
+
+pub use calibration::a100_model_for;
+pub use decode::DecodeModel;
+pub use prefill::{PrefillModel, SpCoeffs};
+pub use transfer::TransferModel;

@@ -1,0 +1,307 @@
+//! Eq. (1) — the prefill latency model.
+//!
+//! `T_s(R) = a_s + b_s·L + c_s·(C·L) + d_s·L²`
+//!
+//! where `L` is the chunk's token count, `C` the historical token count, and
+//! `s` the SP size. Coefficient meaning (paper Sec. 5.1): `a_s` constant
+//! overheads (launch, ring setup), `b_s` fully-connected layers, `c_s`
+//! attention against history, `d_s` intra-chunk attention.
+//!
+//! Also implements the *inverse* model required by Algorithm 3: given a
+//! latency budget `T` and history `C`, solve `T_s(L) = T` for `L` (a
+//! quadratic in L; we use the closed form guarded by the generic monotone
+//! solver for robustness).
+
+use crate::util::lstsq::{lstsq, r_squared, solve_monotone};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Eq. (1) coefficients for one SP size.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpCoeffs {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+impl SpCoeffs {
+    /// Predicted latency (seconds) for a chunk of `l` tokens with `c_hist`
+    /// historical tokens.
+    #[inline]
+    pub fn predict(&self, c_hist: f64, l: f64) -> f64 {
+        self.a + self.b * l + self.c * c_hist * l + self.d * l * l
+    }
+
+    /// Solve `predict(c_hist, L) = budget` for L ≥ 0. Returns 0 when even an
+    /// empty chunk misses the budget, and `f64::INFINITY` has no meaning here
+    /// (callers cap at the remaining prompt length).
+    pub fn solve_len(&self, c_hist: f64, budget: f64) -> f64 {
+        if budget <= self.a {
+            return 0.0;
+        }
+        // d·L² + (b + c·C)·L + (a - budget) = 0
+        let qa = self.d;
+        let qb = self.b + self.c * c_hist;
+        let qc = self.a - budget;
+        if qa.abs() < 1e-18 {
+            if qb.abs() < 1e-18 {
+                return 0.0;
+            }
+            return (-qc / qb).max(0.0);
+        }
+        let disc = qb * qb - 4.0 * qa * qc;
+        if disc <= 0.0 {
+            return 0.0;
+        }
+        let root = (-qb + disc.sqrt()) / (2.0 * qa);
+        // polish with the generic solver (cheap; guards pathological coeffs)
+        let f = |l: f64| self.predict(c_hist, l) - budget;
+        let df = |l: f64| qb + 2.0 * qa * l;
+        let lo = 0.0;
+        let hi = (root * 2.0).max(1.0);
+        let polished = solve_monotone(f, df, lo, hi);
+        polished.max(0.0)
+    }
+}
+
+/// A sample used for fitting: (history C, chunk length L, measured seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub c: f64,
+    pub l: f64,
+    pub secs: f64,
+}
+
+/// The full prefill model: Eq. (1) coefficients per SP size.
+#[derive(Clone, Debug, Default)]
+pub struct PrefillModel {
+    coeffs: BTreeMap<usize, SpCoeffs>,
+}
+
+impl PrefillModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, sp: usize, c: SpCoeffs) {
+        self.coeffs.insert(sp, c);
+    }
+
+    pub fn get(&self, sp: usize) -> Option<&SpCoeffs> {
+        self.coeffs.get(&sp)
+    }
+
+    /// SP sizes this model covers, ascending.
+    pub fn sp_sizes(&self) -> Vec<usize> {
+        self.coeffs.keys().copied().collect()
+    }
+
+    /// Predicted latency; panics if `sp` was never fit (scheduler bugs should
+    /// fail loudly, not silently serve garbage).
+    #[inline]
+    pub fn predict(&self, sp: usize, c_hist: f64, l: f64) -> f64 {
+        self.coeffs
+            .get(&sp)
+            .unwrap_or_else(|| panic!("no Eq.(1) coefficients for SP={sp}"))
+            .predict(c_hist, l)
+    }
+
+    /// Inverse solve (Algorithm 3).
+    pub fn solve_len(&self, sp: usize, c_hist: f64, budget: f64) -> f64 {
+        self.coeffs
+            .get(&sp)
+            .unwrap_or_else(|| panic!("no Eq.(1) coefficients for SP={sp}"))
+            .solve_len(c_hist, budget)
+    }
+
+    /// Least-squares fit of Eq. (1) for one SP size from measured samples.
+    /// Features are scaled to O(1) before solving the normal equations to
+    /// keep them well-conditioned (L ~ 1e5, L² ~ 1e10 otherwise).
+    ///
+    /// Returns the achieved R² alongside; the calibration harness asserts
+    /// R² ≥ 0.99 (the paper's model is near-exact because prefill is
+    /// compute-bound).
+    pub fn fit_sp(&mut self, sp: usize, samples: &[Sample]) -> Result<f64> {
+        anyhow::ensure!(samples.len() >= 4, "need ≥4 samples to fit 4 coefficients");
+        const SL: f64 = 1e-4; // token scale
+        let m = samples.len();
+        // Table-1-style data has no history column (all C = 0); the c·L
+        // feature would make the normal equations singular, so drop it and
+        // fit the 3-coefficient sub-model (c stays 0; callers may set it
+        // from the FLOPs identity c = 2d afterwards).
+        let has_hist = samples.iter().any(|s| s.c != 0.0);
+        let nfeat = if has_hist { 4 } else { 3 };
+        let mut x = Vec::with_capacity(m * nfeat);
+        let mut y = Vec::with_capacity(m);
+        for s in samples {
+            let l = s.l * SL;
+            let c = s.c * SL;
+            if has_hist {
+                x.extend_from_slice(&[1.0, l, c * l, l * l]);
+            } else {
+                x.extend_from_slice(&[1.0, l, l * l]);
+            }
+            y.push(s.secs);
+        }
+        let beta = lstsq(&x, &y, m, nfeat)
+            .ok_or_else(|| anyhow::anyhow!("singular fit for SP={sp}"))?;
+        let co = if has_hist {
+            SpCoeffs {
+                a: beta[0],
+                b: beta[1] * SL,
+                c: beta[2] * SL * SL,
+                d: beta[3] * SL * SL,
+            }
+        } else {
+            SpCoeffs { a: beta[0], b: beta[1] * SL, c: 0.0, d: beta[2] * SL * SL }
+        };
+        let pred: Vec<f64> = samples.iter().map(|s| co.predict(s.c, s.l)).collect();
+        let r2 = r_squared(&pred, &y);
+        self.coeffs.insert(sp, co);
+        Ok(r2)
+    }
+
+    /// Optimal SP size for a fresh request of `l` tokens among candidates —
+    /// reproduces Table 1's bold diagonal when fed the calibrated model.
+    pub fn best_sp(&self, candidates: &[usize], c_hist: f64, l: f64) -> usize {
+        let mut best = (f64::INFINITY, candidates[0]);
+        for &sp in candidates {
+            if let Some(co) = self.coeffs.get(&sp) {
+                let t = co.predict(c_hist, l);
+                if t < best.0 {
+                    best = (t, sp);
+                }
+            }
+        }
+        best.1
+    }
+
+    // ---- persistence ------------------------------------------------------
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (sp, co) in &self.coeffs {
+            obj = obj.set(
+                &sp.to_string(),
+                Json::obj().set("a", co.a).set("b", co.b).set("c", co.c).set("d", co.d),
+            );
+        }
+        obj
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut m = PrefillModel::new();
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("prefill model must be object"))?;
+        for (k, v) in obj {
+            let sp: usize = k.parse().map_err(|_| anyhow::anyhow!("bad sp key {k}"))?;
+            m.insert(
+                sp,
+                SpCoeffs {
+                    a: v.req_f64("a")?,
+                    b: v.req_f64("b")?,
+                    c: v.req_f64("c")?,
+                    d: v.req_f64("d")?,
+                },
+            );
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_coeffs() -> SpCoeffs {
+        // Roughly A100 SP=1 LLaMA3-8B scale.
+        SpCoeffs { a: 0.03, b: 4.0e-6, c: 1.6e-10, d: 1.6e-10 }
+    }
+
+    #[test]
+    fn predict_matches_formula() {
+        let co = toy_coeffs();
+        let t = co.predict(10_000.0, 4_000.0);
+        let manual = 0.03 + 4.0e-6 * 4000.0 + 1.6e-10 * 10_000.0 * 4000.0
+            + 1.6e-10 * 4000.0 * 4000.0;
+        assert!((t - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_len_inverts_predict() {
+        let co = toy_coeffs();
+        for &c in &[0.0, 8_000.0, 64_000.0] {
+            for &l in &[500.0, 4_000.0, 32_000.0, 128_000.0] {
+                let t = co.predict(c, l);
+                let back = co.solve_len(c, t);
+                assert!(
+                    (back - l).abs() / l < 1e-6,
+                    "c={c} l={l} back={back}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn solve_len_zero_when_budget_below_overhead() {
+        let co = toy_coeffs();
+        assert_eq!(co.solve_len(0.0, 0.01), 0.0);
+        assert_eq!(co.solve_len(0.0, 0.03), 0.0);
+    }
+
+    #[test]
+    fn solve_len_linear_model() {
+        // d = 0 exercise (pure linear)
+        let co = SpCoeffs { a: 0.01, b: 1e-5, c: 0.0, d: 0.0 };
+        let l = co.solve_len(0.0, 0.01 + 1e-5 * 2000.0);
+        assert!((l - 2000.0).abs() < 1e-6, "l={l}");
+    }
+
+    #[test]
+    fn fit_recovers_synthetic() {
+        let truth = toy_coeffs();
+        let mut samples = Vec::new();
+        for &c in &[0.0, 4_000.0, 16_000.0, 64_000.0, 128_000.0] {
+            for &l in &[1_000.0, 4_000.0, 16_000.0, 64_000.0, 128_000.0] {
+                samples.push(Sample { c, l, secs: truth.predict(c, l) });
+            }
+        }
+        let mut m = PrefillModel::new();
+        let r2 = m.fit_sp(4, &samples).unwrap();
+        assert!(r2 > 0.999999, "r2={r2}");
+        let got = m.get(4).unwrap();
+        assert!((got.a - truth.a).abs() < 1e-9);
+        assert!((got.b - truth.b).abs() / truth.b < 1e-6);
+        assert!((got.c - truth.c).abs() / truth.c < 1e-6);
+        assert!((got.d - truth.d).abs() / truth.d < 1e-6);
+    }
+
+    #[test]
+    fn fit_needs_enough_samples() {
+        let mut m = PrefillModel::new();
+        assert!(m
+            .fit_sp(1, &[Sample { c: 0.0, l: 1.0, secs: 1.0 }; 3])
+            .is_err());
+    }
+
+    #[test]
+    fn best_sp_picks_minimum() {
+        let mut m = PrefillModel::new();
+        // SP=1: cheap constant, expensive quadratic. SP=8: big constant, tiny quadratic.
+        m.insert(1, SpCoeffs { a: 0.01, b: 1e-6, c: 0.0, d: 8e-10 });
+        m.insert(8, SpCoeffs { a: 0.15, b: 2e-7, c: 0.0, d: 1e-10 });
+        assert_eq!(m.best_sp(&[1, 8], 0.0, 1_000.0), 1);
+        assert_eq!(m.best_sp(&[1, 8], 0.0, 100_000.0), 8);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut m = PrefillModel::new();
+        m.insert(2, toy_coeffs());
+        m.insert(16, SpCoeffs { a: 0.2, b: 1e-7, c: 2e-11, d: 3e-11 });
+        let back = PrefillModel::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.get(2), m.get(2));
+        assert_eq!(back.get(16), m.get(16));
+        assert_eq!(back.sp_sizes(), vec![2, 16]);
+    }
+}

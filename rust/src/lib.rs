@@ -1,0 +1,44 @@
+//! # Tetris — long-context LLM serving via Chunkwise Dynamic Sequence Parallelism
+//!
+//! Reproduction of *"Optimizing Long-context LLM Serving via Fine-grained
+//! Sequence Parallelism"* (Li et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: the CDSP prefill
+//!   scheduler (Algorithms 1–3 of the paper), the load-aware improvement-rate
+//!   controller, the disaggregated prefill/decode cluster model, KV-cache
+//!   transfer with handshake-based backend allocation, a discrete-event
+//!   cluster simulator that regenerates every table and figure of the paper's
+//!   evaluation, and a *real* mini serving engine in which OS threads play the
+//!   role of SP instances and run AOT-compiled JAX/Pallas artifacts through
+//!   PJRT.
+//! * **L2 (python/compile/model.py)** — a tiny-LLaMA decoder written in JAX,
+//!   lowered once to HLO text at `make artifacts` time.
+//! * **L1 (python/compile/kernels/)** — Pallas flash-attention kernels for the
+//!   chunked-prefill and decode hot spots, verified against pure-jnp oracles.
+//!
+//! Python never runs on the request path: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and is
+//! self-contained afterwards.
+//!
+//! See `DESIGN.md` for the complete system inventory and the
+//! per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod config;
+pub mod modelcfg;
+pub mod latency;
+pub mod cluster;
+pub mod sched;
+pub mod baselines;
+pub mod kvcache;
+pub mod transfer;
+pub mod ring;
+pub mod workload;
+pub mod metrics;
+pub mod sim;
+pub mod runtime;
+pub mod serve;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,263 @@
+//! `tetris` — the leader entrypoint / CLI.
+//!
+//! Subcommands:
+//! * `simulate`      — run the calibrated cluster simulator for one policy.
+//! * `compare`       — run all five policies on the same trace (Fig. 8 row).
+//! * `profile-rate`  — offline improvement-rate profiling (Sec. 5.1 / 6).
+//! * `fit`           — fit + print the Eq. (1) coefficient tables.
+//! * `gen-trace`     — synthesize a paper-shaped trace to JSON.
+//! * `serve`         — live mini-server over the PJRT artifacts (E2E).
+
+use std::sync::Arc;
+use tetris::config::Policy;
+use tetris::sched::{ImprovementController, RateProfile};
+use tetris::sim::profiler::{profile, ProfileParams};
+use tetris::sim::SimBuilder;
+use tetris::util::bench::{fmt_secs, Table};
+use tetris::util::cli::Args;
+use tetris::util::json::Json;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{trace_to_json, TraceKind, WorkloadGen};
+
+const USAGE: &str = "\
+tetris — long-context LLM serving via Chunkwise Dynamic Sequence Parallelism
+
+USAGE: tetris <COMMAND> [OPTIONS]
+
+COMMANDS:
+  simulate      run the calibrated cluster simulator
+                  --policy <tetris-cdsp|single-chunk|loongserve|loongserve-disagg|fixed-spN>
+                  --trace <short|medium|long>  --rate <req/s>  --n <requests>
+                  --model <8b|70b>  --seed <u64>  [--dynamic-rate]
+  compare       all five policies on one trace (Fig. 8 row)
+                  --trace ... --rate ... --n ... --model ...
+  profile-rate  offline improvement-rate profiling
+                  --trace ... --rates 0.5,1.0,...  --out <profile.json>
+  fit           print the Eq. (1) coefficient tables (Table 1 calibration)
+  gen-trace     synthesize a trace --trace ... --rate ... --n ... --out t.json
+  serve         live E2E server over artifacts/ (tiny model, real PJRT)
+                  --requests <n>  --prompt-len <tokens>  --output-len <tokens>
+                  --workers <n>
+";
+
+fn main() {
+    let args = Args::from_env(&["dynamic-rate", "help"]);
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let code = match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "compare" => cmd_compare(&args),
+        "profile-rate" => cmd_profile_rate(&args),
+        "fit" => cmd_fit(&args),
+        "gen-trace" => cmd_gen_trace(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            print!("{USAGE}");
+            if cmd.is_empty() || args.flag("help") { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn builder_for(model: &str, policy: Policy) -> SimBuilder {
+    if model == "70b" {
+        SimBuilder::paper_70b(policy)
+    } else {
+        SimBuilder::paper_8b(policy)
+    }
+}
+
+fn gen_trace(args: &Args) -> Vec<tetris::workload::Request> {
+    let kind = TraceKind::parse(&args.str_or("trace", "medium")).unwrap_or(TraceKind::Medium);
+    let rate = args.f64_or("rate", 1.0);
+    let n = args.usize_or("n", 100);
+    let seed = args.u64_or("seed", 42);
+    let gen = WorkloadGen::paper_trace(kind);
+    let mut rng = Pcg64::new(seed);
+    gen.generate(n, rate, &mut rng)
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let policy = Policy::parse(&args.str_or("policy", "tetris-cdsp"))
+        .unwrap_or(Policy::Cdsp);
+    let model = args.str_or("model", "8b");
+    let trace = gen_trace(args);
+    let mut b = builder_for(&model, policy);
+    if args.flag("dynamic-rate") {
+        b.controller = ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
+    }
+    let m = b.run(&trace);
+    let ttft = m.ttft_summary();
+    let tbt = m.tbt_summary();
+    println!("policy={} model={model} requests={}", policy.name(), m.requests.len());
+    println!(
+        "TTFT p50={} p99={} mean={}",
+        fmt_secs(ttft.p50), fmt_secs(ttft.p99), fmt_secs(ttft.mean)
+    );
+    println!("TBT  p50={} p99={}", fmt_secs(tbt.p50), fmt_secs(tbt.p99));
+    println!(
+        "throughput: {:.0} tok/s, {:.2} req/s",
+        m.token_throughput(), m.request_throughput()
+    );
+    0
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    let model = args.str_or("model", "8b");
+    let trace = gen_trace(args);
+    let mut t = Table::new(&["policy", "ttft p50", "ttft p99", "tbt p50", "tbt p99", "tok/s"]);
+    for policy in [
+        Policy::Cdsp,
+        Policy::CdspSingleChunk,
+        Policy::LoongServe,
+        Policy::LoongServeDisagg,
+        Policy::FixedSp(8),
+        Policy::FixedSp(16),
+    ] {
+        let mut b = builder_for(&model, policy);
+        b.controller = ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
+        let m = b.run(&trace);
+        let ttft = m.ttft_summary();
+        let tbt = m.tbt_summary();
+        t.row(vec![
+            policy.name(),
+            fmt_secs(ttft.p50),
+            fmt_secs(ttft.p99),
+            fmt_secs(tbt.p50),
+            fmt_secs(tbt.p99),
+            format!("{:.0}", m.token_throughput()),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_profile_rate(args: &Args) -> i32 {
+    let kind = TraceKind::parse(&args.str_or("trace", "medium")).unwrap_or(TraceKind::Medium);
+    let model = args.str_or("model", "8b");
+    let rates: Vec<f64> = args
+        .str_or("rates", "0.5,1.0,1.5,2.0,2.5,3.0")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let params = ProfileParams {
+        rates,
+        n_requests: args.usize_or("n", 120),
+        seed: args.u64_or("seed", 0xace),
+        ..ProfileParams::default()
+    };
+    let sweep = profile(
+        move |p| builder_for(&model, p),
+        kind,
+        &params,
+    );
+    let mut t = Table::new(&["arrival rate", "best improvement rate", "mean TTFT"]);
+    for (rate, row) in &sweep.cells {
+        let best = row.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+        t.row(vec![format!("{rate:.1}"), format!("{:.2}", best.0), fmt_secs(best.1)]);
+    }
+    t.print();
+    if let Some(out) = args.get("out") {
+        let profile = sweep.best_profile();
+        if profile.to_json().to_file(std::path::Path::new(out)).is_err() {
+            eprintln!("failed to write {out}");
+            return 1;
+        }
+        println!("profile written to {out}");
+    }
+    0
+}
+
+fn cmd_fit(_args: &Args) -> i32 {
+    use tetris::latency::calibration::{TABLE1_LENS, TABLE1_SECS, TABLE1_SPS};
+    let model = tetris::latency::calibration::table1_model();
+    let mut t = Table::new(&["prompt", "sp", "paper (s)", "Eq.(1) fit (s)", "rel err"]);
+    for (i, &len) in TABLE1_LENS.iter().enumerate() {
+        for (j, &sp) in TABLE1_SPS.iter().enumerate() {
+            if let Some(secs) = TABLE1_SECS[i][j] {
+                let pred = model.predict(sp, 0.0, len as f64);
+                t.row(vec![
+                    format!("{}k", len / 1024),
+                    sp.to_string(),
+                    format!("{secs:.2}"),
+                    format!("{pred:.2}"),
+                    format!("{:.1}%", 100.0 * (pred - secs).abs() / secs),
+                ]);
+            }
+        }
+    }
+    t.print();
+    0
+}
+
+fn cmd_gen_trace(args: &Args) -> i32 {
+    let trace = gen_trace(args);
+    let out = args.str_or("out", "trace.json");
+    let j: Json = trace_to_json(&trace);
+    if j.to_file(std::path::Path::new(&out)).is_err() {
+        eprintln!("failed to write {out}");
+        return 1;
+    }
+    println!("wrote {} requests to {out}", trace.len());
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use tetris::runtime::{artifacts_dir, Engine};
+    use tetris::serve::{ServeRequest, Server};
+    let n = args.usize_or("requests", 8);
+    let prompt_len = args.usize_or("prompt-len", 120);
+    let output_len = args.usize_or("output-len", 8);
+    let workers = args.usize_or("workers", 4);
+    let engine = match Engine::load(&artifacts_dir()) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!("failed to load artifacts (run `make artifacts`): {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "engine: {} layers, d_model {}, vocab {} — {} prefill workers",
+        engine.arch.n_layers, engine.arch.d_model, engine.arch.vocab, workers
+    );
+    let sched_model = tetris::latency::a100_model_for(
+        &tetris::modelcfg::ModelArch::llama3_8b(), 1, &[1, 2, 4],
+    );
+    let mut cfg = tetris::config::SchedConfig::default();
+    cfg.sp_candidates = vec![1, 2, 4];
+    cfg.min_chunk = 32;
+    let mut server = match Server::start(engine, workers, sched_model, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server start failed: {e:#}");
+            return 1;
+        }
+    };
+    let reqs: Vec<ServeRequest> = (0..n as u64)
+        .map(|id| ServeRequest {
+            id,
+            prompt: (0..prompt_len).map(|i| ((i * 31 + id as usize * 7) % 512) as i32).collect(),
+            output_len,
+        })
+        .collect();
+    let m = match server.run_trace(&reqs, 0.0) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            return 1;
+        }
+    };
+    let ttft = m.ttft_summary();
+    let tbt = m.tbt_summary();
+    println!(
+        "served {} requests in {}: TTFT p50={} p99={}  TBT p50={} p99={}  {:.0} tok/s",
+        m.requests.len(),
+        fmt_secs(m.span),
+        fmt_secs(ttft.p50),
+        fmt_secs(ttft.p99),
+        fmt_secs(tbt.p50),
+        fmt_secs(tbt.p99),
+        m.token_throughput()
+    );
+    let _ = server.shutdown();
+    0
+}

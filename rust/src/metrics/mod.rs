@@ -1,0 +1,184 @@
+//! Serving-quality metrics: TTFT, TBT, throughput, and capacity search.
+//!
+//! Mirrors the paper's reporting: P50/P99 of both metrics (Sec. 7.1),
+//! normalization to 25× light-load latency (Fig. 8), CDFs (Fig. 9),
+//! throughput at critical rates (Fig. 10), and "max sustainable load" — the
+//! highest arrival rate whose normalized latency stays under the threshold.
+
+use crate::util::stats::{cdf_points, Summary};
+
+/// Per-request outcome collected by the simulator or the live engine.
+#[derive(Clone, Debug)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub arrival: f64,
+    /// Time the first token was produced (prefill complete).
+    pub first_token: f64,
+    /// Completion time of the full response.
+    pub finish: f64,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    /// Per-output-token intervals (decode smoothness).
+    pub tbt: Vec<f64>,
+}
+
+impl RequestMetrics {
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+}
+
+/// Aggregated run outcome.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub requests: Vec<RequestMetrics>,
+    /// Wall-clock span of the run (seconds).
+    pub span: f64,
+}
+
+impl RunMetrics {
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.requests.iter().map(RequestMetrics::ttft).collect()
+    }
+
+    pub fn tbts(&self) -> Vec<f64> {
+        self.requests.iter().flat_map(|r| r.tbt.iter().copied()).collect()
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.ttfts())
+    }
+
+    pub fn tbt_summary(&self) -> Summary {
+        Summary::of(&self.tbts())
+    }
+
+    /// TTFT CDF points for Fig. 9.
+    pub fn ttft_cdf(&self, points: usize) -> Vec<(f64, f64)> {
+        cdf_points(&self.ttfts(), points)
+    }
+
+    /// Token throughput: total (prompt + output) tokens per second.
+    pub fn token_throughput(&self) -> f64 {
+        let tokens: usize =
+            self.requests.iter().map(|r| r.prompt_len + r.output_len).sum();
+        tokens as f64 / self.span
+    }
+
+    /// Request throughput: completed requests per second.
+    pub fn request_throughput(&self) -> f64 {
+        self.requests.len() as f64 / self.span
+    }
+}
+
+/// Normalized-slowdown criterion used in Fig. 8: a load is *sustainable*
+/// while P99 latency ≤ `factor` × the light-load latency.
+#[derive(Clone, Copy, Debug)]
+pub struct SloCriterion {
+    /// Light-load (near-zero rate) reference latency.
+    pub light_load: f64,
+    /// Slowdown factor (paper uses 25×).
+    pub factor: f64,
+}
+
+impl SloCriterion {
+    pub fn threshold(&self) -> f64 {
+        self.light_load * self.factor
+    }
+
+    pub fn satisfied(&self, p99: f64) -> bool {
+        p99 <= self.threshold()
+    }
+}
+
+/// Find the max sustainable arrival rate by scanning `rates` (ascending) and
+/// returning the largest whose measured P99 TTFT meets the SLO. `measure`
+/// runs one experiment and returns P99 TTFT.
+pub fn max_sustainable_rate(
+    rates: &[f64],
+    slo: &SloCriterion,
+    mut measure: impl FnMut(f64) -> f64,
+) -> Option<f64> {
+    let mut best = None;
+    for &r in rates {
+        let p99 = measure(r);
+        if slo.satisfied(p99) {
+            best = Some(r);
+        } else {
+            break; // latency is monotone in load; stop at first violation
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64, ttft: f64, n_out: usize, tbt: f64) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            arrival,
+            first_token: arrival + ttft,
+            finish: arrival + ttft + n_out as f64 * tbt,
+            prompt_len: 1000,
+            output_len: n_out,
+            tbt: vec![tbt; n_out],
+        }
+    }
+
+    #[test]
+    fn ttft_and_summaries() {
+        let run = RunMetrics {
+            requests: vec![req(0, 0.0, 1.0, 4, 0.05), req(1, 1.0, 3.0, 4, 0.07)],
+            span: 10.0,
+        };
+        let s = run.ttft_summary();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        let t = run.tbt_summary();
+        assert_eq!(t.count, 8);
+        assert!((t.mean - 0.06).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput() {
+        let run = RunMetrics {
+            requests: vec![req(0, 0.0, 1.0, 100, 0.05), req(1, 0.0, 1.0, 100, 0.05)],
+            span: 4.0,
+        };
+        assert!((run.token_throughput() - (2.0 * 1100.0 / 4.0)).abs() < 1e-9);
+        assert!((run.request_throughput() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_threshold() {
+        let slo = SloCriterion { light_load: 0.4, factor: 25.0 };
+        assert!(slo.satisfied(10.0));
+        assert!(!slo.satisfied(10.1));
+    }
+
+    #[test]
+    fn capacity_search_stops_at_violation() {
+        let slo = SloCriterion { light_load: 1.0, factor: 2.0 };
+        let rates = [1.0, 2.0, 3.0, 4.0];
+        // p99 = rate: violation above 2.0
+        let best = max_sustainable_rate(&rates, &slo, |r| r);
+        assert_eq!(best, Some(2.0));
+        // all violate
+        let none = max_sustainable_rate(&rates, &slo, |_| 100.0);
+        assert_eq!(none, None);
+    }
+
+    #[test]
+    fn cdf_for_fig9() {
+        let run = RunMetrics {
+            requests: (0..100).map(|i| req(i, 0.0, (i + 1) as f64 * 0.1, 1, 0.05)).collect(),
+            span: 1.0,
+        };
+        let cdf = run.ttft_cdf(11);
+        assert_eq!(cdf.len(), 11);
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+}

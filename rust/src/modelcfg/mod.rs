@@ -1,0 +1,207 @@
+//! Transformer architecture descriptions and arithmetic accounting.
+//!
+//! The scheduler and simulator never run LLaMA3-8B/70B — they reason about
+//! them through FLOPs and byte counts. This module holds the architecture
+//! parameters of the paper's models (plus the tiny model the real E2E engine
+//! serves) and the per-chunk/per-step accounting that feeds the analytic
+//! latency calibration in `latency::calibration`.
+
+/// Dense decoder-only transformer architecture.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelArch {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// Number of KV heads (GQA); equals `n_heads` for MHA.
+    pub n_kv_heads: usize,
+    /// MLP hidden size (SwiGLU has 3 matrices of this width).
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// Bytes per parameter / activation element (2 = bf16).
+    pub bytes_per_el: usize,
+}
+
+impl ModelArch {
+    /// LLaMA3-8B (paper's small model).
+    pub fn llama3_8b() -> Self {
+        ModelArch {
+            name: "llama3-8b".into(),
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 14336,
+            vocab: 128_256,
+            bytes_per_el: 2,
+        }
+    }
+
+    /// LLaMA3-70B (paper's large model).
+    pub fn llama3_70b() -> Self {
+        ModelArch {
+            name: "llama3-70b".into(),
+            n_layers: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_ff: 28672,
+            vocab: 128_256,
+            bytes_per_el: 2,
+        }
+    }
+
+    /// The tiny model the real PJRT-backed engine serves end-to-end.
+    /// Must match `python/compile/model.py::TINY`.
+    pub fn tiny() -> Self {
+        ModelArch {
+            name: "tiny-llama".into(),
+            n_layers: 2,
+            d_model: 128,
+            n_heads: 4,
+            n_kv_heads: 4,
+            d_ff: 384,
+            vocab: 512,
+            bytes_per_el: 4, // f32 on CPU PJRT
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama3-8b" => Some(Self::llama3_8b()),
+            "llama3-70b" => Some(Self::llama3_70b()),
+            "tiny-llama" | "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + layers + lm head, untied).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let kv = (self.n_kv_heads * self.head_dim()) as u64;
+        let attn = d * d + 2 * d * kv + d * d; // wq, wk, wv, wo
+        let mlp = 3 * d * self.d_ff as u64; // gate, up, down
+        let norms = 2 * d;
+        let per_layer = attn + mlp + norms;
+        let emb = self.vocab as u64 * d;
+        emb + self.n_layers as u64 * per_layer + d + emb
+    }
+
+    /// Bytes of KV cache per token (all layers).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_layers * self.n_kv_heads * self.head_dim() * self.bytes_per_el) as u64
+    }
+
+    /// FLOPs of the dense (non-attention) blocks for `l` tokens:
+    /// QKV/O projections + SwiGLU MLP + lm head amortization excluded
+    /// (prefill logits are only needed for the last token).
+    pub fn dense_flops(&self, l: u64) -> f64 {
+        let d = self.d_model as f64;
+        let kv = (self.n_kv_heads * self.head_dim()) as f64;
+        let ff = self.d_ff as f64;
+        let per_tok_layer = 2.0 * (d * d) // wq
+            + 2.0 * 2.0 * (d * kv)        // wk, wv
+            + 2.0 * (d * d)               // wo
+            + 2.0 * 3.0 * (d * ff); // swiglu
+        self.n_layers as f64 * per_tok_layer * l as f64
+    }
+
+    /// FLOPs of causal attention for a chunk of `l` new tokens with `c`
+    /// historical tokens: QKᵀ + PV, 2·2·h·hd per (q, k) pair; the causal
+    /// intra-chunk part contributes l²/2 pairs, history contributes c·l.
+    pub fn attn_flops(&self, c: u64, l: u64) -> f64 {
+        let pairs = c as f64 * l as f64 + 0.5 * (l as f64) * (l as f64);
+        let per_pair = 4.0 * self.d_model as f64; // QK^T + PV across all heads
+        self.n_layers as f64 * pairs * per_pair
+    }
+
+    /// Total prefill FLOPs for a chunk (dense + attention).
+    pub fn prefill_chunk_flops(&self, c: u64, l: u64) -> f64 {
+        self.dense_flops(l) + self.attn_flops(c, l)
+    }
+
+    /// Decode-step FLOPs for one token against a `c`-token cache.
+    pub fn decode_flops(&self, c: u64) -> f64 {
+        self.prefill_chunk_flops(c, 1)
+    }
+
+    /// Bytes read per decode step (weights + KV) — decode is bandwidth-bound,
+    /// so this drives the decode latency model.
+    pub fn decode_bytes(&self, c: u64, batch: u64) -> f64 {
+        let weights = self.param_count() as f64 * self.bytes_per_el as f64;
+        let kv = self.kv_bytes_per_token() as f64 * c as f64 * batch as f64;
+        weights + kv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama8b_param_count_plausible() {
+        let m = ModelArch::llama3_8b();
+        let p = m.param_count() as f64;
+        assert!((7.5e9..9.0e9).contains(&p), "param count {p}");
+    }
+
+    #[test]
+    fn llama70b_param_count_plausible() {
+        let m = ModelArch::llama3_70b();
+        let p = m.param_count() as f64;
+        assert!((6.5e10..7.5e10).contains(&p), "param count {p}");
+    }
+
+    #[test]
+    fn kv_bytes_llama8b() {
+        // 8 KV heads * 128 dim * 2 (K+V) * 32 layers * 2 bytes = 131072 B/token
+        assert_eq!(ModelArch::llama3_8b().kv_bytes_per_token(), 131_072);
+    }
+
+    #[test]
+    fn attn_flops_quadratic_in_l() {
+        let m = ModelArch::llama3_8b();
+        let f1 = m.attn_flops(0, 1000);
+        let f2 = m.attn_flops(0, 2000);
+        let ratio = f2 / f1;
+        assert!((ratio - 4.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn attn_flops_linear_in_history() {
+        let m = ModelArch::llama3_8b();
+        let base = m.attn_flops(10_000, 1000);
+        let twice = m.attn_flops(20_000, 1000);
+        // history term doubles; intra-chunk term unchanged
+        assert!(twice > base * 1.8 && twice < base * 2.0, "{base} {twice}");
+    }
+
+    #[test]
+    fn prefill_flops_roughly_2_n_params_per_token_short() {
+        // For short sequences, dense dominates: ~2 * params FLOPs per token
+        // (embeddings excluded). Check within 2x.
+        let m = ModelArch::llama3_8b();
+        let l = 128u64;
+        let per_tok = m.dense_flops(l) / l as f64;
+        let two_p = 2.0 * m.param_count() as f64;
+        assert!(per_tok > 0.3 * two_p && per_tok < 1.2 * two_p, "{per_tok} vs {two_p}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["llama3-8b", "llama3-70b", "tiny-llama"] {
+            assert_eq!(ModelArch::by_name(n).unwrap().name, n);
+        }
+        assert!(ModelArch::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn tiny_matches_head_div() {
+        let m = ModelArch::tiny();
+        assert_eq!(m.head_dim() * m.n_heads, m.d_model);
+    }
+}

@@ -1,0 +1,214 @@
+//! Ring-attention mechanics: sequence partitioning and cache balancing.
+//!
+//! * **Zigzag partitioning** (paper Sec. 2.3): split a causal sequence into
+//!   `2N` shards `S_0..S_{2N-1}` and give instance *i* the pair
+//!   `(S_i, S_{2N-1-i})` — every instance then touches the same number of
+//!   (query, key) pairs despite the causal mask.
+//! * **Striped partitioning**: round-robin token stripes (the alternative
+//!   the paper cites).
+//! * **Cache balancing** (Sec. 4.1): when chunk *k* moves to a larger group,
+//!   historical KV is evenly re-sharded over the new group; the volume and
+//!   who-sends-whom matrix feed both the simulator and the real threaded
+//!   engine.
+
+/// Token ranges assigned to each of `n` instances under zigzag partitioning
+/// of `len` tokens. Returns per-instance lists of (start, end) ranges
+/// (end exclusive). When `len` doesn't divide evenly the tail shard is
+/// shorter.
+pub fn zigzag_ranges(len: usize, n: usize) -> Vec<Vec<(usize, usize)>> {
+    assert!(n > 0);
+    let shards = 2 * n;
+    let base = len / shards;
+    let rem = len % shards;
+    // shard s covers [off(s), off(s+1)) where the first `rem` shards get +1
+    let off = |s: usize| s * base + s.min(rem);
+    (0..n)
+        .map(|i| {
+            let s0 = i;
+            let s1 = shards - 1 - i;
+            let mut v = vec![(off(s0), off(s0 + 1))];
+            if s1 != s0 {
+                v.push((off(s1), off(s1 + 1)));
+            }
+            v.retain(|(a, b)| b > a);
+            v
+        })
+        .collect()
+}
+
+/// Striped partitioning: token t goes to instance `t % n`.
+pub fn striped_owner(token: usize, n: usize) -> usize {
+    token % n
+}
+
+/// Causal workload of an instance: number of (q, kv) pairs it computes given
+/// its token ranges (each query attends to all earlier tokens).
+pub fn causal_pairs(ranges: &[(usize, usize)]) -> u64 {
+    let mut pairs = 0u64;
+    for &(a, b) in ranges {
+        for q in a..b {
+            pairs += (q + 1) as u64;
+        }
+    }
+    pairs
+}
+
+/// Workload imbalance of a partitioning: max/mean of per-instance causal
+/// pairs (1.0 = perfectly balanced).
+pub fn imbalance(per_instance: &[u64]) -> f64 {
+    let max = *per_instance.iter().max().unwrap() as f64;
+    let mean =
+        per_instance.iter().sum::<u64>() as f64 / per_instance.len() as f64;
+    max / mean
+}
+
+/// Contiguous (naive) partitioning ranges, for comparison.
+pub fn contiguous_ranges(len: usize, n: usize) -> Vec<Vec<(usize, usize)>> {
+    let base = len / n;
+    let rem = len % n;
+    let off = |i: usize| i * base + i.min(rem);
+    (0..n).map(|i| vec![(off(i), off(i + 1))]).collect()
+}
+
+/// Cache-balancing move: `from` instance ships `tokens` history tokens to
+/// `to` so that the new group holds history evenly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BalanceMove {
+    pub from: usize,
+    pub to: usize,
+    pub tokens: usize,
+}
+
+/// Plan the cache-balancing moves when history of `hist` tokens held evenly
+/// by the first `old_n` members of a group grows to `new_n ⊇ old_n` members
+/// (indices are positions within the new group; the paper guarantees the
+/// old group is a prefix by construction).
+///
+/// Greedy matching: senders each hold `hist/old_n` and must drop to
+/// `hist/new_n`; receivers start at 0 and fill to `hist/new_n`.
+pub fn plan_balance(hist: usize, old_n: usize, new_n: usize) -> Vec<BalanceMove> {
+    assert!(old_n > 0 && new_n >= old_n);
+    if hist == 0 || new_n == old_n {
+        return vec![];
+    }
+    // Integer shares: distribute remainder to the lowest indices.
+    let share_new = |i: usize| hist / new_n + usize::from(i < hist % new_n);
+    let share_old = |i: usize| hist / old_n + usize::from(i < hist % old_n);
+    let mut surplus: Vec<(usize, usize)> = (0..old_n)
+        .map(|i| (i, share_old(i) - share_new(i)))
+        .filter(|(_, s)| *s > 0)
+        .collect();
+    let mut deficit: Vec<(usize, usize)> = (old_n..new_n)
+        .map(|i| (i, share_new(i)))
+        .filter(|(_, d)| *d > 0)
+        .collect();
+    let mut moves = Vec::new();
+    let (mut si, mut di) = (0, 0);
+    while si < surplus.len() && di < deficit.len() {
+        let take = surplus[si].1.min(deficit[di].1);
+        moves.push(BalanceMove { from: surplus[si].0, to: deficit[di].0, tokens: take });
+        surplus[si].1 -= take;
+        deficit[di].1 -= take;
+        if surplus[si].1 == 0 {
+            si += 1;
+        }
+        if deficit[di].1 == 0 {
+            di += 1;
+        }
+    }
+    debug_assert!(surplus[si.min(surplus.len() - 1)].1 == 0 || di == deficit.len());
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_covers_everything_once() {
+        for (len, n) in [(64, 4), (100, 4), (17, 2), (1, 1), (1000, 8)] {
+            let ranges = zigzag_ranges(len, n);
+            let mut seen = vec![false; len];
+            for inst in &ranges {
+                for &(a, b) in inst {
+                    for t in a..b {
+                        assert!(!seen[t], "token {t} assigned twice");
+                        seen[t] = true;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "len={len} n={n} missing tokens");
+        }
+    }
+
+    #[test]
+    fn zigzag_balances_causal_work() {
+        let len = 4096;
+        let n = 8;
+        let zig: Vec<u64> = zigzag_ranges(len, n).iter().map(|r| causal_pairs(r)).collect();
+        let contig: Vec<u64> =
+            contiguous_ranges(len, n).iter().map(|r| causal_pairs(r)).collect();
+        let zig_imb = imbalance(&zig);
+        let contig_imb = imbalance(&contig);
+        assert!(zig_imb < 1.01, "zigzag imbalance {zig_imb}");
+        // contiguous: last instance does ~2x the mean
+        assert!(contig_imb > 1.7, "contiguous imbalance {contig_imb}");
+    }
+
+    #[test]
+    fn zigzag_shard_sizes_even() {
+        let ranges = zigzag_ranges(4096, 4);
+        for inst in &ranges {
+            let tokens: usize = inst.iter().map(|(a, b)| b - a).sum();
+            assert_eq!(tokens, 1024);
+        }
+    }
+
+    #[test]
+    fn striped_round_robin() {
+        assert_eq!(striped_owner(0, 4), 0);
+        assert_eq!(striped_owner(5, 4), 1);
+        assert_eq!(striped_owner(7, 4), 3);
+    }
+
+    #[test]
+    fn balance_conserves_tokens() {
+        for (hist, old_n, new_n) in [(1000, 4, 8), (777, 2, 3), (10, 1, 16), (64, 4, 4)] {
+            let moves = plan_balance(hist, old_n, new_n);
+            // apply
+            let share_old = |i: usize| hist / old_n + usize::from(i < hist % old_n);
+            let mut hold: Vec<i64> = (0..new_n)
+                .map(|i| if i < old_n { share_old(i) as i64 } else { 0 })
+                .collect();
+            for m in &moves {
+                hold[m.from] -= m.tokens as i64;
+                hold[m.to] += m.tokens as i64;
+                assert!(m.from < old_n && m.to >= old_n, "direction: {m:?}");
+            }
+            let total: i64 = hold.iter().sum();
+            assert_eq!(total as usize, hist);
+            // evenness: every instance within 1 token of hist/new_n
+            for (i, h) in hold.iter().enumerate() {
+                let want = hist as i64 / new_n as i64;
+                assert!(
+                    (h - want).abs() <= 1,
+                    "hist={hist} {old_n}->{new_n}: inst {i} holds {h}, want ~{want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn balance_empty_cases() {
+        assert!(plan_balance(0, 2, 4).is_empty());
+        assert!(plan_balance(100, 4, 4).is_empty());
+    }
+
+    #[test]
+    fn balance_moves_minimal_volume() {
+        // 4 -> 8 with 800 tokens: exactly 400 tokens must move.
+        let moves = plan_balance(800, 4, 8);
+        let moved: usize = moves.iter().map(|m| m.tokens).sum();
+        assert_eq!(moved, 400);
+    }
+}

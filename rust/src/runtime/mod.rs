@@ -1,0 +1,327 @@
+//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//!
+//! `make artifacts` (python, build-time only) produced:
+//! * `prefill_chunk.hlo.txt` / `decode_step.hlo.txt` — HLO **text** (the
+//!   xla crate's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos;
+//!   the text parser reassigns instruction ids — see aot.py),
+//! * `weights.bin` + `manifest.json` — flat f32 weights and the shape/order
+//!   table.
+//!
+//! This module wraps `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute` behind a typed API. Python never runs here.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Architecture constants read from the manifest (mirrors
+/// `python/compile/model.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TinyArch {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub l_bucket: usize,
+    pub c_bucket: usize,
+    pub decode_c_bucket: usize,
+}
+
+impl TinyArch {
+    /// Elements of one KV tensor (k or v) in the prefill cache bucket.
+    pub fn kv_elems(&self) -> usize {
+        self.n_layers * self.c_bucket * self.n_heads * self.head_dim
+    }
+    pub fn decode_kv_elems(&self) -> usize {
+        self.n_layers * self.decode_c_bucket * self.n_heads * self.head_dim
+    }
+    /// Elements of one new-KV output of a prefill call.
+    pub fn new_kv_elems(&self) -> usize {
+        self.n_layers * self.l_bucket * self.n_heads * self.head_dim
+    }
+    /// Elements per token per layer (one of k/v).
+    pub fn tok_elems(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+}
+
+/// One weight tensor's manifest entry.
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub elems: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub arch: TinyArch,
+    pub weights: Vec<WeightSpec>,
+    pub prefill_file: String,
+    pub decode_file: String,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::from_file(&dir.join("manifest.json"))
+            .context("reading manifest.json (run `make artifacts` first)")?;
+        let a = j.get("arch").ok_or_else(|| anyhow!("manifest missing arch"))?;
+        let b = j.get("buckets").ok_or_else(|| anyhow!("manifest missing buckets"))?;
+        let arch = TinyArch {
+            n_layers: a.req_usize("n_layers")?,
+            d_model: a.req_usize("d_model")?,
+            n_heads: a.req_usize("n_heads")?,
+            head_dim: a.req_usize("head_dim")?,
+            vocab: a.req_usize("vocab")?,
+            l_bucket: b.req_usize("l_bucket")?,
+            c_bucket: b.req_usize("c_bucket")?,
+            decode_c_bucket: b.req_usize("decode_c_bucket")?,
+        };
+        let mut weights = Vec::new();
+        for w in j.req_arr("weights")? {
+            weights.push(WeightSpec {
+                name: w.req_str("name")?.to_string(),
+                shape: w
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape")))
+                    .collect::<Result<_>>()?,
+                offset_bytes: w.req_usize("offset_bytes")?,
+                elems: w.req_usize("elems")?,
+            });
+        }
+        let arts = j.get("artifacts").ok_or_else(|| anyhow!("missing artifacts"))?;
+        let prefill_file = arts
+            .get("prefill")
+            .ok_or_else(|| anyhow!("missing prefill artifact"))?
+            .req_str("file")?
+            .to_string();
+        let decode_file = arts
+            .get("decode")
+            .ok_or_else(|| anyhow!("missing decode artifact"))?
+            .req_str("file")?
+            .to_string();
+        Ok(Manifest { arch, weights, prefill_file, decode_file, dir: dir.to_path_buf() })
+    }
+}
+
+/// Weights loaded from `weights.bin`, one host literal per tensor.
+pub struct Weights {
+    literals: Vec<xla::Literal>,
+}
+
+impl Weights {
+    pub fn load(m: &Manifest) -> Result<Weights> {
+        let bytes = std::fs::read(m.dir.join("weights.bin"))
+            .context("reading weights.bin")?;
+        let mut literals = Vec::with_capacity(m.weights.len());
+        for w in &m.weights {
+            let end = w.offset_bytes + w.elems * 4;
+            anyhow::ensure!(end <= bytes.len(), "weights.bin too short for {}", w.name);
+            let mut vals = vec![0f32; w.elems];
+            for (i, v) in vals.iter_mut().enumerate() {
+                let o = w.offset_bytes + i * 4;
+                *v = f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+            }
+            let dims: Vec<i64> = w.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(&vals).reshape(&dims)?);
+        }
+        Ok(Weights { literals })
+    }
+
+    pub fn len(&self) -> usize {
+        self.literals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.literals.is_empty()
+    }
+}
+
+/// Output of one prefill-chunk execution.
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+    pub new_k: Vec<f32>,
+    pub new_v: Vec<f32>,
+}
+
+/// Output of one decode-step execution.
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub new_k: Vec<f32>,
+    pub new_v: Vec<f32>,
+}
+
+struct Inner {
+    _client: xla::PjRtClient,
+    prefill: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+    weights: Weights,
+}
+
+/// The engine: compiled executables + weights, callable from many threads.
+///
+/// The xla crate's types wrap raw PJRT pointers and are `!Send`; the PJRT
+/// CPU client itself is thread-safe, but we stay conservative and serialize
+/// every execution through one mutex (CPU execution is effectively serial
+/// anyway; the serving engine's parallelism is in its coordination, which is
+/// what this reproduction measures).
+pub struct Engine {
+    inner: Mutex<Inner>,
+    pub arch: TinyArch,
+}
+
+// SAFETY: all access to the PJRT pointers goes through the Mutex above; the
+// PJRT CPU plugin supports multi-threaded clients. See module docs.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load artifacts from `dir`, compile both executables.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let prefill = compile(&manifest.prefill_file)?;
+        let decode = compile(&manifest.decode_file)?;
+        let weights = Weights::load(&manifest)?;
+        Ok(Engine {
+            arch: manifest.arch.clone(),
+            inner: Mutex::new(Inner { _client: client, prefill, decode, weights }),
+        })
+    }
+
+    /// Execute one CDSP chunk: `tokens` padded to `l_bucket`, history cache
+    /// padded to `c_bucket`.
+    pub fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        hist_k: &[f32],
+        hist_v: &[f32],
+        hist_len: i32,
+        chunk_len: i32,
+    ) -> Result<PrefillOut> {
+        let a = &self.arch;
+        anyhow::ensure!(tokens.len() == a.l_bucket, "tokens must be padded to l_bucket");
+        anyhow::ensure!(hist_k.len() == a.kv_elems(), "hist_k size");
+        anyhow::ensure!(hist_v.len() == a.kv_elems(), "hist_v size");
+        anyhow::ensure!(chunk_len >= 1 && chunk_len as usize <= a.l_bucket);
+        anyhow::ensure!(hist_len >= 0 && (hist_len as usize) <= a.c_bucket);
+
+        let kv_dims = [
+            a.n_layers as i64,
+            a.c_bucket as i64,
+            a.n_heads as i64,
+            a.head_dim as i64,
+        ];
+        let inner = self.inner.lock().unwrap();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(inner.weights.len() + 5);
+        for w in &inner.weights.literals {
+            args.push(w.clone());
+        }
+        args.push(xla::Literal::vec1(tokens));
+        args.push(xla::Literal::vec1(hist_k).reshape(&kv_dims)?);
+        args.push(xla::Literal::vec1(hist_v).reshape(&kv_dims)?);
+        args.push(xla::Literal::vec1(&[hist_len]));
+        args.push(xla::Literal::vec1(&[chunk_len]));
+
+        let result = inner.prefill.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, new_k, new_v) = result.to_tuple3()?;
+        Ok(PrefillOut {
+            logits: logits.to_vec::<f32>()?,
+            new_k: new_k.to_vec::<f32>()?,
+            new_v: new_v.to_vec::<f32>()?,
+        })
+    }
+
+    /// Execute one decode step against the decode-bucket cache.
+    pub fn decode_step(
+        &self,
+        token: i32,
+        hist_k: &[f32],
+        hist_v: &[f32],
+        hist_len: i32,
+    ) -> Result<DecodeOut> {
+        let a = &self.arch;
+        anyhow::ensure!(hist_k.len() == a.decode_kv_elems(), "hist_k size");
+        anyhow::ensure!(hist_v.len() == a.decode_kv_elems(), "hist_v size");
+        anyhow::ensure!(hist_len >= 1 && (hist_len as usize) < a.decode_c_bucket);
+
+        let kv_dims = [
+            a.n_layers as i64,
+            a.decode_c_bucket as i64,
+            a.n_heads as i64,
+            a.head_dim as i64,
+        ];
+        let inner = self.inner.lock().unwrap();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(inner.weights.len() + 4);
+        for w in &inner.weights.literals {
+            args.push(w.clone());
+        }
+        args.push(xla::Literal::vec1(&[token]));
+        args.push(xla::Literal::vec1(hist_k).reshape(&kv_dims)?);
+        args.push(xla::Literal::vec1(hist_v).reshape(&kv_dims)?);
+        args.push(xla::Literal::vec1(&[hist_len]));
+
+        let result = inner.decode.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, new_k, new_v) = result.to_tuple3()?;
+        Ok(DecodeOut {
+            logits: logits.to_vec::<f32>()?,
+            new_k: new_k.to_vec::<f32>()?,
+            new_v: new_v.to_vec::<f32>()?,
+        })
+    }
+}
+
+/// Argmax sampling (deterministic generation for tests/benches).
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Default artifacts directory: `$TETRIS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("TETRIS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn manifest_requires_files() {
+        let dir = std::env::temp_dir().join("tetris_no_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    // Engine execution tests live in rust/tests/integration_runtime.rs —
+    // they need `make artifacts` to have run.
+}

@@ -1,0 +1,338 @@
+//! CDSP prefill scheduling — Algorithms 1, 2, and 3 of the paper.
+//!
+//! Implementation notes vs the paper's pseudocode:
+//!
+//! * The paper rebases queue clocks between recursion levels (Eq. (2)) so
+//!   each level reasons in its own relative time. We instead keep a single
+//!   scratch `PoolView` whose delays stay relative to the *request's*
+//!   scheduling instant and commit each chunk's finish time into it — the
+//!   absolute-offset formulation is equivalent (the final chunk's finish
+//!   time IS the TTFT estimate) and avoids the double-counting Eq. (2)
+//!   guards against.
+//! * `SingleChunkSchedule` (Algorithm 2) applies the *improvement-rate*
+//!   threshold: a larger SP is accepted only when it beats the incumbent by
+//!   more than `rate` relatively — the knob the load-aware controller tunes.
+//! * `GetChunkPlan` (Algorithm 3) budgets the current chunk by the queuing
+//!   gap between the next group and the current group and inverts Eq. (1)
+//!   to a token count.
+//!
+//! The scheduler is pure over a `PoolView` snapshot: the simulator and the
+//! real serving engine both own their pools and commit the returned plan.
+
+use crate::cluster::{InstanceId, PoolView};
+use crate::config::SchedConfig;
+use crate::latency::PrefillModel;
+use crate::sched::plan::{CdspPlan, ChunkPlan};
+
+/// The CDSP scheduler: Eq. (1) model + config knobs.
+#[derive(Clone, Debug)]
+pub struct CdspScheduler {
+    pub model: PrefillModel,
+    pub cfg: SchedConfig,
+    /// Disable Algorithm 1's chunk exploration (Fig. 13 ablation: every
+    /// request gets the single-chunk plan).
+    pub single_chunk_only: bool,
+}
+
+impl CdspScheduler {
+    pub fn new(model: PrefillModel, cfg: SchedConfig) -> Self {
+        CdspScheduler { model, cfg, single_chunk_only: false }
+    }
+
+    /// Schedule a request of `prompt_len` tokens against the pool snapshot.
+    /// `rate` is the current improvement-rate threshold (from the
+    /// load-aware controller). Returns the chosen plan; `None` only when the
+    /// pool is empty.
+    pub fn schedule(&self, prompt_len: usize, pool: &PoolView, rate: f64) -> Option<CdspPlan> {
+        if pool.is_empty() || prompt_len == 0 {
+            return None;
+        }
+        let mut scratch = pool.clone();
+        self.cdsp_schedule(prompt_len, &mut Vec::new(), &self.candidates(pool.len()),
+                           &mut scratch, rate, 0.0, self.cfg.max_chunks)
+    }
+
+    /// SP candidates that fit the pool.
+    fn candidates(&self, pool_len: usize) -> Vec<usize> {
+        self.cfg
+            .sp_candidates
+            .iter()
+            .copied()
+            .filter(|&s| s <= pool_len)
+            .collect()
+    }
+
+    /// Algorithm 1: recursive chunk-plan exploration, with two exact
+    /// prunings on top of the paper's pseudocode (they never change the
+    /// returned optimum, only skip dominated branches — Table 2 bench):
+    ///
+    /// * **bound pruning** — a branch whose current chunk already finishes
+    ///   later than the incumbent plan's TTFT cannot win (chunks execute
+    ///   sequentially, so the final TTFT is ≥ every chunk finish);
+    /// * **duplicate-budget pruning** — for a fixed `s_cur`, two `s_next`
+    ///   choices with the same queuing gap yield the same chunk; keeping the
+    ///   smaller `s_next` (whose candidate set is a superset) dominates.
+    fn cdsp_schedule(
+        &self,
+        l: usize,
+        acc: &mut Vec<ChunkPlan>,
+        s_cands: &[usize],
+        pool: &mut PoolView,
+        rate: f64,
+        elapsed: f64,
+        chunks_left: usize,
+    ) -> Option<CdspPlan> {
+        let hist: usize = acc.iter().map(|c| c.len).sum();
+        let initial_group: Vec<InstanceId> =
+            acc.last().map(|c| c.group.clone()).unwrap_or_default();
+
+        // Step 0: single-chunk plan for the remainder (Algorithm 2): for
+        // each candidate SP size an independent group from the current
+        // allocation, with the improvement-rate throttle.
+        let mut groups: Vec<(usize, Vec<InstanceId>, f64)> = Vec::with_capacity(s_cands.len());
+        for &s in s_cands {
+            if s < initial_group.len().max(1) {
+                continue;
+            }
+            let Some(group) = pool.get_group(&initial_group, s) else { continue };
+            let ready = pool.group_ready(&group);
+            groups.push((s, group, ready));
+        }
+        if groups.is_empty() {
+            return None;
+        }
+        let mut best_idx = 0usize;
+        let mut best_ttft = f64::INFINITY;
+        for (i, (s, _, ready)) in groups.iter().enumerate() {
+            let ttft = ready + self.model.predict(*s, hist as f64, l as f64);
+            if best_ttft.is_infinite() || ttft < best_ttft * (1.0 - rate) {
+                best_ttft = ttft;
+                best_idx = i;
+            }
+        }
+        let sc_group_len = groups[best_idx].1.len();
+        let mut opt = {
+            let mut chunks = acc.clone();
+            chunks.push(ChunkPlan { len: l, group: groups[best_idx].1.clone() });
+            CdspPlan { chunks, est_ttft: best_ttft }
+        };
+
+        if self.single_chunk_only || chunks_left <= 1 {
+            return Some(opt);
+        }
+
+        // Step 1: chunk-plan exploration over SP size pairs
+        // (S_CDSP = sizes <= the single-chunk allocation).
+        let n_cdsp = groups.iter().take_while(|(s, _, _)| *s <= sc_group_len).count();
+        for i in 0..n_cdsp {
+            let (s_cur, ref cur_group, t_cur) = groups[i];
+            let mut seen_budget = f64::NEG_INFINITY;
+            for j in i + 1..n_cdsp {
+                let s_next = groups[j].0;
+                // Algorithm 3: the next group extends the current one.
+                let Some(next_group) = pool.get_group(cur_group, s_next) else {
+                    continue;
+                };
+                let t_next = pool.group_ready(&next_group);
+                let budget = t_next - t_cur;
+                if budget <= 0.0 {
+                    continue;
+                }
+                // duplicate-budget pruning (budgets grow with j; equal
+                // budget => identical chunk; smaller s_next dominates).
+                if budget == seen_budget {
+                    continue;
+                }
+                seen_budget = budget;
+                let solved = self.model.solve_len(s_cur, hist as f64, budget);
+                let chunk_len = (solved.floor() as usize).min(l);
+                if chunk_len < self.cfg.min_chunk || chunk_len >= l {
+                    continue; // illegal plan (Algorithm 1 line 11-12)
+                }
+                let t_prefill =
+                    self.model.predict(s_cur, hist as f64, chunk_len as f64);
+                let cur_finish = t_cur + t_prefill;
+                // bound pruning: any completion finishes after cur_finish.
+                if cur_finish >= opt.est_ttft {
+                    continue;
+                }
+                let chunk = ChunkPlan { len: chunk_len, group: cur_group.clone() };
+
+                // Recurse with the chunk committed; rollback afterwards
+                // instead of cloning the pool (hot path, Table 2 bench).
+                let saved: Vec<(usize, f64)> =
+                    chunk.group.iter().map(|&g| (g, pool.delays[g])).collect();
+                pool.commit(&chunk.group, cur_finish);
+                let sub_cands: Vec<usize> = groups
+                    .iter()
+                    .filter(|(s, _, _)| *s >= s_next)
+                    .map(|(s, _, _)| *s)
+                    .collect();
+                acc.push(chunk);
+                let sub = self.cdsp_schedule(
+                    l - chunk_len,
+                    acc,
+                    &sub_cands,
+                    pool,
+                    rate,
+                    elapsed.max(cur_finish),
+                    chunks_left - 1,
+                );
+                acc.pop();
+                for (g, d) in saved {
+                    pool.delays[g] = d;
+                }
+                if let Some(p) = sub {
+                    if p.est_ttft < opt.est_ttft {
+                        opt = p;
+                    }
+                }
+            }
+        }
+        Some(opt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::calibration::table1_model;
+
+    fn sched() -> CdspScheduler {
+        let mut cfg = SchedConfig::default();
+        cfg.sp_candidates = vec![1, 2, 4, 8, 16];
+        CdspScheduler::new(table1_model(), cfg)
+    }
+
+    #[test]
+    fn idle_pool_long_request_gets_large_sp() {
+        let s = sched();
+        let pool = PoolView::idle(4, 4);
+        let plan = s.schedule(131_072, &pool, 0.1).unwrap();
+        plan.validate(131_072).unwrap();
+        // On an idle pool there are no gaps to fill: single chunk, max SP.
+        assert_eq!(plan.n_chunks(), 1);
+        assert_eq!(plan.max_sp(), 16);
+    }
+
+    #[test]
+    fn idle_pool_short_request_keeps_small_sp() {
+        let s = sched();
+        let pool = PoolView::idle(4, 4);
+        let plan = s.schedule(4_096, &pool, 0.1).unwrap();
+        plan.validate(4_096).unwrap();
+        assert!(plan.max_sp() <= 4, "short request over-expanded: {}", plan.max_sp());
+    }
+
+    #[test]
+    fn improvement_rate_throttles_expansion() {
+        let s = sched();
+        let pool = PoolView::idle(4, 4);
+        // 32k: Table 1 says SP16 (0.53s) barely beats SP8 (0.58s) — an ~9%
+        // gain. With rate=0.5 the scheduler must refuse the expansion.
+        let greedy = s.schedule(32_768, &pool, 0.0).unwrap();
+        let throttled = s.schedule(32_768, &pool, 0.5).unwrap();
+        assert!(throttled.max_sp() < greedy.max_sp(),
+                "greedy {} vs throttled {}", greedy.max_sp(), throttled.max_sp());
+    }
+
+    #[test]
+    fn fragmented_pool_triggers_chunking() {
+        let s = sched();
+        let mut pool = PoolView::idle(4, 4);
+        // 8 instances idle now, the other 8 busy for 1 s: a long request
+        // should start a chunk on the idle 8 and expand to 16 when the rest
+        // free up (the tetris move, Fig. 3-b). The early chunk's compute
+        // hides inside the queue gap, beating both SP8 and SP16 single-chunk.
+        for i in 8..16 {
+            pool.delays[i] = 1.0;
+        }
+        let plan = s.schedule(131_072, &pool, 0.1).unwrap();
+        plan.validate(131_072).unwrap();
+        assert!(plan.n_chunks() >= 2, "expected chunking, got {plan:?}");
+        assert!(plan.chunks[0].sp() <= 8);
+        assert_eq!(plan.final_group().len(), 16);
+        // CDSP must beat both pure strategies it interpolates between:
+        let single = {
+            let mut s2 = sched();
+            s2.single_chunk_only = true;
+            s2.schedule(131_072, &pool, 0.1).unwrap()
+        };
+        assert!(plan.est_ttft <= single.est_ttft + 1e-9,
+                "CDSP {} vs single-chunk {}", plan.est_ttft, single.est_ttft);
+    }
+
+    #[test]
+    fn chunk_groups_nest_under_fragmentation() {
+        let s = sched();
+        let mut pool = PoolView::idle(4, 4);
+        for (i, d) in pool.delays.iter_mut().enumerate() {
+            *d = (i as f64) * 0.4; // staircase fragmentation
+        }
+        let plan = s.schedule(200_000, &pool, 0.1).unwrap();
+        plan.validate(200_000).unwrap();
+    }
+
+    #[test]
+    fn single_chunk_only_matches_ablation() {
+        let mut s = sched();
+        s.single_chunk_only = true;
+        let mut pool = PoolView::idle(4, 4);
+        for i in 8..16 {
+            pool.delays[i] = 3.0;
+        }
+        let plan = s.schedule(131_072, &pool, 0.1).unwrap();
+        assert_eq!(plan.n_chunks(), 1);
+    }
+
+    #[test]
+    fn paper_example_32k_16k() {
+        // Sec. 2.4 Limitation (2): 16 instances each with 1 s queuing delay;
+        // a 32k request then a 16k request. Greedy gives SP16 to the 32k and
+        // makes the 16k wait; a load-aware rate keeps the 32k at SP8 so the
+        // 16k runs concurrently, improving mean TTFT.
+        let s = sched();
+        let mut pool = PoolView::idle(4, 4);
+        for d in pool.delays.iter_mut() {
+            *d = 1.0;
+        }
+        // Greedy (rate 0):
+        let mut p_greedy = pool.clone();
+        let plan_a = s.schedule(32_768, &p_greedy, 0.0).unwrap();
+        p_greedy.commit(plan_a.final_group(), plan_a.est_ttft);
+        let plan_b = s.schedule(16_384, &p_greedy, 0.0).unwrap();
+        let greedy_mean = (plan_a.est_ttft + plan_b.est_ttft) / 2.0;
+        // Throttled (rate 0.15 suppresses the 9% SP8->SP16 gain on 32k):
+        let mut p_t = pool.clone();
+        let plan_c = s.schedule(32_768, &p_t, 0.15).unwrap();
+        p_t.commit(plan_c.final_group(), plan_c.est_ttft);
+        let plan_d = s.schedule(16_384, &p_t, 0.15).unwrap();
+        let throttled_mean = (plan_c.est_ttft + plan_d.est_ttft) / 2.0;
+        assert!(plan_c.max_sp() < plan_a.max_sp());
+        assert!(
+            throttled_mean < greedy_mean,
+            "load-aware mean {throttled_mean} !< greedy mean {greedy_mean}"
+        );
+    }
+
+    #[test]
+    fn zero_len_or_empty_pool() {
+        let s = sched();
+        assert!(s.schedule(0, &PoolView::idle(2, 2), 0.1).is_none());
+        assert!(s
+            .schedule(100, &PoolView { delays: vec![], node_of: vec![], per_node: 1 }, 0.1)
+            .is_none());
+    }
+
+    #[test]
+    fn respects_max_chunks() {
+        let mut s = sched();
+        s.cfg.max_chunks = 2;
+        let mut pool = PoolView::idle(4, 4);
+        for (i, d) in pool.delays.iter_mut().enumerate() {
+            *d = i as f64 * 0.5;
+        }
+        let plan = s.schedule(262_144, &pool, 0.05).unwrap();
+        assert!(plan.n_chunks() <= 2, "{}", plan.n_chunks());
+    }
+}

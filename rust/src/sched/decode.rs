@@ -1,0 +1,193 @@
+//! Decode-instance routing (paper Sec. 5.2).
+//!
+//! Decoding instances run independently with continuous batching, so Tetris
+//! reuses existing scheduling ideas: Llumnix's *virtual usage* extended to
+//! in-flight prefill→decode cache transfers. A request whose KV cache is
+//! still streaming in occupies slots *virtually*; new requests route to the
+//! instance with the highest **freeness rate**:
+//!
+//! `freeness = (available slots excluding virtual usage) / (active batch + 1)`
+//!
+//! Slot statistics refresh whenever a decode iteration returns output.
+
+use crate::kvcache::BlockManager;
+
+/// State of one decoding instance as the router sees it.
+#[derive(Clone, Debug)]
+pub struct DecodeInstanceState {
+    /// KV block manager (true allocations).
+    pub blocks: BlockManager,
+    /// Blocks virtually reserved by in-flight cache transfers.
+    pub virtual_blocks: usize,
+    /// Requests actively decoding.
+    pub active_batch: usize,
+    /// Requests whose cache transfer is still in flight.
+    pub pending_transfers: usize,
+}
+
+impl DecodeInstanceState {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        DecodeInstanceState {
+            blocks: BlockManager::new(total_blocks, block_tokens),
+            virtual_blocks: 0,
+            active_batch: 0,
+            pending_transfers: 0,
+        }
+    }
+
+    /// Slots free after discounting virtual usage.
+    pub fn available_blocks(&self) -> usize {
+        self.blocks.free_blocks().saturating_sub(self.virtual_blocks)
+    }
+
+    /// Llumnix-style freeness rate.
+    pub fn freeness(&self) -> f64 {
+        self.available_blocks() as f64 / (self.active_batch + self.pending_transfers + 1) as f64
+    }
+
+    /// Blocks needed for `tokens` tokens on this instance.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.blocks.blocks_for(tokens)
+    }
+}
+
+/// The router over all decoding instances.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeRouter {
+    pub instances: Vec<DecodeInstanceState>,
+}
+
+impl DecodeRouter {
+    pub fn new(n: usize, blocks_per_instance: usize, block_tokens: usize) -> Self {
+        DecodeRouter {
+            instances: (0..n)
+                .map(|_| DecodeInstanceState::new(blocks_per_instance, block_tokens))
+                .collect(),
+        }
+    }
+
+    /// Route a request that will need `tokens` KV slots: pick the
+    /// highest-freeness instance that can (virtually) hold it. Reserves
+    /// virtual usage on the chosen instance. Returns the instance index.
+    pub fn route(&mut self, tokens: usize) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, inst) in self.instances.iter().enumerate() {
+            let need = inst.blocks_for(tokens);
+            if inst.available_blocks() < need {
+                continue;
+            }
+            let f = inst.freeness();
+            match best {
+                None => best = Some((i, f)),
+                Some((_, bf)) if f > bf => best = Some((i, f)),
+                _ => {}
+            }
+        }
+        let (idx, _) = best?;
+        let need = self.instances[idx].blocks_for(tokens);
+        self.instances[idx].virtual_blocks += need;
+        self.instances[idx].pending_transfers += 1;
+        Some(idx)
+    }
+
+    /// Cache transfer for a routed request finished: virtual usage becomes a
+    /// real allocation and the request joins the batch (iteration-level
+    /// scheduling inserts it at the next step boundary).
+    pub fn transfer_complete(&mut self, idx: usize, tokens: usize) -> anyhow::Result<u64> {
+        let inst = &mut self.instances[idx];
+        let need = inst.blocks_for(tokens);
+        inst.virtual_blocks = inst.virtual_blocks.saturating_sub(need);
+        inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
+        let seq = inst.blocks.allocate_seq(tokens)?;
+        inst.active_batch += 1;
+        Ok(seq)
+    }
+
+    /// A request finished decoding: free its blocks, shrink the batch.
+    pub fn finish(&mut self, idx: usize, seq: u64) {
+        let inst = &mut self.instances[idx];
+        inst.blocks.free_seq(seq);
+        inst.active_batch = inst.active_batch.saturating_sub(1);
+    }
+
+    /// One decode step generated a token for `seq`: may need a new block.
+    pub fn on_token(&mut self, idx: usize, seq: u64) -> anyhow::Result<()> {
+        self.instances[idx].blocks.append_token(seq)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> DecodeRouter {
+        DecodeRouter::new(2, 1000, 16)
+    }
+
+    #[test]
+    fn routes_to_freest() {
+        let mut r = router();
+        r.instances[0].active_batch = 10;
+        let idx = r.route(1600).unwrap();
+        assert_eq!(idx, 1, "instance 1 has no batch, higher freeness");
+        assert!(r.instances[1].virtual_blocks > 0);
+        assert_eq!(r.instances[1].pending_transfers, 1);
+    }
+
+    #[test]
+    fn virtual_usage_counts_against_capacity() {
+        let mut r = DecodeRouter::new(1, 100, 16);
+        // Fill 90 of 100 blocks virtually (90*16 = 1440 tokens).
+        assert_eq!(r.route(1440), Some(0));
+        // 20 more blocks don't fit (only 10 available).
+        assert_eq!(r.route(320), None);
+        // 10 do.
+        assert_eq!(r.route(160), Some(0));
+    }
+
+    #[test]
+    fn transfer_complete_converts_virtual_to_real() {
+        let mut r = DecodeRouter::new(1, 100, 16);
+        let idx = r.route(320).unwrap();
+        let virt_before = r.instances[0].virtual_blocks;
+        assert_eq!(virt_before, 20);
+        let seq = r.transfer_complete(idx, 320).unwrap();
+        assert_eq!(r.instances[0].virtual_blocks, 0);
+        assert_eq!(r.instances[0].active_batch, 1);
+        assert_eq!(r.instances[0].blocks.free_blocks(), 80);
+        r.finish(idx, seq);
+        assert_eq!(r.instances[0].blocks.free_blocks(), 100);
+        assert_eq!(r.instances[0].active_batch, 0);
+    }
+
+    #[test]
+    fn freeness_prefers_fewer_pending() {
+        let mut r = router();
+        // Same free blocks, but instance 0 has pending transfers.
+        r.instances[0].pending_transfers = 5;
+        assert_eq!(r.route(16), Some(1));
+    }
+
+    #[test]
+    fn on_token_grows_blocks() {
+        let mut r = DecodeRouter::new(1, 10, 4);
+        let idx = r.route(4).unwrap();
+        let seq = r.transfer_complete(idx, 4).unwrap();
+        assert_eq!(r.instances[0].blocks.free_blocks(), 9);
+        // 4 tokens fill block 0 exactly; next token needs a new block
+        r.on_token(idx, seq).unwrap();
+        assert_eq!(r.instances[0].blocks.free_blocks(), 8);
+        for _ in 0..3 {
+            r.on_token(idx, seq).unwrap(); // fills block 1
+        }
+        r.on_token(idx, seq).unwrap(); // block 2
+        assert_eq!(r.instances[0].blocks.free_blocks(), 7);
+    }
+
+    #[test]
+    fn route_none_when_all_full() {
+        let mut r = DecodeRouter::new(2, 2, 16);
+        assert!(r.route(64).is_none(), "needs 4 blocks, only 2 exist");
+    }
+}

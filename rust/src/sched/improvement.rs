@@ -1,0 +1,245 @@
+//! The real-time load-aware improvement-rate controller (paper Sec. 5.1).
+//!
+//! Algorithm 2 only upgrades a chunk's SP size when the TTFT gain exceeds
+//! the *improvement rate*. The right rate depends on load: under light load
+//! prefill latency dominates TTFT, so small rates (aggressive expansion)
+//! win; under heavy load queuing dominates and large rates (conservative
+//! expansion that keeps instances free for the next arrival) win
+//! (Figs. 11–12). The paper selects the rate by:
+//!
+//! 1. **offline**: a discrete-event simulator sweeps (arrival rate ×
+//!    improvement rate) over the service's observed length distribution and
+//!    records the TTFT-minimizing rate per arrival rate (`RateProfile`);
+//! 2. **online**: a sliding window estimates the current arrival rate and
+//!    the profile is queried every `rate_refresh` seconds.
+//!
+//! The profiler itself lives in `sim::profiler` (it needs the simulator);
+//! this module provides the profile table and the online controller.
+
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Offline-profiled table: optimal improvement rate per request arrival rate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RateProfile {
+    /// (arrival_rate req/s, best improvement rate), ascending by arrival rate.
+    pub entries: Vec<(f64, f64)>,
+}
+
+impl RateProfile {
+    pub fn new(mut entries: Vec<(f64, f64)>) -> Self {
+        entries.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        RateProfile { entries }
+    }
+
+    /// A reasonable default when no profile has been collected: the paper's
+    /// observed trend — small rates at low load rising toward 0.7 near
+    /// saturation (Figs. 11–12).
+    pub fn default_trend(max_rate: f64) -> Self {
+        let n = 8;
+        let entries = (0..=n)
+            .map(|i| {
+                let load = max_rate * i as f64 / n as f64;
+                let frac = i as f64 / n as f64;
+                (load, 0.1 + 0.6 * frac)
+            })
+            .collect();
+        RateProfile { entries }
+    }
+
+    /// The profiled rate for an observed arrival rate — nearest entry, as in
+    /// the paper ("selects the recorded request rate closest to the
+    /// observed value").
+    pub fn lookup(&self, arrival_rate: f64) -> f64 {
+        if self.entries.is_empty() {
+            return 0.3;
+        }
+        self.entries
+            .iter()
+            .min_by(|a, b| {
+                (a.0 - arrival_rate)
+                    .abs()
+                    .partial_cmp(&(b.0 - arrival_rate).abs())
+                    .unwrap()
+            })
+            .unwrap()
+            .1
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut arr = Json::arr();
+        for (r, ir) in &self.entries {
+            arr.push(Json::obj().set("arrival_rate", *r).set("improvement_rate", *ir));
+        }
+        Json::obj().set("entries", arr)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut entries = Vec::new();
+        for e in j.req_arr("entries")? {
+            entries.push((e.req_f64("arrival_rate")?, e.req_f64("improvement_rate")?));
+        }
+        Ok(RateProfile::new(entries))
+    }
+}
+
+/// Online controller: observes arrivals in a sliding window, refreshes the
+/// active rate from the profile on a fixed cadence.
+#[derive(Clone, Debug)]
+pub struct ImprovementController {
+    profile: RateProfile,
+    window: f64,
+    refresh: f64,
+    arrivals: VecDeque<f64>,
+    active_rate: f64,
+    last_refresh: f64,
+}
+
+impl ImprovementController {
+    pub fn new(profile: RateProfile, window: f64, refresh: f64) -> Self {
+        let initial = profile.lookup(0.0);
+        ImprovementController {
+            profile,
+            window,
+            refresh,
+            arrivals: VecDeque::new(),
+            active_rate: initial,
+            last_refresh: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fixed-rate controller (for the Fig. 11/12 fixed-rate arms).
+    pub fn fixed(rate: f64) -> Self {
+        ImprovementController {
+            profile: RateProfile::new(vec![(0.0, rate)]),
+            window: f64::INFINITY,
+            refresh: f64::INFINITY,
+            arrivals: VecDeque::new(),
+            active_rate: rate,
+            last_refresh: f64::INFINITY, // never refresh
+        }
+    }
+
+    /// Record a request arrival at absolute time `now` (seconds).
+    pub fn on_arrival(&mut self, now: f64) {
+        self.arrivals.push_back(now);
+        self.evict(now);
+    }
+
+    fn evict(&mut self, now: f64) {
+        while let Some(&t) = self.arrivals.front() {
+            if now - t > self.window {
+                self.arrivals.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Observed arrival rate (req/s) over the window ending at `now`.
+    pub fn observed_rate(&mut self, now: f64) -> f64 {
+        self.evict(now);
+        if self.window.is_infinite() || self.window <= 0.0 {
+            return 0.0;
+        }
+        self.arrivals.len() as f64 / self.window
+    }
+
+    /// The improvement rate to use at `now`, refreshing from the profile
+    /// when the refresh interval elapsed.
+    pub fn rate(&mut self, now: f64) -> f64 {
+        if now - self.last_refresh >= self.refresh {
+            let obs = self.observed_rate(now);
+            self.active_rate = self.profile.lookup(obs);
+            self.last_refresh = now;
+        }
+        self.active_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_picks_nearest() {
+        let p = RateProfile::new(vec![(1.0, 0.1), (2.0, 0.3), (4.0, 0.7)]);
+        assert_eq!(p.lookup(0.0), 0.1);
+        assert_eq!(p.lookup(1.4), 0.1);
+        assert_eq!(p.lookup(1.6), 0.3);
+        assert_eq!(p.lookup(100.0), 0.7);
+    }
+
+    #[test]
+    fn default_trend_monotone() {
+        let p = RateProfile::default_trend(4.0);
+        for w in p.entries.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert!(p.lookup(0.0) < p.lookup(4.0));
+    }
+
+    #[test]
+    fn controller_tracks_load() {
+        let profile = RateProfile::new(vec![(0.0, 0.1), (2.0, 0.5), (5.0, 0.7)]);
+        let mut c = ImprovementController::new(profile, 30.0, 30.0);
+        // no arrivals: low rate
+        assert_eq!(c.rate(0.0), 0.1);
+        // 60 arrivals in 30 s -> 2 req/s -> 0.5 (after refresh at t=30)
+        for i in 0..60 {
+            c.on_arrival(i as f64 * 0.5);
+        }
+        assert_eq!(c.rate(30.0), 0.5);
+        // burst to 5 req/s
+        for i in 0..150 {
+            c.on_arrival(30.0 + i as f64 * 0.2);
+        }
+        assert_eq!(c.rate(60.0), 0.7);
+    }
+
+    #[test]
+    fn refresh_cadence_respected() {
+        let profile = RateProfile::new(vec![(0.0, 0.1), (10.0, 0.9)]);
+        let mut c = ImprovementController::new(profile, 10.0, 30.0);
+        assert_eq!(c.rate(0.0), 0.1);
+        for i in 0..100 {
+            c.on_arrival(i as f64 * 0.1); // 10 req/s during [0, 10)
+        }
+        // before the next refresh tick the old rate stays active
+        assert_eq!(c.rate(10.0), 0.1);
+        // keep the load up through the refresh point
+        for i in 0..100 {
+            c.on_arrival(21.0 + i as f64 * 0.1); // 10 req/s during [21, 31)
+        }
+        // after the refresh interval it adapts
+        assert_eq!(c.rate(31.0), 0.9);
+    }
+
+    #[test]
+    fn window_eviction() {
+        let mut c = ImprovementController::new(RateProfile::default_trend(2.0), 10.0, 1.0);
+        for t in 0..5 {
+            c.on_arrival(t as f64);
+        }
+        assert_eq!(c.observed_rate(4.0), 0.5); // 5 arrivals / 10 s
+        assert_eq!(c.observed_rate(100.0), 0.0); // all evicted
+    }
+
+    #[test]
+    fn fixed_controller_never_moves() {
+        let mut c = ImprovementController::fixed(0.42);
+        for i in 0..1000 {
+            c.on_arrival(i as f64 * 0.01);
+        }
+        assert_eq!(c.rate(5.0), 0.42);
+        assert_eq!(c.rate(5000.0), 0.42);
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let p = RateProfile::new(vec![(0.5, 0.05), (3.0, 0.65)]);
+        let back = RateProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+}

@@ -1,0 +1,22 @@
+//! The Tetris scheduler — the paper's coordination contribution.
+//!
+//! * [`plan`] — CDSP execution plans (chunk lengths + instance groups) and
+//!   their validity invariants.
+//! * [`cdsp`] — Algorithms 1 (recursive chunk exploration), 2 (single-chunk
+//!   allocation with the improvement-rate throttle), and 3 (chunk-size
+//!   solving against a queuing-delay budget).
+//! * [`improvement`] — the real-time load-aware improvement-rate controller:
+//!   sliding-window arrival-rate observation plus the offline,
+//!   simulator-profiled rate table.
+//! * [`decode`] — decode-instance routing: Llumnix-style freeness rate over
+//!   available KV slots with "virtual usage" for in-flight cache transfers.
+
+pub mod plan;
+pub mod cdsp;
+pub mod improvement;
+pub mod decode;
+
+pub use cdsp::CdspScheduler;
+pub use decode::DecodeRouter;
+pub use improvement::{ImprovementController, RateProfile};
+pub use plan::{CdspPlan, ChunkPlan};

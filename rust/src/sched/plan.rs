@@ -1,0 +1,158 @@
+//! CDSP execution plans.
+//!
+//! A plan splits one request's prompt into consecutive chunks; each chunk
+//! carries the prefill instance group that executes it. The paper constrains
+//! plans so that each chunk's group **includes** all instances of preceding
+//! chunks (Sec. 4.1 — keeps cache balancing one-directional) and SP sizes
+//! strictly grow across chunks (Sec. 3.1 — progressively expanding, like
+//! filling gaps in a tetris game).
+
+use crate::cluster::InstanceId;
+
+/// One chunk: `len` prompt tokens executed on `group`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkPlan {
+    pub len: usize,
+    pub group: Vec<InstanceId>,
+}
+
+impl ChunkPlan {
+    pub fn sp(&self) -> usize {
+        self.group.len()
+    }
+}
+
+/// A full CDSP plan for one request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CdspPlan {
+    pub chunks: Vec<ChunkPlan>,
+    /// Scheduler's TTFT estimate (relative seconds from scheduling time).
+    pub est_ttft: f64,
+}
+
+impl CdspPlan {
+    /// The instance group of the final chunk — also the set of instances
+    /// holding the request's KV cache when prefill completes (senders of the
+    /// prefill→decode stream).
+    pub fn final_group(&self) -> &[InstanceId] {
+        &self.chunks.last().expect("plan has ≥1 chunk").group
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.chunks.iter().map(|c| c.len).sum()
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Maximum SP size used by any chunk.
+    pub fn max_sp(&self) -> usize {
+        self.chunks.iter().map(ChunkPlan::sp).max().unwrap_or(0)
+    }
+
+    /// Validate the paper's plan invariants against a prompt length:
+    /// 1. at least one chunk, every chunk non-empty;
+    /// 2. chunk lengths sum to the prompt length;
+    /// 3. SP sizes strictly increase across chunks;
+    /// 4. every chunk's group contains all instances of its predecessor;
+    /// 5. no duplicate instances within a group.
+    pub fn validate(&self, prompt_len: usize) -> Result<(), String> {
+        if self.chunks.is_empty() {
+            return Err("plan has no chunks".into());
+        }
+        if self.total_tokens() != prompt_len {
+            return Err(format!(
+                "chunk lengths sum to {} ≠ prompt {prompt_len}",
+                self.total_tokens()
+            ));
+        }
+        for (i, c) in self.chunks.iter().enumerate() {
+            if c.len == 0 {
+                return Err(format!("chunk {i} is empty"));
+            }
+            if c.group.is_empty() {
+                return Err(format!("chunk {i} has no instances"));
+            }
+            let mut sorted = c.group.clone();
+            sorted.sort();
+            sorted.dedup();
+            if sorted.len() != c.group.len() {
+                return Err(format!("chunk {i} has duplicate instances"));
+            }
+        }
+        for w in self.chunks.windows(2) {
+            if w[1].sp() <= w[0].sp() {
+                return Err(format!(
+                    "SP must strictly increase across chunks ({} -> {})",
+                    w[0].sp(),
+                    w[1].sp()
+                ));
+            }
+            for inst in &w[0].group {
+                if !w[1].group.contains(inst) {
+                    return Err(format!(
+                        "group nesting violated: instance {inst} dropped"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(len: usize, group: &[usize]) -> ChunkPlan {
+        ChunkPlan { len, group: group.to_vec() }
+    }
+
+    #[test]
+    fn valid_two_chunk_plan() {
+        let p = CdspPlan {
+            chunks: vec![chunk(1000, &[0, 1]), chunk(3000, &[0, 1, 2, 3])],
+            est_ttft: 1.0,
+        };
+        assert!(p.validate(4000).is_ok());
+        assert_eq!(p.final_group(), &[0, 1, 2, 3]);
+        assert_eq!(p.max_sp(), 4);
+        assert_eq!(p.n_chunks(), 2);
+    }
+
+    #[test]
+    fn rejects_wrong_total() {
+        let p = CdspPlan { chunks: vec![chunk(1000, &[0])], est_ttft: 0.0 };
+        assert!(p.validate(999).is_err());
+    }
+
+    #[test]
+    fn rejects_non_increasing_sp() {
+        let p = CdspPlan {
+            chunks: vec![chunk(10, &[0, 1]), chunk(10, &[0, 1])],
+            est_ttft: 0.0,
+        };
+        assert!(p.validate(20).is_err());
+    }
+
+    #[test]
+    fn rejects_broken_nesting() {
+        let p = CdspPlan {
+            chunks: vec![chunk(10, &[0, 1]), chunk(10, &[2, 3, 4])],
+            est_ttft: 0.0,
+        };
+        let err = p.validate(20).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_empty() {
+        let dup = CdspPlan { chunks: vec![chunk(10, &[0, 0])], est_ttft: 0.0 };
+        assert!(dup.validate(10).is_err());
+        let empty = CdspPlan { chunks: vec![chunk(0, &[0])], est_ttft: 0.0 };
+        assert!(empty.validate(0).is_err());
+        let none = CdspPlan { chunks: vec![], est_ttft: 0.0 };
+        assert!(none.validate(0).is_err());
+    }
+}

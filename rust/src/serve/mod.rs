@@ -1,0 +1,583 @@
+//! The live mini serving stack: the full Tetris request path running real
+//! compute through PJRT.
+//!
+//! OS threads play the role of prefill instances. A request flows exactly
+//! like in the paper's Fig. 4:
+//!
+//! 1. the **dispatcher** (scheduler thread) builds a CDSP plan from the
+//!    current per-worker queue clocks (same `CdspScheduler` as everywhere),
+//! 2. each chunk is dispatched to its instance group; the group
+//!    **synchronizes on a barrier** (ring attention mandates a simultaneous
+//!    start — this is precisely the idle-slot effect CDSP exploits), the
+//!    group leader executes the chunk through `runtime::Engine`, and the
+//!    request's KV cache grows in the shared store,
+//! 3. the final chunk's logits produce the first token (TTFT is measured
+//!    here, as in the paper), the KV cache is handed to a decode worker,
+//! 4. decode workers run **continuous batching**: new requests join at step
+//!    boundaries, finished ones leave, every step emits a TBT sample.
+//!
+//! Substitution note (DESIGN.md §3): on this CPU substrate a chunk's
+//! compute executes on the group leader while members hold their slot at
+//! the barrier — per-layer ring KV exchange does not speed up CPU threads
+//! sharing one memory bus, so SP speedups live in the calibrated simulator;
+//! everything else (planning, queueing, group reservation, KV movement,
+//! batching) is the real code path.
+
+use crate::cluster::PoolView;
+use crate::config::SchedConfig;
+use crate::latency::prefill::{PrefillModel, Sample, SpCoeffs};
+use crate::metrics::{RequestMetrics, RunMetrics};
+use crate::runtime::{argmax, Engine};
+use crate::sched::CdspScheduler;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A request submitted to the live server.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub output_len: usize,
+}
+
+/// Per-request KV cache in the shared store (prefill-bucket layout), plus
+/// the decode handoff metadata.
+struct KvState {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    hist_len: usize,
+    output_len: usize,
+    arrival: Instant,
+}
+
+enum WorkerJob {
+    /// Hold the instance slot: wait at the start barrier, then at the end
+    /// barrier while the leader computes (ring-synchronous occupation).
+    Member { start: Arc<Barrier>, end: Arc<Barrier> },
+    /// Compute the chunk between the two barriers.
+    Lead {
+        start: Arc<Barrier>,
+        end: Arc<Barrier>,
+        req: u64,
+        tokens: Vec<i32>,
+        is_last: bool,
+    },
+    Stop,
+}
+
+struct DecodeJob {
+    req: u64,
+    first_token: i32,
+    prompt_len: usize,
+    output_len: usize,
+    arrival: Instant,
+    first_token_at: Instant,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// The live server.
+pub struct Server {
+    engine: Arc<Engine>,
+    workers: Vec<Sender<WorkerJob>>,
+    worker_handles: Vec<JoinHandle<()>>,
+    decode_tx: Sender<DecodeJob>,
+    decode_handle: Option<JoinHandle<()>>,
+    results_rx: Receiver<RequestMetrics>,
+    kv: Arc<Mutex<HashMap<u64, KvState>>>,
+    scheduler: CdspScheduler,
+    /// Estimated queue clocks driving the dispatcher's PoolView (seconds
+    /// relative to `epoch`).
+    free_at: Vec<f64>,
+    node_of: Vec<usize>,
+    per_node: usize,
+    epoch: Instant,
+    engine_coeffs: SpCoeffs,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Start `n_prefill` prefill workers and one decode worker.
+    ///
+    /// `sched_model`: the Eq. (1) model the dispatcher plans with (use
+    /// `calibrated_engine_model` for plans matched to this machine, or an
+    /// A100 model to exercise multi-chunk CDSP paths).
+    pub fn start(
+        engine: Arc<Engine>,
+        n_prefill: usize,
+        sched_model: PrefillModel,
+        mut sched_cfg: SchedConfig,
+    ) -> Result<Server> {
+        anyhow::ensure!(n_prefill >= 1);
+        sched_cfg.sp_candidates.retain(|&s| s <= n_prefill);
+        anyhow::ensure!(!sched_cfg.sp_candidates.is_empty());
+        let kv: Arc<Mutex<HashMap<u64, KvState>>> = Arc::new(Mutex::new(HashMap::new()));
+        let (results_tx, results_rx) = channel();
+        let (decode_tx, decode_rx) = channel::<DecodeJob>();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Prefill workers.
+        let mut workers = Vec::new();
+        let mut worker_handles = Vec::new();
+        for wid in 0..n_prefill {
+            let (tx, rx) = channel::<WorkerJob>();
+            let engine = Arc::clone(&engine);
+            let kv = Arc::clone(&kv);
+            let decode_tx = decode_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("tetris-prefill-{wid}"))
+                .spawn(move || prefill_worker(engine, kv, decode_tx, rx))
+                .expect("spawn prefill worker");
+            workers.push(tx);
+            worker_handles.push(handle);
+        }
+
+        // Decode worker (continuous batching).
+        let decode_handle = {
+            let engine = Arc::clone(&engine);
+            std::thread::Builder::new()
+                .name("tetris-decode".into())
+                .spawn(move || decode_worker(engine, decode_rx, results_tx))
+                .expect("spawn decode worker")
+        };
+
+        // Calibrate this machine's per-chunk latency for queue estimation.
+        let engine_coeffs = calibrate_engine(&engine)?;
+
+        let scheduler = CdspScheduler::new(sched_model, sched_cfg);
+        Ok(Server {
+            engine,
+            workers,
+            worker_handles,
+            decode_tx,
+            decode_handle: Some(decode_handle),
+            results_rx,
+            kv,
+            scheduler,
+            free_at: vec![0.0; n_prefill],
+            node_of: (0..n_prefill).collect(), // single-node mini cluster
+            per_node: n_prefill,
+            epoch: Instant::now(),
+            engine_coeffs,
+            stop,
+        })
+    }
+
+    /// Submit one request: plan, dispatch chunks, return the plan's chunk
+    /// count (for observability).
+    pub fn submit(&mut self, req: &ServeRequest) -> Result<usize> {
+        let a = &self.engine.arch;
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            req.prompt.len() <= a.c_bucket,
+            "prompt exceeds cache bucket ({} > {})",
+            req.prompt.len(),
+            a.c_bucket
+        );
+        let now = self.epoch.elapsed().as_secs_f64();
+        let pool = PoolView {
+            delays: self.free_at.iter().map(|f| (f - now).max(0.0)).collect(),
+            node_of: self.node_of.clone(),
+            per_node: self.per_node,
+        };
+        let plan = self
+            .scheduler
+            .schedule(req.prompt.len(), &pool, 0.2)
+            .ok_or_else(|| anyhow::anyhow!("scheduling failed"))?;
+        debug_assert!(plan.validate(req.prompt.len()).is_ok());
+
+        // Register the KV state (+ decode handoff metadata).
+        self.kv.lock().unwrap().insert(
+            req.id,
+            KvState {
+                k: vec![0.0; a.kv_elems()],
+                v: vec![0.0; a.kv_elems()],
+                hist_len: 0,
+                output_len: req.output_len.max(1),
+                arrival: Instant::now(),
+            },
+        );
+
+        // Dispatch chunks in order. Chunks may exceed the engine's l_bucket:
+        // split into bucket-sized pieces on the same group.
+        let n_chunks = plan.chunks.len();
+        let mut offset = 0usize;
+        let mut finish = now;
+        for (ci, chunk) in plan.chunks.iter().enumerate() {
+            let mut remaining = chunk.len;
+            let mut piece_start = offset;
+            while remaining > 0 {
+                let piece = remaining.min(a.l_bucket);
+                let is_last_piece =
+                    ci == n_chunks - 1 && remaining == piece;
+                let start = Arc::new(Barrier::new(chunk.group.len()));
+                let end = Arc::new(Barrier::new(chunk.group.len()));
+                let tokens: Vec<i32> =
+                    req.prompt[piece_start..piece_start + piece].to_vec();
+                for (gi, &w) in chunk.group.iter().enumerate() {
+                    let job = if gi == 0 {
+                        WorkerJob::Lead {
+                            start: Arc::clone(&start),
+                            end: Arc::clone(&end),
+                            req: req.id,
+                            tokens: tokens.clone(),
+                            is_last: is_last_piece,
+                        }
+                    } else {
+                        WorkerJob::Member {
+                            start: Arc::clone(&start),
+                            end: Arc::clone(&end),
+                        }
+                    };
+                    self.workers[w].send(job).expect("worker alive");
+                }
+                // queue-clock bookkeeping (estimates; real time may drift)
+                let est = self
+                    .engine_coeffs
+                    .predict(piece_start as f64, piece as f64)
+                    .max(1e-4);
+                let ready = chunk
+                    .group
+                    .iter()
+                    .map(|&g| self.free_at[g])
+                    .fold(finish.max(now), f64::max);
+                finish = ready + est;
+                for &g in &chunk.group {
+                    self.free_at[g] = finish;
+                }
+                piece_start += piece;
+                remaining -= piece;
+            }
+            offset += chunk.len;
+        }
+        Ok(plan.n_chunks())
+    }
+
+    /// Wait for `n` completions.
+    pub fn collect(&self, n: usize) -> Vec<RequestMetrics> {
+        (0..n).map(|_| self.results_rx.recv().expect("decode worker alive")).collect()
+    }
+
+    /// Shut down all workers and return.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        for w in &self.workers {
+            let _ = w.send(WorkerJob::Stop);
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+        drop(self.decode_tx);
+        if let Some(h) = self.decode_handle.take() {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    /// Drive a whole trace: submit with the given arrival pacing (seconds
+    /// between submissions; 0 = as fast as possible), wait for completion,
+    /// aggregate metrics.
+    pub fn run_trace(&mut self, reqs: &[ServeRequest], pace: f64) -> Result<RunMetrics> {
+        let t0 = Instant::now();
+        for r in reqs {
+            self.submit(r)?;
+            if pace > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(pace));
+            }
+        }
+        let metrics = self.collect(reqs.len());
+        Ok(RunMetrics { requests: metrics, span: t0.elapsed().as_secs_f64() })
+    }
+}
+
+/// Fit a quick Eq. (1)-shaped model of *this machine's* per-chunk latency
+/// (used for the dispatcher's queue clocks).
+fn calibrate_engine(engine: &Engine) -> Result<SpCoeffs> {
+    let a = &engine.arch;
+    let hk = vec![0.0f32; a.kv_elems()];
+    let hv = vec![0.0f32; a.kv_elems()];
+    let tokens = vec![1i32; a.l_bucket];
+    let mut samples = Vec::new();
+    for &(c, l) in &[(0usize, 8usize), (0, 32), (0, 64), (128, 32), (256, 64), (384, 16)] {
+        let t0 = Instant::now();
+        engine.prefill_chunk(&tokens, &hk, &hv, c as i32, l as i32)?;
+        samples.push(Sample { c: c as f64, l: l as f64, secs: t0.elapsed().as_secs_f64() });
+    }
+    let mut m = PrefillModel::new();
+    m.fit_sp(1, &samples)?;
+    let mut co = *m.get(1).unwrap();
+    // guard degenerate fits on noisy machines
+    if !(co.a.is_finite() && co.b.is_finite()) || co.a < 0.0 {
+        co = SpCoeffs { a: 1e-3, b: 1e-5, c: 1e-8, d: 1e-8 };
+    }
+    Ok(co)
+}
+
+fn prefill_worker(
+    engine: Arc<Engine>,
+    kv: Arc<Mutex<HashMap<u64, KvState>>>,
+    decode_tx: Sender<DecodeJob>,
+    rx: Receiver<WorkerJob>,
+) {
+    let a = engine.arch.clone();
+    while let Ok(job) = rx.recv() {
+        match job {
+            WorkerJob::Stop => break,
+            WorkerJob::Member { start, end } => {
+                start.wait();
+                end.wait();
+            }
+            WorkerJob::Lead { start, end, req, tokens, is_last } => {
+                start.wait();
+                // pull the cache
+                let (hist_k, hist_v, hist_len) = {
+                    let store = kv.lock().unwrap();
+                    let st = store.get(&req).expect("kv registered");
+                    (st.k.clone(), st.v.clone(), st.hist_len)
+                };
+                let mut padded = vec![0i32; a.l_bucket];
+                padded[..tokens.len()].copy_from_slice(&tokens);
+                let out = engine
+                    .prefill_chunk(
+                        &padded,
+                        &hist_k,
+                        &hist_v,
+                        hist_len as i32,
+                        tokens.len() as i32,
+                    )
+                    .expect("prefill execution");
+                // scatter new KV into the cache
+                {
+                    let mut store = kv.lock().unwrap();
+                    let st = store.get_mut(&req).expect("kv registered");
+                    scatter_new_kv(&a, &mut st.k, &out.new_k, hist_len, tokens.len());
+                    scatter_new_kv(&a, &mut st.v, &out.new_v, hist_len, tokens.len());
+                    st.hist_len = hist_len + tokens.len();
+                }
+                if is_last {
+                    let first_token = argmax(&out.logits) as i32;
+                    let st = kv.lock().unwrap().remove(&req).expect("kv present");
+                    // repack prefill-bucket cache into the decode bucket
+                    let (dk, dv) = repack_for_decode(&a, &st);
+                    decode_tx
+                        .send(DecodeJob {
+                            req,
+                            first_token,
+                            prompt_len: st.hist_len,
+                            output_len: st.output_len,
+                            arrival: st.arrival,
+                            first_token_at: Instant::now(),
+                            k: dk,
+                            v: dv,
+                        })
+                        .expect("decode worker alive");
+                }
+                end.wait();
+            }
+        }
+    }
+}
+
+/// Copy a prefill call's new KV ([NL, L_BUCKET, H, HD]) into the request
+/// cache ([NL, C_BUCKET, H, HD]) at token offset `at`.
+fn scatter_new_kv(
+    a: &crate::runtime::TinyArch,
+    cache: &mut [f32],
+    new: &[f32],
+    at: usize,
+    len: usize,
+) {
+    let tok = a.tok_elems();
+    for layer in 0..a.n_layers {
+        let src_base = layer * a.l_bucket * tok;
+        let dst_base = layer * a.c_bucket * tok + at * tok;
+        cache[dst_base..dst_base + len * tok]
+            .copy_from_slice(&new[src_base..src_base + len * tok]);
+    }
+}
+
+/// Re-layout a prefill-bucket cache into the decode bucket.
+fn repack_for_decode(a: &crate::runtime::TinyArch, st: &KvState) -> (Vec<f32>, Vec<f32>) {
+    let tok = a.tok_elems();
+    let mut dk = vec![0.0f32; a.decode_kv_elems()];
+    let mut dv = vec![0.0f32; a.decode_kv_elems()];
+    for layer in 0..a.n_layers {
+        let src = layer * a.c_bucket * tok;
+        let dst = layer * a.decode_c_bucket * tok;
+        let n = st.hist_len * tok;
+        dk[dst..dst + n].copy_from_slice(&st.k[src..src + n]);
+        dv[dst..dst + n].copy_from_slice(&st.v[src..src + n]);
+    }
+    (dk, dv)
+}
+
+struct ActiveDecode {
+    job: DecodeJob,
+    tokens_out: usize,
+    last_token: i32,
+    hist_len: usize,
+    last_at: Instant,
+    tbt: Vec<f64>,
+}
+
+fn decode_worker(
+    engine: Arc<Engine>,
+    rx: Receiver<DecodeJob>,
+    results: Sender<RequestMetrics>,
+) {
+    let a = engine.arch.clone();
+    let mut active: Vec<ActiveDecode> = Vec::new();
+    loop {
+        // Continuous batching: admit new requests at step boundaries.
+        if active.is_empty() {
+            match rx.recv() {
+                Ok(job) => {
+                    let hist = job.prompt_len;
+                    let tok = job.first_token;
+                    let at = job.first_token_at;
+                    active.push(ActiveDecode {
+                        job,
+                        tokens_out: 1, // the first token came from prefill
+                        last_token: tok,
+                        hist_len: hist,
+                        last_at: at,
+                        tbt: Vec::new(),
+                    });
+                }
+                Err(_) => return, // server shut down
+            }
+        }
+        while let Ok(job) = rx.try_recv() {
+            let hist = job.prompt_len;
+            let tok = job.first_token;
+            let at = job.first_token_at;
+            active.push(ActiveDecode {
+                job,
+                tokens_out: 1,
+                last_token: tok,
+                hist_len: hist,
+                last_at: at,
+                tbt: Vec::new(),
+            });
+        }
+        // One iteration over the batch.
+        let mut still = Vec::with_capacity(active.len());
+        for mut st in active {
+            if st.tokens_out >= st.job.output_len
+                || st.hist_len + 1 >= a.decode_c_bucket
+            {
+                finishing(&results, st);
+                continue;
+            }
+            let out = engine
+                .decode_step(st.last_token, &st.job.k, &st.job.v, st.hist_len as i32)
+                .expect("decode execution");
+            // append the token's KV
+            let tok = a.tok_elems();
+            for layer in 0..a.n_layers {
+                let dst = layer * a.decode_c_bucket * tok + st.hist_len * tok;
+                let src = layer * tok;
+                st.job.k[dst..dst + tok].copy_from_slice(&out.new_k[src..src + tok]);
+                st.job.v[dst..dst + tok].copy_from_slice(&out.new_v[src..src + tok]);
+            }
+            st.hist_len += 1;
+            st.last_token = argmax(&out.logits) as i32;
+            st.tokens_out += 1;
+            let now = Instant::now();
+            st.tbt.push(now.duration_since(st.last_at).as_secs_f64());
+            st.last_at = now;
+            if st.tokens_out >= st.job.output_len {
+                finishing(&results, st);
+            } else {
+                still.push(st);
+            }
+        }
+        active = still;
+    }
+}
+
+fn finishing(results: &Sender<RequestMetrics>, st: ActiveDecode) {
+    let arrival = st.job.arrival;
+    let m = RequestMetrics {
+        id: st.job.req,
+        arrival: 0.0,
+        first_token: st.job.first_token_at.duration_since(arrival).as_secs_f64(),
+        finish: st.last_at.duration_since(arrival).as_secs_f64(),
+        prompt_len: st.job.prompt_len,
+        output_len: st.tokens_out,
+        tbt: st.tbt,
+    };
+    let _ = results.send(m);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_kv_layout() {
+        let a = crate::runtime::TinyArch {
+            n_layers: 2,
+            d_model: 8,
+            n_heads: 2,
+            head_dim: 4,
+            vocab: 16,
+            l_bucket: 4,
+            c_bucket: 8,
+            decode_c_bucket: 12,
+        };
+        let tok = a.tok_elems();
+        let mut cache = vec![0.0; a.kv_elems()];
+        let new: Vec<f32> = (0..a.new_kv_elems()).map(|i| i as f32).collect();
+        scatter_new_kv(&a, &mut cache, &new, 2, 3);
+        // layer 0, cache token 2 must hold new token 0 of layer 0
+        assert_eq!(cache[2 * tok], new[0]);
+        assert_eq!(cache[(2 + 2) * tok + 3], new[2 * tok + 3]);
+        // layer 1 offset
+        let l1_cache = a.c_bucket * tok;
+        let l1_new = a.l_bucket * tok;
+        assert_eq!(cache[l1_cache + 2 * tok], new[l1_new]);
+        // untouched region stays zero
+        assert_eq!(cache[0], 0.0);
+        assert_eq!(cache[(2 + 3) * tok], 0.0);
+    }
+
+    #[test]
+    fn repack_preserves_tokens() {
+        let a = crate::runtime::TinyArch {
+            n_layers: 2,
+            d_model: 8,
+            n_heads: 2,
+            head_dim: 4,
+            vocab: 16,
+            l_bucket: 4,
+            c_bucket: 6,
+            decode_c_bucket: 10,
+        };
+        let tok = a.tok_elems();
+        let st = KvState {
+            k: (0..a.kv_elems()).map(|i| i as f32).collect(),
+            v: (0..a.kv_elems()).map(|i| (i * 2) as f32).collect(),
+            hist_len: 5,
+            output_len: 4,
+            arrival: Instant::now(),
+        };
+        let (dk, dv) = repack_for_decode(&a, &st);
+        assert_eq!(dk.len(), a.decode_kv_elems());
+        // layer 1 token 4 element 3
+        let src = a.c_bucket * tok + 4 * tok + 3;
+        let dst = a.decode_c_bucket * tok + 4 * tok + 3;
+        assert_eq!(dk[dst], st.k[src]);
+        assert_eq!(dv[dst], st.v[src]);
+        // padding zero
+        assert_eq!(dk[5 * tok], 0.0);
+    }
+
+    // Full server tests live in rust/tests/integration_serve.rs (they need
+    // artifacts).
+}

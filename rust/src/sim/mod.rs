@@ -1,0 +1,570 @@
+//! Discrete-event cluster simulator.
+//!
+//! Reproduces the paper's evaluation environment: a disaggregated A100
+//! cluster serving Poisson arrivals from the production-shaped length
+//! distributions, under any of the five scheduling policies. All latencies
+//! come from the calibrated models in `latency` (DESIGN.md §3 explains the
+//! substitution); all scheduling decisions run the *real* scheduler code —
+//! the same `CdspScheduler` the live engine uses.
+//!
+//! Event loop:
+//! * `Arrival` — route to a decode instance (virtual usage), run the prefill
+//!   scheduler, commit the plan onto the prefill pool, schedule chunk
+//!   completions (with cache-balancing overhead at chunk boundaries).
+//! * `PrefillDone` — record TTFT (paper: TTFT = arrival → prefill finish),
+//!   start the prefill→decode transfer through the handshake-managed
+//!   backend pool.
+//! * `ShardDone` — one sender's shard landed; when the receive manager
+//!   reports the request complete, the request joins its decode batch.
+//! * `DecodeStep` — one iteration of continuous batching on one decode
+//!   instance; every active request emits a token (TBT sample), finished
+//!   requests free their blocks and may unblock queued arrivals.
+
+pub mod profiler;
+
+use crate::baselines::PrefillScheduler;
+use crate::cluster::PoolView;
+use crate::config::{ClusterConfig, Policy};
+use crate::latency::{DecodeModel, PrefillModel, TransferModel};
+use crate::metrics::{RequestMetrics, RunMetrics};
+use crate::modelcfg::ModelArch;
+use crate::sched::{DecodeRouter, ImprovementController};
+use crate::transfer::{Handshake, HandshakeReply, ReceiveManager};
+use crate::workload::Request;
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+/// Number of transfer backends per decode instance (paper stresses halving
+/// this; see `fig14` bench).
+pub const DEFAULT_BACKENDS: usize = 4;
+
+#[derive(Clone, Debug)]
+enum Event {
+    Arrival(usize),
+    PrefillDone { req: usize },
+    ShardDone { req: usize, backend: usize },
+    DecodeStep { inst: usize },
+}
+
+struct Timed {
+    at: f64,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Timed {
+    fn eq(&self, o: &Self) -> bool {
+        self.at == o.at && self.seq == o.seq
+    }
+}
+impl Eq for Timed {}
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Timed {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // min-heap by time (ties broken by insertion order for determinism)
+        o.at.partial_cmp(&self.at)
+            .unwrap()
+            .then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Clone, Debug)]
+struct ReqState {
+    arrival: f64,
+    prompt_len: usize,
+    output_len: usize,
+    decode_inst: Option<usize>,
+    n_senders: usize,
+    first_token: Option<f64>,
+    tokens_out: usize,
+    tbt: Vec<f64>,
+    last_token_at: f64,
+    seq_id: Option<u64>,
+    finished: bool,
+}
+
+/// Simulator configuration beyond the cluster/policy config.
+#[derive(Clone, Debug)]
+pub struct SimParams {
+    pub backends_per_decode: usize,
+    /// Decode-side KV capacity in tokens per instance.
+    pub decode_capacity_tokens: usize,
+    pub block_tokens: usize,
+}
+
+impl SimParams {
+    /// Capacity derived from A100-80GB memory minus weights.
+    pub fn for_arch(arch: &ModelArch, cluster: &ClusterConfig) -> Self {
+        let gpu_bytes = 80.0e9 * 0.9;
+        let weight_bytes = arch.param_count() as f64 * arch.bytes_per_el as f64;
+        let inst_bytes = cluster.decode_tp as f64 * gpu_bytes - weight_bytes;
+        let cap = (inst_bytes / arch.kv_bytes_per_token() as f64).max(0.0) as usize;
+        SimParams {
+            backends_per_decode: DEFAULT_BACKENDS,
+            decode_capacity_tokens: cap,
+            block_tokens: 16,
+        }
+    }
+}
+
+/// The simulator.
+pub struct Simulator<'a> {
+    pub arch: ModelArch,
+    pub cluster: ClusterConfig,
+    pub params: SimParams,
+    pub scheduler: &'a dyn PrefillScheduler,
+    pub controller: ImprovementController,
+    pub decode_model: DecodeModel,
+    pub transfer_model: TransferModel,
+    /// Prefill model used for cache-balance overhead estimation (the
+    /// scheduler has its own copy inside).
+    pub prefill_model: PrefillModel,
+    /// LoongServe (non-disaggregated) decode runs as SP over TP=prefill_tp
+    /// instances instead of large TP — the Fig. 8 TBT gap.
+    pub esp_decode: bool,
+}
+
+impl<'a> Simulator<'a> {
+    /// Run the trace to completion and collect metrics.
+    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
+        let n_prefill = self.cluster.n_prefill_instances();
+        let per_node = self.cluster.prefill_instances_per_node();
+        let n_nodes = n_prefill.div_ceil(per_node);
+        let mut free_at = vec![0.0f64; n_prefill];
+        let node_of: Vec<usize> = (0..n_prefill).map(|i| i / per_node).collect();
+
+        let n_decode = self.cluster.n_decode_instances().max(1);
+        let blocks = self.params.decode_capacity_tokens / self.params.block_tokens;
+        let mut router = DecodeRouter::new(n_decode, blocks, self.params.block_tokens);
+        let mut receivers: Vec<ReceiveManager> = (0..n_decode)
+            .map(|_| ReceiveManager::new(self.params.backends_per_decode, 0))
+            .collect();
+        // Which receive-manager backend maps to which sim event is implicit:
+        // ShardDone events carry (req, backend).
+
+        let mut reqs: Vec<ReqState> = trace
+            .iter()
+            .map(|r| ReqState {
+                arrival: r.arrival,
+                prompt_len: r.prompt_len,
+                output_len: r.output_len.max(1),
+                decode_inst: None,
+                n_senders: 0,
+                first_token: None,
+                tokens_out: 0,
+                tbt: Vec::new(),
+                last_token_at: 0.0,
+                seq_id: None,
+                finished: false,
+            })
+            .collect();
+
+        let mut heap = BinaryHeap::new();
+        let mut seq = 0u64;
+        let push = |heap: &mut BinaryHeap<Timed>, at: f64, ev: Event, seq: &mut u64| {
+            *seq += 1;
+            heap.push(Timed { at, seq: *seq, ev });
+        };
+        for (i, r) in trace.iter().enumerate() {
+            push(&mut heap, r.arrival, Event::Arrival(i), &mut seq);
+        }
+
+        // decode batches: per instance, the set of active request ids and
+        // whether a step event is in flight.
+        let mut batches: Vec<Vec<usize>> = vec![Vec::new(); n_decode];
+        let mut step_scheduled = vec![false; n_decode];
+        // requests waiting for decode capacity (arrival order)
+        let mut waiting: VecDeque<usize> = VecDeque::new();
+        // shard queue: per request, shards not yet granted. Granted shards
+        // become ShardDone events.
+        let mut shard_bytes: BTreeMap<usize, f64> = BTreeMap::new();
+
+        let mut done = 0usize;
+        let total = trace.len();
+        let mut last_t = 0.0f64;
+
+        while let Some(Timed { at: now, ev, .. }) = heap.pop() {
+            last_t = last_t.max(now);
+            match ev {
+                Event::Arrival(i) => {
+                    self.controller.on_arrival(now);
+                    // decode routing first (virtual usage there from now on)
+                    let need = reqs[i].prompt_len + reqs[i].output_len;
+                    match router.route(need) {
+                        Some(d) => {
+                            reqs[i].decode_inst = Some(d);
+                            self.start_prefill(
+                                i, now, &mut reqs, &mut free_at, &node_of, n_nodes,
+                                per_node, &mut heap, &mut seq,
+                            );
+                        }
+                        None => waiting.push_back(i),
+                    }
+                }
+                Event::PrefillDone { req } => {
+                    reqs[req].first_token = Some(now);
+                    reqs[req].last_token_at = now;
+                    // stream KV to the decode instance through the handshake
+                    let d = reqs[req].decode_inst.expect("routed");
+                    let senders = reqs[req].n_senders.max(1);
+                    let (shard_secs, per_sender_bytes) = self.transfer_model.pd_stream_secs(
+                        &self.arch,
+                        reqs[req].prompt_len as u64,
+                        senders,
+                        true,
+                    );
+                    let _ = shard_secs;
+                    shard_bytes.insert(req, per_sender_bytes);
+                    receivers[d].expect(req as u64, senders, now);
+                    for s in 0..senders {
+                        let hs = Handshake {
+                            req: req as u64,
+                            shard: s,
+                            bytes: per_sender_bytes,
+                            timestamp: now,
+                        };
+                        if let HandshakeReply::Granted { backend } = receivers[d].handshake(hs)
+                        {
+                            let dur = self
+                                .transfer_model
+                                .link_secs(per_sender_bytes, true);
+                            push(
+                                &mut heap,
+                                now + dur,
+                                Event::ShardDone { req, backend },
+                                &mut seq,
+                            );
+                        }
+                        // Wait replies stay queued inside the receive manager.
+                    }
+                }
+                Event::ShardDone { req, backend } => {
+                    let d = reqs[req].decode_inst.unwrap();
+                    let (grants, complete) = receivers[d].transfer_done(req as u64, backend);
+                    for (hs, b) in grants {
+                        let dur = self.transfer_model.link_secs(hs.bytes, true);
+                        push(
+                            &mut heap,
+                            now + dur,
+                            Event::ShardDone { req: hs.req as usize, backend: b },
+                            &mut seq,
+                        );
+                    }
+                    if complete {
+                        let need = reqs[req].prompt_len + reqs[req].output_len;
+                        let sid = router
+                            .transfer_complete(d, need)
+                            .expect("virtual reservation guaranteed space");
+                        reqs[req].seq_id = Some(sid);
+                        reqs[req].last_token_at = now;
+                        batches[d].push(req);
+                        if !step_scheduled[d] {
+                            step_scheduled[d] = true;
+                            push(&mut heap, now, Event::DecodeStep { inst: d }, &mut seq);
+                        }
+                    }
+                }
+                Event::DecodeStep { inst } => {
+                    if batches[inst].is_empty() {
+                        step_scheduled[inst] = false;
+                        continue;
+                    }
+                    let batch = batches[inst].len() as u64;
+                    let mean_ctx = (batches[inst]
+                        .iter()
+                        .map(|&r| reqs[r].prompt_len + reqs[r].tokens_out)
+                        .sum::<usize>()
+                        / batches[inst].len()) as u64;
+                    let (sp, tp) = if self.esp_decode {
+                        // ESP decode: ring over small-TP instances.
+                        (
+                            (self.cluster.decode_tp / self.cluster.prefill_tp).max(1),
+                            self.cluster.prefill_tp,
+                        )
+                    } else {
+                        (1, self.cluster.decode_tp)
+                    };
+                    let dt = self.decode_model.step_secs(mean_ctx, batch, sp, tp);
+                    let t_end = now + dt;
+                    let mut still = Vec::with_capacity(batches[inst].len());
+                    for &r in &batches[inst] {
+                        reqs[r].tokens_out += 1;
+                        let gap = t_end - reqs[r].last_token_at;
+                        reqs[r].tbt.push(gap);
+                        reqs[r].last_token_at = t_end;
+                        if reqs[r].tokens_out >= reqs[r].output_len {
+                            reqs[r].finished = true;
+                            done += 1;
+                            router.finish(inst, reqs[r].seq_id.unwrap());
+                        } else {
+                            still.push(r);
+                        }
+                    }
+                    batches[inst] = still;
+                    // admit waiting requests now that capacity may exist
+                    let mut admitted = Vec::new();
+                    for &w in waiting.iter() {
+                        let need = reqs[w].prompt_len + reqs[w].output_len;
+                        if let Some(d) = router.route(need) {
+                            reqs[w].decode_inst = Some(d);
+                            admitted.push(w);
+                        }
+                    }
+                    waiting.retain(|w| !admitted.contains(w));
+                    for w in admitted {
+                        self.start_prefill(
+                            w, t_end, &mut reqs, &mut free_at, &node_of, n_nodes,
+                            per_node, &mut heap, &mut seq,
+                        );
+                    }
+                    if batches[inst].is_empty() {
+                        step_scheduled[inst] = false;
+                    } else {
+                        push(&mut heap, t_end, Event::DecodeStep { inst }, &mut seq);
+                    }
+                }
+            }
+            if done == total {
+                break;
+            }
+        }
+
+        let requests = reqs
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.first_token.is_some())
+            .map(|(i, r)| RequestMetrics {
+                id: i as u64,
+                arrival: r.arrival,
+                first_token: r.first_token.unwrap(),
+                finish: r.last_token_at,
+                prompt_len: r.prompt_len,
+                output_len: r.tokens_out,
+                tbt: r.tbt.clone(),
+            })
+            .collect();
+        RunMetrics { requests, span: last_t.max(1e-9) }
+    }
+
+    /// Schedule one request's prefill at time `now`, committing chunk
+    /// finishes (incl. cache-balancing exposure) into `free_at` and pushing
+    /// the PrefillDone event.
+    #[allow(clippy::too_many_arguments)]
+    fn start_prefill(
+        &mut self,
+        i: usize,
+        now: f64,
+        reqs: &mut [ReqState],
+        free_at: &mut [f64],
+        node_of: &[usize],
+        _n_nodes: usize,
+        per_node: usize,
+        heap: &mut BinaryHeap<Timed>,
+        seq: &mut u64,
+    ) {
+        let pool = PoolView {
+            delays: free_at.iter().map(|f| (f - now).max(0.0)).collect(),
+            node_of: node_of.to_vec(),
+            per_node,
+        };
+        let rate = self.controller.rate(now);
+        let plan = self
+            .scheduler
+            .schedule(reqs[i].prompt_len, &pool, rate)
+            .expect("non-empty pool");
+        debug_assert!(plan.validate(reqs[i].prompt_len).is_ok());
+
+        // Walk chunks to absolute times.
+        let mut hist = 0usize;
+        let mut prev_sp = 0usize;
+        let mut finish = now;
+        for chunk in &plan.chunks {
+            let ready = chunk
+                .group
+                .iter()
+                .map(|&g| free_at[g])
+                .fold(now, f64::max)
+                .max(finish);
+            let sp = chunk.group.len();
+            let compute = self
+                .prefill_model
+                .predict(sp, hist as f64, chunk.len as f64);
+            let balance = if prev_sp > 0 && sp > prev_sp {
+                let cross = {
+                    let mut nodes: Vec<usize> =
+                        chunk.group.iter().map(|&g| node_of[g]).collect();
+                    nodes.sort();
+                    nodes.dedup();
+                    nodes.len() > 1
+                };
+                self.transfer_model.balance_exposed_secs(
+                    &self.arch, hist as u64, prev_sp, sp, compute, cross,
+                )
+            } else {
+                0.0
+            };
+            finish = ready + compute + balance;
+            for &g in &chunk.group {
+                free_at[g] = free_at[g].max(finish);
+            }
+            hist += chunk.len;
+            prev_sp = sp;
+        }
+        reqs[i].n_senders = plan.final_group().len();
+        *seq += 1;
+        heap.push(Timed { at: finish, seq: *seq, ev: Event::PrefillDone { req: i } });
+    }
+}
+
+/// Convenience: build and run a full simulation for a policy.
+pub struct SimBuilder {
+    pub arch: ModelArch,
+    pub cluster: ClusterConfig,
+    pub policy: Policy,
+    pub sched_cfg: crate::config::SchedConfig,
+    pub controller: ImprovementController,
+}
+
+impl SimBuilder {
+    pub fn paper_8b(policy: Policy) -> Self {
+        let cfg = crate::config::Config::paper_8b();
+        SimBuilder {
+            arch: ModelArch::llama3_8b(),
+            cluster: cfg.cluster,
+            policy,
+            sched_cfg: cfg.sched,
+            controller: ImprovementController::fixed(0.3),
+        }
+    }
+
+    pub fn paper_70b(policy: Policy) -> Self {
+        let cfg = crate::config::Config::paper_70b();
+        SimBuilder {
+            arch: ModelArch::llama3_70b(),
+            cluster: cfg.cluster,
+            policy,
+            sched_cfg: cfg.sched,
+            controller: ImprovementController::fixed(0.3),
+        }
+    }
+
+    pub fn run(&self, trace: &[Request]) -> RunMetrics {
+        let prefill_model = crate::latency::a100_model_for(
+            &self.arch,
+            self.cluster.prefill_tp,
+            &self.sched_cfg.sp_candidates,
+        );
+        let scheduler = crate::baselines::make_scheduler(
+            self.policy,
+            prefill_model.clone(),
+            self.sched_cfg.clone(),
+        );
+        let params = SimParams::for_arch(&self.arch, &self.cluster);
+        let mut sim = Simulator {
+            arch: self.arch.clone(),
+            cluster: self.cluster.clone(),
+            params,
+            scheduler: scheduler.as_ref(),
+            controller: self.controller.clone(),
+            decode_model: DecodeModel::a100(&self.arch),
+            transfer_model: TransferModel::from_cluster(&self.cluster),
+            prefill_model,
+            esp_decode: matches!(self.policy, Policy::LoongServe),
+        };
+        sim.run(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::workload::{TraceKind, WorkloadGen};
+
+    fn small_trace(n: usize, rate: f64, seed: u64) -> Vec<Request> {
+        let gen = WorkloadGen::paper_trace(TraceKind::Medium);
+        let mut rng = Pcg64::new(seed);
+        gen.generate(n, rate, &mut rng)
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let trace = small_trace(40, 0.5, 1);
+        let m = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+        assert_eq!(m.requests.len(), 40);
+        for r in &m.requests {
+            assert!(r.ttft() > 0.0, "ttft must be positive");
+            assert_eq!(r.tbt.len(), r.output_len);
+            assert!(r.finish >= r.first_token);
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let trace = small_trace(25, 1.0, 7);
+        let a = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+        let b = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+        assert_eq!(a.ttft_summary().p99, b.ttft_summary().p99);
+        assert_eq!(a.tbt_summary().p50, b.tbt_summary().p50);
+    }
+
+    #[test]
+    fn higher_load_higher_ttft() {
+        let light = SimBuilder::paper_8b(Policy::Cdsp).run(&small_trace(40, 0.05, 3));
+        let heavy = SimBuilder::paper_8b(Policy::Cdsp).run(&small_trace(40, 3.0, 3));
+        assert!(
+            heavy.ttft_summary().p99 > light.ttft_summary().p99,
+            "heavy {} !> light {}",
+            heavy.ttft_summary().p99,
+            light.ttft_summary().p99
+        );
+    }
+
+    #[test]
+    fn cdsp_beats_fixed_sp16_under_load() {
+        // Fig. 8's headline shape at a moderate-high rate.
+        let trace = small_trace(60, 1.5, 11);
+        let cdsp = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+        let fixed16 = SimBuilder::paper_8b(Policy::FixedSp(16)).run(&trace);
+        assert!(
+            cdsp.ttft_summary().p50 < fixed16.ttft_summary().p50,
+            "cdsp {} !< fixed16 {}",
+            cdsp.ttft_summary().p50,
+            fixed16.ttft_summary().p50
+        );
+    }
+
+    #[test]
+    fn esp_decode_slower_tbt() {
+        // LoongServe's small-TP decode must show higher TBT than the
+        // disaggregated large-TP decode (Fig. 8 right column).
+        let trace = small_trace(40, 0.4, 5);
+        let ls = SimBuilder::paper_8b(Policy::LoongServe).run(&trace);
+        let disagg = SimBuilder::paper_8b(Policy::LoongServeDisagg).run(&trace);
+        assert!(
+            ls.tbt_summary().p50 > disagg.tbt_summary().p50 * 1.3,
+            "esp tbt {} vs disagg {}",
+            ls.tbt_summary().p50,
+            disagg.tbt_summary().p50
+        );
+    }
+
+    #[test]
+    fn seventy_b_runs() {
+        let trace = small_trace(20, 0.3, 9);
+        let m = SimBuilder::paper_70b(Policy::Cdsp).run(&trace);
+        assert_eq!(m.requests.len(), 20);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let trace = small_trace(30, 1.0, 13);
+        let m = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+        assert!(m.token_throughput() > 0.0);
+        assert!(m.request_throughput() > 0.0);
+    }
+}

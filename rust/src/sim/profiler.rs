@@ -1,0 +1,132 @@
+//! Simulator-based improvement-rate profiler (paper Sec. 5.1 + Sec. 6).
+//!
+//! "For each request rate, the simulator generates timestamps using a
+//! Poisson process and samples requests from the given length distribution.
+//! It then simulates prefill execution as discrete events using latency
+//! models. After comparing TTFTs under different improvement rates, the
+//! simulator identifies the optimal improvement rates for the CDSP
+//! scheduler."
+//!
+//! This runs offline (`tetris profile-rate`); online the
+//! `ImprovementController` queries the resulting `RateProfile`.
+
+use crate::config::Policy;
+use crate::sched::{ImprovementController, RateProfile};
+use crate::sim::SimBuilder;
+use crate::util::rng::Pcg64;
+use crate::workload::{TraceKind, WorkloadGen};
+
+/// Profiling parameters.
+#[derive(Clone, Debug)]
+pub struct ProfileParams {
+    /// Arrival rates to profile (req/s). Paper: increments of 0.5 req/s.
+    pub rates: Vec<f64>,
+    /// Candidate improvement rates. Paper: 0.05–0.75.
+    pub improvement_rates: Vec<f64>,
+    /// Requests simulated per (rate, improvement) cell.
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl Default for ProfileParams {
+    fn default() -> Self {
+        ProfileParams {
+            rates: (1..=8).map(|i| i as f64 * 0.5).collect(),
+            improvement_rates: vec![0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.75],
+            n_requests: 150,
+            seed: 0xace,
+        }
+    }
+}
+
+/// A full profiling sweep: for every arrival rate, the mean TTFT per
+/// improvement rate and the argmin.
+#[derive(Clone, Debug)]
+pub struct ProfileSweep {
+    /// (arrival rate, Vec<(improvement rate, mean TTFT)>)
+    pub cells: Vec<(f64, Vec<(f64, f64)>)>,
+}
+
+impl ProfileSweep {
+    pub fn best_profile(&self) -> RateProfile {
+        RateProfile::new(
+            self.cells
+                .iter()
+                .map(|(rate, row)| {
+                    let best = row
+                        .iter()
+                        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                        .expect("non-empty row");
+                    (*rate, best.0)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Run the offline profiling sweep for a trace family on the 8B or 70B
+/// cluster. The same sampled trace is reused across improvement rates per
+/// arrival-rate cell (paired comparison, lower variance).
+pub fn profile(
+    builder_for: impl Fn(Policy) -> SimBuilder,
+    kind: TraceKind,
+    params: &ProfileParams,
+) -> ProfileSweep {
+    let gen = WorkloadGen::paper_trace(kind);
+    let mut cells = Vec::new();
+    for &rate in &params.rates {
+        let mut rng = Pcg64::new(params.seed ^ (rate * 1000.0) as u64);
+        let trace = gen.generate(params.n_requests, rate, &mut rng);
+        let mut row = Vec::new();
+        for &ir in &params.improvement_rates {
+            let mut b = builder_for(Policy::Cdsp);
+            b.controller = ImprovementController::fixed(ir);
+            let m = b.run(&trace);
+            row.push((ir, m.ttft_summary().mean));
+        }
+        cells.push((rate, row));
+    }
+    ProfileSweep { cells }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_profile() {
+        let params = ProfileParams {
+            rates: vec![0.3, 2.0],
+            improvement_rates: vec![0.1, 0.5],
+            n_requests: 30,
+            seed: 5,
+        };
+        let sweep = profile(SimBuilder::paper_8b, TraceKind::Medium, &params);
+        assert_eq!(sweep.cells.len(), 2);
+        let profile = sweep.best_profile();
+        assert_eq!(profile.entries.len(), 2);
+        for (_, ir) in &profile.entries {
+            assert!([0.1, 0.5].contains(ir));
+        }
+    }
+
+    #[test]
+    fn light_load_prefers_smaller_rate() {
+        // Figs. 11–12: under light load, smaller improvement rates (more
+        // aggressive SP expansion) minimize TTFT.
+        let params = ProfileParams {
+            rates: vec![0.1],
+            improvement_rates: vec![0.05, 0.75],
+            n_requests: 60,
+            seed: 21,
+        };
+        let sweep = profile(SimBuilder::paper_8b, TraceKind::Long, &params);
+        let row = &sweep.cells[0].1;
+        let t_small = row.iter().find(|(ir, _)| *ir == 0.05).unwrap().1;
+        let t_large = row.iter().find(|(ir, _)| *ir == 0.75).unwrap().1;
+        assert!(
+            t_small <= t_large * 1.02,
+            "light load: rate 0.05 ({t_small}) should beat 0.75 ({t_large})"
+        );
+    }
+}

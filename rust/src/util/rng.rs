@@ -1,0 +1,299 @@
+//! Deterministic pseudo-random numbers and the distributions the workload
+//! generator and simulator need (uniform, exponential for Poisson arrival
+//! gaps, truncated lognormal for request-length distributions).
+//!
+//! PCG64 (O'Neill 2014, `pcg_xsl_rr_128_64` variant) — small, fast, and
+//! statistically solid for simulation purposes. Seeded runs are fully
+//! reproducible, which every experiment harness in `benches/` relies on.
+
+/// PCG64 generator (128-bit LCG state, XSL-RR output).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Create a generator with an explicit stream selector.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform usize in [0, n). Unbiased via rejection.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Uniform u64 in [lo, hi] inclusive.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as usize) as u64
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast here).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            return (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+        }
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda). Inter-arrival gaps of a
+    /// Poisson process — how the paper's stress tests generate timestamps.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        loop {
+            let u = self.f64();
+            if u > 0.0 {
+                return -u.ln() / lambda;
+            }
+        }
+    }
+
+    /// Lognormal with parameters (mu, sigma) of the underlying normal.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+/// A truncated-lognormal sampler calibrated to a (min, max, mean) triple.
+///
+/// The paper reports its production traces only through (min, max, mean)
+/// sequence lengths; `from_min_max_mean` inverts those moments numerically to
+/// a (mu, sigma) pair whose truncated distribution reproduces the target mean
+/// inside [min, max].
+#[derive(Clone, Debug)]
+pub struct TruncLogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl TruncLogNormal {
+    pub fn new(mu: f64, sigma: f64, lo: f64, hi: f64) -> Self {
+        assert!(lo < hi);
+        Self { mu, sigma, lo, hi }
+    }
+
+    /// Calibrate (mu, sigma) so that the truncated distribution on [lo, hi]
+    /// has approximately the requested mean. sigma is searched on a fixed
+    /// ladder; mu by bisection — this runs once per trace, speed irrelevant.
+    pub fn from_min_max_mean(lo: f64, hi: f64, mean: f64, seed: u64) -> Self {
+        assert!(lo < mean && mean < hi, "mean must lie inside (lo, hi)");
+        let mut best = (f64::INFINITY, lo.ln(), 0.5);
+        for sigma_i in 1..=16 {
+            let sigma = sigma_i as f64 * 0.125;
+            // bisect mu in [ln lo - 2, ln hi + 2]
+            let (mut a, mut b) = (lo.ln() - 2.0, hi.ln() + 2.0);
+            for _ in 0..60 {
+                let mid = 0.5 * (a + b);
+                if Self::trunc_mean(mid, sigma, lo, hi, seed) < mean {
+                    a = mid;
+                } else {
+                    b = mid;
+                }
+            }
+            let mu = 0.5 * (a + b);
+            let err = (Self::trunc_mean(mu, sigma, lo, hi, seed) - mean).abs();
+            if err < best.0 {
+                best = (err, mu, sigma);
+            }
+        }
+        Self::new(best.1, best.2, lo, hi)
+    }
+
+    /// Monte-Carlo estimate of the truncated mean (deterministic seed so the
+    /// bisection above is monotone enough to converge).
+    fn trunc_mean(mu: f64, sigma: f64, lo: f64, hi: f64, seed: u64) -> f64 {
+        let mut rng = Pcg64::new(seed);
+        let n = 4096;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let mut v = rng.lognormal(mu, sigma);
+            if v < lo {
+                v = lo;
+            }
+            if v > hi {
+                v = hi;
+            }
+            acc += v;
+        }
+        acc / n as f64
+    }
+
+    /// Sample one value (clamped resampling: resample up to 64 times, then clamp).
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        for _ in 0..64 {
+            let v = rng.lognormal(self.mu, self.sigma);
+            if v >= self.lo && v <= self.hi {
+                return v;
+            }
+        }
+        rng.range_f64(self.lo, self.hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_is_bounded_and_covers() {
+        let mut rng = Pcg64::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut rng = Pcg64::new(11);
+        let lambda = 4.0;
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn trunc_lognormal_calibration_hits_mean() {
+        // The paper's "Medium" trace: 8k..142k tokens, mean 32.8k.
+        let d = TruncLogNormal::from_min_max_mean(8_000.0, 142_000.0, 32_800.0, 99);
+        let mut rng = Pcg64::new(3);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!(
+            (mean - 32_800.0).abs() / 32_800.0 < 0.08,
+            "calibrated mean {mean} too far from 32.8k"
+        );
+        for _ in 0..1000 {
+            let v = d.sample(&mut rng);
+            assert!((8_000.0..=142_000.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = Pcg64::new(2);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn range_u64_inclusive() {
+        let mut rng = Pcg64::new(8);
+        let mut hit_lo = false;
+        let mut hit_hi = false;
+        for _ in 0..2000 {
+            let v = rng.range_u64(3, 6);
+            assert!((3..=6).contains(&v));
+            hit_lo |= v == 3;
+            hit_hi |= v == 6;
+        }
+        assert!(hit_lo && hit_hi);
+    }
+}

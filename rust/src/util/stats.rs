@@ -1,0 +1,236 @@
+//! Descriptive statistics for latency distributions.
+//!
+//! The paper reports P50/P99 TTFT and TBT, CDFs (Fig. 9), and normalized
+//! slowdowns (Fig. 8 normalizes to 25x the light-load latency). This module
+//! provides exactly those reductions plus the histogram/CDF plumbing the
+//! bench harnesses print.
+
+/// Summary of a latency sample set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Summary {
+                count: 0,
+                mean: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+                p50: f64::NAN,
+                p90: f64::NAN,
+                p99: f64::NAN,
+            };
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            count: sorted.len(),
+            mean: mean(&sorted),
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile with linear interpolation; `q` in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// Percentile on an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let q = q.clamp(0.0, 100.0);
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Empirical CDF evaluated at `n_points` evenly spaced values between
+/// min and max; returns (x, F(x)) pairs. Used for Fig. 9.
+pub fn cdf_points(xs: &[f64], n_points: usize) -> Vec<(f64, f64)> {
+    if xs.is_empty() || n_points == 0 {
+        return vec![];
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (lo, hi) = (sorted[0], *sorted.last().unwrap());
+    let mut out = Vec::with_capacity(n_points);
+    for i in 0..n_points {
+        let x = if n_points == 1 {
+            hi
+        } else {
+            lo + (hi - lo) * i as f64 / (n_points - 1) as f64
+        };
+        // fraction of samples <= x
+        let cnt = sorted.partition_point(|v| *v <= x);
+        out.push((x, cnt as f64 / sorted.len() as f64));
+    }
+    out
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets; out-of-range
+/// values clamp into the edge buckets.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let mut b = ((x - lo) / w).floor() as i64;
+        if b < 0 {
+            b = 0;
+        }
+        if b >= bins as i64 {
+            b = bins as i64 - 1;
+        }
+        h[b as usize] += 1;
+    }
+    h
+}
+
+/// Online mean/max accumulator used by hot simulator loops (avoids keeping
+/// full sample vectors when only a summary is needed).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    pub count: u64,
+    pub sum: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { count: 0, sum: 0.0, max: f64::NEG_INFINITY, min: f64::INFINITY }
+    }
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < self.min {
+            self.min = x;
+        }
+    }
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_single_and_empty() {
+        assert_eq!(percentile(&[3.0], 75.0), 3.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_monotone_and_complete() {
+        let xs = vec![1.0, 2.0, 2.0, 3.0, 10.0];
+        let pts = cdf_points(&xs, 20);
+        assert_eq!(pts.len(), 20);
+        for w in pts.windows(2) {
+            assert!(w[1].1 >= w[0].1, "CDF must be monotone");
+            assert!(w[1].0 >= w[0].0);
+        }
+        assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_all() {
+        let xs = vec![-1.0, 0.0, 0.5, 0.99, 1.5, 100.0];
+        let h = histogram(&xs, 0.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<usize>(), xs.len());
+        assert_eq!(h[0], 2); // -1.0 clamps in, 0.0
+        assert_eq!(h[3], 3); // 0.99, 1.5 and 100.0 clamp into last
+    }
+
+    #[test]
+    fn running_matches_batch() {
+        let xs = vec![3.0, -1.0, 7.0, 2.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert_eq!(r.count, 4);
+        assert!((r.mean() - mean(&xs)).abs() < 1e-12);
+        assert_eq!(r.max, 7.0);
+        assert_eq!(r.min, -1.0);
+    }
+
+    #[test]
+    fn stddev_known_value() {
+        let xs = vec![2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        // population sd = 2, sample sd = sqrt(32/7)
+        assert!((stddev(&xs) - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+}

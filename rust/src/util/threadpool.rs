@@ -1,0 +1,168 @@
+//! Fixed-size thread pool (tokio is unavailable offline; the serving engine
+//! and the parameter sweeps in `benches/` need bounded parallelism).
+//!
+//! Work items are boxed closures delivered over an mpsc channel guarded by a
+//! mutex (simple MPMC). `scope_map` provides the common fork-join pattern:
+//! apply a function to each input in parallel and collect results in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (size ≥ 1).
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("tetris-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    /// Pool with one worker per available CPU (minimum 1).
+    pub fn per_cpu() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget execution.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("pool workers gone");
+    }
+
+    /// Apply `f` to every element of `inputs` in parallel; results returned
+    /// in input order. `f` must be cloneable across threads (Fn + Sync via Arc).
+    pub fn scope_map<T, R, F>(&self, inputs: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = inputs.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let remaining = Arc::new(AtomicUsize::new(n));
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        for (i, input) in inputs.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let remaining = Arc::clone(&remaining);
+            let done_tx = done_tx.clone();
+            self.execute(move || {
+                let r = f(input);
+                results.lock().unwrap()[i] = Some(r);
+                if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let _ = done_tx.send(());
+                }
+            });
+        }
+        drop(done_tx);
+        if n > 0 {
+            done_rx.recv().expect("pool workers vanished");
+        }
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("missing result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.scope_map((0..50).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.scope_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let flag = Arc::new(AtomicU64::new(0));
+        let f = Arc::clone(&flag);
+        pool.execute(move || {
+            thread::sleep(std::time::Duration::from_millis(20));
+            f.store(7, Ordering::SeqCst);
+        });
+        drop(pool); // must wait for the job
+        assert_eq!(flag.load(Ordering::SeqCst), 7);
+    }
+}

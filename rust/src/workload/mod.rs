@@ -1,0 +1,238 @@
+//! Workload synthesis and trace I/O.
+//!
+//! The paper evaluates on three production traces characterized only by
+//! their sequence-length spread (Sec. 7.1):
+//!
+//! | trace  | min | max  | mean  |
+//! |--------|-----|------|-------|
+//! | Short  | 4k  | 95k  | 23.6k |
+//! | Medium | 8k  | 142k | 32.8k |
+//! | Long   | 16k | 190k | 50.1k |
+//!
+//! We synthesize them as truncated lognormals matched to those moments
+//! (DESIGN.md §3), with Poisson arrivals ("the simulator generates
+//! timestamps using a Poisson process", Sec. 6). Stress tests scale arrival
+//! rate exactly as the paper scales request timestamps.
+
+use crate::util::json::Json;
+use crate::util::rng::{Pcg64, TruncLogNormal};
+use anyhow::Result;
+
+/// One serving request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time (seconds from trace start).
+    pub arrival: f64,
+    /// Prompt tokens.
+    pub prompt_len: usize,
+    /// Tokens to generate in the decode phase.
+    pub output_len: usize,
+}
+
+/// The paper's three trace families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    Short,
+    Medium,
+    Long,
+}
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Short => "short",
+            TraceKind::Medium => "medium",
+            TraceKind::Long => "long",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        match s {
+            "short" => Some(TraceKind::Short),
+            "medium" => Some(TraceKind::Medium),
+            "long" => Some(TraceKind::Long),
+            _ => None,
+        }
+    }
+
+    /// (min, max, mean) prompt lengths in tokens.
+    pub fn moments(&self) -> (f64, f64, f64) {
+        match self {
+            TraceKind::Short => (4_000.0, 95_000.0, 23_600.0),
+            TraceKind::Medium => (8_000.0, 142_000.0, 32_800.0),
+            TraceKind::Long => (16_000.0, 190_000.0, 50_100.0),
+        }
+    }
+}
+
+/// Workload generator: length distribution + Poisson arrivals.
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    pub lengths: TruncLogNormal,
+    /// Mean output length (decode tokens), geometric-ish spread.
+    pub mean_output: f64,
+    pub max_output: usize,
+}
+
+impl WorkloadGen {
+    /// Generator matched to one of the paper's traces.
+    pub fn paper_trace(kind: TraceKind) -> Self {
+        let (lo, hi, mean) = kind.moments();
+        WorkloadGen {
+            lengths: TruncLogNormal::from_min_max_mean(lo, hi, mean, 0x7e7a15),
+            // Long-context services are prompt-heavy; outputs are short
+            // relative to prompts (chat/report generation).
+            mean_output: 256.0,
+            max_output: 1024,
+        }
+    }
+
+    /// Sample `n` requests with Poisson(`rate`) arrivals.
+    pub fn generate(&self, n: usize, rate: f64, rng: &mut Pcg64) -> Vec<Request> {
+        let mut t = 0.0;
+        (0..n as u64)
+            .map(|id| {
+                t += rng.exponential(rate);
+                Request {
+                    id,
+                    arrival: t,
+                    prompt_len: self.lengths.sample(rng).round() as usize,
+                    output_len: self.sample_output(rng),
+                }
+            })
+            .collect()
+    }
+
+    fn sample_output(&self, rng: &mut Pcg64) -> usize {
+        // geometric with the requested mean, clamped to [1, max_output]
+        let v = rng.exponential(1.0 / self.mean_output).round() as usize;
+        v.clamp(1, self.max_output)
+    }
+}
+
+/// Rescale a trace's arrival times so its mean arrival rate becomes
+/// `new_rate` (how the paper "simulates different load conditions by
+/// scaling the request arrival timestamps").
+pub fn scale_rate(reqs: &[Request], new_rate: f64) -> Vec<Request> {
+    if reqs.is_empty() {
+        return vec![];
+    }
+    let span = reqs.last().unwrap().arrival - reqs[0].arrival;
+    let old_rate = if span > 0.0 { (reqs.len() - 1) as f64 / span } else { 1.0 };
+    let k = old_rate / new_rate;
+    reqs.iter()
+        .map(|r| Request { arrival: r.arrival * k, ..r.clone() })
+        .collect()
+}
+
+// ---- trace JSON I/O --------------------------------------------------------
+
+pub fn trace_to_json(reqs: &[Request]) -> Json {
+    let mut arr = Json::arr();
+    for r in reqs {
+        arr.push(
+            Json::obj()
+                .set("id", r.id)
+                .set("arrival", r.arrival)
+                .set("prompt_len", r.prompt_len)
+                .set("output_len", r.output_len),
+        );
+    }
+    Json::obj().set("requests", arr)
+}
+
+pub fn trace_from_json(j: &Json) -> Result<Vec<Request>> {
+    let mut out = Vec::new();
+    for r in j.req_arr("requests")? {
+        out.push(Request {
+            id: r.req_f64("id")? as u64,
+            arrival: r.req_f64("arrival")?,
+            prompt_len: r.req_usize("prompt_len")?,
+            output_len: r.req_usize("output_len")?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_moments_match_paper() {
+        for kind in [TraceKind::Short, TraceKind::Medium, TraceKind::Long] {
+            let (lo, hi, mean) = kind.moments();
+            let gen = WorkloadGen::paper_trace(kind);
+            let mut rng = Pcg64::new(1);
+            let reqs = gen.generate(20_000, 1.0, &mut rng);
+            let lens: Vec<f64> = reqs.iter().map(|r| r.prompt_len as f64).collect();
+            let got_mean = lens.iter().sum::<f64>() / lens.len() as f64;
+            assert!(
+                (got_mean - mean).abs() / mean < 0.10,
+                "{}: mean {got_mean} vs paper {mean}",
+                kind.name()
+            );
+            for l in &lens {
+                assert!(*l >= lo - 1.0 && *l <= hi + 1.0, "{}: {l} outside range", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_arrival_rate() {
+        let gen = WorkloadGen::paper_trace(TraceKind::Medium);
+        let mut rng = Pcg64::new(9);
+        let reqs = gen.generate(10_000, 2.5, &mut rng);
+        let span = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 2.5).abs() < 0.1, "rate {rate}");
+        // arrivals strictly increasing
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival > w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn scale_rate_changes_density() {
+        let gen = WorkloadGen::paper_trace(TraceKind::Short);
+        let mut rng = Pcg64::new(3);
+        let reqs = gen.generate(2_000, 1.0, &mut rng);
+        let scaled = scale_rate(&reqs, 4.0);
+        let span = scaled.last().unwrap().arrival - scaled[0].arrival;
+        let rate = (scaled.len() - 1) as f64 / span;
+        assert!((rate - 4.0).abs() < 0.05, "rate {rate}");
+        // lengths untouched
+        assert_eq!(scaled[7].prompt_len, reqs[7].prompt_len);
+    }
+
+    #[test]
+    fn output_lengths_bounded() {
+        let gen = WorkloadGen::paper_trace(TraceKind::Long);
+        let mut rng = Pcg64::new(5);
+        let reqs = gen.generate(5_000, 1.0, &mut rng);
+        for r in &reqs {
+            assert!((1..=gen.max_output).contains(&r.output_len));
+        }
+        let mean: f64 =
+            reqs.iter().map(|r| r.output_len as f64).sum::<f64>() / reqs.len() as f64;
+        assert!((mean - 256.0).abs() < 40.0, "output mean {mean}");
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let gen = WorkloadGen::paper_trace(TraceKind::Medium);
+        let mut rng = Pcg64::new(2);
+        let reqs = gen.generate(50, 1.0, &mut rng);
+        let back = trace_from_json(&trace_to_json(&reqs)).unwrap();
+        assert_eq!(back, reqs);
+    }
+
+    #[test]
+    fn kind_parse() {
+        for k in [TraceKind::Short, TraceKind::Medium, TraceKind::Long] {
+            assert_eq!(TraceKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(TraceKind::parse("x"), None);
+    }
+}

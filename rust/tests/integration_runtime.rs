@@ -1,0 +1,149 @@
+//! Integration: the AOT bridge end-to-end — rust loads the jax/Pallas HLO
+//! artifacts, executes them through PJRT, and the numerics compose exactly
+//! the way the python tests proved they do in-process.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use tetris::runtime::{argmax, artifacts_dir, Engine, Manifest};
+
+fn engine() -> Engine {
+    Engine::load(&artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_matches_modelcfg() {
+    let m = Manifest::load(&artifacts_dir()).expect("manifest");
+    let tiny = tetris::modelcfg::ModelArch::tiny();
+    assert_eq!(m.arch.n_layers, tiny.n_layers);
+    assert_eq!(m.arch.d_model, tiny.d_model);
+    assert_eq!(m.arch.n_heads, tiny.n_heads);
+    assert_eq!(m.arch.vocab, tiny.vocab);
+    assert_eq!(m.weights.len(), 1 + 9 * tiny.n_layers + 2);
+}
+
+#[test]
+fn prefill_executes_and_is_deterministic() {
+    let e = engine();
+    let a = e.arch.clone();
+    let mut tokens = vec![0i32; a.l_bucket];
+    for (i, t) in tokens.iter_mut().enumerate() {
+        *t = (i % a.vocab) as i32;
+    }
+    let hk = vec![0.0f32; a.kv_elems()];
+    let hv = vec![0.0f32; a.kv_elems()];
+    let o1 = e.prefill_chunk(&tokens, &hk, &hv, 0, 16).unwrap();
+    let o2 = e.prefill_chunk(&tokens, &hk, &hv, 0, 16).unwrap();
+    assert_eq!(o1.logits.len(), a.vocab);
+    assert_eq!(o1.new_k.len(), a.new_kv_elems());
+    assert!(o1.logits.iter().all(|x| x.is_finite()));
+    assert_eq!(o1.logits, o2.logits, "PJRT execution must be deterministic");
+}
+
+#[test]
+fn chunked_prefill_composes_like_single_chunk() {
+    // THE cross-language correctness check: split a 40-token prompt 17+23 and
+    // verify the final logits match the single-chunk run — the same
+    // compositional invariant CDSP relies on, now through the rust KV-cache
+    // management.
+    let e = engine();
+    let a = e.arch.clone();
+    let prompt: Vec<i32> = (0..40).map(|i| ((i * 37 + 11) % a.vocab) as i32).collect();
+    let tok = a.tok_elems();
+
+    let run = |splits: &[usize]| -> Vec<f32> {
+        let mut hk = vec![0.0f32; a.kv_elems()];
+        let mut hv = vec![0.0f32; a.kv_elems()];
+        let mut hist = 0usize;
+        let mut logits = Vec::new();
+        for &len in splits {
+            let mut padded = vec![0i32; a.l_bucket];
+            padded[..len].copy_from_slice(&prompt[hist..hist + len]);
+            let out = e
+                .prefill_chunk(&padded, &hk, &hv, hist as i32, len as i32)
+                .unwrap();
+            for layer in 0..a.n_layers {
+                let src = layer * a.l_bucket * tok;
+                let dst = layer * a.c_bucket * tok + hist * tok;
+                hk[dst..dst + len * tok]
+                    .copy_from_slice(&out.new_k[src..src + len * tok]);
+                hv[dst..dst + len * tok]
+                    .copy_from_slice(&out.new_v[src..src + len * tok]);
+            }
+            hist += len;
+            logits = out.logits;
+        }
+        logits
+    };
+
+    let single = run(&[40]);
+    let chunked = run(&[17, 23]);
+    let chunked3 = run(&[8, 16, 16]);
+    for (i, (s, c)) in single.iter().zip(&chunked).enumerate() {
+        assert!((s - c).abs() < 3e-4, "logit {i}: {s} vs {c}");
+    }
+    for (s, c) in single.iter().zip(&chunked3) {
+        assert!((s - c).abs() < 3e-4);
+    }
+    assert_eq!(argmax(&single), argmax(&chunked));
+}
+
+#[test]
+fn decode_continues_prefill_greedily() {
+    let e = engine();
+    let a = e.arch.clone();
+    let prompt: Vec<i32> = (0..24).map(|i| ((i * 13 + 3) % a.vocab) as i32).collect();
+    let tok = a.tok_elems();
+
+    // Prefill the full prompt.
+    let mut padded = vec![0i32; a.l_bucket];
+    padded[..24].copy_from_slice(&prompt);
+    let hk = vec![0.0f32; a.kv_elems()];
+    let hv = vec![0.0f32; a.kv_elems()];
+    let out = e.prefill_chunk(&padded, &hk, &hv, 0, 24).unwrap();
+
+    // Move cache into decode bucket.
+    let mut dk = vec![0.0f32; a.decode_kv_elems()];
+    let mut dv = vec![0.0f32; a.decode_kv_elems()];
+    for layer in 0..a.n_layers {
+        let src = layer * a.l_bucket * tok;
+        let dst = layer * a.decode_c_bucket * tok;
+        dk[dst..dst + 24 * tok].copy_from_slice(&out.new_k[src..src + 24 * tok]);
+        dv[dst..dst + 24 * tok].copy_from_slice(&out.new_v[src..src + 24 * tok]);
+    }
+
+    // Generate 5 tokens greedily; every step must be finite + in-vocab and
+    // the cache must grow.
+    let mut hist = 24usize;
+    let mut token = argmax(&out.logits) as i32;
+    for _ in 0..5 {
+        let d = e.decode_step(token, &dk, &dv, hist as i32).unwrap();
+        assert!(d.logits.iter().all(|x| x.is_finite()));
+        for layer in 0..a.n_layers {
+            let dst = layer * a.decode_c_bucket * tok + hist * tok;
+            let src = layer * tok;
+            dk[dst..dst + tok].copy_from_slice(&d.new_k[src..src + tok]);
+            dv[dst..dst + tok].copy_from_slice(&d.new_v[src..src + tok]);
+        }
+        hist += 1;
+        token = argmax(&d.logits) as i32;
+        assert!((token as usize) < a.vocab);
+    }
+}
+
+#[test]
+fn input_validation() {
+    let e = engine();
+    let a = e.arch.clone();
+    let hk = vec![0.0f32; a.kv_elems()];
+    let hv = vec![0.0f32; a.kv_elems()];
+    // wrong token padding
+    assert!(e.prefill_chunk(&[1, 2, 3], &hk, &hv, 0, 3).is_err());
+    // chunk_len out of range
+    let tokens = vec![0i32; a.l_bucket];
+    assert!(e
+        .prefill_chunk(&tokens, &hk, &hv, 0, (a.l_bucket + 1) as i32)
+        .is_err());
+    assert!(e.prefill_chunk(&tokens, &hk, &hv, 0, 0).is_err());
+    // wrong cache size
+    assert!(e.prefill_chunk(&tokens, &hk[1..], &hv, 0, 4).is_err());
+}

@@ -1,0 +1,84 @@
+//! Integration: scheduler + improvement-rate controller + profiler working
+//! together the way the online system composes them.
+
+use tetris::config::{Policy, SchedConfig};
+use tetris::cluster::PoolView;
+use tetris::latency::a100_model_for;
+use tetris::modelcfg::ModelArch;
+use tetris::sched::{CdspScheduler, ImprovementController, RateProfile};
+use tetris::sim::profiler::{profile, ProfileParams};
+use tetris::sim::SimBuilder;
+use tetris::workload::TraceKind;
+
+#[test]
+fn profiled_rates_feed_the_controller() {
+    // offline profile -> RateProfile -> online controller -> scheduler
+    let params = ProfileParams {
+        rates: vec![0.3, 1.5, 3.0],
+        improvement_rates: vec![0.1, 0.4, 0.7],
+        n_requests: 40,
+        seed: 3,
+    };
+    let sweep = profile(SimBuilder::paper_8b, TraceKind::Medium, &params);
+    let profile = sweep.best_profile();
+    assert_eq!(profile.entries.len(), 3);
+
+    let mut ctl = ImprovementController::new(profile.clone(), 30.0, 30.0);
+    // idle system: the controller must pick the low-load entry
+    let low = ctl.rate(0.0);
+    assert_eq!(low, profile.lookup(0.0));
+
+    // the rate must be usable by the scheduler
+    let model = a100_model_for(&ModelArch::llama3_8b(), 1, &[1, 2, 4, 8, 16]);
+    let sched = CdspScheduler::new(model, SchedConfig::default());
+    let plan = sched.schedule(64_000, &PoolView::idle(4, 4), low).unwrap();
+    plan.validate(64_000).unwrap();
+}
+
+#[test]
+fn dynamic_rate_at_least_matches_worst_fixed_rate() {
+    // Run the same trace with the profiled dynamic rate and with the two
+    // extreme fixed rates; dynamic must not be the worst of the three
+    // (Figs. 11-12's point).
+    use tetris::util::rng::Pcg64;
+    use tetris::workload::WorkloadGen;
+    let gen = WorkloadGen::paper_trace(TraceKind::Medium);
+    let mut rng = Pcg64::new(77);
+    let trace = gen.generate(60, 1.5, &mut rng);
+
+    let run_with = |ctl: ImprovementController| {
+        let mut b = SimBuilder::paper_8b(Policy::Cdsp);
+        b.controller = ctl;
+        b.run(&trace).ttft_summary().mean
+    };
+    let t_low = run_with(ImprovementController::fixed(0.05));
+    let t_high = run_with(ImprovementController::fixed(0.75));
+    let t_dyn = run_with(ImprovementController::new(
+        RateProfile::default_trend(4.0),
+        30.0,
+        30.0,
+    ));
+    let worst = t_low.max(t_high);
+    assert!(
+        t_dyn <= worst * 1.05,
+        "dynamic {t_dyn} should not be the worst of (low {t_low}, high {t_high})"
+    );
+}
+
+#[test]
+fn scheduler_handles_extreme_pools() {
+    let model = a100_model_for(&ModelArch::llama3_8b(), 1, &[1, 2, 4, 8, 16]);
+    let sched = CdspScheduler::new(model, SchedConfig::default());
+    // single instance
+    let plan = sched.schedule(100_000, &PoolView::idle(1, 1), 0.3).unwrap();
+    assert_eq!(plan.max_sp(), 1);
+    // deeply uneven pool
+    let mut pool = PoolView::idle(4, 4);
+    for (i, d) in pool.delays.iter_mut().enumerate() {
+        *d = if i < 15 { 100.0 } else { 0.0 };
+    }
+    let plan = sched.schedule(100_000, &pool, 0.3).unwrap();
+    plan.validate(100_000).unwrap();
+    // with 15 instances stuck for 100 s, the plan must not wait on them all
+    assert!(plan.est_ttft < 120.0);
+}

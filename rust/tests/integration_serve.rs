@@ -1,0 +1,107 @@
+//! Integration: the live threaded serving stack over real PJRT execution.
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+use tetris::config::SchedConfig;
+use tetris::latency::prefill::{PrefillModel, SpCoeffs};
+use tetris::runtime::{artifacts_dir, Engine};
+use tetris::serve::{ServeRequest, Server};
+
+/// A scheduler model with A100-like SP shape so multi-chunk CDSP paths get
+/// exercised even on the CPU substrate (DESIGN.md §3).
+fn sched_model(n: usize) -> PrefillModel {
+    let mut m = PrefillModel::new();
+    let mut sp = 1;
+    while sp <= n {
+        m.insert(
+            sp,
+            SpCoeffs {
+                a: 0.002 * sp as f64,
+                b: 1.0e-4 / sp as f64,
+                c: 2.0e-7 / sp as f64,
+                d: 1.0e-7 / sp as f64,
+            },
+        );
+        sp *= 2;
+    }
+    m
+}
+
+fn server(n_workers: usize) -> Server {
+    let engine = Arc::new(Engine::load(&artifacts_dir()).expect("make artifacts"));
+    let mut cfg = SchedConfig::default();
+    cfg.sp_candidates = vec![1, 2, 4];
+    cfg.min_chunk = 32;
+    Server::start(engine, n_workers, sched_model(n_workers), cfg).expect("server start")
+}
+
+fn req(id: u64, len: usize, out: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: (0..len).map(|i| ((i * 7 + id as usize) % 512) as i32).collect(),
+        output_len: out,
+    }
+}
+
+#[test]
+fn serves_one_request_end_to_end() {
+    let mut s = server(2);
+    let m = s.run_trace(&[req(0, 50, 4)], 0.0).expect("trace");
+    assert_eq!(m.requests.len(), 1);
+    let r = &m.requests[0];
+    assert_eq!(r.prompt_len, 50);
+    assert_eq!(r.output_len, 4);
+    assert!(r.ttft() > 0.0);
+    assert_eq!(r.tbt.len(), 3, "first token from prefill, 3 decode steps");
+    s.shutdown().unwrap();
+}
+
+#[test]
+fn serves_concurrent_batch() {
+    let mut s = server(4);
+    let reqs: Vec<ServeRequest> =
+        (0..6).map(|i| req(i, 30 + (i as usize) * 20, 3)).collect();
+    let m = s.run_trace(&reqs, 0.0).expect("trace");
+    assert_eq!(m.requests.len(), 6);
+    for r in &m.requests {
+        assert!(r.ttft() > 0.0 && r.ttft() < 60.0);
+        assert_eq!(r.output_len, 3);
+    }
+    assert!(m.token_throughput() > 0.0);
+    s.shutdown().unwrap();
+}
+
+#[test]
+fn long_prompt_spans_multiple_buckets() {
+    // prompt of 150 tokens > l_bucket (64): the submit path must split into
+    // bucket-sized pieces and still produce a coherent request.
+    let mut s = server(2);
+    let m = s.run_trace(&[req(9, 150, 2)], 0.0).expect("trace");
+    assert_eq!(m.requests[0].prompt_len, 150);
+    s.shutdown().unwrap();
+}
+
+#[test]
+fn rejects_oversized_and_empty_prompts() {
+    let mut s = server(1);
+    let too_big = req(1, 10_000, 1);
+    assert!(s.submit(&too_big).is_err());
+    let empty = ServeRequest { id: 2, prompt: vec![], output_len: 1 };
+    assert!(s.submit(&empty).is_err());
+    s.shutdown().unwrap();
+}
+
+#[test]
+fn decode_is_continuous_batching() {
+    // Submit two requests back-to-back; both must finish even though the
+    // second arrives while the first decodes (join at a step boundary).
+    let mut s = server(2);
+    s.submit(&req(0, 40, 6)).unwrap();
+    s.submit(&req(1, 40, 6)).unwrap();
+    let got = s.collect(2);
+    assert_eq!(got.len(), 2);
+    for r in &got {
+        assert_eq!(r.output_len, 6);
+    }
+    s.shutdown().unwrap();
+}

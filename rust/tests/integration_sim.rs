@@ -1,0 +1,115 @@
+//! Integration: full simulator campaigns — the shapes the paper's figures
+//! are built from, on smaller samples than the bench harnesses use.
+
+use tetris::config::Policy;
+use tetris::metrics::{max_sustainable_rate, SloCriterion};
+use tetris::sim::SimBuilder;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{scale_rate, TraceKind, WorkloadGen};
+
+fn trace(kind: TraceKind, n: usize, rate: f64, seed: u64) -> Vec<tetris::workload::Request> {
+    let gen = WorkloadGen::paper_trace(kind);
+    let mut rng = Pcg64::new(seed);
+    gen.generate(n, rate, &mut rng)
+}
+
+#[test]
+fn five_policies_complete_and_rank_sanely() {
+    // Paper Fig. 8 shape, seed-averaged (single-seed P99 is tie-break
+    // noise): under heavy load Tetris's mean P99 TTFT leads the field
+    // within tolerance, and Fixed-SP16's over-provision collapses.
+    use tetris::sched::{ImprovementController, RateProfile};
+    use tetris::util::stats::mean;
+    let policies = [
+        Policy::Cdsp,
+        Policy::CdspSingleChunk,
+        Policy::LoongServe,
+        Policy::LoongServeDisagg,
+        Policy::FixedSp(8),
+        Policy::FixedSp(16),
+    ];
+    let mut p99s: Vec<(Policy, Vec<f64>)> =
+        policies.iter().map(|p| (*p, Vec::new())).collect();
+    for seed in [42u64, 43, 44] {
+        let t = trace(TraceKind::Medium, 60, 2.5, seed);
+        for (pi, p) in policies.iter().enumerate() {
+            let mut b = SimBuilder::paper_8b(*p);
+            b.controller =
+                ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
+            let m = b.run(&t);
+            assert_eq!(m.requests.len(), 60, "{:?} lost requests", p);
+            p99s[pi].1.push(m.ttft_summary().p99);
+        }
+    }
+    let avg: Vec<(Policy, f64)> = p99s.iter().map(|(p, v)| (*p, mean(v))).collect();
+    let cdsp = avg[0].1;
+    for (p, v) in &avg[1..] {
+        assert!(
+            cdsp <= v * 1.15,
+            "CDSP mean p99 {cdsp} should lead under load; {p:?} got {v}"
+        );
+    }
+    // Fixed-SP16 must be clearly worse than CDSP at this load (resource
+    // over-provision, paper Sec. 7.2).
+    let f16 = avg.iter().find(|(p, _)| *p == Policy::FixedSp(16)).unwrap().1;
+    assert!(f16 > cdsp * 1.8, "fixed-sp16 {f16} vs cdsp {cdsp}");
+}
+
+#[test]
+fn capacity_search_finds_cdsp_advantage() {
+    // Miniature Fig. 8 capacity comparison: CDSP must sustain at least the
+    // load Fixed-SP16 sustains.
+    let base = trace(TraceKind::Short, 40, 1.0, 7);
+    let light = SimBuilder::paper_8b(Policy::Cdsp)
+        .run(&scale_rate(&base, 0.05))
+        .ttft_summary()
+        .p99;
+    let slo = SloCriterion { light_load: light, factor: 25.0 };
+    let rates: Vec<f64> = (1..=8).map(|i| i as f64 * 0.5).collect();
+
+    let measure = |policy: Policy| {
+        let base = base.clone();
+        move |r: f64| {
+            SimBuilder::paper_8b(policy)
+                .run(&scale_rate(&base, r))
+                .ttft_summary()
+                .p99
+        }
+    };
+    let cap_cdsp = max_sustainable_rate(&rates, &slo, measure(Policy::Cdsp));
+    let cap_f16 = max_sustainable_rate(&rates, &slo, measure(Policy::FixedSp(16)));
+    let c = cap_cdsp.unwrap_or(0.0);
+    let f = cap_f16.unwrap_or(0.0);
+    assert!(c >= f, "CDSP capacity {c} must be >= fixed-sp16 {f}");
+}
+
+#[test]
+fn ttft_cdf_is_stochastically_better_under_load() {
+    // Fig. 9 shape: at a loaded rate, CDSP's TTFT CDF should dominate
+    // Fixed-SP16's at the median point.
+    let t = trace(TraceKind::Long, 50, 1.0, 9);
+    let cdsp = SimBuilder::paper_8b(Policy::Cdsp).run(&t);
+    let f16 = SimBuilder::paper_8b(Policy::FixedSp(16)).run(&t);
+    assert!(cdsp.ttft_summary().p50 <= f16.ttft_summary().p50);
+    let cdf = cdsp.ttft_cdf(32);
+    assert_eq!(cdf.len(), 32);
+}
+
+#[test]
+fn seventy_b_policies_complete() {
+    let t = trace(TraceKind::Medium, 25, 0.4, 11);
+    for p in [Policy::Cdsp, Policy::LoongServeDisagg, Policy::FixedSp(8)] {
+        let m = SimBuilder::paper_70b(p).run(&t);
+        assert_eq!(m.requests.len(), 25);
+    }
+}
+
+#[test]
+fn tbt_of_disaggregated_decode_is_smooth() {
+    let t = trace(TraceKind::Short, 30, 0.5, 13);
+    let m = SimBuilder::paper_8b(Policy::Cdsp).run(&t);
+    let s = m.tbt_summary();
+    // decode steps on TP=8 A100s land in the tens of milliseconds
+    assert!(s.p50 > 1e-4 && s.p50 < 1.0, "p50 TBT {} out of range", s.p50);
+    assert!(s.p99 >= s.p50);
+}

@@ -1,0 +1,248 @@
+//! Property-based tests over the coordinator's invariants, using the
+//! in-tree mini property-testing framework (`util::proptest`).
+//!
+//! These are the paper's structural guarantees: CDSP plans always cover the
+//! prompt with strictly-growing nested groups (Sec. 3.1/4.1), `GetGroup`
+//! returns supersets, queue clocks never go negative, the handshake
+//! protocol never starves an admitted request, cache balancing conserves
+//! tokens, and the paged KV manager never leaks blocks.
+
+use tetris::baselines::{FixedSpScheduler, LoongServeScheduler, PrefillScheduler};
+use tetris::cluster::PoolView;
+use tetris::config::SchedConfig;
+use tetris::kvcache::BlockManager;
+use tetris::latency::calibration::table1_model;
+use tetris::ring::plan_balance;
+use tetris::sched::CdspScheduler;
+use tetris::transfer::{Handshake, HandshakeReply, ReceiveManager};
+use tetris::util::proptest::{check_default, Gen};
+use tetris::{prop_assert, prop_fail};
+
+fn random_pool(g: &mut Gen) -> PoolView {
+    let n_nodes = g.usize_in(1, 4);
+    let per_node = g.pick(&[2usize, 4, 8]);
+    let mut pool = PoolView::idle(n_nodes, per_node);
+    for d in pool.delays.iter_mut() {
+        *d = g.f64_in(0.0, 8.0);
+    }
+    pool
+}
+
+#[test]
+fn prop_cdsp_plans_always_valid() {
+    let sched = CdspScheduler::new(table1_model(), SchedConfig::default());
+    check_default("cdsp-plan-valid", |g| {
+        let pool = random_pool(g);
+        let len = g.usize_in(1_000, 260_000);
+        let rate = g.f64_in(0.0, 0.75);
+        let Some(plan) = sched.schedule(len, &pool, rate) else {
+            prop_fail!("scheduling failed on non-empty pool");
+        };
+        plan.validate(len).map_err(|e| format!("len={len}: {e}"))?;
+        for c in &plan.chunks {
+            for &i in &c.group {
+                prop_assert!(i < pool.len(), "instance {i} out of range");
+            }
+        }
+        prop_assert!(plan.est_ttft > 0.0, "non-positive ttft");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cdsp_never_worse_than_single_chunk() {
+    let cfg = SchedConfig::default();
+    let cdsp = CdspScheduler::new(table1_model(), cfg.clone());
+    let single = {
+        let mut s = CdspScheduler::new(table1_model(), cfg);
+        s.single_chunk_only = true;
+        s
+    };
+    check_default("cdsp-dominates-single", |g| {
+        let pool = random_pool(g);
+        let len = g.usize_in(4_000, 200_000);
+        let rate = g.f64_in(0.0, 0.5);
+        let p_cdsp = cdsp.schedule(len, &pool, rate).unwrap();
+        let p_single = single.schedule(len, &pool, rate).unwrap();
+        prop_assert!(
+            p_cdsp.est_ttft <= p_single.est_ttft + 1e-9,
+            "CDSP {} must not lose to its own single-chunk plan {}",
+            p_cdsp.est_ttft,
+            p_single.est_ttft
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_get_group_supersets_and_sizes() {
+    check_default("get-group-extension", |g| {
+        let pool = random_pool(g);
+        let s1 = g.pow2_upto(pool.len());
+        let Some(g1) = pool.get_group(&[], s1) else {
+            prop_fail!("get_group failed for s={s1} pool={}", pool.len());
+        };
+        prop_assert!(g1.len() == s1, "size mismatch");
+        let mut uniq = g1.clone();
+        uniq.sort();
+        uniq.dedup();
+        prop_assert!(uniq.len() == g1.len(), "duplicates in group");
+        let s2 = (s1 * 2).min(pool.len());
+        if s2 > s1 {
+            if let Some(g2) = pool.get_group(&g1, s2) {
+                for i in &g1 {
+                    prop_assert!(g2.contains(i), "nesting violated");
+                }
+                prop_assert!(g2.len() == s2, "extended size");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_baselines_valid_plans() {
+    let ls = LoongServeScheduler::new(table1_model(), vec![1, 2, 4, 8, 16], false);
+    let f8 = FixedSpScheduler::new(table1_model(), 8);
+    check_default("baseline-plans-valid", |g| {
+        let mut pool = PoolView::idle(g.usize_in(1, 4), 8);
+        for d in pool.delays.iter_mut() {
+            *d = g.f64_in(0.0, 5.0);
+        }
+        let len = g.usize_in(1_000, 250_000);
+        let p = ls.schedule(len, &pool, 0.0).unwrap();
+        p.validate(len).map_err(|e| format!("loongserve: {e}"))?;
+        let p = f8.schedule(len, &pool, 0.0).unwrap();
+        p.validate(len).map_err(|e| format!("fixed-sp8: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pool_clocks_never_negative() {
+    check_default("pool-clock-positivity", |g| {
+        let mut pool = random_pool(g);
+        for _ in 0..g.usize_in(1, 30) {
+            if g.bool() {
+                let grp: Vec<usize> = (0..pool.len()).filter(|_| g.bool()).collect();
+                pool.commit(&grp, g.f64_in(0.0, 10.0));
+            } else {
+                pool.advance(g.f64_in(0.0, 5.0));
+            }
+            for (i, d) in pool.delays.iter().enumerate() {
+                prop_assert!(*d >= 0.0, "instance {i} clock negative: {d}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_handshake_conserves_and_completes() {
+    check_default("handshake-completion", |g| {
+        let n_backends = g.usize_in(1, 4);
+        let n_reqs = g.usize_in(1, 6);
+        let mut rm = ReceiveManager::new(n_backends, 0);
+        let mut shards: Vec<usize> = (0..n_reqs).map(|_| g.usize_in(1, 8)).collect();
+        let mut inflight: Vec<(u64, usize)> = Vec::new();
+        for (r, &s) in shards.iter().enumerate() {
+            rm.expect(r as u64, s, r as f64 * 0.1);
+        }
+        for (r, &s) in shards.iter().enumerate() {
+            for sh in 0..s {
+                let reply = rm.handshake(Handshake {
+                    req: r as u64,
+                    shard: sh,
+                    bytes: 1.0,
+                    timestamp: r as f64 * 0.1 + sh as f64 * 0.01,
+                });
+                if let HandshakeReply::Granted { backend } = reply {
+                    inflight.push((r as u64, backend));
+                }
+            }
+        }
+        let mut completed = vec![0usize; n_reqs];
+        let mut steps = 0;
+        while let Some((req, backend)) = inflight.pop() {
+            steps += 1;
+            prop_assert!(steps < 10_000, "transfer loop diverged");
+            let (grants, done) = rm.transfer_done(req, backend);
+            completed[req as usize] += 1;
+            if done {
+                shards[req as usize] = 0;
+            }
+            for (hs, b) in grants {
+                inflight.push((hs.req, b));
+            }
+        }
+        for (r, &remaining) in shards.iter().enumerate() {
+            prop_assert!(remaining == 0, "request {r} starved with {remaining} shards left");
+            prop_assert!(completed[r] > 0, "request {r} never served");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_balance_conserves_history() {
+    check_default("balance-conservation", |g| {
+        let old_n = g.usize_in(1, 8);
+        let new_n = old_n + g.usize_in(0, 8);
+        let hist = g.usize_in(0, 100_000);
+        let moves = plan_balance(hist, old_n, new_n);
+        let share_old = |i: usize| hist / old_n + usize::from(i < hist % old_n);
+        let mut hold: Vec<i64> = (0..new_n)
+            .map(|i| if i < old_n { share_old(i) as i64 } else { 0 })
+            .collect();
+        for m in &moves {
+            prop_assert!(m.tokens > 0, "empty move");
+            hold[m.from] -= m.tokens as i64;
+            hold[m.to] += m.tokens as i64;
+        }
+        prop_assert!(hold.iter().sum::<i64>() as usize == hist, "tokens not conserved");
+        for (i, h) in hold.iter().enumerate() {
+            prop_assert!(*h >= 0, "instance {i} went negative");
+            let want = (hist / new_n) as i64;
+            prop_assert!((h - want).abs() <= 1, "imbalance at {i}: {h} vs {want}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_manager_no_leaks() {
+    check_default("kv-blocks-conserve", |g| {
+        let total = g.usize_in(4, 64);
+        let bt = g.pick(&[4usize, 16]);
+        let mut m = BlockManager::new(total, bt);
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..g.usize_in(1, 60) {
+            match g.usize_in(0, 2) {
+                0 => {
+                    let tokens = g.usize_in(1, total * bt / 2);
+                    if let Ok(id) = m.allocate_seq(tokens) {
+                        live.push(id);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        m.free_seq(live.swap_remove(idx));
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        let _ = m.append_token(live[idx]);
+                    }
+                }
+            }
+            prop_assert!(m.used_blocks() + m.free_blocks() == total, "block conservation broken");
+        }
+        for id in live {
+            m.free_seq(id);
+        }
+        prop_assert!(m.free_blocks() == total, "leak after freeing all");
+        Ok(())
+    });
+}

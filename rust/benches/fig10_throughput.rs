@@ -2,10 +2,9 @@
 //! load it sustains under the 25x SLO). Paper: Tetris improves throughput
 //! by 1.24-3.38x (8B) / 1.15-1.81x (70B) while keeping latency low.
 
-use tetris::config::Policy;
+use tetris::api::Tetris;
 use tetris::metrics::{max_sustainable_rate, SloCriterion};
 use tetris::sched::{ImprovementController, RateProfile};
-use tetris::sim::SimBuilder;
 use tetris::util::bench::Table;
 use tetris::util::cli::Args;
 use tetris::util::rng::Pcg64;
@@ -18,28 +17,29 @@ fn main() {
         let gen = WorkloadGen::paper_trace(kind);
         let mut rng = Pcg64::new(10);
         let base = gen.generate(n, 1.0, &mut rng);
-        let run = |policy: Policy, rate: f64| {
-            let mut b = SimBuilder::paper_8b(policy);
-            b.controller = ImprovementController::new(
-                RateProfile::default_trend(4.0), 30.0, 30.0);
-            b.run(&scale_rate(&base, rate))
+        let run = |policy: &str, rate: f64| {
+            Tetris::paper_8b()
+                .policy(policy)
+                .controller(ImprovementController::new(
+                    RateProfile::default_trend(4.0),
+                    30.0,
+                    30.0,
+                ))
+                .build_simulation()
+                .expect("valid configuration")
+                .run(&scale_rate(&base, rate))
         };
-        let light = run(Policy::FixedSp(8), 0.05).ttft_summary().mean;
+        let light = run("fixed-sp8", 0.05).ttft_summary().mean;
         let slo = SloCriterion { light_load: light, factor: 25.0 };
         let rates: Vec<f64> = (1..=16).map(|i| i as f64 * 0.5).collect();
         println!("\n=== Fig. 10 [{} trace] (threshold {:.1}s) ===", kind.name(), slo.threshold());
         let mut t = Table::new(&["policy", "critical rate", "tok/s at critical rate", "vs fixed-sp8"]);
         let mut rows = Vec::new();
-        for policy in [
-            Policy::Cdsp,
-            Policy::LoongServeDisagg,
-            Policy::FixedSp(8),
-            Policy::FixedSp(16),
-        ] {
+        for policy in ["tetris-cdsp", "loongserve-disagg", "fixed-sp8", "fixed-sp16"] {
             let cap = max_sustainable_rate(&rates, &slo, |r| run(policy, r).ttft_summary().p99)
                 .unwrap_or(0.25);
             let thru = run(policy, cap).token_throughput();
-            rows.push((policy.name(), cap, thru));
+            rows.push((policy.to_string(), cap, thru));
         }
         let base_thru = rows.iter().find(|r| r.0 == "fixed-sp8").map(|r| r.2).unwrap_or(1.0);
         for (name, cap, thru) in rows {

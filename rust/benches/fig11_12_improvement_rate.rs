@@ -5,10 +5,9 @@
 //! dominated), large rates win at heavy load (queuing-dominated), and the
 //! dynamic controller tracks the winner; at saturation sensitivity fades.
 
-use tetris::config::Policy;
-use tetris::sched::{ImprovementController, RateProfile};
+use tetris::api::Tetris;
+use tetris::sched::ImprovementController;
 use tetris::sim::profiler::{profile, ProfileParams};
-use tetris::sim::SimBuilder;
 use tetris::util::bench::Table;
 use tetris::util::cli::Args;
 use tetris::util::rng::Pcg64;
@@ -31,7 +30,7 @@ fn main() {
         n_requests: n.min(80),
         seed: 5,
     };
-    let sweep = profile(SimBuilder::paper_8b, kind, &params);
+    let sweep = profile(&Tetris::paper_8b(), kind, &params);
     let dynamic_profile = sweep.best_profile();
     println!("profiled optimal rates: {:?}", dynamic_profile.entries);
 
@@ -40,9 +39,14 @@ fn main() {
     for &load in &loads {
         let trace = scale_rate(&base, load);
         let run = |ctl: ImprovementController| {
-            let mut b = SimBuilder::paper_8b(Policy::Cdsp);
-            b.controller = ctl;
-            b.run(&trace).ttft_summary().mean
+            Tetris::paper_8b()
+                .policy("tetris-cdsp")
+                .controller(ctl)
+                .build_simulation()
+                .expect("valid configuration")
+                .run(&trace)
+                .ttft_summary()
+                .mean
         };
         let dyn_ttft = run(ImprovementController::new(dynamic_profile.clone(), 30.0, 30.0));
         let mut cells = vec![format!("{load:.1}")];

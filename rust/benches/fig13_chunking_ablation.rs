@@ -5,9 +5,8 @@
 //! small at light load (no fragmentation to exploit) and fading again at
 //! saturation (queuing dominates).
 
-use tetris::config::Policy;
+use tetris::api::Tetris;
 use tetris::sched::{ImprovementController, RateProfile};
-use tetris::sim::SimBuilder;
 use tetris::util::bench::Table;
 use tetris::util::cli::Args;
 use tetris::util::rng::Pcg64;
@@ -24,14 +23,21 @@ fn main() {
         let mut t = Table::new(&["load (req/s)", "p50 ratio", "p99 ratio"]);
         for load in [0.5, 1.5, 2.5, 3.5] {
             let trace = scale_rate(&base, load);
-            let run = |policy: Policy| {
-                let mut b = SimBuilder::paper_8b(policy);
-                b.controller = ImprovementController::new(
-                    RateProfile::default_trend(4.0), 30.0, 30.0);
-                b.run(&trace).ttft_summary()
+            let run = |policy: &str| {
+                Tetris::paper_8b()
+                    .policy(policy)
+                    .controller(ImprovementController::new(
+                        RateProfile::default_trend(4.0),
+                        30.0,
+                        30.0,
+                    ))
+                    .build_simulation()
+                    .expect("valid configuration")
+                    .run(&trace)
+                    .ttft_summary()
             };
-            let cdsp = run(Policy::Cdsp);
-            let single = run(Policy::CdspSingleChunk);
+            let cdsp = run("tetris-cdsp");
+            let single = run("tetris-single-chunk");
             t.row(vec![
                 format!("{load:.1}"),
                 format!("{:.2}x", single.p50 / cdsp.p50),

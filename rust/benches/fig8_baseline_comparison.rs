@@ -6,13 +6,16 @@
 //! Expected shape: Fixed-SP16 degrades first (over-provision), LoongServe's
 //! ESP decode shows elevated TBT P50, Tetris sustains the highest load.
 
-use tetris::config::Policy;
+use tetris::api::{Tetris, TetrisBuilder};
 use tetris::sched::{ImprovementController, RateProfile};
-use tetris::sim::SimBuilder;
 use tetris::util::bench::{fmt_secs, Table};
 use tetris::util::cli::Args;
 use tetris::util::rng::Pcg64;
 use tetris::workload::{scale_rate, TraceKind, WorkloadGen};
+
+fn builder_for(model: &str) -> TetrisBuilder {
+    if model == "70b" { Tetris::paper_70b() } else { Tetris::paper_8b() }
+}
 
 fn main() {
     let args = Args::from_env(&[]);
@@ -24,11 +27,11 @@ fn main() {
         vec![0.5, 1.0, 2.0, 3.0]
     };
     let policies = [
-        Policy::Cdsp,
-        Policy::LoongServe,
-        Policy::LoongServeDisagg,
-        Policy::FixedSp(8),
-        Policy::FixedSp(16),
+        "tetris-cdsp",
+        "loongserve",
+        "loongserve-disagg",
+        "fixed-sp8",
+        "fixed-sp16",
     ];
     for kind in [TraceKind::Short, TraceKind::Medium, TraceKind::Long] {
         println!("\n=== Fig. 8 [{} trace, {}]===", kind.name(), model);
@@ -40,18 +43,27 @@ fn main() {
         ]);
         for policy in policies {
             for &rate in &rates {
-                let mut b = if model == "70b" {
-                    SimBuilder::paper_70b(policy)
-                } else {
-                    SimBuilder::paper_8b(policy)
+                let sim = builder_for(&model)
+                    .policy(policy)
+                    .controller(ImprovementController::new(
+                        RateProfile::default_trend(4.0),
+                        30.0,
+                        30.0,
+                    ))
+                    .build_simulation();
+                let mut sim = match sim {
+                    Ok(s) => s,
+                    Err(e) => {
+                        // e.g. fixed-sp16 on the 8-instance 70B cluster
+                        eprintln!("skipping {policy}: {e:#}");
+                        break;
+                    }
                 };
-                b.controller = ImprovementController::new(
-                    RateProfile::default_trend(4.0), 30.0, 30.0);
-                let m = b.run(&scale_rate(&base, rate));
+                let m = sim.run(&scale_rate(&base, rate));
                 let ttft = m.ttft_summary();
                 let tbt = m.tbt_summary();
                 t.row(vec![
-                    policy.name(),
+                    policy.to_string(),
                     format!("{rate:.1}"),
                     fmt_secs(ttft.p50),
                     fmt_secs(ttft.p99),

@@ -3,9 +3,8 @@
 //! Paper: Tetris achieves 1.64-2.78x lower P50 and 1.52-3.13x lower P99 on
 //! LLaMA3-8B (2.86-4.17x / 2.27-4.35x on 70B).
 
-use tetris::config::Policy;
+use tetris::api::Tetris;
 use tetris::sched::{ImprovementController, RateProfile};
-use tetris::sim::SimBuilder;
 use tetris::util::bench::{fmt_secs, Table};
 use tetris::util::cli::Args;
 use tetris::util::rng::Pcg64;
@@ -23,16 +22,17 @@ fn main() {
         println!("\n=== Fig. 9 [{} trace @ {:.1} req/s]===", kind.name(), critical);
         let mut t = Table::new(&["policy", "p50", "p99", "CDF (12.5%..100% octiles)"]);
         let mut ratios: Vec<(String, f64, f64)> = Vec::new();
-        for policy in [
-            Policy::Cdsp,
-            Policy::LoongServeDisagg,
-            Policy::FixedSp(8),
-            Policy::FixedSp(16),
-        ] {
-            let mut b = SimBuilder::paper_8b(policy);
-            b.controller = ImprovementController::new(
-                RateProfile::default_trend(4.0), 30.0, 30.0);
-            let m = b.run(&trace);
+        for policy in ["tetris-cdsp", "loongserve-disagg", "fixed-sp8", "fixed-sp16"] {
+            let m = Tetris::paper_8b()
+                .policy(policy)
+                .controller(ImprovementController::new(
+                    RateProfile::default_trend(4.0),
+                    30.0,
+                    30.0,
+                ))
+                .build_simulation()
+                .expect("valid configuration")
+                .run(&trace);
             let s = m.ttft_summary();
             let mut ttfts = m.ttfts();
             ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -42,8 +42,13 @@ fn main() {
                     fmt_secs(tetris::util::stats::percentile_sorted(&ttfts, q))
                 })
                 .collect();
-            t.row(vec![policy.name(), fmt_secs(s.p50), fmt_secs(s.p99), octiles.join(" ")]);
-            ratios.push((policy.name(), s.p50, s.p99));
+            t.row(vec![
+                policy.to_string(),
+                fmt_secs(s.p50),
+                fmt_secs(s.p99),
+                octiles.join(" "),
+            ]);
+            ratios.push((policy.to_string(), s.p50, s.p99));
         }
         t.print();
         let (p50c, p99c) = (ratios[0].1, ratios[0].2);

@@ -5,10 +5,9 @@
 //!
 //! Run: `cargo run --release --example capacity_sweep -- --trace medium --n 120`
 
-use tetris::config::Policy;
+use tetris::api::{Tetris, PAPER_POLICIES};
 use tetris::metrics::{max_sustainable_rate, SloCriterion};
 use tetris::sched::{ImprovementController, RateProfile};
-use tetris::sim::SimBuilder;
 use tetris::util::bench::{fmt_secs, Table};
 use tetris::util::cli::Args;
 use tetris::util::rng::Pcg64;
@@ -22,16 +21,22 @@ fn main() {
     let mut rng = Pcg64::new(args.u64_or("seed", 42));
     let base = gen.generate(n, 1.0, &mut rng);
 
-    let run = |policy: Policy, rate: f64| {
-        let mut b = SimBuilder::paper_8b(policy);
-        b.controller =
-            ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
-        b.run(&scale_rate(&base, rate))
+    let run = |policy: &str, rate: f64| {
+        Tetris::paper_8b()
+            .policy(policy)
+            .controller(ImprovementController::new(
+                RateProfile::default_trend(4.0),
+                30.0,
+                30.0,
+            ))
+            .build_simulation()
+            .expect("valid configuration")
+            .run(&scale_rate(&base, rate))
     };
 
     // Light-load reference from the best baseline (paper normalizes all
     // systems to the same 25x light-load threshold).
-    let light = run(Policy::FixedSp(8), 0.05).ttft_summary().mean;
+    let light = run("fixed-sp8", 0.05).ttft_summary().mean;
     let slo = SloCriterion { light_load: light, factor: 25.0 };
     println!(
         "light-load P99 TTFT = {} -> sustainable threshold {}",
@@ -42,26 +47,19 @@ fn main() {
     let rates: Vec<f64> = (1..=16).map(|i| i as f64 * 0.5).collect();
     let mut table = Table::new(&["policy", "max sustainable rate (req/s)", "vs fixed-sp8"]);
     let mut results = Vec::new();
-    for policy in [
-        Policy::Cdsp,
-        Policy::CdspSingleChunk,
-        Policy::LoongServe,
-        Policy::LoongServeDisagg,
-        Policy::FixedSp(8),
-        Policy::FixedSp(16),
-    ] {
+    for policy in PAPER_POLICIES {
         let cap = max_sustainable_rate(&rates, &slo, |r| run(policy, r).ttft_summary().p99)
             .unwrap_or(0.0);
         results.push((policy, cap));
     }
     let baseline = results
         .iter()
-        .find(|(p, _)| *p == Policy::FixedSp(8))
+        .find(|(p, _)| *p == "fixed-sp8")
         .map(|(_, c)| *c)
         .unwrap_or(1.0);
     for (policy, cap) in &results {
         table.row(vec![
-            policy.name(),
+            policy.to_string(),
             format!("{cap:.2}"),
             format!("{:+.0}%", 100.0 * (cap / baseline - 1.0)),
         ]);

@@ -3,18 +3,18 @@
 //! 1. Calibrate the Eq. (1) latency model from the paper's Table 1.
 //! 2. Build a CDSP plan for a long request on a fragmented cluster — watch
 //!    it fill the idle gap with an early small-SP chunk (the tetris move).
-//! 3. Run a small simulated serving campaign and print TTFT percentiles.
+//! 3. Run a small simulated serving campaign through `tetris::api` and
+//!    print TTFT percentiles.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use tetris::api::Tetris;
 use tetris::cluster::PoolView;
-use tetris::config::{Policy, SchedConfig};
+use tetris::config::SchedConfig;
 use tetris::latency::calibration::table1_model;
 use tetris::sched::CdspScheduler;
-use tetris::sim::SimBuilder;
 use tetris::util::bench::fmt_secs;
-use tetris::util::rng::Pcg64;
-use tetris::workload::{TraceKind, WorkloadGen};
+use tetris::workload::TraceKind;
 
 fn main() {
     // 1. The latency model the scheduler plans with.
@@ -38,11 +38,13 @@ fn main() {
     }
     println!("  estimated TTFT: {}", fmt_secs(plan.est_ttft));
 
-    // 3. A small simulated campaign.
-    let gen = WorkloadGen::paper_trace(TraceKind::Medium);
-    let mut rng = Pcg64::new(7);
-    let trace = gen.generate(40, 1.5, &mut rng);
-    let m = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+    // 3. A small simulated campaign through the api facade.
+    let mut sim = Tetris::paper_8b()
+        .policy("tetris-cdsp")
+        .seed(7)
+        .build_simulation()
+        .expect("valid configuration");
+    let m = sim.run_generated(TraceKind::Medium, 40, 1.5);
     let s = m.ttft_summary();
     println!("\nSimulated 40 requests @1.5 req/s on the paper's 8B cluster:");
     println!("  TTFT p50={} p99={}  throughput {:.0} tok/s",

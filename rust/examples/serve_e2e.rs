@@ -1,18 +1,21 @@
 //! End-to-end driver (the harness-mandated E2E validation): load the real
-//! tiny model compiled from JAX/Pallas, serve batched requests through the
-//! full Tetris stack — CDSP dispatcher → prefill worker threads (barrier-
-//! synchronized instance groups) → KV handoff → continuous-batching decode —
-//! and report latency/throughput. Results are recorded in EXPERIMENTS.md.
+//! tiny model compiled from JAX/Pallas (or the deterministic stub when no
+//! artifacts are present), serve batched requests through the full Tetris
+//! stack — CDSP dispatcher → prefill worker threads (barrier-synchronized
+//! instance groups) → KV handoff → continuous-batching decode — and report
+//! latency/throughput. Results are recorded in EXPERIMENTS.md.
 //!
-//! Requires `make artifacts`. Run:
-//!   cargo run --release --example serve_e2e [-- --requests 12 --workers 4]
+//! The whole stack is constructed through `tetris::api`, with a
+//! `TraceRecorder` observer exporting the request lifecycle.
+//!
+//! Run: cargo run --release --example serve_e2e [-- --requests 12 --workers 4]
 
 use std::sync::Arc;
-use tetris::config::SchedConfig;
+use tetris::api::{Tetris, TraceRecorder};
 use tetris::latency::a100_model_for;
 use tetris::modelcfg::ModelArch;
 use tetris::runtime::{artifacts_dir, Engine};
-use tetris::serve::{ServeRequest, Server};
+use tetris::serve::ServeRequest;
 use tetris::util::bench::{fmt_secs, Table};
 use tetris::util::cli::Args;
 use tetris::util::rng::Pcg64;
@@ -24,19 +27,31 @@ fn main() -> anyhow::Result<()> {
     let out_len = args.usize_or("output-len", 6);
 
     println!("loading artifacts from {:?} ...", artifacts_dir());
-    let engine = Arc::new(Engine::load(&artifacts_dir())?);
+    let engine = match Engine::load(&artifacts_dir()) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            println!("artifacts unavailable ({e:#}); using the stub engine");
+            Arc::new(Engine::stub_default())
+        }
+    };
     let a = engine.arch.clone();
     println!(
-        "tiny-llama: {} layers, d_model {}, {} heads, vocab {} (buckets: L={}, C={})",
-        a.n_layers, a.d_model, a.n_heads, a.vocab, a.l_bucket, a.c_bucket
+        "tiny-llama: {} layers, d_model {}, {} heads, vocab {} (buckets: L={}, C={}){}",
+        a.n_layers, a.d_model, a.n_heads, a.vocab, a.l_bucket, a.c_bucket,
+        if engine.is_stub() { " [stub]" } else { "" }
     );
 
     // Scheduler model with SP shape so CDSP paths are exercised (DESIGN §3).
-    let sched_model = a100_model_for(&ModelArch::llama3_8b(), 1, &[1, 2, 4]);
-    let mut cfg = SchedConfig::default();
-    cfg.sp_candidates = vec![1, 2, 4];
-    cfg.min_chunk = 32;
-    let mut server = Server::start(Arc::clone(&engine), workers, sched_model, cfg)?;
+    let sp: Vec<usize> = [1usize, 2, 4].into_iter().filter(|&s| s <= workers).collect();
+    let sched_model = a100_model_for(&ModelArch::llama3_8b(), 1, &sp);
+    let recorder = Arc::new(TraceRecorder::new());
+    let mut server = Tetris::builder()
+        .policy("tetris-cdsp")
+        .sp_candidates(sp)
+        .min_chunk(32)
+        .prefill_model(sched_model)
+        .observe(recorder.clone())
+        .build_server(Arc::clone(&engine), workers)?;
 
     // A mixed-length batch: short chats + long documents (scaled to the
     // tiny model's cache bucket).
@@ -88,6 +103,13 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(tbt.p50),
         fmt_secs(tbt.p99),
         m.token_throughput()
+    );
+    println!(
+        "observer: {} plans, {} prefill completions, {} KV handoffs, {} decode tokens",
+        recorder.count("plan"),
+        recorder.count("prefill_done"),
+        recorder.count("transfer"),
+        recorder.count("token"),
     );
     server.shutdown()?;
     Ok(())

@@ -1,12 +1,11 @@
 //! Trace replay: generate (or load) a paper-shaped production trace, replay
-//! it through the simulator under every policy, and print the Fig. 8-style
-//! comparison row plus per-policy TTFT CDFs (Fig. 9 shape).
+//! it through the simulator under every registered policy, and print the
+//! Fig. 8-style comparison row plus per-policy TTFT CDFs (Fig. 9 shape).
 //!
 //! Run: `cargo run --release --example trace_replay -- --trace long --rate 2.0 --n 150`
 
-use tetris::config::Policy;
+use tetris::api::{Tetris, PAPER_POLICIES};
 use tetris::sched::{ImprovementController, RateProfile};
-use tetris::sim::SimBuilder;
 use tetris::util::bench::{fmt_secs, Table};
 use tetris::util::cli::Args;
 use tetris::util::json::Json;
@@ -41,27 +40,25 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(&["policy", "ttft p50", "ttft p99", "tbt p50", "tok/s"]);
     let mut cdfs = Vec::new();
-    for policy in [
-        Policy::Cdsp,
-        Policy::CdspSingleChunk,
-        Policy::LoongServe,
-        Policy::LoongServeDisagg,
-        Policy::FixedSp(8),
-        Policy::FixedSp(16),
-    ] {
-        let mut b = SimBuilder::paper_8b(policy);
-        b.controller =
-            ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
-        let m = b.run(&trace);
+    for policy in PAPER_POLICIES {
+        let mut sim = Tetris::paper_8b()
+            .policy(policy)
+            .controller(ImprovementController::new(
+                RateProfile::default_trend(4.0),
+                30.0,
+                30.0,
+            ))
+            .build_simulation()?;
+        let m = sim.run(&trace);
         let ttft = m.ttft_summary();
         table.row(vec![
-            policy.name(),
+            policy.to_string(),
             fmt_secs(ttft.p50),
             fmt_secs(ttft.p99),
             fmt_secs(m.tbt_summary().p50),
             format!("{:.0}", m.token_throughput()),
         ]);
-        cdfs.push((policy.name(), m.ttft_cdf(8)));
+        cdfs.push((policy, m.ttft_cdf(8)));
     }
     table.print();
 

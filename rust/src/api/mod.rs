@@ -1,0 +1,471 @@
+//! The single public entry point to Tetris: one validated, typed builder
+//! that produces either a calibrated cluster [`Simulation`] or a live
+//! [`Server`] from the same configuration, with policies resolved by name
+//! through a pluggable [`PolicyRegistry`] and run events exported through
+//! [`Observer`] hooks.
+//!
+//! ```text
+//! Tetris::builder()                         // paper 8B defaults
+//!     .policy("tetris-cdsp")                // any registered name
+//!     .controller(...)                      // improvement-rate control
+//!     .seed(42)
+//!     .build_simulation()?                  // or .build_server(engine, n)
+//! ```
+//!
+//! # Registering a custom policy
+//!
+//! Any type implementing [`PrefillScheduler`](crate::baselines::PrefillScheduler)
+//! — in this crate or out of it — becomes a first-class policy with one
+//! registration:
+//!
+//! ```
+//! use tetris::api::Tetris;
+//! use tetris::baselines::PrefillScheduler;
+//! use tetris::cluster::PoolView;
+//! use tetris::sched::plan::{CdspPlan, ChunkPlan};
+//! use tetris::workload::TraceKind;
+//!
+//! /// A deliberately naive policy: always one chunk on the single
+//! /// shortest-queued instance.
+//! struct GreedySp1;
+//!
+//! impl PrefillScheduler for GreedySp1 {
+//!     fn schedule(&self, prompt_len: usize, pool: &PoolView, _rate: f64) -> Option<CdspPlan> {
+//!         let group = pool.get_group(&[], 1)?;
+//!         let est = pool.group_ready(&group).max(1e-9);
+//!         Some(CdspPlan { chunks: vec![ChunkPlan { len: prompt_len, group }], est_ttft: est })
+//!     }
+//!     fn name(&self) -> String {
+//!         "greedy-sp1".into()
+//!     }
+//! }
+//!
+//! let mut sim = Tetris::paper_8b()
+//!     .register_policy("greedy-sp1", |_ctx| Ok(Box::new(GreedySp1)))
+//!     .policy("greedy-sp1")
+//!     .seed(7)
+//!     .build_simulation()
+//!     .unwrap();
+//! let trace = sim.generate(TraceKind::Short, 5, 0.5);
+//! let metrics = sim.run(&trace);
+//! assert_eq!(metrics.requests.len(), 5);
+//! ```
+
+pub mod observer;
+pub mod registry;
+
+pub use observer::{Observer, TraceEvent, TraceRecorder};
+pub use registry::{PolicyCtx, PolicyFactory, PolicyRegistry, PolicySpec};
+
+use crate::baselines::PrefillScheduler;
+use crate::cluster::DispatchClock;
+use crate::config::{ClusterConfig, Config, SchedConfig};
+use crate::latency::{a100_model_for, DecodeModel, PrefillModel, TransferModel};
+use crate::metrics::RunMetrics;
+use crate::modelcfg::ModelArch;
+use crate::runtime::Engine;
+use crate::sched::ImprovementController;
+use crate::serve::Server;
+use crate::sim::{SimParams, Simulator};
+use crate::util::rng::Pcg64;
+use crate::workload::{Request, TraceKind, WorkloadGen};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// The paper's Fig. 8 comparison set, by registered name — one list shared
+/// by the CLI `compare` command and the examples, so adding a policy is a
+/// single edit.
+pub const PAPER_POLICIES: [&str; 6] = [
+    "tetris-cdsp",
+    "tetris-single-chunk",
+    "loongserve",
+    "loongserve-disagg",
+    "fixed-sp8",
+    "fixed-sp16",
+];
+
+/// Namespace for the builder constructors.
+pub struct Tetris;
+
+impl Tetris {
+    /// A builder preconfigured with the paper's LLaMA3-8B testbed
+    /// (4 nodes × 8 A100, P/D 1:1, TP 1/8). Same as [`Tetris::paper_8b`].
+    pub fn builder() -> TetrisBuilder {
+        Self::paper_8b()
+    }
+
+    /// The paper's LLaMA3-8B cluster defaults.
+    pub fn paper_8b() -> TetrisBuilder {
+        TetrisBuilder::from_parts(
+            ModelArch::llama3_8b(),
+            ClusterConfig::paper_8b(),
+            SchedConfig::default(),
+        )
+    }
+
+    /// The paper's LLaMA3-70B cluster defaults (8 nodes × 8 A100, TP 4/4).
+    pub fn paper_70b() -> TetrisBuilder {
+        let cfg = Config::paper_70b();
+        TetrisBuilder::from_parts(ModelArch::llama3_70b(), cfg.cluster, cfg.sched)
+    }
+
+    /// Build from a (possibly file-loaded) [`Config`]: model resolved by
+    /// name, policy carried over.
+    pub fn from_config(cfg: &Config) -> Result<TetrisBuilder> {
+        let arch = ModelArch::by_name(&cfg.model)
+            .ok_or_else(|| anyhow!("unknown model '{}' in config", cfg.model))?;
+        Ok(TetrisBuilder::from_parts(arch, cfg.cluster.clone(), cfg.sched.clone())
+            .policy(&cfg.policy.name())
+            .seed(cfg.seed))
+    }
+}
+
+/// The typed builder behind [`Tetris`]. Clone-able: fork one base
+/// configuration into many variants (the profiler does exactly that).
+#[derive(Clone)]
+pub struct TetrisBuilder {
+    arch: ModelArch,
+    cluster: ClusterConfig,
+    sched: SchedConfig,
+    policy: String,
+    controller: ImprovementController,
+    seed: u64,
+    registry: PolicyRegistry,
+    observers: Vec<Arc<dyn Observer>>,
+    prefill_model: Option<PrefillModel>,
+    sim_params: Option<SimParams>,
+}
+
+impl TetrisBuilder {
+    fn from_parts(arch: ModelArch, cluster: ClusterConfig, sched: SchedConfig) -> Self {
+        TetrisBuilder {
+            arch,
+            cluster,
+            sched,
+            policy: "tetris-cdsp".into(),
+            controller: ImprovementController::fixed(0.3),
+            seed: 42,
+            registry: PolicyRegistry::with_builtins(),
+            observers: Vec::new(),
+            prefill_model: None,
+            sim_params: None,
+        }
+    }
+
+    /// Model architecture (drives FLOPs/bytes in every latency model).
+    pub fn arch(mut self, arch: ModelArch) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    /// Cluster topology (nodes, GPUs, P/D split, TP sizes, links).
+    pub fn cluster(mut self, cluster: ClusterConfig) -> Self {
+        self.cluster = cluster;
+        self
+    }
+
+    /// Scheduler knobs, wholesale.
+    pub fn sched(mut self, sched: SchedConfig) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// SP size candidates (paper: powers of two).
+    pub fn sp_candidates(mut self, candidates: Vec<usize>) -> Self {
+        self.sched.sp_candidates = candidates;
+        self
+    }
+
+    /// Minimum legal CDSP chunk length in tokens.
+    pub fn min_chunk(mut self, tokens: usize) -> Self {
+        self.sched.min_chunk = tokens;
+        self
+    }
+
+    /// Scheduling policy, by registered name (see [`PolicyRegistry`]).
+    pub fn policy(mut self, name: &str) -> Self {
+        self.policy = name.to_string();
+        self
+    }
+
+    /// Improvement-rate controller (fixed or profile-driven).
+    pub fn controller(mut self, controller: ImprovementController) -> Self {
+        self.controller = controller;
+        self
+    }
+
+    /// Seed for [`Simulation::generate`] workload synthesis.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Register a custom policy on this builder's registry and keep
+    /// chaining. See the module docs for a full out-of-crate example.
+    pub fn register_policy(
+        mut self,
+        name: &str,
+        factory: impl Fn(&PolicyCtx) -> Result<Box<dyn PrefillScheduler>> + Send + Sync + 'static,
+    ) -> Self {
+        self.registry.register(name, factory);
+        self
+    }
+
+    /// Register a full [`PolicySpec`] (factory + `esp_decode` metadata).
+    pub fn register_policy_spec(mut self, name: &str, spec: PolicySpec) -> Self {
+        self.registry.register_spec(name, spec);
+        self
+    }
+
+    /// Replace the whole registry (e.g. a curated baseline set).
+    pub fn registry(mut self, registry: PolicyRegistry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    /// Attach an observer; both build targets emit to it.
+    pub fn observe(mut self, observer: Arc<dyn Observer>) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// Override the Eq. (1) prefill model the scheduler plans with
+    /// (default: the A100 calibration for `arch`/`sp_candidates`).
+    pub fn prefill_model(mut self, model: PrefillModel) -> Self {
+        self.prefill_model = Some(model);
+        self
+    }
+
+    /// Override simulator capacity parameters (default: derived from the
+    /// architecture and cluster memory).
+    pub fn sim_params(mut self, params: SimParams) -> Self {
+        self.sim_params = Some(params);
+        self
+    }
+
+    /// Read access for tooling (the CLI prints these).
+    pub fn policy_name(&self) -> &str {
+        &self.policy
+    }
+
+    pub fn registry_ref(&self) -> &PolicyRegistry {
+        &self.registry
+    }
+
+    fn validate_common(&self) -> Result<()> {
+        if self.sched.sp_candidates.is_empty() {
+            bail!("sp_candidates must not be empty");
+        }
+        if self.sched.sp_candidates.iter().any(|&s| s == 0) {
+            bail!("sp_candidates must all be >= 1 (got {:?})", self.sched.sp_candidates);
+        }
+        if self.sched.min_chunk == 0 {
+            bail!("min_chunk must be >= 1");
+        }
+        if self.sched.max_chunks == 0 {
+            bail!("max_chunks must be >= 1");
+        }
+        // Resolve early so a typo'd policy name fails at build time with
+        // the full list of known names, not at the first schedule() call.
+        self.registry.spec(&self.policy)?;
+        Ok(())
+    }
+
+    fn resolved_model(&self, sp_candidates: &[usize]) -> PrefillModel {
+        self.prefill_model
+            .clone()
+            .unwrap_or_else(|| a100_model_for(&self.arch, self.cluster.prefill_tp, sp_candidates))
+    }
+
+    /// Probe the resolved policy against an idle pool of the target shape:
+    /// a policy that can never produce a plan there (e.g. `fixed-sp32` on a
+    /// 16-instance cluster) must fail at build time with a descriptive
+    /// error, not panic mid-run on the first arrival.
+    fn probe_schedulable(
+        &self,
+        scheduler: &dyn PrefillScheduler,
+        clock: &DispatchClock,
+    ) -> Result<()> {
+        let pool = clock.pool_view(0.0);
+        let probe_len = self.sched.min_chunk.max(1024);
+        if scheduler.schedule(probe_len, &pool, self.sched.improvement_rate).is_none() {
+            bail!(
+                "policy '{}' cannot schedule on this pool ({} prefill instances); \
+                 check its SP requirements against the cluster/worker count",
+                self.policy,
+                pool.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Validate the configuration and build the discrete-event cluster
+    /// [`Simulation`].
+    pub fn build_simulation(&self) -> Result<Simulation> {
+        self.validate_common()?;
+        let n_inst = self.cluster.n_prefill_instances();
+        if n_inst == 0 {
+            bail!(
+                "cluster yields zero prefill instances \
+                 ({} GPUs x {:.2} prefill fraction at TP={})",
+                self.cluster.total_gpus(),
+                self.cluster.prefill_fraction,
+                self.cluster.prefill_tp
+            );
+        }
+        if let Some(&bad) = self.sched.sp_candidates.iter().find(|&&s| s > n_inst) {
+            bail!(
+                "sp candidate {bad} exceeds the {n_inst} prefill instances of the cluster; \
+                 shrink sp_candidates or grow the cluster"
+            );
+        }
+        let model = self.resolved_model(&self.sched.sp_candidates);
+        let ctx = PolicyCtx { model: model.clone(), sched: self.sched.clone() };
+        let spec = self.registry.spec(&self.policy)?;
+        let scheduler = (spec.factory)(&ctx)?;
+        self.probe_schedulable(
+            scheduler.as_ref(),
+            &DispatchClock::grid(n_inst, self.cluster.prefill_instances_per_node()),
+        )?;
+        let params = self
+            .sim_params
+            .clone()
+            .unwrap_or_else(|| SimParams::for_arch(&self.arch, &self.cluster));
+        let sim = Simulator {
+            arch: self.arch.clone(),
+            cluster: self.cluster.clone(),
+            params,
+            scheduler,
+            controller: self.controller.clone(),
+            decode_model: DecodeModel::a100(&self.arch),
+            transfer_model: TransferModel::from_cluster(&self.cluster),
+            prefill_model: model,
+            esp_decode: spec.esp_decode,
+            observers: self.observers.clone(),
+        };
+        Ok(Simulation { sim, seed: self.seed })
+    }
+
+    /// Validate the configuration and start the live threaded [`Server`]
+    /// over `engine` with `n_prefill` prefill workers.
+    ///
+    /// Unlike the legacy `Server::start`, this never silently shrinks
+    /// `sp_candidates`: a candidate larger than the worker pool is a
+    /// configuration error and is reported as such.
+    pub fn build_server(&self, engine: Arc<Engine>, n_prefill: usize) -> Result<Server> {
+        self.validate_common()?;
+        if n_prefill == 0 {
+            bail!("the live server needs at least one prefill worker");
+        }
+        if let Some(&bad) = self.sched.sp_candidates.iter().find(|&&s| s > n_prefill) {
+            bail!(
+                "sp candidate {bad} exceeds the {n_prefill} prefill workers; \
+                 drop it from sp_candidates or start more workers"
+            );
+        }
+        let model = self.resolved_model(&self.sched.sp_candidates);
+        let ctx = PolicyCtx { model, sched: self.sched.clone() };
+        let scheduler = self.registry.resolve(&self.policy, &ctx)?;
+        self.probe_schedulable(scheduler.as_ref(), &DispatchClock::single_node(n_prefill))?;
+        Server::start(
+            engine,
+            n_prefill,
+            scheduler,
+            self.controller.clone(),
+            self.observers.clone(),
+        )
+    }
+}
+
+/// A ready-to-run simulation: the configured [`Simulator`] plus the
+/// builder's workload seed.
+pub struct Simulation {
+    sim: Simulator,
+    seed: u64,
+}
+
+impl Simulation {
+    /// Run a trace to completion and collect metrics.
+    pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
+        self.sim.run(trace)
+    }
+
+    /// Synthesize a paper-shaped trace from the builder's seed: `n`
+    /// requests, Poisson(`rate`) arrivals.
+    pub fn generate(&self, kind: TraceKind, n: usize, rate: f64) -> Vec<Request> {
+        let gen = WorkloadGen::paper_trace(kind);
+        let mut rng = Pcg64::new(self.seed);
+        gen.generate(n, rate, &mut rng)
+    }
+
+    /// Convenience: generate a trace and run it.
+    pub fn run_generated(&mut self, kind: TraceKind, n: usize, rate: f64) -> RunMetrics {
+        let trace = self.generate(kind, n, rate);
+        self.run(&trace)
+    }
+
+    /// The resolved policy's self-reported name.
+    pub fn scheduler_name(&self) -> String {
+        self.sim.scheduler.name()
+    }
+
+    /// Escape hatch to the underlying simulator.
+    pub fn simulator_mut(&mut self) -> &mut Simulator {
+        &mut self.sim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_build() {
+        let mut sim = Tetris::builder().build_simulation().unwrap();
+        assert_eq!(sim.scheduler_name(), "tetris-cdsp");
+        let m = sim.run_generated(TraceKind::Medium, 10, 0.5);
+        assert_eq!(m.requests.len(), 10);
+    }
+
+    #[test]
+    fn unknown_policy_fails_at_build() {
+        let err = Tetris::builder().policy("nope").build_simulation().unwrap_err();
+        assert!(err.to_string().contains("unknown policy 'nope'"), "{err}");
+    }
+
+    #[test]
+    fn sp_candidate_too_large_for_cluster() {
+        // paper_8b has 16 prefill instances; 64 must be rejected.
+        let err = Tetris::paper_8b()
+            .sp_candidates(vec![1, 64])
+            .build_simulation()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("sp candidate 64"), "{msg}");
+        assert!(msg.contains("16 prefill instances"), "{msg}");
+    }
+
+    #[test]
+    fn empty_and_zero_candidates_rejected() {
+        assert!(Tetris::builder().sp_candidates(vec![]).build_simulation().is_err());
+        assert!(Tetris::builder().sp_candidates(vec![0, 1]).build_simulation().is_err());
+    }
+
+    #[test]
+    fn from_config_roundtrip() {
+        let cfg = Config::paper_70b();
+        let mut sim = Tetris::from_config(&cfg).unwrap().build_simulation().unwrap();
+        let m = sim.run_generated(TraceKind::Medium, 8, 0.3);
+        assert_eq!(m.requests.len(), 8);
+    }
+
+    #[test]
+    fn generate_is_seed_deterministic() {
+        let sim_a = Tetris::builder().seed(9).build_simulation().unwrap();
+        let sim_b = Tetris::builder().seed(9).build_simulation().unwrap();
+        assert_eq!(
+            sim_a.generate(TraceKind::Long, 12, 1.0),
+            sim_b.generate(TraceKind::Long, 12, 1.0)
+        );
+    }
+}

@@ -1,0 +1,181 @@
+//! Run observability: event hooks emitted by both the simulator and the
+//! live server, replacing ad-hoc metrics plumbing.
+//!
+//! An [`Observer`] sees the request lifecycle at its four paper-relevant
+//! transitions: plan committed, prefill finished (TTFT), KV shard
+//! transferred, token decoded. [`TraceRecorder`] is the batteries-included
+//! implementation: it collects the events and exports them as JSON for
+//! offline analysis.
+
+use crate::sched::plan::CdspPlan;
+use crate::util::json::Json;
+use std::sync::Mutex;
+
+/// Event hooks over one run. All methods default to no-ops so observers
+/// implement only what they care about. Timestamps are seconds relative to
+/// the run start (simulated time in the simulator, wall-clock in the live
+/// server). Implementations must be `Send + Sync`: the live server calls
+/// them from its worker threads.
+pub trait Observer: Send + Sync {
+    /// A CDSP plan was committed for request `req` at time `now`.
+    fn on_plan(&self, req: u64, plan: &CdspPlan, now: f64) {
+        let _ = (req, plan, now);
+    }
+
+    /// Request `req` finished prefill (its first token exists) at `now`.
+    fn on_prefill_done(&self, req: u64, now: f64) {
+        let _ = (req, now);
+    }
+
+    /// One KV shard of request `req` landed on transfer backend `backend`.
+    fn on_transfer(&self, req: u64, backend: usize, now: f64) {
+        let _ = (req, backend, now);
+    }
+
+    /// Request `req` emitted one decode token at `now`.
+    fn on_token(&self, req: u64, now: f64) {
+        let _ = (req, now);
+    }
+}
+
+/// One recorded lifecycle event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    Plan { req: u64, n_chunks: usize, max_sp: usize, at: f64 },
+    PrefillDone { req: u64, at: f64 },
+    Transfer { req: u64, backend: usize, at: f64 },
+    Token { req: u64, at: f64 },
+}
+
+impl TraceEvent {
+    pub fn at(&self) -> f64 {
+        match self {
+            TraceEvent::Plan { at, .. }
+            | TraceEvent::PrefillDone { at, .. }
+            | TraceEvent::Transfer { at, .. }
+            | TraceEvent::Token { at, .. } => *at,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Plan { .. } => "plan",
+            TraceEvent::PrefillDone { .. } => "prefill_done",
+            TraceEvent::Transfer { .. } => "transfer",
+            TraceEvent::Token { .. } => "token",
+        }
+    }
+
+    pub fn req(&self) -> u64 {
+        match self {
+            TraceEvent::Plan { req, .. }
+            | TraceEvent::PrefillDone { req, .. }
+            | TraceEvent::Transfer { req, .. }
+            | TraceEvent::Token { req, .. } => *req,
+        }
+    }
+}
+
+/// Collects every event of a run for trace export and analysis.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&self, e: TraceEvent) {
+        self.events.lock().unwrap().push(e);
+    }
+
+    /// Snapshot of all events recorded so far, in emission order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Number of recorded events of the given kind (`"plan"`,
+    /// `"prefill_done"`, `"transfer"`, `"token"`).
+    pub fn count(&self, kind: &str) -> usize {
+        self.events.lock().unwrap().iter().filter(|e| e.kind() == kind).count()
+    }
+
+    /// Export the trace as a JSON array for offline analysis.
+    pub fn to_json(&self) -> Json {
+        let mut arr = Json::arr();
+        for e in self.events.lock().unwrap().iter() {
+            let mut o = Json::obj()
+                .set("kind", e.kind())
+                .set("req", e.req())
+                .set("at", e.at());
+            match e {
+                TraceEvent::Plan { n_chunks, max_sp, .. } => {
+                    o = o.set("n_chunks", *n_chunks).set("max_sp", *max_sp);
+                }
+                TraceEvent::Transfer { backend, .. } => {
+                    o = o.set("backend", *backend);
+                }
+                _ => {}
+            }
+            arr.push(o);
+        }
+        arr
+    }
+}
+
+impl Observer for TraceRecorder {
+    fn on_plan(&self, req: u64, plan: &CdspPlan, now: f64) {
+        self.push(TraceEvent::Plan {
+            req,
+            n_chunks: plan.n_chunks(),
+            max_sp: plan.max_sp(),
+            at: now,
+        });
+    }
+
+    fn on_prefill_done(&self, req: u64, now: f64) {
+        self.push(TraceEvent::PrefillDone { req, at: now });
+    }
+
+    fn on_transfer(&self, req: u64, backend: usize, now: f64) {
+        self.push(TraceEvent::Transfer { req, backend, at: now });
+    }
+
+    fn on_token(&self, req: u64, now: f64) {
+        self.push(TraceEvent::Token { req, at: now });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::plan::ChunkPlan;
+
+    #[test]
+    fn recorder_counts_and_exports() {
+        let rec = TraceRecorder::new();
+        let plan = CdspPlan {
+            chunks: vec![ChunkPlan { len: 100, group: vec![0, 1] }],
+            est_ttft: 1.0,
+        };
+        rec.on_plan(3, &plan, 0.5);
+        rec.on_prefill_done(3, 1.5);
+        rec.on_transfer(3, 2, 1.6);
+        rec.on_token(3, 1.7);
+        rec.on_token(3, 1.8);
+        assert_eq!(rec.count("plan"), 1);
+        assert_eq!(rec.count("token"), 2);
+        let evs = rec.events();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(
+            evs[0],
+            TraceEvent::Plan { req: 3, n_chunks: 1, max_sp: 2, at: 0.5 }
+        );
+        assert!(evs.windows(2).all(|w| w[0].at() <= w[1].at()));
+        let json = rec.to_json().to_string();
+        assert!(json.contains("prefill_done"), "{json}");
+        assert!(json.contains("backend"), "{json}");
+    }
+}

@@ -1,0 +1,295 @@
+//! The pluggable policy registry: names → [`PrefillScheduler`] factories.
+//!
+//! Every entry point (CLI, benches, `compare`, the builder, the live
+//! server) resolves scheduling policies through one of these registries —
+//! there is no `Policy` enum dispatch anywhere else. A new policy is one
+//! [`PolicyRegistry::register`] call, whether it lives in this crate or in
+//! a downstream one.
+
+use crate::baselines::{FixedSpScheduler, LoongServeScheduler, PrefillScheduler};
+use crate::config::SchedConfig;
+use crate::latency::PrefillModel;
+use crate::sched::CdspScheduler;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Everything a policy factory may need to construct its scheduler: the
+/// calibrated Eq. (1) latency model and the scheduler knobs.
+#[derive(Clone, Debug)]
+pub struct PolicyCtx {
+    pub model: PrefillModel,
+    pub sched: SchedConfig,
+}
+
+/// A policy factory: build a scheduler instance from the context.
+pub type PolicyFactory =
+    Arc<dyn Fn(&PolicyCtx) -> Result<Box<dyn PrefillScheduler>> + Send + Sync>;
+
+/// A registered policy: its factory plus cluster-behaviour metadata the
+/// simulator needs (today: whether decode runs as ESP over small-TP
+/// instances, the LoongServe unified-pool behaviour).
+#[derive(Clone)]
+pub struct PolicySpec {
+    pub factory: PolicyFactory,
+    /// Decode runs as a ring over small-TP instances instead of one
+    /// large-TP instance (LoongServe's non-disaggregated deployment).
+    pub esp_decode: bool,
+}
+
+impl PolicySpec {
+    pub fn new(
+        factory: impl Fn(&PolicyCtx) -> Result<Box<dyn PrefillScheduler>> + Send + Sync + 'static,
+    ) -> Self {
+        PolicySpec { factory: Arc::new(factory), esp_decode: false }
+    }
+
+    /// Mark this policy as running ESP decode (shared-pool deployments).
+    pub fn esp_decode(mut self) -> Self {
+        self.esp_decode = true;
+        self
+    }
+}
+
+type FamilyParser = Arc<dyn Fn(&str) -> Option<PolicySpec> + Send + Sync>;
+
+/// Name → policy resolution: exact names, aliases, and parameterised
+/// families (e.g. `fixed-sp8`, `fixed-sp16`, … all served by one
+/// `fixed-spN` parser).
+#[derive(Clone)]
+pub struct PolicyRegistry {
+    exact: BTreeMap<String, PolicySpec>,
+    aliases: BTreeMap<String, String>,
+    families: Vec<(String, FamilyParser)>,
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+impl PolicyRegistry {
+    /// A registry with nothing in it.
+    pub fn empty() -> Self {
+        PolicyRegistry {
+            exact: BTreeMap::new(),
+            aliases: BTreeMap::new(),
+            families: Vec::new(),
+        }
+    }
+
+    /// The five papers' policies, under their canonical names:
+    ///
+    /// * `tetris-cdsp` (aliases: `cdsp`, `tetris`) — Algorithms 1–3;
+    /// * `tetris-single-chunk` (alias: `single-chunk`) — the Fig. 13
+    ///   chunking ablation;
+    /// * `loongserve` — ESP over a unified pool, ESP decode;
+    /// * `loongserve-disagg` — the same greedy policy, disaggregated;
+    /// * `fixed-spN` (family) — rigid SP groups of N.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register_spec(
+            "tetris-cdsp",
+            PolicySpec::new(|ctx| {
+                Ok(Box::new(CdspScheduler::new(ctx.model.clone(), ctx.sched.clone())))
+            }),
+        );
+        r.register_spec(
+            "tetris-single-chunk",
+            PolicySpec::new(|ctx| {
+                let mut s = CdspScheduler::new(ctx.model.clone(), ctx.sched.clone());
+                s.single_chunk_only = true;
+                Ok(Box::new(s))
+            }),
+        );
+        r.register_spec(
+            "loongserve",
+            PolicySpec::new(|ctx| {
+                Ok(Box::new(LoongServeScheduler::new(
+                    ctx.model.clone(),
+                    ctx.sched.sp_candidates.clone(),
+                    false,
+                )))
+            })
+            .esp_decode(),
+        );
+        r.register_spec(
+            "loongserve-disagg",
+            PolicySpec::new(|ctx| {
+                Ok(Box::new(LoongServeScheduler::new(
+                    ctx.model.clone(),
+                    ctx.sched.sp_candidates.clone(),
+                    true,
+                )))
+            }),
+        );
+        r.register_family("fixed-spN", |name| {
+            let k: usize = name.strip_prefix("fixed-sp")?.parse().ok()?;
+            if k == 0 {
+                return None;
+            }
+            Some(PolicySpec::new(move |ctx: &PolicyCtx| {
+                Ok(Box::new(FixedSpScheduler::new(ctx.model.clone(), k)))
+            }))
+        });
+        r.alias("cdsp", "tetris-cdsp");
+        r.alias("tetris", "tetris-cdsp");
+        r.alias("single-chunk", "tetris-single-chunk");
+        r
+    }
+
+    /// Register (or replace) a policy under `name`. The factory is handed a
+    /// [`PolicyCtx`] at build time.
+    pub fn register(
+        &mut self,
+        name: &str,
+        factory: impl Fn(&PolicyCtx) -> Result<Box<dyn PrefillScheduler>> + Send + Sync + 'static,
+    ) {
+        self.register_spec(name, PolicySpec::new(factory));
+    }
+
+    /// Register a full [`PolicySpec`] (factory + metadata).
+    pub fn register_spec(&mut self, name: &str, spec: PolicySpec) {
+        self.exact.insert(name.to_string(), spec);
+    }
+
+    /// Register a parameterised name family, e.g. `fixed-spN`. The parser
+    /// receives the full requested name and returns a spec when it matches.
+    pub fn register_family(
+        &mut self,
+        pattern: &str,
+        parse: impl Fn(&str) -> Option<PolicySpec> + Send + Sync + 'static,
+    ) {
+        self.families.push((pattern.to_string(), Arc::new(parse)));
+    }
+
+    /// Make `alias` resolve to `target` (which may itself be exact or a
+    /// family name).
+    pub fn alias(&mut self, alias: &str, target: &str) {
+        self.aliases.insert(alias.to_string(), target.to_string());
+    }
+
+    /// Canonical registered names (no aliases, no family patterns), sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.exact.keys().cloned().collect()
+    }
+
+    /// Family patterns, e.g. `["fixed-spN"]`.
+    pub fn family_patterns(&self) -> Vec<String> {
+        self.families.iter().map(|(p, _)| p.clone()).collect()
+    }
+
+    /// Whether `name` resolves (exact, alias, or family).
+    pub fn contains(&self, name: &str) -> bool {
+        self.spec(name).is_ok()
+    }
+
+    /// Look up the [`PolicySpec`] for `name`, following alias chains
+    /// (with a hop bound, so a cyclic alias is an error rather than
+    /// unbounded recursion).
+    pub fn spec(&self, name: &str) -> Result<PolicySpec> {
+        let mut key = name;
+        let mut hops = 0usize;
+        loop {
+            if let Some(s) = self.exact.get(key) {
+                return Ok(s.clone());
+            }
+            if let Some(target) = self.aliases.get(key) {
+                hops += 1;
+                if hops > self.aliases.len() {
+                    return Err(anyhow!("alias cycle detected resolving policy '{name}'"));
+                }
+                key = target;
+                continue;
+            }
+            for (_, parse) in &self.families {
+                if let Some(s) = parse(key) {
+                    return Ok(s);
+                }
+            }
+            let mut known = self.names();
+            known.extend(self.family_patterns());
+            return Err(anyhow!("unknown policy '{name}' (known: {})", known.join(", ")));
+        }
+    }
+
+    /// Build the scheduler registered under `name`.
+    pub fn resolve(&self, name: &str, ctx: &PolicyCtx) -> Result<Box<dyn PrefillScheduler>> {
+        (self.spec(name)?.factory)(ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::calibration::table1_model;
+
+    fn ctx() -> PolicyCtx {
+        PolicyCtx { model: table1_model(), sched: SchedConfig::default() }
+    }
+
+    #[test]
+    fn builtins_resolve_to_expected_names() {
+        let r = PolicyRegistry::with_builtins();
+        for (req, want) in [
+            ("tetris-cdsp", "tetris-cdsp"),
+            ("cdsp", "tetris-cdsp"),
+            ("tetris", "tetris-cdsp"),
+            ("tetris-single-chunk", "tetris-single-chunk"),
+            ("single-chunk", "tetris-single-chunk"),
+            ("loongserve", "loongserve"),
+            ("loongserve-disagg", "loongserve-disagg"),
+            ("fixed-sp8", "fixed-sp8"),
+            ("fixed-sp16", "fixed-sp16"),
+        ] {
+            let s = r.resolve(req, &ctx()).unwrap();
+            assert_eq!(s.name(), want, "requested {req}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_lists_known_policies() {
+        let r = PolicyRegistry::with_builtins();
+        let err = r.resolve("no-such-policy", &ctx()).unwrap_err().to_string();
+        assert!(err.contains("no-such-policy"), "{err}");
+        assert!(err.contains("tetris-cdsp"), "{err}");
+        assert!(err.contains("fixed-spN"), "{err}");
+    }
+
+    #[test]
+    fn esp_decode_metadata() {
+        let r = PolicyRegistry::with_builtins();
+        assert!(r.spec("loongserve").unwrap().esp_decode);
+        assert!(!r.spec("loongserve-disagg").unwrap().esp_decode);
+        assert!(!r.spec("tetris-cdsp").unwrap().esp_decode);
+        assert!(!r.spec("fixed-sp8").unwrap().esp_decode);
+    }
+
+    #[test]
+    fn alias_cycles_error_instead_of_recursing() {
+        let mut r = PolicyRegistry::with_builtins();
+        r.alias("a", "b");
+        r.alias("b", "a");
+        let err = r.spec("a").unwrap_err().to_string();
+        assert!(err.contains("alias cycle"), "{err}");
+        let mut r = PolicyRegistry::empty();
+        r.alias("x", "x");
+        assert!(r.spec("x").unwrap_err().to_string().contains("alias cycle"));
+    }
+
+    #[test]
+    fn custom_registration_and_shadowing() {
+        let mut r = PolicyRegistry::with_builtins();
+        r.register("fixed-sp2", |ctx| {
+            Ok(Box::new(FixedSpScheduler::new(ctx.model.clone(), 2)))
+        });
+        // exact entries win over families
+        assert!(r.names().contains(&"fixed-sp2".to_string()));
+        assert_eq!(r.resolve("fixed-sp2", &ctx()).unwrap().name(), "fixed-sp2");
+        // family still covers other sizes and rejects malformed ones
+        assert!(r.contains("fixed-sp4"));
+        assert!(!r.contains("fixed-sp0"));
+        assert!(!r.contains("fixed-spx"));
+    }
+}

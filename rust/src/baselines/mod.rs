@@ -144,31 +144,19 @@ impl PrefillScheduler for FixedSpScheduler {
 }
 
 /// Construct the scheduler for a `config::Policy`.
+///
+/// Thin compatibility shim over the [`crate::api::PolicyRegistry`] — the
+/// registry is the single place policies are constructed; this resolves
+/// the enum's canonical name through it.
 pub fn make_scheduler(
     policy: crate::config::Policy,
     model: PrefillModel,
     sched_cfg: crate::config::SchedConfig,
 ) -> Box<dyn PrefillScheduler> {
-    use crate::config::Policy;
-    match policy {
-        Policy::Cdsp => Box::new(CdspScheduler::new(model, sched_cfg)),
-        Policy::CdspSingleChunk => {
-            let mut s = CdspScheduler::new(model, sched_cfg);
-            s.single_chunk_only = true;
-            Box::new(s)
-        }
-        Policy::LoongServe => Box::new(LoongServeScheduler::new(
-            model,
-            sched_cfg.sp_candidates,
-            false,
-        )),
-        Policy::LoongServeDisagg => Box::new(LoongServeScheduler::new(
-            model,
-            sched_cfg.sp_candidates,
-            true,
-        )),
-        Policy::FixedSp(k) => Box::new(FixedSpScheduler::new(model, k)),
-    }
+    let ctx = crate::api::PolicyCtx { model, sched: sched_cfg };
+    crate::api::PolicyRegistry::with_builtins()
+        .resolve(&policy.name(), &ctx)
+        .expect("every config::Policy has a builtin registration")
 }
 
 #[cfg(test)]

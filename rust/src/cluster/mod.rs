@@ -228,6 +228,85 @@ impl PoolView {
     }
 }
 
+/// The dispatcher's queue clocks: per-instance absolute busy-until times
+/// plus the node topology, shared by the simulator's event loop and the
+/// live server's submit path (they previously each carried their own copy
+/// of this bookkeeping).
+///
+/// `free_at[i]` is the absolute time instance `i` finishes its committed
+/// work; [`DispatchClock::pool_view`] converts to the relative-delay
+/// snapshot the schedulers plan against.
+#[derive(Clone, Debug)]
+pub struct DispatchClock {
+    free_at: Vec<f64>,
+    node_of: Vec<usize>,
+    per_node: usize,
+}
+
+impl DispatchClock {
+    /// `n` instances spread over nodes of `per_node` instances each.
+    pub fn grid(n: usize, per_node: usize) -> Self {
+        let per_node = per_node.max(1);
+        DispatchClock {
+            free_at: vec![0.0; n],
+            node_of: (0..n).map(|i| i / per_node).collect(),
+            per_node,
+        }
+    }
+
+    /// All `n` instances co-located on one node (the live mini-cluster).
+    pub fn single_node(n: usize) -> Self {
+        Self::grid(n, n.max(1))
+    }
+
+    pub fn len(&self) -> usize {
+        self.free_at.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.free_at.is_empty()
+    }
+
+    /// Absolute busy-until times (seconds from the run epoch).
+    pub fn free_at(&self) -> &[f64] {
+        &self.free_at
+    }
+
+    /// Snapshot for the scheduler: delays relative to `now`, clamped at 0.
+    pub fn pool_view(&self, now: f64) -> PoolView {
+        PoolView {
+            delays: self.free_at.iter().map(|f| (f - now).max(0.0)).collect(),
+            node_of: self.node_of.clone(),
+            per_node: self.per_node,
+        }
+    }
+
+    /// Commit one chunk onto `group`: the group starts once every member is
+    /// free and `after` has passed (ring attention mandates a synchronous
+    /// start), runs for `cost` seconds, and every member is busy until the
+    /// returned finish time.
+    pub fn commit(&mut self, group: &[InstanceId], after: f64, cost: f64) -> f64 {
+        let ready = group.iter().map(|&g| self.free_at[g]).fold(after, f64::max);
+        let finish = ready + cost;
+        for &g in group {
+            self.free_at[g] = finish;
+        }
+        finish
+    }
+
+    /// Whether `group` spans more than one node (cache balancing crosses
+    /// the inter-node links).
+    pub fn spans_nodes(&self, group: &[InstanceId]) -> bool {
+        match group.first() {
+            None => false,
+            Some(&g0) => {
+                let n0 = self.node_of[g0];
+                group.iter().any(|&g| self.node_of[g] != n0)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -347,5 +426,43 @@ mod tests {
         p.commit(&[3], 5.0);
         p.commit(&[3], 1.0);
         assert_eq!(p.delays[3], 5.0);
+    }
+
+    #[test]
+    fn dispatch_clock_commit_waits_for_group_and_after() {
+        let mut c = DispatchClock::grid(4, 2);
+        // instance 1 busy until t=3
+        let f = c.commit(&[1], 0.0, 3.0);
+        assert_eq!(f, 3.0);
+        // group {0,1} at now=1: must wait for 1 (t=3), then run 2s
+        let f = c.commit(&[0, 1], 1.0, 2.0);
+        assert_eq!(f, 5.0);
+        assert_eq!(c.free_at()[0], 5.0);
+        assert_eq!(c.free_at()[1], 5.0);
+        // `after` dominates when the group is idle
+        let f = c.commit(&[2], 10.0, 0.5);
+        assert_eq!(f, 10.5);
+    }
+
+    #[test]
+    fn dispatch_clock_pool_view_clamps() {
+        let mut c = DispatchClock::grid(2, 2);
+        c.commit(&[0], 0.0, 4.0);
+        let v = c.pool_view(1.0);
+        assert_eq!(v.delays, vec![3.0, 0.0]);
+        let v = c.pool_view(9.0);
+        assert_eq!(v.delays, vec![0.0, 0.0]);
+        assert_eq!(v.per_node, 2);
+    }
+
+    #[test]
+    fn dispatch_clock_topology() {
+        let c = DispatchClock::grid(8, 4);
+        assert!(!c.spans_nodes(&[0, 1, 2, 3]));
+        assert!(c.spans_nodes(&[3, 4]));
+        assert!(!c.spans_nodes(&[]));
+        let s = DispatchClock::single_node(6);
+        assert!(!s.spans_nodes(&[0, 5]));
+        assert_eq!(s.pool_view(0.0).n_nodes(), 1);
     }
 }

@@ -10,16 +10,46 @@
 //!   transfer with handshake-based backend allocation, a discrete-event
 //!   cluster simulator that regenerates every table and figure of the paper's
 //!   evaluation, and a *real* mini serving engine in which OS threads play the
-//!   role of SP instances and run AOT-compiled JAX/Pallas artifacts through
-//!   PJRT.
+//!   role of SP instances.
 //! * **L2 (python/compile/model.py)** — a tiny-LLaMA decoder written in JAX,
 //!   lowered once to HLO text at `make artifacts` time.
 //! * **L1 (python/compile/kernels/)** — Pallas flash-attention kernels for the
 //!   chunked-prefill and decode hot spots, verified against pure-jnp oracles.
 //!
-//! Python never runs on the request path: the rust binary loads
-//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and is
-//! self-contained afterwards.
+//! ## Entry point: `tetris::api`
+//!
+//! Everything constructs through one validated builder — the calibrated
+//! cluster simulator and the live threaded server share the configuration,
+//! the policy registry, and the observer hooks:
+//!
+//! ```
+//! use tetris::api::Tetris;
+//! use tetris::workload::TraceKind;
+//!
+//! // A simulated serving campaign on the paper's LLaMA3-8B cluster.
+//! let mut sim = Tetris::paper_8b()
+//!     .policy("tetris-cdsp")   // or loongserve, fixed-sp8, a custom name…
+//!     .seed(42)
+//!     .build_simulation()
+//!     .unwrap();
+//! let metrics = sim.run_generated(TraceKind::Medium, 20, 1.0);
+//! assert_eq!(metrics.requests.len(), 20);
+//! assert!(metrics.ttft_summary().p99 > 0.0);
+//! ```
+//!
+//! Policies are resolved by name through [`api::PolicyRegistry`]; register
+//! your own `PrefillScheduler` with one call (see the `api` module docs for
+//! a complete out-of-crate example). Attach an [`api::Observer`] (e.g.
+//! [`api::TraceRecorder`]) to export per-request lifecycle events from
+//! either build target.
+//!
+//! The live path is the same builder:
+//! `Tetris::builder().build_server(engine, n_workers)` — where `engine` is
+//! the PJRT runtime over the AOT artifacts (`--features pjrt`, the binary
+//! loads `artifacts/*.hlo.txt` through the PJRT C API and is self-contained
+//! afterwards) or the deterministic stub backend
+//! (`runtime::Engine::stub_default()`), which exercises the identical
+//! dispatch/barrier/KV/batching code path without the xla toolchain.
 //!
 //! See `DESIGN.md` for the complete system inventory and the
 //! per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -39,6 +69,7 @@ pub mod metrics;
 pub mod sim;
 pub mod runtime;
 pub mod serve;
+pub mod api;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

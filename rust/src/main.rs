@@ -1,18 +1,24 @@
 //! `tetris` — the leader entrypoint / CLI.
 //!
+//! Every command constructs its runs through the `tetris::api` facade:
+//! policies are resolved by name via the `PolicyRegistry` (no hardcoded
+//! policy dispatch lives here).
+//!
 //! Subcommands:
 //! * `simulate`      — run the calibrated cluster simulator for one policy.
-//! * `compare`       — run all five policies on the same trace (Fig. 8 row).
+//! * `compare`       — run the paper's policy set on the same trace (Fig. 8 row).
+//! * `policies`      — list the registered policy names.
 //! * `profile-rate`  — offline improvement-rate profiling (Sec. 5.1 / 6).
 //! * `fit`           — fit + print the Eq. (1) coefficient tables.
 //! * `gen-trace`     — synthesize a paper-shaped trace to JSON.
-//! * `serve`         — live mini-server over the PJRT artifacts (E2E).
+//! * `serve`         — live mini-server over the PJRT artifacts (E2E);
+//!                     falls back to the deterministic stub engine when no
+//!                     artifacts are available.
 
 use std::sync::Arc;
-use tetris::config::Policy;
+use tetris::api::{PolicyRegistry, Tetris, TetrisBuilder, PAPER_POLICIES};
 use tetris::sched::{ImprovementController, RateProfile};
 use tetris::sim::profiler::{profile, ProfileParams};
-use tetris::sim::SimBuilder;
 use tetris::util::bench::{fmt_secs, Table};
 use tetris::util::cli::Args;
 use tetris::util::json::Json;
@@ -26,16 +32,17 @@ USAGE: tetris <COMMAND> [OPTIONS]
 
 COMMANDS:
   simulate      run the calibrated cluster simulator
-                  --policy <tetris-cdsp|single-chunk|loongserve|loongserve-disagg|fixed-spN>
+                  --policy <name>  (see `tetris policies`)
                   --trace <short|medium|long>  --rate <req/s>  --n <requests>
                   --model <8b|70b>  --seed <u64>  [--dynamic-rate]
-  compare       all five policies on one trace (Fig. 8 row)
+  compare       the paper's policy set on one trace (Fig. 8 row)
                   --trace ... --rate ... --n ... --model ...
+  policies      list the names the policy registry resolves
   profile-rate  offline improvement-rate profiling
                   --trace ... --rates 0.5,1.0,...  --out <profile.json>
   fit           print the Eq. (1) coefficient tables (Table 1 calibration)
   gen-trace     synthesize a trace --trace ... --rate ... --n ... --out t.json
-  serve         live E2E server over artifacts/ (tiny model, real PJRT)
+  serve         live E2E server over artifacts/ (or the stub engine)
                   --requests <n>  --prompt-len <tokens>  --output-len <tokens>
                   --workers <n>
 ";
@@ -46,6 +53,7 @@ fn main() {
     let code = match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
         "compare" => cmd_compare(&args),
+        "policies" => cmd_policies(),
         "profile-rate" => cmd_profile_rate(&args),
         "fit" => cmd_fit(&args),
         "gen-trace" => cmd_gen_trace(&args),
@@ -58,11 +66,11 @@ fn main() {
     std::process::exit(code);
 }
 
-fn builder_for(model: &str, policy: Policy) -> SimBuilder {
+fn builder_for(model: &str) -> TetrisBuilder {
     if model == "70b" {
-        SimBuilder::paper_70b(policy)
+        Tetris::paper_70b()
     } else {
-        SimBuilder::paper_8b(policy)
+        Tetris::paper_8b()
     }
 }
 
@@ -77,18 +85,32 @@ fn gen_trace(args: &Args) -> Vec<tetris::workload::Request> {
 }
 
 fn cmd_simulate(args: &Args) -> i32 {
-    let policy = Policy::parse(&args.str_or("policy", "tetris-cdsp"))
-        .unwrap_or(Policy::Cdsp);
+    let policy = args.str_or("policy", "tetris-cdsp");
     let model = args.str_or("model", "8b");
     let trace = gen_trace(args);
-    let mut b = builder_for(&model, policy);
+    let mut b = builder_for(&model).policy(&policy).seed(args.u64_or("seed", 42));
     if args.flag("dynamic-rate") {
-        b.controller = ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
+        b = b.controller(ImprovementController::new(
+            RateProfile::default_trend(4.0),
+            30.0,
+            30.0,
+        ));
     }
-    let m = b.run(&trace);
+    let mut sim = match b.build_simulation() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("invalid configuration: {e:#}");
+            return 2;
+        }
+    };
+    let m = sim.run(&trace);
     let ttft = m.ttft_summary();
     let tbt = m.tbt_summary();
-    println!("policy={} model={model} requests={}", policy.name(), m.requests.len());
+    println!(
+        "policy={} model={model} requests={}",
+        sim.scheduler_name(),
+        m.requests.len()
+    );
     println!(
         "TTFT p50={} p99={} mean={}",
         fmt_secs(ttft.p50), fmt_secs(ttft.p99), fmt_secs(ttft.mean)
@@ -105,21 +127,29 @@ fn cmd_compare(args: &Args) -> i32 {
     let model = args.str_or("model", "8b");
     let trace = gen_trace(args);
     let mut t = Table::new(&["policy", "ttft p50", "ttft p99", "tbt p50", "tbt p99", "tok/s"]);
-    for policy in [
-        Policy::Cdsp,
-        Policy::CdspSingleChunk,
-        Policy::LoongServe,
-        Policy::LoongServeDisagg,
-        Policy::FixedSp(8),
-        Policy::FixedSp(16),
-    ] {
-        let mut b = builder_for(&model, policy);
-        b.controller = ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
-        let m = b.run(&trace);
+    for policy in PAPER_POLICIES {
+        let mut sim = match builder_for(&model)
+            .policy(policy)
+            .controller(ImprovementController::new(
+                RateProfile::default_trend(4.0),
+                30.0,
+                30.0,
+            ))
+            .build_simulation()
+        {
+            Ok(s) => s,
+            Err(e) => {
+                // e.g. fixed-sp16 on the 8-instance 70B cluster: skip the
+                // row rather than abort the whole comparison.
+                eprintln!("skipping {policy}: {e:#}");
+                continue;
+            }
+        };
+        let m = sim.run(&trace);
         let ttft = m.ttft_summary();
         let tbt = m.tbt_summary();
         t.row(vec![
-            policy.name(),
+            policy.to_string(),
             fmt_secs(ttft.p50),
             fmt_secs(ttft.p99),
             fmt_secs(tbt.p50),
@@ -128,6 +158,19 @@ fn cmd_compare(args: &Args) -> i32 {
         ]);
     }
     t.print();
+    0
+}
+
+fn cmd_policies() -> i32 {
+    let r = PolicyRegistry::with_builtins();
+    println!("registered policies:");
+    for n in r.names() {
+        println!("  {n}");
+    }
+    for p in r.family_patterns() {
+        println!("  {p}  (parameterised family, e.g. fixed-sp8)");
+    }
+    println!("\ncustom policies: TetrisBuilder::register_policy(name, factory)");
     0
 }
 
@@ -145,11 +188,7 @@ fn cmd_profile_rate(args: &Args) -> i32 {
         seed: args.u64_or("seed", 0xace),
         ..ProfileParams::default()
     };
-    let sweep = profile(
-        move |p| builder_for(&model, p),
-        kind,
-        &params,
-    );
+    let sweep = profile(&builder_for(&model), kind, &params);
     let mut t = Table::new(&["arrival rate", "best improvement rate", "mean TTFT"]);
     for (rate, row) in &sweep.cells {
         let best = row.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
@@ -203,7 +242,7 @@ fn cmd_gen_trace(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     use tetris::runtime::{artifacts_dir, Engine};
-    use tetris::serve::{ServeRequest, Server};
+    use tetris::serve::ServeRequest;
     let n = args.usize_or("requests", 8);
     let prompt_len = args.usize_or("prompt-len", 120);
     let output_len = args.usize_or("output-len", 8);
@@ -211,31 +250,46 @@ fn cmd_serve(args: &Args) -> i32 {
     let engine = match Engine::load(&artifacts_dir()) {
         Ok(e) => Arc::new(e),
         Err(e) => {
-            eprintln!("failed to load artifacts (run `make artifacts`): {e:#}");
-            return 1;
+            eprintln!("artifacts unavailable ({e:#});");
+            eprintln!("falling back to the deterministic stub engine");
+            Arc::new(Engine::stub_default())
         }
     };
     println!(
-        "engine: {} layers, d_model {}, vocab {} — {} prefill workers",
-        engine.arch.n_layers, engine.arch.d_model, engine.arch.vocab, workers
+        "engine: {} layers, d_model {}, vocab {}{} — {} prefill workers",
+        engine.arch.n_layers,
+        engine.arch.d_model,
+        engine.arch.vocab,
+        if engine.is_stub() { " (stub)" } else { "" },
+        workers
     );
+    // An A100-shaped dispatch model so multi-chunk CDSP paths get exercised
+    // even on the CPU substrate (DESIGN.md §3), with SP capped by the
+    // worker pool.
+    let sp: Vec<usize> = [1usize, 2, 4].into_iter().filter(|&s| s <= workers).collect();
     let sched_model = tetris::latency::a100_model_for(
-        &tetris::modelcfg::ModelArch::llama3_8b(), 1, &[1, 2, 4],
+        &tetris::modelcfg::ModelArch::llama3_8b(), 1, &sp,
     );
-    let mut cfg = tetris::config::SchedConfig::default();
-    cfg.sp_candidates = vec![1, 2, 4];
-    cfg.min_chunk = 32;
-    let mut server = match Server::start(engine, workers, sched_model, cfg) {
+    let mut server = match Tetris::builder()
+        .policy("tetris-cdsp")
+        .sp_candidates(sp)
+        .min_chunk(32)
+        .prefill_model(sched_model)
+        .build_server(engine.clone(), workers)
+    {
         Ok(s) => s,
         Err(e) => {
             eprintln!("server start failed: {e:#}");
             return 1;
         }
     };
+    let vocab = engine.arch.vocab;
     let reqs: Vec<ServeRequest> = (0..n as u64)
         .map(|id| ServeRequest {
             id,
-            prompt: (0..prompt_len).map(|i| ((i * 31 + id as usize * 7) % 512) as i32).collect(),
+            prompt: (0..prompt_len)
+                .map(|i| ((i * 31 + id as usize * 7) % vocab) as i32)
+                .collect(),
             output_len,
         })
         .collect();

@@ -8,7 +8,7 @@
 use crate::util::stats::{cdf_points, Summary};
 
 /// Per-request outcome collected by the simulator or the live engine.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RequestMetrics {
     pub id: u64,
     pub arrival: f64,
@@ -28,8 +28,9 @@ impl RequestMetrics {
     }
 }
 
-/// Aggregated run outcome.
-#[derive(Clone, Debug)]
+/// Aggregated run outcome. `PartialEq` so determinism tests can compare
+/// whole runs structurally.
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunMetrics {
     pub requests: Vec<RequestMetrics>,
     /// Wall-clock span of the run (seconds).

@@ -1,19 +1,25 @@
-//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//! Execution runtime: the engine the live serving stack calls into.
 //!
-//! `make artifacts` (python, build-time only) produced:
-//! * `prefill_chunk.hlo.txt` / `decode_step.hlo.txt` — HLO **text** (the
-//!   xla crate's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos;
-//!   the text parser reassigns instruction ids — see aot.py),
-//! * `weights.bin` + `manifest.json` — flat f32 weights and the shape/order
-//!   table.
+//! Two backends behind one typed API:
 //!
-//! This module wraps `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//! → `compile` → `execute` behind a typed API. Python never runs here.
+//! * **PJRT** (`--features pjrt`): load the AOT artifacts produced by
+//!   `make artifacts` and execute them through the PJRT C API (`xla`
+//!   crate). `prefill_chunk.hlo.txt` / `decode_step.hlo.txt` are HLO
+//!   **text** (the xla crate's xla_extension 0.5.1 rejects jax ≥ 0.5
+//!   serialized protos; the text parser reassigns instruction ids — see
+//!   aot.py), plus `weights.bin` + `manifest.json`. Python never runs on
+//!   the request path.
+//! * **Stub** (always available): a deterministic, compositional fake
+//!   model. KV written for a token depends only on (layer, absolute
+//!   position, head, dim, token id), and logits only on (last token,
+//!   total length) — so chunked prefill composes exactly like single-chunk,
+//!   which is the invariant the serving path relies on. It exists so the
+//!   full threaded serving stack (barrier groups, KV scatter/repack,
+//!   continuous batching) runs and is testable without the xla toolchain.
 
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 /// Architecture constants read from the manifest (mirrors
 /// `python/compile/model.py`).
@@ -44,6 +50,21 @@ impl TinyArch {
     /// Elements per token per layer (one of k/v).
     pub fn tok_elems(&self) -> usize {
         self.n_heads * self.head_dim
+    }
+
+    /// The stub engine's default shape: tiny-llama-like buckets, large
+    /// enough for the serve tests and examples (prompts up to `c_bucket`).
+    pub fn stub_default() -> Self {
+        TinyArch {
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            head_dim: 8,
+            vocab: 512,
+            l_bucket: 64,
+            c_bucket: 512,
+            decode_c_bucket: 640,
+        }
     }
 }
 
@@ -110,39 +131,6 @@ impl Manifest {
     }
 }
 
-/// Weights loaded from `weights.bin`, one host literal per tensor.
-pub struct Weights {
-    literals: Vec<xla::Literal>,
-}
-
-impl Weights {
-    pub fn load(m: &Manifest) -> Result<Weights> {
-        let bytes = std::fs::read(m.dir.join("weights.bin"))
-            .context("reading weights.bin")?;
-        let mut literals = Vec::with_capacity(m.weights.len());
-        for w in &m.weights {
-            let end = w.offset_bytes + w.elems * 4;
-            anyhow::ensure!(end <= bytes.len(), "weights.bin too short for {}", w.name);
-            let mut vals = vec![0f32; w.elems];
-            for (i, v) in vals.iter_mut().enumerate() {
-                let o = w.offset_bytes + i * 4;
-                *v = f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
-            }
-            let dims: Vec<i64> = w.shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(&vals).reshape(&dims)?);
-        }
-        Ok(Weights { literals })
-    }
-
-    pub fn len(&self) -> usize {
-        self.literals.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.literals.is_empty()
-    }
-}
-
 /// Output of one prefill-chunk execution.
 pub struct PrefillOut {
     pub logits: Vec<f32>,
@@ -157,50 +145,127 @@ pub struct DecodeOut {
     pub new_v: Vec<f32>,
 }
 
-struct Inner {
-    _client: xla::PjRtClient,
-    prefill: xla::PjRtLoadedExecutable,
-    decode: xla::PjRtLoadedExecutable,
-    weights: Weights,
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::{Manifest, TinyArch};
+    use anyhow::{anyhow, Context, Result};
+
+    /// Weights loaded from `weights.bin`, one host literal per tensor.
+    pub struct Weights {
+        pub literals: Vec<xla::Literal>,
+    }
+
+    impl Weights {
+        pub fn load(m: &Manifest) -> Result<Weights> {
+            let bytes = std::fs::read(m.dir.join("weights.bin"))
+                .context("reading weights.bin")?;
+            let mut literals = Vec::with_capacity(m.weights.len());
+            for w in &m.weights {
+                let end = w.offset_bytes + w.elems * 4;
+                anyhow::ensure!(end <= bytes.len(), "weights.bin too short for {}", w.name);
+                let mut vals = vec![0f32; w.elems];
+                for (i, v) in vals.iter_mut().enumerate() {
+                    let o = w.offset_bytes + i * 4;
+                    *v = f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+                }
+                let dims: Vec<i64> = w.shape.iter().map(|&d| d as i64).collect();
+                literals.push(xla::Literal::vec1(&vals).reshape(&dims)?);
+            }
+            Ok(Weights { literals })
+        }
+
+        pub fn len(&self) -> usize {
+            self.literals.len()
+        }
+    }
+
+    pub struct Inner {
+        pub _client: xla::PjRtClient,
+        pub prefill: xla::PjRtLoadedExecutable,
+        pub decode: xla::PjRtLoadedExecutable,
+        pub weights: Weights,
+    }
+
+    impl Inner {
+        pub fn load(dir: &std::path::Path) -> Result<(Inner, TinyArch)> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = manifest.dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                Ok(client.compile(&comp)?)
+            };
+            let prefill = compile(&manifest.prefill_file)?;
+            let decode = compile(&manifest.decode_file)?;
+            let weights = Weights::load(&manifest)?;
+            let arch = manifest.arch.clone();
+            Ok((Inner { _client: client, prefill, decode, weights }, arch))
+        }
+    }
 }
 
-/// The engine: compiled executables + weights, callable from many threads.
-///
-/// The xla crate's types wrap raw PJRT pointers and are `!Send`; the PJRT
-/// CPU client itself is thread-safe, but we stay conservative and serialize
-/// every execution through one mutex (CPU execution is effectively serial
-/// anyway; the serving engine's parallelism is in its coordination, which is
-/// what this reproduction measures).
+enum EngineImpl {
+    /// Real PJRT execution. The xla crate's types wrap raw PJRT pointers
+    /// and are `!Send`; the PJRT CPU client itself is thread-safe, but we
+    /// stay conservative and serialize every execution through one mutex
+    /// (CPU execution is effectively serial anyway; the serving engine's
+    /// parallelism is in its coordination, which is what this reproduction
+    /// measures).
+    #[cfg(feature = "pjrt")]
+    Pjrt(std::sync::Mutex<pjrt::Inner>),
+    /// Deterministic fake compute; see the module docs.
+    Stub,
+}
+
+/// The engine: compiled executables + weights (or the stub), callable from
+/// many threads.
 pub struct Engine {
-    inner: Mutex<Inner>,
+    imp: EngineImpl,
     pub arch: TinyArch,
 }
 
-// SAFETY: all access to the PJRT pointers goes through the Mutex above; the
-// PJRT CPU plugin supports multi-threaded clients. See module docs.
+// SAFETY: all access to the PJRT pointers goes through the Mutex in
+// `EngineImpl::Pjrt`; the PJRT CPU plugin supports multi-threaded clients.
+// The stub variant is plain data. See the `EngineImpl` docs.
 unsafe impl Send for Engine {}
 unsafe impl Sync for Engine {}
 
 impl Engine {
-    /// Load artifacts from `dir`, compile both executables.
+    /// Load artifacts from `dir`, compile both executables. Requires the
+    /// `pjrt` feature; without it this returns an error directing callers
+    /// to [`Engine::stub`].
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = manifest.dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        let prefill = compile(&manifest.prefill_file)?;
-        let decode = compile(&manifest.decode_file)?;
-        let weights = Weights::load(&manifest)?;
-        Ok(Engine {
-            arch: manifest.arch.clone(),
-            inner: Mutex::new(Inner { _client: client, prefill, decode, weights }),
-        })
+        let (inner, arch) = pjrt::Inner::load(dir)?;
+        Ok(Engine { imp: EngineImpl::Pjrt(std::sync::Mutex::new(inner)), arch })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let _ = dir;
+        Err(anyhow!(
+            "tetris was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` to execute artifacts, or use Engine::stub \
+             for the deterministic fake backend"
+        ))
+    }
+
+    /// The deterministic stub backend with the given shape.
+    pub fn stub(arch: TinyArch) -> Engine {
+        Engine { imp: EngineImpl::Stub, arch }
+    }
+
+    /// The stub backend with [`TinyArch::stub_default`] buckets.
+    pub fn stub_default() -> Engine {
+        Self::stub(TinyArch::stub_default())
+    }
+
+    /// Whether this engine runs the stub backend.
+    pub fn is_stub(&self) -> bool {
+        matches!(self.imp, EngineImpl::Stub)
     }
 
     /// Execute one CDSP chunk: `tokens` padded to `l_bucket`, history cache
@@ -220,31 +285,13 @@ impl Engine {
         anyhow::ensure!(chunk_len >= 1 && chunk_len as usize <= a.l_bucket);
         anyhow::ensure!(hist_len >= 0 && (hist_len as usize) <= a.c_bucket);
 
-        let kv_dims = [
-            a.n_layers as i64,
-            a.c_bucket as i64,
-            a.n_heads as i64,
-            a.head_dim as i64,
-        ];
-        let inner = self.inner.lock().unwrap();
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(inner.weights.len() + 5);
-        for w in &inner.weights.literals {
-            args.push(w.clone());
+        match &self.imp {
+            #[cfg(feature = "pjrt")]
+            EngineImpl::Pjrt(inner) => {
+                pjrt_prefill(a, inner, tokens, hist_k, hist_v, hist_len, chunk_len)
+            }
+            EngineImpl::Stub => Ok(stub_prefill(a, tokens, hist_len, chunk_len)),
         }
-        args.push(xla::Literal::vec1(tokens));
-        args.push(xla::Literal::vec1(hist_k).reshape(&kv_dims)?);
-        args.push(xla::Literal::vec1(hist_v).reshape(&kv_dims)?);
-        args.push(xla::Literal::vec1(&[hist_len]));
-        args.push(xla::Literal::vec1(&[chunk_len]));
-
-        let result = inner.prefill.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let (logits, new_k, new_v) = result.to_tuple3()?;
-        Ok(PrefillOut {
-            logits: logits.to_vec::<f32>()?,
-            new_k: new_k.to_vec::<f32>()?,
-            new_v: new_v.to_vec::<f32>()?,
-        })
     }
 
     /// Execute one decode step against the decode-bucket cache.
@@ -260,31 +307,159 @@ impl Engine {
         anyhow::ensure!(hist_v.len() == a.decode_kv_elems(), "hist_v size");
         anyhow::ensure!(hist_len >= 1 && (hist_len as usize) < a.decode_c_bucket);
 
-        let kv_dims = [
-            a.n_layers as i64,
-            a.decode_c_bucket as i64,
-            a.n_heads as i64,
-            a.head_dim as i64,
-        ];
-        let inner = self.inner.lock().unwrap();
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(inner.weights.len() + 4);
-        for w in &inner.weights.literals {
-            args.push(w.clone());
+        match &self.imp {
+            #[cfg(feature = "pjrt")]
+            EngineImpl::Pjrt(inner) => pjrt_decode(a, inner, token, hist_k, hist_v, hist_len),
+            EngineImpl::Stub => Ok(stub_decode(a, token, hist_len)),
         }
-        args.push(xla::Literal::vec1(&[token]));
-        args.push(xla::Literal::vec1(hist_k).reshape(&kv_dims)?);
-        args.push(xla::Literal::vec1(hist_v).reshape(&kv_dims)?);
-        args.push(xla::Literal::vec1(&[hist_len]));
-
-        let result = inner.decode.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let (logits, new_k, new_v) = result.to_tuple3()?;
-        Ok(DecodeOut {
-            logits: logits.to_vec::<f32>()?,
-            new_k: new_k.to_vec::<f32>()?,
-            new_v: new_v.to_vec::<f32>()?,
-        })
     }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_prefill(
+    a: &TinyArch,
+    inner: &std::sync::Mutex<pjrt::Inner>,
+    tokens: &[i32],
+    hist_k: &[f32],
+    hist_v: &[f32],
+    hist_len: i32,
+    chunk_len: i32,
+) -> Result<PrefillOut> {
+    let kv_dims = [
+        a.n_layers as i64,
+        a.c_bucket as i64,
+        a.n_heads as i64,
+        a.head_dim as i64,
+    ];
+    let inner = inner.lock().unwrap();
+    let mut args: Vec<xla::Literal> = Vec::with_capacity(inner.weights.len() + 5);
+    for w in &inner.weights.literals {
+        args.push(w.clone());
+    }
+    args.push(xla::Literal::vec1(tokens));
+    args.push(xla::Literal::vec1(hist_k).reshape(&kv_dims)?);
+    args.push(xla::Literal::vec1(hist_v).reshape(&kv_dims)?);
+    args.push(xla::Literal::vec1(&[hist_len]));
+    args.push(xla::Literal::vec1(&[chunk_len]));
+
+    let result = inner.prefill.execute::<xla::Literal>(&args)?[0][0]
+        .to_literal_sync()?;
+    let (logits, new_k, new_v) = result.to_tuple3()?;
+    Ok(PrefillOut {
+        logits: logits.to_vec::<f32>()?,
+        new_k: new_k.to_vec::<f32>()?,
+        new_v: new_v.to_vec::<f32>()?,
+    })
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_decode(
+    a: &TinyArch,
+    inner: &std::sync::Mutex<pjrt::Inner>,
+    token: i32,
+    hist_k: &[f32],
+    hist_v: &[f32],
+    hist_len: i32,
+) -> Result<DecodeOut> {
+    let kv_dims = [
+        a.n_layers as i64,
+        a.decode_c_bucket as i64,
+        a.n_heads as i64,
+        a.head_dim as i64,
+    ];
+    let inner = inner.lock().unwrap();
+    let mut args: Vec<xla::Literal> = Vec::with_capacity(inner.weights.len() + 4);
+    for w in &inner.weights.literals {
+        args.push(w.clone());
+    }
+    args.push(xla::Literal::vec1(&[token]));
+    args.push(xla::Literal::vec1(hist_k).reshape(&kv_dims)?);
+    args.push(xla::Literal::vec1(hist_v).reshape(&kv_dims)?);
+    args.push(xla::Literal::vec1(&[hist_len]));
+
+    let result = inner.decode.execute::<xla::Literal>(&args)?[0][0]
+        .to_literal_sync()?;
+    let (logits, new_k, new_v) = result.to_tuple3()?;
+    Ok(DecodeOut {
+        logits: logits.to_vec::<f32>()?,
+        new_k: new_k.to_vec::<f32>()?,
+        new_v: new_v.to_vec::<f32>()?,
+    })
+}
+
+// ---- stub backend ----------------------------------------------------------
+
+const K_SALT: u64 = 0x6b65795f73616c74; // distinguishes k from v streams
+const V_SALT: u64 = 0x76616c5f73616c74;
+
+/// splitmix64 — cheap, well-distributed, dependency-free.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Map a hash to (-1, 1).
+fn unit(h: u64) -> f32 {
+    ((h >> 40) as f32) / ((1u64 << 24) as f32) * 2.0 - 1.0
+}
+
+/// KV value for (layer, absolute position, head, dim, token, k-or-v salt):
+/// depends only on those — the compositionality invariant.
+fn stub_kv(layer: usize, pos: usize, h: usize, d: usize, token: i32, salt: u64) -> f32 {
+    let key = (layer as u64)
+        ^ ((pos as u64) << 8)
+        ^ ((h as u64) << 32)
+        ^ ((d as u64) << 40)
+        ^ ((token as u64) << 48)
+        ^ salt.rotate_left(17);
+    unit(mix(key))
+}
+
+/// Logits depend only on (last token, total processed length).
+fn stub_logits(vocab: usize, last_token: i32, total_len: usize) -> Vec<f32> {
+    let base = mix((last_token as u64) << 20 ^ (total_len as u64));
+    (0..vocab).map(|v| unit(mix(base ^ (v as u64)))).collect()
+}
+
+fn stub_prefill(a: &TinyArch, tokens: &[i32], hist_len: i32, chunk_len: i32) -> PrefillOut {
+    let (hist, len) = (hist_len as usize, chunk_len as usize);
+    let tok = a.tok_elems();
+    let mut new_k = vec![0.0f32; a.new_kv_elems()];
+    let mut new_v = vec![0.0f32; a.new_kv_elems()];
+    for layer in 0..a.n_layers {
+        for i in 0..len {
+            let base = layer * a.l_bucket * tok + i * tok;
+            for h in 0..a.n_heads {
+                for d in 0..a.head_dim {
+                    let off = base + h * a.head_dim + d;
+                    new_k[off] = stub_kv(layer, hist + i, h, d, tokens[i], K_SALT);
+                    new_v[off] = stub_kv(layer, hist + i, h, d, tokens[i], V_SALT);
+                }
+            }
+        }
+    }
+    let logits = stub_logits(a.vocab, tokens[len - 1], hist + len);
+    PrefillOut { logits, new_k, new_v }
+}
+
+fn stub_decode(a: &TinyArch, token: i32, hist_len: i32) -> DecodeOut {
+    let hist = hist_len as usize;
+    let tok = a.tok_elems();
+    let mut new_k = vec![0.0f32; a.n_layers * tok];
+    let mut new_v = vec![0.0f32; a.n_layers * tok];
+    for layer in 0..a.n_layers {
+        for h in 0..a.n_heads {
+            for d in 0..a.head_dim {
+                let off = layer * tok + h * a.head_dim + d;
+                new_k[off] = stub_kv(layer, hist, h, d, token, K_SALT);
+                new_v[off] = stub_kv(layer, hist, h, d, token, V_SALT);
+            }
+        }
+    }
+    let logits = stub_logits(a.vocab, token, hist + 1);
+    DecodeOut { logits, new_k, new_v }
 }
 
 /// Argmax sampling (deterministic generation for tests/benches).
@@ -292,7 +467,7 @@ pub fn argmax(logits: &[f32]) -> usize {
     logits
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }
@@ -322,6 +497,90 @@ mod tests {
         assert!(Manifest::load(&dir).is_err());
     }
 
-    // Engine execution tests live in rust/tests/integration_runtime.rs —
-    // they need `make artifacts` to have run.
+    #[test]
+    fn stub_prefill_shapes_and_determinism() {
+        let e = Engine::stub_default();
+        let a = e.arch.clone();
+        let mut tokens = vec![0i32; a.l_bucket];
+        for (i, t) in tokens.iter_mut().enumerate() {
+            *t = (i % a.vocab) as i32;
+        }
+        let hk = vec![0.0f32; a.kv_elems()];
+        let hv = vec![0.0f32; a.kv_elems()];
+        let o1 = e.prefill_chunk(&tokens, &hk, &hv, 0, 16).unwrap();
+        let o2 = e.prefill_chunk(&tokens, &hk, &hv, 0, 16).unwrap();
+        assert_eq!(o1.logits.len(), a.vocab);
+        assert_eq!(o1.new_k.len(), a.new_kv_elems());
+        assert!(o1.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(o1.logits, o2.logits, "stub must be deterministic");
+        assert!(e.is_stub());
+    }
+
+    #[test]
+    fn stub_is_compositional() {
+        // The same invariant the PJRT integration test checks on real
+        // artifacts: a token's KV and the final logits do not depend on
+        // how the prompt was chunked.
+        let e = Engine::stub_default();
+        let a = e.arch.clone();
+        let prompt: Vec<i32> = (0..40).map(|i| ((i * 37 + 11) % a.vocab) as i32).collect();
+        let tok = a.tok_elems();
+        let run = |splits: &[usize]| -> (Vec<f32>, Vec<f32>) {
+            let mut hk = vec![0.0f32; a.kv_elems()];
+            let hv = vec![0.0f32; a.kv_elems()];
+            let mut hist = 0usize;
+            let mut logits = Vec::new();
+            for &len in splits {
+                let mut padded = vec![0i32; a.l_bucket];
+                padded[..len].copy_from_slice(&prompt[hist..hist + len]);
+                let out = e.prefill_chunk(&padded, &hk, &hv, hist as i32, len as i32).unwrap();
+                for layer in 0..a.n_layers {
+                    let src = layer * a.l_bucket * tok;
+                    let dst = layer * a.c_bucket * tok + hist * tok;
+                    hk[dst..dst + len * tok].copy_from_slice(&out.new_k[src..src + len * tok]);
+                }
+                hist += len;
+                logits = out.logits;
+            }
+            (logits, hk)
+        };
+        let (l1, k1) = run(&[40]);
+        let (l2, k2) = run(&[17, 23]);
+        let (l3, k3) = run(&[8, 16, 16]);
+        assert_eq!(l1, l2);
+        assert_eq!(l1, l3);
+        assert_eq!(k1, k2);
+        assert_eq!(k1, k3);
+    }
+
+    #[test]
+    fn stub_decode_validates_and_runs() {
+        let e = Engine::stub_default();
+        let a = e.arch.clone();
+        let dk = vec![0.0f32; a.decode_kv_elems()];
+        let dv = vec![0.0f32; a.decode_kv_elems()];
+        let out = e.decode_step(3, &dk, &dv, 10).unwrap();
+        assert_eq!(out.logits.len(), a.vocab);
+        assert_eq!(out.new_k.len(), a.n_layers * a.tok_elems());
+        assert!(argmax(&out.logits) < a.vocab);
+        // out-of-range hist rejected
+        assert!(e.decode_step(3, &dk, &dv, a.decode_c_bucket as i32).is_err());
+        assert!(e.decode_step(3, &dk, &dv, 0).is_err());
+    }
+
+    #[test]
+    fn stub_input_validation_matches_pjrt_contract() {
+        let e = Engine::stub_default();
+        let a = e.arch.clone();
+        let hk = vec![0.0f32; a.kv_elems()];
+        let hv = vec![0.0f32; a.kv_elems()];
+        assert!(e.prefill_chunk(&[1, 2, 3], &hk, &hv, 0, 3).is_err());
+        let tokens = vec![0i32; a.l_bucket];
+        assert!(e.prefill_chunk(&tokens, &hk, &hv, 0, (a.l_bucket + 1) as i32).is_err());
+        assert!(e.prefill_chunk(&tokens, &hk, &hv, 0, 0).is_err());
+        assert!(e.prefill_chunk(&tokens, &hk[1..], &hv, 0, 4).is_err());
+    }
+
+    // PJRT engine execution tests live in rust/tests/integration_runtime.rs
+    // — they need the `pjrt` feature and `make artifacts`.
 }

@@ -1,11 +1,13 @@
 //! The live mini serving stack: the full Tetris request path running real
-//! compute through PJRT.
+//! compute through PJRT (or the deterministic stub engine).
 //!
 //! OS threads play the role of prefill instances. A request flows exactly
 //! like in the paper's Fig. 4:
 //!
-//! 1. the **dispatcher** (scheduler thread) builds a CDSP plan from the
-//!    current per-worker queue clocks (same `CdspScheduler` as everywhere),
+//! 1. the **dispatcher** (scheduler thread) builds a plan from the current
+//!    per-worker queue clocks — any policy resolved through the
+//!    [`crate::api::PolicyRegistry`], the same trait objects the simulator
+//!    runs,
 //! 2. each chunk is dispatched to its instance group; the group
 //!    **synchronizes on a barrier** (ring attention mandates a simultaneous
 //!    start — this is precisely the idle-slot effect CDSP exploits), the
@@ -16,6 +18,11 @@
 //! 4. decode workers run **continuous batching**: new requests join at step
 //!    boundaries, finished ones leave, every step emits a TBT sample.
 //!
+//! Construct servers through [`crate::api::Tetris`] —
+//! `Tetris::builder().build_server(engine, n_workers)` — which validates
+//! the configuration (e.g. SP candidates vs. worker count) instead of
+//! silently patching it.
+//!
 //! Substitution note (DESIGN.md §3): on this CPU substrate a chunk's
 //! compute executes on the group leader while members hold their slot at
 //! the barrier — per-layer ring KV exchange does not speed up CPU threads
@@ -23,12 +30,13 @@
 //! everything else (planning, queueing, group reservation, KV movement,
 //! batching) is the real code path.
 
-use crate::cluster::PoolView;
-use crate::config::SchedConfig;
+use crate::api::Observer;
+use crate::baselines::PrefillScheduler;
+use crate::cluster::DispatchClock;
 use crate::latency::prefill::{PrefillModel, Sample, SpCoeffs};
 use crate::metrics::{RequestMetrics, RunMetrics};
 use crate::runtime::{argmax, Engine};
-use crate::sched::CdspScheduler;
+use crate::sched::ImprovementController;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -81,6 +89,8 @@ struct DecodeJob {
     v: Vec<f32>,
 }
 
+type ObserverSet = Arc<Vec<Arc<dyn Observer>>>;
+
 /// The live server.
 pub struct Server {
     engine: Arc<Engine>,
@@ -90,32 +100,36 @@ pub struct Server {
     decode_handle: Option<JoinHandle<()>>,
     results_rx: Receiver<RequestMetrics>,
     kv: Arc<Mutex<HashMap<u64, KvState>>>,
-    scheduler: CdspScheduler,
-    /// Estimated queue clocks driving the dispatcher's PoolView (seconds
-    /// relative to `epoch`).
-    free_at: Vec<f64>,
-    node_of: Vec<usize>,
-    per_node: usize,
+    scheduler: Box<dyn PrefillScheduler>,
+    controller: ImprovementController,
+    /// Estimated queue clocks driving the dispatcher's pool view (seconds
+    /// relative to `epoch`) — the same component the simulator commits
+    /// plans onto.
+    clock: DispatchClock,
     epoch: Instant,
     engine_coeffs: SpCoeffs,
+    observers: ObserverSet,
     stop: Arc<AtomicBool>,
 }
 
 impl Server {
-    /// Start `n_prefill` prefill workers and one decode worker.
+    /// Start `n_prefill` prefill workers and one decode worker, dispatching
+    /// through `scheduler`.
     ///
-    /// `sched_model`: the Eq. (1) model the dispatcher plans with (use
-    /// `calibrated_engine_model` for plans matched to this machine, or an
-    /// A100 model to exercise multi-chunk CDSP paths).
+    /// Prefer [`crate::api::TetrisBuilder::build_server`], which resolves
+    /// the scheduler by name and validates the configuration (a scheduler
+    /// whose SP candidates exceed `n_prefill` would make every submission
+    /// fail with "scheduling failed").
     pub fn start(
         engine: Arc<Engine>,
         n_prefill: usize,
-        sched_model: PrefillModel,
-        mut sched_cfg: SchedConfig,
+        scheduler: Box<dyn PrefillScheduler>,
+        controller: ImprovementController,
+        observers: Vec<Arc<dyn Observer>>,
     ) -> Result<Server> {
-        anyhow::ensure!(n_prefill >= 1);
-        sched_cfg.sp_candidates.retain(|&s| s <= n_prefill);
-        anyhow::ensure!(!sched_cfg.sp_candidates.is_empty());
+        anyhow::ensure!(n_prefill >= 1, "need at least one prefill worker");
+        let observers: ObserverSet = Arc::new(observers);
+        let epoch = Instant::now();
         let kv: Arc<Mutex<HashMap<u64, KvState>>> = Arc::new(Mutex::new(HashMap::new()));
         let (results_tx, results_rx) = channel();
         let (decode_tx, decode_rx) = channel::<DecodeJob>();
@@ -129,9 +143,10 @@ impl Server {
             let engine = Arc::clone(&engine);
             let kv = Arc::clone(&kv);
             let decode_tx = decode_tx.clone();
+            let obs = Arc::clone(&observers);
             let handle = std::thread::Builder::new()
                 .name(format!("tetris-prefill-{wid}"))
-                .spawn(move || prefill_worker(engine, kv, decode_tx, rx))
+                .spawn(move || prefill_worker(engine, kv, decode_tx, rx, obs, epoch))
                 .expect("spawn prefill worker");
             workers.push(tx);
             worker_handles.push(handle);
@@ -140,16 +155,16 @@ impl Server {
         // Decode worker (continuous batching).
         let decode_handle = {
             let engine = Arc::clone(&engine);
+            let obs = Arc::clone(&observers);
             std::thread::Builder::new()
                 .name("tetris-decode".into())
-                .spawn(move || decode_worker(engine, decode_rx, results_tx))
+                .spawn(move || decode_worker(engine, decode_rx, results_tx, obs, epoch))
                 .expect("spawn decode worker")
         };
 
         // Calibrate this machine's per-chunk latency for queue estimation.
         let engine_coeffs = calibrate_engine(&engine)?;
 
-        let scheduler = CdspScheduler::new(sched_model, sched_cfg);
         Ok(Server {
             engine,
             workers,
@@ -159,11 +174,11 @@ impl Server {
             results_rx,
             kv,
             scheduler,
-            free_at: vec![0.0; n_prefill],
-            node_of: (0..n_prefill).collect(), // single-node mini cluster
-            per_node: n_prefill,
-            epoch: Instant::now(),
+            controller,
+            clock: DispatchClock::single_node(n_prefill),
+            epoch,
             engine_coeffs,
+            observers,
             stop,
         })
     }
@@ -180,16 +195,23 @@ impl Server {
             a.c_bucket
         );
         let now = self.epoch.elapsed().as_secs_f64();
-        let pool = PoolView {
-            delays: self.free_at.iter().map(|f| (f - now).max(0.0)).collect(),
-            node_of: self.node_of.clone(),
-            per_node: self.per_node,
-        };
+        self.controller.on_arrival(now);
+        let rate = self.controller.rate(now);
+        let pool = self.clock.pool_view(now);
         let plan = self
             .scheduler
-            .schedule(req.prompt.len(), &pool, 0.2)
-            .ok_or_else(|| anyhow::anyhow!("scheduling failed"))?;
+            .schedule(req.prompt.len(), &pool, rate)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "scheduling failed ({} prompt tokens on {} workers)",
+                    req.prompt.len(),
+                    pool.len()
+                )
+            })?;
         debug_assert!(plan.validate(req.prompt.len()).is_ok());
+        for o in self.observers.iter() {
+            o.on_plan(req.id, &plan, now);
+        }
 
         // Register the KV state (+ decode handoff metadata).
         self.kv.lock().unwrap().insert(
@@ -241,15 +263,7 @@ impl Server {
                     .engine_coeffs
                     .predict(piece_start as f64, piece as f64)
                     .max(1e-4);
-                let ready = chunk
-                    .group
-                    .iter()
-                    .map(|&g| self.free_at[g])
-                    .fold(finish.max(now), f64::max);
-                finish = ready + est;
-                for &g in &chunk.group {
-                    self.free_at[g] = finish;
-                }
+                finish = self.clock.commit(&chunk.group, finish, est);
                 piece_start += piece;
                 remaining -= piece;
             }
@@ -304,6 +318,8 @@ fn calibrate_engine(engine: &Engine) -> Result<SpCoeffs> {
     let tokens = vec![1i32; a.l_bucket];
     let mut samples = Vec::new();
     for &(c, l) in &[(0usize, 8usize), (0, 32), (0, 64), (128, 32), (256, 64), (384, 16)] {
+        let l = l.min(a.l_bucket);
+        let c = c.min(a.c_bucket.saturating_sub(1));
         let t0 = Instant::now();
         engine.prefill_chunk(&tokens, &hk, &hv, c as i32, l as i32)?;
         samples.push(Sample { c: c as f64, l: l as f64, secs: t0.elapsed().as_secs_f64() });
@@ -323,6 +339,8 @@ fn prefill_worker(
     kv: Arc<Mutex<HashMap<u64, KvState>>>,
     decode_tx: Sender<DecodeJob>,
     rx: Receiver<WorkerJob>,
+    observers: ObserverSet,
+    epoch: Instant,
 ) {
     let a = engine.arch.clone();
     while let Ok(job) = rx.recv() {
@@ -360,6 +378,10 @@ fn prefill_worker(
                     st.hist_len = hist_len + tokens.len();
                 }
                 if is_last {
+                    let t = epoch.elapsed().as_secs_f64();
+                    for o in observers.iter() {
+                        o.on_prefill_done(req, t);
+                    }
                     let first_token = argmax(&out.logits) as i32;
                     let st = kv.lock().unwrap().remove(&req).expect("kv present");
                     // repack prefill-bucket cache into the decode bucket
@@ -376,6 +398,11 @@ fn prefill_worker(
                             v: dv,
                         })
                         .expect("decode worker alive");
+                    // one KV handoff to the (single) decode backend
+                    let t = epoch.elapsed().as_secs_f64();
+                    for o in observers.iter() {
+                        o.on_transfer(req, 0, t);
+                    }
                 }
                 end.wait();
             }
@@ -429,6 +456,8 @@ fn decode_worker(
     engine: Arc<Engine>,
     rx: Receiver<DecodeJob>,
     results: Sender<RequestMetrics>,
+    observers: ObserverSet,
+    epoch: Instant,
 ) {
     let a = engine.arch.clone();
     let mut active: Vec<ActiveDecode> = Vec::new();
@@ -491,6 +520,9 @@ fn decode_worker(
             let now = Instant::now();
             st.tbt.push(now.duration_since(st.last_at).as_secs_f64());
             st.last_at = now;
+            for o in observers.iter() {
+                o.on_token(st.job.req, epoch.elapsed().as_secs_f64());
+            }
             if st.tokens_out >= st.job.output_len {
                 finishing(&results, st);
             } else {
@@ -578,6 +610,6 @@ mod tests {
         assert_eq!(dk[5 * tok], 0.0);
     }
 
-    // Full server tests live in rust/tests/integration_serve.rs (they need
-    // artifacts).
+    // Full server tests live in rust/tests/integration_serve.rs (they run
+    // on the stub engine, or on real PJRT artifacts when present).
 }

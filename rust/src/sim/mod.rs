@@ -2,10 +2,14 @@
 //!
 //! Reproduces the paper's evaluation environment: a disaggregated A100
 //! cluster serving Poisson arrivals from the production-shaped length
-//! distributions, under any of the five scheduling policies. All latencies
+//! distributions, under any registered scheduling policy. All latencies
 //! come from the calibrated models in `latency` (DESIGN.md §3 explains the
 //! substitution); all scheduling decisions run the *real* scheduler code —
 //! the same `CdspScheduler` the live engine uses.
+//!
+//! Construct simulations through [`crate::api::Tetris`]; the builder
+//! validates the configuration, resolves the policy by name through the
+//! [`crate::api::PolicyRegistry`], and wires up observers.
 //!
 //! Event loop:
 //! * `Arrival` — route to a decode instance (virtual usage), run the prefill
@@ -22,9 +26,10 @@
 
 pub mod profiler;
 
+use crate::api::Observer;
 use crate::baselines::PrefillScheduler;
-use crate::cluster::PoolView;
-use crate::config::{ClusterConfig, Policy};
+use crate::cluster::DispatchClock;
+use crate::config::ClusterConfig;
 use crate::latency::{DecodeModel, PrefillModel, TransferModel};
 use crate::metrics::{RequestMetrics, RunMetrics};
 use crate::modelcfg::ModelArch;
@@ -33,6 +38,7 @@ use crate::transfer::{Handshake, HandshakeReply, ReceiveManager};
 use crate::workload::Request;
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 /// Number of transfer backends per decode instance (paper stresses halving
 /// this; see `fig14` bench).
@@ -54,7 +60,7 @@ struct Timed {
 
 impl PartialEq for Timed {
     fn eq(&self, o: &Self) -> bool {
-        self.at == o.at && self.seq == o.seq
+        self.cmp(o) == Ordering::Equal
     }
 }
 impl Eq for Timed {}
@@ -65,10 +71,11 @@ impl PartialOrd for Timed {
 }
 impl Ord for Timed {
     fn cmp(&self, o: &Self) -> Ordering {
-        // min-heap by time (ties broken by insertion order for determinism)
-        o.at.partial_cmp(&self.at)
-            .unwrap()
-            .then_with(|| o.seq.cmp(&self.seq))
+        // min-heap by time (ties broken by insertion order for
+        // determinism). `total_cmp` keeps the ordering total even if a
+        // latency model ever yields NaN — a poisoned timestamp must not
+        // panic the event loop.
+        o.at.total_cmp(&self.at).then_with(|| o.seq.cmp(&self.seq))
     }
 }
 
@@ -111,12 +118,13 @@ impl SimParams {
     }
 }
 
-/// The simulator.
-pub struct Simulator<'a> {
+/// The simulator. Owns its scheduler, so user-registered policies are
+/// first-class: any `Box<dyn PrefillScheduler>` drives the cluster.
+pub struct Simulator {
     pub arch: ModelArch,
     pub cluster: ClusterConfig,
     pub params: SimParams,
-    pub scheduler: &'a dyn PrefillScheduler,
+    pub scheduler: Box<dyn PrefillScheduler>,
     pub controller: ImprovementController,
     pub decode_model: DecodeModel,
     pub transfer_model: TransferModel,
@@ -126,16 +134,16 @@ pub struct Simulator<'a> {
     /// LoongServe (non-disaggregated) decode runs as SP over TP=prefill_tp
     /// instances instead of large TP — the Fig. 8 TBT gap.
     pub esp_decode: bool,
+    /// Lifecycle-event subscribers (see [`crate::api::Observer`]).
+    pub observers: Vec<Arc<dyn Observer>>,
 }
 
-impl<'a> Simulator<'a> {
+impl Simulator {
     /// Run the trace to completion and collect metrics.
     pub fn run(&mut self, trace: &[Request]) -> RunMetrics {
         let n_prefill = self.cluster.n_prefill_instances();
         let per_node = self.cluster.prefill_instances_per_node();
-        let n_nodes = n_prefill.div_ceil(per_node);
-        let mut free_at = vec![0.0f64; n_prefill];
-        let node_of: Vec<usize> = (0..n_prefill).map(|i| i / per_node).collect();
+        let mut clock = DispatchClock::grid(n_prefill, per_node);
 
         let n_decode = self.cluster.n_decode_instances().max(1);
         let blocks = self.params.decode_capacity_tokens / self.params.block_tokens;
@@ -197,10 +205,7 @@ impl<'a> Simulator<'a> {
                     match router.route(need) {
                         Some(d) => {
                             reqs[i].decode_inst = Some(d);
-                            self.start_prefill(
-                                i, now, &mut reqs, &mut free_at, &node_of, n_nodes,
-                                per_node, &mut heap, &mut seq,
-                            );
+                            self.start_prefill(i, now, &mut reqs, &mut clock, &mut heap, &mut seq);
                         }
                         None => waiting.push_back(i),
                     }
@@ -208,6 +213,9 @@ impl<'a> Simulator<'a> {
                 Event::PrefillDone { req } => {
                     reqs[req].first_token = Some(now);
                     reqs[req].last_token_at = now;
+                    for o in &self.observers {
+                        o.on_prefill_done(req as u64, now);
+                    }
                     // stream KV to the decode instance through the handshake
                     let d = reqs[req].decode_inst.expect("routed");
                     let senders = reqs[req].n_senders.max(1);
@@ -243,6 +251,9 @@ impl<'a> Simulator<'a> {
                     }
                 }
                 Event::ShardDone { req, backend } => {
+                    for o in &self.observers {
+                        o.on_transfer(req as u64, backend, now);
+                    }
                     let d = reqs[req].decode_inst.unwrap();
                     let (grants, complete) = receivers[d].transfer_done(req as u64, backend);
                     for (hs, b) in grants {
@@ -296,6 +307,9 @@ impl<'a> Simulator<'a> {
                         let gap = t_end - reqs[r].last_token_at;
                         reqs[r].tbt.push(gap);
                         reqs[r].last_token_at = t_end;
+                        for o in &self.observers {
+                            o.on_token(r as u64, t_end);
+                        }
                         if reqs[r].tokens_out >= reqs[r].output_len {
                             reqs[r].finished = true;
                             done += 1;
@@ -316,10 +330,7 @@ impl<'a> Simulator<'a> {
                     }
                     waiting.retain(|w| !admitted.contains(w));
                     for w in admitted {
-                        self.start_prefill(
-                            w, t_end, &mut reqs, &mut free_at, &node_of, n_nodes,
-                            per_node, &mut heap, &mut seq,
-                        );
+                        self.start_prefill(w, t_end, &mut reqs, &mut clock, &mut heap, &mut seq);
                     }
                     if batches[inst].is_empty() {
                         step_scheduled[inst] = false;
@@ -351,66 +362,46 @@ impl<'a> Simulator<'a> {
     }
 
     /// Schedule one request's prefill at time `now`, committing chunk
-    /// finishes (incl. cache-balancing exposure) into `free_at` and pushing
-    /// the PrefillDone event.
-    #[allow(clippy::too_many_arguments)]
+    /// finishes (incl. cache-balancing exposure) onto the dispatch clock
+    /// and pushing the PrefillDone event.
     fn start_prefill(
         &mut self,
         i: usize,
         now: f64,
         reqs: &mut [ReqState],
-        free_at: &mut [f64],
-        node_of: &[usize],
-        _n_nodes: usize,
-        per_node: usize,
+        clock: &mut DispatchClock,
         heap: &mut BinaryHeap<Timed>,
         seq: &mut u64,
     ) {
-        let pool = PoolView {
-            delays: free_at.iter().map(|f| (f - now).max(0.0)).collect(),
-            node_of: node_of.to_vec(),
-            per_node,
-        };
+        let pool = clock.pool_view(now);
         let rate = self.controller.rate(now);
         let plan = self
             .scheduler
             .schedule(reqs[i].prompt_len, &pool, rate)
             .expect("non-empty pool");
         debug_assert!(plan.validate(reqs[i].prompt_len).is_ok());
+        for o in &self.observers {
+            o.on_plan(i as u64, &plan, now);
+        }
 
         // Walk chunks to absolute times.
         let mut hist = 0usize;
         let mut prev_sp = 0usize;
         let mut finish = now;
         for chunk in &plan.chunks {
-            let ready = chunk
-                .group
-                .iter()
-                .map(|&g| free_at[g])
-                .fold(now, f64::max)
-                .max(finish);
             let sp = chunk.group.len();
             let compute = self
                 .prefill_model
                 .predict(sp, hist as f64, chunk.len as f64);
             let balance = if prev_sp > 0 && sp > prev_sp {
-                let cross = {
-                    let mut nodes: Vec<usize> =
-                        chunk.group.iter().map(|&g| node_of[g]).collect();
-                    nodes.sort();
-                    nodes.dedup();
-                    nodes.len() > 1
-                };
+                let cross = clock.spans_nodes(&chunk.group);
                 self.transfer_model.balance_exposed_secs(
                     &self.arch, hist as u64, prev_sp, sp, compute, cross,
                 )
             } else {
                 0.0
             };
-            finish = ready + compute + balance;
-            for &g in &chunk.group {
-                free_at[g] = free_at[g].max(finish);
-            }
+            finish = clock.commit(&chunk.group, finish, compute + balance);
             hist += chunk.len;
             prev_sp = sp;
         }
@@ -420,68 +411,10 @@ impl<'a> Simulator<'a> {
     }
 }
 
-/// Convenience: build and run a full simulation for a policy.
-pub struct SimBuilder {
-    pub arch: ModelArch,
-    pub cluster: ClusterConfig,
-    pub policy: Policy,
-    pub sched_cfg: crate::config::SchedConfig,
-    pub controller: ImprovementController,
-}
-
-impl SimBuilder {
-    pub fn paper_8b(policy: Policy) -> Self {
-        let cfg = crate::config::Config::paper_8b();
-        SimBuilder {
-            arch: ModelArch::llama3_8b(),
-            cluster: cfg.cluster,
-            policy,
-            sched_cfg: cfg.sched,
-            controller: ImprovementController::fixed(0.3),
-        }
-    }
-
-    pub fn paper_70b(policy: Policy) -> Self {
-        let cfg = crate::config::Config::paper_70b();
-        SimBuilder {
-            arch: ModelArch::llama3_70b(),
-            cluster: cfg.cluster,
-            policy,
-            sched_cfg: cfg.sched,
-            controller: ImprovementController::fixed(0.3),
-        }
-    }
-
-    pub fn run(&self, trace: &[Request]) -> RunMetrics {
-        let prefill_model = crate::latency::a100_model_for(
-            &self.arch,
-            self.cluster.prefill_tp,
-            &self.sched_cfg.sp_candidates,
-        );
-        let scheduler = crate::baselines::make_scheduler(
-            self.policy,
-            prefill_model.clone(),
-            self.sched_cfg.clone(),
-        );
-        let params = SimParams::for_arch(&self.arch, &self.cluster);
-        let mut sim = Simulator {
-            arch: self.arch.clone(),
-            cluster: self.cluster.clone(),
-            params,
-            scheduler: scheduler.as_ref(),
-            controller: self.controller.clone(),
-            decode_model: DecodeModel::a100(&self.arch),
-            transfer_model: TransferModel::from_cluster(&self.cluster),
-            prefill_model,
-            esp_decode: matches!(self.policy, Policy::LoongServe),
-        };
-        sim.run(trace)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::Tetris;
     use crate::util::rng::Pcg64;
     use crate::workload::{TraceKind, WorkloadGen};
 
@@ -491,10 +424,18 @@ mod tests {
         gen.generate(n, rate, &mut rng)
     }
 
+    fn run_8b(policy: &str, trace: &[Request]) -> RunMetrics {
+        Tetris::paper_8b()
+            .policy(policy)
+            .build_simulation()
+            .expect("valid builder")
+            .run(trace)
+    }
+
     #[test]
     fn all_requests_complete() {
         let trace = small_trace(40, 0.5, 1);
-        let m = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+        let m = run_8b("tetris-cdsp", &trace);
         assert_eq!(m.requests.len(), 40);
         for r in &m.requests {
             assert!(r.ttft() > 0.0, "ttft must be positive");
@@ -506,16 +447,16 @@ mod tests {
     #[test]
     fn deterministic_runs() {
         let trace = small_trace(25, 1.0, 7);
-        let a = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
-        let b = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+        let a = run_8b("tetris-cdsp", &trace);
+        let b = run_8b("tetris-cdsp", &trace);
         assert_eq!(a.ttft_summary().p99, b.ttft_summary().p99);
         assert_eq!(a.tbt_summary().p50, b.tbt_summary().p50);
     }
 
     #[test]
     fn higher_load_higher_ttft() {
-        let light = SimBuilder::paper_8b(Policy::Cdsp).run(&small_trace(40, 0.05, 3));
-        let heavy = SimBuilder::paper_8b(Policy::Cdsp).run(&small_trace(40, 3.0, 3));
+        let light = run_8b("tetris-cdsp", &small_trace(40, 0.05, 3));
+        let heavy = run_8b("tetris-cdsp", &small_trace(40, 3.0, 3));
         assert!(
             heavy.ttft_summary().p99 > light.ttft_summary().p99,
             "heavy {} !> light {}",
@@ -528,8 +469,8 @@ mod tests {
     fn cdsp_beats_fixed_sp16_under_load() {
         // Fig. 8's headline shape at a moderate-high rate.
         let trace = small_trace(60, 1.5, 11);
-        let cdsp = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
-        let fixed16 = SimBuilder::paper_8b(Policy::FixedSp(16)).run(&trace);
+        let cdsp = run_8b("tetris-cdsp", &trace);
+        let fixed16 = run_8b("fixed-sp16", &trace);
         assert!(
             cdsp.ttft_summary().p50 < fixed16.ttft_summary().p50,
             "cdsp {} !< fixed16 {}",
@@ -543,8 +484,8 @@ mod tests {
         // LoongServe's small-TP decode must show higher TBT than the
         // disaggregated large-TP decode (Fig. 8 right column).
         let trace = small_trace(40, 0.4, 5);
-        let ls = SimBuilder::paper_8b(Policy::LoongServe).run(&trace);
-        let disagg = SimBuilder::paper_8b(Policy::LoongServeDisagg).run(&trace);
+        let ls = run_8b("loongserve", &trace);
+        let disagg = run_8b("loongserve-disagg", &trace);
         assert!(
             ls.tbt_summary().p50 > disagg.tbt_summary().p50 * 1.3,
             "esp tbt {} vs disagg {}",
@@ -556,15 +497,34 @@ mod tests {
     #[test]
     fn seventy_b_runs() {
         let trace = small_trace(20, 0.3, 9);
-        let m = SimBuilder::paper_70b(Policy::Cdsp).run(&trace);
+        let m = Tetris::paper_70b()
+            .policy("tetris-cdsp")
+            .build_simulation()
+            .unwrap()
+            .run(&trace);
         assert_eq!(m.requests.len(), 20);
     }
 
     #[test]
     fn throughput_positive() {
         let trace = small_trace(30, 1.0, 13);
-        let m = SimBuilder::paper_8b(Policy::Cdsp).run(&trace);
+        let m = run_8b("tetris-cdsp", &trace);
         assert!(m.token_throughput() > 0.0);
         assert!(m.request_throughput() > 0.0);
+    }
+
+    #[test]
+    fn timed_order_is_nan_safe() {
+        // total_cmp keeps the heap total even with NaN timestamps; a NaN
+        // sorts after every finite time (it must not panic, and must not
+        // starve finite events).
+        let mut heap = BinaryHeap::new();
+        for (i, at) in [(0u64, 2.0f64), (1, f64::NAN), (2, 1.0)] {
+            heap.push(Timed { at, seq: i, ev: Event::Arrival(i as usize) });
+        }
+        let order: Vec<f64> = std::iter::from_fn(|| heap.pop().map(|t| t.at)).collect();
+        assert_eq!(order[0], 1.0);
+        assert_eq!(order[1], 2.0);
+        assert!(order[2].is_nan());
     }
 }

@@ -10,9 +10,8 @@
 //! This runs offline (`tetris profile-rate`); online the
 //! `ImprovementController` queries the resulting `RateProfile`.
 
-use crate::config::Policy;
+use crate::api::TetrisBuilder;
 use crate::sched::{ImprovementController, RateProfile};
-use crate::sim::SimBuilder;
 use crate::util::rng::Pcg64;
 use crate::workload::{TraceKind, WorkloadGen};
 
@@ -64,14 +63,12 @@ impl ProfileSweep {
     }
 }
 
-/// Run the offline profiling sweep for a trace family on the 8B or 70B
-/// cluster. The same sampled trace is reused across improvement rates per
-/// arrival-rate cell (paired comparison, lower variance).
-pub fn profile(
-    builder_for: impl Fn(Policy) -> SimBuilder,
-    kind: TraceKind,
-    params: &ProfileParams,
-) -> ProfileSweep {
+/// Run the offline profiling sweep for a trace family. `base` is the
+/// cluster configuration to profile (e.g. `Tetris::paper_8b()`); each cell
+/// forks it with `tetris-cdsp` and a fixed improvement rate. The same
+/// sampled trace is reused across improvement rates per arrival-rate cell
+/// (paired comparison, lower variance).
+pub fn profile(base: &TetrisBuilder, kind: TraceKind, params: &ProfileParams) -> ProfileSweep {
     let gen = WorkloadGen::paper_trace(kind);
     let mut cells = Vec::new();
     for &rate in &params.rates {
@@ -79,9 +76,13 @@ pub fn profile(
         let trace = gen.generate(params.n_requests, rate, &mut rng);
         let mut row = Vec::new();
         for &ir in &params.improvement_rates {
-            let mut b = builder_for(Policy::Cdsp);
-            b.controller = ImprovementController::fixed(ir);
-            let m = b.run(&trace);
+            let mut sim = base
+                .clone()
+                .policy("tetris-cdsp")
+                .controller(ImprovementController::fixed(ir))
+                .build_simulation()
+                .expect("profiler base builder must be valid");
+            let m = sim.run(&trace);
             row.push((ir, m.ttft_summary().mean));
         }
         cells.push((rate, row));
@@ -92,6 +93,7 @@ pub fn profile(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::Tetris;
 
     #[test]
     fn sweep_produces_profile() {
@@ -101,7 +103,7 @@ mod tests {
             n_requests: 30,
             seed: 5,
         };
-        let sweep = profile(SimBuilder::paper_8b, TraceKind::Medium, &params);
+        let sweep = profile(&Tetris::paper_8b(), TraceKind::Medium, &params);
         assert_eq!(sweep.cells.len(), 2);
         let profile = sweep.best_profile();
         assert_eq!(profile.entries.len(), 2);
@@ -120,7 +122,7 @@ mod tests {
             n_requests: 60,
             seed: 21,
         };
-        let sweep = profile(SimBuilder::paper_8b, TraceKind::Long, &params);
+        let sweep = profile(&Tetris::paper_8b(), TraceKind::Long, &params);
         let row = &sweep.cells[0].1;
         let t_small = row.iter().find(|(ir, _)| *ir == 0.05).unwrap().1;
         let t_large = row.iter().find(|(ir, _)| *ir == 0.75).unwrap().1;

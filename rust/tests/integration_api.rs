@@ -1,0 +1,183 @@
+//! Integration: the `tetris::api` facade — policy-registry round-trips,
+//! builder validation, determinism against the manually-wired path, and
+//! observer plumbing.
+
+use std::sync::Arc;
+use tetris::api::{PolicyCtx, PolicyRegistry, Tetris, TraceRecorder};
+use tetris::baselines::{make_scheduler, PrefillScheduler};
+use tetris::cluster::PoolView;
+use tetris::config::Policy;
+use tetris::latency::{a100_model_for, DecodeModel, TransferModel};
+use tetris::modelcfg::ModelArch;
+use tetris::sched::{plan::CdspPlan, plan::ChunkPlan, ImprovementController};
+use tetris::sim::{SimParams, Simulator};
+use tetris::util::rng::Pcg64;
+use tetris::workload::{Request, TraceKind, WorkloadGen};
+
+fn trace(n: usize, rate: f64, seed: u64) -> Vec<Request> {
+    let gen = WorkloadGen::paper_trace(TraceKind::Medium);
+    let mut rng = Pcg64::new(seed);
+    gen.generate(n, rate, &mut rng)
+}
+
+#[test]
+fn every_registered_policy_builds_and_runs() {
+    // Round-trip: every canonical registry name (plus two family members)
+    // constructs through the builder and completes a 20-request trace.
+    let mut names = PolicyRegistry::with_builtins().names();
+    names.push("fixed-sp8".into());
+    names.push("fixed-sp16".into());
+    let t = trace(20, 0.8, 5);
+    for name in names {
+        let mut sim = Tetris::paper_8b()
+            .policy(&name)
+            .build_simulation()
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let m = sim.run(&t);
+        assert_eq!(m.requests.len(), 20, "{name} lost requests");
+        assert!(m.ttft_summary().p99 > 0.0, "{name} produced no latency");
+    }
+}
+
+#[test]
+fn aliases_resolve_to_the_same_policy() {
+    let r = PolicyRegistry::with_builtins();
+    let ctx = PolicyCtx {
+        model: a100_model_for(&ModelArch::llama3_8b(), 1, &[1, 2, 4, 8, 16]),
+        sched: tetris::config::SchedConfig::default(),
+    };
+    for (alias, canonical) in
+        [("cdsp", "tetris-cdsp"), ("tetris", "tetris-cdsp"), ("single-chunk", "tetris-single-chunk")]
+    {
+        assert_eq!(r.resolve(alias, &ctx).unwrap().name(), canonical);
+    }
+}
+
+#[test]
+fn builder_validation_errors_are_descriptive() {
+    // unknown policy
+    let err = Tetris::paper_8b().policy("frobnicate").build_simulation().unwrap_err();
+    assert!(err.to_string().contains("unknown policy 'frobnicate'"), "{err}");
+    assert!(err.to_string().contains("loongserve"), "{err}");
+    // sp candidate exceeding the cluster
+    let err = Tetris::paper_8b().sp_candidates(vec![32]).build_simulation().unwrap_err();
+    assert!(err.to_string().contains("sp candidate 32"), "{err}");
+    // degenerate knobs
+    assert!(Tetris::paper_8b().sp_candidates(vec![]).build_simulation().is_err());
+    assert!(Tetris::paper_8b().min_chunk(0).build_simulation().is_err());
+}
+
+#[test]
+fn statically_unschedulable_policy_fails_at_build() {
+    // fixed-sp32 passes the generic sp_candidates checks (those only see
+    // the SchedConfig) but can never produce a plan on 16 instances — the
+    // build-time probe must catch it instead of letting the run panic.
+    let err = Tetris::paper_8b().policy("fixed-sp32").build_simulation().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("cannot schedule"), "{msg}");
+    // The 70B cluster has 8 prefill instances: fixed-sp16 is invalid there.
+    assert!(Tetris::paper_70b().policy("fixed-sp16").build_simulation().is_err());
+    assert!(Tetris::paper_70b().policy("fixed-sp8").build_simulation().is_ok());
+}
+
+#[test]
+fn api_matches_manually_wired_simulator() {
+    // Same seed, same trace: the facade-built run must be bit-identical to
+    // the manually assembled Simulator fed by the legacy make_scheduler
+    // shim (the pre-facade wiring).
+    let t = trace(30, 1.2, 21);
+    let api_run = Tetris::paper_8b()
+        .policy("tetris-cdsp")
+        .build_simulation()
+        .unwrap()
+        .run(&t);
+
+    let arch = ModelArch::llama3_8b();
+    let cluster = tetris::config::ClusterConfig::paper_8b();
+    let sched_cfg = tetris::config::SchedConfig::default();
+    let model = a100_model_for(&arch, cluster.prefill_tp, &sched_cfg.sp_candidates);
+    let mut manual = Simulator {
+        params: SimParams::for_arch(&arch, &cluster),
+        scheduler: make_scheduler(Policy::Cdsp, model.clone(), sched_cfg),
+        controller: ImprovementController::fixed(0.3),
+        decode_model: DecodeModel::a100(&arch),
+        transfer_model: TransferModel::from_cluster(&cluster),
+        prefill_model: model,
+        esp_decode: false,
+        observers: Vec::new(),
+        arch,
+        cluster,
+    };
+    let manual_run = manual.run(&t);
+    assert_eq!(api_run, manual_run, "facade and manual wiring must agree exactly");
+}
+
+#[test]
+fn same_seed_same_metrics_through_the_api() {
+    let run = || {
+        Tetris::paper_8b()
+            .policy("tetris-cdsp")
+            .seed(1234)
+            .build_simulation()
+            .unwrap()
+            .run_generated(TraceKind::Long, 25, 1.0)
+    };
+    assert_eq!(run(), run(), "identical seeds must give identical RunMetrics");
+}
+
+#[test]
+fn simulator_emits_observer_events() {
+    let rec = Arc::new(TraceRecorder::new());
+    let t = trace(15, 1.0, 3);
+    let m = Tetris::paper_8b()
+        .policy("tetris-cdsp")
+        .observe(rec.clone())
+        .build_simulation()
+        .unwrap()
+        .run(&t);
+    assert_eq!(rec.count("plan"), 15, "one plan per request");
+    assert_eq!(rec.count("prefill_done"), 15);
+    assert!(rec.count("transfer") >= 15, "at least one shard per request");
+    let total_tokens: usize = m.requests.iter().map(|r| r.output_len).sum();
+    assert_eq!(rec.count("token"), total_tokens);
+    // events are timestamped within the run horizon (the last token of a
+    // finishing batch lands at its step's end, which may sit just past the
+    // last popped event time that defines `span`)
+    let horizon = m.requests.iter().map(|r| r.finish).fold(m.span, f64::max);
+    assert!(rec.events().iter().all(|e| e.at() >= 0.0 && e.at() <= horizon + 1e-9));
+}
+
+#[test]
+fn custom_policy_is_first_class() {
+    // An out-of-crate scheduler: single chunk on the two least-loaded
+    // instances. Registered by name, it runs through the same facade.
+    struct TwoWide;
+    impl PrefillScheduler for TwoWide {
+        fn schedule(&self, prompt_len: usize, pool: &PoolView, _rate: f64) -> Option<CdspPlan> {
+            let group = pool.get_group(&[], 2.min(pool.len()))?;
+            let est = pool.group_ready(&group).max(1e-9);
+            Some(CdspPlan { chunks: vec![ChunkPlan { len: prompt_len, group }], est_ttft: est })
+        }
+        fn name(&self) -> String {
+            "two-wide".into()
+        }
+    }
+
+    let t = trace(12, 0.5, 8);
+    let mut sim = Tetris::paper_8b()
+        .register_policy("two-wide", |_ctx| Ok(Box::new(TwoWide)))
+        .policy("two-wide")
+        .build_simulation()
+        .expect("custom policy must build");
+    assert_eq!(sim.scheduler_name(), "two-wide");
+    let m = sim.run(&t);
+    assert_eq!(m.requests.len(), 12);
+}
+
+#[test]
+fn from_config_respects_policy_field() {
+    let mut cfg = tetris::config::Config::paper_8b();
+    cfg.policy = Policy::FixedSp(8);
+    let sim = Tetris::from_config(&cfg).unwrap().build_simulation().unwrap();
+    assert_eq!(sim.scheduler_name(), "fixed-sp8");
+}

@@ -2,7 +2,9 @@
 //! artifacts, executes them through PJRT, and the numerics compose exactly
 //! the way the python tests proved they do in-process.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Requires the `pjrt` feature and `make artifacts` (the Makefile test
+//! target guarantees it); compiled out otherwise.
+#![cfg(feature = "pjrt")]
 
 use tetris::runtime::{argmax, artifacts_dir, Engine, Manifest};
 

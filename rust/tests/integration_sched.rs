@@ -1,13 +1,13 @@
 //! Integration: scheduler + improvement-rate controller + profiler working
 //! together the way the online system composes them.
 
-use tetris::config::{Policy, SchedConfig};
+use tetris::api::Tetris;
 use tetris::cluster::PoolView;
+use tetris::config::SchedConfig;
 use tetris::latency::a100_model_for;
 use tetris::modelcfg::ModelArch;
 use tetris::sched::{CdspScheduler, ImprovementController, RateProfile};
 use tetris::sim::profiler::{profile, ProfileParams};
-use tetris::sim::SimBuilder;
 use tetris::workload::TraceKind;
 
 #[test]
@@ -19,7 +19,7 @@ fn profiled_rates_feed_the_controller() {
         n_requests: 40,
         seed: 3,
     };
-    let sweep = profile(SimBuilder::paper_8b, TraceKind::Medium, &params);
+    let sweep = profile(&Tetris::paper_8b(), TraceKind::Medium, &params);
     let profile = sweep.best_profile();
     assert_eq!(profile.entries.len(), 3);
 
@@ -47,9 +47,14 @@ fn dynamic_rate_at_least_matches_worst_fixed_rate() {
     let trace = gen.generate(60, 1.5, &mut rng);
 
     let run_with = |ctl: ImprovementController| {
-        let mut b = SimBuilder::paper_8b(Policy::Cdsp);
-        b.controller = ctl;
-        b.run(&trace).ttft_summary().mean
+        Tetris::paper_8b()
+            .policy("tetris-cdsp")
+            .controller(ctl)
+            .build_simulation()
+            .expect("valid builder")
+            .run(&trace)
+            .ttft_summary()
+            .mean
     };
     let t_low = run_with(ImprovementController::fixed(0.05));
     let t_high = run_with(ImprovementController::fixed(0.75));

@@ -1,8 +1,10 @@
-//! Integration: the live threaded serving stack over real PJRT execution.
-//! Requires `make artifacts`.
+//! Integration: the live threaded serving stack, constructed through
+//! `tetris::api`. Runs on real PJRT artifacts when they are available
+//! (`--features pjrt` + `make artifacts`), otherwise on the deterministic
+//! stub engine — the dispatch/barrier/KV/batching path is identical.
 
 use std::sync::Arc;
-use tetris::config::SchedConfig;
+use tetris::api::{Tetris, TetrisBuilder, TraceRecorder};
 use tetris::latency::prefill::{PrefillModel, SpCoeffs};
 use tetris::runtime::{artifacts_dir, Engine};
 use tetris::serve::{ServeRequest, Server};
@@ -27,12 +29,21 @@ fn sched_model(n: usize) -> PrefillModel {
     m
 }
 
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::load(&artifacts_dir()).unwrap_or_else(|_| Engine::stub_default()))
+}
+
+fn builder(n_workers: usize) -> TetrisBuilder {
+    let sp: Vec<usize> = [1usize, 2, 4].into_iter().filter(|&s| s <= n_workers).collect();
+    Tetris::builder()
+        .policy("tetris-cdsp")
+        .sp_candidates(sp)
+        .min_chunk(32)
+        .prefill_model(sched_model(n_workers))
+}
+
 fn server(n_workers: usize) -> Server {
-    let engine = Arc::new(Engine::load(&artifacts_dir()).expect("make artifacts"));
-    let mut cfg = SchedConfig::default();
-    cfg.sp_candidates = vec![1, 2, 4];
-    cfg.min_chunk = 32;
-    Server::start(engine, n_workers, sched_model(n_workers), cfg).expect("server start")
+    builder(n_workers).build_server(engine(), n_workers).expect("server start")
 }
 
 fn req(id: u64, len: usize, out: usize) -> ServeRequest {
@@ -104,4 +115,38 @@ fn decode_is_continuous_batching() {
         assert_eq!(r.output_len, 6);
     }
     s.shutdown().unwrap();
+}
+
+#[test]
+fn build_server_rejects_oversized_sp_candidates() {
+    // The old Server::start silently retained only the fitting candidates;
+    // the builder reports the mismatch instead.
+    let err = Tetris::builder()
+        .sp_candidates(vec![1, 2, 4])
+        .min_chunk(32)
+        .prefill_model(sched_model(4))
+        .build_server(engine(), 2)
+        .err()
+        .expect("must reject sp candidate 4 on 2 workers");
+    let msg = err.to_string();
+    assert!(msg.contains("sp candidate 4"), "{msg}");
+    assert!(msg.contains("2 prefill workers"), "{msg}");
+}
+
+#[test]
+fn server_emits_observer_events() {
+    let rec = Arc::new(TraceRecorder::new());
+    let mut s = builder(2)
+        .observe(rec.clone())
+        .build_server(engine(), 2)
+        .expect("server start");
+    let reqs: Vec<ServeRequest> = (0..3).map(|i| req(i, 40, 4)).collect();
+    let m = s.run_trace(&reqs, 0.0).expect("trace");
+    assert_eq!(m.requests.len(), 3);
+    s.shutdown().unwrap();
+    assert_eq!(rec.count("plan"), 3, "one plan per submission");
+    assert_eq!(rec.count("prefill_done"), 3);
+    assert_eq!(rec.count("transfer"), 3, "one KV handoff per request");
+    // first token comes from prefill; 3 decode steps per request
+    assert_eq!(rec.count("token"), 9);
 }

@@ -1,9 +1,10 @@
 //! Integration: full simulator campaigns — the shapes the paper's figures
-//! are built from, on smaller samples than the bench harnesses use.
+//! are built from, on smaller samples than the bench harnesses use. All
+//! runs construct through `tetris::api`.
 
-use tetris::config::Policy;
-use tetris::metrics::{max_sustainable_rate, SloCriterion};
-use tetris::sim::SimBuilder;
+use tetris::api::Tetris;
+use tetris::metrics::{max_sustainable_rate, RunMetrics, SloCriterion};
+use tetris::sched::{ImprovementController, RateProfile};
 use tetris::util::rng::Pcg64;
 use tetris::workload::{scale_rate, TraceKind, WorkloadGen};
 
@@ -13,45 +14,58 @@ fn trace(kind: TraceKind, n: usize, rate: f64, seed: u64) -> Vec<tetris::workloa
     gen.generate(n, rate, &mut rng)
 }
 
+fn run_8b(policy: &str, trace: &[tetris::workload::Request]) -> RunMetrics {
+    Tetris::paper_8b()
+        .policy(policy)
+        .build_simulation()
+        .expect("valid builder")
+        .run(trace)
+}
+
+fn run_8b_dynamic(policy: &str, trace: &[tetris::workload::Request]) -> RunMetrics {
+    Tetris::paper_8b()
+        .policy(policy)
+        .controller(ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0))
+        .build_simulation()
+        .expect("valid builder")
+        .run(trace)
+}
+
 #[test]
 fn five_policies_complete_and_rank_sanely() {
     // Paper Fig. 8 shape, seed-averaged (single-seed P99 is tie-break
     // noise): under heavy load Tetris's mean P99 TTFT leads the field
     // within tolerance, and Fixed-SP16's over-provision collapses.
-    use tetris::sched::{ImprovementController, RateProfile};
     use tetris::util::stats::mean;
     let policies = [
-        Policy::Cdsp,
-        Policy::CdspSingleChunk,
-        Policy::LoongServe,
-        Policy::LoongServeDisagg,
-        Policy::FixedSp(8),
-        Policy::FixedSp(16),
+        "tetris-cdsp",
+        "tetris-single-chunk",
+        "loongserve",
+        "loongserve-disagg",
+        "fixed-sp8",
+        "fixed-sp16",
     ];
-    let mut p99s: Vec<(Policy, Vec<f64>)> =
+    let mut p99s: Vec<(&str, Vec<f64>)> =
         policies.iter().map(|p| (*p, Vec::new())).collect();
     for seed in [42u64, 43, 44] {
         let t = trace(TraceKind::Medium, 60, 2.5, seed);
         for (pi, p) in policies.iter().enumerate() {
-            let mut b = SimBuilder::paper_8b(*p);
-            b.controller =
-                ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0);
-            let m = b.run(&t);
-            assert_eq!(m.requests.len(), 60, "{:?} lost requests", p);
+            let m = run_8b_dynamic(p, &t);
+            assert_eq!(m.requests.len(), 60, "{p} lost requests");
             p99s[pi].1.push(m.ttft_summary().p99);
         }
     }
-    let avg: Vec<(Policy, f64)> = p99s.iter().map(|(p, v)| (*p, mean(v))).collect();
+    let avg: Vec<(&str, f64)> = p99s.iter().map(|(p, v)| (*p, mean(v))).collect();
     let cdsp = avg[0].1;
     for (p, v) in &avg[1..] {
         assert!(
             cdsp <= v * 1.15,
-            "CDSP mean p99 {cdsp} should lead under load; {p:?} got {v}"
+            "CDSP mean p99 {cdsp} should lead under load; {p} got {v}"
         );
     }
     // Fixed-SP16 must be clearly worse than CDSP at this load (resource
     // over-provision, paper Sec. 7.2).
-    let f16 = avg.iter().find(|(p, _)| *p == Policy::FixedSp(16)).unwrap().1;
+    let f16 = avg.iter().find(|(p, _)| *p == "fixed-sp16").unwrap().1;
     assert!(f16 > cdsp * 1.8, "fixed-sp16 {f16} vs cdsp {cdsp}");
 }
 
@@ -60,24 +74,16 @@ fn capacity_search_finds_cdsp_advantage() {
     // Miniature Fig. 8 capacity comparison: CDSP must sustain at least the
     // load Fixed-SP16 sustains.
     let base = trace(TraceKind::Short, 40, 1.0, 7);
-    let light = SimBuilder::paper_8b(Policy::Cdsp)
-        .run(&scale_rate(&base, 0.05))
-        .ttft_summary()
-        .p99;
+    let light = run_8b("tetris-cdsp", &scale_rate(&base, 0.05)).ttft_summary().p99;
     let slo = SloCriterion { light_load: light, factor: 25.0 };
     let rates: Vec<f64> = (1..=8).map(|i| i as f64 * 0.5).collect();
 
-    let measure = |policy: Policy| {
+    let measure = |policy: &'static str| {
         let base = base.clone();
-        move |r: f64| {
-            SimBuilder::paper_8b(policy)
-                .run(&scale_rate(&base, r))
-                .ttft_summary()
-                .p99
-        }
+        move |r: f64| run_8b(policy, &scale_rate(&base, r)).ttft_summary().p99
     };
-    let cap_cdsp = max_sustainable_rate(&rates, &slo, measure(Policy::Cdsp));
-    let cap_f16 = max_sustainable_rate(&rates, &slo, measure(Policy::FixedSp(16)));
+    let cap_cdsp = max_sustainable_rate(&rates, &slo, measure("tetris-cdsp"));
+    let cap_f16 = max_sustainable_rate(&rates, &slo, measure("fixed-sp16"));
     let c = cap_cdsp.unwrap_or(0.0);
     let f = cap_f16.unwrap_or(0.0);
     assert!(c >= f, "CDSP capacity {c} must be >= fixed-sp16 {f}");
@@ -88,8 +94,8 @@ fn ttft_cdf_is_stochastically_better_under_load() {
     // Fig. 9 shape: at a loaded rate, CDSP's TTFT CDF should dominate
     // Fixed-SP16's at the median point.
     let t = trace(TraceKind::Long, 50, 1.0, 9);
-    let cdsp = SimBuilder::paper_8b(Policy::Cdsp).run(&t);
-    let f16 = SimBuilder::paper_8b(Policy::FixedSp(16)).run(&t);
+    let cdsp = run_8b("tetris-cdsp", &t);
+    let f16 = run_8b("fixed-sp16", &t);
     assert!(cdsp.ttft_summary().p50 <= f16.ttft_summary().p50);
     let cdf = cdsp.ttft_cdf(32);
     assert_eq!(cdf.len(), 32);
@@ -98,8 +104,12 @@ fn ttft_cdf_is_stochastically_better_under_load() {
 #[test]
 fn seventy_b_policies_complete() {
     let t = trace(TraceKind::Medium, 25, 0.4, 11);
-    for p in [Policy::Cdsp, Policy::LoongServeDisagg, Policy::FixedSp(8)] {
-        let m = SimBuilder::paper_70b(p).run(&t);
+    for p in ["tetris-cdsp", "loongserve-disagg", "fixed-sp8"] {
+        let m = Tetris::paper_70b()
+            .policy(p)
+            .build_simulation()
+            .expect("valid builder")
+            .run(&t);
         assert_eq!(m.requests.len(), 25);
     }
 }
@@ -107,7 +117,7 @@ fn seventy_b_policies_complete() {
 #[test]
 fn tbt_of_disaggregated_decode_is_smooth() {
     let t = trace(TraceKind::Short, 30, 0.5, 13);
-    let m = SimBuilder::paper_8b(Policy::Cdsp).run(&t);
+    let m = run_8b("tetris-cdsp", &t);
     let s = m.tbt_summary();
     // decode steps on TP=8 A100s land in the tens of milliseconds
     assert!(s.p50 > 1e-4 && s.p50 < 1.0, "p50 TBT {} out of range", s.p50);

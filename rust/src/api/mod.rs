@@ -51,7 +51,9 @@
 //! assert_eq!(metrics.requests.len(), 5);
 //! ```
 
+/// Run observability: lifecycle event hooks and the JSON trace recorder.
 pub mod observer;
+/// The pluggable policy registry (names → scheduler factories).
 pub mod registry;
 
 pub use observer::{Observer, TraceEvent, TraceRecorder};
@@ -65,7 +67,7 @@ use crate::metrics::RunMetrics;
 use crate::modelcfg::ModelArch;
 use crate::runtime::Engine;
 use crate::sched::ImprovementController;
-use crate::serve::Server;
+use crate::serve::{DecodePool, Server};
 use crate::sim::{SimParams, Simulator};
 use crate::util::rng::Pcg64;
 use crate::workload::{Request, TraceKind, WorkloadGen};
@@ -134,6 +136,7 @@ pub struct TetrisBuilder {
     observers: Vec<Arc<dyn Observer>>,
     prefill_model: Option<PrefillModel>,
     sim_params: Option<SimParams>,
+    n_decode_workers: usize,
 }
 
 impl TetrisBuilder {
@@ -149,6 +152,7 @@ impl TetrisBuilder {
             observers: Vec::new(),
             prefill_model: None,
             sim_params: None,
+            n_decode_workers: 1,
         }
     }
 
@@ -200,6 +204,16 @@ impl TetrisBuilder {
         self
     }
 
+    /// Number of decode worker threads [`TetrisBuilder::build_server`]
+    /// starts (default 1). Finished prefills are handed off to these
+    /// workers by the shared [`crate::sched::DecodeRouter`] — the same
+    /// slot-aware, least-loaded placement the simulator models. Must not
+    /// exceed the cluster's decode instance count.
+    pub fn n_decode_workers(mut self, n: usize) -> Self {
+        self.n_decode_workers = n;
+        self
+    }
+
     /// Register a custom policy on this builder's registry and keep
     /// chaining. See the module docs for a full out-of-crate example.
     pub fn register_policy(
@@ -248,8 +262,19 @@ impl TetrisBuilder {
         &self.policy
     }
 
+    /// The builder's policy registry (read access for tooling).
     pub fn registry_ref(&self) -> &PolicyRegistry {
         &self.registry
+    }
+
+    /// The builder's workload seed (read access for tooling).
+    pub fn seed_value(&self) -> u64 {
+        self.seed
+    }
+
+    /// The configured model's name (read access for tooling).
+    pub fn model_name(&self) -> &str {
+        &self.arch.name
     }
 
     fn validate_common(&self) -> Result<()> {
@@ -275,6 +300,30 @@ impl TetrisBuilder {
         self.prefill_model
             .clone()
             .unwrap_or_else(|| a100_model_for(&self.arch, self.cluster.prefill_tp, sp_candidates))
+    }
+
+    /// Resolve and validate the simulator/decode capacity parameters —
+    /// shared by both build targets so a degenerate `sim_params` override
+    /// (zero block size, zero-block capacity) fails at build time with a
+    /// descriptive error instead of a mid-run division panic (simulator)
+    /// or a router that can never admit anything (server).
+    fn resolved_sim_params(&self) -> Result<SimParams> {
+        let params = self
+            .sim_params
+            .clone()
+            .unwrap_or_else(|| SimParams::for_arch(&self.arch, &self.cluster));
+        if params.block_tokens == 0 {
+            bail!("sim_params.block_tokens must be >= 1");
+        }
+        if params.decode_capacity_tokens / params.block_tokens == 0 {
+            bail!(
+                "decode capacity of {} tokens yields zero KV blocks of {} tokens; \
+                 raise decode_capacity_tokens or shrink block_tokens",
+                params.decode_capacity_tokens,
+                params.block_tokens
+            );
+        }
+        Ok(params)
     }
 
     /// Probe the resolved policy against an idle pool of the target shape:
@@ -327,10 +376,7 @@ impl TetrisBuilder {
             scheduler.as_ref(),
             &DispatchClock::grid(n_inst, self.cluster.prefill_instances_per_node()),
         )?;
-        let params = self
-            .sim_params
-            .clone()
-            .unwrap_or_else(|| SimParams::for_arch(&self.arch, &self.cluster));
+        let params = self.resolved_sim_params()?;
         let sim = Simulator {
             arch: self.arch.clone(),
             cluster: self.cluster.clone(),
@@ -347,15 +393,38 @@ impl TetrisBuilder {
     }
 
     /// Validate the configuration and start the live threaded [`Server`]
-    /// over `engine` with `n_prefill` prefill workers.
+    /// over `engine` with `n_prefill` prefill workers and
+    /// [`TetrisBuilder::n_decode_workers`] decode workers.
     ///
-    /// Unlike the legacy `Server::start`, this never silently shrinks
-    /// `sp_candidates`: a candidate larger than the worker pool is a
-    /// configuration error and is reported as such.
+    /// Worker counts are validated against the cluster topology: neither
+    /// side may exceed the cluster's instance count, and `sp_candidates`
+    /// are never silently shrunk — a candidate larger than the worker pool
+    /// is a configuration error and is reported as such. The decode
+    /// router's per-instance KV capacity is derived from the builder's
+    /// [`SimParams`] (defaulting to [`SimParams::for_arch`]) so the live
+    /// server and the simulator route against identically shaped pools.
     pub fn build_server(&self, engine: Arc<Engine>, n_prefill: usize) -> Result<Server> {
         self.validate_common()?;
         if n_prefill == 0 {
             bail!("the live server needs at least one prefill worker");
+        }
+        let n_prefill_inst = self.cluster.n_prefill_instances();
+        if n_prefill > n_prefill_inst {
+            bail!(
+                "{n_prefill} prefill workers exceed the {n_prefill_inst} prefill \
+                 instances of the cluster; grow the cluster or start fewer workers"
+            );
+        }
+        if self.n_decode_workers == 0 {
+            bail!("the live server needs at least one decode worker");
+        }
+        let n_decode_inst = self.cluster.n_decode_instances();
+        if self.n_decode_workers > n_decode_inst {
+            bail!(
+                "{} decode workers exceed the {n_decode_inst} decode instances of \
+                 the cluster; grow the cluster or lower n_decode_workers",
+                self.n_decode_workers
+            );
         }
         if let Some(&bad) = self.sched.sp_candidates.iter().find(|&&s| s > n_prefill) {
             bail!(
@@ -363,6 +432,13 @@ impl TetrisBuilder {
                  drop it from sp_candidates or start more workers"
             );
         }
+        let params = self.resolved_sim_params()?;
+        let pool = DecodePool {
+            n_workers: self.n_decode_workers,
+            blocks_per_instance: params.decode_capacity_tokens / params.block_tokens,
+            block_tokens: params.block_tokens,
+            backends: params.backends_per_decode.max(1),
+        };
         let model = self.resolved_model(&self.sched.sp_candidates);
         let ctx = PolicyCtx { model, sched: self.sched.clone() };
         let scheduler = self.registry.resolve(&self.policy, &ctx)?;
@@ -370,6 +446,7 @@ impl TetrisBuilder {
         Server::start(
             engine,
             n_prefill,
+            pool,
             scheduler,
             self.controller.clone(),
             self.observers.clone(),
@@ -449,6 +526,54 @@ mod tests {
     fn empty_and_zero_candidates_rejected() {
         assert!(Tetris::builder().sp_candidates(vec![]).build_simulation().is_err());
         assert!(Tetris::builder().sp_candidates(vec![0, 1]).build_simulation().is_err());
+    }
+
+    #[test]
+    fn degenerate_sim_params_rejected_at_build() {
+        let err = Tetris::builder()
+            .sim_params(SimParams {
+                backends_per_decode: 4,
+                decode_capacity_tokens: 1000,
+                block_tokens: 0,
+            })
+            .build_simulation()
+            .unwrap_err();
+        assert!(err.to_string().contains("block_tokens"), "{err}");
+        let err = Tetris::builder()
+            .sim_params(SimParams {
+                backends_per_decode: 4,
+                decode_capacity_tokens: 10,
+                block_tokens: 16,
+            })
+            .build_simulation()
+            .unwrap_err();
+        assert!(err.to_string().contains("zero KV blocks"), "{err}");
+    }
+
+    #[test]
+    fn decode_workers_validated_against_cluster() {
+        // paper_8b has 2 decode instances (16 GPUs at TP=8): 4 workers
+        // must be rejected before any scheduler checks run.
+        let err = Tetris::paper_8b()
+            .n_decode_workers(4)
+            .build_server(Arc::new(Engine::stub_default()), 4)
+            .err()
+            .expect("must reject 4 decode workers on 2 decode instances");
+        let msg = err.to_string();
+        assert!(msg.contains("4 decode workers"), "{msg}");
+        assert!(msg.contains("2 decode instances"), "{msg}");
+    }
+
+    #[test]
+    fn prefill_workers_validated_against_cluster() {
+        let err = Tetris::paper_8b()
+            .sp_candidates(vec![1])
+            .build_server(Arc::new(Engine::stub_default()), 64)
+            .err()
+            .expect("must reject 64 prefill workers on 16 prefill instances");
+        let msg = err.to_string();
+        assert!(msg.contains("64 prefill workers"), "{msg}");
+        assert!(msg.contains("16 prefill instances"), "{msg}");
     }
 
     #[test]

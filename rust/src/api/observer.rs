@@ -1,11 +1,11 @@
 //! Run observability: event hooks emitted by both the simulator and the
 //! live server, replacing ad-hoc metrics plumbing.
 //!
-//! An [`Observer`] sees the request lifecycle at its four paper-relevant
-//! transitions: plan committed, prefill finished (TTFT), KV shard
-//! transferred, token decoded. [`TraceRecorder`] is the batteries-included
-//! implementation: it collects the events and exports them as JSON for
-//! offline analysis.
+//! An [`Observer`] sees the request lifecycle at its five paper-relevant
+//! transitions: plan committed, decode instance assigned, prefill finished
+//! (TTFT), KV shard transferred, token decoded. [`TraceRecorder`] is the
+//! batteries-included implementation: it collects the events and exports
+//! them as JSON for offline analysis.
 
 use crate::sched::plan::CdspPlan;
 use crate::util::json::Json;
@@ -16,10 +16,26 @@ use std::sync::Mutex;
 /// the run start (simulated time in the simulator, wall-clock in the live
 /// server). Implementations must be `Send + Sync`: the live server calls
 /// them from its worker threads.
+///
+/// `req` identifiers follow each driver's convention: the simulator emits
+/// the request's *trace index* (as its metrics do), while the live server
+/// emits the caller-chosen [`crate::serve::ServeRequest::id`]. Traces
+/// whose ids equal their indexes (the common case, and what the parity
+/// tests use) compare directly across the two.
 pub trait Observer: Send + Sync {
     /// A CDSP plan was committed for request `req` at time `now`.
     fn on_plan(&self, req: u64, plan: &CdspPlan, now: f64) {
         let _ = (req, plan, now);
+    }
+
+    /// The decode router placed request `req` on decode instance
+    /// `instance` at `now` (virtual KV usage is reserved there from this
+    /// moment until the cache transfer completes). Emitted by the
+    /// simulator's arrival/admission events and by the live server's
+    /// dispatcher — the sim-vs-serve parity tests compare exactly these
+    /// events.
+    fn on_decode_assign(&self, req: u64, instance: usize, now: f64) {
+        let _ = (req, instance, now);
     }
 
     /// Request `req` finished prefill (its first token exists) at `now`.
@@ -41,34 +57,80 @@ pub trait Observer: Send + Sync {
 /// One recorded lifecycle event.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TraceEvent {
-    Plan { req: u64, n_chunks: usize, max_sp: usize, at: f64 },
-    PrefillDone { req: u64, at: f64 },
-    Transfer { req: u64, backend: usize, at: f64 },
-    Token { req: u64, at: f64 },
+    /// A CDSP plan was committed (`n_chunks` chunks, widest group `max_sp`).
+    Plan {
+        /// Request id.
+        req: u64,
+        /// Number of chunks in the committed plan.
+        n_chunks: usize,
+        /// Widest SP group size across the plan's chunks.
+        max_sp: usize,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
+    /// The decode router placed the request on a decode instance.
+    DecodeAssign {
+        /// Request id.
+        req: u64,
+        /// Chosen decode instance index.
+        instance: usize,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
+    /// Prefill finished; the request's first token exists (TTFT).
+    PrefillDone {
+        /// Request id.
+        req: u64,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
+    /// One KV shard landed on a transfer backend.
+    Transfer {
+        /// Request id.
+        req: u64,
+        /// Transfer backend that carried the shard.
+        backend: usize,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
+    /// One decode token was emitted.
+    Token {
+        /// Request id.
+        req: u64,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
 }
 
 impl TraceEvent {
+    /// The event's timestamp (seconds from run start).
     pub fn at(&self) -> f64 {
         match self {
             TraceEvent::Plan { at, .. }
+            | TraceEvent::DecodeAssign { at, .. }
             | TraceEvent::PrefillDone { at, .. }
             | TraceEvent::Transfer { at, .. }
             | TraceEvent::Token { at, .. } => *at,
         }
     }
 
+    /// Stable string tag for the event kind (used by JSON export and
+    /// [`TraceRecorder::count`]).
     pub fn kind(&self) -> &'static str {
         match self {
             TraceEvent::Plan { .. } => "plan",
+            TraceEvent::DecodeAssign { .. } => "decode_assign",
             TraceEvent::PrefillDone { .. } => "prefill_done",
             TraceEvent::Transfer { .. } => "transfer",
             TraceEvent::Token { .. } => "token",
         }
     }
 
+    /// The request the event belongs to.
     pub fn req(&self) -> u64 {
         match self {
             TraceEvent::Plan { req, .. }
+            | TraceEvent::DecodeAssign { req, .. }
             | TraceEvent::PrefillDone { req, .. }
             | TraceEvent::Transfer { req, .. }
             | TraceEvent::Token { req, .. } => *req,
@@ -83,6 +145,7 @@ pub struct TraceRecorder {
 }
 
 impl TraceRecorder {
+    /// An empty recorder (same as `TraceRecorder::default()`).
     pub fn new() -> Self {
         Self::default()
     }
@@ -97,7 +160,7 @@ impl TraceRecorder {
     }
 
     /// Number of recorded events of the given kind (`"plan"`,
-    /// `"prefill_done"`, `"transfer"`, `"token"`).
+    /// `"decode_assign"`, `"prefill_done"`, `"transfer"`, `"token"`).
     pub fn count(&self, kind: &str) -> usize {
         self.events.lock().unwrap().iter().filter(|e| e.kind() == kind).count()
     }
@@ -113,6 +176,9 @@ impl TraceRecorder {
             match e {
                 TraceEvent::Plan { n_chunks, max_sp, .. } => {
                     o = o.set("n_chunks", *n_chunks).set("max_sp", *max_sp);
+                }
+                TraceEvent::DecodeAssign { instance, .. } => {
+                    o = o.set("instance", *instance);
                 }
                 TraceEvent::Transfer { backend, .. } => {
                     o = o.set("backend", *backend);
@@ -133,6 +199,10 @@ impl Observer for TraceRecorder {
             max_sp: plan.max_sp(),
             at: now,
         });
+    }
+
+    fn on_decode_assign(&self, req: u64, instance: usize, now: f64) {
+        self.push(TraceEvent::DecodeAssign { req, instance, at: now });
     }
 
     fn on_prefill_done(&self, req: u64, now: f64) {
@@ -161,14 +231,17 @@ mod tests {
             est_ttft: 1.0,
         };
         rec.on_plan(3, &plan, 0.5);
+        rec.on_decode_assign(3, 1, 0.5);
         rec.on_prefill_done(3, 1.5);
         rec.on_transfer(3, 2, 1.6);
         rec.on_token(3, 1.7);
         rec.on_token(3, 1.8);
         assert_eq!(rec.count("plan"), 1);
+        assert_eq!(rec.count("decode_assign"), 1);
         assert_eq!(rec.count("token"), 2);
         let evs = rec.events();
-        assert_eq!(evs.len(), 5);
+        assert_eq!(evs.len(), 6);
+        assert_eq!(evs[1], TraceEvent::DecodeAssign { req: 3, instance: 1, at: 0.5 });
         assert_eq!(
             evs[0],
             TraceEvent::Plan { req: 3, n_chunks: 1, max_sp: 2, at: 0.5 }

@@ -18,7 +18,9 @@ use std::sync::Arc;
 /// calibrated Eq. (1) latency model and the scheduler knobs.
 #[derive(Clone, Debug)]
 pub struct PolicyCtx {
+    /// The calibrated Eq. (1) prefill latency model.
     pub model: PrefillModel,
+    /// Scheduler knobs (SP candidates, min chunk, recursion depth).
     pub sched: SchedConfig,
 }
 
@@ -31,6 +33,7 @@ pub type PolicyFactory =
 /// instances, the LoongServe unified-pool behaviour).
 #[derive(Clone)]
 pub struct PolicySpec {
+    /// Builds the scheduler instance from a [`PolicyCtx`].
     pub factory: PolicyFactory,
     /// Decode runs as a ring over small-TP instances instead of one
     /// large-TP instance (LoongServe's non-disaggregated deployment).
@@ -38,6 +41,7 @@ pub struct PolicySpec {
 }
 
 impl PolicySpec {
+    /// A spec from a factory, with default (disaggregated) decode.
     pub fn new(
         factory: impl Fn(&PolicyCtx) -> Result<Box<dyn PrefillScheduler>> + Send + Sync + 'static,
     ) -> Self {

@@ -25,7 +25,11 @@ use crate::sched::CdspScheduler;
 /// A prefill scheduling policy: map (prompt, pool snapshot, improvement
 /// rate) to an execution plan. Baselines ignore `rate`.
 pub trait PrefillScheduler: Send + Sync {
+    /// Plan one request of `prompt_len` tokens against the pool snapshot.
+    /// `rate` is the current improvement-rate threshold. `None` means the
+    /// policy cannot place the request on this pool.
     fn schedule(&self, prompt_len: usize, pool: &PoolView, rate: f64) -> Option<CdspPlan>;
+    /// The policy's self-reported name (for tables and logs).
     fn name(&self) -> String;
 }
 
@@ -46,15 +50,19 @@ impl PrefillScheduler for CdspScheduler {
 /// the TTFT-minimizing size with no expansion throttle and no chunking.
 #[derive(Clone, Debug)]
 pub struct LoongServeScheduler {
+    /// Eq. (1) latency model used for the TTFT argmin.
     pub model: PrefillModel,
+    /// SP sizes the policy may pick.
     pub sp_candidates: Vec<usize>,
     /// Instances reserved for decoding batches (ESP shares one pool; the
     /// disaggregated variant sets this to 0 because its pool is prefill-only).
     pub decode_reserved: usize,
+    /// Whether this is the disaggregated-cluster variant (affects `name`).
     pub disaggregated: bool,
 }
 
 impl LoongServeScheduler {
+    /// A LoongServe policy with no decode reservation.
     pub fn new(model: PrefillModel, sp_candidates: Vec<usize>, disaggregated: bool) -> Self {
         LoongServeScheduler { model, sp_candidates, decode_reserved: 0, disaggregated }
     }
@@ -102,11 +110,14 @@ impl PrefillScheduler for LoongServeScheduler {
 /// pool layout allows, matching the paper's setup).
 #[derive(Clone, Debug)]
 pub struct FixedSpScheduler {
+    /// Eq. (1) latency model used for queue-delay estimation.
     pub model: PrefillModel,
+    /// Rigid group width.
     pub sp: usize,
 }
 
 impl FixedSpScheduler {
+    /// A fixed-SP(k) policy with `sp`-wide groups.
     pub fn new(model: PrefillModel, sp: usize) -> Self {
         FixedSpScheduler { model, sp }
     }

@@ -16,8 +16,11 @@ pub type InstanceId = usize;
 /// instances each (prefill occupies whole nodes under disaggregation).
 #[derive(Clone, Debug)]
 pub struct PoolView {
+    /// Per-instance queuing delay relative to now (seconds, ≥ 0).
     pub delays: Vec<f64>,
+    /// Instance → node index (dense, 0-based).
     pub node_of: Vec<usize>,
+    /// Instances hosted per node.
     pub per_node: usize,
 }
 
@@ -47,14 +50,17 @@ impl PoolView {
         }
     }
 
+    /// Number of prefill instances in the pool.
     pub fn len(&self) -> usize {
         self.delays.len()
     }
 
+    /// Whether the pool has no instances at all.
     pub fn is_empty(&self) -> bool {
         self.delays.is_empty()
     }
 
+    /// Number of nodes spanned by the pool.
     pub fn n_nodes(&self) -> usize {
         self.node_of.last().map(|n| n + 1).unwrap_or(0)
     }
@@ -259,10 +265,12 @@ impl DispatchClock {
         Self::grid(n, n.max(1))
     }
 
+    /// Number of instances the clock tracks.
     pub fn len(&self) -> usize {
         self.free_at.len()
     }
 
+    /// Whether the clock tracks no instances.
     pub fn is_empty(&self) -> bool {
         self.free_at.is_empty()
     }
@@ -304,6 +312,74 @@ impl DispatchClock {
                 group.iter().any(|&g| self.node_of[g] != n0)
             }
         }
+    }
+}
+
+/// The live server's worker topology: the prefill lane clocks plus one
+/// bookkeeping clock per decode lane.
+///
+/// The prefill side is the [`DispatchClock`] the dispatcher plans against
+/// (exactly as before — see [`DispatchClock::pool_view`]). The decode side
+/// adds one single-instance clock per decode worker: when the dispatcher
+/// routes a request to decode lane `i`, it commits the request's
+/// *estimated* prefill-finish time onto that lane, so `decode_lane(i)`
+/// always answers "when is the latest handoff expected to arrive here" —
+/// cheap load observability for operators without touching the decode
+/// threads.
+#[derive(Clone, Debug)]
+pub struct WorkerRegistry {
+    prefill: DispatchClock,
+    decode: Vec<DispatchClock>,
+}
+
+impl WorkerRegistry {
+    /// A single-node registry: `n_prefill` co-located prefill workers and
+    /// `n_decode` decode lanes (the live mini-cluster shape).
+    pub fn single_node(n_prefill: usize, n_decode: usize) -> Self {
+        WorkerRegistry {
+            prefill: DispatchClock::single_node(n_prefill),
+            decode: (0..n_decode).map(|_| DispatchClock::single_node(1)).collect(),
+        }
+    }
+
+    /// Number of prefill workers.
+    pub fn n_prefill(&self) -> usize {
+        self.prefill.len()
+    }
+
+    /// Number of decode lanes.
+    pub fn n_decode(&self) -> usize {
+        self.decode.len()
+    }
+
+    /// The prefill queue clocks (the dispatcher's planning view).
+    pub fn prefill(&self) -> &DispatchClock {
+        &self.prefill
+    }
+
+    /// Mutable access to the prefill queue clocks (plan commits).
+    pub fn prefill_mut(&mut self) -> &mut DispatchClock {
+        &mut self.prefill
+    }
+
+    /// Decode lane `i`'s bookkeeping clock: its `free_at()[0]` is the
+    /// estimated arrival time of the latest handoff routed to the lane.
+    pub fn decode_lane(&self, i: usize) -> &DispatchClock {
+        &self.decode[i]
+    }
+
+    /// Mutable access to decode lane `i` (handoff-estimate commits).
+    pub fn decode_lane_mut(&mut self, i: usize) -> &mut DispatchClock {
+        &mut self.decode[i]
+    }
+
+    /// One-line topology description for logs and the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} prefill worker(s) + {} decode lane(s)",
+            self.n_prefill(),
+            self.n_decode()
+        )
     }
 }
 
@@ -453,6 +529,25 @@ mod tests {
         let v = c.pool_view(9.0);
         assert_eq!(v.delays, vec![0.0, 0.0]);
         assert_eq!(v.per_node, 2);
+    }
+
+    #[test]
+    fn worker_registry_lanes_track_handoffs() {
+        let mut reg = WorkerRegistry::single_node(4, 2);
+        assert_eq!(reg.n_prefill(), 4);
+        assert_eq!(reg.n_decode(), 2);
+        assert!(reg.summary().contains("4 prefill"));
+        // routing a request with estimated prefill finish at t=2.5 onto
+        // lane 1 moves that lane's expected-handoff clock forward
+        reg.decode_lane_mut(1).commit(&[0], 2.5, 0.0);
+        assert_eq!(reg.decode_lane(1).free_at()[0], 2.5);
+        assert_eq!(reg.decode_lane(0).free_at()[0], 0.0);
+        // an earlier estimate never rolls the lane backwards
+        reg.decode_lane_mut(1).commit(&[0], 1.0, 0.0);
+        assert_eq!(reg.decode_lane(1).free_at()[0], 2.5);
+        // prefill side is the ordinary dispatch clock
+        reg.prefill_mut().commit(&[0, 1], 0.0, 3.0);
+        assert_eq!(reg.prefill().pool_view(1.0).delays, vec![2.0, 2.0, 0.0, 0.0]);
     }
 
     #[test]

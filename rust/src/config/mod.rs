@@ -23,6 +23,7 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// The registry name of this policy (e.g. `"tetris-cdsp"`).
     pub fn name(&self) -> String {
         match self {
             Policy::Cdsp => "tetris-cdsp".into(),
@@ -33,6 +34,7 @@ impl Policy {
         }
     }
 
+    /// Parse a policy name (accepts the aliases the registry accepts).
     pub fn parse(s: &str) -> Option<Policy> {
         match s {
             "tetris-cdsp" | "cdsp" | "tetris" => Some(Policy::Cdsp),
@@ -51,11 +53,15 @@ impl Policy {
 /// `prefill_tp` GPUs; SP spans instances.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
+    /// Number of nodes in the cluster.
     pub n_nodes: usize,
+    /// GPUs per node.
     pub gpus_per_node: usize,
     /// Fraction of GPUs dedicated to prefill (0..1]; paper uses 0.5 (1:1).
     pub prefill_fraction: f64,
+    /// Tensor-parallel degree of one prefill instance.
     pub prefill_tp: usize,
+    /// Tensor-parallel degree of one decode instance.
     pub decode_tp: usize,
     /// Intra-node interconnect bandwidth per GPU (bytes/s), NVLink-class.
     pub intra_node_bw: f64,
@@ -103,6 +109,7 @@ impl ClusterConfig {
         }
     }
 
+    /// Total GPUs in the cluster.
     pub fn total_gpus(&self) -> usize {
         self.n_nodes * self.gpus_per_node
     }
@@ -129,6 +136,7 @@ impl ClusterConfig {
         per_node
     }
 
+    /// Serialize to JSON.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("n_nodes", self.n_nodes)
@@ -140,6 +148,7 @@ impl ClusterConfig {
             .set("inter_node_bw", self.inter_node_bw)
     }
 
+    /// Deserialize from JSON (all fields required).
     pub fn from_json(j: &Json) -> Result<Self> {
         Ok(ClusterConfig {
             n_nodes: j.req_usize("n_nodes")?,
@@ -184,6 +193,7 @@ impl Default for SchedConfig {
 }
 
 impl SchedConfig {
+    /// Serialize to JSON.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("sp_candidates", self.sp_candidates.clone())
@@ -194,6 +204,7 @@ impl SchedConfig {
             .set("max_chunks", self.max_chunks)
     }
 
+    /// Deserialize from JSON (all fields required).
     pub fn from_json(j: &Json) -> Result<Self> {
         let sp = j
             .req_arr("sp_candidates")?
@@ -214,14 +225,20 @@ impl SchedConfig {
 /// Top-level experiment/serving config.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Model name (resolved through `modelcfg::ModelArch::by_name`).
     pub model: String,
+    /// Cluster topology.
     pub cluster: ClusterConfig,
+    /// Scheduler knobs.
     pub sched: SchedConfig,
+    /// Prefill scheduling policy.
     pub policy: Policy,
+    /// Workload-synthesis seed.
     pub seed: u64,
 }
 
 impl Config {
+    /// The paper's LLaMA3-8B experiment configuration.
     pub fn paper_8b() -> Self {
         Config {
             model: "llama3-8b".into(),
@@ -232,6 +249,7 @@ impl Config {
         }
     }
 
+    /// The paper's LLaMA3-70B experiment configuration.
     pub fn paper_70b() -> Self {
         let mut sched = SchedConfig::default();
         // 70B: 8 prefill instances of TP4 across 8 nodes (paper setup).
@@ -245,6 +263,7 @@ impl Config {
         }
     }
 
+    /// Serialize the full configuration to JSON.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("model", self.model.as_str())
@@ -254,6 +273,7 @@ impl Config {
             .set("seed", self.seed)
     }
 
+    /// Deserialize a full configuration from JSON.
     pub fn from_json(j: &Json) -> Result<Self> {
         Ok(Config {
             model: j.req_str("model")?.to_string(),
@@ -269,10 +289,12 @@ impl Config {
         })
     }
 
+    /// Load a configuration from a JSON file (the CLI's `--config` path).
     pub fn load(path: &std::path::Path) -> Result<Self> {
         Self::from_json(&Json::from_file(path)?)
     }
 
+    /// Pretty-write the configuration to a JSON file.
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
         self.to_json().to_file(path)
     }

@@ -29,6 +29,7 @@ struct SeqAlloc {
 }
 
 impl BlockManager {
+    /// A manager over `total_blocks` blocks of `block_tokens` tokens each.
     pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
         assert!(block_tokens > 0);
         BlockManager {
@@ -41,22 +42,27 @@ impl BlockManager {
         }
     }
 
+    /// Tokens per block.
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
     }
 
+    /// Total blocks managed.
     pub fn total_blocks(&self) -> usize {
         self.total_blocks
     }
 
+    /// Blocks currently unallocated.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Blocks currently allocated to sequences.
     pub fn used_blocks(&self) -> usize {
         self.total_blocks - self.free.len()
     }
 
+    /// High-water mark of allocated blocks.
     pub fn peak_used_blocks(&self) -> usize {
         self.peak_used
     }

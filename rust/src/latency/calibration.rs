@@ -16,7 +16,9 @@ use crate::modelcfg::ModelArch;
 /// Rows: prompt lengths; columns: SP ∈ {1, 2, 4, 8, 16}. `None` = OOM.
 pub const TABLE1_LENS: [u64; 7] =
     [4_096, 8_192, 16_384, 32_768, 65_536, 131_072, 262_144];
+/// SP sizes covered by Table 1 (columns).
 pub const TABLE1_SPS: [usize; 5] = [1, 2, 4, 8, 16];
+/// Table 1 prefill seconds, `[prompt-length row][sp column]`; `None` = OOM.
 pub const TABLE1_SECS: [[Option<f64>; 5]; 7] = [
     [Some(0.28), Some(0.16), Some(0.13), Some(0.21), Some(0.39)],
     [Some(0.57), Some(0.31), Some(0.20), Some(0.24), Some(0.43)],

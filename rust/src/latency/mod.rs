@@ -20,9 +20,13 @@
 //! * [`transfer`] — KV-cache movement costs (cache balancing, P2P ring,
 //!   prefill→decode streaming) over NVLink/IB-class links.
 
+/// Eq. (1) prefill latency model: fitting, prediction, inverse solve.
 pub mod prefill;
+/// A100 roofline calibration anchored on the paper's Table 1.
 pub mod calibration;
+/// Decode step latency vs (TP, SP, batch, context).
 pub mod decode;
+/// KV-cache movement costs over NVLink/IB-class links.
 pub mod transfer;
 
 pub use calibration::a100_model_for;

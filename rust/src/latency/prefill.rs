@@ -20,9 +20,13 @@ use std::collections::BTreeMap;
 /// Eq. (1) coefficients for one SP size.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SpCoeffs {
+    /// Constant overheads (kernel launch, ring setup).
     pub a: f64,
+    /// Fully-connected-layer cost per chunk token.
     pub b: f64,
+    /// Attention-against-history cost per (history × chunk) token pair.
     pub c: f64,
+    /// Intra-chunk attention cost per squared chunk token.
     pub d: f64,
 }
 
@@ -69,8 +73,11 @@ impl SpCoeffs {
 /// A sample used for fitting: (history C, chunk length L, measured seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct Sample {
+    /// Historical token count (C).
     pub c: f64,
+    /// Chunk token count (L).
     pub l: f64,
+    /// Measured latency in seconds.
     pub secs: f64,
 }
 
@@ -81,14 +88,17 @@ pub struct PrefillModel {
 }
 
 impl PrefillModel {
+    /// An empty model (fit or insert coefficients before predicting).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Set the coefficients for one SP size.
     pub fn insert(&mut self, sp: usize, c: SpCoeffs) {
         self.coeffs.insert(sp, c);
     }
 
+    /// The coefficients for one SP size, if fit.
     pub fn get(&self, sp: usize) -> Option<&SpCoeffs> {
         self.coeffs.get(&sp)
     }
@@ -179,6 +189,7 @@ impl PrefillModel {
     }
 
     // ---- persistence ------------------------------------------------------
+    /// Serialize the coefficient table (sp → {a,b,c,d}).
     pub fn to_json(&self) -> Json {
         let mut obj = Json::obj();
         for (sp, co) in &self.coeffs {
@@ -190,6 +201,7 @@ impl PrefillModel {
         obj
     }
 
+    /// Load a coefficient table serialized by [`PrefillModel::to_json`].
     pub fn from_json(j: &Json) -> Result<Self> {
         let mut m = PrefillModel::new();
         let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("prefill model must be object"))?;

@@ -29,6 +29,7 @@ pub struct TransferModel {
 }
 
 impl TransferModel {
+    /// A transfer model using the cluster's link bandwidths.
     pub fn from_cluster(c: &ClusterConfig) -> Self {
         TransferModel {
             intra_bw: c.intra_node_bw,

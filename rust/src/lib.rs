@@ -51,24 +51,78 @@
 //! (`runtime::Engine::stub_default()`), which exercises the identical
 //! dispatch/barrier/KV/batching code path without the xla toolchain.
 //!
-//! See `DESIGN.md` for the complete system inventory and the
-//! per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! ## Multi-worker serving
+//!
+//! The live server mirrors the paper's disaggregated topology end to end:
+//! N prefill workers feed M decode workers, and finished prefills are
+//! placed by the same [`sched::DecodeRouter`] (slot/KV-block aware
+//! admission, least-loaded freeness placement) the simulator schedules
+//! against:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tetris::api::Tetris;
+//! use tetris::config::ClusterConfig;
+//! use tetris::runtime::Engine;
+//! use tetris::serve::ServeRequest;
+//!
+//! let engine = Arc::new(Engine::stub_default());
+//! let mut server = Tetris::builder()
+//!     .cluster(ClusterConfig::tiny(2, 2))   // 2 prefill + 2 decode instances
+//!     .n_decode_workers(2)                  // decode side of the topology
+//!     .sp_candidates(vec![1, 2])
+//!     .min_chunk(32)
+//!     .build_server(engine, 2)              // 2 prefill worker threads
+//!     .unwrap();
+//! let reqs: Vec<ServeRequest> = (0..4)
+//!     .map(|id| ServeRequest { id, prompt: vec![7; 48], output_len: 3 })
+//!     .collect();
+//! let metrics = server.run_trace(&reqs, 0.0).unwrap(); // burst-routed
+//! assert_eq!(metrics.requests.len(), 4);
+//! assert!(metrics.ttft_summary().p99 > 0.0);
+//! server.shutdown().unwrap();
+//! ```
+//!
+//! See `docs/ARCHITECTURE.md` for the module map, the request lifecycle,
+//! and the sim-vs-serve parity table.
 
+#![warn(missing_docs)]
+
+/// Zero-dependency support code: RNG, stats, JSON, least squares, CLI
+/// parsing, a scoped thread pool, and micro-bench helpers.
 pub mod util;
+/// Serving configuration (cluster topology, scheduler knobs) with JSON
+/// round-trip for reproducible deployments.
 pub mod config;
+/// Model architectures (LLaMA3-8B/70B shapes) driving the latency models.
 pub mod modelcfg;
+/// Calibrated latency models: Eq. (1) prefill, decode steps, KV transfer.
 pub mod latency;
+/// Prefill instance pools, queue clocks, `GetGroup`, and the live server's
+/// worker registry.
 pub mod cluster;
+/// The Tetris scheduler: CDSP planning, improvement-rate control, and
+/// decode-instance routing.
 pub mod sched;
+/// Baseline schedulers (LoongServe-style ESP, fixed SP groups).
 pub mod baselines;
+/// Paged KV-cache block manager (PagedAttention-style).
 pub mod kvcache;
+/// CDSP cache-transfer management: handshake-allocated transfer backends.
 pub mod transfer;
+/// Ring-attention communication schedule model.
 pub mod ring;
+/// Paper-shaped workload synthesis (trace kinds, Poisson arrivals).
 pub mod workload;
+/// Serving-quality metrics: TTFT, TBT, throughput, capacity search.
 pub mod metrics;
+/// Discrete-event cluster simulator reproducing the paper's evaluation.
 pub mod sim;
+/// Execution runtime: PJRT artifacts or the deterministic stub engine.
 pub mod runtime;
+/// The live mini serving stack (threaded prefill groups + routed decode).
 pub mod serve;
+/// The unified entry point: validated builder, policy registry, observers.
 pub mod api;
 
 /// Crate-wide result alias.

@@ -35,8 +35,9 @@ COMMANDS:
                   --policy <name>  (see `tetris policies`)
                   --trace <short|medium|long>  --rate <req/s>  --n <requests>
                   --model <8b|70b>  --seed <u64>  [--dynamic-rate]
+                  --config <cfg.json>  (full config file; CLI flags override)
   compare       the paper's policy set on one trace (Fig. 8 row)
-                  --trace ... --rate ... --n ... --model ...
+                  --trace ... --rate ... --n ... --model ...  [--config cfg.json]
   policies      list the names the policy registry resolves
   profile-rate  offline improvement-rate profiling
                   --trace ... --rates 0.5,1.0,...  --out <profile.json>
@@ -44,7 +45,7 @@ COMMANDS:
   gen-trace     synthesize a trace --trace ... --rate ... --n ... --out t.json
   serve         live E2E server over artifacts/ (or the stub engine)
                   --requests <n>  --prompt-len <tokens>  --output-len <tokens>
-                  --workers <n>
+                  --workers <n>  --decode-workers <n>
 ";
 
 fn main() {
@@ -74,21 +75,52 @@ fn builder_for(model: &str) -> TetrisBuilder {
     }
 }
 
-fn gen_trace(args: &Args) -> Vec<tetris::workload::Request> {
+/// Resolve the base builder: `--config x.json` loads a full
+/// `tetris::config::Config` through `Tetris::from_config` (model, cluster,
+/// scheduler knobs, policy, seed); otherwise the `--model` preset is used.
+/// Explicit CLI flags (`--policy`, `--seed`) override the config file.
+fn base_builder(args: &Args) -> anyhow::Result<TetrisBuilder> {
+    let mut b = match args.get("config") {
+        Some(path) => {
+            let cfg = tetris::config::Config::load(std::path::Path::new(path))?;
+            Tetris::from_config(&cfg)?
+        }
+        None => builder_for(&args.str_or("model", "8b")),
+    };
+    if let Some(p) = args.get("policy") {
+        b = b.policy(p);
+    }
+    if let Some(seed) = args.get("seed").and_then(|v| v.parse().ok()) {
+        b = b.seed(seed);
+    }
+    Ok(b)
+}
+
+fn gen_trace_with_seed(args: &Args, seed: u64) -> Vec<tetris::workload::Request> {
     let kind = TraceKind::parse(&args.str_or("trace", "medium")).unwrap_or(TraceKind::Medium);
     let rate = args.f64_or("rate", 1.0);
     let n = args.usize_or("n", 100);
-    let seed = args.u64_or("seed", 42);
     let gen = WorkloadGen::paper_trace(kind);
     let mut rng = Pcg64::new(seed);
     gen.generate(n, rate, &mut rng)
 }
 
+fn gen_trace(args: &Args) -> Vec<tetris::workload::Request> {
+    gen_trace_with_seed(args, args.u64_or("seed", 42))
+}
+
 fn cmd_simulate(args: &Args) -> i32 {
-    let policy = args.str_or("policy", "tetris-cdsp");
-    let model = args.str_or("model", "8b");
-    let trace = gen_trace(args);
-    let mut b = builder_for(&model).policy(&policy).seed(args.u64_or("seed", 42));
+    let mut b = match base_builder(args) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("invalid configuration: {e:#}");
+            return 2;
+        }
+    };
+    let model_label = b.model_name().to_string();
+    // The trace seed follows the resolved configuration (config file or
+    // --seed override), so one config file pins the whole experiment.
+    let trace = gen_trace_with_seed(args, b.seed_value());
     if args.flag("dynamic-rate") {
         b = b.controller(ImprovementController::new(
             RateProfile::default_trend(4.0),
@@ -107,8 +139,9 @@ fn cmd_simulate(args: &Args) -> i32 {
     let ttft = m.ttft_summary();
     let tbt = m.tbt_summary();
     println!(
-        "policy={} model={model} requests={}",
+        "policy={} model={} requests={}",
         sim.scheduler_name(),
+        model_label,
         m.requests.len()
     );
     println!(
@@ -124,11 +157,18 @@ fn cmd_simulate(args: &Args) -> i32 {
 }
 
 fn cmd_compare(args: &Args) -> i32 {
-    let model = args.str_or("model", "8b");
-    let trace = gen_trace(args);
+    let base = match base_builder(args) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("invalid configuration: {e:#}");
+            return 2;
+        }
+    };
+    let trace = gen_trace_with_seed(args, base.seed_value());
     let mut t = Table::new(&["policy", "ttft p50", "ttft p99", "tbt p50", "tbt p99", "tok/s"]);
     for policy in PAPER_POLICIES {
-        let mut sim = match builder_for(&model)
+        let mut sim = match base
+            .clone()
             .policy(policy)
             .controller(ImprovementController::new(
                 RateProfile::default_trend(4.0),
@@ -241,12 +281,19 @@ fn cmd_gen_trace(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    use tetris::api::TraceRecorder;
+    use tetris::config::ClusterConfig;
     use tetris::runtime::{artifacts_dir, Engine};
     use tetris::serve::ServeRequest;
     let n = args.usize_or("requests", 8);
     let prompt_len = args.usize_or("prompt-len", 120);
     let output_len = args.usize_or("output-len", 8);
     let workers = args.usize_or("workers", 4);
+    let decode_workers = args.usize_or("decode-workers", 2);
+    if decode_workers == 0 {
+        eprintln!("--decode-workers must be >= 1");
+        return 2;
+    }
     let engine = match Engine::load(&artifacts_dir()) {
         Ok(e) => Arc::new(e),
         Err(e) => {
@@ -256,12 +303,13 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!(
-        "engine: {} layers, d_model {}, vocab {}{} — {} prefill workers",
+        "engine: {} layers, d_model {}, vocab {}{} — {} prefill + {} decode workers",
         engine.arch.n_layers,
         engine.arch.d_model,
         engine.arch.vocab,
         if engine.is_stub() { " (stub)" } else { "" },
-        workers
+        workers,
+        decode_workers
     );
     // An A100-shaped dispatch model so multi-chunk CDSP paths get exercised
     // even on the CPU substrate (DESIGN.md §3), with SP capped by the
@@ -270,11 +318,15 @@ fn cmd_serve(args: &Args) -> i32 {
     let sched_model = tetris::latency::a100_model_for(
         &tetris::modelcfg::ModelArch::llama3_8b(), 1, &sp,
     );
+    let recorder = Arc::new(TraceRecorder::new());
     let mut server = match Tetris::builder()
         .policy("tetris-cdsp")
+        .cluster(ClusterConfig::tiny(workers, decode_workers))
+        .n_decode_workers(decode_workers)
         .sp_candidates(sp)
         .min_chunk(32)
         .prefill_model(sched_model)
+        .observe(recorder.clone())
         .build_server(engine.clone(), workers)
     {
         Ok(s) => s,
@@ -283,6 +335,7 @@ fn cmd_serve(args: &Args) -> i32 {
             return 1;
         }
     };
+    println!("topology: {}", server.topology().summary());
     let vocab = engine.arch.vocab;
     let reqs: Vec<ServeRequest> = (0..n as u64)
         .map(|id| ServeRequest {
@@ -312,6 +365,21 @@ fn cmd_serve(args: &Args) -> i32 {
         fmt_secs(tbt.p99),
         m.token_throughput()
     );
+    // Per-instance decode placement distribution (the DecodeRouter's work).
+    let mut per_inst = vec![0usize; decode_workers];
+    for e in recorder.events() {
+        if let tetris::api::TraceEvent::DecodeAssign { instance, .. } = e {
+            if instance < per_inst.len() {
+                per_inst[instance] += 1;
+            }
+        }
+    }
+    let placements: Vec<String> = per_inst
+        .iter()
+        .enumerate()
+        .map(|(i, c)| format!("d{i}:{c}"))
+        .collect();
+    println!("decode placements: {}", placements.join(" "));
     let _ = server.shutdown();
     0
 }

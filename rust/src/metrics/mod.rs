@@ -10,19 +10,24 @@ use crate::util::stats::{cdf_points, Summary};
 /// Per-request outcome collected by the simulator or the live engine.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RequestMetrics {
+    /// Request id.
     pub id: u64,
+    /// Arrival time (seconds from run start).
     pub arrival: f64,
     /// Time the first token was produced (prefill complete).
     pub first_token: f64,
     /// Completion time of the full response.
     pub finish: f64,
+    /// Prompt length in tokens.
     pub prompt_len: usize,
+    /// Output tokens actually generated.
     pub output_len: usize,
     /// Per-output-token intervals (decode smoothness).
     pub tbt: Vec<f64>,
 }
 
 impl RequestMetrics {
+    /// Time to first token: arrival → prefill completion.
     pub fn ttft(&self) -> f64 {
         self.first_token - self.arrival
     }
@@ -32,24 +37,29 @@ impl RequestMetrics {
 /// whole runs structurally.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunMetrics {
+    /// Per-request outcomes, in completion order.
     pub requests: Vec<RequestMetrics>,
     /// Wall-clock span of the run (seconds).
     pub span: f64,
 }
 
 impl RunMetrics {
+    /// Every request's TTFT.
     pub fn ttfts(&self) -> Vec<f64> {
         self.requests.iter().map(RequestMetrics::ttft).collect()
     }
 
+    /// Every inter-token interval of every request, flattened.
     pub fn tbts(&self) -> Vec<f64> {
         self.requests.iter().flat_map(|r| r.tbt.iter().copied()).collect()
     }
 
+    /// P50/P99/mean summary of TTFT.
     pub fn ttft_summary(&self) -> Summary {
         Summary::of(&self.ttfts())
     }
 
+    /// P50/P99/mean summary of TBT.
     pub fn tbt_summary(&self) -> Summary {
         Summary::of(&self.tbts())
     }
@@ -83,10 +93,12 @@ pub struct SloCriterion {
 }
 
 impl SloCriterion {
+    /// The absolute latency ceiling (`light_load × factor`).
     pub fn threshold(&self) -> f64 {
         self.light_load * self.factor
     }
 
+    /// Whether a measured P99 meets the SLO.
     pub fn satisfied(&self, p99: f64) -> bool {
         p99 <= self.threshold()
     }

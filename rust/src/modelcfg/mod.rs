@@ -9,14 +9,19 @@
 /// Dense decoder-only transformer architecture.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelArch {
+    /// Model name (see [`ModelArch::by_name`]).
     pub name: String,
+    /// Number of transformer layers.
     pub n_layers: usize,
+    /// Hidden width.
     pub d_model: usize,
+    /// Number of attention (query) heads.
     pub n_heads: usize,
     /// Number of KV heads (GQA); equals `n_heads` for MHA.
     pub n_kv_heads: usize,
     /// MLP hidden size (SwiGLU has 3 matrices of this width).
     pub d_ff: usize,
+    /// Vocabulary size.
     pub vocab: usize,
     /// Bytes per parameter / activation element (2 = bf16).
     pub bytes_per_el: usize,
@@ -66,6 +71,7 @@ impl ModelArch {
         }
     }
 
+    /// Resolve a model by its config-file name.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "llama3-8b" => Some(Self::llama3_8b()),
@@ -75,6 +81,7 @@ impl ModelArch {
         }
     }
 
+    /// Per-head dimension (`d_model / n_heads`).
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }

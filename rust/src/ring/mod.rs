@@ -74,8 +74,11 @@ pub fn contiguous_ranges(len: usize, n: usize) -> Vec<Vec<(usize, usize)>> {
 /// `to` so that the new group holds history evenly.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BalanceMove {
+    /// Sending instance (position within the new group).
     pub from: usize,
+    /// Receiving instance (position within the new group).
     pub to: usize,
+    /// History tokens to move.
     pub tokens: usize,
 }
 

@@ -25,13 +25,21 @@ use std::path::{Path, PathBuf};
 /// `python/compile/model.py`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TinyArch {
+    /// Number of transformer layers.
     pub n_layers: usize,
+    /// Hidden width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Prefill chunk bucket (tokens per `prefill_chunk` call).
     pub l_bucket: usize,
+    /// Prefill KV-cache bucket (max prompt tokens).
     pub c_bucket: usize,
+    /// Decode KV-cache bucket (max prompt + output tokens).
     pub decode_c_bucket: usize,
 }
 
@@ -40,6 +48,7 @@ impl TinyArch {
     pub fn kv_elems(&self) -> usize {
         self.n_layers * self.c_bucket * self.n_heads * self.head_dim
     }
+    /// Elements of one KV tensor (k or v) in the decode cache bucket.
     pub fn decode_kv_elems(&self) -> usize {
         self.n_layers * self.decode_c_bucket * self.n_heads * self.head_dim
     }
@@ -71,23 +80,33 @@ impl TinyArch {
 /// One weight tensor's manifest entry.
 #[derive(Clone, Debug)]
 pub struct WeightSpec {
+    /// Tensor name (as exported by `aot.py`).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Byte offset into `weights.bin`.
     pub offset_bytes: usize,
+    /// Number of f32 elements.
     pub elems: usize,
 }
 
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Architecture constants (must match the compiled HLO).
     pub arch: TinyArch,
+    /// Weight tensor layout of `weights.bin`.
     pub weights: Vec<WeightSpec>,
+    /// Filename of the prefill HLO text artifact.
     pub prefill_file: String,
+    /// Filename of the decode HLO text artifact.
     pub decode_file: String,
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
 impl Manifest {
+    /// Load and validate `manifest.json` from `dir`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let j = Json::from_file(&dir.join("manifest.json"))
             .context("reading manifest.json (run `make artifacts` first)")?;
@@ -133,15 +152,21 @@ impl Manifest {
 
 /// Output of one prefill-chunk execution.
 pub struct PrefillOut {
+    /// Last-position logits (vocab-sized).
     pub logits: Vec<f32>,
+    /// New K entries, `[n_layers, l_bucket, n_heads, head_dim]`.
     pub new_k: Vec<f32>,
+    /// New V entries, same layout as `new_k`.
     pub new_v: Vec<f32>,
 }
 
 /// Output of one decode-step execution.
 pub struct DecodeOut {
+    /// Next-token logits (vocab-sized).
     pub logits: Vec<f32>,
+    /// The generated token's K entries, `[n_layers, n_heads, head_dim]`.
     pub new_k: Vec<f32>,
+    /// The generated token's V entries, same layout as `new_k`.
     pub new_v: Vec<f32>,
 }
 
@@ -222,8 +247,15 @@ enum EngineImpl {
 
 /// The engine: compiled executables + weights (or the stub), callable from
 /// many threads.
+///
+/// Both entry points are `&self` and safe to call concurrently — the live
+/// server's decode workers each hold an independent decode context (their
+/// own KV buffers) against one shared engine. The stub backend is pure
+/// (stateless) compute; the PJRT backend serializes executions through an
+/// internal mutex.
 pub struct Engine {
     imp: EngineImpl,
+    /// Architecture constants shared by every execution.
     pub arch: TinyArch,
 }
 
@@ -243,6 +275,9 @@ impl Engine {
         Ok(Engine { imp: EngineImpl::Pjrt(std::sync::Mutex::new(inner)), arch })
     }
 
+    /// Load artifacts from `dir` — requires the `pjrt` feature; this build
+    /// lacks it, so the call always errs, directing callers to
+    /// [`Engine::stub`].
     #[cfg(not(feature = "pjrt"))]
     pub fn load(dir: &Path) -> Result<Engine> {
         let _ = dir;
@@ -551,6 +586,40 @@ mod tests {
         assert_eq!(l1, l3);
         assert_eq!(k1, k2);
         assert_eq!(k1, k3);
+    }
+
+    #[test]
+    fn stub_decode_concurrent_contexts_match_serial() {
+        // The live server runs one decode worker per instance, all calling
+        // decode_step on the SAME engine with their own KV buffers. The
+        // results must be identical to running each context serially.
+        use std::sync::Arc;
+        fn run_ctx(e: &Engine, ctx: i32) -> Vec<f32> {
+            let a = &e.arch;
+            let dk = vec![0.0f32; a.decode_kv_elems()];
+            let dv = vec![0.0f32; a.decode_kv_elems()];
+            let mut logits = Vec::new();
+            for step in 0..8 {
+                let out = e.decode_step(ctx + step, &dk, &dv, 10 + ctx).unwrap();
+                logits = out.logits;
+            }
+            logits
+        }
+        let e = Arc::new(Engine::stub_default());
+        let serial: Vec<Vec<f32>> = (0..4).map(|c| run_ctx(&e, c)).collect();
+        let handles: Vec<_> = (0..4)
+            .map(|c| {
+                let e = Arc::clone(&e);
+                std::thread::spawn(move || run_ctx(&e, c))
+            })
+            .collect();
+        for (c, h) in handles.into_iter().enumerate() {
+            assert_eq!(
+                h.join().unwrap(),
+                serial[c],
+                "concurrent decode context {c} diverged from serial execution"
+            );
+        }
     }
 
     #[test]

@@ -27,7 +27,9 @@ use crate::sched::plan::{CdspPlan, ChunkPlan};
 /// The CDSP scheduler: Eq. (1) model + config knobs.
 #[derive(Clone, Debug)]
 pub struct CdspScheduler {
+    /// The Eq. (1) latency model the scheduler plans against.
     pub model: PrefillModel,
+    /// Scheduler knobs (SP candidates, min chunk, recursion depth).
     pub cfg: SchedConfig,
     /// Disable Algorithm 1's chunk exploration (Fig. 13 ablation: every
     /// request gets the single-chunk plan).
@@ -35,6 +37,7 @@ pub struct CdspScheduler {
 }
 
 impl CdspScheduler {
+    /// A scheduler with chunk exploration enabled.
     pub fn new(model: PrefillModel, cfg: SchedConfig) -> Self {
         CdspScheduler { model, cfg, single_chunk_only: false }
     }

@@ -9,6 +9,27 @@
 //! `freeness = (available slots excluding virtual usage) / (active batch + 1)`
 //!
 //! Slot statistics refresh whenever a decode iteration returns output.
+//!
+//! The router is deliberately a plain (non-thread-safe) value: the
+//! simulator owns one directly, while the live server wraps the same type
+//! in an `Arc<Mutex<_>>` and shares it between the dispatcher (placement at
+//! submission), the prefill workers (in-flight transfer completion), and
+//! the decode workers (slot release on finish). Keeping one implementation
+//! is what makes sim-vs-serve placement parity testable: both paths run
+//! the identical routing code over the identical state machine.
+//!
+//! Lifecycle of one request through the router:
+//!
+//! 1. [`DecodeRouter::route`] — admission + placement. Reserves *virtual*
+//!    blocks and counts an in-flight transfer on the chosen instance.
+//! 2. [`DecodeRouter::transfer_complete`] — the prefill→decode KV handoff
+//!    landed: the virtual reservation becomes a real [`BlockManager`]
+//!    allocation and the request joins the active batch. This transition
+//!    is *freeness-neutral* (free−virtual and the batch denominator are
+//!    both unchanged), so placement decisions never depend on handoff
+//!    timing — the property the parity tests rely on.
+//! 3. [`DecodeRouter::finish`] (or [`DecodeRouter::cancel`] if the request
+//!    is abandoned before its handoff) — capacity returns to the pool.
 
 use crate::kvcache::BlockManager;
 
@@ -26,6 +47,8 @@ pub struct DecodeInstanceState {
 }
 
 impl DecodeInstanceState {
+    /// A fresh instance with `total_blocks` KV blocks of `block_tokens`
+    /// tokens each, no active batch, and no in-flight transfers.
     pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
         DecodeInstanceState {
             blocks: BlockManager::new(total_blocks, block_tokens),
@@ -54,10 +77,13 @@ impl DecodeInstanceState {
 /// The router over all decoding instances.
 #[derive(Clone, Debug, Default)]
 pub struct DecodeRouter {
+    /// Per-instance routing state, indexed by decode-instance id.
     pub instances: Vec<DecodeInstanceState>,
 }
 
 impl DecodeRouter {
+    /// A router over `n` identical decode instances, each with
+    /// `blocks_per_instance` KV blocks of `block_tokens` tokens.
     pub fn new(n: usize, blocks_per_instance: usize, block_tokens: usize) -> Self {
         DecodeRouter {
             instances: (0..n)
@@ -101,6 +127,27 @@ impl DecodeRouter {
         let seq = inst.blocks.allocate_seq(tokens)?;
         inst.active_batch += 1;
         Ok(seq)
+    }
+
+    /// A routed request was abandoned before its transfer completed (e.g.
+    /// its prefill could not be scheduled): release the virtual
+    /// reservation made by [`DecodeRouter::route`] without allocating.
+    pub fn cancel(&mut self, idx: usize, tokens: usize) {
+        let inst = &mut self.instances[idx];
+        let need = inst.blocks_for(tokens);
+        inst.virtual_blocks = inst.virtual_blocks.saturating_sub(need);
+        inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
+    }
+
+    /// Number of decode instances the router spans.
+    pub fn n_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// Requests whose prefill→decode transfer is still in flight, summed
+    /// over all instances (the router's total virtual-usage exposure).
+    pub fn in_flight_transfers(&self) -> usize {
+        self.instances.iter().map(|i| i.pending_transfers).sum()
     }
 
     /// A request finished decoding: free its blocks, shrink the batch.
@@ -183,6 +230,18 @@ mod tests {
         }
         r.on_token(idx, seq).unwrap(); // block 2
         assert_eq!(r.instances[0].blocks.free_blocks(), 7);
+    }
+
+    #[test]
+    fn cancel_releases_virtual_reservation() {
+        let mut r = DecodeRouter::new(1, 10, 16);
+        let idx = r.route(160).unwrap(); // all 10 blocks virtually held
+        assert_eq!(r.in_flight_transfers(), 1);
+        assert_eq!(r.route(16), None, "no capacity left");
+        r.cancel(idx, 160);
+        assert_eq!(r.in_flight_transfers(), 0);
+        assert_eq!(r.instances[0].virtual_blocks, 0);
+        assert_eq!(r.route(16), Some(0), "capacity restored");
     }
 
     #[test]

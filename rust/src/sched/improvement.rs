@@ -28,6 +28,7 @@ pub struct RateProfile {
 }
 
 impl RateProfile {
+    /// A profile from (arrival rate, improvement rate) pairs (sorted here).
     pub fn new(mut entries: Vec<(f64, f64)>) -> Self {
         entries.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         RateProfile { entries }
@@ -67,6 +68,7 @@ impl RateProfile {
             .1
     }
 
+    /// Serialize the profile (the `profile-rate --out` format).
     pub fn to_json(&self) -> Json {
         let mut arr = Json::arr();
         for (r, ir) in &self.entries {
@@ -75,6 +77,7 @@ impl RateProfile {
         Json::obj().set("entries", arr)
     }
 
+    /// Load a profile serialized by [`RateProfile::to_json`].
     pub fn from_json(j: &Json) -> Result<Self> {
         let mut entries = Vec::new();
         for e in j.req_arr("entries")? {
@@ -97,6 +100,8 @@ pub struct ImprovementController {
 }
 
 impl ImprovementController {
+    /// A controller over `profile` with the given observation `window` and
+    /// `refresh` cadence (both seconds).
     pub fn new(profile: RateProfile, window: f64, refresh: f64) -> Self {
         let initial = profile.lookup(0.0);
         ImprovementController {

@@ -11,9 +11,13 @@
 //! * [`decode`] — decode-instance routing: Llumnix-style freeness rate over
 //!   available KV slots with "virtual usage" for in-flight cache transfers.
 
+/// CDSP execution plans and their validity invariants.
 pub mod plan;
+/// Algorithms 1–3: chunk exploration, allocation, chunk-size solving.
 pub mod cdsp;
+/// The load-aware improvement-rate controller.
 pub mod improvement;
+/// Decode-instance routing (freeness rate + virtual usage).
 pub mod decode;
 
 pub use cdsp::CdspScheduler;

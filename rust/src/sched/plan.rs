@@ -12,11 +12,14 @@ use crate::cluster::InstanceId;
 /// One chunk: `len` prompt tokens executed on `group`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ChunkPlan {
+    /// Prompt tokens in this chunk.
     pub len: usize,
+    /// Prefill instances executing the chunk (SP group).
     pub group: Vec<InstanceId>,
 }
 
 impl ChunkPlan {
+    /// The chunk's SP size (group width).
     pub fn sp(&self) -> usize {
         self.group.len()
     }
@@ -25,6 +28,7 @@ impl ChunkPlan {
 /// A full CDSP plan for one request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CdspPlan {
+    /// Consecutive chunks covering the prompt.
     pub chunks: Vec<ChunkPlan>,
     /// Scheduler's TTFT estimate (relative seconds from scheduling time).
     pub est_ttft: f64,
@@ -38,10 +42,12 @@ impl CdspPlan {
         &self.chunks.last().expect("plan has ≥1 chunk").group
     }
 
+    /// Sum of chunk lengths (must equal the prompt length).
     pub fn total_tokens(&self) -> usize {
         self.chunks.iter().map(|c| c.len).sum()
     }
 
+    /// Number of chunks in the plan.
     pub fn n_chunks(&self) -> usize {
         self.chunks.len()
     }

@@ -1,56 +1,125 @@
 //! The live mini serving stack: the full Tetris request path running real
 //! compute through PJRT (or the deterministic stub engine).
 //!
-//! OS threads play the role of prefill instances. A request flows exactly
-//! like in the paper's Fig. 4:
+//! OS threads play the role of prefill *and* decode instances. A request
+//! flows exactly like in the paper's Fig. 4:
 //!
-//! 1. the **dispatcher** (scheduler thread) builds a plan from the current
-//!    per-worker queue clocks — any policy resolved through the
-//!    [`crate::api::PolicyRegistry`], the same trait objects the simulator
-//!    runs,
+//! 1. the **dispatcher** (the thread calling [`Server::submit`]) routes the
+//!    request to a decode instance through the shared
+//!    [`crate::sched::DecodeRouter`] — the *same* router type and freeness
+//!    policy the simulator runs, with virtual KV usage reserved for the
+//!    in-flight cache until the handoff lands — then builds a CDSP plan
+//!    from the current per-worker queue clocks (any policy resolved
+//!    through the [`crate::api::PolicyRegistry`]),
 //! 2. each chunk is dispatched to its instance group; the group
 //!    **synchronizes on a barrier** (ring attention mandates a simultaneous
 //!    start — this is precisely the idle-slot effect CDSP exploits), the
 //!    group leader executes the chunk through `runtime::Engine`, and the
 //!    request's KV cache grows in the shared store,
 //! 3. the final chunk's logits produce the first token (TTFT is measured
-//!    here, as in the paper), the KV cache is handed to a decode worker,
-//! 4. decode workers run **continuous batching**: new requests join at step
-//!    boundaries, finished ones leave, every step emits a TBT sample.
+//!    here, as in the paper), and the KV cache is handed to the *assigned*
+//!    decode worker through the `transfer` layer's handshake-managed
+//!    backend pool ([`crate::transfer::ReceiveManager`], one per decode
+//!    instance) — the router converts the virtual reservation into a real
+//!    [`crate::kvcache::BlockManager`] allocation,
+//! 4. every decode worker independently runs **continuous batching**: new
+//!    requests join at step boundaries, finished ones leave (releasing
+//!    their router blocks), every step emits a TBT sample.
+//!
+//! Requests that the router cannot admit (all instances' KV blocks
+//! exhausted) are *parked* and re-tried in arrival order whenever decode
+//! capacity frees up — the same waiting-queue semantics as the simulator's
+//! event loop.
 //!
 //! Construct servers through [`crate::api::Tetris`] —
-//! `Tetris::builder().build_server(engine, n_workers)` — which validates
-//! the configuration (e.g. SP candidates vs. worker count) instead of
-//! silently patching it.
+//! `Tetris::builder().n_decode_workers(4).build_server(engine, n_workers)`
+//! — which validates the configuration (SP candidates vs. worker count,
+//! decode workers vs. cluster decode instances) instead of silently
+//! patching it.
+//!
+//! ## Determinism and sim parity
+//!
+//! Placement decisions are made at submission time in submission order —
+//! mirroring the simulator, which routes at `Arrival` events. Because the
+//! router's `transfer_complete` transition is freeness-neutral (see
+//! [`crate::sched::decode`]), placements do not depend on handoff timing;
+//! [`Server::submit_burst`] additionally routes a whole batch atomically
+//! under one router lock, so a burst's placements are a pure function of
+//! the request sequence. The parity integration tests run one trace
+//! through both the simulator and this server and require identical
+//! per-request decode placements.
+//!
+//! ## Locking discipline
+//!
+//! Three shared structures, three mutexes: the KV store (scatter/repack),
+//! the per-decode-instance `ReceiveManager` (one whole handoff is atomic
+//! under its lock, so a handshake can never observe a half-finished
+//! transfer), and the `DecodeRouter`. The only permitted nesting is on
+//! the dispatcher, which acquires **router → KV** (submission holds the
+//! router guard while registering KV state, and across a whole burst).
+//! Worker threads take each lock in a scope of its own — in particular
+//! they must never acquire the router while holding the KV store or a
+//! receive manager, or they would deadlock against a burst in progress.
 //!
 //! Substitution note (DESIGN.md §3): on this CPU substrate a chunk's
 //! compute executes on the group leader while members hold their slot at
 //! the barrier — per-layer ring KV exchange does not speed up CPU threads
 //! sharing one memory bus, so SP speedups live in the calibrated simulator;
 //! everything else (planning, queueing, group reservation, KV movement,
-//! batching) is the real code path.
+//! routing, batching) is the real code path.
 
 use crate::api::Observer;
 use crate::baselines::PrefillScheduler;
-use crate::cluster::DispatchClock;
+use crate::cluster::WorkerRegistry;
 use crate::latency::prefill::{PrefillModel, Sample, SpCoeffs};
 use crate::metrics::{RequestMetrics, RunMetrics};
 use crate::runtime::{argmax, Engine};
-use crate::sched::ImprovementController;
+use crate::sched::{DecodeRouter, ImprovementController};
+use crate::transfer::{Handshake, HandshakeReply, ReceiveManager};
 use anyhow::Result;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A request submitted to the live server.
 #[derive(Clone, Debug)]
 pub struct ServeRequest {
+    /// Caller-chosen request id (reported back in metrics and events).
     pub id: u64,
+    /// Prompt token ids (must fit the engine's cache bucket).
     pub prompt: Vec<i32>,
+    /// Number of tokens to generate (0 is treated as 1).
     pub output_len: usize,
+}
+
+/// Decode-side sizing for the live server: how many decode workers to run
+/// and how much (bookkeeping) KV capacity each one manages.
+///
+/// Block capacities feed the shared [`DecodeRouter`]'s admission control;
+/// the actual stub/PJRT decode cache is bounded separately by the engine's
+/// `decode_c_bucket`. [`crate::api::TetrisBuilder::build_server`] derives
+/// these numbers from the builder's [`crate::sim::SimParams`] so the live
+/// router is shaped exactly like the simulator's.
+#[derive(Clone, Debug)]
+pub struct DecodePool {
+    /// Number of decode worker threads (≥ 1).
+    pub n_workers: usize,
+    /// KV blocks per decode instance (router admission capacity).
+    pub blocks_per_instance: usize,
+    /// Tokens per KV block.
+    pub block_tokens: usize,
+    /// Transfer backends per decode instance (handshake pool size).
+    pub backends: usize,
+}
+
+impl DecodePool {
+    /// A pool of `n_workers` instances with `blocks_per_instance` blocks of
+    /// `block_tokens` tokens each and 4 transfer backends per instance.
+    pub fn new(n_workers: usize, blocks_per_instance: usize, block_tokens: usize) -> Self {
+        DecodePool { n_workers, blocks_per_instance, block_tokens, backends: 4 }
+    }
 }
 
 /// Per-request KV cache in the shared store (prefill-bucket layout), plus
@@ -61,6 +130,10 @@ struct KvState {
     hist_len: usize,
     output_len: usize,
     arrival: Instant,
+    /// Decode instance chosen by the router at submission.
+    decode_inst: usize,
+    /// Token count the router reserved (prompt + output).
+    need_tokens: usize,
 }
 
 enum WorkerJob {
@@ -87,53 +160,117 @@ struct DecodeJob {
     first_token_at: Instant,
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Decode instance this job was routed to (the worker's own index).
+    inst: usize,
+    /// Router block-allocation id, released on finish.
+    seq: u64,
 }
 
 type ObserverSet = Arc<Vec<Arc<dyn Observer>>>;
+type SharedRouter = Arc<Mutex<DecodeRouter>>;
+type SharedReceivers = Arc<Vec<Mutex<ReceiveManager>>>;
 
-/// The live server.
+/// Router admission size for a request: prompt plus generated tokens (a
+/// zero-output request still decodes one token, mirroring the simulator's
+/// accounting). Every route/reserve/release for one request must use this
+/// single definition or the router leaks blocks.
+fn need_tokens(req: &ServeRequest) -> usize {
+    req.prompt.len() + req.output_len.max(1)
+}
+
+/// The live server: `n_prefill` barrier-grouped prefill workers feeding
+/// [`DecodePool::n_workers`] continuous-batching decode workers through the
+/// shared [`DecodeRouter`].
 pub struct Server {
     engine: Arc<Engine>,
     workers: Vec<Sender<WorkerJob>>,
     worker_handles: Vec<JoinHandle<()>>,
-    decode_tx: Sender<DecodeJob>,
-    decode_handle: Option<JoinHandle<()>>,
+    decode_txs: Vec<Sender<DecodeJob>>,
+    decode_handles: Vec<JoinHandle<()>>,
     results_rx: Receiver<RequestMetrics>,
     kv: Arc<Mutex<HashMap<u64, KvState>>>,
     scheduler: Box<dyn PrefillScheduler>,
     controller: ImprovementController,
-    /// Estimated queue clocks driving the dispatcher's pool view (seconds
-    /// relative to `epoch`) — the same component the simulator commits
-    /// plans onto.
-    clock: DispatchClock,
+    /// Worker topology + queue clocks: the prefill lanes drive the
+    /// dispatcher's pool view (the same component the simulator commits
+    /// plans onto); each decode lane tracks its estimated next handoff.
+    registry: WorkerRegistry,
+    /// Decode placement + KV-block admission, shared with the prefill
+    /// workers (transfer completion) and decode workers (slot release).
+    router: SharedRouter,
+    /// Per-decode-instance transfer backends (handshake pools).
+    receivers: SharedReceivers,
+    pool_cfg: DecodePool,
+    /// Requests the router could not admit yet, in arrival order, each
+    /// with its original submission instant (TTFT must include the time
+    /// spent waiting for decode capacity, as the simulator's does).
+    parked: VecDeque<(ServeRequest, Instant)>,
+    /// Accepted-then-dropped requests (a scheduler refused a parked
+    /// request at re-admission). [`Server::collect`] counts these against
+    /// its target so it never waits for results that cannot arrive.
+    abandoned: usize,
     epoch: Instant,
     engine_coeffs: SpCoeffs,
     observers: ObserverSet,
-    stop: Arc<AtomicBool>,
 }
 
 impl Server {
-    /// Start `n_prefill` prefill workers and one decode worker, dispatching
-    /// through `scheduler`.
+    /// Start `n_prefill` prefill workers and `decode.n_workers` decode
+    /// workers, dispatching through `scheduler` and routing decode
+    /// placements through a shared [`DecodeRouter`] shaped by `decode`.
     ///
     /// Prefer [`crate::api::TetrisBuilder::build_server`], which resolves
-    /// the scheduler by name and validates the configuration (a scheduler
+    /// the scheduler by name, derives the decode pool from the builder's
+    /// simulator parameters, and validates the configuration (a scheduler
     /// whose SP candidates exceed `n_prefill` would make every submission
     /// fail with "scheduling failed").
     pub fn start(
         engine: Arc<Engine>,
         n_prefill: usize,
+        decode: DecodePool,
         scheduler: Box<dyn PrefillScheduler>,
         controller: ImprovementController,
         observers: Vec<Arc<dyn Observer>>,
     ) -> Result<Server> {
         anyhow::ensure!(n_prefill >= 1, "need at least one prefill worker");
+        anyhow::ensure!(decode.n_workers >= 1, "need at least one decode worker");
+        anyhow::ensure!(decode.block_tokens >= 1, "decode block_tokens must be >= 1");
+        anyhow::ensure!(
+            decode.blocks_per_instance >= 1,
+            "decode instances need at least one KV block"
+        );
         let observers: ObserverSet = Arc::new(observers);
         let epoch = Instant::now();
         let kv: Arc<Mutex<HashMap<u64, KvState>>> = Arc::new(Mutex::new(HashMap::new()));
         let (results_tx, results_rx) = channel();
-        let (decode_tx, decode_rx) = channel::<DecodeJob>();
-        let stop = Arc::new(AtomicBool::new(false));
+        let router: SharedRouter = Arc::new(Mutex::new(DecodeRouter::new(
+            decode.n_workers,
+            decode.blocks_per_instance,
+            decode.block_tokens,
+        )));
+        let receivers: SharedReceivers = Arc::new(
+            (0..decode.n_workers)
+                .map(|_| Mutex::new(ReceiveManager::new(decode.backends.max(1), 0)))
+                .collect(),
+        );
+
+        // Decode workers (per-worker continuous batching).
+        let mut decode_txs = Vec::new();
+        let mut decode_handles = Vec::new();
+        for inst in 0..decode.n_workers {
+            let (tx, rx) = channel::<DecodeJob>();
+            let engine = Arc::clone(&engine);
+            let obs = Arc::clone(&observers);
+            let router = Arc::clone(&router);
+            let results_tx = results_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("tetris-decode-{inst}"))
+                .spawn(move || decode_worker(engine, rx, results_tx, router, obs, epoch))
+                .expect("spawn decode worker");
+            decode_txs.push(tx);
+            decode_handles.push(handle);
+        }
+        drop(results_tx); // decode workers hold the only result senders
 
         // Prefill workers.
         let mut workers = Vec::new();
@@ -142,25 +279,19 @@ impl Server {
             let (tx, rx) = channel::<WorkerJob>();
             let engine = Arc::clone(&engine);
             let kv = Arc::clone(&kv);
-            let decode_tx = decode_tx.clone();
+            let decode_txs = decode_txs.clone();
+            let receivers = Arc::clone(&receivers);
+            let router = Arc::clone(&router);
             let obs = Arc::clone(&observers);
             let handle = std::thread::Builder::new()
                 .name(format!("tetris-prefill-{wid}"))
-                .spawn(move || prefill_worker(engine, kv, decode_tx, rx, obs, epoch))
+                .spawn(move || {
+                    prefill_worker(engine, kv, decode_txs, receivers, router, rx, obs, epoch)
+                })
                 .expect("spawn prefill worker");
             workers.push(tx);
             worker_handles.push(handle);
         }
-
-        // Decode worker (continuous batching).
-        let decode_handle = {
-            let engine = Arc::clone(&engine);
-            let obs = Arc::clone(&observers);
-            std::thread::Builder::new()
-                .name("tetris-decode".into())
-                .spawn(move || decode_worker(engine, decode_rx, results_tx, obs, epoch))
-                .expect("spawn decode worker")
-        };
 
         // Calibrate this machine's per-chunk latency for queue estimation.
         let engine_coeffs = calibrate_engine(&engine)?;
@@ -169,23 +300,53 @@ impl Server {
             engine,
             workers,
             worker_handles,
-            decode_tx,
-            decode_handle: Some(decode_handle),
+            decode_txs,
+            decode_handles,
             results_rx,
             kv,
             scheduler,
             controller,
-            clock: DispatchClock::single_node(n_prefill),
+            registry: WorkerRegistry::single_node(n_prefill, decode.n_workers),
+            router,
+            receivers,
+            pool_cfg: decode,
+            parked: VecDeque::new(),
+            abandoned: 0,
             epoch,
             engine_coeffs,
             observers,
-            stop,
         })
     }
 
-    /// Submit one request: plan, dispatch chunks, return the plan's chunk
-    /// count (for observability).
+    /// Submit one request: route it to a decode instance, plan its prefill,
+    /// dispatch the chunks.
+    ///
+    /// Returns the number of chunks dispatched, or `Ok(0)` if the decode
+    /// pool had no capacity and the request was parked (it is admitted
+    /// automatically, in arrival order, as capacity frees up — see
+    /// [`Server::collect`]).
     pub fn submit(&mut self, req: &ServeRequest) -> Result<usize> {
+        let router = Arc::clone(&self.router);
+        let mut guard = router.lock().unwrap();
+        self.submit_inner(&mut guard, req)
+    }
+
+    /// Submit a batch atomically: the router lock is held across all
+    /// placements, so the batch's decode assignments are a pure function
+    /// of the request sequence (no decode-side event can interleave).
+    /// This is the submission mode [`Server::run_trace`] uses for
+    /// unpaced traces, and what the sim-vs-serve parity tests rely on.
+    pub fn submit_burst(&mut self, reqs: &[ServeRequest]) -> Result<()> {
+        let router = Arc::clone(&self.router);
+        let mut guard = router.lock().unwrap();
+        for req in reqs {
+            self.submit_inner(&mut guard, req)?;
+        }
+        Ok(())
+    }
+
+    /// The shared submission path. `router` is the held router guard.
+    fn submit_inner(&mut self, router: &mut DecodeRouter, req: &ServeRequest) -> Result<usize> {
         let a = &self.engine.arch;
         anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
         anyhow::ensure!(
@@ -194,10 +355,87 @@ impl Server {
             req.prompt.len(),
             a.c_bucket
         );
+        let need = need_tokens(req);
+        anyhow::ensure!(
+            need <= a.decode_c_bucket,
+            "request {} needs {} decode-cache tokens (prompt + output) but the \
+             engine's decode bucket holds {}",
+            req.id,
+            need,
+            a.decode_c_bucket
+        );
+        let need_blocks = need.div_ceil(self.pool_cfg.block_tokens);
+        anyhow::ensure!(
+            need_blocks <= self.pool_cfg.blocks_per_instance,
+            "request {} needs {} KV blocks but decode instances hold only {}",
+            req.id,
+            need_blocks,
+            self.pool_cfg.blocks_per_instance
+        );
+        self.controller.on_arrival(self.epoch.elapsed().as_secs_f64());
+        let arrival = Instant::now();
+        match self.admit(router, req, arrival) {
+            Ok(Some(n_chunks)) => Ok(n_chunks),
+            Ok(None) => {
+                // All instances full (counting in-flight virtual usage):
+                // park, admit later in arrival order.
+                self.parked.push_back((req.clone(), arrival));
+                Ok(0)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Route + dispatch one request under the held router guard — the one
+    /// admission sequence shared by first submission and parked-queue
+    /// retry, so the two paths cannot drift. `arrival` is the original
+    /// submission instant (TTFT anchor). `Ok(Some(n))` = dispatched with
+    /// `n` chunks; `Ok(None)` = no decode capacity right now; `Err` = the
+    /// scheduler refused the plan (the router reservation has been rolled
+    /// back, and no `on_decode_assign` was emitted).
+    fn admit(
+        &mut self,
+        router: &mut DecodeRouter,
+        req: &ServeRequest,
+        arrival: Instant,
+    ) -> Result<Option<usize>> {
+        let need = need_tokens(req);
+        let inst = match router.route(need) {
+            Some(i) => i,
+            None => return Ok(None),
+        };
         let now = self.epoch.elapsed().as_secs_f64();
-        self.controller.on_arrival(now);
+        match self.dispatch_prefill(req, inst, now, arrival) {
+            Ok(n) => {
+                // Emitted only once the request is actually dispatched, so
+                // a scheduler refusal (reservation rolled back) never
+                // produces a spurious or duplicate assignment event.
+                for o in self.observers.iter() {
+                    o.on_decode_assign(req.id, inst, now);
+                }
+                Ok(Some(n))
+            }
+            Err(e) => {
+                router.cancel(inst, need);
+                Err(e)
+            }
+        }
+    }
+
+    /// Plan and dispatch one admitted request's prefill. The decode
+    /// placement (`inst`) has already been reserved on the router;
+    /// `arrival` anchors the request's latency metrics at its original
+    /// submission.
+    fn dispatch_prefill(
+        &mut self,
+        req: &ServeRequest,
+        inst: usize,
+        now: f64,
+        arrival: Instant,
+    ) -> Result<usize> {
+        let a = self.engine.arch.clone();
         let rate = self.controller.rate(now);
-        let pool = self.clock.pool_view(now);
+        let pool = self.registry.prefill().pool_view(now);
         let plan = self
             .scheduler
             .schedule(req.prompt.len(), &pool, rate)
@@ -221,7 +459,9 @@ impl Server {
                 v: vec![0.0; a.kv_elems()],
                 hist_len: 0,
                 output_len: req.output_len.max(1),
-                arrival: Instant::now(),
+                arrival,
+                decode_inst: inst,
+                need_tokens: need_tokens(req),
             },
         );
 
@@ -235,8 +475,7 @@ impl Server {
             let mut piece_start = offset;
             while remaining > 0 {
                 let piece = remaining.min(a.l_bucket);
-                let is_last_piece =
-                    ci == n_chunks - 1 && remaining == piece;
+                let is_last_piece = ci == n_chunks - 1 && remaining == piece;
                 let start = Arc::new(Barrier::new(chunk.group.len()));
                 let end = Arc::new(Barrier::new(chunk.group.len()));
                 let tokens: Vec<i32> =
@@ -263,46 +502,133 @@ impl Server {
                     .engine_coeffs
                     .predict(piece_start as f64, piece as f64)
                     .max(1e-4);
-                finish = self.clock.commit(&chunk.group, finish, est);
+                finish = self.registry.prefill_mut().commit(&chunk.group, finish, est);
                 piece_start += piece;
                 remaining -= piece;
             }
             offset += chunk.len;
         }
+        // The assigned decode lane expects its handoff at the estimated
+        // prefill finish time (observability only; the real handoff is
+        // event-driven through the transfer layer).
+        self.registry.decode_lane_mut(inst).commit(&[0], finish, 0.0);
         Ok(plan.n_chunks())
     }
 
-    /// Wait for `n` completions.
-    pub fn collect(&self, n: usize) -> Vec<RequestMetrics> {
-        (0..n).map(|_| self.results_rx.recv().expect("decode worker alive")).collect()
+    /// Try to admit parked requests (arrival order, any that now fit —
+    /// the simulator's waiting-queue semantics).
+    ///
+    /// A scheduler that refuses a parked request at re-admission gets the
+    /// request dropped (reported on stderr and counted in `abandoned`, so
+    /// [`Server::collect`] stops waiting for it) — mirroring the
+    /// simulator, whose metrics simply omit requests that never prefill.
+    /// The direct [`Server::submit`] path surfaces the identical refusal
+    /// as an `Err` to the caller instead.
+    fn try_admit(&mut self) {
+        if self.parked.is_empty() {
+            return;
+        }
+        let router = Arc::clone(&self.router);
+        let mut guard = router.lock().unwrap();
+        let mut still = VecDeque::new();
+        while let Some((req, arrival)) = self.parked.pop_front() {
+            match self.admit(&mut guard, &req, arrival) {
+                Ok(Some(_)) => {}
+                Ok(None) => still.push_back((req, arrival)),
+                Err(e) => {
+                    eprintln!("tetris: dropping parked request {}: {e:#}", req.id);
+                    self.abandoned += 1;
+                }
+            }
+        }
+        self.parked = still;
+    }
+
+    /// Requests currently parked for decode capacity.
+    pub fn n_parked(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Snapshot of the shared decode router's state (placement load,
+    /// in-flight transfers) for observability and tests.
+    pub fn router_state(&self) -> DecodeRouter {
+        self.router.lock().unwrap().clone()
+    }
+
+    /// Free transfer backends on decode instance `inst` right now (all of
+    /// them, whenever no handoff is mid-flight — handoffs are atomic under
+    /// the instance's receive-manager lock).
+    pub fn free_transfer_backends(&self, inst: usize) -> usize {
+        self.receivers[inst].lock().unwrap().free_backends()
+    }
+
+    /// The server's worker topology and queue clocks.
+    pub fn topology(&self) -> &WorkerRegistry {
+        &self.registry
+    }
+
+    /// Wait for up to `n` completions, admitting parked requests as decode
+    /// capacity frees up. Requests dropped at re-admission (see
+    /// `try_admit`) count against the target, so the returned vector may
+    /// be shorter than `n` — exactly like the simulator's metrics, which
+    /// omit requests that never ran.
+    pub fn collect(&mut self, n: usize) -> Vec<RequestMetrics> {
+        let abandoned_at_entry = self.abandoned;
+        let mut out = Vec::with_capacity(n);
+        while out.len() + (self.abandoned - abandoned_at_entry) < n {
+            self.try_admit();
+            if self.parked.is_empty() {
+                // Nothing waiting for capacity: block until the next
+                // completion (no polling overhead on the common path).
+                match self.results_rx.recv() {
+                    Ok(m) => out.push(m),
+                    Err(_) => panic!("decode workers terminated with requests outstanding"),
+                }
+            } else {
+                // Parked requests need re-admission attempts as decode
+                // finishes free blocks: poll on a short timeout.
+                match self.results_rx.recv_timeout(Duration::from_millis(5)) {
+                    Ok(m) => out.push(m),
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        panic!("decode workers terminated with requests outstanding")
+                    }
+                }
+            }
+        }
+        out
     }
 
     /// Shut down all workers and return.
     pub fn shutdown(mut self) -> Result<()> {
-        self.stop.store(true, Ordering::SeqCst);
         for w in &self.workers {
             let _ = w.send(WorkerJob::Stop);
         }
         for h in self.worker_handles.drain(..) {
             let _ = h.join();
         }
-        drop(self.decode_tx);
-        if let Some(h) = self.decode_handle.take() {
+        // Prefill workers are gone; dropping our senders disconnects the
+        // decode channels, and each decode worker exits once its batch
+        // drains.
+        self.decode_txs.clear();
+        for h in self.decode_handles.drain(..) {
             let _ = h.join();
         }
         Ok(())
     }
 
     /// Drive a whole trace: submit with the given arrival pacing (seconds
-    /// between submissions; 0 = as fast as possible), wait for completion,
+    /// between submissions; 0 = one atomic burst), wait for completion,
     /// aggregate metrics.
     pub fn run_trace(&mut self, reqs: &[ServeRequest], pace: f64) -> Result<RunMetrics> {
         let t0 = Instant::now();
-        for r in reqs {
-            self.submit(r)?;
-            if pace > 0.0 {
-                std::thread::sleep(std::time::Duration::from_secs_f64(pace));
+        if pace > 0.0 {
+            for r in reqs {
+                self.submit(r)?;
+                std::thread::sleep(Duration::from_secs_f64(pace));
             }
+        } else {
+            self.submit_burst(reqs)?;
         }
         let metrics = self.collect(reqs.len());
         Ok(RunMetrics { requests: metrics, span: t0.elapsed().as_secs_f64() })
@@ -334,10 +660,13 @@ fn calibrate_engine(engine: &Engine) -> Result<SpCoeffs> {
     Ok(co)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn prefill_worker(
     engine: Arc<Engine>,
     kv: Arc<Mutex<HashMap<u64, KvState>>>,
-    decode_tx: Sender<DecodeJob>,
+    decode_txs: Vec<Sender<DecodeJob>>,
+    receivers: SharedReceivers,
+    router: SharedRouter,
     rx: Receiver<WorkerJob>,
     observers: ObserverSet,
     epoch: Instant,
@@ -384,9 +713,45 @@ fn prefill_worker(
                     }
                     let first_token = argmax(&out.logits) as i32;
                     let st = kv.lock().unwrap().remove(&req).expect("kv present");
-                    // repack prefill-bucket cache into the decode bucket
+                    let inst = st.decode_inst;
+                    // repack prefill-bucket cache into the decode bucket:
+                    // this copy *is* the KV stream on the CPU substrate
                     let (dk, dv) = repack_for_decode(&a, &st);
-                    decode_tx
+                    // KV handoff through the assigned instance's transfer
+                    // backends; the whole transfer is atomic under the
+                    // manager lock, so the handshake always finds a free
+                    // backend (backends >= 1)
+                    let backend = {
+                        let mut rm = receivers[inst].lock().unwrap();
+                        let t_hs = epoch.elapsed().as_secs_f64();
+                        rm.expect(req, 1, t_hs);
+                        let hs = Handshake {
+                            req,
+                            shard: 0,
+                            bytes: ((dk.len() + dv.len()) * 4) as f64,
+                            timestamp: t_hs,
+                        };
+                        let backend = match rm.handshake(hs) {
+                            HandshakeReply::Granted { backend } => backend,
+                            HandshakeReply::Wait => {
+                                unreachable!("transfers are atomic under the manager lock")
+                            }
+                        };
+                        let (_, complete) = rm.transfer_done(req, backend);
+                        debug_assert!(complete, "single-shard handoff must complete");
+                        backend
+                    };
+                    // virtual reservation becomes a real block allocation
+                    let seq = router
+                        .lock()
+                        .unwrap()
+                        .transfer_complete(inst, st.need_tokens)
+                        .expect("virtual reservation guaranteed space");
+                    let t = epoch.elapsed().as_secs_f64();
+                    for o in observers.iter() {
+                        o.on_transfer(req, backend, t);
+                    }
+                    decode_txs[inst]
                         .send(DecodeJob {
                             req,
                             first_token,
@@ -396,13 +761,10 @@ fn prefill_worker(
                             first_token_at: Instant::now(),
                             k: dk,
                             v: dv,
+                            inst,
+                            seq,
                         })
                         .expect("decode worker alive");
-                    // one KV handoff to the (single) decode backend
-                    let t = epoch.elapsed().as_secs_f64();
-                    for o in observers.iter() {
-                        o.on_transfer(req, 0, t);
-                    }
                 }
                 end.wait();
             }
@@ -456,6 +818,7 @@ fn decode_worker(
     engine: Arc<Engine>,
     rx: Receiver<DecodeJob>,
     results: Sender<RequestMetrics>,
+    router: SharedRouter,
     observers: ObserverSet,
     epoch: Instant,
 ) {
@@ -500,7 +863,7 @@ fn decode_worker(
             if st.tokens_out >= st.job.output_len
                 || st.hist_len + 1 >= a.decode_c_bucket
             {
-                finishing(&results, st);
+                finishing(&results, &router, st);
                 continue;
             }
             let out = engine
@@ -524,7 +887,7 @@ fn decode_worker(
                 o.on_token(st.job.req, epoch.elapsed().as_secs_f64());
             }
             if st.tokens_out >= st.job.output_len {
-                finishing(&results, st);
+                finishing(&results, &router, st);
             } else {
                 still.push(st);
             }
@@ -533,7 +896,9 @@ fn decode_worker(
     }
 }
 
-fn finishing(results: &Sender<RequestMetrics>, st: ActiveDecode) {
+/// Release the request's router blocks and report its metrics.
+fn finishing(results: &Sender<RequestMetrics>, router: &SharedRouter, st: ActiveDecode) {
+    router.lock().unwrap().finish(st.job.inst, st.job.seq);
     let arrival = st.job.arrival;
     let m = RequestMetrics {
         id: st.job.req,
@@ -598,6 +963,8 @@ mod tests {
             hist_len: 5,
             output_len: 4,
             arrival: Instant::now(),
+            decode_inst: 0,
+            need_tokens: 9,
         };
         let (dk, dv) = repack_for_decode(&a, &st);
         assert_eq!(dk.len(), a.decode_kv_elems());
@@ -610,6 +977,7 @@ mod tests {
         assert_eq!(dk[5 * tok], 0.0);
     }
 
-    // Full server tests live in rust/tests/integration_serve.rs (they run
-    // on the stub engine, or on real PJRT artifacts when present).
+    // Full server tests live in rust/tests/integration_serve.rs and
+    // rust/tests/integration_parity.rs (they run on the stub engine, or on
+    // real PJRT artifacts when present).
 }

@@ -24,6 +24,7 @@
 //!   instance; every active request emits a token (TBT sample), finished
 //!   requests free their blocks and may unblock queued arrivals.
 
+/// Offline improvement-rate profiling (paper Sec. 5.1 / 6).
 pub mod profiler;
 
 use crate::api::Observer;
@@ -97,9 +98,11 @@ struct ReqState {
 /// Simulator configuration beyond the cluster/policy config.
 #[derive(Clone, Debug)]
 pub struct SimParams {
+    /// Transfer backends per decode instance (handshake pool size).
     pub backends_per_decode: usize,
     /// Decode-side KV capacity in tokens per instance.
     pub decode_capacity_tokens: usize,
+    /// Tokens per KV block (PagedAttention granularity).
     pub block_tokens: usize,
 }
 
@@ -121,12 +124,19 @@ impl SimParams {
 /// The simulator. Owns its scheduler, so user-registered policies are
 /// first-class: any `Box<dyn PrefillScheduler>` drives the cluster.
 pub struct Simulator {
+    /// Model architecture (drives FLOPs/bytes in the latency models).
     pub arch: ModelArch,
+    /// Cluster topology (nodes, GPUs, P/D split, TP sizes, links).
     pub cluster: ClusterConfig,
+    /// Capacity parameters beyond the cluster config.
     pub params: SimParams,
+    /// The prefill scheduling policy driving the cluster.
     pub scheduler: Box<dyn PrefillScheduler>,
+    /// Real-time load-aware improvement-rate controller.
     pub controller: ImprovementController,
+    /// Calibrated decode-step latency model.
     pub decode_model: DecodeModel,
+    /// Calibrated KV-transfer latency model.
     pub transfer_model: TransferModel,
     /// Prefill model used for cache-balance overhead estimation (the
     /// scheduler has its own copy inside).
@@ -205,6 +215,9 @@ impl Simulator {
                     match router.route(need) {
                         Some(d) => {
                             reqs[i].decode_inst = Some(d);
+                            for o in &self.observers {
+                                o.on_decode_assign(i as u64, d, now);
+                            }
                             self.start_prefill(i, now, &mut reqs, &mut clock, &mut heap, &mut seq);
                         }
                         None => waiting.push_back(i),
@@ -325,6 +338,9 @@ impl Simulator {
                         let need = reqs[w].prompt_len + reqs[w].output_len;
                         if let Some(d) = router.route(need) {
                             reqs[w].decode_inst = Some(d);
+                            for o in &self.observers {
+                                o.on_decode_assign(w as u64, d, t_end);
+                            }
                             admitted.push(w);
                         }
                     }

@@ -24,6 +24,7 @@ pub struct ProfileParams {
     pub improvement_rates: Vec<f64>,
     /// Requests simulated per (rate, improvement) cell.
     pub n_requests: usize,
+    /// Workload-synthesis seed.
     pub seed: u64,
 }
 
@@ -47,6 +48,7 @@ pub struct ProfileSweep {
 }
 
 impl ProfileSweep {
+    /// The argmin of each row: the profile the controller should load.
     pub fn best_profile(&self) -> RateProfile {
         RateProfile::new(
             self.cells

@@ -22,9 +22,13 @@ pub type ReqId = u64;
 /// One sender's ask: request + shard index + bytes.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Handshake {
+    /// Request the shard belongs to.
     pub req: ReqId,
+    /// Shard index (one per sender instance).
     pub shard: usize,
+    /// Shard size in bytes.
     pub bytes: f64,
+    /// When the sender first asked (drives the service order).
     pub timestamp: f64,
 }
 
@@ -64,6 +68,8 @@ struct ReqState {
 }
 
 impl ReceiveManager {
+    /// A manager over `n_backends` transfer backends
+    /// (`shards_expected_default` is unused legacy and ignored).
     pub fn new(n_backends: usize, shards_expected_default: usize) -> Self {
         let _ = shards_expected_default;
         ReceiveManager {
@@ -174,6 +180,7 @@ impl ReceiveManager {
             .unwrap_or(0)
     }
 
+    /// Backends not currently carrying a shard.
     pub fn free_backends(&self) -> usize {
         self.backends.iter().filter(|b| b.is_none()).count()
     }

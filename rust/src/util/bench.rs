@@ -16,15 +16,22 @@ pub fn black_box<T>(x: T) -> T {
 /// Timing result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations recorded.
     pub iters: usize,
+    /// Mean per-iteration latency.
     pub mean: Duration,
+    /// Median per-iteration latency.
     pub p50: Duration,
+    /// 99th-percentile per-iteration latency.
     pub p99: Duration,
+    /// Worst per-iteration latency.
     pub max: Duration,
 }
 
 impl BenchResult {
+    /// Print one aligned result line.
     pub fn print(&self) {
         println!(
             "{:<44} iters={:<6} mean={:>12?} p50={:>12?} p99={:>12?} max={:>12?}",
@@ -77,20 +84,25 @@ pub fn bench_quick(name: &str, f: impl FnMut()) -> BenchResult {
 
 /// An aligned text table, for printing paper-style rows.
 pub struct Table {
+    /// Column headers.
     pub header: Vec<String>,
+    /// Table body, row-major.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Print the table with `|`-separated, width-aligned columns.
     pub fn print(&self) {
         let ncol = self.header.len();
         let mut w = vec![0usize; ncol];

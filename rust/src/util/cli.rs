@@ -8,8 +8,11 @@ use std::collections::BTreeMap;
 /// Parsed arguments: flags, key-value options, positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Bare `--flag` switches, in appearance order.
     pub flags: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub opts: BTreeMap<String, String>,
+    /// Positional arguments, in appearance order.
     pub positional: Vec<String>,
 }
 
@@ -49,26 +52,32 @@ impl Args {
         Args::parse(std::env::args().skip(1), known_flags)
     }
 
+    /// Whether `--name` was passed as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of option `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(String::as_str)
     }
 
+    /// String option with a default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Float option with a default (unparsable values fall back too).
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Unsigned-integer option with a default.
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// u64 option with a default.
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

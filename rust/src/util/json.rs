@@ -13,18 +13,26 @@ use std::fmt;
 /// experiment outputs diff cleanly between runs.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (kept as f64; integer accessors check integrality).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
+    /// Human-readable description of the failure.
     pub msg: String,
 }
 
@@ -38,9 +46,11 @@ impl std::error::Error for ParseError {}
 
 impl Json {
     // ---- constructors -------------------------------------------------
+    /// An empty JSON object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
+    /// An empty JSON array.
     pub fn arr() -> Json {
         Json::Arr(Vec::new())
     }
@@ -65,51 +75,60 @@ impl Json {
     }
 
     // ---- accessors -----------------------------------------------------
+    /// Object field lookup (None on non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// Array element lookup (None on non-arrays and out-of-range).
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(a) => a.get(i),
             _ => None,
         }
     }
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Integer value, if this is a number with no fractional part.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => Some(*n as i64),
             _ => None,
         }
     }
+    /// Non-negative integer value, if this is one.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|v| if v >= 0 { Some(v as usize) } else { None })
     }
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array contents, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Object contents, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -124,16 +143,19 @@ impl Json {
             .and_then(Json::as_f64)
             .ok_or_else(|| anyhow::anyhow!("missing/invalid number field '{key}'"))
     }
+    /// Required non-negative integer field (see [`Json::req_f64`]).
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
         self.get(key)
             .and_then(Json::as_usize)
             .ok_or_else(|| anyhow::anyhow!("missing/invalid integer field '{key}'"))
     }
+    /// Required string field (see [`Json::req_f64`]).
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow::anyhow!("missing/invalid string field '{key}'"))
     }
+    /// Required array field (see [`Json::req_f64`]).
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.get(key)
             .and_then(Json::as_arr)

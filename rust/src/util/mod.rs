@@ -8,11 +8,19 @@
 //! parser, a miniature property-based-testing framework, a scoped thread
 //! pool, and a micro-benchmark harness (stand-in for criterion).
 
+/// PCG64 RNG plus the sampling distributions the workload generator needs.
 pub mod rng;
+/// Descriptive statistics: summaries, percentiles, CDF points.
 pub mod stats;
+/// Minimal JSON parser/writer for configs and trace export.
 pub mod json;
+/// Dense least-squares solver for latency-model fitting.
 pub mod lstsq;
+/// `--flag` / `--key value` command-line argument parsing.
 pub mod cli;
+/// Miniature property-based-testing framework.
 pub mod proptest;
+/// Scoped thread pool for the parallel benches.
 pub mod threadpool;
+/// Micro-benchmark harness and table printing (criterion stand-in).
 pub mod bench;

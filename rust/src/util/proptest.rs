@@ -12,20 +12,25 @@ use super::rng::Pcg64;
 /// One generated case is re-derivable from its `u64` seed — on failure the
 /// harness reports the seed so the case can be replayed.
 pub struct Gen<'a> {
+    /// The case's seeded generator.
     pub rng: &'a mut Pcg64,
 }
 
 impl<'a> Gen<'a> {
+    /// Uniform usize in `[lo, hi]` inclusive.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(lo <= hi);
         lo + self.rng.below(hi - lo + 1)
     }
+    /// Uniform u64 in `[lo, hi]` inclusive.
     pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
         self.rng.range_u64(lo, hi)
     }
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.range_f64(lo, hi)
     }
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.bool(0.5)
     }
@@ -69,7 +74,9 @@ macro_rules! prop_assert {
 
 /// Configuration for a property run.
 pub struct Config {
+    /// Number of generated cases per property.
     pub cases: usize,
+    /// Base seed (per-case seeds derive from it deterministically).
     pub seed: u64,
 }
 

@@ -129,13 +129,19 @@ impl Pcg64 {
 /// inside [min, max].
 #[derive(Clone, Debug)]
 pub struct TruncLogNormal {
+    /// Mean of the underlying normal.
     pub mu: f64,
+    /// Standard deviation of the underlying normal.
     pub sigma: f64,
+    /// Lower truncation bound.
     pub lo: f64,
+    /// Upper truncation bound.
     pub hi: f64,
 }
 
 impl TruncLogNormal {
+    /// A sampler with explicit parameters (see `from_min_max_mean` for the
+    /// calibrated constructor).
     pub fn new(mu: f64, sigma: f64, lo: f64, hi: f64) -> Self {
         assert!(lo < hi);
         Self { mu, sigma, lo, hi }

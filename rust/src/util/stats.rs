@@ -8,16 +8,24 @@
 /// Summary of a latency sample set.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Number of samples.
     pub count: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (50th percentile, linear interpolation).
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 
 impl Summary {
+    /// Summarize a sample set (NaN-filled for an empty slice).
     pub fn of(xs: &[f64]) -> Self {
         if xs.is_empty() {
             return Summary {
@@ -134,16 +142,22 @@ pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
 /// full sample vectors when only a summary is needed).
 #[derive(Clone, Debug, Default)]
 pub struct Running {
+    /// Number of samples pushed.
     pub count: u64,
+    /// Sum of all samples.
     pub sum: f64,
+    /// Largest sample seen (−∞ before the first push).
     pub max: f64,
+    /// Smallest sample seen (+∞ before the first push).
     pub min: f64,
 }
 
 impl Running {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Running { count: 0, sum: 0.0, max: f64::NEG_INFINITY, min: f64::INFINITY }
     }
+    /// Fold one sample into the accumulator.
     #[inline]
     pub fn push(&mut self, x: f64) {
         self.count += 1;
@@ -155,6 +169,7 @@ impl Running {
             self.min = x;
         }
     }
+    /// Mean of the pushed samples (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             f64::NAN

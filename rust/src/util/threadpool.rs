@@ -52,6 +52,7 @@ impl ThreadPool {
         Self::new(n)
     }
 
+    /// Number of worker threads in the pool.
     pub fn size(&self) -> usize {
         self.size
     }

@@ -21,6 +21,7 @@ use anyhow::Result;
 /// One serving request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
+    /// Request id (dense, trace order).
     pub id: u64,
     /// Arrival time (seconds from trace start).
     pub arrival: f64,
@@ -33,12 +34,16 @@ pub struct Request {
 /// The paper's three trace families.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TraceKind {
+    /// 4k–95k tokens, mean 23.6k.
     Short,
+    /// 8k–142k tokens, mean 32.8k.
     Medium,
+    /// 16k–190k tokens, mean 50.1k.
     Long,
 }
 
 impl TraceKind {
+    /// CLI name of the trace family.
     pub fn name(&self) -> &'static str {
         match self {
             TraceKind::Short => "short",
@@ -47,6 +52,7 @@ impl TraceKind {
         }
     }
 
+    /// Parse a CLI trace name.
     pub fn parse(s: &str) -> Option<TraceKind> {
         match s {
             "short" => Some(TraceKind::Short),
@@ -69,9 +75,11 @@ impl TraceKind {
 /// Workload generator: length distribution + Poisson arrivals.
 #[derive(Clone, Debug)]
 pub struct WorkloadGen {
+    /// Prompt-length distribution.
     pub lengths: TruncLogNormal,
     /// Mean output length (decode tokens), geometric-ish spread.
     pub mean_output: f64,
+    /// Hard cap on output length.
     pub max_output: usize,
 }
 
@@ -128,6 +136,7 @@ pub fn scale_rate(reqs: &[Request], new_rate: f64) -> Vec<Request> {
 
 // ---- trace JSON I/O --------------------------------------------------------
 
+/// Serialize a trace as a JSON array (the `gen-trace --out` format).
 pub fn trace_to_json(reqs: &[Request]) -> Json {
     let mut arr = Json::arr();
     for r in reqs {
@@ -142,6 +151,7 @@ pub fn trace_to_json(reqs: &[Request]) -> Json {
     Json::obj().set("requests", arr)
 }
 
+/// Load a trace serialized by [`trace_to_json`].
 pub fn trace_from_json(j: &Json) -> Result<Vec<Request>> {
     let mut out = Vec::new();
     for r in j.req_arr("requests")? {

@@ -1,0 +1,302 @@
+//! Sim-vs-serve parity: the live server's decode placements must match the
+//! simulator's `DecodeRouter` decisions for the same request sequence.
+//!
+//! Both paths run the identical router code (`tetris::sched::DecodeRouter`)
+//! over identically shaped pools; the simulator routes at `Arrival` events
+//! and the server routes at submission. With a burst trace (all arrivals at
+//! t = 0, submitted through `submit_burst`) the placement sequence is a
+//! pure function of the request sequence on both sides, so the assignments
+//! must be *identical* — the acceptance bar for the multi-worker decode
+//! serving work.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+use tetris::api::{Tetris, TetrisBuilder, TraceEvent, TraceRecorder};
+use tetris::config::ClusterConfig;
+use tetris::latency::prefill::{PrefillModel, SpCoeffs};
+use tetris::runtime::Engine;
+use tetris::sched::DecodeRouter;
+use tetris::serve::ServeRequest;
+use tetris::sim::SimParams;
+use tetris::util::rng::Pcg64;
+use tetris::workload::Request;
+
+const N_DECODE: usize = 4;
+
+/// A scheduler model with A100-like SP shape so multi-chunk CDSP paths get
+/// exercised even on the CPU substrate (DESIGN.md §3).
+fn sched_model(n: usize) -> PrefillModel {
+    let mut m = PrefillModel::new();
+    let mut sp = 1;
+    while sp <= n {
+        m.insert(
+            sp,
+            SpCoeffs {
+                a: 0.002 * sp as f64,
+                b: 1.0e-4 / sp as f64,
+                c: 2.0e-7 / sp as f64,
+                d: 1.0e-7 / sp as f64,
+            },
+        );
+        sp *= 2;
+    }
+    m
+}
+
+/// One builder shape shared by the simulator and the live server: a tiny
+/// 4-prefill / 4-decode cluster with an explicitly pinned router geometry
+/// (1000 blocks of 16 tokens per decode instance).
+fn parity_builder(rec: Arc<TraceRecorder>) -> TetrisBuilder {
+    Tetris::builder()
+        .cluster(ClusterConfig::tiny(4, N_DECODE))
+        .n_decode_workers(N_DECODE)
+        .sp_candidates(vec![1, 2, 4])
+        .min_chunk(32)
+        .prefill_model(sched_model(4))
+        .sim_params(SimParams {
+            backends_per_decode: 4,
+            decode_capacity_tokens: 16_000,
+            block_tokens: 16,
+        })
+        .observe(rec)
+}
+
+/// Seeded burst shapes: (prompt_len, output_len) pairs sized to the stub
+/// engine's buckets (c_bucket 512, decode_c_bucket 640).
+fn burst_shapes(seed: u64, n: usize) -> Vec<(usize, usize)> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let prompt = rng.range_u64(40, 400) as usize;
+            let out = rng.range_u64(4, 12) as usize;
+            (prompt, out)
+        })
+        .collect()
+}
+
+fn assignments(rec: &TraceRecorder) -> BTreeMap<u64, usize> {
+    let mut m = BTreeMap::new();
+    for e in rec.events() {
+        if let TraceEvent::DecodeAssign { req, instance, .. } = e {
+            m.insert(req, instance);
+        }
+    }
+    m
+}
+
+fn serve_requests(shapes: &[(usize, usize)]) -> Vec<ServeRequest> {
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(prompt, out))| ServeRequest {
+            id: i as u64,
+            prompt: (0..prompt).map(|t| ((t * 13 + i) % 512) as i32).collect(),
+            output_len: out,
+        })
+        .collect()
+}
+
+#[test]
+fn sim_and_serve_agree_on_decode_placements() {
+    let shapes = burst_shapes(0xbee5, 50);
+
+    // Simulator side: 50 requests, all arriving at t=0, routed in order.
+    let sim_rec = Arc::new(TraceRecorder::new());
+    let mut sim = parity_builder(sim_rec.clone()).build_simulation().expect("sim builds");
+    let trace: Vec<Request> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(prompt, out))| Request {
+            id: i as u64,
+            arrival: 0.0,
+            prompt_len: prompt,
+            output_len: out,
+        })
+        .collect();
+    let sim_metrics = sim.run(&trace);
+    assert_eq!(sim_metrics.requests.len(), 50);
+
+    // Live server side: same shapes, same router geometry, stub engine,
+    // one atomic burst (the pace-0 run_trace path).
+    let srv_rec = Arc::new(TraceRecorder::new());
+    let engine = Arc::new(Engine::stub_default());
+    let mut server = parity_builder(srv_rec.clone())
+        .build_server(engine, 4)
+        .expect("server starts");
+    let srv_metrics = server.run_trace(&serve_requests(&shapes), 0.0).expect("trace");
+    assert_eq!(srv_metrics.requests.len(), 50);
+    server.shutdown().unwrap();
+
+    let sim_assign = assignments(&sim_rec);
+    let srv_assign = assignments(&srv_rec);
+    assert_eq!(sim_assign.len(), 50, "simulator routed every request once");
+    assert_eq!(srv_assign.len(), 50, "server routed every request once");
+    assert_eq!(
+        sim_assign, srv_assign,
+        "live decode placements must match the simulator's DecodeRouter decisions"
+    );
+    // The placements must actually exercise the multi-instance topology.
+    let used: BTreeSet<usize> = srv_assign.values().copied().collect();
+    assert!(used.len() > 1, "placement never spread beyond one instance: {used:?}");
+}
+
+#[test]
+fn placements_deterministic_across_prefill_worker_counts() {
+    // The routing decision happens at submission in arrival order, so the
+    // same trace must land on the same decode instances whether prefill
+    // runs on 1 worker or 4.
+    let shapes = burst_shapes(0xfeed, 30);
+    let mut results: Vec<BTreeMap<u64, usize>> = Vec::new();
+    for n_prefill in [1usize, 4] {
+        let rec = Arc::new(TraceRecorder::new());
+        let sp: Vec<usize> = [1usize, 2, 4].into_iter().filter(|&s| s <= n_prefill).collect();
+        let engine = Arc::new(Engine::stub_default());
+        let mut server = parity_builder(rec.clone())
+            .sp_candidates(sp)
+            .build_server(engine, n_prefill)
+            .expect("server starts");
+        let m = server.run_trace(&serve_requests(&shapes), 0.0).expect("trace");
+        assert_eq!(m.requests.len(), 30);
+        server.shutdown().unwrap();
+        results.push(assignments(&rec));
+    }
+    assert_eq!(
+        results[0], results[1],
+        "same-seed placements must not depend on prefill parallelism"
+    );
+}
+
+#[test]
+fn admission_parks_when_decode_full_and_recovers() {
+    // 1 decode worker with 16 blocks of 16 tokens = 256 tokens of KV
+    // capacity. Each request needs 100 + 4 = 104 tokens → 7 blocks, so two
+    // fit and the third must park until a finish frees its blocks.
+    let rec = Arc::new(TraceRecorder::new());
+    let engine = Arc::new(Engine::stub_default());
+    let mut server = Tetris::builder()
+        .cluster(ClusterConfig::tiny(2, 1))
+        .n_decode_workers(1)
+        .sp_candidates(vec![1, 2])
+        .min_chunk(32)
+        .prefill_model(sched_model(2))
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 256,
+            block_tokens: 16,
+        })
+        .observe(rec.clone())
+        .build_server(engine, 2)
+        .expect("server starts");
+
+    let reqs: Vec<ServeRequest> = (0..3)
+        .map(|id| ServeRequest { id, prompt: vec![1; 100], output_len: 4 })
+        .collect();
+    // One atomic burst: the router lock is held across all three
+    // placements, so the third request is parked deterministically (no
+    // early finish can free blocks mid-burst).
+    server.submit_burst(&reqs).expect("burst accepted");
+    assert_eq!(server.n_parked(), 1, "third request must park: 7+7 of 16 blocks used");
+
+    // A request that can never fit must be rejected outright, not parked.
+    let impossible = ServeRequest { id: 9, prompt: vec![1; 400], output_len: 8 };
+    let err = server.submit(&impossible).err().expect("must reject");
+    assert!(err.to_string().contains("KV blocks"), "{err}");
+
+    let got = server.collect(3);
+    assert_eq!(got.len(), 3, "parked request admitted after capacity freed");
+    assert_eq!(server.n_parked(), 0);
+
+    // No leaked accounting once everything finished: virtual usage and
+    // in-flight transfer counts return to zero, all blocks free.
+    let router = server.router_state();
+    assert_eq!(router.in_flight_transfers(), 0);
+    assert_eq!(router.instances[0].virtual_blocks, 0);
+    assert_eq!(router.instances[0].active_batch, 0);
+    assert_eq!(router.instances[0].blocks.free_blocks(), 16);
+    assert_eq!(server.free_transfer_backends(0), 2, "no backend leaked");
+    // All three were placed on the single instance.
+    let assign = assignments(&rec);
+    assert_eq!(assign.len(), 3);
+    assert!(assign.values().all(|&i| i == 0));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn decode_assign_precedes_transfer_per_request() {
+    // In-flight accounting window: every request is assigned (virtual
+    // reservation) strictly before its KV handoff completes (transfer).
+    let rec = Arc::new(TraceRecorder::new());
+    let engine = Arc::new(Engine::stub_default());
+    let mut server = parity_builder(rec.clone()).build_server(engine, 4).expect("server");
+    let shapes = burst_shapes(0xabcd, 12);
+    let m = server.run_trace(&serve_requests(&shapes), 0.0).expect("trace");
+    assert_eq!(m.requests.len(), 12);
+    server.shutdown().unwrap();
+
+    let events = rec.events();
+    for req in 0..12u64 {
+        let mut assign_at = None;
+        let mut transfer_at = None;
+        for e in &events {
+            match e {
+                TraceEvent::DecodeAssign { req: r, at, .. } if *r == req => {
+                    assign_at.get_or_insert(*at);
+                }
+                TraceEvent::Transfer { req: r, at, .. } if *r == req => {
+                    transfer_at.get_or_insert(*at);
+                }
+                _ => {}
+            }
+        }
+        let assign_at = assign_at.expect("assigned");
+        let transfer_at = transfer_at.expect("transferred");
+        assert!(
+            assign_at <= transfer_at,
+            "req {req}: assignment ({assign_at}) must precede its handoff ({transfer_at})"
+        );
+    }
+    assert_eq!(rec.count("decode_assign"), 12);
+    assert_eq!(rec.count("transfer"), 12);
+}
+
+#[test]
+fn router_invariants_hold_under_concurrent_handoff() {
+    // Hammer one shared router from 8 threads doing the full
+    // route → transfer_complete → finish lifecycle with interleaving
+    // windows between each step; all accounting must return to zero.
+    let router = Arc::new(Mutex::new(DecodeRouter::new(4, 64, 16)));
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let router = Arc::clone(&router);
+        handles.push(std::thread::spawn(move || {
+            let mut completed = 0usize;
+            for i in 0..200usize {
+                let tokens = 16 + ((t as usize * 37 + i * 13) % 200);
+                let routed = { router.lock().unwrap().route(tokens) };
+                if let Some(idx) = routed {
+                    // other threads interleave inside this window: the
+                    // virtual reservation must protect the allocation
+                    let seq = {
+                        router
+                            .lock()
+                            .unwrap()
+                            .transfer_complete(idx, tokens)
+                            .expect("virtual reservation guarantees space")
+                    };
+                    router.lock().unwrap().finish(idx, seq);
+                    completed += 1;
+                }
+            }
+            completed
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "some requests must have routed");
+    let r = router.lock().unwrap();
+    assert_eq!(r.in_flight_transfers(), 0);
+    for inst in &r.instances {
+        assert_eq!(inst.virtual_blocks, 0);
+        assert_eq!(inst.active_batch, 0);
+        assert_eq!(inst.blocks.free_blocks(), 64);
+    }
+}

@@ -145,8 +145,39 @@ fn server_emits_observer_events() {
     assert_eq!(m.requests.len(), 3);
     s.shutdown().unwrap();
     assert_eq!(rec.count("plan"), 3, "one plan per submission");
+    assert_eq!(rec.count("decode_assign"), 3, "one routing decision per request");
     assert_eq!(rec.count("prefill_done"), 3);
     assert_eq!(rec.count("transfer"), 3, "one KV handoff per request");
     // first token comes from prefill; 3 decode steps per request
     assert_eq!(rec.count("token"), 9);
+}
+
+#[test]
+fn multi_decode_workers_complete_all_requests() {
+    use tetris::config::ClusterConfig;
+    let rec = Arc::new(TraceRecorder::new());
+    let mut s = builder(4)
+        .cluster(ClusterConfig::tiny(4, 2))
+        .n_decode_workers(2)
+        .observe(rec.clone())
+        .build_server(engine(), 4)
+        .expect("server start");
+    assert_eq!(s.topology().n_decode(), 2);
+    let reqs: Vec<ServeRequest> = (0..8).map(|i| req(i, 60 + (i as usize) * 30, 4)).collect();
+    let m = s.run_trace(&reqs, 0.0).expect("trace");
+    assert_eq!(m.requests.len(), 8);
+    for r in &m.requests {
+        assert_eq!(r.output_len, 4);
+        assert!(r.ttft() > 0.0);
+    }
+    // The burst must spread across both decode instances (ample capacity,
+    // equal freeness → alternating placement).
+    let mut used = [false; 2];
+    for e in rec.events() {
+        if let tetris::api::TraceEvent::DecodeAssign { instance, .. } = e {
+            used[instance] = true;
+        }
+    }
+    assert!(used[0] && used[1], "both decode workers must receive requests");
+    s.shutdown().unwrap();
 }

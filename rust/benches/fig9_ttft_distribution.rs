@@ -1,14 +1,29 @@
-//! Fig. 9: cumulative TTFT distributions at the critical request rate —
-//! the highest rate where the best baseline still holds low latency.
-//! Paper: Tetris achieves 1.64-2.78x lower P50 and 1.52-3.13x lower P99 on
-//! LLaMA3-8B (2.86-4.17x / 2.27-4.35x on 70B).
+//! Fig. 9: cumulative TTFT (and TBT) distributions at the critical request
+//! rate — the highest rate where the best baseline still holds low
+//! latency. Paper: Tetris achieves 1.64-2.78x lower P50 and 1.52-3.13x
+//! lower P99 on LLaMA3-8B (2.86-4.17x / 2.27-4.35x on 70B).
+//!
+//! The distributions here are regenerated **from the recorded trace
+//! events** (`TraceRecorder`: arrival → prefill-done for TTFT, successive
+//! token gaps for TBT), not from the driver's summary stats — the same
+//! offline-analysis path an operator would run over an exported JSON
+//! trace.
 
-use tetris::api::Tetris;
+use std::sync::Arc;
+use tetris::api::{Tetris, TraceRecorder};
 use tetris::sched::{ImprovementController, RateProfile};
 use tetris::util::bench::{fmt_secs, Table};
 use tetris::util::cli::Args;
 use tetris::util::rng::Pcg64;
+use tetris::util::stats::percentile_sorted;
 use tetris::workload::{scale_rate, TraceKind, WorkloadGen};
+
+fn octiles(sorted: &[f64]) -> String {
+    (1..=8)
+        .map(|i| fmt_secs(percentile_sorted(sorted, i as f64 * 12.5)))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
 
 fn main() {
     let args = Args::from_env(&[]);
@@ -20,37 +35,42 @@ fn main() {
         let base = gen.generate(n, 1.0, &mut rng);
         let trace = scale_rate(&base, critical);
         println!("\n=== Fig. 9 [{} trace @ {:.1} req/s]===", kind.name(), critical);
-        let mut t = Table::new(&["policy", "p50", "p99", "CDF (12.5%..100% octiles)"]);
+        let mut t =
+            Table::new(&["policy", "p50", "p99", "TTFT CDF (12.5%..100% octiles)"]);
+        let mut tbt_t = Table::new(&["policy", "TBT CDF (12.5%..100% octiles)"]);
         let mut ratios: Vec<(String, f64, f64)> = Vec::new();
         for policy in ["tetris-cdsp", "loongserve-disagg", "fixed-sp8", "fixed-sp16"] {
-            let m = Tetris::paper_8b()
+            let rec = Arc::new(TraceRecorder::new());
+            Tetris::paper_8b()
                 .policy(policy)
                 .controller(ImprovementController::new(
                     RateProfile::default_trend(4.0),
                     30.0,
                     30.0,
                 ))
+                .observe(rec.clone())
                 .build_simulation()
                 .expect("valid configuration")
                 .run(&trace);
-            let s = m.ttft_summary();
-            let mut ttfts = m.ttfts();
+            // Everything below is derived purely from the recorded events.
+            let mut ttfts = rec.ttfts_from_events();
+            assert_eq!(ttfts.len(), trace.len(), "every request leaves a TTFT in the trace");
             ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let octiles: Vec<String> = (1..=8)
-                .map(|i| {
-                    let q = i as f64 * 12.5;
-                    fmt_secs(tetris::util::stats::percentile_sorted(&ttfts, q))
-                })
-                .collect();
+            let mut tbts = rec.tbts_from_events();
+            tbts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let (p50, p99) =
+                (percentile_sorted(&ttfts, 50.0), percentile_sorted(&ttfts, 99.0));
             t.row(vec![
                 policy.to_string(),
-                fmt_secs(s.p50),
-                fmt_secs(s.p99),
-                octiles.join(" "),
+                fmt_secs(p50),
+                fmt_secs(p99),
+                octiles(&ttfts),
             ]);
-            ratios.push((policy.to_string(), s.p50, s.p99));
+            tbt_t.row(vec![policy.to_string(), octiles(&tbts)]);
+            ratios.push((policy.to_string(), p50, p99));
         }
         t.print();
+        tbt_t.print();
         let (p50c, p99c) = (ratios[0].1, ratios[0].2);
         for (name, p50, p99) in &ratios[1..] {
             println!(

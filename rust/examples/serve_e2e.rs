@@ -73,6 +73,22 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
+    // Warm-up through the handle API: submission returns immediately and
+    // the tokens stream out as they are generated (index 0's timestamp is
+    // the TTFT). This is the asynchronous face of the same server.
+    let client = server.client();
+    let mut warm = client.submit(&ServeRequest {
+        id: 10_000,
+        prompt: (0..48).map(|i| ((i * 13) % a.vocab) as i32).collect(),
+        output_len: 4,
+    })?;
+    print!("warmup stream:");
+    for t in warm.tokens() {
+        print!(" #{}@{}", t.index, fmt_secs(t.at));
+    }
+    println!();
+    anyhow::ensure!(warm.wait().is_finished(), "warmup must finish");
+
     println!("serving {} requests on {} prefill workers ...", reqs.len(), workers);
     let m = server.run_trace(&reqs, 0.01)?;
 

@@ -12,6 +12,44 @@
 //!     .build_simulation()?                  // or .build_server(engine, n)
 //! ```
 //!
+//! # The asynchronous client API
+//!
+//! The live server is driven through per-request handles: submission
+//! validates and enqueues, then returns a [`RequestHandle`] carrying a
+//! token stream (each [`StreamedToken`] timestamped relative to
+//! submission), a completion future resolving to a [`Completion`], and
+//! `cancel()`. [`Client`] is the cloneable submission endpoint — one per
+//! producing thread, none of them ever serialized behind planning, which
+//! runs on the server's dispatcher thread:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use tetris::api::{Completion, Tetris};
+//! use tetris::runtime::Engine;
+//! use tetris::serve::ServeRequest;
+//!
+//! let server = Tetris::builder()
+//!     .cluster(tetris::config::ClusterConfig::tiny(2, 2))
+//!     .n_decode_workers(2)
+//!     .sp_candidates(vec![1, 2])
+//!     .min_chunk(32)
+//!     .build_server(Arc::new(Engine::stub_default()), 2)
+//!     .unwrap();
+//! let client = server.client();
+//! let mut handle = client
+//!     .submit(&ServeRequest { id: 7, prompt: vec![3; 40], output_len: 4 })
+//!     .unwrap();
+//! // Stream tokens as they are generated; index 0's timestamp is the TTFT.
+//! let first = handle.next_token().expect("first token");
+//! assert_eq!(first.index, 0);
+//! // The completion future resolves to the request's full metrics.
+//! match handle.wait() {
+//!     Completion::Finished(m) => assert_eq!(m.output_len, 4),
+//!     other => panic!("unexpected outcome: {other:?}"),
+//! }
+//! server.shutdown().unwrap();
+//! ```
+//!
 //! # Registering a custom policy
 //!
 //! Any type implementing [`PrefillScheduler`](crate::baselines::PrefillScheduler)
@@ -56,6 +94,8 @@ pub mod observer;
 /// The pluggable policy registry (names → scheduler factories).
 pub mod registry;
 
+pub use crate::metrics::{CancelStage, Completion, StreamedToken};
+pub use crate::serve::{Client, RequestHandle};
 pub use observer::{Observer, TraceEvent, TraceRecorder};
 pub use registry::{PolicyCtx, PolicyFactory, PolicyRegistry, PolicySpec};
 

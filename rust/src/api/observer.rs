@@ -7,8 +7,10 @@
 //! batteries-included implementation: it collects the events and exports
 //! them as JSON for offline analysis.
 
+use crate::metrics::CancelStage;
 use crate::sched::plan::CdspPlan;
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// Event hooks over one run. All methods default to no-ops so observers
@@ -23,6 +25,14 @@ use std::sync::Mutex;
 /// whose ids equal their indexes (the common case, and what the parity
 /// tests use) compare directly across the two.
 pub trait Observer: Send + Sync {
+    /// Request `req` entered the system at `now` — the simulator's
+    /// `Arrival` event, or the live server accepting a submission (before
+    /// any planning or routing happens). Event-derived latency metrics
+    /// (e.g. [`TraceRecorder::ttfts_from_events`]) anchor TTFT here.
+    fn on_arrival(&self, req: u64, now: f64) {
+        let _ = (req, now);
+    }
+
     /// A CDSP plan was committed for request `req` at time `now`.
     fn on_plan(&self, req: u64, plan: &CdspPlan, now: f64) {
         let _ = (req, plan, now);
@@ -52,11 +62,26 @@ pub trait Observer: Send + Sync {
     fn on_token(&self, req: u64, now: f64) {
         let _ = (req, now);
     }
+
+    /// Request `req` was cancelled at lifecycle `stage` at `now`. Emitted
+    /// only by the live server (the simulator has no cancellation path);
+    /// every resource the request held — KV blocks, parked-queue slot,
+    /// transfer backend — has been released by the time this fires.
+    fn on_cancel(&self, req: u64, stage: CancelStage, now: f64) {
+        let _ = (req, stage, now);
+    }
 }
 
 /// One recorded lifecycle event.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TraceEvent {
+    /// The request entered the system (sim `Arrival` / live submission).
+    Arrival {
+        /// Request id.
+        req: u64,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
     /// A CDSP plan was committed (`n_chunks` chunks, widest group `max_sp`).
     Plan {
         /// Request id.
@@ -100,17 +125,28 @@ pub enum TraceEvent {
         /// Timestamp (seconds from run start).
         at: f64,
     },
+    /// The request was cancelled (live server only).
+    Cancel {
+        /// Request id.
+        req: u64,
+        /// Lifecycle stage the request was in when cancelled.
+        stage: CancelStage,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
 }
 
 impl TraceEvent {
     /// The event's timestamp (seconds from run start).
     pub fn at(&self) -> f64 {
         match self {
-            TraceEvent::Plan { at, .. }
+            TraceEvent::Arrival { at, .. }
+            | TraceEvent::Plan { at, .. }
             | TraceEvent::DecodeAssign { at, .. }
             | TraceEvent::PrefillDone { at, .. }
             | TraceEvent::Transfer { at, .. }
-            | TraceEvent::Token { at, .. } => *at,
+            | TraceEvent::Token { at, .. }
+            | TraceEvent::Cancel { at, .. } => *at,
         }
     }
 
@@ -118,22 +154,26 @@ impl TraceEvent {
     /// [`TraceRecorder::count`]).
     pub fn kind(&self) -> &'static str {
         match self {
+            TraceEvent::Arrival { .. } => "arrival",
             TraceEvent::Plan { .. } => "plan",
             TraceEvent::DecodeAssign { .. } => "decode_assign",
             TraceEvent::PrefillDone { .. } => "prefill_done",
             TraceEvent::Transfer { .. } => "transfer",
             TraceEvent::Token { .. } => "token",
+            TraceEvent::Cancel { .. } => "cancel",
         }
     }
 
     /// The request the event belongs to.
     pub fn req(&self) -> u64 {
         match self {
-            TraceEvent::Plan { req, .. }
+            TraceEvent::Arrival { req, .. }
+            | TraceEvent::Plan { req, .. }
             | TraceEvent::DecodeAssign { req, .. }
             | TraceEvent::PrefillDone { req, .. }
             | TraceEvent::Transfer { req, .. }
-            | TraceEvent::Token { req, .. } => *req,
+            | TraceEvent::Token { req, .. }
+            | TraceEvent::Cancel { req, .. } => *req,
         }
     }
 }
@@ -183,15 +223,65 @@ impl TraceRecorder {
                 TraceEvent::Transfer { backend, .. } => {
                     o = o.set("backend", *backend);
                 }
+                TraceEvent::Cancel { stage, .. } => {
+                    o = o.set("stage", stage.tag());
+                }
                 _ => {}
             }
             arr.push(o);
         }
         arr
     }
+
+    /// Per-request TTFTs derived purely from recorded events: the gap from
+    /// each request's first [`TraceEvent::Arrival`] to its first
+    /// [`TraceEvent::PrefillDone`]. Requests missing either event (still in
+    /// flight, cancelled before prefill) are omitted. This is what the
+    /// Fig. 9 harness plots — latency distributions regenerated from the
+    /// recorded trace rather than from the driver's summary stats.
+    pub fn ttfts_from_events(&self) -> Vec<f64> {
+        let events = self.events.lock().unwrap();
+        let mut arrival: BTreeMap<u64, f64> = BTreeMap::new();
+        let mut ttfts: BTreeMap<u64, f64> = BTreeMap::new();
+        for e in events.iter() {
+            match e {
+                TraceEvent::Arrival { req, at } => {
+                    arrival.entry(*req).or_insert(*at);
+                }
+                TraceEvent::PrefillDone { req, at } => {
+                    if let Some(a) = arrival.get(req) {
+                        ttfts.entry(*req).or_insert(at - a);
+                    }
+                }
+                _ => {}
+            }
+        }
+        ttfts.into_values().collect()
+    }
+
+    /// All inter-token gaps derived from recorded events: per request, the
+    /// deltas between consecutive [`TraceEvent::Token`] timestamps,
+    /// flattened across requests (request-id order, then token order).
+    pub fn tbts_from_events(&self) -> Vec<f64> {
+        let events = self.events.lock().unwrap();
+        let mut last: BTreeMap<u64, f64> = BTreeMap::new();
+        let mut gaps: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+        for e in events.iter() {
+            if let TraceEvent::Token { req, at } = e {
+                if let Some(prev) = last.insert(*req, *at) {
+                    gaps.entry(*req).or_default().push(at - prev);
+                }
+            }
+        }
+        gaps.into_values().flatten().collect()
+    }
 }
 
 impl Observer for TraceRecorder {
+    fn on_arrival(&self, req: u64, now: f64) {
+        self.push(TraceEvent::Arrival { req, at: now });
+    }
+
     fn on_plan(&self, req: u64, plan: &CdspPlan, now: f64) {
         self.push(TraceEvent::Plan {
             req,
@@ -216,6 +306,10 @@ impl Observer for TraceRecorder {
     fn on_token(&self, req: u64, now: f64) {
         self.push(TraceEvent::Token { req, at: now });
     }
+
+    fn on_cancel(&self, req: u64, stage: CancelStage, now: f64) {
+        self.push(TraceEvent::Cancel { req, stage, at: now });
+    }
 }
 
 #[cfg(test)]
@@ -230,25 +324,61 @@ mod tests {
             chunks: vec![ChunkPlan { len: 100, group: vec![0, 1] }],
             est_ttft: 1.0,
         };
+        rec.on_arrival(3, 0.4);
         rec.on_plan(3, &plan, 0.5);
         rec.on_decode_assign(3, 1, 0.5);
         rec.on_prefill_done(3, 1.5);
         rec.on_transfer(3, 2, 1.6);
         rec.on_token(3, 1.7);
         rec.on_token(3, 1.8);
+        rec.on_cancel(4, CancelStage::Decode, 1.9);
+        assert_eq!(rec.count("arrival"), 1);
         assert_eq!(rec.count("plan"), 1);
         assert_eq!(rec.count("decode_assign"), 1);
         assert_eq!(rec.count("token"), 2);
+        assert_eq!(rec.count("cancel"), 1);
         let evs = rec.events();
-        assert_eq!(evs.len(), 6);
-        assert_eq!(evs[1], TraceEvent::DecodeAssign { req: 3, instance: 1, at: 0.5 });
+        assert_eq!(evs.len(), 8);
+        assert_eq!(evs[0], TraceEvent::Arrival { req: 3, at: 0.4 });
+        assert_eq!(evs[2], TraceEvent::DecodeAssign { req: 3, instance: 1, at: 0.5 });
         assert_eq!(
-            evs[0],
+            evs[1],
             TraceEvent::Plan { req: 3, n_chunks: 1, max_sp: 2, at: 0.5 }
         );
         assert!(evs.windows(2).all(|w| w[0].at() <= w[1].at()));
         let json = rec.to_json().to_string();
         assert!(json.contains("prefill_done"), "{json}");
         assert!(json.contains("backend"), "{json}");
+        assert!(json.contains("\"stage\""), "{json}");
+        assert!(json.contains("arrival"), "{json}");
+    }
+
+    #[test]
+    fn event_derived_latency_metrics() {
+        let rec = TraceRecorder::new();
+        // req 0: arrival 1.0, prefill done 2.5 → TTFT 1.5; tokens at
+        // 2.5/2.7/3.0 → TBT gaps 0.2, 0.3.
+        rec.on_arrival(0, 1.0);
+        rec.on_prefill_done(0, 2.5);
+        rec.on_token(0, 2.5);
+        rec.on_token(0, 2.7);
+        rec.on_token(0, 3.0);
+        // req 1: arrived but never prefilled (cancelled) → no TTFT sample.
+        rec.on_arrival(1, 1.2);
+        rec.on_cancel(1, CancelStage::Prefill, 1.4);
+        // req 2: interleaved with req 0's tokens; gaps stay per-request.
+        rec.on_arrival(2, 2.0);
+        rec.on_prefill_done(2, 2.6);
+        rec.on_token(2, 2.6);
+        rec.on_token(2, 3.6);
+        let ttfts = rec.ttfts_from_events();
+        assert_eq!(ttfts.len(), 2);
+        assert!((ttfts[0] - 1.5).abs() < 1e-12);
+        assert!((ttfts[1] - 0.6).abs() < 1e-12);
+        let tbts = rec.tbts_from_events();
+        assert_eq!(tbts.len(), 3, "2 gaps for req 0 + 1 gap for req 2");
+        assert!((tbts[0] - 0.2).abs() < 1e-12);
+        assert!((tbts[1] - 0.3).abs() < 1e-12);
+        assert!((tbts[2] - 1.0).abs() < 1e-12);
     }
 }

@@ -322,10 +322,12 @@ impl DispatchClock {
 /// (exactly as before — see [`DispatchClock::pool_view`]). The decode side
 /// adds one single-instance clock per decode worker: when the dispatcher
 /// routes a request to decode lane `i`, it commits the request's
-/// *estimated* prefill-finish time onto that lane, so `decode_lane(i)`
-/// always answers "when is the latest handoff expected to arrive here" —
-/// cheap load observability for operators without touching the decode
-/// threads.
+/// *estimated* prefill-finish time **plus its estimated decode service
+/// time** (from the [`crate::latency::DecodeQuickfit`] the server
+/// calibrates at startup) onto that lane. `decode_lane(i)` therefore
+/// answers "how long until this lane drains its expected handoffs *and*
+/// its resident batch" — cheap load observability for operators without
+/// touching the decode threads.
 #[derive(Clone, Debug)]
 pub struct WorkerRegistry {
     prefill: DispatchClock,
@@ -368,9 +370,17 @@ impl WorkerRegistry {
         &self.decode[i]
     }
 
-    /// Mutable access to decode lane `i` (handoff-estimate commits).
+    /// Mutable access to decode lane `i` (handoff + service estimate
+    /// commits).
     pub fn decode_lane_mut(&mut self, i: usize) -> &mut DispatchClock {
         &mut self.decode[i]
+    }
+
+    /// Estimated seconds (relative to `now`) until decode lane `i` drains
+    /// its expected handoffs and resident batch — 0 when the lane is
+    /// believed idle.
+    pub fn decode_lane_busy(&self, i: usize, now: f64) -> f64 {
+        (self.decode[i].free_at()[0] - now).max(0.0)
     }
 
     /// One-line topology description for logs and the CLI.
@@ -548,6 +558,24 @@ mod tests {
         // prefill side is the ordinary dispatch clock
         reg.prefill_mut().commit(&[0, 1], 0.0, 3.0);
         assert_eq!(reg.prefill().pool_view(1.0).delays, vec![2.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn decode_lanes_fold_service_time_for_resident_batches() {
+        // Two requests routed to lane 0: handoffs expected at t=1.0 and
+        // t=1.2, each with an estimated 0.5s of decode service. The lane
+        // clock must accumulate the service of the *resident* batch, not
+        // just track the latest handoff: req 2's service queues behind
+        // req 1's (1.0 + 0.5 → then max(1.5, 1.2) + 0.5 = 2.0).
+        let mut reg = WorkerRegistry::single_node(2, 2);
+        reg.decode_lane_mut(0).commit(&[0], 1.0, 0.5);
+        assert_eq!(reg.decode_lane(0).free_at()[0], 1.5);
+        reg.decode_lane_mut(0).commit(&[0], 1.2, 0.5);
+        assert_eq!(reg.decode_lane(0).free_at()[0], 2.0);
+        // load observability: relative busy time, clamped at zero
+        assert!((reg.decode_lane_busy(0, 0.5) - 1.5).abs() < 1e-12);
+        assert_eq!(reg.decode_lane_busy(0, 9.0), 0.0);
+        assert_eq!(reg.decode_lane_busy(1, 0.0), 0.0, "untouched lane is idle");
     }
 
     #[test]

@@ -110,12 +110,99 @@ impl DecodeModel {
     }
 }
 
+/// A quick linear fit of *this machine's* per-step decode latency,
+/// `t(ctx) = a + b·ctx` — the CPU-substrate counterpart of the calibrated
+/// A100 [`DecodeModel`]. The live server fits one at startup (a handful of
+/// `decode_step` probes at different context lengths) and uses it to fold
+/// an estimated decode *service time* into the per-lane clocks of
+/// [`crate::cluster::WorkerRegistry`], so lane load reflects resident
+/// batches instead of only expected handoffs.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeQuickfit {
+    /// Constant per-step cost (seconds).
+    pub a: f64,
+    /// Per-context-token cost (seconds/token): the KV read term.
+    pub b: f64,
+}
+
+impl DecodeQuickfit {
+    /// Least-squares fit over `(ctx_tokens, step_secs)` samples. Degenerate
+    /// inputs (fewer than two distinct contexts, non-finite or negative
+    /// coefficients) fall back to a small constant-cost model, so queue
+    /// estimates stay sane on noisy machines.
+    pub fn fit(samples: &[(f64, f64)]) -> Self {
+        let fallback = DecodeQuickfit { a: 1e-4, b: 0.0 };
+        if samples.len() < 2 {
+            return fallback;
+        }
+        let n = samples.len() as f64;
+        let sx: f64 = samples.iter().map(|s| s.0).sum();
+        let sy: f64 = samples.iter().map(|s| s.1).sum();
+        let sxx: f64 = samples.iter().map(|s| s.0 * s.0).sum();
+        let sxy: f64 = samples.iter().map(|s| s.0 * s.1).sum();
+        let det = n * sxx - sx * sx;
+        if det.abs() < 1e-12 {
+            return fallback;
+        }
+        let b = (n * sxy - sx * sy) / det;
+        let a = (sy - b * sx) / n;
+        if !(a.is_finite() && b.is_finite()) || a <= 0.0 {
+            return fallback;
+        }
+        DecodeQuickfit { a, b: b.max(0.0) }
+    }
+
+    /// Predicted latency of one decode step at context length `ctx`.
+    pub fn step_secs(&self, ctx: f64) -> f64 {
+        (self.a + self.b * ctx.max(0.0)).max(0.0)
+    }
+
+    /// Estimated total decode service time of a request: `output_len`
+    /// steps whose context grows from `prompt_len` to
+    /// `prompt_len + output_len` (evaluated at the mean context — exact for
+    /// the linear model).
+    pub fn service_secs(&self, prompt_len: usize, output_len: usize) -> f64 {
+        let steps = output_len.max(1) as f64;
+        let mean_ctx = prompt_len as f64 + steps / 2.0;
+        steps * self.step_secs(mean_ctx)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn model() -> DecodeModel {
         DecodeModel::a100(&ModelArch::llama3_8b())
+    }
+
+    #[test]
+    fn quickfit_recovers_linear_model() {
+        let truth = DecodeQuickfit { a: 2e-3, b: 5e-6 };
+        let samples: Vec<(f64, f64)> =
+            [0.0, 64.0, 128.0, 256.0, 512.0].iter().map(|&c| (c, truth.step_secs(c))).collect();
+        let fit = DecodeQuickfit::fit(&samples);
+        assert!((fit.a - truth.a).abs() < 1e-9, "a = {}", fit.a);
+        assert!((fit.b - truth.b).abs() < 1e-12, "b = {}", fit.b);
+        // service time: 10 steps from ctx 100 ≈ 10 · t(105)
+        let svc = fit.service_secs(100, 10);
+        assert!((svc - 10.0 * truth.step_secs(105.0)).abs() < 1e-9);
+        assert!(svc > 0.0);
+    }
+
+    #[test]
+    fn quickfit_degenerate_falls_back() {
+        let f = DecodeQuickfit::fit(&[]);
+        assert!(f.a > 0.0 && f.step_secs(1e6).is_finite());
+        // one sample, or all-identical contexts → fallback, never a panic
+        let f = DecodeQuickfit::fit(&[(64.0, 0.001)]);
+        assert!(f.a > 0.0);
+        let f = DecodeQuickfit::fit(&[(64.0, 0.001), (64.0, 0.002)]);
+        assert!(f.a > 0.0);
+        // noisy negative slope clamps to 0, service stays monotone in steps
+        let f = DecodeQuickfit::fit(&[(0.0, 0.002), (100.0, 0.001)]);
+        assert!(f.b >= 0.0);
+        assert!(f.service_secs(10, 4) <= f.service_secs(10, 8) + 1e-12);
     }
 
     #[test]

@@ -30,6 +30,6 @@ pub mod decode;
 pub mod transfer;
 
 pub use calibration::a100_model_for;
-pub use decode::DecodeModel;
+pub use decode::{DecodeModel, DecodeQuickfit};
 pub use prefill::{PrefillModel, SpCoeffs};
 pub use transfer::TransferModel;

@@ -51,13 +51,19 @@
 //! (`runtime::Engine::stub_default()`), which exercises the identical
 //! dispatch/barrier/KV/batching code path without the xla toolchain.
 //!
-//! ## Multi-worker serving
+//! ## Multi-worker serving, asynchronously
 //!
 //! The live server mirrors the paper's disaggregated topology end to end:
 //! N prefill workers feed M decode workers, and finished prefills are
 //! placed by the same [`sched::DecodeRouter`] (slot/KV-block aware
 //! admission, least-loaded freeness placement) the simulator schedules
-//! against:
+//! against. Submission is handle-based: [`serve::Server::client`] yields a
+//! cloneable [`api::Client`] whose `submit` returns an
+//! [`api::RequestHandle`] immediately — a token stream, a completion
+//! future, and `cancel()` — while a dispatcher thread commits placements
+//! in arrival order and plans outside the router lock (see the `api`
+//! module docs for the doc-tested streaming example). The blocking calls
+//! below are thin wrappers over that path:
 //!
 //! ```
 //! use std::sync::Arc;

@@ -319,7 +319,7 @@ fn cmd_serve(args: &Args) -> i32 {
         &tetris::modelcfg::ModelArch::llama3_8b(), 1, &sp,
     );
     let recorder = Arc::new(TraceRecorder::new());
-    let mut server = match Tetris::builder()
+    let server = match Tetris::builder()
         .policy("tetris-cdsp")
         .cluster(ClusterConfig::tiny(workers, decode_workers))
         .n_decode_workers(decode_workers)
@@ -346,13 +346,43 @@ fn cmd_serve(args: &Args) -> i32 {
             output_len,
         })
         .collect();
-    let m = match server.run_trace(&reqs, 0.0) {
-        Ok(m) => m,
+    // Drive the run through the handle-based async API: the burst routes
+    // atomically on the dispatcher, the caller streams tokens and awaits
+    // per-request completions.
+    let client = server.client();
+    let t0 = std::time::Instant::now();
+    let mut handles = match client.submit_burst(&reqs) {
+        Ok(h) => h,
         Err(e) => {
             eprintln!("serving failed: {e:#}");
             return 1;
         }
     };
+    if let Some(h0) = handles.first() {
+        if let Some(first) = h0.next_token() {
+            println!(
+                "request 0: first token streamed after {} (TTFT, decode ongoing)",
+                fmt_secs(first.at)
+            );
+        }
+    }
+    let mut finished = Vec::new();
+    let mut failures = 0usize;
+    for h in &mut handles {
+        match h.wait() {
+            tetris::api::Completion::Finished(m) => finished.push(m),
+            other => {
+                eprintln!("request {} did not finish: {other:?}", h.id());
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("serving failed: {failures} of {n} requests did not finish");
+        let _ = server.shutdown();
+        return 1;
+    }
+    let m = tetris::metrics::RunMetrics { requests: finished, span: t0.elapsed().as_secs_f64() };
     let ttft = m.ttft_summary();
     let tbt = m.tbt_summary();
     println!(

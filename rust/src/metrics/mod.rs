@@ -7,6 +7,84 @@
 
 use crate::util::stats::{cdf_points, Summary};
 
+/// One token streamed out of a live request, carrying its per-request
+/// streaming timestamp (seconds since the request was submitted). This is
+/// what a [`crate::serve::RequestHandle`]'s token channel yields: index 0
+/// is the prefill-produced first token (its `at` is the request's TTFT),
+/// every later index is one decode step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamedToken {
+    /// Position in the request's output (0 = first token, from prefill).
+    pub index: usize,
+    /// The token id.
+    pub token: i32,
+    /// Seconds since the request's submission (index 0's `at` is the TTFT).
+    pub at: f64,
+}
+
+/// Where in its lifecycle a request was when it was cancelled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelStage {
+    /// Still in the dispatcher queue — never planned or routed.
+    Queued,
+    /// Parked for decode capacity — never planned or routed.
+    Parked,
+    /// Routed and planned; prefill chunks in flight (virtual KV reservation
+    /// released).
+    Prefill,
+    /// KV handoff mid-flight: the granted transfer backend was released and
+    /// the virtual reservation cancelled.
+    Transfer,
+    /// Actively decoding: real KV blocks freed, batch slot released.
+    Decode,
+    /// The server shut down while the request was still queued or parked.
+    Shutdown,
+}
+
+impl CancelStage {
+    /// Stable lowercase tag (used by trace export and logs).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            CancelStage::Queued => "queued",
+            CancelStage::Parked => "parked",
+            CancelStage::Prefill => "prefill",
+            CancelStage::Transfer => "transfer",
+            CancelStage::Decode => "decode",
+            CancelStage::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// Terminal outcome of one asynchronously submitted request — what a
+/// [`crate::serve::RequestHandle`]'s `wait()` resolves to.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Completion {
+    /// The request ran to completion; its full metrics.
+    Finished(RequestMetrics),
+    /// The request was cancelled at the given lifecycle stage; all KV
+    /// blocks, parked-queue slots, and transfer backends it held have been
+    /// released.
+    Cancelled(CancelStage),
+    /// The server dropped the request (scheduler refusal at re-admission,
+    /// or the server terminated before resolving it).
+    Dropped(String),
+}
+
+impl Completion {
+    /// The finished metrics, if the request completed normally.
+    pub fn finished(self) -> Option<RequestMetrics> {
+        match self {
+            Completion::Finished(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Whether this outcome is [`Completion::Finished`].
+    pub fn is_finished(&self) -> bool {
+        matches!(self, Completion::Finished(_))
+    }
+}
+
 /// Per-request outcome collected by the simulator or the live engine.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RequestMetrics {

@@ -12,11 +12,20 @@
 //!
 //! The router is deliberately a plain (non-thread-safe) value: the
 //! simulator owns one directly, while the live server wraps the same type
-//! in an `Arc<Mutex<_>>` and shares it between the dispatcher (placement at
-//! submission), the prefill workers (in-flight transfer completion), and
-//! the decode workers (slot release on finish). Keeping one implementation
-//! is what makes sim-vs-serve placement parity testable: both paths run
-//! the identical routing code over the identical state machine.
+//! in an `Arc<Mutex<_>>` and shares it between the dispatcher thread
+//! (placement commits), the prefill workers (in-flight transfer
+//! completion), and the decode workers (slot release on finish). Keeping
+//! one implementation is what makes sim-vs-serve placement parity
+//! testable: both paths run the identical routing code over the identical
+//! state machine.
+//!
+//! The live server's submission path is **two-phase**: CDSP planning runs
+//! on the dispatcher thread with no router lock held, and the lock is
+//! taken only around [`DecodeRouter::route`] to commit placements in
+//! arrival order (one lock across a whole burst). The phases are safe to
+//! split because `route` depends only on the request's token need and the
+//! router state — never on the plan — so narrowing the lock cannot change
+//! any placement.
 //!
 //! Lifecycle of one request through the router:
 //!
@@ -28,8 +37,14 @@
 //!    is *freeness-neutral* (free−virtual and the batch denominator are
 //!    both unchanged), so placement decisions never depend on handoff
 //!    timing — the property the parity tests rely on.
-//! 3. [`DecodeRouter::finish`] (or [`DecodeRouter::cancel`] if the request
-//!    is abandoned before its handoff) — capacity returns to the pool.
+//! 3. [`DecodeRouter::finish`] — capacity returns to the pool.
+//!
+//! [`DecodeRouter::cancel`] is the early exit from step 1→2: it releases a
+//! virtual reservation that will never convert. The live server takes it
+//! on scheduler refusal and on client cancellation mid-prefill or
+//! mid-transfer; a cancellation that lands after `transfer_complete`
+//! (mid-decode) releases real blocks through [`DecodeRouter::finish`]
+//! instead.
 
 use crate::kvcache::BlockManager;
 

@@ -1,0 +1,339 @@
+//! The dispatcher thread: the two-phase submission path of the live
+//! server.
+//!
+//! Submitting threads only validate and enqueue (see
+//! [`crate::serve::Client`]); this thread does everything that used to run
+//! on the caller under the router lock, split into two phases per request:
+//!
+//! 1. **Commit placement** — [`crate::sched::DecodeRouter::route`] runs
+//!    under a router
+//!    lock held only long enough to commit the placement (for a burst, one
+//!    lock across the whole batch, so burst placements stay a pure function
+//!    of the request sequence — the sim/serve parity contract). A request
+//!    the router cannot admit parks here, in arrival order.
+//! 2. **Plan + dispatch** — CDSP planning and chunk dispatch run *outside*
+//!    the router lock, so a decode worker's `finish()` (and the next
+//!    caller's submission) never waits behind `schedule()`.
+//!
+//! The dispatcher is also the only place parked requests re-admit: decode
+//! workers and cancellation paths send [`DispatcherMsg::CapacityFreed`]
+//! whenever KV blocks return to the pool, and the parked queue is retried
+//! in arrival order under one router lock.
+
+use crate::baselines::PrefillScheduler;
+use crate::cluster::WorkerRegistry;
+use crate::latency::prefill::SpCoeffs;
+use crate::latency::DecodeQuickfit;
+use crate::metrics::{CancelStage, Completion};
+use crate::runtime::TinyArch;
+use crate::sched::plan::CdspPlan;
+use crate::sched::ImprovementController;
+use crate::serve::handle::{Pending, SubmitShared};
+use crate::serve::{need_tokens, KvState, ObserverSet, SharedKv, SharedRouter, WorkerJob};
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+/// Messages driving the dispatcher thread.
+pub(crate) enum DispatcherMsg {
+    /// One validated submission.
+    Submit(Pending),
+    /// A burst whose placements must be routed atomically, in order.
+    SubmitBatch(Vec<Pending>),
+    /// A handle asked to cancel `req` — resolve it promptly if the
+    /// dispatcher still owns it (parked); in-flight stages observe the
+    /// cancel flag themselves.
+    Cancel(u64),
+    /// KV blocks returned to the router (decode finish or a cancellation):
+    /// retry the parked queue.
+    CapacityFreed,
+    /// Reply on the channel once every earlier message has been processed
+    /// (the legacy blocking entry points use this as their barrier).
+    Flush(Sender<()>),
+    /// Shutdown: resolve parked requests deterministically and exit.
+    Drain,
+}
+
+/// The dispatcher's owned state. Built by `Server::start`, consumed by
+/// [`Dispatcher::run`] on its own thread.
+pub(crate) struct Dispatcher {
+    pub arch: TinyArch,
+    pub scheduler: Box<dyn PrefillScheduler>,
+    pub controller: ImprovementController,
+    pub registry: Arc<Mutex<WorkerRegistry>>,
+    pub router: SharedRouter,
+    pub kv: SharedKv,
+    pub workers: Vec<Sender<WorkerJob>>,
+    pub observers: ObserverSet,
+    pub epoch: Instant,
+    /// Calibrated per-chunk prefill latency of *this machine* (queue-clock
+    /// estimates).
+    pub engine_coeffs: SpCoeffs,
+    /// Calibrated per-step decode latency of *this machine*: folds an
+    /// estimated decode service time into the decode-lane clocks.
+    pub decode_fit: DecodeQuickfit,
+    pub shared: Arc<SubmitShared>,
+    /// Self-sender (deferred `CapacityFreed` after dispatcher-side
+    /// cancellations, avoiding re-entrant admission).
+    pub tx: Sender<DispatcherMsg>,
+    pub rx: Receiver<DispatcherMsg>,
+    /// Requests the router could not admit yet, in arrival order.
+    pub parked: VecDeque<Pending>,
+}
+
+impl Dispatcher {
+    /// The dispatcher loop. Exits on [`DispatcherMsg::Drain`] or when every
+    /// sender is gone (a `Server` dropped without `shutdown`); either way
+    /// the parked queue is resolved deterministically first.
+    pub fn run(mut self) {
+        loop {
+            match self.rx.recv() {
+                Ok(DispatcherMsg::Submit(p)) => self.admit_batch(vec![p]),
+                Ok(DispatcherMsg::SubmitBatch(batch)) => self.admit_batch(batch),
+                Ok(DispatcherMsg::Cancel(id)) => self.cancel_parked(id),
+                Ok(DispatcherMsg::CapacityFreed) => self.try_admit(),
+                Ok(DispatcherMsg::Flush(ack)) => {
+                    let _ = ack.send(());
+                }
+                Ok(DispatcherMsg::Drain) | Err(_) => break,
+            }
+        }
+        self.drain();
+    }
+
+    /// Admit a batch: arrival bookkeeping, then phase 1 (atomic placement
+    /// commits, in order), then phase 2 (plan + dispatch, lock-free).
+    fn admit_batch(&mut self, batch: Vec<Pending>) {
+        let mut live = Vec::with_capacity(batch.len());
+        for p in batch {
+            self.controller.on_arrival(p.shared.submitted_at);
+            if p.shared.is_cancelled() {
+                self.resolve_cancel(&p, CancelStage::Queued);
+                continue;
+            }
+            live.push(p);
+        }
+        let routed = self.route_in_order(live);
+        for (p, inst) in routed {
+            self.plan_and_dispatch(p, inst);
+        }
+    }
+
+    /// Phase 1: commit placements under one router lock, in arrival order.
+    /// Requests that do not fit park (still in arrival order).
+    fn route_in_order(&mut self, batch: Vec<Pending>) -> Vec<(Pending, usize)> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let mut routed = Vec::with_capacity(batch.len());
+        let mut guard = self.router.lock().unwrap();
+        for p in batch {
+            match guard.route(need_tokens(&p.req)) {
+                Some(inst) => routed.push((p, inst)),
+                None => {
+                    self.shared.parked.fetch_add(1, Ordering::Relaxed);
+                    self.parked.push_back(p);
+                }
+            }
+        }
+        routed
+    }
+
+    /// Phase 2 for one routed request: plan outside the router lock, then
+    /// register KV state, commit the queue clocks, and dispatch the
+    /// chunks. A scheduler refusal rolls the placement back (no
+    /// `on_decode_assign`/`on_plan` is ever emitted for it) and resolves
+    /// the handle as [`Completion::Dropped`] — the same fate the old
+    /// blocking path gave refused parked requests.
+    fn plan_and_dispatch(&mut self, p: Pending, inst: usize) {
+        let need = need_tokens(&p.req);
+        if p.shared.is_cancelled() {
+            self.router.lock().unwrap().cancel(inst, need);
+            self.resolve_cancel(&p, CancelStage::Queued);
+            let _ = self.tx.send(DispatcherMsg::CapacityFreed);
+            return;
+        }
+        let now = self.epoch.elapsed().as_secs_f64();
+        match self.plan(&p.req.prompt, now) {
+            Ok(plan) => {
+                // The placement and plan become observable only now, and
+                // strictly before any chunk is dispatched — so a request's
+                // `decode_assign` always precedes its `transfer`, however
+                // fast the prefill workers are.
+                for o in self.observers.iter() {
+                    o.on_decode_assign(p.req.id, inst, now);
+                    o.on_plan(p.req.id, &plan, now);
+                }
+                p.shared.n_chunks.store(plan.n_chunks(), Ordering::Relaxed);
+                self.dispatch(&p, inst, &plan, now);
+            }
+            Err(e) => {
+                self.router.lock().unwrap().cancel(inst, need);
+                eprintln!("tetris: dropping request {}: {e:#}", p.req.id);
+                p.shared.resolve(Completion::Dropped(format!("{e:#}")));
+                let _ = self.tx.send(DispatcherMsg::CapacityFreed);
+            }
+        }
+    }
+
+    /// CDSP planning against the current queue-clock snapshot (no router
+    /// lock held — this is the expensive step the two-phase split exists
+    /// to keep out of the lock).
+    fn plan(&mut self, prompt: &[i32], now: f64) -> anyhow::Result<CdspPlan> {
+        let rate = self.controller.rate(now);
+        let pool = self.registry.lock().unwrap().prefill().pool_view(now);
+        let plan = self.scheduler.schedule(prompt.len(), &pool, rate).ok_or_else(|| {
+            anyhow::anyhow!(
+                "scheduling failed ({} prompt tokens on {} workers)",
+                prompt.len(),
+                pool.len()
+            )
+        })?;
+        debug_assert!(plan.validate(prompt.len()).is_ok());
+        Ok(plan)
+    }
+
+    /// Register KV state and dispatch the plan's chunks to the prefill
+    /// workers, committing queue-clock estimates as it goes.
+    fn dispatch(&mut self, p: &Pending, inst: usize, plan: &CdspPlan, now: f64) {
+        let a = &self.arch;
+        self.kv.lock().unwrap().insert(
+            p.req.id,
+            KvState {
+                k: vec![0.0; a.kv_elems()],
+                v: vec![0.0; a.kv_elems()],
+                hist_len: 0,
+                output_len: p.req.output_len.max(1),
+                decode_inst: inst,
+                need_tokens: need_tokens(&p.req),
+                shared: Arc::clone(&p.shared),
+            },
+        );
+
+        // Dispatch chunks in order. Chunks may exceed the engine's
+        // l_bucket: split into bucket-sized pieces on the same group.
+        let n_chunks = plan.chunks.len();
+        let mut offset = 0usize;
+        let mut finish = now;
+        let mut reg = self.registry.lock().unwrap();
+        for (ci, chunk) in plan.chunks.iter().enumerate() {
+            let mut remaining = chunk.len;
+            let mut piece_start = offset;
+            while remaining > 0 {
+                let piece = remaining.min(a.l_bucket);
+                let is_last_piece = ci == n_chunks - 1 && remaining == piece;
+                let start = Arc::new(Barrier::new(chunk.group.len()));
+                let end = Arc::new(Barrier::new(chunk.group.len()));
+                let tokens: Vec<i32> =
+                    p.req.prompt[piece_start..piece_start + piece].to_vec();
+                for (gi, &w) in chunk.group.iter().enumerate() {
+                    let job = if gi == 0 {
+                        WorkerJob::Lead {
+                            start: Arc::clone(&start),
+                            end: Arc::clone(&end),
+                            req: p.req.id,
+                            tokens: tokens.clone(),
+                            is_last: is_last_piece,
+                            cancelled: Arc::clone(&p.shared.cancelled),
+                        }
+                    } else {
+                        WorkerJob::Member {
+                            start: Arc::clone(&start),
+                            end: Arc::clone(&end),
+                        }
+                    };
+                    self.workers[w].send(job).expect("worker alive");
+                }
+                // queue-clock bookkeeping (estimates; real time may drift)
+                let est = self
+                    .engine_coeffs
+                    .predict(piece_start as f64, piece as f64)
+                    .max(1e-4);
+                finish = reg.prefill_mut().commit(&chunk.group, finish, est);
+                piece_start += piece;
+                remaining -= piece;
+            }
+            offset += chunk.len;
+        }
+        // The assigned decode lane expects its handoff at the estimated
+        // prefill finish and then stays busy for the request's estimated
+        // decode service time, so lane load reflects resident batches —
+        // not just expected handoffs (observability only; the real handoff
+        // is event-driven through the transfer layer).
+        let svc = self
+            .decode_fit
+            .service_secs(p.req.prompt.len(), p.req.output_len.max(1));
+        reg.decode_lane_mut(inst).commit(&[0], finish, svc);
+    }
+
+    /// Retry the parked queue in arrival order under one router lock
+    /// (phase 1), then plan + dispatch the admitted ones (phase 2) — the
+    /// simulator's waiting-queue semantics.
+    fn try_admit(&mut self) {
+        if self.parked.is_empty() {
+            return;
+        }
+        let mut admitted = Vec::new();
+        let mut cancelled = Vec::new();
+        let mut still = VecDeque::new();
+        {
+            let mut guard = self.router.lock().unwrap();
+            while let Some(p) = self.parked.pop_front() {
+                if p.shared.is_cancelled() {
+                    self.shared.parked.fetch_sub(1, Ordering::Relaxed);
+                    cancelled.push(p);
+                    continue;
+                }
+                match guard.route(need_tokens(&p.req)) {
+                    Some(inst) => {
+                        self.shared.parked.fetch_sub(1, Ordering::Relaxed);
+                        admitted.push((p, inst));
+                    }
+                    None => still.push_back(p),
+                }
+            }
+        }
+        self.parked = still;
+        for p in cancelled {
+            self.resolve_cancel(&p, CancelStage::Parked);
+        }
+        for (p, inst) in admitted {
+            self.plan_and_dispatch(p, inst);
+        }
+    }
+
+    /// A handle cancelled `id`: if the request is parked, resolve it now
+    /// (its slot frees immediately); queued submissions resolve when their
+    /// message is popped, and dispatched stages watch the flag themselves.
+    fn cancel_parked(&mut self, id: u64) {
+        for _ in 0..self.parked.len() {
+            let p = self.parked.pop_front().expect("len checked");
+            if p.req.id == id && p.shared.is_cancelled() {
+                self.shared.parked.fetch_sub(1, Ordering::Relaxed);
+                self.resolve_cancel(&p, CancelStage::Parked);
+            } else {
+                self.parked.push_back(p);
+            }
+        }
+    }
+
+    fn resolve_cancel(&self, p: &Pending, stage: CancelStage) {
+        let now = self.epoch.elapsed().as_secs_f64();
+        for o in self.observers.iter() {
+            o.on_cancel(p.req.id, stage, now);
+        }
+        p.shared.resolve(Completion::Cancelled(stage));
+    }
+
+    /// Shutdown drain: every request still parked resolves as cancelled at
+    /// the `Shutdown` stage (it holds no router resources), so handles
+    /// never dangle.
+    fn drain(&mut self) {
+        while let Some(p) = self.parked.pop_front() {
+            self.shared.parked.fetch_sub(1, Ordering::Relaxed);
+            self.resolve_cancel(&p, CancelStage::Shutdown);
+        }
+    }
+}

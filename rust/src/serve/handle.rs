@@ -1,0 +1,380 @@
+//! Per-request handles and the cloneable client facade — the asynchronous
+//! face of the live server.
+//!
+//! [`Server::submit_async`](crate::serve::Server::submit_async) (and
+//! [`Client::submit`]) return a [`RequestHandle`] the moment the request is
+//! validated and enqueued; planning, routing, prefill, and decode all
+//! happen behind it. The handle carries three things:
+//!
+//! * a **token stream** — every generated token arrives as a
+//!   [`StreamedToken`] with its per-request timestamp (index 0 is the
+//!   prefill-produced first token, so its `at` *is* the TTFT),
+//! * a **completion future** — [`RequestHandle::wait`] resolves to the
+//!   terminal [`Completion`]: full [`RequestMetrics`](crate::metrics::RequestMetrics)
+//!   on success, the [`CancelStage`](crate::metrics::CancelStage) on
+//!   cancellation, or a drop reason,
+//! * **`cancel()`** — releases whatever the request holds at that moment:
+//!   its dispatcher-queue or parked slot, its virtual KV reservation
+//!   (mid-prefill), its granted transfer backend (mid-transfer), or its
+//!   real KV blocks and batch slot (mid-decode).
+
+use crate::metrics::{Completion, StreamedToken};
+use crate::serve::dispatcher::DispatcherMsg;
+use crate::serve::ServeRequest;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Server-side state of one in-flight request, shared between the
+/// dispatcher, the prefill leaders, and the decode workers. The client's
+/// [`RequestHandle`] deliberately does *not* hold this (only the small
+/// cancel/chunk-count atomics), so if the server dies without resolving a
+/// request, the outcome sender drops and `wait()` observes the
+/// disconnect instead of blocking forever.
+pub(crate) struct ReqShared {
+    /// Set by [`RequestHandle::cancel`]; checked at every stage boundary.
+    pub cancelled: Arc<AtomicBool>,
+    /// Chunks dispatched for this request (0 until planned; the legacy
+    /// blocking `submit` reads this after its flush).
+    pub n_chunks: Arc<AtomicUsize>,
+    /// The handle's token stream (send side).
+    tokens: Sender<StreamedToken>,
+    /// One-shot completion channel; `take`n on resolve so the outcome is
+    /// sent exactly once and the receiver disconnects right after.
+    outcome: Mutex<Option<Sender<Completion>>>,
+    /// Submission instant — the request's latency anchor (TTFT includes
+    /// queueing and parked time, exactly like the simulator's).
+    pub submitted: Instant,
+    /// Submission time in seconds from the server epoch (observer clock).
+    pub submitted_at: f64,
+}
+
+impl ReqShared {
+    /// Whether the client asked to cancel.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Stream one token to the handle (ignored if the handle was dropped).
+    pub fn stream_token(&self, index: usize, token: i32) {
+        let at = self.submitted.elapsed().as_secs_f64();
+        let _ = self.tokens.send(StreamedToken { index, token, at });
+    }
+
+    /// Resolve the request's outcome. Exactly the first call wins; later
+    /// calls are no-ops (cancel vs. finish races settle here).
+    pub fn resolve(&self, c: Completion) {
+        if let Some(tx) = self.outcome.lock().unwrap().take() {
+            let _ = tx.send(c);
+        }
+    }
+}
+
+/// A submission the dispatcher has not dispatched yet (queued or parked).
+pub(crate) struct Pending {
+    /// The request itself.
+    pub req: ServeRequest,
+    /// Its shared lifecycle state.
+    pub shared: Arc<ReqShared>,
+}
+
+/// Build the paired client handle and server-side state for one request.
+/// `submitted`/`submitted_at` anchor the request's latency metrics and
+/// observer timestamps at the submission instant.
+pub(crate) fn make_request_at(
+    req: ServeRequest,
+    nudge: Sender<DispatcherMsg>,
+    submitted: Instant,
+    submitted_at: f64,
+) -> (RequestHandle, Pending) {
+    let cancelled = Arc::new(AtomicBool::new(false));
+    let n_chunks = Arc::new(AtomicUsize::new(0));
+    let (tok_tx, tok_rx) = channel();
+    let (out_tx, out_rx) = channel();
+    let shared = Arc::new(ReqShared {
+        cancelled: Arc::clone(&cancelled),
+        n_chunks: Arc::clone(&n_chunks),
+        tokens: tok_tx,
+        outcome: Mutex::new(Some(out_tx)),
+        submitted,
+        submitted_at,
+    });
+    let handle = RequestHandle {
+        id: req.id,
+        cancelled,
+        n_chunks,
+        nudge,
+        tokens: tok_rx,
+        outcome: out_rx,
+        resolved: None,
+    };
+    (handle, Pending { req, shared })
+}
+
+/// The client's view of one asynchronously submitted request: a token
+/// stream, a completion future, and `cancel()`. Returned by
+/// [`Server::submit_async`](crate::serve::Server::submit_async) and
+/// [`Client::submit`].
+pub struct RequestHandle {
+    id: u64,
+    cancelled: Arc<AtomicBool>,
+    n_chunks: Arc<AtomicUsize>,
+    nudge: Sender<DispatcherMsg>,
+    tokens: Receiver<StreamedToken>,
+    outcome: Receiver<Completion>,
+    resolved: Option<Completion>,
+}
+
+impl RequestHandle {
+    /// The request's id (as submitted).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the server to cancel this request. Idempotent and non-blocking:
+    /// the flag is visible to every worker immediately, and the dispatcher
+    /// is nudged so a parked or queued request resolves promptly. The
+    /// definitive answer is the handle's [`Completion`]: a request that won
+    /// the race to finish still resolves [`Completion::Finished`].
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+        let _ = self.nudge.send(DispatcherMsg::Cancel(self.id));
+    }
+
+    /// Whether [`RequestHandle::cancel`] has been called.
+    pub fn cancel_requested(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Number of prefill chunks dispatched for this request so far (0
+    /// while queued or parked).
+    pub fn dispatched_chunks(&self) -> usize {
+        self.n_chunks.load(Ordering::Relaxed)
+    }
+
+    /// Blocking: the next streamed token, or `None` once the stream is
+    /// closed (request finished, cancelled, or dropped). Token `index` 0
+    /// is the prefill-produced first token; its `at` is the TTFT.
+    pub fn next_token(&self) -> Option<StreamedToken> {
+        self.tokens.recv().ok()
+    }
+
+    /// Non-blocking [`RequestHandle::next_token`]: `None` means no token
+    /// is ready *right now* (the stream may still be live).
+    pub fn try_next_token(&self) -> Option<StreamedToken> {
+        self.tokens.try_recv().ok()
+    }
+
+    /// Blocking iterator over the remaining token stream.
+    pub fn tokens(&self) -> impl Iterator<Item = StreamedToken> + '_ {
+        self.tokens.iter()
+    }
+
+    /// Block until the request reaches a terminal state and return it.
+    /// Idempotent: later calls return the cached outcome.
+    pub fn wait(&mut self) -> Completion {
+        if let Some(c) = &self.resolved {
+            return c.clone();
+        }
+        let c = self.outcome.recv().unwrap_or_else(|_| {
+            Completion::Dropped("server terminated before resolving the request".into())
+        });
+        self.resolved = Some(c.clone());
+        c
+    }
+
+    /// Non-blocking [`RequestHandle::wait`]: `Some` once the request has
+    /// reached a terminal state.
+    pub fn try_wait(&mut self) -> Option<Completion> {
+        if let Some(c) = &self.resolved {
+            return Some(c.clone());
+        }
+        match self.outcome.try_recv() {
+            Ok(c) => {
+                self.resolved = Some(c.clone());
+                Some(c)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                let c = Completion::Dropped(
+                    "server terminated before resolving the request".into(),
+                );
+                self.resolved = Some(c.clone());
+                Some(c)
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for RequestHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RequestHandle")
+            .field("id", &self.id)
+            .field("cancel_requested", &self.cancel_requested())
+            .field("dispatched_chunks", &self.dispatched_chunks())
+            .field("resolved", &self.resolved)
+            .finish()
+    }
+}
+
+/// Validation limits the submitting thread checks synchronously, before a
+/// request ever reaches the dispatcher (so impossible requests fail fast
+/// with a descriptive error, exactly like the old blocking `submit`).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SubmitLimits {
+    /// Engine prefill cache bucket (max prompt tokens).
+    pub c_bucket: usize,
+    /// Engine decode cache bucket (max prompt + output tokens).
+    pub decode_c_bucket: usize,
+    /// Router KV block size in tokens.
+    pub block_tokens: usize,
+    /// Router KV blocks per decode instance.
+    pub blocks_per_instance: usize,
+}
+
+/// State shared by the [`Server`](crate::serve::Server) and every
+/// [`Client`] clone: the shutdown flag, the parked counter, validation
+/// limits, and the observer set (submission emits `on_arrival`).
+pub(crate) struct SubmitShared {
+    /// Set by `Server::shutdown`; rejects all later submissions.
+    pub closed: AtomicBool,
+    /// Requests currently parked for decode capacity.
+    pub parked: AtomicUsize,
+    /// Synchronous validation limits.
+    pub limits: SubmitLimits,
+    /// Observer set (for `on_arrival` at submission).
+    pub observers: crate::serve::ObserverSet,
+    /// The server epoch all observer timestamps are relative to.
+    pub epoch: Instant,
+}
+
+impl SubmitShared {
+    /// Validate + enqueue one request; the shared submission path behind
+    /// `Server::submit_async` and `Client::submit`.
+    pub fn submit(
+        &self,
+        tx: &Sender<DispatcherMsg>,
+        req: &ServeRequest,
+    ) -> anyhow::Result<RequestHandle> {
+        self.validate(req)?;
+        let (handle, pending) = self.accept(tx, req);
+        tx.send(DispatcherMsg::Submit(pending))
+            .map_err(|_| anyhow::anyhow!("server dispatcher terminated"))?;
+        Ok(handle)
+    }
+
+    /// Validate + enqueue a whole burst as one atomic routing unit: the
+    /// dispatcher holds the router lock across all the burst's `route()`
+    /// commits, so burst placements are a pure function of the request
+    /// sequence (the sim/serve parity contract). The entire burst is
+    /// validated up front — one bad request rejects the whole batch with
+    /// nothing enqueued.
+    pub fn submit_burst(
+        &self,
+        tx: &Sender<DispatcherMsg>,
+        reqs: &[ServeRequest],
+    ) -> anyhow::Result<Vec<RequestHandle>> {
+        for r in reqs {
+            self.validate(r)?;
+        }
+        let mut handles = Vec::with_capacity(reqs.len());
+        let mut batch = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let (h, p) = self.accept(tx, r);
+            handles.push(h);
+            batch.push(p);
+        }
+        tx.send(DispatcherMsg::SubmitBatch(batch))
+            .map_err(|_| anyhow::anyhow!("server dispatcher terminated"))?;
+        Ok(handles)
+    }
+
+    /// Stamp the submission instant, emit `on_arrival`, build the handle.
+    fn accept(&self, tx: &Sender<DispatcherMsg>, req: &ServeRequest) -> (RequestHandle, Pending) {
+        let submitted = Instant::now();
+        let at = self.epoch.elapsed().as_secs_f64();
+        for o in self.observers.iter() {
+            o.on_arrival(req.id, at);
+        }
+        make_request_at(req.clone(), tx.clone(), submitted, at)
+    }
+
+    fn validate(&self, req: &ServeRequest) -> anyhow::Result<()> {
+        if self.closed.load(Ordering::SeqCst) {
+            anyhow::bail!("server is shutting down; new submissions are rejected");
+        }
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            req.prompt.len() <= self.limits.c_bucket,
+            "prompt exceeds cache bucket ({} > {})",
+            req.prompt.len(),
+            self.limits.c_bucket
+        );
+        let need = crate::serve::need_tokens(req);
+        anyhow::ensure!(
+            need <= self.limits.decode_c_bucket,
+            "request {} needs {} decode-cache tokens (prompt + output) but the \
+             engine's decode bucket holds {}",
+            req.id,
+            need,
+            self.limits.decode_c_bucket
+        );
+        let need_blocks = need.div_ceil(self.limits.block_tokens);
+        anyhow::ensure!(
+            need_blocks <= self.limits.blocks_per_instance,
+            "request {} needs {} KV blocks but decode instances hold only {}",
+            req.id,
+            need_blocks,
+            self.limits.blocks_per_instance
+        );
+        Ok(())
+    }
+}
+
+/// A cloneable, thread-owned submission endpoint for the live server —
+/// obtain one with [`Server::client`](crate::serve::Server::client) and
+/// hand a clone to every submitting thread. Unlike the legacy blocking
+/// `Server::submit` (which needs `&mut Server`), any number of `Client`
+/// clones submit concurrently; callers never serialize behind planning,
+/// because submission only validates, stamps, and enqueues — the
+/// dispatcher thread does the rest.
+///
+/// `Client` is `Send` but not `Sync`: clone it per thread rather than
+/// sharing one behind a reference.
+pub struct Client {
+    pub(crate) shared: Arc<SubmitShared>,
+    pub(crate) tx: Sender<DispatcherMsg>,
+}
+
+impl Clone for Client {
+    fn clone(&self) -> Self {
+        Client { shared: Arc::clone(&self.shared), tx: self.tx.clone() }
+    }
+}
+
+impl Client {
+    /// Submit one request asynchronously. Validation errors (empty or
+    /// oversized prompt, request that can never fit a decode instance)
+    /// surface here; everything later arrives through the handle.
+    pub fn submit(&self, req: &ServeRequest) -> anyhow::Result<RequestHandle> {
+        self.shared.submit(&self.tx, req)
+    }
+
+    /// Submit a burst whose placements are routed atomically in order (see
+    /// the parity notes on [`crate::serve::Server::submit_burst`]).
+    pub fn submit_burst(&self, reqs: &[ServeRequest]) -> anyhow::Result<Vec<RequestHandle>> {
+        self.shared.submit_burst(&self.tx, reqs)
+    }
+
+    /// Requests currently parked for decode capacity.
+    pub fn n_parked(&self) -> usize {
+        self.shared.parked.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for Client {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Client").field("n_parked", &self.n_parked()).finish()
+    }
+}

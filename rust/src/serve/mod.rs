@@ -1,35 +1,51 @@
 //! The live mini serving stack: the full Tetris request path running real
-//! compute through PJRT (or the deterministic stub engine).
+//! compute through PJRT (or the deterministic stub engine), behind an
+//! asynchronous handle-based client API.
 //!
 //! OS threads play the role of prefill *and* decode instances. A request
-//! flows exactly like in the paper's Fig. 4:
+//! flows exactly like in the paper's Fig. 4, with submission decoupled
+//! from scheduling by a dedicated **dispatcher thread**:
 //!
-//! 1. the **dispatcher** (the thread calling [`Server::submit`]) routes the
-//!    request to a decode instance through the shared
-//!    [`crate::sched::DecodeRouter`] — the *same* router type and freeness
-//!    policy the simulator runs, with virtual KV usage reserved for the
-//!    in-flight cache until the handoff lands — then builds a CDSP plan
-//!    from the current per-worker queue clocks (any policy resolved
-//!    through the [`crate::api::PolicyRegistry`]),
-//! 2. each chunk is dispatched to its instance group; the group
+//! 1. a submitting thread ([`Server::submit_async`] or any [`Client`]
+//!    clone) validates the request, emits `on_arrival`, and enqueues it —
+//!    returning a [`RequestHandle`] immediately, so paced traces overlap
+//!    scheduling with prefill compute,
+//! 2. the **dispatcher thread** runs the two-phase submission path:
+//!    `route()` commits the decode placement through the shared
+//!    [`crate::sched::DecodeRouter`] under a lock held only for the commit
+//!    (one lock across a whole burst, preserving placement parity with the
+//!    simulator), then CDSP planning and chunk dispatch run *outside* the
+//!    router lock (any policy resolved through the
+//!    [`crate::api::PolicyRegistry`]),
+//! 3. each chunk is dispatched to its instance group; the group
 //!    **synchronizes on a barrier** (ring attention mandates a simultaneous
 //!    start — this is precisely the idle-slot effect CDSP exploits), the
 //!    group leader executes the chunk through `runtime::Engine`, and the
 //!    request's KV cache grows in the shared store,
-//! 3. the final chunk's logits produce the first token (TTFT is measured
-//!    here, as in the paper), and the KV cache is handed to the *assigned*
-//!    decode worker through the `transfer` layer's handshake-managed
-//!    backend pool ([`crate::transfer::ReceiveManager`], one per decode
-//!    instance) — the router converts the virtual reservation into a real
+//! 4. the final chunk's logits produce the first token (TTFT is measured
+//!    here, as in the paper; the token is streamed to the handle), and the
+//!    KV cache is handed to the *assigned* decode worker through the
+//!    `transfer` layer's handshake-managed backend pool
+//!    ([`crate::transfer::ReceiveManager`], one per decode instance) — the
+//!    router converts the virtual reservation into a real
 //!    [`crate::kvcache::BlockManager`] allocation,
-//! 4. every decode worker independently runs **continuous batching**: new
+//! 5. every decode worker independently runs **continuous batching**: new
 //!    requests join at step boundaries, finished ones leave (releasing
-//!    their router blocks), every step emits a TBT sample.
+//!    their router blocks and waking the dispatcher), every step emits a
+//!    TBT sample and streams its token to the handle.
 //!
 //! Requests that the router cannot admit (all instances' KV blocks
-//! exhausted) are *parked* and re-tried in arrival order whenever decode
-//! capacity frees up — the same waiting-queue semantics as the simulator's
-//! event loop.
+//! exhausted) are *parked* on the dispatcher and re-tried in arrival order
+//! whenever decode capacity frees up — the same waiting-queue semantics as
+//! the simulator's event loop, no longer dependent on a collecting caller.
+//!
+//! [`RequestHandle::cancel`] releases whatever the request holds at the
+//! moment the cancel lands: its queue or parked slot (dispatcher), its
+//! virtual KV reservation (prefill), a granted transfer backend
+//! (mid-handoff, via [`crate::transfer::ReceiveManager::abort`]), or its
+//! real KV blocks and batch slot (decode). Every cancellation frees
+//! capacity for parked requests and emits
+//! [`Observer::on_cancel`](crate::api::Observer::on_cancel).
 //!
 //! Construct servers through [`crate::api::Tetris`] —
 //! `Tetris::builder().n_decode_workers(4).build_server(engine, n_workers)`
@@ -39,11 +55,11 @@
 //!
 //! ## Determinism and sim parity
 //!
-//! Placement decisions are made at submission time in submission order —
-//! mirroring the simulator, which routes at `Arrival` events. Because the
-//! router's `transfer_complete` transition is freeness-neutral (see
+//! Placement decisions are committed by the dispatcher in submission order
+//! — mirroring the simulator, which routes at `Arrival` events. Because
+//! the router's `transfer_complete` transition is freeness-neutral (see
 //! [`crate::sched::decode`]), placements do not depend on handoff timing;
-//! [`Server::submit_burst`] additionally routes a whole batch atomically
+//! a burst ([`Server::submit_burst`], [`Client::submit_burst`]) is routed
 //! under one router lock, so a burst's placements are a pure function of
 //! the request sequence. The parity integration tests run one trace
 //! through both the simulator and this server and require identical
@@ -51,15 +67,15 @@
 //!
 //! ## Locking discipline
 //!
-//! Three shared structures, three mutexes: the KV store (scatter/repack),
+//! Four shared structures, four mutexes: the KV store (scatter/repack),
 //! the per-decode-instance `ReceiveManager` (one whole handoff is atomic
 //! under its lock, so a handshake can never observe a half-finished
-//! transfer), and the `DecodeRouter`. The only permitted nesting is on
-//! the dispatcher, which acquires **router → KV** (submission holds the
-//! router guard while registering KV state, and across a whole burst).
-//! Worker threads take each lock in a scope of its own — in particular
-//! they must never acquire the router while holding the KV store or a
-//! receive manager, or they would deadlock against a burst in progress.
+//! transfer), the `DecodeRouter`, and the `WorkerRegistry` queue clocks.
+//! No thread ever holds two of them at once: the dispatcher takes router →
+//! *release* → kv → *release* → registry in sequence, and workers take
+//! each lock in a scope of its own. In particular the router lock is never
+//! held across `schedule()` or chunk dispatch — decode `finish()` is never
+//! blocked by a submitting caller.
 //!
 //! Substitution note (DESIGN.md §3): on this CPU substrate a chunk's
 //! compute executes on the group leader while members hold their slot at
@@ -68,17 +84,28 @@
 //! everything else (planning, queueing, group reservation, KV movement,
 //! routing, batching) is the real code path.
 
+/// The dispatcher thread (two-phase submission path).
+pub(crate) mod dispatcher;
+/// Request handles, the client facade, and the shared submission path.
+pub(crate) mod handle;
+
+pub use handle::{Client, RequestHandle};
+
 use crate::api::Observer;
 use crate::baselines::PrefillScheduler;
 use crate::cluster::WorkerRegistry;
 use crate::latency::prefill::{PrefillModel, Sample, SpCoeffs};
-use crate::metrics::{RequestMetrics, RunMetrics};
+use crate::latency::DecodeQuickfit;
+use crate::metrics::{CancelStage, Completion, RequestMetrics, RunMetrics};
 use crate::runtime::{argmax, Engine};
 use crate::sched::{DecodeRouter, ImprovementController};
 use crate::transfer::{Handshake, HandshakeReply, ReceiveManager};
 use anyhow::Result;
+use dispatcher::{Dispatcher, DispatcherMsg};
+use handle::{ReqShared, SubmitLimits, SubmitShared};
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -123,20 +150,21 @@ impl DecodePool {
 }
 
 /// Per-request KV cache in the shared store (prefill-bucket layout), plus
-/// the decode handoff metadata.
-struct KvState {
-    k: Vec<f32>,
-    v: Vec<f32>,
-    hist_len: usize,
-    output_len: usize,
-    arrival: Instant,
-    /// Decode instance chosen by the router at submission.
-    decode_inst: usize,
+/// the decode handoff metadata and the handle's shared lifecycle state.
+pub(crate) struct KvState {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub hist_len: usize,
+    pub output_len: usize,
+    /// Decode instance chosen by the router at placement commit.
+    pub decode_inst: usize,
     /// Token count the router reserved (prompt + output).
-    need_tokens: usize,
+    pub need_tokens: usize,
+    /// Handle plumbing: cancel flag, token stream, completion slot.
+    pub shared: Arc<ReqShared>,
 }
 
-enum WorkerJob {
+pub(crate) enum WorkerJob {
     /// Hold the instance slot: wait at the start barrier, then at the end
     /// barrier while the leader computes (ring-synchronous occupation).
     Member { start: Arc<Barrier>, end: Arc<Barrier> },
@@ -147,6 +175,9 @@ enum WorkerJob {
         req: u64,
         tokens: Vec<i32>,
         is_last: bool,
+        /// The request's cancel flag: a flagged chunk skips its compute
+        /// (the final chunk's leader performs the actual cleanup).
+        cancelled: Arc<AtomicBool>,
     },
     Stop,
 }
@@ -156,7 +187,6 @@ struct DecodeJob {
     first_token: i32,
     prompt_len: usize,
     output_len: usize,
-    arrival: Instant,
     first_token_at: Instant,
     k: Vec<f32>,
     v: Vec<f32>,
@@ -164,60 +194,65 @@ struct DecodeJob {
     inst: usize,
     /// Router block-allocation id, released on finish.
     seq: u64,
+    /// Handle plumbing (cancel flag, token stream, completion slot).
+    shared: Arc<ReqShared>,
 }
 
-type ObserverSet = Arc<Vec<Arc<dyn Observer>>>;
-type SharedRouter = Arc<Mutex<DecodeRouter>>;
-type SharedReceivers = Arc<Vec<Mutex<ReceiveManager>>>;
+pub(crate) type ObserverSet = Arc<Vec<Arc<dyn Observer>>>;
+pub(crate) type SharedRouter = Arc<Mutex<DecodeRouter>>;
+pub(crate) type SharedReceivers = Arc<Vec<Mutex<ReceiveManager>>>;
+pub(crate) type SharedKv = Arc<Mutex<HashMap<u64, KvState>>>;
 
 /// Router admission size for a request: prompt plus generated tokens (a
 /// zero-output request still decodes one token, mirroring the simulator's
 /// accounting). Every route/reserve/release for one request must use this
 /// single definition or the router leaks blocks.
-fn need_tokens(req: &ServeRequest) -> usize {
+pub(crate) fn need_tokens(req: &ServeRequest) -> usize {
     req.prompt.len() + req.output_len.max(1)
 }
 
 /// The live server: `n_prefill` barrier-grouped prefill workers feeding
 /// [`DecodePool::n_workers`] continuous-batching decode workers through the
-/// shared [`DecodeRouter`].
+/// shared [`DecodeRouter`], with submissions flowing through a dedicated
+/// dispatcher thread (see the module docs).
+///
+/// Two API surfaces:
+///
+/// * **async** — [`Server::submit_async`] / [`Server::client`] return
+///   [`RequestHandle`]s carrying a token stream, a completion future, and
+///   `cancel()`;
+/// * **legacy blocking** — [`Server::submit`] / [`Server::submit_burst`] /
+///   [`Server::collect`] are thin wrappers over the async path (submit +
+///   dispatcher flush, handles retained internally), preserved so existing
+///   drivers keep working.
 pub struct Server {
-    engine: Arc<Engine>,
+    tx: Sender<DispatcherMsg>,
+    dispatcher: Option<JoinHandle<()>>,
     workers: Vec<Sender<WorkerJob>>,
     worker_handles: Vec<JoinHandle<()>>,
     decode_txs: Vec<Sender<DecodeJob>>,
     decode_handles: Vec<JoinHandle<()>>,
-    results_rx: Receiver<RequestMetrics>,
-    kv: Arc<Mutex<HashMap<u64, KvState>>>,
-    scheduler: Box<dyn PrefillScheduler>,
-    controller: ImprovementController,
-    /// Worker topology + queue clocks: the prefill lanes drive the
-    /// dispatcher's pool view (the same component the simulator commits
-    /// plans onto); each decode lane tracks its estimated next handoff.
-    registry: WorkerRegistry,
-    /// Decode placement + KV-block admission, shared with the prefill
-    /// workers (transfer completion) and decode workers (slot release).
+    /// Worker topology + queue clocks, shared with the dispatcher (which
+    /// commits plans onto the prefill lanes and decode-service estimates
+    /// onto the decode lanes).
+    registry: Arc<Mutex<WorkerRegistry>>,
+    /// Decode placement + KV-block admission, shared with the dispatcher
+    /// (placement commits), prefill workers (transfer completion), and
+    /// decode workers (slot release).
     router: SharedRouter,
     /// Per-decode-instance transfer backends (handshake pools).
     receivers: SharedReceivers,
-    pool_cfg: DecodePool,
-    /// Requests the router could not admit yet, in arrival order, each
-    /// with its original submission instant (TTFT must include the time
-    /// spent waiting for decode capacity, as the simulator's does).
-    parked: VecDeque<(ServeRequest, Instant)>,
-    /// Accepted-then-dropped requests (a scheduler refused a parked
-    /// request at re-admission). [`Server::collect`] counts these against
-    /// its target so it never waits for results that cannot arrive.
-    abandoned: usize,
-    epoch: Instant,
-    engine_coeffs: SpCoeffs,
-    observers: ObserverSet,
+    /// Submission-side shared state (closed flag, parked counter, limits).
+    submit_shared: Arc<SubmitShared>,
+    /// Handles of legacy blocking submissions, awaiting [`Server::collect`].
+    pending: VecDeque<RequestHandle>,
 }
 
 impl Server {
-    /// Start `n_prefill` prefill workers and `decode.n_workers` decode
-    /// workers, dispatching through `scheduler` and routing decode
-    /// placements through a shared [`DecodeRouter`] shaped by `decode`.
+    /// Start `n_prefill` prefill workers, `decode.n_workers` decode
+    /// workers, and the dispatcher thread, scheduling through `scheduler`
+    /// and routing decode placements through a shared [`DecodeRouter`]
+    /// shaped by `decode`.
     ///
     /// Prefer [`crate::api::TetrisBuilder::build_server`], which resolves
     /// the scheduler by name, derives the decode pool from the builder's
@@ -241,8 +276,7 @@ impl Server {
         );
         let observers: ObserverSet = Arc::new(observers);
         let epoch = Instant::now();
-        let kv: Arc<Mutex<HashMap<u64, KvState>>> = Arc::new(Mutex::new(HashMap::new()));
-        let (results_tx, results_rx) = channel();
+        let kv: SharedKv = Arc::new(Mutex::new(HashMap::new()));
         let router: SharedRouter = Arc::new(Mutex::new(DecodeRouter::new(
             decode.n_workers,
             decode.blocks_per_instance,
@@ -253,300 +287,182 @@ impl Server {
                 .map(|_| Mutex::new(ReceiveManager::new(decode.backends.max(1), 0)))
                 .collect(),
         );
+        let (tx, rx) = channel::<DispatcherMsg>();
 
         // Decode workers (per-worker continuous batching).
         let mut decode_txs = Vec::new();
         let mut decode_handles = Vec::new();
         for inst in 0..decode.n_workers {
-            let (tx, rx) = channel::<DecodeJob>();
+            let (dtx, drx) = channel::<DecodeJob>();
             let engine = Arc::clone(&engine);
             let obs = Arc::clone(&observers);
             let router = Arc::clone(&router);
-            let results_tx = results_tx.clone();
+            let notify = tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("tetris-decode-{inst}"))
-                .spawn(move || decode_worker(engine, rx, results_tx, router, obs, epoch))
+                .spawn(move || decode_worker(engine, drx, router, obs, epoch, notify))
                 .expect("spawn decode worker");
-            decode_txs.push(tx);
+            decode_txs.push(dtx);
             decode_handles.push(handle);
         }
-        drop(results_tx); // decode workers hold the only result senders
 
         // Prefill workers.
         let mut workers = Vec::new();
         let mut worker_handles = Vec::new();
         for wid in 0..n_prefill {
-            let (tx, rx) = channel::<WorkerJob>();
+            let (wtx, wrx) = channel::<WorkerJob>();
             let engine = Arc::clone(&engine);
             let kv = Arc::clone(&kv);
             let decode_txs = decode_txs.clone();
             let receivers = Arc::clone(&receivers);
             let router = Arc::clone(&router);
             let obs = Arc::clone(&observers);
+            let notify = tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("tetris-prefill-{wid}"))
                 .spawn(move || {
-                    prefill_worker(engine, kv, decode_txs, receivers, router, rx, obs, epoch)
+                    prefill_worker(engine, kv, decode_txs, receivers, router, wrx, obs, epoch, notify)
                 })
                 .expect("spawn prefill worker");
-            workers.push(tx);
+            workers.push(wtx);
             worker_handles.push(handle);
         }
 
-        // Calibrate this machine's per-chunk latency for queue estimation.
+        // Calibrate this machine's per-chunk prefill latency (queue clocks)
+        // and per-step decode latency (decode-lane service estimates).
         let engine_coeffs = calibrate_engine(&engine)?;
+        let decode_fit = calibrate_decode(&engine)?;
+
+        let registry = Arc::new(Mutex::new(WorkerRegistry::single_node(
+            n_prefill,
+            decode.n_workers,
+        )));
+        let submit_shared = Arc::new(SubmitShared {
+            closed: AtomicBool::new(false),
+            parked: AtomicUsize::new(0),
+            limits: SubmitLimits {
+                c_bucket: engine.arch.c_bucket,
+                decode_c_bucket: engine.arch.decode_c_bucket,
+                block_tokens: decode.block_tokens,
+                blocks_per_instance: decode.blocks_per_instance,
+            },
+            observers: Arc::clone(&observers),
+            epoch,
+        });
+
+        let disp = Dispatcher {
+            arch: engine.arch.clone(),
+            scheduler,
+            controller,
+            registry: Arc::clone(&registry),
+            router: Arc::clone(&router),
+            kv,
+            workers: workers.clone(),
+            observers: Arc::clone(&observers),
+            epoch,
+            engine_coeffs,
+            decode_fit,
+            shared: Arc::clone(&submit_shared),
+            tx: tx.clone(),
+            rx,
+            parked: VecDeque::new(),
+        };
+        let dispatcher = std::thread::Builder::new()
+            .name("tetris-dispatch".into())
+            .spawn(move || disp.run())
+            .expect("spawn dispatcher");
 
         Ok(Server {
-            engine,
+            tx,
+            dispatcher: Some(dispatcher),
             workers,
             worker_handles,
             decode_txs,
             decode_handles,
-            results_rx,
-            kv,
-            scheduler,
-            controller,
-            registry: WorkerRegistry::single_node(n_prefill, decode.n_workers),
+            registry,
             router,
             receivers,
-            pool_cfg: decode,
-            parked: VecDeque::new(),
-            abandoned: 0,
-            epoch,
-            engine_coeffs,
-            observers,
+            submit_shared,
+            pending: VecDeque::new(),
         })
     }
 
-    /// Submit one request: route it to a decode instance, plan its prefill,
-    /// dispatch the chunks.
+    /// Submit one request asynchronously: validation happens here, on the
+    /// calling thread; routing, planning, and dispatch happen on the
+    /// dispatcher thread. Returns the request's [`RequestHandle`]
+    /// immediately — before its prefill plan even exists.
+    pub fn submit_async(&self, req: &ServeRequest) -> Result<RequestHandle> {
+        self.submit_shared.submit(&self.tx, req)
+    }
+
+    /// Submit a burst asynchronously. The dispatcher routes the whole
+    /// burst under one router lock, in order, so the burst's decode
+    /// placements are a pure function of the request sequence — the
+    /// submission mode the sim-vs-serve parity tests rely on. The entire
+    /// burst is validated up front; one invalid request rejects the batch.
+    pub fn submit_burst_async(&self, reqs: &[ServeRequest]) -> Result<Vec<RequestHandle>> {
+        self.submit_shared.submit_burst(&self.tx, reqs)
+    }
+
+    /// A cloneable submission endpoint: hand one to each producing thread.
+    /// Clients outlive nothing — once [`Server::shutdown`] runs, their
+    /// submissions are rejected with a descriptive error.
+    pub fn client(&self) -> Client {
+        Client { shared: Arc::clone(&self.submit_shared), tx: self.tx.clone() }
+    }
+
+    /// Legacy blocking submit: async submit + dispatcher flush, handle
+    /// retained for [`Server::collect`].
     ///
     /// Returns the number of chunks dispatched, or `Ok(0)` if the decode
     /// pool had no capacity and the request was parked (it is admitted
-    /// automatically, in arrival order, as capacity frees up — see
-    /// [`Server::collect`]).
+    /// automatically, in arrival order, as capacity frees up). A scheduler
+    /// refusal surfaces as `Err`, as it always did.
     pub fn submit(&mut self, req: &ServeRequest) -> Result<usize> {
-        let router = Arc::clone(&self.router);
-        let mut guard = router.lock().unwrap();
-        self.submit_inner(&mut guard, req)
+        let mut h = self.submit_async(req)?;
+        self.flush()?;
+        if let Some(Completion::Dropped(msg)) = h.try_wait() {
+            anyhow::bail!("request {} dropped: {msg}", req.id);
+        }
+        let n = h.dispatched_chunks();
+        self.pending.push_back(h);
+        Ok(n)
     }
 
-    /// Submit a batch atomically: the router lock is held across all
-    /// placements, so the batch's decode assignments are a pure function
-    /// of the request sequence (no decode-side event can interleave).
-    /// This is the submission mode [`Server::run_trace`] uses for
-    /// unpaced traces, and what the sim-vs-serve parity tests rely on.
+    /// Legacy blocking burst: atomic burst routing (see
+    /// [`Server::submit_burst_async`]) + dispatcher flush, handles
+    /// retained for [`Server::collect`]. Like [`Server::submit`], a
+    /// scheduler refusal surfaces as `Err` (the first drop is reported;
+    /// every handle — dropped or not — still counts toward `collect`).
     pub fn submit_burst(&mut self, reqs: &[ServeRequest]) -> Result<()> {
-        let router = Arc::clone(&self.router);
-        let mut guard = router.lock().unwrap();
-        for req in reqs {
-            self.submit_inner(&mut guard, req)?;
-        }
-        Ok(())
-    }
-
-    /// The shared submission path. `router` is the held router guard.
-    fn submit_inner(&mut self, router: &mut DecodeRouter, req: &ServeRequest) -> Result<usize> {
-        let a = &self.engine.arch;
-        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
-        anyhow::ensure!(
-            req.prompt.len() <= a.c_bucket,
-            "prompt exceeds cache bucket ({} > {})",
-            req.prompt.len(),
-            a.c_bucket
-        );
-        let need = need_tokens(req);
-        anyhow::ensure!(
-            need <= a.decode_c_bucket,
-            "request {} needs {} decode-cache tokens (prompt + output) but the \
-             engine's decode bucket holds {}",
-            req.id,
-            need,
-            a.decode_c_bucket
-        );
-        let need_blocks = need.div_ceil(self.pool_cfg.block_tokens);
-        anyhow::ensure!(
-            need_blocks <= self.pool_cfg.blocks_per_instance,
-            "request {} needs {} KV blocks but decode instances hold only {}",
-            req.id,
-            need_blocks,
-            self.pool_cfg.blocks_per_instance
-        );
-        self.controller.on_arrival(self.epoch.elapsed().as_secs_f64());
-        let arrival = Instant::now();
-        match self.admit(router, req, arrival) {
-            Ok(Some(n_chunks)) => Ok(n_chunks),
-            Ok(None) => {
-                // All instances full (counting in-flight virtual usage):
-                // park, admit later in arrival order.
-                self.parked.push_back((req.clone(), arrival));
-                Ok(0)
+        let mut handles = self.submit_burst_async(reqs)?;
+        self.flush()?;
+        let mut dropped = None;
+        for h in &mut handles {
+            if let Some(Completion::Dropped(msg)) = h.try_wait() {
+                dropped.get_or_insert_with(|| format!("request {} dropped: {msg}", h.id()));
             }
-            Err(e) => Err(e),
+        }
+        self.pending.extend(handles);
+        match dropped {
+            Some(msg) => Err(anyhow::anyhow!(msg)),
+            None => Ok(()),
         }
     }
 
-    /// Route + dispatch one request under the held router guard — the one
-    /// admission sequence shared by first submission and parked-queue
-    /// retry, so the two paths cannot drift. `arrival` is the original
-    /// submission instant (TTFT anchor). `Ok(Some(n))` = dispatched with
-    /// `n` chunks; `Ok(None)` = no decode capacity right now; `Err` = the
-    /// scheduler refused the plan (the router reservation has been rolled
-    /// back, and no `on_decode_assign` was emitted).
-    fn admit(
-        &mut self,
-        router: &mut DecodeRouter,
-        req: &ServeRequest,
-        arrival: Instant,
-    ) -> Result<Option<usize>> {
-        let need = need_tokens(req);
-        let inst = match router.route(need) {
-            Some(i) => i,
-            None => return Ok(None),
-        };
-        let now = self.epoch.elapsed().as_secs_f64();
-        match self.dispatch_prefill(req, inst, now, arrival) {
-            Ok(n) => {
-                // Emitted only once the request is actually dispatched, so
-                // a scheduler refusal (reservation rolled back) never
-                // produces a spurious or duplicate assignment event.
-                for o in self.observers.iter() {
-                    o.on_decode_assign(req.id, inst, now);
-                }
-                Ok(Some(n))
-            }
-            Err(e) => {
-                router.cancel(inst, need);
-                Err(e)
-            }
-        }
-    }
-
-    /// Plan and dispatch one admitted request's prefill. The decode
-    /// placement (`inst`) has already been reserved on the router;
-    /// `arrival` anchors the request's latency metrics at its original
-    /// submission.
-    fn dispatch_prefill(
-        &mut self,
-        req: &ServeRequest,
-        inst: usize,
-        now: f64,
-        arrival: Instant,
-    ) -> Result<usize> {
-        let a = self.engine.arch.clone();
-        let rate = self.controller.rate(now);
-        let pool = self.registry.prefill().pool_view(now);
-        let plan = self
-            .scheduler
-            .schedule(req.prompt.len(), &pool, rate)
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "scheduling failed ({} prompt tokens on {} workers)",
-                    req.prompt.len(),
-                    pool.len()
-                )
-            })?;
-        debug_assert!(plan.validate(req.prompt.len()).is_ok());
-        for o in self.observers.iter() {
-            o.on_plan(req.id, &plan, now);
-        }
-
-        // Register the KV state (+ decode handoff metadata).
-        self.kv.lock().unwrap().insert(
-            req.id,
-            KvState {
-                k: vec![0.0; a.kv_elems()],
-                v: vec![0.0; a.kv_elems()],
-                hist_len: 0,
-                output_len: req.output_len.max(1),
-                arrival,
-                decode_inst: inst,
-                need_tokens: need_tokens(req),
-            },
-        );
-
-        // Dispatch chunks in order. Chunks may exceed the engine's l_bucket:
-        // split into bucket-sized pieces on the same group.
-        let n_chunks = plan.chunks.len();
-        let mut offset = 0usize;
-        let mut finish = now;
-        for (ci, chunk) in plan.chunks.iter().enumerate() {
-            let mut remaining = chunk.len;
-            let mut piece_start = offset;
-            while remaining > 0 {
-                let piece = remaining.min(a.l_bucket);
-                let is_last_piece = ci == n_chunks - 1 && remaining == piece;
-                let start = Arc::new(Barrier::new(chunk.group.len()));
-                let end = Arc::new(Barrier::new(chunk.group.len()));
-                let tokens: Vec<i32> =
-                    req.prompt[piece_start..piece_start + piece].to_vec();
-                for (gi, &w) in chunk.group.iter().enumerate() {
-                    let job = if gi == 0 {
-                        WorkerJob::Lead {
-                            start: Arc::clone(&start),
-                            end: Arc::clone(&end),
-                            req: req.id,
-                            tokens: tokens.clone(),
-                            is_last: is_last_piece,
-                        }
-                    } else {
-                        WorkerJob::Member {
-                            start: Arc::clone(&start),
-                            end: Arc::clone(&end),
-                        }
-                    };
-                    self.workers[w].send(job).expect("worker alive");
-                }
-                // queue-clock bookkeeping (estimates; real time may drift)
-                let est = self
-                    .engine_coeffs
-                    .predict(piece_start as f64, piece as f64)
-                    .max(1e-4);
-                finish = self.registry.prefill_mut().commit(&chunk.group, finish, est);
-                piece_start += piece;
-                remaining -= piece;
-            }
-            offset += chunk.len;
-        }
-        // The assigned decode lane expects its handoff at the estimated
-        // prefill finish time (observability only; the real handoff is
-        // event-driven through the transfer layer).
-        self.registry.decode_lane_mut(inst).commit(&[0], finish, 0.0);
-        Ok(plan.n_chunks())
-    }
-
-    /// Try to admit parked requests (arrival order, any that now fit —
-    /// the simulator's waiting-queue semantics).
-    ///
-    /// A scheduler that refuses a parked request at re-admission gets the
-    /// request dropped (reported on stderr and counted in `abandoned`, so
-    /// [`Server::collect`] stops waiting for it) — mirroring the
-    /// simulator, whose metrics simply omit requests that never prefill.
-    /// The direct [`Server::submit`] path surfaces the identical refusal
-    /// as an `Err` to the caller instead.
-    fn try_admit(&mut self) {
-        if self.parked.is_empty() {
-            return;
-        }
-        let router = Arc::clone(&self.router);
-        let mut guard = router.lock().unwrap();
-        let mut still = VecDeque::new();
-        while let Some((req, arrival)) = self.parked.pop_front() {
-            match self.admit(&mut guard, &req, arrival) {
-                Ok(Some(_)) => {}
-                Ok(None) => still.push_back((req, arrival)),
-                Err(e) => {
-                    eprintln!("tetris: dropping parked request {}: {e:#}", req.id);
-                    self.abandoned += 1;
-                }
-            }
-        }
-        self.parked = still;
+    /// Barrier: returns once the dispatcher has processed every earlier
+    /// message (all prior submissions are dispatched or parked).
+    fn flush(&self) -> Result<()> {
+        let (ack_tx, ack_rx) = channel();
+        self.tx
+            .send(DispatcherMsg::Flush(ack_tx))
+            .map_err(|_| anyhow::anyhow!("server dispatcher terminated"))?;
+        ack_rx.recv().map_err(|_| anyhow::anyhow!("server dispatcher terminated"))
     }
 
     /// Requests currently parked for decode capacity.
     pub fn n_parked(&self) -> usize {
-        self.parked.len()
+        self.submit_shared.parked.load(Ordering::Relaxed)
     }
 
     /// Snapshot of the shared decode router's state (placement load,
@@ -562,45 +478,44 @@ impl Server {
         self.receivers[inst].lock().unwrap().free_backends()
     }
 
-    /// The server's worker topology and queue clocks.
-    pub fn topology(&self) -> &WorkerRegistry {
-        &self.registry
+    /// Snapshot of the server's worker topology and queue clocks (the
+    /// dispatcher owns the live copy; this clone is consistent at the
+    /// moment of the call).
+    pub fn topology(&self) -> WorkerRegistry {
+        self.registry.lock().unwrap().clone()
     }
 
-    /// Wait for up to `n` completions, admitting parked requests as decode
-    /// capacity frees up. Requests dropped at re-admission (see
-    /// `try_admit`) count against the target, so the returned vector may
-    /// be shorter than `n` — exactly like the simulator's metrics, which
-    /// omit requests that never ran.
+    /// Wait for up to `n` legacy-submitted requests (oldest first) and
+    /// return the metrics of those that finished. Requests that were
+    /// cancelled or dropped count against the target, so the returned
+    /// vector may be shorter than `n` — exactly like the simulator's
+    /// metrics, which omit requests that never ran. Parked requests are
+    /// re-admitted by the dispatcher as capacity frees, independent of
+    /// this call.
     pub fn collect(&mut self, n: usize) -> Vec<RequestMetrics> {
-        let abandoned_at_entry = self.abandoned;
         let mut out = Vec::with_capacity(n);
-        while out.len() + (self.abandoned - abandoned_at_entry) < n {
-            self.try_admit();
-            if self.parked.is_empty() {
-                // Nothing waiting for capacity: block until the next
-                // completion (no polling overhead on the common path).
-                match self.results_rx.recv() {
-                    Ok(m) => out.push(m),
-                    Err(_) => panic!("decode workers terminated with requests outstanding"),
-                }
-            } else {
-                // Parked requests need re-admission attempts as decode
-                // finishes free blocks: poll on a short timeout.
-                match self.results_rx.recv_timeout(Duration::from_millis(5)) {
-                    Ok(m) => out.push(m),
-                    Err(RecvTimeoutError::Timeout) => continue,
-                    Err(RecvTimeoutError::Disconnected) => {
-                        panic!("decode workers terminated with requests outstanding")
-                    }
-                }
+        for _ in 0..n {
+            let Some(mut h) = self.pending.pop_front() else { break };
+            if let Completion::Finished(m) = h.wait() {
+                out.push(m);
             }
         }
         out
     }
 
-    /// Shut down all workers and return.
+    /// Shut down deterministically: reject new submissions, flush the
+    /// dispatcher queue (still-parked requests resolve as
+    /// [`Completion::Cancelled`] at the `Shutdown` stage), then join the
+    /// workers — every dispatched request runs to completion and resolves
+    /// its handle, whether or not anyone `collect`ed first.
     pub fn shutdown(mut self) -> Result<()> {
+        self.submit_shared.closed.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(DispatcherMsg::Drain);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        // The dispatcher is gone, so no more prefill jobs can be enqueued:
+        // a Stop sent now is FIFO-after every dispatched chunk.
         for w in &self.workers {
             let _ = w.send(WorkerJob::Stop);
         }
@@ -609,7 +524,7 @@ impl Server {
         }
         // Prefill workers are gone; dropping our senders disconnects the
         // decode channels, and each decode worker exits once its batch
-        // drains.
+        // drains (resolving every in-flight handle).
         self.decode_txs.clear();
         for h in self.decode_handles.drain(..) {
             let _ = h.join();
@@ -619,19 +534,47 @@ impl Server {
 
     /// Drive a whole trace: submit with the given arrival pacing (seconds
     /// between submissions; 0 = one atomic burst), wait for completion,
-    /// aggregate metrics.
+    /// aggregate metrics. Built on the async API — paced submissions
+    /// return before their plans exist, overlapping scheduling with
+    /// prefill compute. A dropped request (scheduler refusal) is an `Err`,
+    /// as it always was on this path.
     pub fn run_trace(&mut self, reqs: &[ServeRequest], pace: f64) -> Result<RunMetrics> {
         let t0 = Instant::now();
-        if pace > 0.0 {
+        let mut handles = if pace > 0.0 {
+            let mut hs = Vec::with_capacity(reqs.len());
             for r in reqs {
-                self.submit(r)?;
+                hs.push(self.submit_async(r)?);
                 std::thread::sleep(Duration::from_secs_f64(pace));
             }
+            hs
         } else {
-            self.submit_burst(reqs)?;
+            self.submit_burst_async(reqs)?
+        };
+        let mut requests = Vec::with_capacity(handles.len());
+        for h in handles.iter_mut() {
+            match h.wait() {
+                Completion::Finished(m) => requests.push(m),
+                Completion::Dropped(msg) => {
+                    anyhow::bail!("request {} dropped: {msg}", h.id())
+                }
+                // Cancelled mid-run (only possible via an external client's
+                // cancel): omitted, exactly like the simulator's metrics.
+                Completion::Cancelled(_) => {}
+            }
         }
-        let metrics = self.collect(reqs.len());
-        Ok(RunMetrics { requests: metrics, span: t0.elapsed().as_secs_f64() })
+        Ok(RunMetrics { requests, span: t0.elapsed().as_secs_f64() })
+    }
+}
+
+impl Drop for Server {
+    /// A server dropped without [`Server::shutdown`] still unwinds: the
+    /// dispatcher gets a `Drain` (resolving parked handles), and once it
+    /// exits, the worker channels cascade closed behind it. Threads detach
+    /// rather than being joined — use `shutdown` for a deterministic
+    /// drain.
+    fn drop(&mut self) {
+        self.submit_shared.closed.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(DispatcherMsg::Drain);
     }
 }
 
@@ -660,16 +603,34 @@ fn calibrate_engine(engine: &Engine) -> Result<SpCoeffs> {
     Ok(co)
 }
 
+/// Fit a quick linear model of *this machine's* per-step decode latency
+/// (used for the dispatcher's decode-lane service estimates).
+fn calibrate_decode(engine: &Engine) -> Result<DecodeQuickfit> {
+    let a = &engine.arch;
+    let hk = vec![0.0f32; a.decode_kv_elems()];
+    let hv = vec![0.0f32; a.decode_kv_elems()];
+    let mut samples = Vec::new();
+    let top = a.decode_c_bucket.saturating_sub(2).max(1);
+    for &ctx in &[1usize, top / 4, top / 2, top] {
+        let ctx = ctx.clamp(1, top);
+        let t0 = Instant::now();
+        engine.decode_step(1, &hk, &hv, ctx as i32)?;
+        samples.push((ctx as f64, t0.elapsed().as_secs_f64()));
+    }
+    Ok(DecodeQuickfit::fit(&samples))
+}
+
 #[allow(clippy::too_many_arguments)]
 fn prefill_worker(
     engine: Arc<Engine>,
-    kv: Arc<Mutex<HashMap<u64, KvState>>>,
+    kv: SharedKv,
     decode_txs: Vec<Sender<DecodeJob>>,
     receivers: SharedReceivers,
     router: SharedRouter,
     rx: Receiver<WorkerJob>,
     observers: ObserverSet,
     epoch: Instant,
+    notify: Sender<DispatcherMsg>,
 ) {
     let a = engine.arch.clone();
     while let Ok(job) = rx.recv() {
@@ -679,97 +640,152 @@ fn prefill_worker(
                 start.wait();
                 end.wait();
             }
-            WorkerJob::Lead { start, end, req, tokens, is_last } => {
+            WorkerJob::Lead { start, end, req, tokens, is_last, cancelled } => {
                 start.wait();
-                // pull the cache
-                let (hist_k, hist_v, hist_len) = {
-                    let store = kv.lock().unwrap();
-                    let st = store.get(&req).expect("kv registered");
-                    (st.k.clone(), st.v.clone(), st.hist_len)
-                };
-                let mut padded = vec![0i32; a.l_bucket];
-                padded[..tokens.len()].copy_from_slice(&tokens);
-                let out = engine
-                    .prefill_chunk(
-                        &padded,
-                        &hist_k,
-                        &hist_v,
-                        hist_len as i32,
-                        tokens.len() as i32,
-                    )
-                    .expect("prefill execution");
-                // scatter new KV into the cache
-                {
-                    let mut store = kv.lock().unwrap();
-                    let st = store.get_mut(&req).expect("kv registered");
-                    scatter_new_kv(&a, &mut st.k, &out.new_k, hist_len, tokens.len());
-                    scatter_new_kv(&a, &mut st.v, &out.new_v, hist_len, tokens.len());
-                    st.hist_len = hist_len + tokens.len();
+                // A cancelled request's chunks skip their compute; the
+                // final chunk's leader still runs the cleanup below, so
+                // the router reservation is released exactly once.
+                let mut logits = None;
+                if !cancelled.load(Ordering::Relaxed) {
+                    // pull the cache
+                    let (hist_k, hist_v, hist_len) = {
+                        let store = kv.lock().unwrap();
+                        let st = store.get(&req).expect("kv registered");
+                        (st.k.clone(), st.v.clone(), st.hist_len)
+                    };
+                    let mut padded = vec![0i32; a.l_bucket];
+                    padded[..tokens.len()].copy_from_slice(&tokens);
+                    let out = engine
+                        .prefill_chunk(
+                            &padded,
+                            &hist_k,
+                            &hist_v,
+                            hist_len as i32,
+                            tokens.len() as i32,
+                        )
+                        .expect("prefill execution");
+                    // scatter new KV into the cache
+                    {
+                        let mut store = kv.lock().unwrap();
+                        let st = store.get_mut(&req).expect("kv registered");
+                        scatter_new_kv(&a, &mut st.k, &out.new_k, hist_len, tokens.len());
+                        scatter_new_kv(&a, &mut st.v, &out.new_v, hist_len, tokens.len());
+                        st.hist_len = hist_len + tokens.len();
+                    }
+                    logits = Some(out.logits);
                 }
                 if is_last {
-                    let t = epoch.elapsed().as_secs_f64();
-                    for o in observers.iter() {
-                        o.on_prefill_done(req, t);
-                    }
-                    let first_token = argmax(&out.logits) as i32;
                     let st = kv.lock().unwrap().remove(&req).expect("kv present");
-                    let inst = st.decode_inst;
-                    // repack prefill-bucket cache into the decode bucket:
-                    // this copy *is* the KV stream on the CPU substrate
-                    let (dk, dv) = repack_for_decode(&a, &st);
-                    // KV handoff through the assigned instance's transfer
-                    // backends; the whole transfer is atomic under the
-                    // manager lock, so the handshake always finds a free
-                    // backend (backends >= 1)
-                    let backend = {
-                        let mut rm = receivers[inst].lock().unwrap();
-                        let t_hs = epoch.elapsed().as_secs_f64();
-                        rm.expect(req, 1, t_hs);
-                        let hs = Handshake {
-                            req,
-                            shard: 0,
-                            bytes: ((dk.len() + dv.len()) * 4) as f64,
-                            timestamp: t_hs,
-                        };
-                        let backend = match rm.handshake(hs) {
-                            HandshakeReply::Granted { backend } => backend,
-                            HandshakeReply::Wait => {
-                                unreachable!("transfers are atomic under the manager lock")
-                            }
-                        };
-                        let (_, complete) = rm.transfer_done(req, backend);
-                        debug_assert!(complete, "single-shard handoff must complete");
-                        backend
-                    };
-                    // virtual reservation becomes a real block allocation
-                    let seq = router
-                        .lock()
-                        .unwrap()
-                        .transfer_complete(inst, st.need_tokens)
-                        .expect("virtual reservation guaranteed space");
-                    let t = epoch.elapsed().as_secs_f64();
-                    for o in observers.iter() {
-                        o.on_transfer(req, backend, t);
-                    }
-                    decode_txs[inst]
-                        .send(DecodeJob {
-                            req,
-                            first_token,
-                            prompt_len: st.hist_len,
-                            output_len: st.output_len,
-                            arrival: st.arrival,
-                            first_token_at: Instant::now(),
-                            k: dk,
-                            v: dv,
-                            inst,
-                            seq,
-                        })
-                        .expect("decode worker alive");
+                    finish_prefill(
+                        &a, st, req, logits, &decode_txs, &receivers, &router, &observers,
+                        epoch, &notify,
+                    );
                 }
                 end.wait();
             }
         }
     }
+}
+
+/// The final chunk completed (or was skipped by a cancel): either hand the
+/// KV cache off to the assigned decode worker, or release everything the
+/// request holds. Cancellation points: before the handoff (stage
+/// `Prefill`, virtual reservation released) and while holding the granted
+/// transfer backend (stage `Transfer`, backend aborted and re-pumped).
+#[allow(clippy::too_many_arguments)]
+fn finish_prefill(
+    a: &crate::runtime::TinyArch,
+    st: KvState,
+    req: u64,
+    logits: Option<Vec<f32>>,
+    decode_txs: &[Sender<DecodeJob>],
+    receivers: &SharedReceivers,
+    router: &SharedRouter,
+    observers: &ObserverSet,
+    epoch: Instant,
+    notify: &Sender<DispatcherMsg>,
+) {
+    let inst = st.decode_inst;
+    let cancel = |stage: CancelStage| {
+        router.lock().unwrap().cancel(inst, st.need_tokens);
+        let now = epoch.elapsed().as_secs_f64();
+        for o in observers.iter() {
+            o.on_cancel(req, stage, now);
+        }
+        st.shared.resolve(Completion::Cancelled(stage));
+        let _ = notify.send(DispatcherMsg::CapacityFreed);
+    };
+    let logits = match logits {
+        Some(l) if !st.shared.is_cancelled() => l,
+        _ => return cancel(CancelStage::Prefill),
+    };
+    let t = epoch.elapsed().as_secs_f64();
+    for o in observers.iter() {
+        o.on_prefill_done(req, t);
+    }
+    let first_token = argmax(&logits) as i32;
+    // repack prefill-bucket cache into the decode bucket: this copy *is*
+    // the KV stream on the CPU substrate
+    let (dk, dv) = repack_for_decode(a, &st.k, &st.v, st.hist_len);
+    // KV handoff through the assigned instance's transfer backends; the
+    // whole transfer is atomic under the manager lock, so the handshake
+    // always finds a free backend (backends >= 1)
+    let backend = {
+        let mut rm = receivers[inst].lock().unwrap();
+        let t_hs = epoch.elapsed().as_secs_f64();
+        rm.expect(req, 1, t_hs);
+        let hs = Handshake {
+            req,
+            shard: 0,
+            bytes: ((dk.len() + dv.len()) * 4) as f64,
+            timestamp: t_hs,
+        };
+        let backend = match rm.handshake(hs) {
+            HandshakeReply::Granted { backend } => backend,
+            HandshakeReply::Wait => {
+                unreachable!("transfers are atomic under the manager lock")
+            }
+        };
+        // Mid-transfer cancellation point: the backend is held right now.
+        // An abort frees it (and re-pumps waiters) instead of completing.
+        if st.shared.is_cancelled() {
+            rm.abort(req);
+            None
+        } else {
+            let (_, complete) = rm.transfer_done(req, backend);
+            debug_assert!(complete, "single-shard handoff must complete");
+            Some(backend)
+        }
+    };
+    let Some(backend) = backend else {
+        return cancel(CancelStage::Transfer);
+    };
+    // virtual reservation becomes a real block allocation
+    let seq = router
+        .lock()
+        .unwrap()
+        .transfer_complete(inst, st.need_tokens)
+        .expect("virtual reservation guaranteed space");
+    let t = epoch.elapsed().as_secs_f64();
+    for o in observers.iter() {
+        o.on_transfer(req, backend, t);
+    }
+    // stream the first token (index 0: its timestamp is the TTFT)
+    st.shared.stream_token(0, first_token);
+    decode_txs[inst]
+        .send(DecodeJob {
+            req,
+            first_token,
+            prompt_len: st.hist_len,
+            output_len: st.output_len,
+            first_token_at: Instant::now(),
+            k: dk,
+            v: dv,
+            inst,
+            seq,
+            shared: Arc::clone(&st.shared),
+        })
+        .expect("decode worker alive");
 }
 
 /// Copy a prefill call's new KV ([NL, L_BUCKET, H, HD]) into the request
@@ -791,16 +807,21 @@ fn scatter_new_kv(
 }
 
 /// Re-layout a prefill-bucket cache into the decode bucket.
-fn repack_for_decode(a: &crate::runtime::TinyArch, st: &KvState) -> (Vec<f32>, Vec<f32>) {
+fn repack_for_decode(
+    a: &crate::runtime::TinyArch,
+    k: &[f32],
+    v: &[f32],
+    hist_len: usize,
+) -> (Vec<f32>, Vec<f32>) {
     let tok = a.tok_elems();
     let mut dk = vec![0.0f32; a.decode_kv_elems()];
     let mut dv = vec![0.0f32; a.decode_kv_elems()];
     for layer in 0..a.n_layers {
         let src = layer * a.c_bucket * tok;
         let dst = layer * a.decode_c_bucket * tok;
-        let n = st.hist_len * tok;
-        dk[dst..dst + n].copy_from_slice(&st.k[src..src + n]);
-        dv[dst..dst + n].copy_from_slice(&st.v[src..src + n]);
+        let n = hist_len * tok;
+        dk[dst..dst + n].copy_from_slice(&k[src..src + n]);
+        dv[dst..dst + n].copy_from_slice(&v[src..src + n]);
     }
     (dk, dv)
 }
@@ -817,10 +838,10 @@ struct ActiveDecode {
 fn decode_worker(
     engine: Arc<Engine>,
     rx: Receiver<DecodeJob>,
-    results: Sender<RequestMetrics>,
     router: SharedRouter,
     observers: ObserverSet,
     epoch: Instant,
+    notify: Sender<DispatcherMsg>,
 ) {
     let a = engine.arch.clone();
     let mut active: Vec<ActiveDecode> = Vec::new();
@@ -828,42 +849,26 @@ fn decode_worker(
         // Continuous batching: admit new requests at step boundaries.
         if active.is_empty() {
             match rx.recv() {
-                Ok(job) => {
-                    let hist = job.prompt_len;
-                    let tok = job.first_token;
-                    let at = job.first_token_at;
-                    active.push(ActiveDecode {
-                        job,
-                        tokens_out: 1, // the first token came from prefill
-                        last_token: tok,
-                        hist_len: hist,
-                        last_at: at,
-                        tbt: Vec::new(),
-                    });
-                }
+                Ok(job) => active.push(activate(job)),
                 Err(_) => return, // server shut down
             }
         }
         while let Ok(job) = rx.try_recv() {
-            let hist = job.prompt_len;
-            let tok = job.first_token;
-            let at = job.first_token_at;
-            active.push(ActiveDecode {
-                job,
-                tokens_out: 1,
-                last_token: tok,
-                hist_len: hist,
-                last_at: at,
-                tbt: Vec::new(),
-            });
+            active.push(activate(job));
         }
         // One iteration over the batch.
         let mut still = Vec::with_capacity(active.len());
         for mut st in active {
+            // Cancellation joins/leaves at step boundaries, exactly like
+            // admission: blocks free before the next step runs.
+            if st.job.shared.is_cancelled() {
+                cancel_decode(&router, &observers, epoch, &notify, st);
+                continue;
+            }
             if st.tokens_out >= st.job.output_len
                 || st.hist_len + 1 >= a.decode_c_bucket
             {
-                finishing(&results, &router, st);
+                finishing(&router, &notify, st);
                 continue;
             }
             let out = engine
@@ -883,11 +888,12 @@ fn decode_worker(
             let now = Instant::now();
             st.tbt.push(now.duration_since(st.last_at).as_secs_f64());
             st.last_at = now;
+            st.job.shared.stream_token(st.tokens_out - 1, st.last_token);
             for o in observers.iter() {
                 o.on_token(st.job.req, epoch.elapsed().as_secs_f64());
             }
             if st.tokens_out >= st.job.output_len {
-                finishing(&results, &router, st);
+                finishing(&router, &notify, st);
             } else {
                 still.push(st);
             }
@@ -896,10 +902,26 @@ fn decode_worker(
     }
 }
 
-/// Release the request's router blocks and report its metrics.
-fn finishing(results: &Sender<RequestMetrics>, router: &SharedRouter, st: ActiveDecode) {
+fn activate(job: DecodeJob) -> ActiveDecode {
+    let hist = job.prompt_len;
+    let tok = job.first_token;
+    let at = job.first_token_at;
+    ActiveDecode {
+        job,
+        tokens_out: 1, // the first token came from prefill
+        last_token: tok,
+        hist_len: hist,
+        last_at: at,
+        tbt: Vec::new(),
+    }
+}
+
+/// Release the request's router blocks, report its metrics through the
+/// handle, and wake the dispatcher (freed capacity may admit parked
+/// requests).
+fn finishing(router: &SharedRouter, notify: &Sender<DispatcherMsg>, st: ActiveDecode) {
     router.lock().unwrap().finish(st.job.inst, st.job.seq);
-    let arrival = st.job.arrival;
+    let arrival = st.job.shared.submitted;
     let m = RequestMetrics {
         id: st.job.req,
         arrival: 0.0,
@@ -909,7 +931,26 @@ fn finishing(results: &Sender<RequestMetrics>, router: &SharedRouter, st: Active
         output_len: st.tokens_out,
         tbt: st.tbt,
     };
-    let _ = results.send(m);
+    st.job.shared.resolve(Completion::Finished(m));
+    let _ = notify.send(DispatcherMsg::CapacityFreed);
+}
+
+/// A cancel landed mid-decode: free the request's real KV blocks and batch
+/// slot, resolve the handle, wake the dispatcher.
+fn cancel_decode(
+    router: &SharedRouter,
+    observers: &ObserverSet,
+    epoch: Instant,
+    notify: &Sender<DispatcherMsg>,
+    st: ActiveDecode,
+) {
+    router.lock().unwrap().finish(st.job.inst, st.job.seq);
+    let now = epoch.elapsed().as_secs_f64();
+    for o in observers.iter() {
+        o.on_cancel(st.job.req, CancelStage::Decode, now);
+    }
+    st.job.shared.resolve(Completion::Cancelled(CancelStage::Decode));
+    let _ = notify.send(DispatcherMsg::CapacityFreed);
 }
 
 #[cfg(test)]
@@ -957,27 +998,21 @@ mod tests {
             decode_c_bucket: 10,
         };
         let tok = a.tok_elems();
-        let st = KvState {
-            k: (0..a.kv_elems()).map(|i| i as f32).collect(),
-            v: (0..a.kv_elems()).map(|i| (i * 2) as f32).collect(),
-            hist_len: 5,
-            output_len: 4,
-            arrival: Instant::now(),
-            decode_inst: 0,
-            need_tokens: 9,
-        };
-        let (dk, dv) = repack_for_decode(&a, &st);
+        let k: Vec<f32> = (0..a.kv_elems()).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..a.kv_elems()).map(|i| (i * 2) as f32).collect();
+        let (dk, dv) = repack_for_decode(&a, &k, &v, 5);
         assert_eq!(dk.len(), a.decode_kv_elems());
         // layer 1 token 4 element 3
         let src = a.c_bucket * tok + 4 * tok + 3;
         let dst = a.decode_c_bucket * tok + 4 * tok + 3;
-        assert_eq!(dk[dst], st.k[src]);
-        assert_eq!(dv[dst], st.v[src]);
+        assert_eq!(dk[dst], k[src]);
+        assert_eq!(dv[dst], v[src]);
         // padding zero
         assert_eq!(dk[5 * tok], 0.0);
     }
 
-    // Full server tests live in rust/tests/integration_serve.rs and
-    // rust/tests/integration_parity.rs (they run on the stub engine, or on
-    // real PJRT artifacts when present).
+    // Full server tests live in rust/tests/integration_serve.rs,
+    // rust/tests/integration_parity.rs, and
+    // rust/tests/integration_async.rs (handles, streaming, cancellation);
+    // they run on the stub engine, or on real PJRT artifacts when present.
 }

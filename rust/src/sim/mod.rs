@@ -210,6 +210,9 @@ impl Simulator {
             match ev {
                 Event::Arrival(i) => {
                     self.controller.on_arrival(now);
+                    for o in &self.observers {
+                        o.on_arrival(i as u64, now);
+                    }
                     // decode routing first (virtual usage there from now on)
                     let need = reqs[i].prompt_len + reqs[i].output_len;
                     match router.route(need) {

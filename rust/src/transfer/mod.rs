@@ -172,6 +172,24 @@ impl ReceiveManager {
         (self.pump(), complete)
     }
 
+    /// Abort a request mid-transfer: free every backend it holds, drop its
+    /// waiting shards, and remove it from the service order. Backends freed
+    /// here are immediately re-pumped to later admitted requests — the
+    /// returned (handshake, backend) grants are theirs. Aborting an unknown
+    /// or already-finished request is a no-op.
+    pub fn abort(&mut self, req: ReqId) -> Vec<(Handshake, usize)> {
+        if self.reqs.remove(&req).is_none() {
+            return Vec::new();
+        }
+        self.admitted.retain(|r| *r != req);
+        for b in self.backends.iter_mut() {
+            if *b == Some(req) {
+                *b = None;
+            }
+        }
+        self.pump()
+    }
+
     /// Shards still outstanding for a request (0 = unknown/finished).
     pub fn outstanding(&self, req: ReqId) -> usize {
         self.reqs
@@ -276,6 +294,28 @@ mod tests {
             complete = rm.transfer_done(7, usize::MAX).1;
         }
         assert!(complete);
+    }
+
+    #[test]
+    fn abort_frees_backends_and_repumps() {
+        // Req 1 holds the only backend; req 2 waits. Aborting req 1 must
+        // free the backend and hand it straight to req 2.
+        let mut rm = ReceiveManager::new(1, 0);
+        rm.expect(1, 2, 0.0);
+        rm.expect(2, 1, 0.5);
+        assert_eq!(rm.handshake(hs(1, 0, 0.0)), HandshakeReply::Granted { backend: 0 });
+        assert_eq!(rm.handshake(hs(2, 0, 0.5)), HandshakeReply::Wait);
+        assert_eq!(rm.free_backends(), 0);
+        let grants = rm.abort(1);
+        assert_eq!(grants.len(), 1, "freed backend re-pumped to req 2");
+        assert_eq!(grants[0].0.req, 2);
+        assert_eq!(rm.outstanding(1), 0, "aborted request fully forgotten");
+        let (_, complete) = rm.transfer_done(2, grants[0].1);
+        assert!(complete);
+        assert_eq!(rm.free_backends(), 1, "no backend leaked by the abort");
+        // idempotent
+        assert!(rm.abort(1).is_empty());
+        assert!(rm.abort(99).is_empty());
     }
 
     #[test]

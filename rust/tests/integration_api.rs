@@ -135,11 +135,22 @@ fn simulator_emits_observer_events() {
         .build_simulation()
         .unwrap()
         .run(&t);
+    assert_eq!(rec.count("arrival"), 15, "one arrival per request");
     assert_eq!(rec.count("plan"), 15, "one plan per request");
     assert_eq!(rec.count("prefill_done"), 15);
     assert!(rec.count("transfer") >= 15, "at least one shard per request");
     let total_tokens: usize = m.requests.iter().map(|r| r.output_len).sum();
     assert_eq!(rec.count("token"), total_tokens);
+    // Event-derived latency metrics must agree with the driver's own:
+    // TTFT per request is arrival → prefill-done in both accountings.
+    let mut from_events = rec.ttfts_from_events();
+    let mut from_driver: Vec<f64> = m.requests.iter().map(|r| r.ttft()).collect();
+    from_events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    from_driver.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(from_events.len(), from_driver.len());
+    for (a, b) in from_events.iter().zip(&from_driver) {
+        assert!((a - b).abs() < 1e-9, "event TTFT {a} != driver TTFT {b}");
+    }
     // events are timestamped within the run horizon (the last token of a
     // finishing batch lands at its step's end, which may sit just past the
     // last popped event time that defines `span`)

@@ -1,0 +1,380 @@
+//! Integration: the handle-based asynchronous client API of the live
+//! server — token streaming, cancellation at every lifecycle stage,
+//! resource-leak freedom under churn, parked-queue re-admission order, and
+//! the two-phase dispatcher's submit/planning decoupling.
+//!
+//! Everything runs on the deterministic stub engine.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tetris::api::{CancelStage, Completion, Tetris, TetrisBuilder, TraceEvent, TraceRecorder};
+use tetris::baselines::PrefillScheduler;
+use tetris::cluster::PoolView;
+use tetris::config::ClusterConfig;
+use tetris::latency::prefill::{PrefillModel, SpCoeffs};
+use tetris::runtime::Engine;
+use tetris::sched::plan::{CdspPlan, ChunkPlan};
+use tetris::serve::{Server, ServeRequest};
+use tetris::sim::SimParams;
+
+/// A scheduler model with A100-like SP shape so multi-chunk CDSP paths get
+/// exercised even on the CPU substrate (DESIGN.md §3).
+fn sched_model(n: usize) -> PrefillModel {
+    let mut m = PrefillModel::new();
+    let mut sp = 1;
+    while sp <= n {
+        m.insert(
+            sp,
+            SpCoeffs {
+                a: 0.002 * sp as f64,
+                b: 1.0e-4 / sp as f64,
+                c: 2.0e-7 / sp as f64,
+                d: 1.0e-7 / sp as f64,
+            },
+        );
+        sp *= 2;
+    }
+    m
+}
+
+fn builder(n_prefill: usize, n_decode: usize) -> TetrisBuilder {
+    let sp: Vec<usize> = [1usize, 2, 4].into_iter().filter(|&s| s <= n_prefill).collect();
+    Tetris::builder()
+        .cluster(ClusterConfig::tiny(n_prefill, n_decode))
+        .n_decode_workers(n_decode)
+        .sp_candidates(sp)
+        .min_chunk(32)
+        .prefill_model(sched_model(n_prefill))
+}
+
+/// A capacity-pinned single-decode-instance server: 640 tokens of KV
+/// (40 blocks of 16), so one large resident request starves small ones.
+fn tight_server(rec: Arc<TraceRecorder>) -> Server {
+    builder(2, 1)
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 640,
+            block_tokens: 16,
+        })
+        .observe(rec)
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts")
+}
+
+fn req(id: u64, len: usize, out: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: (0..len).map(|i| ((i * 7 + id as usize) % 512) as i32).collect(),
+        output_len: out,
+    }
+}
+
+fn wait_until(mut pred: impl FnMut() -> bool, what: &str) {
+    let t0 = Instant::now();
+    while !pred() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Assert the router and transfer pools are back to their pristine state —
+/// the zero-leak bar every cancellation path must meet.
+fn assert_no_leaks(server: &Server, blocks_per_instance: usize, backends: usize) {
+    let router = server.router_state();
+    assert_eq!(router.in_flight_transfers(), 0, "leaked in-flight transfer");
+    for (i, inst) in router.instances.iter().enumerate() {
+        assert_eq!(inst.virtual_blocks, 0, "instance {i} leaked virtual blocks");
+        assert_eq!(inst.active_batch, 0, "instance {i} leaked batch slots");
+        assert_eq!(
+            inst.blocks.free_blocks(),
+            blocks_per_instance,
+            "instance {i} leaked KV blocks"
+        );
+        assert_eq!(
+            server.free_transfer_backends(i),
+            backends,
+            "instance {i} leaked transfer backends"
+        );
+    }
+    assert_eq!(server.n_parked(), 0, "requests left parked");
+}
+
+#[test]
+fn handle_streams_tokens_in_order_with_timestamps() {
+    let server = builder(2, 1)
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let mut h = server.submit_async(&req(0, 50, 5)).expect("submitted");
+    let tokens: Vec<_> = h.tokens().collect();
+    assert_eq!(tokens.len(), 5, "one streamed token per output token");
+    for (i, t) in tokens.iter().enumerate() {
+        assert_eq!(t.index, i, "stream indices are dense and ordered");
+        assert!(t.at >= 0.0);
+    }
+    assert!(
+        tokens.windows(2).all(|w| w[0].at <= w[1].at),
+        "timestamps must be nondecreasing: {tokens:?}"
+    );
+    match h.wait() {
+        Completion::Finished(m) => {
+            assert_eq!(m.output_len, 5);
+            assert_eq!(m.prompt_len, 50);
+            assert_eq!(m.tbt.len(), 4, "first token from prefill, 4 decode steps");
+            // index 0's timestamp is the TTFT (same clock, same anchor)
+            assert!((tokens[0].at - m.first_token).abs() < 0.5);
+        }
+        other => panic!("expected Finished, got {other:?}"),
+    }
+    server.shutdown().unwrap();
+}
+
+/// A deliberately slow policy: sleeps in `schedule()` then plans a single
+/// chunk on the shortest-queued instance. Used to prove submission no
+/// longer serializes behind planning.
+struct SlowSp1(Duration);
+
+impl PrefillScheduler for SlowSp1 {
+    fn schedule(&self, prompt_len: usize, pool: &PoolView, _rate: f64) -> Option<CdspPlan> {
+        std::thread::sleep(self.0);
+        let group = pool.get_group(&[], 1)?;
+        let est = pool.group_ready(&group).max(1e-9);
+        Some(CdspPlan { chunks: vec![ChunkPlan { len: prompt_len, group }], est_ttft: est })
+    }
+    fn name(&self) -> String {
+        "slow-sp1".into()
+    }
+}
+
+#[test]
+fn submission_returns_before_planning_completes() {
+    // The acceptance bar for the two-phase dispatcher: with planning
+    // pinned at 120ms per request, submitting N requests must cost the
+    // caller far less than one planning pass — the submit thread's
+    // blocking time is decoupled from scheduling, which now overlaps
+    // prefill compute on the dispatcher thread.
+    const PLAN_DELAY: Duration = Duration::from_millis(120);
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(2, 1)
+        .register_policy("slow-sp1", |_ctx| Ok(Box::new(SlowSp1(PLAN_DELAY))))
+        .policy("slow-sp1")
+        .observe(rec.clone())
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let client = server.client();
+    let t0 = Instant::now();
+    let mut handles: Vec<_> =
+        (0..4).map(|i| client.submit(&req(i, 40, 3)).expect("submitted")).collect();
+    let submit_elapsed = t0.elapsed();
+    assert!(
+        submit_elapsed < PLAN_DELAY,
+        "4 submissions took {submit_elapsed:?} — the caller must return before even \
+         one {PLAN_DELAY:?} planning pass completes"
+    );
+    assert!(
+        rec.count("plan") < 4,
+        "all plans finished before the submit loop returned — nothing was decoupled"
+    );
+    for h in &mut handles {
+        match h.wait() {
+            Completion::Finished(m) => assert_eq!(m.output_len, 3),
+            other => panic!("expected Finished, got {other:?}"),
+        }
+    }
+    assert_eq!(rec.count("plan"), 4, "every request was eventually planned");
+    assert_eq!(rec.count("arrival"), 4);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_mid_decode_frees_blocks_and_readmits_parked_in_arrival_order() {
+    let rec = Arc::new(TraceRecorder::new());
+    let mut server = tight_server(rec.clone());
+
+    // A: 200 + 400 = 600 tokens → 38 of 40 blocks. B and C: 42/43 tokens
+    // → 3 blocks each, so both must park behind A (only 2 blocks free).
+    let a = server.submit_async(&req(0, 200, 400)).expect("A submitted");
+    // Wait until A is demonstrably decoding (token index 2 = 2 decode steps).
+    let mut seen = 0;
+    while let Some(t) = a.next_token() {
+        seen = t.index;
+        if seen >= 2 {
+            break;
+        }
+    }
+    assert!(seen >= 2, "A must reach decode before the test proceeds");
+    assert_eq!(server.submit(&req(1, 34, 8)).expect("B accepted"), 0, "B parks");
+    assert_eq!(server.submit(&req(2, 35, 8)).expect("C accepted"), 0, "C parks");
+    assert_eq!(server.n_parked(), 2);
+
+    // Cancel A mid-decode: its 38 real blocks free, and the dispatcher
+    // must re-admit B and C in arrival order.
+    a.cancel();
+    let mut a = a;
+    match a.wait() {
+        Completion::Cancelled(stage) => assert_eq!(stage, CancelStage::Decode),
+        other => panic!("expected Cancelled(Decode), got {other:?}"),
+    }
+    let got = server.collect(2);
+    assert_eq!(got.len(), 2, "B and C must complete after A's blocks free");
+    assert_no_leaks(&server, 40, 2);
+
+    // Event order: A's cancel strictly precedes B's admission, which
+    // strictly precedes C's — re-admission is in arrival order.
+    let events = rec.events();
+    let pos = |pred: &dyn Fn(&TraceEvent) -> bool| -> usize {
+        events.iter().position(|e| pred(e)).expect("event present")
+    };
+    let cancel_a = pos(&|e| matches!(e, TraceEvent::Cancel { req: 0, .. }));
+    let assign_b = pos(&|e| matches!(e, TraceEvent::DecodeAssign { req: 1, .. }));
+    let assign_c = pos(&|e| matches!(e, TraceEvent::DecodeAssign { req: 2, .. }));
+    assert!(
+        cancel_a < assign_b && assign_b < assign_c,
+        "expected cancel(A) < assign(B) < assign(C), got {cancel_a}/{assign_b}/{assign_c}"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_mid_prefill_releases_virtual_reservation() {
+    // One prefill worker, eight 512-token requests: the last request's 8
+    // chunk pieces sit deep in the worker queue, so a cancel issued right
+    // after submission lands while its prefill is still pending — the
+    // is-last chunk's leader must release the virtual reservation.
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(1, 1)
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 16_000,
+            block_tokens: 16,
+        })
+        .observe(rec.clone())
+        .build_server(Arc::new(Engine::stub_default()), 1)
+        .expect("server starts");
+    let reqs: Vec<ServeRequest> = (0..8).map(|i| req(i, 512, 3)).collect();
+    let mut handles = server.submit_burst_async(&reqs).expect("burst");
+    let last = handles.last().unwrap();
+    last.cancel();
+    let outcome = handles.last_mut().unwrap().wait();
+    match outcome {
+        Completion::Cancelled(stage) => {
+            // The flag raced ahead of dispatch; any pre-decode stage is a
+            // correct place to die, and all of them must free the virtual
+            // reservation (checked below).
+            assert!(
+                matches!(
+                    stage,
+                    CancelStage::Queued | CancelStage::Prefill | CancelStage::Transfer
+                ),
+                "unexpected stage {stage:?}"
+            );
+        }
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    for h in handles.iter_mut().take(7) {
+        assert!(h.wait().is_finished(), "uncancelled requests must finish");
+    }
+    assert_no_leaks(&server, 1000, 2);
+    assert_eq!(rec.count("cancel"), 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_churn_100_requests_leaks_nothing() {
+    // The satellite's churn bar: 100 requests, a third of them cancelled
+    // at scattered lifecycle points, must leave zero leaked KV blocks,
+    // zero leaked transfer backends, and zero stuck accounting. (The
+    // mid-transfer window is microscopic on the CPU substrate — the
+    // transfer-layer abort path has its own unit test — but every cancel
+    // here still exercises the full release ladder.)
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(4, 2)
+        .sim_params(SimParams {
+            backends_per_decode: 4,
+            decode_capacity_tokens: 16_000,
+            block_tokens: 16,
+        })
+        .observe(rec.clone())
+        .build_server(Arc::new(Engine::stub_default()), 4)
+        .expect("server starts");
+    let client = server.client();
+    let mut handles = Vec::new();
+    for i in 0..100u64 {
+        let h = client
+            .submit(&req(i, 20 + (i as usize * 13) % 60, 3 + (i as usize % 5)))
+            .expect("submitted");
+        match i % 3 {
+            0 => h.cancel(), // cancel immediately: queued/prefill stages
+            1 if i % 6 == 1 => {
+                // cancel after the first token: decode stage
+                let _ = h.next_token();
+                h.cancel();
+            }
+            _ => {}
+        }
+        handles.push(h);
+    }
+    let mut finished = 0usize;
+    let mut cancelled = 0usize;
+    for h in &mut handles {
+        match h.wait() {
+            Completion::Finished(_) => finished += 1,
+            Completion::Cancelled(_) => cancelled += 1,
+            Completion::Dropped(msg) => panic!("request dropped: {msg}"),
+        }
+    }
+    assert_eq!(finished + cancelled, 100);
+    // 49 requests are never cancelled; the 17 cancelled-after-first-token
+    // ones may legitimately win the race and finish.
+    assert!(finished >= 49, "uncancelled requests must finish ({finished})");
+    assert!(cancelled >= 34, "immediate cancels must stick ({cancelled})");
+    assert_eq!(rec.count("cancel"), cancelled, "one cancel event per cancelled request");
+    assert_no_leaks(&server, 1000, 4);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_parked_resolves_promptly_and_frees_the_slot() {
+    let rec = Arc::new(TraceRecorder::new());
+    let server = tight_server(rec);
+    // A's routing (arrival order, FIFO dispatcher) reserves 38/40 blocks
+    // virtually the moment it is processed, so B must park behind it.
+    let mut a = server.submit_async(&req(0, 200, 400)).expect("A submitted");
+    let mut b = server.submit_async(&req(1, 34, 8)).expect("B submitted");
+    wait_until(|| server.n_parked() == 1, "B to park");
+    b.cancel();
+    match b.wait() {
+        Completion::Cancelled(stage) => assert_eq!(stage, CancelStage::Parked),
+        other => panic!("expected Cancelled(Parked), got {other:?}"),
+    }
+    assert_eq!(server.n_parked(), 0, "the parked slot frees on cancel");
+    // cancelling a finished request is a harmless no-op
+    assert!(a.wait().is_finished(), "A runs to completion");
+    a.cancel();
+    assert!(a.wait().is_finished(), "outcome is immutable after the fact");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_drains_in_flight_and_rejects_parked_and_new() {
+    let rec = Arc::new(TraceRecorder::new());
+    let server = tight_server(rec);
+    let client = server.client();
+    // A's virtual reservation (routed first, FIFO) forces B to park; the
+    // whole prefill+decode of A is still ahead when shutdown begins.
+    let mut a = client.submit(&req(0, 200, 400)).expect("A submitted");
+    let mut b = client.submit(&req(1, 34, 8)).expect("B submitted");
+    wait_until(|| server.n_parked() == 1, "B to park");
+
+    // Deterministic drain: dispatcher queue flushed (B resolves as a
+    // shutdown cancellation), in-flight A runs to completion — no caller
+    // ever collected anything.
+    server.shutdown().expect("clean shutdown");
+    assert!(a.wait().is_finished(), "in-flight request drains to completion");
+    match b.wait() {
+        Completion::Cancelled(stage) => assert_eq!(stage, CancelStage::Shutdown),
+        other => panic!("expected Cancelled(Shutdown), got {other:?}"),
+    }
+    // The surviving client is politely rejected.
+    let err = client.submit(&req(2, 20, 2)).err().expect("must reject after shutdown");
+    assert!(err.to_string().contains("shutting down"), "{err}");
+}

@@ -1,14 +1,49 @@
 //! Fig. 10: token throughput at each system's critical rate (the highest
 //! load it sustains under the 25x SLO). Paper: Tetris improves throughput
 //! by 1.24-3.38x (8B) / 1.15-1.81x (70B) while keeping latency low.
+//!
+//! Like fig9, every number here is derived from recorded `TraceRecorder`
+//! events rather than the driver's summary stats: TTFT percentiles come
+//! from `ttfts_from_events` (arrival → prefill-done) and throughput
+//! counts only requests that actually completed prefill (`reqs_with`)
+//! plus the tokens they decoded, over the event span — so shed or
+//! cancelled requests can never inflate a policy's row.
 
-use tetris::api::Tetris;
+use std::sync::Arc;
+use tetris::api::{Tetris, TraceRecorder};
 use tetris::metrics::{max_sustainable_rate, SloCriterion};
 use tetris::sched::{ImprovementController, RateProfile};
 use tetris::util::bench::Table;
 use tetris::util::cli::Args;
 use tetris::util::rng::Pcg64;
-use tetris::workload::{scale_rate, TraceKind, WorkloadGen};
+use tetris::util::stats::percentile_sorted;
+use tetris::workload::{scale_rate, Request, TraceKind, WorkloadGen};
+
+/// P99 TTFT derived purely from recorded events.
+fn p99_from_events(rec: &TraceRecorder) -> f64 {
+    let mut ttfts = rec.ttfts_from_events();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&ttfts, 99.0)
+}
+
+/// Mean TTFT derived purely from recorded events.
+fn mean_from_events(rec: &TraceRecorder) -> f64 {
+    let ttfts = rec.ttfts_from_events();
+    ttfts.iter().sum::<f64>() / ttfts.len().max(1) as f64
+}
+
+/// Event-derived token throughput: prompt tokens of requests that
+/// completed prefill, plus every decoded token, over the event span.
+fn throughput_from_events(rec: &TraceRecorder, trace: &[Request]) -> f64 {
+    let done = rec.reqs_with("prefill_done"); // ascending
+    let prompt_tokens: usize = trace
+        .iter()
+        .filter(|r| done.binary_search(&r.id).is_ok())
+        .map(|r| r.prompt_len)
+        .sum();
+    let tokens = prompt_tokens + rec.count("token");
+    tokens as f64 / rec.event_span().max(1e-9)
+}
 
 fn main() {
     let args = Args::from_env(&[]);
@@ -17,7 +52,9 @@ fn main() {
         let gen = WorkloadGen::paper_trace(kind);
         let mut rng = Pcg64::new(10);
         let base = gen.generate(n, 1.0, &mut rng);
-        let run = |policy: &str, rate: f64| {
+        let run = |policy: &str, rate: f64| -> (Arc<TraceRecorder>, Vec<Request>) {
+            let rec = Arc::new(TraceRecorder::new());
+            let trace = scale_rate(&base, rate);
             Tetris::paper_8b()
                 .policy(policy)
                 .controller(ImprovementController::new(
@@ -25,20 +62,23 @@ fn main() {
                     30.0,
                     30.0,
                 ))
+                .observe(rec.clone())
                 .build_simulation()
                 .expect("valid configuration")
-                .run(&scale_rate(&base, rate))
+                .run(&trace);
+            (rec, trace)
         };
-        let light = run("fixed-sp8", 0.05).ttft_summary().mean;
+        let light = mean_from_events(&run("fixed-sp8", 0.05).0);
         let slo = SloCriterion { light_load: light, factor: 25.0 };
         let rates: Vec<f64> = (1..=16).map(|i| i as f64 * 0.5).collect();
         println!("\n=== Fig. 10 [{} trace] (threshold {:.1}s) ===", kind.name(), slo.threshold());
         let mut t = Table::new(&["policy", "critical rate", "tok/s at critical rate", "vs fixed-sp8"]);
         let mut rows = Vec::new();
         for policy in ["tetris-cdsp", "loongserve-disagg", "fixed-sp8", "fixed-sp16"] {
-            let cap = max_sustainable_rate(&rates, &slo, |r| run(policy, r).ttft_summary().p99)
+            let cap = max_sustainable_rate(&rates, &slo, |r| p99_from_events(&run(policy, r).0))
                 .unwrap_or(0.25);
-            let thru = run(policy, cap).token_throughput();
+            let (rec, trace) = run(policy, cap);
+            let thru = throughput_from_events(&rec, &trace);
             rows.push((policy.to_string(), cap, thru));
         }
         let base_thru = rows.iter().find(|r| r.0 == "fixed-sp8").map(|r| r.2).unwrap_or(1.0);

@@ -1,0 +1,879 @@
+//! The load-aware admission & QoS control plane of the live server.
+//!
+//! Tetris's second pillar is *dynamically regulating SP-size expansion
+//! based on real-time load* (paper §5.1). This module extends that load
+//! signal all the way to the API edge:
+//!
+//! * [`SubmitOptions`] lets a client state per-request QoS — a
+//!   [`QosClass`], an optional TTFT deadline, and a bounded token-stream
+//!   buffer with a [`BackpressurePolicy`];
+//! * [`LoadSnapshot`] is one coherent view of cluster load — decode
+//!   slot/KV occupancy from the router, prefill lane clocks from the
+//!   worker registry, transfer-backend availability, parked-queue depth,
+//!   and the sliding-window arrival rate — exposed to callers through
+//!   `Server::load()` / `Client::load()` and consumed by *both* the
+//!   admission decisions and the improvement-rate throttle, so SP
+//!   expansion and shedding read the same signal;
+//! * [`AdmissionController`] is the pluggable decision point the
+//!   dispatcher consults *before* committing a placement: admit, park, or
+//!   shed ([`Completion::Shed`](crate::metrics::Completion::Shed) +
+//!   [`Observer::on_shed`](crate::api::Observer::on_shed)). The default
+//!   [`QosAdmission`] sheds and parks by class; [`AdmitAll`] restores the
+//!   admit-everything behaviour for baselines and A/B tests;
+//! * [`ParkedQueue`] is the QoS-aware waiting queue: re-admission is
+//!   class-prioritised but stays arrival-ordered *within* a class, and a
+//!   configurable anti-starvation bound guarantees `BestEffort` requests
+//!   are eventually offered ahead of the higher classes.
+//!
+//! Everything here is plain data plus policy — no locks, no threads — so
+//! out-of-crate controllers are first class: implement
+//! [`AdmissionController`] and install it with
+//! [`TetrisBuilder::admission`](crate::api::TetrisBuilder::admission).
+
+use crate::sched::DecodeRouter;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Quality-of-service class of one request, from most to least protected.
+///
+/// The class drives two mechanisms: the default admission policy
+/// ([`QosAdmission`]) sheds or parks the lower classes first as load
+/// rises, and the parked queue ([`ParkedQueue`]) re-admits higher classes
+/// first when capacity frees (with an anti-starvation bound so
+/// `BestEffort` is never locked out forever).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum QosClass {
+    /// Latency-sensitive traffic: never shed by the default policy (it
+    /// parks when the cluster is full) and re-admitted first.
+    Interactive,
+    /// Throughput traffic: parks early under high KV occupancy, shed only
+    /// when the parked queue itself is at its bound.
+    Batch,
+    /// Scavenger traffic: shed as soon as the cluster runs hot (KV
+    /// occupancy or prefill-pipeline depth), re-admitted last.
+    BestEffort,
+}
+
+impl QosClass {
+    /// Service priority (0 is served first). Also the lane index in
+    /// [`ParkedQueue`].
+    pub fn priority(self) -> usize {
+        match self {
+            QosClass::Interactive => 0,
+            QosClass::Batch => 1,
+            QosClass::BestEffort => 2,
+        }
+    }
+
+    /// Stable lowercase tag (logs, trace export, CLI).
+    pub fn tag(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+            QosClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// Parse a [`QosClass::tag`]-style name (CLI flags).
+    pub fn parse(s: &str) -> Option<QosClass> {
+        match s {
+            "interactive" => Some(QosClass::Interactive),
+            "batch" => Some(QosClass::Batch),
+            "best-effort" | "besteffort" => Some(QosClass::BestEffort),
+            _ => None,
+        }
+    }
+
+    /// All classes, in priority order.
+    pub const ALL: [QosClass; 3] =
+        [QosClass::Interactive, QosClass::Batch, QosClass::BestEffort];
+}
+
+/// What a bounded token stream does when its buffer is full and the
+/// producer (a prefill leader or decode worker) has another token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackpressurePolicy {
+    /// The producer waits until the consumer drains a slot — true
+    /// backpressure. A decode worker blocked here stalls its whole batch,
+    /// so pair `Block` with consumers that keep up (or with `cancel()`).
+    Block,
+    /// The oldest buffered token is discarded to make room; the stream
+    /// always holds the most recent `capacity` tokens and memory stays
+    /// flat however slow the consumer is. Dropped tokens are counted on
+    /// the handle ([`RequestHandle::dropped_tokens`](crate::serve::RequestHandle::dropped_tokens)).
+    DropOldest,
+    /// The stream overflow sheds the request: its completion resolves to
+    /// [`Completion::Shed`](crate::metrics::Completion::Shed) and the
+    /// pipeline tears down at the next stage boundary, releasing every
+    /// resource the request holds.
+    Fail,
+}
+
+/// Per-request submission options: QoS class, optional TTFT deadline, and
+/// the token-stream buffer bound. `SubmitOptions::default()` is an
+/// `Interactive` request with no deadline and an unbounded stream — the
+/// exact behaviour of the pre-QoS API, which is what keeps the sim/serve
+/// placement parity tests byte-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitOptions {
+    /// The request's QoS class (default: [`QosClass::Interactive`]).
+    pub qos: QosClass,
+    /// Optional TTFT deadline in seconds from submission. The admission
+    /// layer sheds the request — at submission or while parked — once the
+    /// deadline has elapsed or is provably unmeetable; it is *not* an
+    /// execution timeout for already-dispatched work.
+    pub ttft_deadline: Option<f64>,
+    /// Token-stream buffer bound (`None` = unbounded, the legacy
+    /// behaviour). Must be ≥ 1 when set.
+    pub stream_capacity: Option<usize>,
+    /// What a full stream buffer does (ignored while unbounded).
+    pub backpressure: BackpressurePolicy,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> Self {
+        SubmitOptions {
+            qos: QosClass::Interactive,
+            ttft_deadline: None,
+            stream_capacity: None,
+            backpressure: BackpressurePolicy::Block,
+        }
+    }
+}
+
+impl SubmitOptions {
+    /// Options for an [`QosClass::Interactive`] request (the default).
+    pub fn interactive() -> Self {
+        SubmitOptions::default()
+    }
+
+    /// Options for a [`QosClass::Batch`] request.
+    pub fn batch() -> Self {
+        SubmitOptions { qos: QosClass::Batch, ..SubmitOptions::default() }
+    }
+
+    /// Options for a [`QosClass::BestEffort`] request.
+    pub fn best_effort() -> Self {
+        SubmitOptions { qos: QosClass::BestEffort, ..SubmitOptions::default() }
+    }
+
+    /// Set the TTFT deadline (seconds from submission).
+    pub fn deadline(mut self, secs: f64) -> Self {
+        self.ttft_deadline = Some(secs);
+        self
+    }
+
+    /// Bound the token stream to `capacity` tokens with the given
+    /// overflow `policy`.
+    pub fn bounded(mut self, capacity: usize, policy: BackpressurePolicy) -> Self {
+        self.stream_capacity = Some(capacity);
+        self.backpressure = policy;
+        self
+    }
+}
+
+/// Routing-relevant load of one decode instance, as captured in a
+/// [`LoadSnapshot`] (a copy of the [`DecodeRouter`](crate::sched::DecodeRouter)
+/// instance state at snapshot time).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeLoad {
+    /// KV blocks the instance manages in total.
+    pub total_blocks: usize,
+    /// KV blocks with no real allocation right now.
+    pub free_blocks: usize,
+    /// Blocks virtually reserved by in-flight prefill→decode transfers.
+    pub virtual_blocks: usize,
+    /// Requests actively decoding on the instance.
+    pub active_batch: usize,
+    /// Requests routed here whose KV handoff is still in flight.
+    pub pending_transfers: usize,
+}
+
+impl DecodeLoad {
+    /// Blocks admittable right now (free minus virtual reservations).
+    pub fn available_blocks(&self) -> usize {
+        self.free_blocks.saturating_sub(self.virtual_blocks)
+    }
+}
+
+/// One coherent snapshot of cluster load, assembled by the live server
+/// from the decode router, the worker registry, the transfer backends,
+/// the parked queue, and the arrival-rate window — the signal both the
+/// [`AdmissionController`] and the improvement-rate throttle read, and
+/// what `Server::load()` / `Client::load()` hand to callers so they can
+/// shed at the edge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadSnapshot {
+    /// Snapshot time, seconds since the server epoch.
+    pub at: f64,
+    /// Tokens per KV block (the router's admission granularity).
+    pub block_tokens: usize,
+    /// Per-decode-instance slot and KV-block occupancy.
+    pub decode: Vec<DecodeLoad>,
+    /// Per-prefill-lane busy horizon: seconds (≥ 0, relative to `at`)
+    /// until the lane drains its committed chunks.
+    pub prefill_busy: Vec<f64>,
+    /// Per-decode-lane busy horizon: seconds until the lane drains its
+    /// expected handoffs and resident batch (estimates).
+    pub decode_lane_busy: Vec<f64>,
+    /// Free transfer backends per decode instance.
+    pub free_backends: Vec<usize>,
+    /// Requests admitted to each decode instance's transfer service order
+    /// (shards streaming or queued) — receive-side handoff pressure.
+    pub transfers_in_service: Vec<usize>,
+    /// Requests parked for capacity right now.
+    pub parked: usize,
+    /// Sliding-window request arrival rate (req/s) — the same observation
+    /// the improvement-rate controller refreshes from.
+    pub arrival_rate: f64,
+}
+
+impl LoadSnapshot {
+    /// Capture the decode-side half of a snapshot from a router: the
+    /// block granularity plus per-instance loads. (Call under whatever
+    /// lock guards the router; the result is a plain copy.)
+    pub fn decode_load_of(router: &DecodeRouter) -> (usize, Vec<DecodeLoad>) {
+        let block_tokens = router.block_tokens();
+        let decode = router
+            .instances
+            .iter()
+            .map(|i| DecodeLoad {
+                total_blocks: i.blocks.total_blocks(),
+                free_blocks: i.blocks.free_blocks(),
+                virtual_blocks: i.virtual_blocks,
+                active_batch: i.active_batch,
+                pending_transfers: i.pending_transfers,
+            })
+            .collect();
+        (block_tokens, decode)
+    }
+
+    /// Total KV blocks across all decode instances.
+    pub fn total_blocks(&self) -> usize {
+        self.decode.iter().map(|d| d.total_blocks).sum()
+    }
+
+    /// KV blocks admittable right now across all instances.
+    pub fn available_blocks(&self) -> usize {
+        self.decode.iter().map(|d| d.available_blocks()).sum()
+    }
+
+    /// Cluster KV occupancy in `[0, 1]`: the fraction of blocks *not*
+    /// admittable (real allocations plus virtual reservations). 0.0 on an
+    /// empty (or zero-capacity) cluster.
+    pub fn kv_occupancy(&self) -> f64 {
+        let total = self.total_blocks();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.available_blocks() as f64 / total as f64
+    }
+
+    /// Requests currently decoding, summed over instances.
+    pub fn active_requests(&self) -> usize {
+        self.decode.iter().map(|d| d.active_batch).sum()
+    }
+
+    /// Requests in the prefill pipeline: routed (virtual reservation
+    /// held) but their KV not yet handed off to decode.
+    pub fn in_flight_prefills(&self) -> usize {
+        self.decode.iter().map(|d| d.pending_transfers).sum()
+    }
+
+    /// The earliest any prefill lane frees up (seconds, ≥ 0) — a lower
+    /// bound on the queueing delay of a request admitted right now. 0.0
+    /// when the snapshot carries no lanes.
+    pub fn min_prefill_busy(&self) -> f64 {
+        if self.prefill_busy.is_empty() {
+            return 0.0;
+        }
+        self.prefill_busy.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// The latest any prefill lane frees up (seconds, ≥ 0).
+    pub fn max_prefill_busy(&self) -> f64 {
+        self.prefill_busy.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Project one just-admitted request onto this snapshot: virtually
+    /// reserve its blocks on the instance with the most headroom (a proxy
+    /// for the router's freeness placement) and count its in-flight
+    /// prefill. The dispatcher applies this between the requests of one
+    /// batch so QoS thresholds see accumulating load instead of judging a
+    /// whole burst against the same pre-burst snapshot.
+    pub fn note_admitted(&mut self, need_blocks: usize) {
+        if let Some(d) = self.decode.iter_mut().max_by_key(|d| d.available_blocks()) {
+            d.virtual_blocks += need_blocks;
+            d.pending_transfers += 1;
+        }
+    }
+
+    /// One-line operator summary (CLI, logs).
+    pub fn summary(&self) -> String {
+        format!(
+            "kv {:.0}% ({}/{} blocks) | {} decoding, {} prefilling, {} parked | \
+             prefill busy ≤ {:.3}s | {:.2} req/s",
+            100.0 * self.kv_occupancy(),
+            self.total_blocks() - self.available_blocks(),
+            self.total_blocks(),
+            self.active_requests(),
+            self.in_flight_prefills(),
+            self.parked,
+            self.max_prefill_busy(),
+            self.arrival_rate,
+        )
+    }
+}
+
+/// Everything an [`AdmissionController`] may weigh about one candidate
+/// request (fresh submission or parked re-admission attempt).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionTicket {
+    /// Caller-chosen request id.
+    pub id: u64,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Tokens the request will generate.
+    pub output_len: usize,
+    /// KV blocks the request needs on its decode instance.
+    pub need_blocks: usize,
+    /// The request's QoS class.
+    pub qos: QosClass,
+    /// The request's TTFT deadline, if any (seconds from submission).
+    pub ttft_deadline: Option<f64>,
+    /// Seconds the request has already spent queued or parked.
+    pub waited: f64,
+}
+
+/// An [`AdmissionController`]'s verdict on one candidate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdmissionDecision {
+    /// Offer the request to the router (which may still park it when no
+    /// instance has capacity).
+    Admit,
+    /// Hold the request in the parked queue without consuming capacity;
+    /// it is re-offered whenever capacity frees.
+    Park,
+    /// Refuse the request: its completion resolves to
+    /// [`Completion::Shed`](crate::metrics::Completion::Shed) with this
+    /// reason and [`Observer::on_shed`](crate::api::Observer::on_shed)
+    /// fires. A shed request holds no resources.
+    Shed(String),
+}
+
+/// The dispatcher's pluggable admission decision point, consulted with a
+/// live [`LoadSnapshot`] before any placement is committed — for fresh
+/// submissions and again for every parked re-admission attempt.
+///
+/// Controllers are owned by the dispatcher thread (hence `Send`, no
+/// `Sync` needed) and may keep state across decisions. Install a custom
+/// one with [`TetrisBuilder::admission`](crate::api::TetrisBuilder::admission).
+pub trait AdmissionController: Send {
+    /// Decide the fate of one candidate under the given load.
+    fn admit(&mut self, ticket: &AdmissionTicket, load: &LoadSnapshot) -> AdmissionDecision;
+
+    /// The controller's self-reported name (logs, CLI).
+    fn name(&self) -> String {
+        "custom".into()
+    }
+}
+
+/// Factory building a fresh [`AdmissionController`] per server start.
+/// Builders are cloneable and controllers are stateful, so the builder
+/// stores the recipe, not the instance.
+pub type AdmissionFactory = Arc<dyn Fn() -> Box<dyn AdmissionController> + Send + Sync>;
+
+/// The admit-everything controller: every request is offered straight to
+/// the router and parks when the cluster is full — exactly the pre-QoS
+/// behaviour. The no-admission baseline for A/B tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmitAll;
+
+impl AdmissionController for AdmitAll {
+    fn admit(&mut self, _ticket: &AdmissionTicket, _load: &LoadSnapshot) -> AdmissionDecision {
+        AdmissionDecision::Admit
+    }
+
+    fn name(&self) -> String {
+        "admit-all".into()
+    }
+}
+
+/// The default load-aware controller: shed/park by QoS class.
+///
+/// | Class | High load behaviour |
+/// |-------|---------------------|
+/// | `Interactive` | always offered to the router (parks when full); shed only via its own TTFT deadline |
+/// | `Batch` | parks once KV occupancy ≥ [`batch_park_occupancy`](QosAdmission::batch_park_occupancy); shed when the parked queue reaches [`max_parked`](QosAdmission::max_parked) |
+/// | `BestEffort` | shed once KV occupancy ≥ [`best_effort_shed_occupancy`](QosAdmission::best_effort_shed_occupancy) *or* the prefill pipeline holds ≥ [`best_effort_inflight_per_lane`](QosAdmission::best_effort_inflight_per_lane) requests per lane |
+///
+/// Any class with a TTFT deadline is shed once the deadline has elapsed
+/// while waiting, or when every prefill lane is already busy past the
+/// remaining slack (the deadline is provably unmeetable).
+#[derive(Clone, Debug)]
+pub struct QosAdmission {
+    /// KV occupancy in `[0, 1]` at which `Batch` requests park instead of
+    /// routing (default 0.90).
+    pub batch_park_occupancy: f64,
+    /// KV occupancy in `[0, 1]` at which `BestEffort` requests are shed
+    /// (default 0.75).
+    pub best_effort_shed_occupancy: f64,
+    /// `BestEffort` requests are shed while the prefill pipeline holds at
+    /// least this many in-flight requests per prefill lane (default 4).
+    pub best_effort_inflight_per_lane: usize,
+    /// Parked-queue length at which non-`Interactive` requests are shed
+    /// rather than parked (default 1024).
+    pub max_parked: usize,
+}
+
+impl Default for QosAdmission {
+    fn default() -> Self {
+        QosAdmission {
+            batch_park_occupancy: 0.90,
+            best_effort_shed_occupancy: 0.75,
+            best_effort_inflight_per_lane: 4,
+            max_parked: 1024,
+        }
+    }
+}
+
+impl AdmissionController for QosAdmission {
+    fn admit(&mut self, t: &AdmissionTicket, load: &LoadSnapshot) -> AdmissionDecision {
+        if let Some(d) = t.ttft_deadline {
+            let slack = d - t.waited;
+            if slack <= 0.0 {
+                return AdmissionDecision::Shed(format!(
+                    "TTFT deadline of {d:.3}s elapsed while waiting ({:.3}s queued)",
+                    t.waited
+                ));
+            }
+            let floor = load.min_prefill_busy();
+            if floor.is_finite() && floor > slack {
+                return AdmissionDecision::Shed(format!(
+                    "TTFT deadline unmeetable: every prefill lane is busy for \
+                     ≥ {floor:.3}s but only {slack:.3}s of the deadline remains"
+                ));
+            }
+        }
+        match t.qos {
+            QosClass::Interactive => AdmissionDecision::Admit,
+            QosClass::Batch => {
+                if load.parked >= self.max_parked {
+                    AdmissionDecision::Shed(format!(
+                        "parked queue at its bound ({} ≥ {})",
+                        load.parked, self.max_parked
+                    ))
+                } else if load.kv_occupancy() >= self.batch_park_occupancy {
+                    AdmissionDecision::Park
+                } else {
+                    AdmissionDecision::Admit
+                }
+            }
+            QosClass::BestEffort => {
+                let occ = load.kv_occupancy();
+                let lanes = load.prefill_busy.len().max(1);
+                let inflight = load.in_flight_prefills();
+                if occ >= self.best_effort_shed_occupancy {
+                    AdmissionDecision::Shed(format!(
+                        "KV occupancy {:.0}% ≥ the {:.0}% best-effort bound",
+                        100.0 * occ,
+                        100.0 * self.best_effort_shed_occupancy
+                    ))
+                } else if inflight >= self.best_effort_inflight_per_lane * lanes {
+                    AdmissionDecision::Shed(format!(
+                        "prefill pipeline holds {inflight} requests \
+                         (≥ {} per lane over {lanes} lanes)",
+                        self.best_effort_inflight_per_lane
+                    ))
+                } else if load.parked >= self.max_parked {
+                    AdmissionDecision::Shed(format!(
+                        "parked queue at its bound ({} ≥ {})",
+                        load.parked, self.max_parked
+                    ))
+                } else {
+                    AdmissionDecision::Admit
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        "qos".into()
+    }
+}
+
+/// Verdict of a [`ParkedQueue::scan`] closure on one offered entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanOutcome {
+    /// Remove the entry from the queue (admitted, shed, or cancelled —
+    /// the caller classifies; the queue just hands the item back).
+    Remove,
+    /// Keep the entry parked; it is offered again on the next scan.
+    Keep,
+}
+
+struct ParkedEntry<T> {
+    item: T,
+    qos: QosClass,
+    seq: u64,
+    bypassed: usize,
+}
+
+/// The QoS-aware parked queue: one FIFO lane per [`QosClass`], served in
+/// priority order with a configurable anti-starvation bound.
+///
+/// A *scan* offers every entry to a caller-supplied closure (the
+/// dispatcher's route-or-keep attempt) in service order:
+///
+/// 1. **starving** entries — kept through at least
+///    [`starvation_bound`](ParkedQueue::starvation_bound) scans in which
+///    something else was removed — first, class-blind, in arrival order;
+/// 2. then `Interactive`, `Batch`, `BestEffort`, each in arrival order.
+///
+/// Within a class the offer order is always arrival order, so same-class
+/// re-admission is FIFO; across classes, a `BestEffort` entry can be
+/// bypassed by higher classes at most `starvation_bound` times before it
+/// jumps to the front. A bound of 0 degenerates to class-blind arrival
+/// order (every entry is always "starving").
+pub struct ParkedQueue<T> {
+    lanes: [VecDeque<ParkedEntry<T>>; 3],
+    next_seq: u64,
+    starvation_bound: usize,
+}
+
+impl<T> ParkedQueue<T> {
+    /// An empty queue with the given anti-starvation bound.
+    pub fn new(starvation_bound: usize) -> Self {
+        ParkedQueue {
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            next_seq: 0,
+            starvation_bound,
+        }
+    }
+
+    /// The configured anti-starvation bound.
+    pub fn starvation_bound(&self) -> usize {
+        self.starvation_bound
+    }
+
+    /// Park one item under its QoS class (arrival order is the push
+    /// order, globally across classes).
+    pub fn push(&mut self, qos: QosClass, item: T) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.lanes[qos.priority()].push_back(ParkedEntry { item, qos, seq, bypassed: 0 });
+    }
+
+    /// Number of parked items.
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(VecDeque::is_empty)
+    }
+
+    /// One service pass: offer every entry to `f` in service order (see
+    /// the type docs) and return the removed items, in offer order. If
+    /// anything was removed, every kept entry's bypass count rises by
+    /// one — the anti-starvation clock.
+    pub fn scan(&mut self, mut f: impl FnMut(QosClass, &T) -> ScanOutcome) -> Vec<T> {
+        let mut entries: Vec<ParkedEntry<T>> = Vec::with_capacity(self.len());
+        for lane in self.lanes.iter_mut() {
+            entries.extend(lane.drain(..));
+        }
+        let bound = self.starvation_bound;
+        entries.sort_by_key(|e| {
+            let starving = e.bypassed >= bound;
+            // Starving entries sort first, class-blind, in arrival order;
+            // the rest follow in (class priority, arrival) order.
+            (usize::from(!starving), if starving { 0 } else { e.qos.priority() }, e.seq)
+        });
+        let mut removed = Vec::new();
+        let mut kept: Vec<ParkedEntry<T>> = Vec::new();
+        for e in entries {
+            match f(e.qos, &e.item) {
+                ScanOutcome::Remove => removed.push(e.item),
+                ScanOutcome::Keep => kept.push(e),
+            }
+        }
+        let served = !removed.is_empty();
+        for mut e in kept {
+            if served {
+                e.bypassed += 1;
+            }
+            self.lanes[e.qos.priority()].push_back(e);
+        }
+        // Restore arrival order within each lane (the service order above
+        // interleaves starving entries ahead of their lane-mates).
+        for lane in self.lanes.iter_mut() {
+            let mut v: Vec<ParkedEntry<T>> = lane.drain(..).collect();
+            v.sort_by_key(|e| e.seq);
+            lane.extend(v);
+        }
+        removed
+    }
+
+    /// Remove every item matching `pred` (cancellations), preserving the
+    /// rest. No bypass accounting happens.
+    pub fn remove_where(&mut self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut out = Vec::new();
+        for lane in self.lanes.iter_mut() {
+            let mut keep: VecDeque<ParkedEntry<T>> = VecDeque::with_capacity(lane.len());
+            for e in lane.drain(..) {
+                if pred(&e.item) {
+                    out.push(e.item);
+                } else {
+                    keep.push_back(e);
+                }
+            }
+            *lane = keep;
+        }
+        out
+    }
+
+    /// Drain everything in global arrival order (shutdown).
+    pub fn drain(&mut self) -> Vec<T> {
+        let mut entries: Vec<ParkedEntry<T>> = Vec::with_capacity(self.len());
+        for lane in self.lanes.iter_mut() {
+            entries.extend(lane.drain(..));
+        }
+        entries.sort_by_key(|e| e.seq);
+        entries.into_iter().map(|e| e.item).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot(total: usize, available: usize, prefill_busy: Vec<f64>) -> LoadSnapshot {
+        let used = total - available;
+        LoadSnapshot {
+            at: 0.0,
+            block_tokens: 16,
+            decode: vec![DecodeLoad {
+                total_blocks: total,
+                free_blocks: total - used / 2,
+                virtual_blocks: used - used / 2,
+                active_batch: 1,
+                pending_transfers: 0,
+            }],
+            prefill_busy,
+            decode_lane_busy: vec![0.0],
+            free_backends: vec![4],
+            transfers_in_service: vec![0],
+            parked: 0,
+            arrival_rate: 0.0,
+        }
+    }
+
+    fn ticket(qos: QosClass) -> AdmissionTicket {
+        AdmissionTicket {
+            id: 1,
+            prompt_len: 100,
+            output_len: 10,
+            need_blocks: 7,
+            qos,
+            ttft_deadline: None,
+            waited: 0.0,
+        }
+    }
+
+    #[test]
+    fn snapshot_occupancy_math() {
+        let s = snapshot(100, 25, vec![0.0, 1.5]);
+        assert_eq!(s.total_blocks(), 100);
+        assert_eq!(s.available_blocks(), 25);
+        assert!((s.kv_occupancy() - 0.75).abs() < 1e-12);
+        assert_eq!(s.min_prefill_busy(), 0.0);
+        assert_eq!(s.max_prefill_busy(), 1.5);
+        assert!(s.summary().contains("75%"), "{}", s.summary());
+        let empty = LoadSnapshot {
+            at: 0.0,
+            block_tokens: 16,
+            decode: vec![],
+            prefill_busy: vec![],
+            decode_lane_busy: vec![],
+            free_backends: vec![],
+            transfers_in_service: vec![],
+            parked: 0,
+            arrival_rate: 0.0,
+        };
+        assert_eq!(empty.kv_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn note_admitted_projects_load_onto_the_snapshot() {
+        let mut s = snapshot(100, 100, vec![0.0]);
+        assert_eq!(s.in_flight_prefills(), 0);
+        s.note_admitted(30);
+        s.note_admitted(30);
+        assert_eq!(s.available_blocks(), 40, "projected reservations count");
+        assert!((s.kv_occupancy() - 0.6).abs() < 1e-12);
+        assert_eq!(s.in_flight_prefills(), 2);
+        // A whole burst judged through the projection trips the
+        // best-effort occupancy bound partway through, as the dispatcher
+        // relies on.
+        let mut c = QosAdmission::default();
+        assert!(matches!(
+            c.admit(&ticket(QosClass::BestEffort), &s),
+            AdmissionDecision::Admit
+        ));
+        s.note_admitted(30);
+        assert!(matches!(
+            c.admit(&ticket(QosClass::BestEffort), &s),
+            AdmissionDecision::Shed(_)
+        ));
+    }
+
+    #[test]
+    fn qos_admission_sheds_by_class() {
+        let mut c = QosAdmission::default();
+        let hot = snapshot(100, 20, vec![0.0]); // 80% occupancy
+        // Interactive always offered to the router.
+        assert_eq!(c.admit(&ticket(QosClass::Interactive), &hot), AdmissionDecision::Admit);
+        // BestEffort shed at 80% ≥ 75%.
+        assert!(matches!(
+            c.admit(&ticket(QosClass::BestEffort), &hot),
+            AdmissionDecision::Shed(_)
+        ));
+        // Batch still admitted at 80% < 90%, parks at 95%.
+        assert_eq!(c.admit(&ticket(QosClass::Batch), &hot), AdmissionDecision::Admit);
+        let hotter = snapshot(100, 5, vec![0.0]);
+        assert_eq!(c.admit(&ticket(QosClass::Batch), &hotter), AdmissionDecision::Park);
+        // Cold cluster admits everything.
+        let cold = snapshot(100, 100, vec![0.0]);
+        for q in QosClass::ALL {
+            assert_eq!(c.admit(&ticket(q), &cold), AdmissionDecision::Admit, "{q:?}");
+        }
+    }
+
+    #[test]
+    fn qos_admission_sheds_best_effort_on_prefill_pressure() {
+        let mut c = QosAdmission { best_effort_inflight_per_lane: 2, ..QosAdmission::default() };
+        let mut s = snapshot(1000, 990, vec![0.0]); // cold KV, 1 lane
+        s.decode[0].pending_transfers = 2; // 2 ≥ 2 × 1 lane
+        assert!(matches!(
+            c.admit(&ticket(QosClass::BestEffort), &s),
+            AdmissionDecision::Shed(_)
+        ));
+        assert_eq!(c.admit(&ticket(QosClass::Interactive), &s), AdmissionDecision::Admit);
+        s.decode[0].pending_transfers = 1;
+        assert_eq!(c.admit(&ticket(QosClass::BestEffort), &s), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn qos_admission_enforces_deadlines() {
+        let mut c = QosAdmission::default();
+        let busy = snapshot(100, 100, vec![5.0, 6.0]); // lanes busy ≥ 5s
+        let mut t = ticket(QosClass::Interactive);
+        t.ttft_deadline = Some(1.0);
+        // Unmeetable: every lane busy past the whole deadline.
+        assert!(matches!(c.admit(&t, &busy), AdmissionDecision::Shed(_)));
+        // Elapsed while parked.
+        let idle = snapshot(100, 100, vec![0.0]);
+        t.waited = 2.0;
+        assert!(matches!(c.admit(&t, &idle), AdmissionDecision::Shed(_)));
+        // Meetable: idle lanes, fresh request.
+        t.waited = 0.0;
+        assert_eq!(c.admit(&t, &idle), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn admit_all_never_sheds() {
+        let mut c = AdmitAll;
+        let hot = snapshot(100, 0, vec![9.0]);
+        for q in QosClass::ALL {
+            assert_eq!(c.admit(&ticket(q), &hot), AdmissionDecision::Admit);
+        }
+        assert_eq!(c.name(), "admit-all");
+    }
+
+    #[test]
+    fn parked_queue_serves_classes_in_priority_order() {
+        let mut q: ParkedQueue<u32> = ParkedQueue::new(10);
+        q.push(QosClass::BestEffort, 0);
+        q.push(QosClass::Interactive, 1);
+        q.push(QosClass::Batch, 2);
+        q.push(QosClass::Interactive, 3);
+        assert_eq!(q.len(), 4);
+        let mut offered = Vec::new();
+        let removed = q.scan(|_, &item| {
+            offered.push(item);
+            ScanOutcome::Remove
+        });
+        assert_eq!(offered, vec![1, 3, 2, 0], "priority order, FIFO within class");
+        assert_eq!(removed, vec![1, 3, 2, 0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn parked_queue_within_class_is_arrival_ordered_across_partial_scans() {
+        let mut q: ParkedQueue<u32> = ParkedQueue::new(10);
+        for i in 0..6 {
+            q.push(QosClass::Batch, i);
+        }
+        // Remove only even items on the first scan; order must hold.
+        let removed = q.scan(|_, &i| if i % 2 == 0 { ScanOutcome::Remove } else { ScanOutcome::Keep });
+        assert_eq!(removed, vec![0, 2, 4]);
+        let removed = q.scan(|_, _| ScanOutcome::Remove);
+        assert_eq!(removed, vec![1, 3, 5], "survivors stay FIFO");
+    }
+
+    #[test]
+    fn parked_queue_never_starves_best_effort_beyond_bound() {
+        const BOUND: usize = 3;
+        let mut q: ParkedQueue<&'static str> = ParkedQueue::new(BOUND);
+        q.push(QosClass::BestEffort, "be");
+        let mut passes = 0usize;
+        loop {
+            passes += 1;
+            // A fresh Interactive arrival competes every pass; capacity 1.
+            q.push(QosClass::Interactive, "ia");
+            let mut taken = None;
+            q.scan(|_, &item| {
+                if taken.is_none() {
+                    taken = Some(item);
+                    ScanOutcome::Remove
+                } else {
+                    ScanOutcome::Keep
+                }
+            });
+            if taken == Some("be") {
+                break;
+            }
+            assert!(passes <= BOUND + 1, "BestEffort starved past the bound");
+        }
+        assert_eq!(passes, BOUND + 1, "served right after {BOUND} bypasses");
+    }
+
+    #[test]
+    fn parked_queue_remove_where_and_drain() {
+        let mut q: ParkedQueue<u32> = ParkedQueue::new(2);
+        q.push(QosClass::Interactive, 10);
+        q.push(QosClass::BestEffort, 11);
+        q.push(QosClass::Batch, 12);
+        let cancelled = q.remove_where(|&i| i == 11);
+        assert_eq!(cancelled, vec![11]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.drain(), vec![10, 12], "drain is global arrival order");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn submit_options_builders() {
+        let o = SubmitOptions::default();
+        assert_eq!(o.qos, QosClass::Interactive);
+        assert_eq!(o.stream_capacity, None);
+        let o = SubmitOptions::best_effort().deadline(2.5).bounded(8, BackpressurePolicy::DropOldest);
+        assert_eq!(o.qos, QosClass::BestEffort);
+        assert_eq!(o.ttft_deadline, Some(2.5));
+        assert_eq!(o.stream_capacity, Some(8));
+        assert_eq!(o.backpressure, BackpressurePolicy::DropOldest);
+        assert_eq!(QosClass::parse("best-effort"), Some(QosClass::BestEffort));
+        assert_eq!(QosClass::parse("nope"), None);
+        assert_eq!(QosClass::Batch.tag(), "batch");
+    }
+}

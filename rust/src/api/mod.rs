@@ -22,9 +22,16 @@
 //! producing thread, none of them ever serialized behind planning, which
 //! runs on the server's dispatcher thread:
 //!
+//! Per-request QoS rides along as [`SubmitOptions`] — class, optional
+//! TTFT deadline, bounded stream + [`BackpressurePolicy`] — the
+//! dispatcher consults an [`AdmissionController`] (default:
+//! [`QosAdmission`]) against a live [`LoadSnapshot`] before committing any
+//! placement, and `Server::load()` / `Client::load()` expose the same
+//! snapshot so callers can shed at the edge:
+//!
 //! ```
 //! use std::sync::Arc;
-//! use tetris::api::{Completion, Tetris};
+//! use tetris::api::{BackpressurePolicy, Completion, SubmitOptions, Tetris};
 //! use tetris::runtime::Engine;
 //! use tetris::serve::ServeRequest;
 //!
@@ -36,8 +43,14 @@
 //!     .build_server(Arc::new(Engine::stub_default()), 2)
 //!     .unwrap();
 //! let client = server.client();
+//! // Shed at the edge: the same load signal the admission layer reads.
+//! let load = client.load();
+//! assert!(load.total_blocks() > 0 && load.kv_occupancy() < 1.0);
 //! let mut handle = client
-//!     .submit(&ServeRequest { id: 7, prompt: vec![3; 40], output_len: 4 })
+//!     .submit_with(
+//!         &ServeRequest { id: 7, prompt: vec![3; 40], output_len: 4 },
+//!         SubmitOptions::interactive().bounded(8, BackpressurePolicy::Block),
+//!     )
 //!     .unwrap();
 //! // Stream tokens as they are generated; index 0's timestamp is the TTFT.
 //! let first = handle.next_token().expect("first token");
@@ -89,6 +102,9 @@
 //! assert_eq!(metrics.requests.len(), 5);
 //! ```
 
+/// The load-aware admission & QoS control plane (submit options, load
+/// snapshots, admission controllers, the QoS parked queue).
+pub mod admission;
 /// Run observability: lifecycle event hooks and the JSON trace recorder.
 pub mod observer;
 /// The pluggable policy registry (names → scheduler factories).
@@ -96,6 +112,11 @@ pub mod registry;
 
 pub use crate::metrics::{CancelStage, Completion, StreamedToken};
 pub use crate::serve::{Client, RequestHandle};
+pub use admission::{
+    AdmissionController, AdmissionDecision, AdmissionFactory, AdmissionTicket, AdmitAll,
+    BackpressurePolicy, DecodeLoad, LoadSnapshot, ParkedQueue, QosAdmission, QosClass,
+    ScanOutcome, SubmitOptions,
+};
 pub use observer::{Observer, TraceEvent, TraceRecorder};
 pub use registry::{PolicyCtx, PolicyFactory, PolicyRegistry, PolicySpec};
 
@@ -177,6 +198,8 @@ pub struct TetrisBuilder {
     prefill_model: Option<PrefillModel>,
     sim_params: Option<SimParams>,
     n_decode_workers: usize,
+    admission: AdmissionFactory,
+    starvation_bound: usize,
 }
 
 impl TetrisBuilder {
@@ -193,6 +216,10 @@ impl TetrisBuilder {
             prefill_model: None,
             sim_params: None,
             n_decode_workers: 1,
+            admission: Arc::new(|| -> Box<dyn AdmissionController> {
+                Box::new(admission::QosAdmission::default())
+            }),
+            starvation_bound: crate::serve::DEFAULT_STARVATION_BOUND,
         }
     }
 
@@ -251,6 +278,34 @@ impl TetrisBuilder {
     /// exceed the cluster's decode instance count.
     pub fn n_decode_workers(mut self, n: usize) -> Self {
         self.n_decode_workers = n;
+        self
+    }
+
+    /// Replace the admission controller the live server's dispatcher
+    /// consults before committing placements (default: a
+    /// [`QosAdmission`] with its stock thresholds). The factory runs once per
+    /// [`TetrisBuilder::build_server`] — controllers are stateful and
+    /// owned by the dispatcher thread, while builders stay cloneable.
+    /// [`AdmitAll`] restores the admit-everything (park-when-full)
+    /// behaviour for no-admission baselines.
+    ///
+    /// The simulator has no admission layer; this setting only affects
+    /// `build_server`.
+    pub fn admission(
+        mut self,
+        factory: impl Fn() -> Box<dyn AdmissionController> + Send + Sync + 'static,
+    ) -> Self {
+        self.admission = Arc::new(factory);
+        self
+    }
+
+    /// Scans a parked `BestEffort` request may be bypassed by the higher
+    /// QoS classes before it jumps to the front of the re-admission order
+    /// (default [`crate::serve::DEFAULT_STARVATION_BOUND`]; 0 degenerates
+    /// to class-blind arrival order). See [`ParkedQueue`]. Live server
+    /// only — the simulator has no QoS lanes.
+    pub fn starvation_bound(mut self, scans: usize) -> Self {
+        self.starvation_bound = scans;
         self
     }
 
@@ -489,6 +544,8 @@ impl TetrisBuilder {
             pool,
             scheduler,
             self.controller.clone(),
+            (self.admission)(),
+            self.starvation_bound,
             self.observers.clone(),
         )
     }

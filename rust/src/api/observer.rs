@@ -70,6 +70,18 @@ pub trait Observer: Send + Sync {
     fn on_cancel(&self, req: u64, stage: CancelStage, now: f64) {
         let _ = (req, stage, now);
     }
+
+    /// Request `req` was shed by the admission layer at `now` — refused by
+    /// QoS policy at submission or while parked, its TTFT deadline elapsed
+    /// or became unmeetable, or its bounded token stream overflowed under
+    /// the `Fail` backpressure policy. Emitted only by the live server. An
+    /// admission-time shed holds no resources when this fires; a
+    /// stream-overflow shed of a running request releases its KV blocks
+    /// and batch slot through the cancellation ladder at the next stage
+    /// boundary, moments after this event.
+    fn on_shed(&self, req: u64, reason: &str, now: f64) {
+        let _ = (req, reason, now);
+    }
 }
 
 /// One recorded lifecycle event.
@@ -134,6 +146,15 @@ pub enum TraceEvent {
         /// Timestamp (seconds from run start).
         at: f64,
     },
+    /// The request was shed by the admission layer (live server only).
+    Shed {
+        /// Request id.
+        req: u64,
+        /// Operator-facing shed reason.
+        reason: String,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
 }
 
 impl TraceEvent {
@@ -146,7 +167,8 @@ impl TraceEvent {
             | TraceEvent::PrefillDone { at, .. }
             | TraceEvent::Transfer { at, .. }
             | TraceEvent::Token { at, .. }
-            | TraceEvent::Cancel { at, .. } => *at,
+            | TraceEvent::Cancel { at, .. }
+            | TraceEvent::Shed { at, .. } => *at,
         }
     }
 
@@ -161,6 +183,7 @@ impl TraceEvent {
             TraceEvent::Transfer { .. } => "transfer",
             TraceEvent::Token { .. } => "token",
             TraceEvent::Cancel { .. } => "cancel",
+            TraceEvent::Shed { .. } => "shed",
         }
     }
 
@@ -173,7 +196,8 @@ impl TraceEvent {
             | TraceEvent::PrefillDone { req, .. }
             | TraceEvent::Transfer { req, .. }
             | TraceEvent::Token { req, .. }
-            | TraceEvent::Cancel { req, .. } => *req,
+            | TraceEvent::Cancel { req, .. }
+            | TraceEvent::Shed { req, .. } => *req,
         }
     }
 }
@@ -226,6 +250,9 @@ impl TraceRecorder {
                 TraceEvent::Cancel { stage, .. } => {
                     o = o.set("stage", stage.tag());
                 }
+                TraceEvent::Shed { reason, .. } => {
+                    o = o.set("reason", reason.as_str());
+                }
                 _ => {}
             }
             arr.push(o);
@@ -257,6 +284,39 @@ impl TraceRecorder {
             }
         }
         ttfts.into_values().collect()
+    }
+
+    /// Distinct request ids that emitted at least one event of the given
+    /// kind, ascending. `reqs_with("prefill_done")` is the event-derived
+    /// "completed prefill" set the throughput harnesses use — shed and
+    /// pre-prefill-cancelled requests are excluded by construction.
+    pub fn reqs_with(&self, kind: &str) -> Vec<u64> {
+        let events = self.events.lock().unwrap();
+        let mut set = std::collections::BTreeSet::new();
+        for e in events.iter() {
+            if e.kind() == kind {
+                set.insert(e.req());
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Wall-span of the recorded trace: the gap between the earliest and
+    /// latest event timestamps (0.0 with fewer than two events).
+    pub fn event_span(&self) -> f64 {
+        let events = self.events.lock().unwrap();
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for e in events.iter() {
+            let t = e.at();
+            min = min.min(t);
+            max = max.max(t);
+        }
+        if max > min {
+            max - min
+        } else {
+            0.0
+        }
     }
 
     /// All inter-token gaps derived from recorded events: per request, the
@@ -310,6 +370,10 @@ impl Observer for TraceRecorder {
     fn on_cancel(&self, req: u64, stage: CancelStage, now: f64) {
         self.push(TraceEvent::Cancel { req, stage, at: now });
     }
+
+    fn on_shed(&self, req: u64, reason: &str, now: f64) {
+        self.push(TraceEvent::Shed { req, reason: reason.to_string(), at: now });
+    }
 }
 
 #[cfg(test)]
@@ -332,13 +396,18 @@ mod tests {
         rec.on_token(3, 1.7);
         rec.on_token(3, 1.8);
         rec.on_cancel(4, CancelStage::Decode, 1.9);
+        rec.on_shed(5, "KV occupancy 80% ≥ the 75% best-effort bound", 2.0);
         assert_eq!(rec.count("arrival"), 1);
         assert_eq!(rec.count("plan"), 1);
         assert_eq!(rec.count("decode_assign"), 1);
         assert_eq!(rec.count("token"), 2);
         assert_eq!(rec.count("cancel"), 1);
+        assert_eq!(rec.count("shed"), 1);
+        assert_eq!(rec.reqs_with("token"), vec![3]);
+        assert_eq!(rec.reqs_with("shed"), vec![5]);
+        assert!((rec.event_span() - 1.6).abs() < 1e-12, "0.4 → 2.0");
         let evs = rec.events();
-        assert_eq!(evs.len(), 8);
+        assert_eq!(evs.len(), 9);
         assert_eq!(evs[0], TraceEvent::Arrival { req: 3, at: 0.4 });
         assert_eq!(evs[2], TraceEvent::DecodeAssign { req: 3, instance: 1, at: 0.5 });
         assert_eq!(
@@ -351,6 +420,7 @@ mod tests {
         assert!(json.contains("backend"), "{json}");
         assert!(json.contains("\"stage\""), "{json}");
         assert!(json.contains("arrival"), "{json}");
+        assert!(json.contains("\"reason\""), "{json}");
     }
 
     #[test]

@@ -383,6 +383,19 @@ impl WorkerRegistry {
         (self.decode[i].free_at()[0] - now).max(0.0)
     }
 
+    /// Per-prefill-lane busy horizon relative to `now` (seconds, clamped
+    /// at 0): how long until each lane drains its committed chunks. The
+    /// prefill side of a load snapshot.
+    pub fn prefill_busy(&self, now: f64) -> Vec<f64> {
+        self.prefill.free_at().iter().map(|f| (f - now).max(0.0)).collect()
+    }
+
+    /// Per-decode-lane busy horizon relative to `now` (seconds, clamped
+    /// at 0): [`WorkerRegistry::decode_lane_busy`] over every lane.
+    pub fn decode_busy(&self, now: f64) -> Vec<f64> {
+        (0..self.decode.len()).map(|i| self.decode_lane_busy(i, now)).collect()
+    }
+
     /// One-line topology description for logs and the CLI.
     pub fn summary(&self) -> String {
         format!(

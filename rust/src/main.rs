@@ -46,10 +46,12 @@ COMMANDS:
   serve         live E2E server over artifacts/ (or the stub engine)
                   --requests <n>  --prompt-len <tokens>  --output-len <tokens>
                   --workers <n>  --decode-workers <n>
+                  [--qos]  (mixed-QoS demo: per-class SubmitOptions, load
+                            snapshots, admission shedding)
 ";
 
 fn main() {
-    let args = Args::from_env(&["dynamic-rate", "help"]);
+    let args = Args::from_env(&["dynamic-rate", "help", "qos"]);
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let code = match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
@@ -346,6 +348,9 @@ fn cmd_serve(args: &Args) -> i32 {
             output_len,
         })
         .collect();
+    if args.flag("qos") {
+        return serve_qos_demo(server, &reqs, &recorder);
+    }
     // Drive the run through the handle-based async API: the burst routes
     // atomically on the dispatcher, the caller streams tokens and awaits
     // per-request completions.
@@ -411,5 +416,81 @@ fn cmd_serve(args: &Args) -> i32 {
         .collect();
     println!("decode placements: {}", placements.join(" "));
     let _ = server.shutdown();
+    0
+}
+
+/// The `serve --qos` demo: the same requests submitted with per-class
+/// `SubmitOptions` (round-robin Interactive / Batch / BestEffort,
+/// BestEffort on a bounded DropOldest stream), with a live `load()`
+/// snapshot printed mid-flight and per-class outcome accounting —
+/// admission sheds are expected behaviour here, not failures.
+fn serve_qos_demo(
+    server: tetris::serve::Server,
+    reqs: &[tetris::serve::ServeRequest],
+    recorder: &tetris::api::TraceRecorder,
+) -> i32 {
+    use tetris::api::{BackpressurePolicy, Completion, QosClass, SubmitOptions};
+    let client = server.client();
+    let class_of = |id: u64| QosClass::ALL[(id % 3) as usize];
+    let mut handles = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        let opts = match class_of(r.id) {
+            QosClass::Interactive => SubmitOptions::interactive(),
+            QosClass::Batch => SubmitOptions::batch(),
+            QosClass::BestEffort => {
+                SubmitOptions::best_effort().bounded(8, BackpressurePolicy::DropOldest)
+            }
+        };
+        match client.submit_with(r, opts) {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                eprintln!("submission failed: {e:#}");
+                let _ = server.shutdown();
+                return 1;
+            }
+        }
+    }
+    println!("load after submission: {}", client.load().summary());
+    let mut finished = [0usize; 3];
+    let mut shed = [0usize; 3];
+    let mut failures = 0usize;
+    for h in &mut handles {
+        let lane = class_of(h.id()).priority();
+        match h.wait() {
+            Completion::Finished(_) => finished[lane] += 1,
+            Completion::Shed(reason) => {
+                println!("request {} shed: {reason}", h.id());
+                shed[lane] += 1;
+            }
+            other => {
+                eprintln!("request {} did not finish: {other:?}", h.id());
+                failures += 1;
+            }
+        }
+    }
+    let mut t = Table::new(&["class", "submitted", "finished", "shed"]);
+    for q in QosClass::ALL {
+        let lane = q.priority();
+        let submitted = reqs.iter().filter(|r| class_of(r.id) == q).count();
+        t.row(vec![
+            q.tag().to_string(),
+            submitted.to_string(),
+            finished[lane].to_string(),
+            shed[lane].to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "observer: {} arrivals, {} sheds, {} tokens | load at drain: {}",
+        recorder.count("arrival"),
+        recorder.count("shed"),
+        recorder.count("token"),
+        server.load().summary()
+    );
+    let _ = server.shutdown();
+    if failures > 0 {
+        eprintln!("serving failed: {failures} requests neither finished nor shed");
+        return 1;
+    }
     0
 }

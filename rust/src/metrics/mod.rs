@@ -65,6 +65,17 @@ pub enum Completion {
     /// blocks, parked-queue slots, and transfer backends it held have been
     /// released.
     Cancelled(CancelStage),
+    /// The admission layer refused the request — shed by QoS policy at
+    /// submission or while parked, its TTFT deadline elapsed or became
+    /// unmeetable, or its bounded token stream overflowed under
+    /// [`BackpressurePolicy::Fail`](crate::api::BackpressurePolicy::Fail).
+    /// The reason string is operator-facing. Admission-time sheds hold no
+    /// resources when the handle resolves; a stream-overflow shed of an
+    /// already-running request releases what it holds through the
+    /// cancellation ladder at the next stage boundary (KV blocks and the
+    /// batch slot free moments after the resolution, never later than the
+    /// next decode step).
+    Shed(String),
     /// The server dropped the request (scheduler refusal at re-admission,
     /// or the server terminated before resolving it).
     Dropped(String),
@@ -82,6 +93,14 @@ impl Completion {
     /// Whether this outcome is [`Completion::Finished`].
     pub fn is_finished(&self) -> bool {
         matches!(self, Completion::Finished(_))
+    }
+
+    /// The shed reason, if the request was refused by the admission layer.
+    pub fn shed_reason(&self) -> Option<&str> {
+        match self {
+            Completion::Shed(reason) => Some(reason),
+            _ => None,
+        }
     }
 }
 

@@ -165,6 +165,34 @@ impl DecodeRouter {
         self.instances.iter().map(|i| i.pending_transfers).sum()
     }
 
+    /// Total KV blocks managed across all instances.
+    pub fn total_blocks(&self) -> usize {
+        self.instances.iter().map(|i| i.blocks.total_blocks()).sum()
+    }
+
+    /// KV blocks admittable right now across all instances (free minus
+    /// virtual reservations) — the router-side half of a load snapshot.
+    pub fn available_blocks(&self) -> usize {
+        self.instances.iter().map(DecodeInstanceState::available_blocks).sum()
+    }
+
+    /// Tokens per KV block — the router's admission granularity (1 on an
+    /// empty router). The single source the submission-time validators
+    /// and load snapshots read, so the geometry rule lives in one place.
+    pub fn block_tokens(&self) -> usize {
+        self.instances
+            .first()
+            .map(|i| i.blocks.block_tokens())
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// The largest per-instance block capacity — the most KV any single
+    /// request could ever be granted (0 on an empty router).
+    pub fn max_blocks_per_instance(&self) -> usize {
+        self.instances.iter().map(|i| i.blocks.total_blocks()).max().unwrap_or(0)
+    }
+
     /// A request finished decoding: free its blocks, shrink the batch.
     pub fn finish(&mut self, idx: usize, seq: u64) {
         let inst = &mut self.instances[idx];
@@ -263,5 +291,22 @@ mod tests {
     fn route_none_when_all_full() {
         let mut r = DecodeRouter::new(2, 2, 16);
         assert!(r.route(64).is_none(), "needs 4 blocks, only 2 exist");
+    }
+
+    #[test]
+    fn aggregate_and_geometry_accessors() {
+        let mut r = DecodeRouter::new(2, 10, 16);
+        assert_eq!(r.total_blocks(), 20);
+        assert_eq!(r.available_blocks(), 20);
+        assert_eq!(r.block_tokens(), 16);
+        assert_eq!(r.max_blocks_per_instance(), 10);
+        let idx = r.route(64).unwrap(); // 4 blocks virtually held
+        assert_eq!(r.available_blocks(), 16);
+        assert_eq!(r.total_blocks(), 20, "totals never move");
+        r.cancel(idx, 64);
+        assert_eq!(r.available_blocks(), 20);
+        let empty = DecodeRouter::default();
+        assert_eq!(empty.block_tokens(), 1, "empty router degrades safely");
+        assert_eq!(empty.max_blocks_per_instance(), 0);
     }
 }

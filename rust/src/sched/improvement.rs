@@ -154,9 +154,23 @@ impl ImprovementController {
     /// The improvement rate to use at `now`, refreshing from the profile
     /// when the refresh interval elapsed.
     pub fn rate(&mut self, now: f64) -> f64 {
+        let obs = if now - self.last_refresh >= self.refresh {
+            self.observed_rate(now)
+        } else {
+            0.0 // unused: no refresh due
+        };
+        self.rate_given(now, obs)
+    }
+
+    /// Like [`ImprovementController::rate`], but refreshing from an
+    /// externally observed arrival rate instead of this controller's own
+    /// window — the live server passes the arrival rate of the same
+    /// [`LoadSnapshot`](crate::api::LoadSnapshot) its admission decisions
+    /// read, so SP-expansion throttling and admission shed/park verdicts
+    /// act on one coherent load signal.
+    pub fn rate_given(&mut self, now: f64, observed_rate: f64) -> f64 {
         if now - self.last_refresh >= self.refresh {
-            let obs = self.observed_rate(now);
-            self.active_rate = self.profile.lookup(obs);
+            self.active_rate = self.profile.lookup(observed_rate);
             self.last_refresh = now;
         }
         self.active_rate
@@ -239,6 +253,19 @@ mod tests {
         }
         assert_eq!(c.rate(5.0), 0.42);
         assert_eq!(c.rate(5000.0), 0.42);
+    }
+
+    #[test]
+    fn rate_given_follows_external_observation() {
+        let profile = RateProfile::new(vec![(0.0, 0.1), (2.0, 0.5), (5.0, 0.7)]);
+        let mut c = ImprovementController::new(profile, 30.0, 10.0);
+        // Externally supplied rate (e.g. a LoadSnapshot's window) drives
+        // the refresh, regardless of this controller's own arrivals.
+        assert_eq!(c.rate_given(0.0, 5.0), 0.7);
+        // Between refreshes the active rate holds even if the signal moves.
+        assert_eq!(c.rate_given(5.0, 0.0), 0.7);
+        // At the next refresh it follows the new observation.
+        assert_eq!(c.rate_given(10.0, 0.0), 0.1);
     }
 
     #[test]

@@ -1,25 +1,38 @@
-//! The dispatcher thread: the two-phase submission path of the live
-//! server.
+//! The dispatcher thread: the admission-gated two-phase submission path
+//! of the live server.
 //!
 //! Submitting threads only validate and enqueue (see
 //! [`crate::serve::Client`]); this thread does everything that used to run
-//! on the caller under the router lock, split into two phases per request:
+//! on the caller under the router lock, in three steps per request:
 //!
+//! 0. **Admission** — a live [`LoadSnapshot`](crate::api::LoadSnapshot)
+//!    (router occupancy, lane clocks, parked depth, arrival rate) is
+//!    assembled once per batch and handed to the pluggable
+//!    [`AdmissionController`](crate::api::AdmissionController): admit,
+//!    park, or shed. Shed requests resolve as
+//!    [`Completion::Shed`](crate::metrics::Completion::Shed) (emitting
+//!    `on_shed`) without ever touching the router. The same snapshot's
+//!    arrival rate refreshes the improvement-rate throttle, so SP
+//!    expansion and admission read one coherent load signal.
 //! 1. **Commit placement** — [`crate::sched::DecodeRouter::route`] runs
-//!    under a router
-//!    lock held only long enough to commit the placement (for a burst, one
-//!    lock across the whole batch, so burst placements stay a pure function
-//!    of the request sequence — the sim/serve parity contract). A request
-//!    the router cannot admit parks here, in arrival order.
+//!    under a router lock held only long enough to commit the placement
+//!    (for a burst, one lock across the whole batch, so burst placements
+//!    stay a pure function of the request sequence — the sim/serve parity
+//!    contract). A request the router cannot admit parks here.
 //! 2. **Plan + dispatch** — CDSP planning and chunk dispatch run *outside*
 //!    the router lock, so a decode worker's `finish()` (and the next
 //!    caller's submission) never waits behind `schedule()`.
 //!
 //! The dispatcher is also the only place parked requests re-admit: decode
 //! workers and cancellation paths send [`DispatcherMsg::CapacityFreed`]
-//! whenever KV blocks return to the pool, and the parked queue is retried
-//! in arrival order under one router lock.
+//! whenever KV blocks return to the pool, and the parked queue —
+//! a QoS-aware [`ParkedQueue`]: class priority across classes, arrival
+//! order within a class, anti-starvation bound for `BestEffort` — is
+//! re-offered to the admission controller and the router under one lock.
 
+use crate::api::admission::{
+    AdmissionController, AdmissionDecision, AdmissionTicket, ParkedQueue, ScanOutcome,
+};
 use crate::baselines::PrefillScheduler;
 use crate::cluster::WorkerRegistry;
 use crate::latency::prefill::SpCoeffs;
@@ -27,10 +40,8 @@ use crate::latency::DecodeQuickfit;
 use crate::metrics::{CancelStage, Completion};
 use crate::runtime::TinyArch;
 use crate::sched::plan::CdspPlan;
-use crate::sched::ImprovementController;
 use crate::serve::handle::{Pending, SubmitShared};
 use crate::serve::{need_tokens, KvState, ObserverSet, SharedKv, SharedRouter, WorkerJob};
-use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
@@ -56,12 +67,21 @@ pub(crate) enum DispatcherMsg {
     Drain,
 }
 
+/// How one scanned parked entry should leave (or stay in) the queue.
+enum ParkedVerdict {
+    Admit(usize),
+    Cancel,
+    Shed(String),
+}
+
 /// The dispatcher's owned state. Built by `Server::start`, consumed by
 /// [`Dispatcher::run`] on its own thread.
 pub(crate) struct Dispatcher {
     pub arch: TinyArch,
     pub scheduler: Box<dyn PrefillScheduler>,
-    pub controller: ImprovementController,
+    /// The admission decision point (default:
+    /// [`QosAdmission`](crate::api::QosAdmission)).
+    pub admission: Box<dyn AdmissionController>,
     pub registry: Arc<Mutex<WorkerRegistry>>,
     pub router: SharedRouter,
     pub kv: SharedKv,
@@ -79,8 +99,8 @@ pub(crate) struct Dispatcher {
     /// cancellations, avoiding re-entrant admission).
     pub tx: Sender<DispatcherMsg>,
     pub rx: Receiver<DispatcherMsg>,
-    /// Requests the router could not admit yet, in arrival order.
-    pub parked: VecDeque<Pending>,
+    /// Requests held back (admission `Park` or router full), QoS-ordered.
+    pub parked: ParkedQueue<Pending>,
 }
 
 impl Dispatcher {
@@ -103,39 +123,84 @@ impl Dispatcher {
         self.drain();
     }
 
-    /// Admit a batch: arrival bookkeeping, then phase 1 (atomic placement
-    /// commits, in order), then phase 2 (plan + dispatch, lock-free).
-    fn admit_batch(&mut self, batch: Vec<Pending>) {
-        let mut live = Vec::with_capacity(batch.len());
-        for p in batch {
-            self.controller.on_arrival(p.shared.submitted_at);
-            if p.shared.is_cancelled() {
-                self.resolve_cancel(&p, CancelStage::Queued);
-                continue;
-            }
-            live.push(p);
-        }
-        let routed = self.route_in_order(live);
-        for (p, inst) in routed {
-            self.plan_and_dispatch(p, inst);
+    /// The admission ticket for one pending request at `now`.
+    fn ticket(p: &Pending, now: f64, block_tokens: usize) -> AdmissionTicket {
+        AdmissionTicket {
+            id: p.req.id,
+            prompt_len: p.req.prompt.len(),
+            output_len: p.req.output_len,
+            need_blocks: need_tokens(&p.req).div_ceil(block_tokens.max(1)),
+            qos: p.shared.opts.qos,
+            ttft_deadline: p.shared.opts.ttft_deadline,
+            waited: (now - p.shared.submitted_at).max(0.0),
         }
     }
 
+    /// Admit a batch: arrival bookkeeping, then step 0 (admission against
+    /// one load snapshot), then phase 1 (atomic placement commits, in
+    /// order), then phase 2 (plan + dispatch, lock-free).
+    fn admit_batch(&mut self, batch: Vec<Pending>) {
+        // Arrivals land in the shared window *before* the snapshot is
+        // taken, so admission and the improvement-rate throttle both see
+        // the burst they are deciding about.
+        {
+            let mut c = self.shared.controller.lock().unwrap();
+            for p in &batch {
+                c.on_arrival(p.shared.submitted_at);
+            }
+        }
+        // One snapshot is taken for the batch, then each admission or park
+        // is projected back onto it (`note_admitted` / parked bump) so a
+        // large burst cannot sail past the QoS thresholds just because all
+        // of its members were judged against the same pre-burst load.
+        let mut load = self.shared.load();
+        let mut live = Vec::with_capacity(batch.len());
+        for p in batch {
+            if p.shared.is_cancelled() {
+                p.shared.resolve(Completion::Cancelled(CancelStage::Queued));
+                continue;
+            }
+            let t = Self::ticket(&p, load.at, load.block_tokens);
+            match self.admission.admit(&t, &load) {
+                AdmissionDecision::Admit => {
+                    load.note_admitted(t.need_blocks);
+                    live.push(p);
+                }
+                AdmissionDecision::Park => {
+                    load.parked += 1;
+                    self.park(p);
+                }
+                AdmissionDecision::Shed(reason) => {
+                    p.shared.resolve(Completion::Shed(reason));
+                }
+            }
+        }
+        let routed = self.route_in_order(live);
+        for (p, inst) in routed {
+            self.plan_and_dispatch(p, inst, load.arrival_rate);
+        }
+    }
+
+    /// Park one request (admission verdict or router full).
+    fn park(&mut self, p: Pending) {
+        self.shared.parked.fetch_add(1, Ordering::Relaxed);
+        self.parked.push(p.shared.opts.qos, p);
+    }
+
     /// Phase 1: commit placements under one router lock, in arrival order.
-    /// Requests that do not fit park (still in arrival order).
+    /// Requests that do not fit park (QoS-laned, arrival order preserved
+    /// within each class).
     fn route_in_order(&mut self, batch: Vec<Pending>) -> Vec<(Pending, usize)> {
         if batch.is_empty() {
             return Vec::new();
         }
         let mut routed = Vec::with_capacity(batch.len());
-        let mut guard = self.router.lock().unwrap();
+        let router = Arc::clone(&self.router);
+        let mut guard = router.lock().unwrap();
         for p in batch {
             match guard.route(need_tokens(&p.req)) {
                 Some(inst) => routed.push((p, inst)),
-                None => {
-                    self.shared.parked.fetch_add(1, Ordering::Relaxed);
-                    self.parked.push_back(p);
-                }
+                None => self.park(p),
             }
         }
         routed
@@ -147,16 +212,16 @@ impl Dispatcher {
     /// `on_decode_assign`/`on_plan` is ever emitted for it) and resolves
     /// the handle as [`Completion::Dropped`] — the same fate the old
     /// blocking path gave refused parked requests.
-    fn plan_and_dispatch(&mut self, p: Pending, inst: usize) {
+    fn plan_and_dispatch(&mut self, p: Pending, inst: usize, observed_rate: f64) {
         let need = need_tokens(&p.req);
         if p.shared.is_cancelled() {
             self.router.lock().unwrap().cancel(inst, need);
-            self.resolve_cancel(&p, CancelStage::Queued);
+            p.shared.resolve(Completion::Cancelled(CancelStage::Queued));
             let _ = self.tx.send(DispatcherMsg::CapacityFreed);
             return;
         }
         let now = self.epoch.elapsed().as_secs_f64();
-        match self.plan(&p.req.prompt, now) {
+        match self.plan(&p.req.prompt, now, observed_rate) {
             Ok(plan) => {
                 // The placement and plan become observable only now, and
                 // strictly before any chunk is dispatched — so a request's
@@ -180,9 +245,12 @@ impl Dispatcher {
 
     /// CDSP planning against the current queue-clock snapshot (no router
     /// lock held — this is the expensive step the two-phase split exists
-    /// to keep out of the lock).
-    fn plan(&mut self, prompt: &[i32], now: f64) -> anyhow::Result<CdspPlan> {
-        let rate = self.controller.rate(now);
+    /// to keep out of the lock). The improvement-rate throttle refreshes
+    /// from `observed_rate` — the arrival rate of the same
+    /// [`LoadSnapshot`](crate::api::LoadSnapshot) the admission verdicts
+    /// in this batch were made against.
+    fn plan(&mut self, prompt: &[i32], now: f64, observed_rate: f64) -> anyhow::Result<CdspPlan> {
+        let rate = self.shared.controller.lock().unwrap().rate_given(now, observed_rate);
         let pool = self.registry.lock().unwrap().prefill().pool_view(now);
         let plan = self.scheduler.schedule(prompt.len(), &pool, rate).ok_or_else(|| {
             anyhow::anyhow!(
@@ -268,39 +336,66 @@ impl Dispatcher {
         reg.decode_lane_mut(inst).commit(&[0], finish, svc);
     }
 
-    /// Retry the parked queue in arrival order under one router lock
-    /// (phase 1), then plan + dispatch the admitted ones (phase 2) — the
-    /// simulator's waiting-queue semantics.
+    /// Retry the parked queue under one router lock: every entry is
+    /// re-offered — in QoS service order (see [`ParkedQueue`]) — first to
+    /// the admission controller (which may now shed it: deadline elapsed,
+    /// load still hostile) and then to the router (phase 1); the admitted
+    /// ones plan + dispatch afterwards (phase 2). Within a class this is
+    /// the simulator's arrival-ordered waiting-queue semantics.
     fn try_admit(&mut self) {
         if self.parked.is_empty() {
             return;
         }
-        let mut admitted = Vec::new();
-        let mut cancelled = Vec::new();
-        let mut still = VecDeque::new();
-        {
-            let mut guard = self.router.lock().unwrap();
-            while let Some(p) = self.parked.pop_front() {
+        let mut load = self.shared.load();
+        // One verdict is pushed per removed entry; `ParkedQueue::scan`
+        // returns removed items in offer order, so the two line up by
+        // position — no keying needed (request ids are not unique).
+        let mut verdicts: Vec<ParkedVerdict> = Vec::new();
+        let removed = {
+            let router = Arc::clone(&self.router);
+            let mut guard = router.lock().unwrap();
+            let admission = &mut self.admission;
+            self.parked.scan(|_qos, p| {
                 if p.shared.is_cancelled() {
-                    self.shared.parked.fetch_sub(1, Ordering::Relaxed);
-                    cancelled.push(p);
-                    continue;
+                    verdicts.push(ParkedVerdict::Cancel);
+                    return ScanOutcome::Remove;
                 }
-                match guard.route(need_tokens(&p.req)) {
-                    Some(inst) => {
-                        self.shared.parked.fetch_sub(1, Ordering::Relaxed);
-                        admitted.push((p, inst));
+                let t = Self::ticket(p, load.at, load.block_tokens);
+                match admission.admit(&t, &load) {
+                    AdmissionDecision::Shed(reason) => {
+                        verdicts.push(ParkedVerdict::Shed(reason));
+                        ScanOutcome::Remove
                     }
-                    None => still.push_back(p),
+                    AdmissionDecision::Park => ScanOutcome::Keep,
+                    AdmissionDecision::Admit => match guard.route(need_tokens(&p.req)) {
+                        Some(inst) => {
+                            // Later candidates in this same scan see the
+                            // admission reflected in the load signal.
+                            load.note_admitted(t.need_blocks);
+                            verdicts.push(ParkedVerdict::Admit(inst));
+                            ScanOutcome::Remove
+                        }
+                        None => ScanOutcome::Keep,
+                    },
+                }
+            })
+        };
+        debug_assert_eq!(removed.len(), verdicts.len());
+        let mut admitted = Vec::new();
+        for (p, verdict) in removed.into_iter().zip(verdicts) {
+            self.shared.parked.fetch_sub(1, Ordering::Relaxed);
+            match verdict {
+                ParkedVerdict::Admit(inst) => admitted.push((p, inst)),
+                ParkedVerdict::Cancel => {
+                    p.shared.resolve(Completion::Cancelled(CancelStage::Parked));
+                }
+                ParkedVerdict::Shed(reason) => {
+                    p.shared.resolve(Completion::Shed(reason));
                 }
             }
         }
-        self.parked = still;
-        for p in cancelled {
-            self.resolve_cancel(&p, CancelStage::Parked);
-        }
         for (p, inst) in admitted {
-            self.plan_and_dispatch(p, inst);
+            self.plan_and_dispatch(p, inst, load.arrival_rate);
         }
     }
 
@@ -308,32 +403,19 @@ impl Dispatcher {
     /// (its slot frees immediately); queued submissions resolve when their
     /// message is popped, and dispatched stages watch the flag themselves.
     fn cancel_parked(&mut self, id: u64) {
-        for _ in 0..self.parked.len() {
-            let p = self.parked.pop_front().expect("len checked");
-            if p.req.id == id && p.shared.is_cancelled() {
-                self.shared.parked.fetch_sub(1, Ordering::Relaxed);
-                self.resolve_cancel(&p, CancelStage::Parked);
-            } else {
-                self.parked.push_back(p);
-            }
+        for p in self.parked.remove_where(|p| p.req.id == id && p.shared.is_cancelled()) {
+            self.shared.parked.fetch_sub(1, Ordering::Relaxed);
+            p.shared.resolve(Completion::Cancelled(CancelStage::Parked));
         }
-    }
-
-    fn resolve_cancel(&self, p: &Pending, stage: CancelStage) {
-        let now = self.epoch.elapsed().as_secs_f64();
-        for o in self.observers.iter() {
-            o.on_cancel(p.req.id, stage, now);
-        }
-        p.shared.resolve(Completion::Cancelled(stage));
     }
 
     /// Shutdown drain: every request still parked resolves as cancelled at
     /// the `Shutdown` stage (it holds no router resources), so handles
-    /// never dangle.
+    /// never dangle. Drained in global arrival order — deterministic.
     fn drain(&mut self) {
-        while let Some(p) = self.parked.pop_front() {
+        for p in self.parked.drain() {
             self.shared.parked.fetch_sub(1, Ordering::Relaxed);
-            self.resolve_cancel(&p, CancelStage::Shutdown);
+            p.shared.resolve(Completion::Cancelled(CancelStage::Shutdown));
         }
     }
 }

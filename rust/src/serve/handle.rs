@@ -8,19 +8,32 @@
 //!
 //! * a **token stream** — every generated token arrives as a
 //!   [`StreamedToken`] with its per-request timestamp (index 0 is the
-//!   prefill-produced first token, so its `at` *is* the TTFT),
+//!   prefill-produced first token, so its `at` *is* the TTFT). The stream
+//!   is bounded when the request's [`SubmitOptions`] say so, with
+//!   [`BackpressurePolicy`](crate::api::BackpressurePolicy) deciding what
+//!   a full buffer does to a slow consumer,
 //! * a **completion future** — [`RequestHandle::wait`] resolves to the
 //!   terminal [`Completion`]: full [`RequestMetrics`](crate::metrics::RequestMetrics)
 //!   on success, the [`CancelStage`](crate::metrics::CancelStage) on
-//!   cancellation, or a drop reason,
+//!   cancellation, a shed reason when the admission layer refused the
+//!   request, or a drop reason,
 //! * **`cancel()`** — releases whatever the request holds at that moment:
 //!   its dispatcher-queue or parked slot, its virtual KV reservation
 //!   (mid-prefill), its granted transfer backend (mid-transfer), or its
 //!   real KV blocks and batch slot (mid-decode).
+//!
+//! [`Client::load`] / [`Server::load`](crate::serve::Server::load) expose
+//! the live [`LoadSnapshot`] — the same signal the dispatcher's admission
+//! controller and improvement-rate throttle read — so callers can shed at
+//! the edge before ever submitting.
 
+use crate::api::admission::{LoadSnapshot, SubmitOptions};
+use crate::cluster::WorkerRegistry;
 use crate::metrics::{Completion, StreamedToken};
+use crate::sched::ImprovementController;
 use crate::serve::dispatcher::DispatcherMsg;
-use crate::serve::ServeRequest;
+use crate::serve::stream::{PushOutcome, TokenStream};
+use crate::serve::{ServeRequest, SharedReceivers, SharedRouter};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -29,17 +42,20 @@ use std::time::Instant;
 /// Server-side state of one in-flight request, shared between the
 /// dispatcher, the prefill leaders, and the decode workers. The client's
 /// [`RequestHandle`] deliberately does *not* hold this (only the small
-/// cancel/chunk-count atomics), so if the server dies without resolving a
-/// request, the outcome sender drops and `wait()` observes the
-/// disconnect instead of blocking forever.
+/// cancel/chunk-count atomics and the token stream), so if the server dies
+/// without resolving a request, the outcome sender drops and `wait()`
+/// observes the disconnect instead of blocking forever.
 pub(crate) struct ReqShared {
-    /// Set by [`RequestHandle::cancel`]; checked at every stage boundary.
+    /// The request's id (terminal observer events carry it).
+    pub id: u64,
+    /// Set by [`RequestHandle::cancel`] (or a `Fail`-policy stream
+    /// overflow); checked at every stage boundary.
     pub cancelled: Arc<AtomicBool>,
     /// Chunks dispatched for this request (0 until planned; the legacy
     /// blocking `submit` reads this after its flush).
     pub n_chunks: Arc<AtomicUsize>,
-    /// The handle's token stream (send side).
-    tokens: Sender<StreamedToken>,
+    /// The handle's token stream (bounded per the request's options).
+    tokens: Arc<TokenStream>,
     /// One-shot completion channel; `take`n on resolve so the outcome is
     /// sent exactly once and the receiver disconnects right after.
     outcome: Mutex<Option<Sender<Completion>>>,
@@ -48,26 +64,75 @@ pub(crate) struct ReqShared {
     pub submitted: Instant,
     /// Submission time in seconds from the server epoch (observer clock).
     pub submitted_at: f64,
+    /// The request's QoS class, deadline, and stream bound.
+    pub opts: SubmitOptions,
+    /// Observer set: terminal events (`on_cancel`, `on_shed`) are emitted
+    /// exactly once, by whichever resolution wins.
+    observers: crate::serve::ObserverSet,
+    /// The server epoch terminal-event timestamps are relative to.
+    epoch: Instant,
 }
 
 impl ReqShared {
-    /// Whether the client asked to cancel.
+    /// Whether the client asked to cancel (or an overflow shed tripped).
     pub fn is_cancelled(&self) -> bool {
         self.cancelled.load(Ordering::Relaxed)
     }
 
-    /// Stream one token to the handle (ignored if the handle was dropped).
+    /// Stream one token to the handle. A bounded stream applies its
+    /// backpressure policy here; a `Fail`-policy overflow sheds the
+    /// request on the spot (the cancel flag then tears the pipeline down
+    /// at the next stage boundary, releasing everything it holds).
     pub fn stream_token(&self, index: usize, token: i32) {
         let at = self.submitted.elapsed().as_secs_f64();
-        let _ = self.tokens.send(StreamedToken { index, token, at });
+        match self.tokens.push(&self.cancelled, StreamedToken { index, token, at }) {
+            PushOutcome::Overflow => {
+                self.cancelled.store(true, Ordering::Relaxed);
+                self.resolve(Completion::Shed(format!(
+                    "token stream overflowed its {}-token buffer \
+                     (BackpressurePolicy::Fail)",
+                    self.opts.stream_capacity.unwrap_or(0)
+                )));
+            }
+            PushOutcome::Ok | PushOutcome::Dropped => {}
+        }
     }
 
     /// Resolve the request's outcome. Exactly the first call wins; later
-    /// calls are no-ops (cancel vs. finish races settle here).
-    pub fn resolve(&self, c: Completion) {
-        if let Some(tx) = self.outcome.lock().unwrap().take() {
-            let _ = tx.send(c);
+    /// calls are no-ops (cancel vs. finish races settle here) and return
+    /// `false`. The winning resolution closes the token stream (buffered
+    /// tokens stay drainable) and emits the matching terminal observer
+    /// event — `on_cancel` or `on_shed` — exactly once.
+    pub fn resolve(&self, c: Completion) -> bool {
+        let Some(tx) = self.outcome.lock().unwrap().take() else {
+            return false;
+        };
+        let now = self.epoch.elapsed().as_secs_f64();
+        match &c {
+            Completion::Cancelled(stage) => {
+                for o in self.observers.iter() {
+                    o.on_cancel(self.id, *stage, now);
+                }
+            }
+            Completion::Shed(reason) => {
+                for o in self.observers.iter() {
+                    o.on_shed(self.id, reason, now);
+                }
+            }
+            Completion::Finished(_) | Completion::Dropped(_) => {}
         }
+        self.tokens.close();
+        let _ = tx.send(c);
+        true
+    }
+}
+
+impl Drop for ReqShared {
+    /// A request whose server-side state unwinds without resolving (the
+    /// server died mid-flight) still terminates its token stream, so a
+    /// consumer iterating `tokens()` never hangs.
+    fn drop(&mut self) {
+        self.tokens.close();
     }
 }
 
@@ -75,7 +140,7 @@ impl ReqShared {
 pub(crate) struct Pending {
     /// The request itself.
     pub req: ServeRequest,
-    /// Its shared lifecycle state.
+    /// Its shared lifecycle state (including its [`SubmitOptions`]).
     pub shared: Arc<ReqShared>,
 }
 
@@ -84,28 +149,35 @@ pub(crate) struct Pending {
 /// observer timestamps at the submission instant.
 pub(crate) fn make_request_at(
     req: ServeRequest,
+    opts: SubmitOptions,
     nudge: Sender<DispatcherMsg>,
     submitted: Instant,
     submitted_at: f64,
+    observers: crate::serve::ObserverSet,
+    epoch: Instant,
 ) -> (RequestHandle, Pending) {
     let cancelled = Arc::new(AtomicBool::new(false));
     let n_chunks = Arc::new(AtomicUsize::new(0));
-    let (tok_tx, tok_rx) = channel();
+    let tokens = Arc::new(TokenStream::new(opts.stream_capacity, opts.backpressure));
     let (out_tx, out_rx) = channel();
     let shared = Arc::new(ReqShared {
+        id: req.id,
         cancelled: Arc::clone(&cancelled),
         n_chunks: Arc::clone(&n_chunks),
-        tokens: tok_tx,
+        tokens: Arc::clone(&tokens),
         outcome: Mutex::new(Some(out_tx)),
         submitted,
         submitted_at,
+        opts,
+        observers,
+        epoch,
     });
     let handle = RequestHandle {
         id: req.id,
         cancelled,
         n_chunks,
         nudge,
-        tokens: tok_rx,
+        tokens,
         outcome: out_rx,
         resolved: None,
     };
@@ -121,7 +193,7 @@ pub struct RequestHandle {
     cancelled: Arc<AtomicBool>,
     n_chunks: Arc<AtomicUsize>,
     nudge: Sender<DispatcherMsg>,
-    tokens: Receiver<StreamedToken>,
+    tokens: Arc<TokenStream>,
     outcome: Receiver<Completion>,
     resolved: Option<Completion>,
 }
@@ -154,21 +226,41 @@ impl RequestHandle {
     }
 
     /// Blocking: the next streamed token, or `None` once the stream is
-    /// closed (request finished, cancelled, or dropped). Token `index` 0
-    /// is the prefill-produced first token; its `at` is the TTFT.
+    /// closed and drained (request finished, cancelled, shed, or
+    /// dropped). Token `index` 0 is the prefill-produced first token; its
+    /// `at` is the TTFT.
     pub fn next_token(&self) -> Option<StreamedToken> {
-        self.tokens.recv().ok()
+        self.tokens.recv()
     }
 
     /// Non-blocking [`RequestHandle::next_token`]: `None` means no token
     /// is ready *right now* (the stream may still be live).
     pub fn try_next_token(&self) -> Option<StreamedToken> {
-        self.tokens.try_recv().ok()
+        self.tokens.try_recv()
     }
 
     /// Blocking iterator over the remaining token stream.
     pub fn tokens(&self) -> impl Iterator<Item = StreamedToken> + '_ {
-        self.tokens.iter()
+        std::iter::from_fn(move || self.next_token())
+    }
+
+    /// Tokens buffered in the stream right now — never exceeds the
+    /// capacity configured in [`SubmitOptions::bounded`](crate::api::SubmitOptions::bounded).
+    pub fn buffered_tokens(&self) -> usize {
+        self.tokens.buffered()
+    }
+
+    /// The deepest the stream buffer ever got. For a bounded stream this
+    /// is at most the configured capacity — the backpressure proof the
+    /// integration tests assert.
+    pub fn max_buffered_tokens(&self) -> usize {
+        self.tokens.high_water()
+    }
+
+    /// Tokens this stream discarded (`DropOldest` displacement, or tokens
+    /// produced after the handle stopped listening).
+    pub fn dropped_tokens(&self) -> usize {
+        self.tokens.dropped_count()
     }
 
     /// Block until the request reaches a terminal state and return it.
@@ -207,42 +299,59 @@ impl RequestHandle {
     }
 }
 
+impl Drop for RequestHandle {
+    /// Dropping the handle tells the stream its consumer is gone: buffered
+    /// and future tokens are discarded, and any `Block`-policy producer
+    /// waiting on this stream is released immediately.
+    fn drop(&mut self) {
+        self.tokens.consumer_gone();
+    }
+}
+
 impl std::fmt::Debug for RequestHandle {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("RequestHandle")
             .field("id", &self.id)
             .field("cancel_requested", &self.cancel_requested())
             .field("dispatched_chunks", &self.dispatched_chunks())
+            .field("buffered_tokens", &self.buffered_tokens())
             .field("resolved", &self.resolved)
             .finish()
     }
 }
 
-/// Validation limits the submitting thread checks synchronously, before a
-/// request ever reaches the dispatcher (so impossible requests fail fast
-/// with a descriptive error, exactly like the old blocking `submit`).
+/// Engine-side validation constants (immutable for the engine's lifetime;
+/// the router-derived block limits are read live, per submit).
 #[derive(Clone, Copy, Debug)]
-pub(crate) struct SubmitLimits {
+pub(crate) struct EngineLimits {
     /// Engine prefill cache bucket (max prompt tokens).
     pub c_bucket: usize,
     /// Engine decode cache bucket (max prompt + output tokens).
     pub decode_c_bucket: usize,
-    /// Router KV block size in tokens.
-    pub block_tokens: usize,
-    /// Router KV blocks per decode instance.
-    pub blocks_per_instance: usize,
 }
 
 /// State shared by the [`Server`](crate::serve::Server) and every
-/// [`Client`] clone: the shutdown flag, the parked counter, validation
-/// limits, and the observer set (submission emits `on_arrival`).
+/// [`Client`] clone: the shutdown flag, the parked counter, the engine
+/// limits, and handles on every load-bearing structure — router, worker
+/// registry, transfer receivers, arrival-rate controller — so any
+/// submission endpoint can validate against *live* limits and assemble a
+/// [`LoadSnapshot`] without involving the dispatcher.
 pub(crate) struct SubmitShared {
     /// Set by `Server::shutdown`; rejects all later submissions.
     pub closed: AtomicBool,
-    /// Requests currently parked for decode capacity.
+    /// Requests currently parked for capacity.
     pub parked: AtomicUsize,
-    /// Synchronous validation limits.
-    pub limits: SubmitLimits,
+    /// Immutable engine bucket limits.
+    pub limits: EngineLimits,
+    /// The shared decode router (block limits + decode load, read live).
+    pub router: SharedRouter,
+    /// The worker registry (prefill/decode lane clocks).
+    pub registry: Arc<Mutex<WorkerRegistry>>,
+    /// Per-decode-instance transfer backends (free-backend counts).
+    pub receivers: SharedReceivers,
+    /// The arrival-rate window shared with the dispatcher's
+    /// improvement-rate throttle.
+    pub controller: Arc<Mutex<ImprovementController>>,
     /// Observer set (for `on_arrival` at submission).
     pub observers: crate::serve::ObserverSet,
     /// The server epoch all observer timestamps are relative to.
@@ -256,9 +365,11 @@ impl SubmitShared {
         &self,
         tx: &Sender<DispatcherMsg>,
         req: &ServeRequest,
+        opts: SubmitOptions,
     ) -> anyhow::Result<RequestHandle> {
-        self.validate(req)?;
-        let (handle, pending) = self.accept(tx, req);
+        let (block_tokens, blocks_per_instance) = self.router_geometry();
+        self.validate(req, &opts, block_tokens, blocks_per_instance)?;
+        let (handle, pending) = self.accept(tx, req, opts);
         tx.send(DispatcherMsg::Submit(pending))
             .map_err(|_| anyhow::anyhow!("server dispatcher terminated"))?;
         Ok(handle)
@@ -269,19 +380,23 @@ impl SubmitShared {
     /// commits, so burst placements are a pure function of the request
     /// sequence (the sim/serve parity contract). The entire burst is
     /// validated up front — one bad request rejects the whole batch with
-    /// nothing enqueued.
+    /// nothing enqueued. All burst members share `opts`.
     pub fn submit_burst(
         &self,
         tx: &Sender<DispatcherMsg>,
         reqs: &[ServeRequest],
+        opts: &SubmitOptions,
     ) -> anyhow::Result<Vec<RequestHandle>> {
+        // One router-lock read covers the whole burst: the geometry cannot
+        // change between members, so don't contend per request.
+        let (block_tokens, blocks_per_instance) = self.router_geometry();
         for r in reqs {
-            self.validate(r)?;
+            self.validate(r, opts, block_tokens, blocks_per_instance)?;
         }
         let mut handles = Vec::with_capacity(reqs.len());
         let mut batch = Vec::with_capacity(reqs.len());
         for r in reqs {
-            let (h, p) = self.accept(tx, r);
+            let (h, p) = self.accept(tx, r, opts.clone());
             handles.push(h);
             batch.push(p);
         }
@@ -291,20 +406,93 @@ impl SubmitShared {
     }
 
     /// Stamp the submission instant, emit `on_arrival`, build the handle.
-    fn accept(&self, tx: &Sender<DispatcherMsg>, req: &ServeRequest) -> (RequestHandle, Pending) {
+    fn accept(
+        &self,
+        tx: &Sender<DispatcherMsg>,
+        req: &ServeRequest,
+        opts: SubmitOptions,
+    ) -> (RequestHandle, Pending) {
         let submitted = Instant::now();
         let at = self.epoch.elapsed().as_secs_f64();
         for o in self.observers.iter() {
             o.on_arrival(req.id, at);
         }
-        make_request_at(req.clone(), tx.clone(), submitted, at)
+        make_request_at(
+            req.clone(),
+            opts,
+            tx.clone(),
+            submitted,
+            at,
+            Arc::clone(&self.observers),
+            self.epoch,
+        )
     }
 
-    fn validate(&self, req: &ServeRequest) -> anyhow::Result<()> {
+    /// Assemble a [`LoadSnapshot`] from the live structures. Locks are
+    /// taken one at a time (router → registry → receivers → controller),
+    /// never nested — the crate-wide locking discipline.
+    pub fn load(&self) -> LoadSnapshot {
+        let at = self.epoch.elapsed().as_secs_f64();
+        let (block_tokens, decode) = {
+            let r = self.router.lock().unwrap();
+            LoadSnapshot::decode_load_of(&r)
+        };
+        let (prefill_busy, decode_lane_busy) = {
+            let reg = self.registry.lock().unwrap();
+            (reg.prefill_busy(at), reg.decode_busy(at))
+        };
+        let mut free_backends = Vec::with_capacity(self.receivers.len());
+        let mut transfers_in_service = Vec::with_capacity(self.receivers.len());
+        for m in self.receivers.iter() {
+            let rm = m.lock().unwrap();
+            free_backends.push(rm.free_backends());
+            transfers_in_service.push(rm.in_service());
+        }
+        let arrival_rate = self.controller.lock().unwrap().observed_rate(at);
+        LoadSnapshot {
+            at,
+            block_tokens,
+            decode,
+            prefill_busy,
+            decode_lane_busy,
+            free_backends,
+            transfers_in_service,
+            parked: self.parked.load(Ordering::Relaxed),
+            arrival_rate,
+        }
+    }
+
+    /// The live router block geometry, read under one short router lock:
+    /// `(block_tokens, max blocks per instance)`. Read per submission (or
+    /// once per burst), not captured at construction, so a reconfigured
+    /// pool can never race a client into a stale-limit acceptance.
+    fn router_geometry(&self) -> (usize, usize) {
+        let r = self.router.lock().unwrap();
+        (r.block_tokens(), r.max_blocks_per_instance())
+    }
+
+    /// Validate against the engine buckets and the supplied (freshly
+    /// read) router block geometry.
+    fn validate(
+        &self,
+        req: &ServeRequest,
+        opts: &SubmitOptions,
+        block_tokens: usize,
+        blocks_per_instance: usize,
+    ) -> anyhow::Result<()> {
         if self.closed.load(Ordering::SeqCst) {
             anyhow::bail!("server is shutting down; new submissions are rejected");
         }
         anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        if let Some(cap) = opts.stream_capacity {
+            anyhow::ensure!(cap >= 1, "stream_capacity must be >= 1 when bounded");
+        }
+        if let Some(d) = opts.ttft_deadline {
+            anyhow::ensure!(
+                d.is_finite() && d > 0.0,
+                "ttft_deadline must be a positive number of seconds (got {d})"
+            );
+        }
         anyhow::ensure!(
             req.prompt.len() <= self.limits.c_bucket,
             "prompt exceeds cache bucket ({} > {})",
@@ -320,13 +508,13 @@ impl SubmitShared {
             need,
             self.limits.decode_c_bucket
         );
-        let need_blocks = need.div_ceil(self.limits.block_tokens);
+        let need_blocks = need.div_ceil(block_tokens.max(1));
         anyhow::ensure!(
-            need_blocks <= self.limits.blocks_per_instance,
+            need_blocks <= blocks_per_instance,
             "request {} needs {} KV blocks but decode instances hold only {}",
             req.id,
             need_blocks,
-            self.limits.blocks_per_instance
+            blocks_per_instance
         );
         Ok(())
     }
@@ -354,20 +542,51 @@ impl Clone for Client {
 }
 
 impl Client {
-    /// Submit one request asynchronously. Validation errors (empty or
-    /// oversized prompt, request that can never fit a decode instance)
-    /// surface here; everything later arrives through the handle.
+    /// Submit one request asynchronously with default [`SubmitOptions`]
+    /// (`Interactive`, no deadline, unbounded stream). Validation errors
+    /// (empty or oversized prompt, request that can never fit a decode
+    /// instance) surface here; everything later arrives through the
+    /// handle.
     pub fn submit(&self, req: &ServeRequest) -> anyhow::Result<RequestHandle> {
-        self.shared.submit(&self.tx, req)
+        self.submit_with(req, SubmitOptions::default())
+    }
+
+    /// Submit one request with explicit [`SubmitOptions`]: QoS class,
+    /// TTFT deadline, and the token-stream bound + backpressure policy.
+    pub fn submit_with(
+        &self,
+        req: &ServeRequest,
+        opts: SubmitOptions,
+    ) -> anyhow::Result<RequestHandle> {
+        self.shared.submit(&self.tx, req, opts)
     }
 
     /// Submit a burst whose placements are routed atomically in order (see
-    /// the parity notes on [`crate::serve::Server::submit_burst`]).
+    /// the parity notes on [`crate::serve::Server::submit_burst`]), with
+    /// default options.
     pub fn submit_burst(&self, reqs: &[ServeRequest]) -> anyhow::Result<Vec<RequestHandle>> {
-        self.shared.submit_burst(&self.tx, reqs)
+        self.submit_burst_with(reqs, &SubmitOptions::default())
     }
 
-    /// Requests currently parked for decode capacity.
+    /// Submit a burst with explicit [`SubmitOptions`] shared by every
+    /// member.
+    pub fn submit_burst_with(
+        &self,
+        reqs: &[ServeRequest],
+        opts: &SubmitOptions,
+    ) -> anyhow::Result<Vec<RequestHandle>> {
+        self.shared.submit_burst(&self.tx, reqs, opts)
+    }
+
+    /// A live [`LoadSnapshot`] of the cluster — the same signal the
+    /// server's admission controller reads. Use it to shed at the edge
+    /// (e.g. skip submitting `BestEffort` work when
+    /// [`LoadSnapshot::kv_occupancy`] runs hot).
+    pub fn load(&self) -> LoadSnapshot {
+        self.shared.load()
+    }
+
+    /// Requests currently parked for capacity.
     pub fn n_parked(&self) -> usize {
         self.shared.parked.load(Ordering::Relaxed)
     }

@@ -7,11 +7,18 @@
 //! from scheduling by a dedicated **dispatcher thread**:
 //!
 //! 1. a submitting thread ([`Server::submit_async`] or any [`Client`]
-//!    clone) validates the request, emits `on_arrival`, and enqueues it —
-//!    returning a [`RequestHandle`] immediately, so paced traces overlap
-//!    scheduling with prefill compute,
-//! 2. the **dispatcher thread** runs the two-phase submission path:
-//!    `route()` commits the decode placement through the shared
+//!    clone) validates the request — against the engine buckets and the
+//!    *live* router block geometry, read per submit — emits `on_arrival`,
+//!    and enqueues it with its [`SubmitOptions`] (QoS class, TTFT
+//!    deadline, token-stream bound), returning a [`RequestHandle`]
+//!    immediately, so paced traces overlap scheduling with prefill
+//!    compute,
+//! 2. the **dispatcher thread** consults the pluggable
+//!    [`AdmissionController`](crate::api::AdmissionController) with a live
+//!    [`LoadSnapshot`] (shed/park by QoS class; sheds resolve as
+//!    [`Completion::Shed`] and emit `on_shed`), then runs the two-phase
+//!    submission path: `route()` commits the decode placement through the
+//!    shared
 //!    [`crate::sched::DecodeRouter`] under a lock held only for the commit
 //!    (one lock across a whole burst, preserving placement parity with the
 //!    simulator), then CDSP planning and chunk dispatch run *outside* the
@@ -35,9 +42,12 @@
 //!    TBT sample and streams its token to the handle.
 //!
 //! Requests that the router cannot admit (all instances' KV blocks
-//! exhausted) are *parked* on the dispatcher and re-tried in arrival order
-//! whenever decode capacity frees up — the same waiting-queue semantics as
-//! the simulator's event loop, no longer dependent on a collecting caller.
+//! exhausted) or that the admission controller parks are held on the
+//! dispatcher's QoS-aware [`crate::api::ParkedQueue`] and re-offered
+//! whenever decode capacity frees up: higher classes first, arrival order
+//! *within* each class (the simulator's waiting-queue semantics for
+//! single-class traffic), with an anti-starvation bound so `BestEffort`
+//! is never locked out indefinitely.
 //!
 //! [`RequestHandle::cancel`] releases whatever the request holds at the
 //! moment the cancel lands: its queue or parked slot (dispatcher), its
@@ -84,13 +94,18 @@
 //! everything else (planning, queueing, group reservation, KV movement,
 //! routing, batching) is the real code path.
 
-/// The dispatcher thread (two-phase submission path).
+/// The dispatcher thread (admission-gated two-phase submission path).
 pub(crate) mod dispatcher;
 /// Request handles, the client facade, and the shared submission path.
 pub(crate) mod handle;
+/// Bounded, backpressured token streams behind the request handles.
+pub(crate) mod stream;
 
 pub use handle::{Client, RequestHandle};
 
+use crate::api::admission::{
+    AdmissionController, LoadSnapshot, ParkedQueue, SubmitOptions,
+};
 use crate::api::Observer;
 use crate::baselines::PrefillScheduler;
 use crate::cluster::WorkerRegistry;
@@ -102,7 +117,7 @@ use crate::sched::{DecodeRouter, ImprovementController};
 use crate::transfer::{Handshake, HandshakeReply, ReceiveManager};
 use anyhow::Result;
 use dispatcher::{Dispatcher, DispatcherMsg};
-use handle::{ReqShared, SubmitLimits, SubmitShared};
+use handle::{EngineLimits, ReqShared, SubmitShared};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -211,6 +226,12 @@ pub(crate) fn need_tokens(req: &ServeRequest) -> usize {
     req.prompt.len() + req.output_len.max(1)
 }
 
+/// Default number of scans a parked `BestEffort` request may be bypassed
+/// by the higher QoS classes before it jumps to the front of the
+/// re-admission order (see [`crate::api::ParkedQueue`]); override per
+/// server with [`crate::api::TetrisBuilder::starvation_bound`].
+pub const DEFAULT_STARVATION_BOUND: usize = 8;
+
 /// The live server: `n_prefill` barrier-grouped prefill workers feeding
 /// [`DecodePool::n_workers`] continuous-batching decode workers through the
 /// shared [`DecodeRouter`], with submissions flowing through a dedicated
@@ -250,21 +271,24 @@ pub struct Server {
 
 impl Server {
     /// Start `n_prefill` prefill workers, `decode.n_workers` decode
-    /// workers, and the dispatcher thread, scheduling through `scheduler`
-    /// and routing decode placements through a shared [`DecodeRouter`]
-    /// shaped by `decode`.
+    /// workers, and the dispatcher thread, scheduling through `scheduler`,
+    /// gating submissions through `admission`, and routing decode
+    /// placements through a shared [`DecodeRouter`] shaped by `decode`.
     ///
     /// Prefer [`crate::api::TetrisBuilder::build_server`], which resolves
     /// the scheduler by name, derives the decode pool from the builder's
     /// simulator parameters, and validates the configuration (a scheduler
     /// whose SP candidates exceed `n_prefill` would make every submission
     /// fail with "scheduling failed").
+    #[allow(clippy::too_many_arguments)]
     pub fn start(
         engine: Arc<Engine>,
         n_prefill: usize,
         decode: DecodePool,
         scheduler: Box<dyn PrefillScheduler>,
         controller: ImprovementController,
+        admission: Box<dyn AdmissionController>,
+        starvation_bound: usize,
         observers: Vec<Arc<dyn Observer>>,
     ) -> Result<Server> {
         anyhow::ensure!(n_prefill >= 1, "need at least one prefill worker");
@@ -337,15 +361,21 @@ impl Server {
             n_prefill,
             decode.n_workers,
         )));
+        // The arrival-rate window is shared between the dispatcher (which
+        // records arrivals and refreshes the improvement-rate throttle)
+        // and every load snapshot — one coherent load signal.
+        let controller = Arc::new(Mutex::new(controller));
         let submit_shared = Arc::new(SubmitShared {
             closed: AtomicBool::new(false),
             parked: AtomicUsize::new(0),
-            limits: SubmitLimits {
+            limits: EngineLimits {
                 c_bucket: engine.arch.c_bucket,
                 decode_c_bucket: engine.arch.decode_c_bucket,
-                block_tokens: decode.block_tokens,
-                blocks_per_instance: decode.blocks_per_instance,
             },
+            router: Arc::clone(&router),
+            registry: Arc::clone(&registry),
+            receivers: Arc::clone(&receivers),
+            controller: Arc::clone(&controller),
             observers: Arc::clone(&observers),
             epoch,
         });
@@ -353,7 +383,7 @@ impl Server {
         let disp = Dispatcher {
             arch: engine.arch.clone(),
             scheduler,
-            controller,
+            admission,
             registry: Arc::clone(&registry),
             router: Arc::clone(&router),
             kv,
@@ -365,7 +395,7 @@ impl Server {
             shared: Arc::clone(&submit_shared),
             tx: tx.clone(),
             rx,
-            parked: VecDeque::new(),
+            parked: ParkedQueue::new(starvation_bound),
         };
         let dispatcher = std::thread::Builder::new()
             .name("tetris-dispatch".into())
@@ -387,12 +417,24 @@ impl Server {
         })
     }
 
-    /// Submit one request asynchronously: validation happens here, on the
-    /// calling thread; routing, planning, and dispatch happen on the
-    /// dispatcher thread. Returns the request's [`RequestHandle`]
-    /// immediately — before its prefill plan even exists.
+    /// Submit one request asynchronously with default [`SubmitOptions`]:
+    /// validation happens here, on the calling thread; admission, routing,
+    /// planning, and dispatch happen on the dispatcher thread. Returns the
+    /// request's [`RequestHandle`] immediately — before its prefill plan
+    /// even exists.
     pub fn submit_async(&self, req: &ServeRequest) -> Result<RequestHandle> {
-        self.submit_shared.submit(&self.tx, req)
+        self.submit_async_with(req, SubmitOptions::default())
+    }
+
+    /// [`Server::submit_async`] with explicit [`SubmitOptions`] — QoS
+    /// class, TTFT deadline, and the token-stream bound the handle's
+    /// backpressure follows.
+    pub fn submit_async_with(
+        &self,
+        req: &ServeRequest,
+        opts: SubmitOptions,
+    ) -> Result<RequestHandle> {
+        self.submit_shared.submit(&self.tx, req, opts)
     }
 
     /// Submit a burst asynchronously. The dispatcher routes the whole
@@ -401,7 +443,26 @@ impl Server {
     /// submission mode the sim-vs-serve parity tests rely on. The entire
     /// burst is validated up front; one invalid request rejects the batch.
     pub fn submit_burst_async(&self, reqs: &[ServeRequest]) -> Result<Vec<RequestHandle>> {
-        self.submit_shared.submit_burst(&self.tx, reqs)
+        self.submit_burst_async_with(reqs, &SubmitOptions::default())
+    }
+
+    /// [`Server::submit_burst_async`] with explicit [`SubmitOptions`]
+    /// shared by every burst member.
+    pub fn submit_burst_async_with(
+        &self,
+        reqs: &[ServeRequest],
+        opts: &SubmitOptions,
+    ) -> Result<Vec<RequestHandle>> {
+        self.submit_shared.submit_burst(&self.tx, reqs, opts)
+    }
+
+    /// A live [`LoadSnapshot`] of the cluster: decode slot/KV occupancy,
+    /// prefill and decode lane clocks, transfer-backend availability,
+    /// parked depth, and the sliding-window arrival rate — the same
+    /// coherent signal the dispatcher's admission controller and the
+    /// improvement-rate throttle read.
+    pub fn load(&self) -> LoadSnapshot {
+        self.submit_shared.load()
     }
 
     /// A cloneable submission endpoint: hand one to each producing thread.
@@ -421,8 +482,14 @@ impl Server {
     pub fn submit(&mut self, req: &ServeRequest) -> Result<usize> {
         let mut h = self.submit_async(req)?;
         self.flush()?;
-        if let Some(Completion::Dropped(msg)) = h.try_wait() {
-            anyhow::bail!("request {} dropped: {msg}", req.id);
+        match h.try_wait() {
+            Some(Completion::Dropped(msg)) => {
+                anyhow::bail!("request {} dropped: {msg}", req.id)
+            }
+            Some(Completion::Shed(msg)) => {
+                anyhow::bail!("request {} shed: {msg}", req.id)
+            }
+            _ => {}
         }
         let n = h.dispatched_chunks();
         self.pending.push_back(h);
@@ -439,8 +506,15 @@ impl Server {
         self.flush()?;
         let mut dropped = None;
         for h in &mut handles {
-            if let Some(Completion::Dropped(msg)) = h.try_wait() {
-                dropped.get_or_insert_with(|| format!("request {} dropped: {msg}", h.id()));
+            match h.try_wait() {
+                Some(Completion::Dropped(msg)) => {
+                    dropped
+                        .get_or_insert_with(|| format!("request {} dropped: {msg}", h.id()));
+                }
+                Some(Completion::Shed(msg)) => {
+                    dropped.get_or_insert_with(|| format!("request {} shed: {msg}", h.id()));
+                }
+                _ => {}
             }
         }
         self.pending.extend(handles);
@@ -556,6 +630,13 @@ impl Server {
                 Completion::Finished(m) => requests.push(m),
                 Completion::Dropped(msg) => {
                     anyhow::bail!("request {} dropped: {msg}", h.id())
+                }
+                // This path submits with default options (Interactive, no
+                // deadline), which the default admission policy never
+                // sheds — a shed here means a custom controller refused
+                // the request, and that is an error to this caller.
+                Completion::Shed(msg) => {
+                    anyhow::bail!("request {} shed: {msg}", h.id())
                 }
                 // Cancelled mid-run (only possible via an external client's
                 // cancel): omitted, exactly like the simulator's metrics.
@@ -708,10 +789,9 @@ fn finish_prefill(
     let inst = st.decode_inst;
     let cancel = |stage: CancelStage| {
         router.lock().unwrap().cancel(inst, st.need_tokens);
-        let now = epoch.elapsed().as_secs_f64();
-        for o in observers.iter() {
-            o.on_cancel(req, stage, now);
-        }
+        // resolve() emits the terminal observer event (on_cancel, or
+        // on_shed if a stream overflow already resolved the request) for
+        // whichever resolution wins.
         st.shared.resolve(Completion::Cancelled(stage));
         let _ = notify.send(DispatcherMsg::CapacityFreed);
     };
@@ -860,9 +940,10 @@ fn decode_worker(
         let mut still = Vec::with_capacity(active.len());
         for mut st in active {
             // Cancellation joins/leaves at step boundaries, exactly like
-            // admission: blocks free before the next step runs.
+            // admission: blocks free before the next step runs. (A
+            // Fail-policy stream overflow raises the same flag.)
             if st.job.shared.is_cancelled() {
-                cancel_decode(&router, &observers, epoch, &notify, st);
+                cancel_decode(&router, &notify, st);
                 continue;
             }
             if st.tokens_out >= st.job.output_len
@@ -935,20 +1016,13 @@ fn finishing(router: &SharedRouter, notify: &Sender<DispatcherMsg>, st: ActiveDe
     let _ = notify.send(DispatcherMsg::CapacityFreed);
 }
 
-/// A cancel landed mid-decode: free the request's real KV blocks and batch
-/// slot, resolve the handle, wake the dispatcher.
-fn cancel_decode(
-    router: &SharedRouter,
-    observers: &ObserverSet,
-    epoch: Instant,
-    notify: &Sender<DispatcherMsg>,
-    st: ActiveDecode,
-) {
+/// A cancel (or stream-overflow shed) landed mid-decode: free the
+/// request's real KV blocks and batch slot, resolve the handle — the
+/// winning resolution emits its own terminal event, so an
+/// overflow-shed request keeps its `Shed` outcome and no duplicate
+/// `on_cancel` fires — and wake the dispatcher.
+fn cancel_decode(router: &SharedRouter, notify: &Sender<DispatcherMsg>, st: ActiveDecode) {
     router.lock().unwrap().finish(st.job.inst, st.job.seq);
-    let now = epoch.elapsed().as_secs_f64();
-    for o in observers.iter() {
-        o.on_cancel(st.job.req, CancelStage::Decode, now);
-    }
     st.job.shared.resolve(Completion::Cancelled(CancelStage::Decode));
     let _ = notify.send(DispatcherMsg::CapacityFreed);
 }

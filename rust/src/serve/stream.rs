@@ -1,0 +1,309 @@
+//! Bounded, backpressured token streams — the channel behind every
+//! [`RequestHandle`](crate::serve::RequestHandle).
+//!
+//! PR 3's streams were unbounded `mpsc` channels: a consumer that stalled
+//! let the server buffer tokens without limit. This replaces them with a
+//! deque + condvar stream whose capacity and overflow behaviour come from
+//! the request's [`SubmitOptions`](crate::api::SubmitOptions):
+//!
+//! * unbounded (`stream_capacity: None`) — the legacy behaviour;
+//! * [`BackpressurePolicy::Block`] — the producer (a prefill leader or
+//!   decode worker) waits for the consumer, polling the request's cancel
+//!   flag so a cancellation always unwedges it;
+//! * [`BackpressurePolicy::DropOldest`] — the oldest buffered token is
+//!   discarded; memory stays flat and the buffer always holds the most
+//!   recent tokens;
+//! * [`BackpressurePolicy::Fail`] — the overflow closes the stream and
+//!   reports [`PushOutcome::Overflow`]; the caller sheds the request.
+//!
+//! The stream closes when the request resolves (the consumer drains
+//! whatever is buffered, then sees the end) and discards everything once
+//! the consumer's handle is dropped.
+
+use crate::api::admission::BackpressurePolicy;
+use crate::metrics::StreamedToken;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Result of one producer-side push.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum PushOutcome {
+    /// The token was buffered (possibly after displacing an older one
+    /// under `DropOldest`, or after blocking under `Block`).
+    Ok,
+    /// The token was discarded: the stream is closed, the consumer is
+    /// gone, or a `Block` wait was cut short by cancellation.
+    Dropped,
+    /// `Fail` policy: the buffer was full. The stream is now closed; the
+    /// caller must shed the request.
+    Overflow,
+}
+
+struct StreamState {
+    buf: VecDeque<StreamedToken>,
+    capacity: Option<usize>,
+    policy: BackpressurePolicy,
+    /// No more tokens will arrive (request resolved, or `Fail` tripped).
+    closed: bool,
+    /// The consumer's handle was dropped; discard everything.
+    consumer_gone: bool,
+    /// Tokens discarded (DropOldest displacement, consumer gone, or a
+    /// cancelled Block wait).
+    dropped: usize,
+    /// Largest buffer depth ever observed (the bounded-stream proof).
+    high_water: usize,
+}
+
+/// The shared stream: producers (`serve` workers) push through
+/// [`TokenStream::push`]; the consumer (`RequestHandle`) drains through
+/// `recv`/`try_recv`.
+pub(crate) struct TokenStream {
+    state: Mutex<StreamState>,
+    cond: Condvar,
+}
+
+impl TokenStream {
+    /// A stream with the given capacity (`None` = unbounded) and overflow
+    /// policy. A bounded capacity is clamped to ≥ 1 (validation rejects 0
+    /// earlier, defensively again here).
+    pub fn new(capacity: Option<usize>, policy: BackpressurePolicy) -> Self {
+        TokenStream {
+            state: Mutex::new(StreamState {
+                buf: VecDeque::new(),
+                capacity: capacity.map(|c| c.max(1)),
+                policy,
+                closed: false,
+                consumer_gone: false,
+                dropped: 0,
+                high_water: 0,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Producer side: buffer one token, honouring the stream's bound.
+    /// `cancelled` is the request's cancel flag — a `Block` wait polls it
+    /// so cancellation (or a shed) always releases a blocked producer.
+    pub fn push(&self, cancelled: &AtomicBool, t: StreamedToken) -> PushOutcome {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.consumer_gone || st.closed {
+                st.dropped += 1;
+                return PushOutcome::Dropped;
+            }
+            let Some(cap) = st.capacity else { break };
+            if st.buf.len() < cap {
+                break;
+            }
+            match st.policy {
+                BackpressurePolicy::DropOldest => {
+                    st.buf.pop_front();
+                    st.dropped += 1;
+                    break;
+                }
+                BackpressurePolicy::Fail => {
+                    st.closed = true;
+                    self.cond.notify_all();
+                    return PushOutcome::Overflow;
+                }
+                BackpressurePolicy::Block => {
+                    if cancelled.load(Ordering::Relaxed) {
+                        st.dropped += 1;
+                        return PushOutcome::Dropped;
+                    }
+                    // Timed wait: the cancel flag has no waker of its own,
+                    // so poll it rather than risk parking forever.
+                    let (guard, _) =
+                        self.cond.wait_timeout(st, Duration::from_millis(5)).unwrap();
+                    st = guard;
+                }
+            }
+        }
+        st.buf.push_back(t);
+        st.high_water = st.high_water.max(st.buf.len());
+        self.cond.notify_all();
+        PushOutcome::Ok
+    }
+
+    /// Consumer side: the next token, blocking until one arrives or the
+    /// stream closes (`None` = closed and drained).
+    pub fn recv(&self) -> Option<StreamedToken> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(t) = st.buf.pop_front() {
+                self.cond.notify_all(); // a Block producer may be waiting
+                return Some(t);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Consumer side, non-blocking: `None` means nothing buffered *right
+    /// now* (the stream may still be live).
+    pub fn try_recv(&self) -> Option<StreamedToken> {
+        let mut st = self.state.lock().unwrap();
+        let t = st.buf.pop_front();
+        if t.is_some() {
+            self.cond.notify_all();
+        }
+        t
+    }
+
+    /// No more tokens will arrive; buffered ones remain drainable.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// The consumer's handle was dropped: discard the buffer and every
+    /// future push (unblocking any waiting producer).
+    pub fn consumer_gone(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.consumer_gone = true;
+        st.dropped += st.buf.len();
+        st.buf.clear();
+        self.cond.notify_all();
+    }
+
+    /// Tokens buffered right now.
+    pub fn buffered(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
+
+    /// Tokens discarded so far (DropOldest displacement, consumer gone,
+    /// cancelled Block waits).
+    pub fn dropped_count(&self) -> usize {
+        self.state.lock().unwrap().dropped
+    }
+
+    /// The largest buffer depth the stream ever reached — never exceeds a
+    /// configured capacity, which is what the bounded-stream tests assert.
+    pub fn high_water(&self) -> usize {
+        self.state.lock().unwrap().high_water
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn tok(i: usize) -> StreamedToken {
+        StreamedToken { index: i, token: i as i32, at: i as f64 * 0.01 }
+    }
+
+    fn flag() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+
+    #[test]
+    fn unbounded_stream_passes_everything_through() {
+        let s = TokenStream::new(None, BackpressurePolicy::Block);
+        let c = flag();
+        for i in 0..100 {
+            assert_eq!(s.push(&c, tok(i)), PushOutcome::Ok);
+        }
+        for i in 0..100 {
+            assert_eq!(s.recv().unwrap().index, i);
+        }
+        s.close();
+        assert_eq!(s.recv(), None);
+        assert_eq!(s.dropped_count(), 0);
+    }
+
+    #[test]
+    fn drop_oldest_holds_memory_flat_over_10k_tokens() {
+        // The satellite bar: a stalled consumer sees flat memory across
+        // 10_000 pushed tokens — the buffer never exceeds its bound and
+        // always holds the most recent tokens.
+        const CAP: usize = 8;
+        let s = TokenStream::new(Some(CAP), BackpressurePolicy::DropOldest);
+        let c = flag();
+        for i in 0..10_000 {
+            assert_eq!(s.push(&c, tok(i)), PushOutcome::Ok);
+            assert!(s.buffered() <= CAP, "buffer grew past its bound at {i}");
+        }
+        assert_eq!(s.high_water(), CAP);
+        assert_eq!(s.dropped_count(), 10_000 - CAP);
+        // The stalled consumer wakes up to exactly the newest CAP tokens.
+        let drained: Vec<usize> = std::iter::from_fn(|| s.try_recv()).map(|t| t.index).collect();
+        assert_eq!(drained, (10_000 - CAP..10_000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fail_policy_overflows_and_closes() {
+        let s = TokenStream::new(Some(2), BackpressurePolicy::Fail);
+        let c = flag();
+        assert_eq!(s.push(&c, tok(0)), PushOutcome::Ok);
+        assert_eq!(s.push(&c, tok(1)), PushOutcome::Ok);
+        assert_eq!(s.push(&c, tok(2)), PushOutcome::Overflow);
+        // Closed: later pushes are dropped, buffered tokens still drain.
+        assert_eq!(s.push(&c, tok(3)), PushOutcome::Dropped);
+        assert_eq!(s.recv().unwrap().index, 0);
+        assert_eq!(s.recv().unwrap().index, 1);
+        assert_eq!(s.recv(), None);
+    }
+
+    #[test]
+    fn block_policy_waits_for_the_consumer() {
+        let s = Arc::new(TokenStream::new(Some(2), BackpressurePolicy::Block));
+        let c = Arc::new(flag());
+        let producer = {
+            let s = Arc::clone(&s);
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                for i in 0..50 {
+                    assert_eq!(s.push(&c, tok(i)), PushOutcome::Ok);
+                }
+                s.close();
+            })
+        };
+        // A deliberately slow consumer: the producer must pace itself.
+        let mut seen = Vec::new();
+        while let Some(t) = s.recv() {
+            seen.push(t.index);
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, (0..50).collect::<Vec<_>>(), "nothing lost, in order");
+        assert!(s.high_water() <= 2, "buffer bounded: {}", s.high_water());
+        assert_eq!(s.dropped_count(), 0);
+    }
+
+    #[test]
+    fn block_policy_unblocks_on_cancel() {
+        let s = Arc::new(TokenStream::new(Some(1), BackpressurePolicy::Block));
+        let c = Arc::new(flag());
+        assert_eq!(s.push(&c, tok(0)), PushOutcome::Ok);
+        let producer = {
+            let s = Arc::clone(&s);
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || s.push(&c, tok(1)))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        c.store(true, Ordering::Relaxed);
+        assert_eq!(producer.join().unwrap(), PushOutcome::Dropped);
+    }
+
+    #[test]
+    fn consumer_gone_discards_and_unblocks() {
+        let s = Arc::new(TokenStream::new(Some(1), BackpressurePolicy::Block));
+        let c = Arc::new(flag());
+        assert_eq!(s.push(&c, tok(0)), PushOutcome::Ok);
+        let producer = {
+            let s = Arc::clone(&s);
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || s.push(&c, tok(1)))
+        };
+        std::thread::sleep(Duration::from_millis(5));
+        s.consumer_gone();
+        assert_eq!(producer.join().unwrap(), PushOutcome::Dropped);
+        assert_eq!(s.buffered(), 0);
+        assert_eq!(s.dropped_count(), 2, "buffered + blocked token both dropped");
+    }
+}

@@ -202,6 +202,12 @@ impl ReceiveManager {
     pub fn free_backends(&self) -> usize {
         self.backends.iter().filter(|b| b.is_none()).count()
     }
+
+    /// Requests currently admitted to the service order (shards streaming
+    /// or queued) — receive-side pressure for load snapshots.
+    pub fn in_service(&self) -> usize {
+        self.admitted.len()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,554 @@
+//! Integration: the load-aware admission & QoS control plane —
+//! QoS-classed submissions, load snapshots at the edge, shed semantics
+//! (resource release, events), bounded backpressured token streams, TTFT
+//! deadlines, and the QoS parked queue's ordering/starvation properties.
+//!
+//! Everything runs on the deterministic stub engine. The acceptance
+//! criteria proven here:
+//!
+//! (a) under synthetic overload, `Interactive` TTFT p99 improves with the
+//!     default QoS admission vs. a no-admission baseline run in the same
+//!     test;
+//! (b) `Shed` resolutions release every held resource (zero leaked
+//!     blocks/backends after churn);
+//! (c) bounded streams never exceed their configured buffer.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tetris::api::{
+    AdmitAll, BackpressurePolicy, Completion, ParkedQueue, QosAdmission, QosClass,
+    ScanOutcome, SubmitOptions, Tetris, TetrisBuilder, TraceRecorder,
+};
+use tetris::config::ClusterConfig;
+use tetris::latency::prefill::{PrefillModel, SpCoeffs};
+use tetris::runtime::Engine;
+use tetris::serve::{Server, ServeRequest};
+use tetris::sim::SimParams;
+use tetris::util::proptest::{check_default, Gen};
+use tetris::{prop_assert, prop_fail};
+
+/// A scheduler model with A100-like SP shape so multi-chunk CDSP paths get
+/// exercised even on the CPU substrate (DESIGN.md §3).
+fn sched_model(n: usize) -> PrefillModel {
+    let mut m = PrefillModel::new();
+    let mut sp = 1;
+    while sp <= n {
+        m.insert(
+            sp,
+            SpCoeffs {
+                a: 0.002 * sp as f64,
+                b: 1.0e-4 / sp as f64,
+                c: 2.0e-7 / sp as f64,
+                d: 1.0e-7 / sp as f64,
+            },
+        );
+        sp *= 2;
+    }
+    m
+}
+
+fn builder(n_prefill: usize, n_decode: usize) -> TetrisBuilder {
+    let sp: Vec<usize> = [1usize, 2, 4].into_iter().filter(|&s| s <= n_prefill).collect();
+    Tetris::builder()
+        .cluster(ClusterConfig::tiny(n_prefill, n_decode))
+        .n_decode_workers(n_decode)
+        .sp_candidates(sp)
+        .min_chunk(32)
+        .prefill_model(sched_model(n_prefill))
+}
+
+fn req(id: u64, len: usize, out: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: (0..len).map(|i| ((i * 7 + id as usize) % 512) as i32).collect(),
+        output_len: out,
+    }
+}
+
+fn wait_until(mut pred: impl FnMut() -> bool, what: &str) {
+    let t0 = Instant::now();
+    while !pred() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// The zero-leak bar every shed/cancel path must meet: router accounting
+/// back to pristine, all KV blocks free, all transfer backends free,
+/// nothing parked.
+fn assert_no_leaks(server: &Server, blocks_per_instance: usize, backends: usize) {
+    let router = server.router_state();
+    assert_eq!(router.in_flight_transfers(), 0, "leaked in-flight transfer");
+    assert_eq!(
+        router.available_blocks(),
+        router.total_blocks(),
+        "aggregate router accounting must return to pristine"
+    );
+    for (i, inst) in router.instances.iter().enumerate() {
+        assert_eq!(inst.virtual_blocks, 0, "instance {i} leaked virtual blocks");
+        assert_eq!(inst.active_batch, 0, "instance {i} leaked batch slots");
+        assert_eq!(
+            inst.blocks.free_blocks(),
+            blocks_per_instance,
+            "instance {i} leaked KV blocks"
+        );
+        assert_eq!(
+            server.free_transfer_backends(i),
+            backends,
+            "instance {i} leaked transfer backends"
+        );
+    }
+    assert_eq!(server.n_parked(), 0, "requests left parked");
+}
+
+/// Overload workload shared by the (a)/(b) acceptance runs, sized so the
+/// QoS-vs-baseline gap is structural, not a timing accident: the decode
+/// pool holds 80 blocks; each big request needs 39 (240 + 380 = 620
+/// tokens), so exactly two fit with 2 blocks spare — too few for even one
+/// small request (3 blocks), which means *every* small request parks in
+/// both runs and only the parked-queue order + shedding decide who runs
+/// when capacity trickles back. Baseline (FIFO, nothing shed): each big
+/// finish re-admits the next big request, so the small ones drain only
+/// after the whole 8-request bulk. QoS: the bulk is `BestEffort` and shed
+/// once two residents push occupancy to 97.5%, and parked `Interactive`
+/// re-admits first — their TTFT collapses to ~one resident drain.
+fn overload_shapes() -> (Vec<ServeRequest>, Vec<ServeRequest>) {
+    let big: Vec<ServeRequest> = (0..8).map(|i| req(i, 240, 380)).collect(); // 39 blocks each
+    let small: Vec<ServeRequest> = (100..106).map(|i| req(i, 40, 3)).collect(); // 3 blocks each
+    (big, small)
+}
+
+/// Run the overload workload; `qos` selects per-class options + the
+/// default QoS admission vs. default options + `AdmitAll`. Returns
+/// (interactive TTFTs, shed count).
+fn run_overload(qos: bool, rec: Arc<TraceRecorder>) -> (Vec<f64>, usize) {
+    let base = builder(2, 1).sim_params(SimParams {
+        backends_per_decode: 2,
+        decode_capacity_tokens: 80 * 16,
+        block_tokens: 16,
+    });
+    let base = if qos {
+        base.admission(|| Box::new(QosAdmission::default()))
+    } else {
+        base.admission(|| Box::new(AdmitAll))
+    };
+    let server = base
+        .observe(rec)
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let client = server.client();
+    let (big, small) = overload_shapes();
+    let mut big_handles = Vec::new();
+    for r in &big {
+        let opts = if qos { SubmitOptions::best_effort() } else { SubmitOptions::default() };
+        big_handles.push(client.submit_with(r, opts).expect("submitted"));
+    }
+    let mut small_handles = Vec::new();
+    for r in &small {
+        small_handles.push(client.submit(r).expect("submitted"));
+    }
+    let mut sheds = 0usize;
+    for h in &mut big_handles {
+        match h.wait() {
+            Completion::Finished(_) => {}
+            Completion::Shed(_) => sheds += 1,
+            other => panic!("big request {}: unexpected outcome {other:?}", h.id()),
+        }
+    }
+    let mut ttfts = Vec::new();
+    for h in &mut small_handles {
+        match h.wait() {
+            Completion::Finished(m) => ttfts.push(m.ttft()),
+            other => panic!("interactive request {}: unexpected outcome {other:?}", h.id()),
+        }
+    }
+    assert_no_leaks(&server, 80, 2);
+    server.shutdown().unwrap();
+    (ttfts, sheds)
+}
+
+fn p99(samples: &[f64]) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[((s.len() as f64 * 0.99).ceil() as usize).min(s.len()) - 1]
+}
+
+#[test]
+fn interactive_ttft_improves_under_overload_vs_no_admission_baseline() {
+    // Acceptance (a) + (b). Baseline: the pre-QoS behaviour — everything
+    // admitted, the small requests queue behind the whole big backlog in
+    // FIFO order as capacity trickles back. QoS: BestEffort bulk is shed
+    // once the pool runs hot and parked Interactive requests re-admit
+    // first, so their TTFT collapses to ~one resident-batch drain.
+    let base_rec = Arc::new(TraceRecorder::new());
+    let (base_ttfts, base_sheds) = run_overload(false, base_rec.clone());
+    assert_eq!(base_sheds, 0, "AdmitAll must never shed");
+    assert_eq!(base_rec.count("shed"), 0);
+
+    let qos_rec = Arc::new(TraceRecorder::new());
+    let (qos_ttfts, qos_sheds) = run_overload(true, qos_rec.clone());
+    assert!(qos_sheds >= 1, "QoS admission must shed some BestEffort bulk");
+    assert_eq!(
+        qos_rec.count("shed"),
+        qos_sheds,
+        "one on_shed event per Shed resolution"
+    );
+
+    assert_eq!(base_ttfts.len(), 6);
+    assert_eq!(qos_ttfts.len(), 6);
+    let (bp99, qp99) = (p99(&base_ttfts), p99(&qos_ttfts));
+    assert!(
+        qp99 < bp99,
+        "Interactive TTFT p99 must improve under QoS admission: \
+         qos {qp99:.4}s vs baseline {bp99:.4}s"
+    );
+}
+
+#[test]
+fn sheds_release_every_resource_under_mixed_churn() {
+    // Acceptance (b) at scale: a mixed-class churn with tight capacity —
+    // sheds, parks, cancels, and completions interleaved — must leave the
+    // router, block pools, and transfer backends pristine, with every
+    // handle resolved and shed events matching shed resolutions 1:1.
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(2, 2)
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 50 * 16,
+            block_tokens: 16,
+        })
+        .starvation_bound(4) // exercise the builder knob under churn
+        .observe(rec.clone())
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let client = server.client();
+    let mut handles = Vec::new();
+    for i in 0..60u64 {
+        let (shape, opts) = match i % 4 {
+            0 => (req(i, 300, 40), SubmitOptions::best_effort()),
+            1 => (req(i, 40, 4), SubmitOptions::interactive()),
+            2 => (req(i, 120, 8), SubmitOptions::batch()),
+            _ => (req(i, 60, 6), SubmitOptions::interactive().deadline(5.0)),
+        };
+        let h = client.submit_with(&shape, opts).expect("submitted");
+        if i % 7 == 0 {
+            h.cancel();
+        }
+        handles.push(h);
+    }
+    let mut finished = 0usize;
+    let mut shed = 0usize;
+    let mut cancelled = 0usize;
+    for h in &mut handles {
+        match h.wait() {
+            Completion::Finished(_) => finished += 1,
+            Completion::Shed(reason) => {
+                assert!(!reason.is_empty());
+                shed += 1;
+            }
+            Completion::Cancelled(_) => cancelled += 1,
+            Completion::Dropped(msg) => panic!("dropped: {msg}"),
+        }
+    }
+    assert_eq!(finished + shed + cancelled, 60, "every handle resolves");
+    assert!(finished > 0, "uncontended requests must finish");
+    assert_eq!(rec.count("shed"), shed, "shed events match Shed resolutions");
+    assert_eq!(rec.count("cancel"), cancelled, "cancel events match resolutions");
+    assert_no_leaks(&server, 50, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn drop_oldest_stream_never_exceeds_its_bound_under_a_stalled_consumer() {
+    // Acceptance (c) + the satellite memory-flatness bar on the live
+    // path: a stalled consumer over a long decode holds the buffer at its
+    // bound; the stream keeps only the newest tokens. (The 10k-token
+    // memory-flatness sweep runs in the stream unit tests.)
+    const CAP: usize = 8;
+    let server = builder(2, 1)
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let mut h = server
+        .submit_async_with(
+            &req(0, 30, 600),
+            SubmitOptions::interactive().bounded(CAP, BackpressurePolicy::DropOldest),
+        )
+        .expect("submitted");
+    // Stall: never read a token until the request fully resolves.
+    match h.wait() {
+        Completion::Finished(m) => assert_eq!(m.output_len, 600),
+        other => panic!("expected Finished, got {other:?}"),
+    }
+    assert!(
+        h.max_buffered_tokens() <= CAP,
+        "buffer peaked at {} > bound {CAP}",
+        h.max_buffered_tokens()
+    );
+    assert!(h.buffered_tokens() <= CAP);
+    assert_eq!(h.dropped_tokens(), 600 - CAP, "overflowed tokens are dropped, oldest first");
+    let drained: Vec<usize> = std::iter::from_fn(|| h.try_next_token()).map(|t| t.index).collect();
+    assert_eq!(drained.len(), CAP);
+    assert_eq!(*drained.last().unwrap(), 599, "newest tokens survive");
+    assert!(drained.windows(2).all(|w| w[0] < w[1]), "in order: {drained:?}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn block_stream_paces_the_producer_without_losing_tokens() {
+    let server = builder(2, 1)
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let mut h = server
+        .submit_async_with(
+            &req(0, 40, 25),
+            SubmitOptions::interactive().bounded(2, BackpressurePolicy::Block),
+        )
+        .expect("submitted");
+    // A deliberately slow consumer: the decode worker must pace itself.
+    let mut indices = Vec::new();
+    while let Some(t) = h.next_token() {
+        indices.push(t.index);
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    assert_eq!(indices, (0..25).collect::<Vec<_>>(), "nothing lost, in order");
+    assert!(h.max_buffered_tokens() <= 2, "bound held: {}", h.max_buffered_tokens());
+    assert_eq!(h.dropped_tokens(), 0);
+    assert!(h.wait().is_finished());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn fail_stream_overflow_sheds_the_request_and_releases_everything() {
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(2, 1)
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 16_000,
+            block_tokens: 16,
+        })
+        .observe(rec.clone())
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let mut h = server
+        .submit_async_with(
+            &req(0, 30, 200),
+            SubmitOptions::interactive().bounded(4, BackpressurePolicy::Fail),
+        )
+        .expect("submitted");
+    // Stalled consumer: the 5th token overflows the 4-slot buffer.
+    match h.wait() {
+        Completion::Shed(reason) => {
+            assert!(reason.contains("overflow"), "{reason}");
+        }
+        other => panic!("expected Shed, got {other:?}"),
+    }
+    wait_until(|| server.router_state().instances[0].active_batch == 0, "decode teardown");
+    assert_eq!(rec.count("shed"), 1, "exactly one terminal event");
+    assert_eq!(rec.count("cancel"), 0, "the losing cancel resolution stays silent");
+    assert_no_leaks(&server, 1000, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn parked_request_sheds_once_its_deadline_elapses() {
+    // A capacity-pinned server: A holds 38/40 blocks and is pinned
+    // resident by a Block-policy stream nobody reads (its decode worker
+    // waits on the full 1-token buffer), so capacity cannot free early
+    // however fast the machine is. B parks behind A with a 20ms TTFT
+    // deadline; when A is cancelled 40ms later, the re-admission pass
+    // must shed B — deadline elapsed — not run it late.
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(2, 1)
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 640,
+            block_tokens: 16,
+        })
+        .observe(rec.clone())
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let a = server
+        .submit_async_with(
+            &req(0, 200, 400),
+            SubmitOptions::interactive().bounded(1, BackpressurePolicy::Block),
+        )
+        .expect("A submitted");
+    let mut b = server
+        .submit_async_with(
+            &req(1, 34, 8),
+            SubmitOptions::interactive().deadline(0.020),
+        )
+        .expect("B submitted");
+    wait_until(|| server.n_parked() == 1, "B to park");
+    std::thread::sleep(Duration::from_millis(40)); // deadline elapses parked
+    a.cancel(); // unblocks A's producer, frees capacity → re-admission runs
+    match b.wait() {
+        Completion::Shed(reason) => assert!(reason.contains("deadline"), "{reason}"),
+        other => panic!("expected Shed(deadline), got {other:?}"),
+    }
+    let mut a = a;
+    assert!(matches!(a.wait(), Completion::Cancelled(_)));
+    assert_no_leaks(&server, 40, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn load_snapshots_track_occupancy_parking_and_recovery() {
+    let server = builder(2, 1)
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 640,
+            block_tokens: 16,
+        })
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let client = server.client();
+    let idle = client.load();
+    assert_eq!(idle.total_blocks(), 40);
+    assert_eq!(idle.available_blocks(), 40);
+    assert_eq!(idle.kv_occupancy(), 0.0);
+    assert_eq!(idle.parked, 0);
+    assert_eq!(idle.prefill_busy.len(), 2);
+    assert_eq!(idle.decode_lane_busy.len(), 1);
+    assert_eq!(idle.free_backends, vec![2]);
+    assert_eq!(idle.transfers_in_service, vec![0]);
+
+    // A takes 38/40 blocks the moment it routes, and stays resident — its
+    // Block-policy stream is never read, so its decode worker waits on the
+    // full buffer. B parks behind it; the hot snapshot is stable.
+    let mut a = server
+        .submit_async_with(
+            &req(0, 200, 400),
+            SubmitOptions::interactive().bounded(1, BackpressurePolicy::Block),
+        )
+        .expect("A");
+    let mut b = server.submit_async(&req(1, 34, 8)).expect("B");
+    wait_until(|| server.n_parked() == 1, "B to park");
+    let hot = server.load();
+    assert_eq!(hot.parked, 1);
+    assert!(hot.kv_occupancy() > 0.9, "38/40 blocks held: {}", hot.kv_occupancy());
+    assert!(hot.arrival_rate >= 0.0);
+    assert!(hot.at > idle.at, "snapshots are timestamped");
+
+    a.cancel();
+    assert!(matches!(a.wait(), Completion::Cancelled(_)));
+    assert!(b.wait().is_finished(), "B admitted after capacity freed");
+    wait_until(|| server.load().kv_occupancy() == 0.0, "occupancy recovery");
+    assert_no_leaks(&server, 40, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn submissions_validate_against_live_limits_and_options() {
+    let server = builder(2, 1)
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 256,
+            block_tokens: 16,
+        })
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let client = server.client();
+    // Block-geometry limits are read from the live router at submit time.
+    let err = client.submit(&req(9, 400, 8)).err().expect("must reject");
+    assert!(err.to_string().contains("KV blocks"), "{err}");
+    // Option validation: degenerate bounds fail fast, on the caller.
+    let err = client
+        .submit_with(&req(1, 40, 4), SubmitOptions::default().bounded(0, BackpressurePolicy::Block))
+        .err()
+        .expect("zero-capacity stream rejected");
+    assert!(err.to_string().contains("stream_capacity"), "{err}");
+    let err = client
+        .submit_with(&req(2, 40, 4), SubmitOptions::default().deadline(-1.0))
+        .err()
+        .expect("negative deadline rejected");
+    assert!(err.to_string().contains("ttft_deadline"), "{err}");
+    // A valid one still sails through.
+    let mut ok = client.submit(&req(3, 40, 2)).expect("valid request");
+    assert!(ok.wait().is_finished());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn prop_parked_queue_readmission_is_arrival_ordered_within_class() {
+    // Satellite property: however capacities and classes interleave,
+    // items taken from the parked queue are in arrival order *within*
+    // each QoS class.
+    check_default("parked-queue-class-fifo", |g: &mut Gen| {
+        let bound = g.usize_in(0, 5);
+        let mut q: ParkedQueue<(usize, u64)> = ParkedQueue::new(bound);
+        let mut next_id: u64 = 0;
+        let mut taken_per_class: [Vec<u64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let mut pushed_per_class: [Vec<u64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for _round in 0..g.usize_in(1, 12) {
+            for _ in 0..g.usize_in(0, 4) {
+                let lane = g.usize_in(0, 2);
+                q.push(QosClass::ALL[lane], (lane, next_id));
+                pushed_per_class[lane].push(next_id);
+                next_id += 1;
+            }
+            let mut capacity = g.usize_in(0, 3);
+            let removed = q.scan(|_, _| {
+                if capacity > 0 {
+                    capacity -= 1;
+                    ScanOutcome::Remove
+                } else {
+                    ScanOutcome::Keep
+                }
+            });
+            for (lane, id) in removed {
+                taken_per_class[lane].push(id);
+            }
+        }
+        for lane in 0..3 {
+            let t = &taken_per_class[lane];
+            prop_assert!(
+                t.windows(2).all(|w| w[0] < w[1]),
+                "class {lane} taken out of arrival order: {t:?}"
+            );
+            // And takes are a prefix-respecting subsequence of pushes.
+            let pushed = &pushed_per_class[lane];
+            let mut pi = 0usize;
+            for id in t {
+                while pi < pushed.len() && pushed[pi] != *id {
+                    pi += 1;
+                }
+                prop_assert!(pi < pushed.len(), "class {lane} took unknown id {id}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parked_queue_never_starves_best_effort_beyond_bound() {
+    // Satellite property: with capacity ≥ 1 per pass and relentless
+    // higher-class competition, a BestEffort entry is served within
+    // starvation_bound + 1 passes.
+    check_default("parked-queue-starvation-bound", |g: &mut Gen| {
+        let bound = g.usize_in(0, 6);
+        let mut q: ParkedQueue<&'static str> = ParkedQueue::new(bound);
+        q.push(QosClass::BestEffort, "be");
+        for pass in 1..=bound + 1 {
+            // Fresh competition every pass, sometimes from both classes.
+            q.push(QosClass::Interactive, "ia");
+            if g.bool() {
+                q.push(QosClass::Batch, "ba");
+            }
+            let mut taken = None;
+            q.scan(|_, &item| {
+                if taken.is_none() {
+                    taken = Some(item);
+                    ScanOutcome::Remove
+                } else {
+                    ScanOutcome::Keep
+                }
+            });
+            if taken == Some("be") {
+                return Ok(());
+            }
+            prop_assert!(pass <= bound, "BestEffort bypassed {pass} times, bound {bound}");
+        }
+        prop_fail!("BestEffort not served within bound + 1 = {} passes", bound + 1)
+    });
+}

@@ -319,6 +319,9 @@ fn cancel_churn_100_requests_leaks_nothing() {
         match h.wait() {
             Completion::Finished(_) => finished += 1,
             Completion::Cancelled(_) => cancelled += 1,
+            // Default-option submissions are Interactive: the default
+            // admission policy never sheds them.
+            Completion::Shed(msg) => panic!("request shed: {msg}"),
             Completion::Dropped(msg) => panic!("request dropped: {msg}"),
         }
     }

@@ -118,10 +118,16 @@ pub enum BackpressurePolicy {
 pub struct SubmitOptions {
     /// The request's QoS class (default: [`QosClass::Interactive`]).
     pub qos: QosClass,
-    /// Optional TTFT deadline in seconds from submission. The admission
-    /// layer sheds the request — at submission or while parked — once the
-    /// deadline has elapsed or is provably unmeetable; it is *not* an
-    /// execution timeout for already-dispatched work.
+    /// Optional TTFT deadline in seconds from submission, enforced twice:
+    /// the admission layer sheds the request — at submission or while
+    /// parked — once the deadline has elapsed or is provably unmeetable,
+    /// and the dispatcher's deadline monitor interrupts *already-running*
+    /// work (queued chunks, mid-chunk prefill, pending handoff) the moment
+    /// the request's TTFT lower bound provably exceeds the deadline,
+    /// resolving the handle as a
+    /// [`DEADLINE_BLOWN`](crate::metrics::DEADLINE_BLOWN) shed. Once the
+    /// first token exists the deadline is settled; generation is never cut
+    /// short retroactively.
     pub ttft_deadline: Option<f64>,
     /// Token-stream buffer bound (`None` = unbounded, the legacy
     /// behaviour). Must be ≥ 1 when set.
@@ -206,6 +212,14 @@ impl DecodeLoad {
 pub struct LoadSnapshot {
     /// Snapshot time, seconds since the server epoch.
     pub at: f64,
+    /// When the lock-derived parts (router occupancy, lane clocks, backend
+    /// counts, arrival rate) were assembled, seconds since the server
+    /// epoch. The live server caches assembled snapshots and serves
+    /// `load()` from the cache within a staleness bound (see
+    /// [`crate::serve::LOAD_SNAPSHOT_STALENESS`]), so `assembled_at` may
+    /// trail `at` by up to that bound; `at` and `parked` are always
+    /// stamped live.
+    pub assembled_at: f64,
     /// Tokens per KV block (the router's admission granularity).
     pub block_tokens: usize,
     /// Per-decode-instance slot and KV-block occupancy.
@@ -652,6 +666,7 @@ mod tests {
         let used = total - available;
         LoadSnapshot {
             at: 0.0,
+            assembled_at: 0.0,
             block_tokens: 16,
             decode: vec![DecodeLoad {
                 total_blocks: total,
@@ -692,6 +707,7 @@ mod tests {
         assert!(s.summary().contains("75%"), "{}", s.summary());
         let empty = LoadSnapshot {
             at: 0.0,
+            assembled_at: 0.0,
             block_tokens: 16,
             decode: vec![],
             prefill_busy: vec![],

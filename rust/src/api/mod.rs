@@ -200,6 +200,7 @@ pub struct TetrisBuilder {
     n_decode_workers: usize,
     admission: AdmissionFactory,
     starvation_bound: usize,
+    deadline_safety: f64,
 }
 
 impl TetrisBuilder {
@@ -220,6 +221,7 @@ impl TetrisBuilder {
                 Box::new(admission::QosAdmission::default())
             }),
             starvation_bound: crate::serve::DEFAULT_STARVATION_BOUND,
+            deadline_safety: crate::latency::DEFAULT_DEADLINE_SAFETY,
         }
     }
 
@@ -306,6 +308,20 @@ impl TetrisBuilder {
     /// only — the simulator has no QoS lanes.
     pub fn starvation_bound(mut self, scans: usize) -> Self {
         self.starvation_bound = scans;
+        self
+    }
+
+    /// Safety factor in `(0, 1]` on the *estimated* terms of the deadline
+    /// monitor's TTFT lower bound (default
+    /// [`crate::latency::DEFAULT_DEADLINE_SAFETY`]): the live server
+    /// interrupts in-flight work — mid-chunk prefills included — only once
+    /// a request's TTFT lower bound exceeds its deadline, and this factor
+    /// controls how much the bound trusts the calibrated queue-clock
+    /// estimates. Lower values interrupt later but never shed a meetable
+    /// request on a noisy calibration; the elapsed-wait term is exact and
+    /// unaffected. Live server only.
+    pub fn deadline_safety(mut self, safety: f64) -> Self {
+        self.deadline_safety = safety;
         self
     }
 
@@ -546,6 +562,7 @@ impl TetrisBuilder {
             self.controller.clone(),
             (self.admission)(),
             self.starvation_bound,
+            self.deadline_safety,
             self.observers.clone(),
         )
     }

@@ -71,15 +71,29 @@ pub trait Observer: Send + Sync {
         let _ = (req, stage, now);
     }
 
-    /// Request `req` was shed by the admission layer at `now` — refused by
-    /// QoS policy at submission or while parked, its TTFT deadline elapsed
-    /// or became unmeetable, or its bounded token stream overflowed under
-    /// the `Fail` backpressure policy. Emitted only by the live server. An
-    /// admission-time shed holds no resources when this fires; a
-    /// stream-overflow shed of a running request releases its KV blocks
-    /// and batch slot through the cancellation ladder at the next stage
-    /// boundary, moments after this event.
+    /// Request `req` was shed at `now` — refused by QoS policy at
+    /// submission or while parked, its TTFT deadline elapsed or became
+    /// unmeetable, interrupted mid-execution by the deadline monitor (an
+    /// `on_interrupt` for the same request immediately precedes this), or
+    /// its bounded token stream overflowed under the `Fail` backpressure
+    /// policy. Emitted only by the live server. An admission-time shed
+    /// holds no resources when this fires; an execution-time shed of a
+    /// running request releases everything it holds through the
+    /// cancellation ladder at the next stage boundary (mid-chunk prefills
+    /// abort within one engine step), moments after this event.
     fn on_shed(&self, req: u64, reason: &str, now: f64) {
+        let _ = (req, reason, now);
+    }
+
+    /// The execution-time deadline monitor fired a cooperative interrupt
+    /// for request `req` at `now`: its TTFT lower bound exceeded its
+    /// deadline, so work already dispatched (queued chunks, a mid-chunk
+    /// prefill, a resident decode) is being torn down. The terminal
+    /// `on_shed` for the same request follows immediately; every resource
+    /// the request holds is released through the cancellation ladder at
+    /// the next stage boundary (mid-chunk prefills abort within one engine
+    /// step on the stub backend). Emitted only by the live server.
+    fn on_interrupt(&self, req: u64, reason: &str, now: f64) {
         let _ = (req, reason, now);
     }
 }
@@ -155,6 +169,16 @@ pub enum TraceEvent {
         /// Timestamp (seconds from run start).
         at: f64,
     },
+    /// The deadline monitor interrupted the request's in-flight execution
+    /// (live server only; the terminal `Shed` follows).
+    Interrupt {
+        /// Request id.
+        req: u64,
+        /// Operator-facing interrupt reason (the blown-bound arithmetic).
+        reason: String,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
 }
 
 impl TraceEvent {
@@ -168,7 +192,8 @@ impl TraceEvent {
             | TraceEvent::Transfer { at, .. }
             | TraceEvent::Token { at, .. }
             | TraceEvent::Cancel { at, .. }
-            | TraceEvent::Shed { at, .. } => *at,
+            | TraceEvent::Shed { at, .. }
+            | TraceEvent::Interrupt { at, .. } => *at,
         }
     }
 
@@ -184,6 +209,7 @@ impl TraceEvent {
             TraceEvent::Token { .. } => "token",
             TraceEvent::Cancel { .. } => "cancel",
             TraceEvent::Shed { .. } => "shed",
+            TraceEvent::Interrupt { .. } => "interrupt",
         }
     }
 
@@ -197,7 +223,8 @@ impl TraceEvent {
             | TraceEvent::Transfer { req, .. }
             | TraceEvent::Token { req, .. }
             | TraceEvent::Cancel { req, .. }
-            | TraceEvent::Shed { req, .. } => *req,
+            | TraceEvent::Shed { req, .. }
+            | TraceEvent::Interrupt { req, .. } => *req,
         }
     }
 }
@@ -250,7 +277,7 @@ impl TraceRecorder {
                 TraceEvent::Cancel { stage, .. } => {
                     o = o.set("stage", stage.tag());
                 }
-                TraceEvent::Shed { reason, .. } => {
+                TraceEvent::Shed { reason, .. } | TraceEvent::Interrupt { reason, .. } => {
                     o = o.set("reason", reason.as_str());
                 }
                 _ => {}
@@ -374,6 +401,10 @@ impl Observer for TraceRecorder {
     fn on_shed(&self, req: u64, reason: &str, now: f64) {
         self.push(TraceEvent::Shed { req, reason: reason.to_string(), at: now });
     }
+
+    fn on_interrupt(&self, req: u64, reason: &str, now: f64) {
+        self.push(TraceEvent::Interrupt { req, reason: reason.to_string(), at: now });
+    }
 }
 
 #[cfg(test)]
@@ -397,17 +428,20 @@ mod tests {
         rec.on_token(3, 1.8);
         rec.on_cancel(4, CancelStage::Decode, 1.9);
         rec.on_shed(5, "KV occupancy 80% ≥ the 75% best-effort bound", 2.0);
+        rec.on_interrupt(6, "TTFT deadline blown: bound 0.5s > deadline 0.2s", 2.0);
         assert_eq!(rec.count("arrival"), 1);
         assert_eq!(rec.count("plan"), 1);
         assert_eq!(rec.count("decode_assign"), 1);
         assert_eq!(rec.count("token"), 2);
         assert_eq!(rec.count("cancel"), 1);
         assert_eq!(rec.count("shed"), 1);
+        assert_eq!(rec.count("interrupt"), 1);
         assert_eq!(rec.reqs_with("token"), vec![3]);
         assert_eq!(rec.reqs_with("shed"), vec![5]);
+        assert_eq!(rec.reqs_with("interrupt"), vec![6]);
         assert!((rec.event_span() - 1.6).abs() < 1e-12, "0.4 → 2.0");
         let evs = rec.events();
-        assert_eq!(evs.len(), 9);
+        assert_eq!(evs.len(), 10);
         assert_eq!(evs[0], TraceEvent::Arrival { req: 3, at: 0.4 });
         assert_eq!(evs[2], TraceEvent::DecodeAssign { req: 3, instance: 1, at: 0.5 });
         assert_eq!(
@@ -421,6 +455,7 @@ mod tests {
         assert!(json.contains("\"stage\""), "{json}");
         assert!(json.contains("arrival"), "{json}");
         assert!(json.contains("\"reason\""), "{json}");
+        assert!(json.contains("interrupt"), "{json}");
     }
 
     #[test]

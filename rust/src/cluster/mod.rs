@@ -302,6 +302,20 @@ impl DispatchClock {
         finish
     }
 
+    /// Return `secs` of previously committed work on instance `inst` to
+    /// the pool — the planning-state rollback behind engine-level
+    /// interrupts: when an in-flight prefill is cancelled mid-chunk, its
+    /// committed queue-clock estimates would otherwise keep the lane
+    /// looking busy and hide the freed capacity from the scheduler. The
+    /// clock never rewinds past `now` (work already elapsed stays spent)
+    /// and an already-idle lane is left untouched.
+    pub fn credit(&mut self, inst: InstanceId, secs: f64, now: f64) {
+        let f = self.free_at[inst];
+        if f > now {
+            self.free_at[inst] = (f - secs.max(0.0)).max(now);
+        }
+    }
+
     /// Whether `group` spans more than one node (cache balancing crosses
     /// the inter-node links).
     pub fn spans_nodes(&self, group: &[InstanceId]) -> bool {
@@ -388,6 +402,18 @@ impl WorkerRegistry {
     /// prefill side of a load snapshot.
     pub fn prefill_busy(&self, now: f64) -> Vec<f64> {
         self.prefill.free_at().iter().map(|f| (f - now).max(0.0)).collect()
+    }
+
+    /// The earliest any prefill lane frees up, relative to `now` (seconds,
+    /// clamped at 0; 0 on an empty registry) — the live-registry
+    /// counterpart of
+    /// [`LoadSnapshot::min_prefill_busy`](crate::api::LoadSnapshot::min_prefill_busy)
+    /// for callers holding the registry rather than a snapshot.
+    pub fn min_prefill_busy(&self, now: f64) -> f64 {
+        if self.prefill.is_empty() {
+            return 0.0;
+        }
+        self.prefill.free_at().iter().map(|f| (f - now).max(0.0)).fold(f64::INFINITY, f64::min)
     }
 
     /// Per-decode-lane busy horizon relative to `now` (seconds, clamped
@@ -589,6 +615,39 @@ mod tests {
         assert!((reg.decode_lane_busy(0, 0.5) - 1.5).abs() < 1e-12);
         assert_eq!(reg.decode_lane_busy(0, 9.0), 0.0);
         assert_eq!(reg.decode_lane_busy(1, 0.0), 0.0, "untouched lane is idle");
+    }
+
+    #[test]
+    fn credit_returns_interrupted_work_to_the_pool() {
+        let mut c = DispatchClock::grid(2, 2);
+        c.commit(&[0], 0.0, 5.0); // busy until t=5
+        // Interrupt at t=1 frees 3s of committed estimate: busy until 2.
+        c.credit(0, 3.0, 1.0);
+        assert_eq!(c.free_at()[0], 2.0);
+        // Over-crediting floors at `now` — time already elapsed stays spent.
+        c.credit(0, 100.0, 1.5);
+        assert_eq!(c.free_at()[0], 1.5);
+        // An already-idle lane is untouched (never raised to `now`).
+        assert_eq!(c.free_at()[1], 0.0);
+        c.credit(1, 1.0, 4.0);
+        assert_eq!(c.free_at()[1], 0.0);
+        // Negative credit is ignored rather than extending the lane.
+        c.credit(0, -2.0, 1.0);
+        assert_eq!(c.free_at()[0], 1.5);
+    }
+
+    #[test]
+    fn registry_min_prefill_busy_is_the_lane_floor() {
+        let mut reg = WorkerRegistry::single_node(3, 1);
+        assert_eq!(reg.min_prefill_busy(0.0), 0.0, "idle pool floor is zero");
+        reg.prefill_mut().commit(&[0], 0.0, 4.0);
+        reg.prefill_mut().commit(&[1], 0.0, 2.0);
+        // lane 2 still idle → floor 0; once it is busy the floor rises.
+        assert_eq!(reg.min_prefill_busy(0.0), 0.0);
+        reg.prefill_mut().commit(&[2], 0.0, 3.0);
+        assert_eq!(reg.min_prefill_busy(0.0), 2.0);
+        assert_eq!(reg.min_prefill_busy(1.5), 0.5);
+        assert_eq!(reg.min_prefill_busy(10.0), 0.0, "clamped at zero");
     }
 
     #[test]

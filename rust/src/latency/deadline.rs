@@ -1,0 +1,139 @@
+//! TTFT lower-bound estimation for the execution-time deadline control
+//! plane.
+//!
+//! The live server's `DeadlineMonitor` must decide, each tick, whether a
+//! request's TTFT deadline is *provably* blown — only then is it sound to
+//! interrupt work that is already running (Medha-style slack-aware
+//! shedding: never burn compute on a request that cannot meet its SLO,
+//! never shed a request that still could). That calls for a **lower
+//! bound** on the request's eventual TTFT, not a best estimate: firing on
+//! an over-estimate would shed meetable requests.
+//!
+//! [`TtftEstimator`] builds that bound from three conservative parts:
+//!
+//! 1. **elapsed wait** — time already spent since submission. This has
+//!    already happened, so TTFT ≥ waited holds unconditionally; it is the
+//!    term that fires for parked/queued requests whose deadline simply ran
+//!    out.
+//! 2. **lane floor** — the earliest any prefill lane frees
+//!    ([`LoadSnapshot::min_prefill_busy`](crate::api::LoadSnapshot::min_prefill_busy)
+//!    for undispatched requests, 0 for work already on the lanes). Queue
+//!    clocks are estimates, so this term is scaled by the safety factor.
+//! 3. **best-case remaining compute** — the Eq. (1) prediction for the
+//!    request's *remaining* prefill tokens as one chunk, divided by the
+//!    widest possible SP group (perfect parallel speedup), again scaled by
+//!    the safety factor.
+//!
+//! With `safety` ≤ 1 and coefficient sanitization (negative fit
+//! coefficients clamp to 0 so the bound stays monotone), the bound is
+//! monotone in queue depth and prompt length and sits below the true
+//! completion time whenever the supplied floor does — the properties the
+//! `integration_deadline` proptests pin down.
+
+use crate::latency::prefill::SpCoeffs;
+
+/// A conservative per-request TTFT lower-bound model (see the module
+/// docs). Built by the live server from its startup engine calibration;
+/// constructible directly for tests and out-of-crate schedulers.
+#[derive(Clone, Copy, Debug)]
+pub struct TtftEstimator {
+    /// Sanitized Eq. (1) per-chunk coefficients at SP = 1 (all
+    /// coefficients ≥ 0, so predictions are monotone in chunk length).
+    coeffs: SpCoeffs,
+    /// Widest SP group the scheduler could ever form (best-case parallel
+    /// speedup divisor; ≥ 1).
+    max_sp: usize,
+    /// Factor in `(0, 1]` scaling the *estimated* terms (lane floor and
+    /// remaining compute) into a bound. The elapsed-wait term is exact and
+    /// never scaled.
+    safety: f64,
+}
+
+/// Default safety factor: estimated terms count at half weight, so queue
+/// clocks and the calibration have to be off by 2× before the bound stops
+/// being a bound.
+pub const DEFAULT_DEADLINE_SAFETY: f64 = 0.5;
+
+impl TtftEstimator {
+    /// Build an estimator from calibrated SP=1 chunk coefficients and the
+    /// widest schedulable SP group. Coefficients are clamped at 0 (noisy
+    /// fits can go negative) and `safety` to `(0, 1]`.
+    pub fn new(coeffs: SpCoeffs, max_sp: usize, safety: f64) -> Self {
+        TtftEstimator {
+            coeffs: SpCoeffs {
+                a: coeffs.a.max(0.0),
+                b: coeffs.b.max(0.0),
+                c: coeffs.c.max(0.0),
+                d: coeffs.d.max(0.0),
+            },
+            max_sp: max_sp.max(1),
+            safety: if safety.is_finite() && safety > 0.0 { safety.min(1.0) } else { 1.0 },
+        }
+    }
+
+    /// The configured safety factor.
+    pub fn safety(&self) -> f64 {
+        self.safety
+    }
+
+    /// Lower bound (seconds) on the time still needed to produce the first
+    /// token: `remaining_tokens` of prefill left, with no lane free for
+    /// `lane_floor` seconds (pass 0 for work already running on a lane).
+    pub fn remaining_bound(&self, remaining_tokens: usize, lane_floor: f64) -> f64 {
+        let compute =
+            self.coeffs.predict(0.0, remaining_tokens as f64).max(0.0) / self.max_sp as f64;
+        self.safety * (lane_floor.max(0.0) + compute)
+    }
+
+    /// Lower bound (seconds) on the request's eventual TTFT: exact elapsed
+    /// wait plus [`TtftEstimator::remaining_bound`].
+    pub fn ttft_bound(&self, waited: f64, remaining_tokens: usize, lane_floor: f64) -> f64 {
+        waited.max(0.0) + self.remaining_bound(remaining_tokens, lane_floor)
+    }
+
+    /// Whether a deadline is provably blown: the bound strictly exceeds it.
+    pub fn blown(&self, deadline: f64, waited: f64, remaining: usize, lane_floor: f64) -> bool {
+        self.ttft_bound(waited, remaining, lane_floor) > deadline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est() -> TtftEstimator {
+        TtftEstimator::new(
+            SpCoeffs { a: 1e-3, b: 1e-5, c: 1e-8, d: 1e-8 },
+            4,
+            DEFAULT_DEADLINE_SAFETY,
+        )
+    }
+
+    #[test]
+    fn bound_is_monotone_in_every_argument() {
+        let e = est();
+        assert!(e.ttft_bound(0.0, 100, 0.0) <= e.ttft_bound(0.0, 1000, 0.0));
+        assert!(e.ttft_bound(0.0, 100, 0.0) <= e.ttft_bound(0.0, 100, 1.0));
+        assert!(e.ttft_bound(0.0, 100, 0.0) < e.ttft_bound(0.5, 100, 0.0));
+    }
+
+    #[test]
+    fn elapsed_wait_counts_fully_estimates_at_safety_weight() {
+        let e = est();
+        // waited alone is the bound when nothing remains.
+        assert!((e.ttft_bound(2.0, 0, 0.0) - (2.0 + 0.5 * 1e-3 / 4.0)).abs() < 1e-12);
+        // the lane floor enters scaled by safety.
+        let with_floor = e.ttft_bound(0.0, 0, 1.0) - e.ttft_bound(0.0, 0, 0.0);
+        assert!((with_floor - 0.5).abs() < 1e-12);
+        assert!(e.blown(1.0, 1.5, 0, 0.0), "elapsed wait past the deadline is blown");
+        assert!(!e.blown(1.0, 0.1, 0, 0.0));
+    }
+
+    #[test]
+    fn sanitizes_degenerate_inputs() {
+        let e = TtftEstimator::new(SpCoeffs { a: -1.0, b: -1.0, c: -1.0, d: -1.0 }, 0, f64::NAN);
+        assert_eq!(e.remaining_bound(10_000, 0.0), 0.0, "negative coeffs clamp to zero");
+        assert_eq!(e.safety(), 1.0);
+        assert!(e.ttft_bound(-5.0, 0, -3.0) >= 0.0, "negative inputs clamp");
+    }
+}

@@ -19,7 +19,12 @@
 //! * [`decode`] — decode step latency vs (TP, SP, batch, context) (Fig. 2).
 //! * [`transfer`] — KV-cache movement costs (cache balancing, P2P ring,
 //!   prefill→decode streaming) over NVLink/IB-class links.
+//! * [`deadline`] — conservative TTFT lower bounds driving the live
+//!   server's execution-time deadline monitor (interrupt only what is
+//!   provably blown).
 
+/// TTFT lower-bound estimation for execution-time deadline enforcement.
+pub mod deadline;
 /// Eq. (1) prefill latency model: fitting, prediction, inverse solve.
 pub mod prefill;
 /// A100 roofline calibration anchored on the paper's Table 1.
@@ -30,6 +35,7 @@ pub mod decode;
 pub mod transfer;
 
 pub use calibration::a100_model_for;
+pub use deadline::{TtftEstimator, DEFAULT_DEADLINE_SAFETY};
 pub use decode::{DecodeModel, DecodeQuickfit};
 pub use prefill::{PrefillModel, SpCoeffs};
 pub use transfer::TransferModel;

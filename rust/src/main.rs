@@ -48,6 +48,11 @@ COMMANDS:
                   --workers <n>  --decode-workers <n>
                   [--qos]  (mixed-QoS demo: per-class SubmitOptions, load
                             snapshots, admission shedding)
+                  [--deadline-ms <n>]  (with --qos: attach an n-millisecond
+                            TTFT deadline to the Batch/BestEffort classes —
+                            a deadline-heavy mix exercising the
+                            execution-time deadline monitor and engine
+                            interrupts)
 ";
 
 fn main() {
@@ -349,7 +354,8 @@ fn cmd_serve(args: &Args) -> i32 {
         })
         .collect();
     if args.flag("qos") {
-        return serve_qos_demo(server, &reqs, &recorder);
+        let deadline_ms = args.usize_or("deadline-ms", 0);
+        return serve_qos_demo(server, &reqs, &recorder, deadline_ms);
     }
     // Drive the run through the handle-based async API: the burst routes
     // atomically on the dispatcher, the caller streams tokens and awaits
@@ -423,23 +429,35 @@ fn cmd_serve(args: &Args) -> i32 {
 /// `SubmitOptions` (round-robin Interactive / Batch / BestEffort,
 /// BestEffort on a bounded DropOldest stream), with a live `load()`
 /// snapshot printed mid-flight and per-class outcome accounting —
-/// admission sheds are expected behaviour here, not failures.
+/// admission sheds are expected behaviour here, not failures. With
+/// `deadline_ms > 0` the Batch and BestEffort classes carry that TTFT
+/// deadline, so the run exercises the execution-time deadline monitor:
+/// blown requests are interrupted mid-flight (mid-chunk prefills abort
+/// within one engine step) and resolve as deadline sheds.
 fn serve_qos_demo(
     server: tetris::serve::Server,
     reqs: &[tetris::serve::ServeRequest],
     recorder: &tetris::api::TraceRecorder,
+    deadline_ms: usize,
 ) -> i32 {
     use tetris::api::{BackpressurePolicy, Completion, QosClass, SubmitOptions};
     let client = server.client();
     let class_of = |id: u64| QosClass::ALL[(id % 3) as usize];
+    let with_deadline = |opts: SubmitOptions| {
+        if deadline_ms > 0 {
+            opts.deadline(deadline_ms as f64 / 1000.0)
+        } else {
+            opts
+        }
+    };
     let mut handles = Vec::with_capacity(reqs.len());
     for r in reqs {
         let opts = match class_of(r.id) {
             QosClass::Interactive => SubmitOptions::interactive(),
-            QosClass::Batch => SubmitOptions::batch(),
-            QosClass::BestEffort => {
-                SubmitOptions::best_effort().bounded(8, BackpressurePolicy::DropOldest)
-            }
+            QosClass::Batch => with_deadline(SubmitOptions::batch()),
+            QosClass::BestEffort => with_deadline(
+                SubmitOptions::best_effort().bounded(8, BackpressurePolicy::DropOldest),
+            ),
         };
         match client.submit_with(r, opts) {
             Ok(h) => handles.push(h),
@@ -481,9 +499,11 @@ fn serve_qos_demo(
     }
     t.print();
     println!(
-        "observer: {} arrivals, {} sheds, {} tokens | load at drain: {}",
+        "observer: {} arrivals, {} sheds, {} execution interrupts, {} tokens | \
+         load at drain: {}",
         recorder.count("arrival"),
         recorder.count("shed"),
+        recorder.count("interrupt"),
         recorder.count("token"),
         server.load().summary()
     );

@@ -65,21 +65,33 @@ pub enum Completion {
     /// blocks, parked-queue slots, and transfer backends it held have been
     /// released.
     Cancelled(CancelStage),
-    /// The admission layer refused the request — shed by QoS policy at
-    /// submission or while parked, its TTFT deadline elapsed or became
-    /// unmeetable, or its bounded token stream overflowed under
+    /// The control plane refused or interrupted the request — shed by QoS
+    /// policy at submission or while parked, its TTFT deadline elapsed or
+    /// became unmeetable, interrupted mid-execution by the deadline
+    /// monitor once its TTFT lower bound provably exceeded the deadline
+    /// (reason starts with [`DEADLINE_BLOWN`]; see
+    /// [`Completion::deadline_blown`]), or its bounded token stream
+    /// overflowed under
     /// [`BackpressurePolicy::Fail`](crate::api::BackpressurePolicy::Fail).
     /// The reason string is operator-facing. Admission-time sheds hold no
-    /// resources when the handle resolves; a stream-overflow shed of an
+    /// resources when the handle resolves; an execution-time shed of an
     /// already-running request releases what it holds through the
-    /// cancellation ladder at the next stage boundary (KV blocks and the
-    /// batch slot free moments after the resolution, never later than the
-    /// next decode step).
+    /// cancellation ladder at the next stage boundary (a mid-chunk prefill
+    /// aborts within one engine step; KV blocks and the batch slot free
+    /// moments after the resolution, never later than the next decode
+    /// step).
     Shed(String),
     /// The server dropped the request (scheduler refusal at re-admission,
     /// or the server terminated before resolving it).
     Dropped(String),
 }
+
+/// Prefix of the shed reason the live server's execution-time deadline
+/// monitor writes when it interrupts a request whose TTFT lower bound
+/// exceeds its deadline (see
+/// [`Completion::deadline_blown`]). Admission-time deadline sheds use
+/// their own wording; this marker identifies the *execution-time* path.
+pub const DEADLINE_BLOWN: &str = "TTFT deadline blown";
 
 impl Completion {
     /// The finished metrics, if the request completed normally.
@@ -88,6 +100,14 @@ impl Completion {
             Completion::Finished(m) => Some(m),
             _ => None,
         }
+    }
+
+    /// Whether this outcome is an execution-time deadline shed — the
+    /// request was interrupted mid-flight because its TTFT lower bound
+    /// provably exceeded its deadline (reason starts with
+    /// [`DEADLINE_BLOWN`]).
+    pub fn deadline_blown(&self) -> bool {
+        matches!(self, Completion::Shed(r) if r.starts_with(DEADLINE_BLOWN))
     }
 
     /// Whether this outcome is [`Completion::Finished`].
@@ -260,6 +280,15 @@ mod tests {
         };
         assert!((run.token_throughput() - (2.0 * 1100.0 / 4.0)).abs() < 1e-9);
         assert!((run.request_throughput() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_blown_marker() {
+        let shed = Completion::Shed(format!("{DEADLINE_BLOWN}: bound 0.5s > deadline 0.2s"));
+        assert!(shed.deadline_blown());
+        assert!(!Completion::Shed("KV occupancy too high".into()).deadline_blown());
+        assert!(!Completion::Dropped("x".into()).deadline_blown());
+        assert_eq!(shed.shed_reason().map(|r| r.starts_with(DEADLINE_BLOWN)), Some(true));
     }
 
     #[test]

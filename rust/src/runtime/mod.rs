@@ -16,10 +16,121 @@
 //!   which is the invariant the serving path relies on. It exists so the
 //!   full threaded serving stack (barrier groups, KV scatter/repack,
 //!   continuous batching) runs and is testable without the xla toolchain.
+//!
+//! Both backends accept an [`ExecCtx`] carrying a cooperative
+//! [`InterruptToken`]: the stub checks it **between layer steps** (so a
+//! tripped mid-chunk prefill aborts within one engine step — the hook the
+//! live server's execution-time deadline control plane relies on), the
+//! PJRT backend once per call. [`Engine::stub_with_hook`] additionally
+//! reports every stub step to a [`StepHook`], the seam the deterministic
+//! fault-injection test harness uses for virtual step clocks and scripted
+//! interrupt trips.
 
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A cooperative interrupt flag shared between whoever controls a piece of
+/// work (the live server's dispatcher, a client handle, a test script) and
+/// the engine executing it.
+///
+/// The stub backend checks the token **between layer steps** inside
+/// [`Engine::prefill_chunk_ctx`] / [`Engine::decode_step_ctx`], so an
+/// in-flight chunk aborts within one engine step of the trip — this is the
+/// mechanism behind the live server's execution-time deadline control
+/// plane (a mid-chunk prefill no longer burns its whole chunk once the
+/// request's TTFT deadline is provably blown). The PJRT backend cannot be
+/// interrupted inside a compiled executable; it checks the token once
+/// before launching, so a trip lands at the next call boundary instead.
+///
+/// Tokens are cheap `Arc<AtomicBool>` wrappers: clone freely, trip from
+/// any thread, never reset (one request, one token, one lifecycle).
+#[derive(Clone, Debug, Default)]
+pub struct InterruptToken(Arc<AtomicBool>);
+
+impl InterruptToken {
+    /// A fresh, untripped token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wrap an existing shared flag (the live server reuses each request's
+    /// cancel flag, so `cancel()` and engine interrupts are one signal).
+    pub fn from_flag(flag: Arc<AtomicBool>) -> Self {
+        InterruptToken(flag)
+    }
+
+    /// Trip the token: every engine call carrying it aborts at its next
+    /// interrupt check. Idempotent.
+    pub fn trip(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the token has been tripped.
+    pub fn is_tripped(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Which half of the engine a [`StepPoint`] belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPhase {
+    /// A prefill-chunk layer step.
+    Prefill,
+    /// A decode-step layer step.
+    Decode,
+}
+
+/// One engine step, as reported to a [`StepHook`] just before the step's
+/// compute runs (and just before the engine's interrupt check, so a hook
+/// that trips the step's token aborts that very step).
+#[derive(Clone, Copy, Debug)]
+pub struct StepPoint {
+    /// The request this execution belongs to (from [`ExecCtx::req`]; 0 for
+    /// anonymous calls through the legacy entry points).
+    pub req: u64,
+    /// Prefill or decode.
+    pub phase: StepPhase,
+    /// Layer index within this engine call (0-based).
+    pub layer: usize,
+    /// History length the call started from (tokens).
+    pub hist_len: usize,
+    /// Chunk length of the call (tokens; 1 for decode steps).
+    pub chunk_len: usize,
+}
+
+/// A per-engine observation hook invoked at every stub-backend step
+/// boundary — the deterministic fault-injection seam: test harnesses use
+/// it to maintain a virtual step clock, inject scripted delays, and trip
+/// [`InterruptToken`]s at exact engine steps. `None` (the default) costs
+/// nothing on the hot path.
+pub type StepHook = Arc<dyn Fn(&StepPoint) + Send + Sync>;
+
+/// Execution context of one engine call: the owning request and its
+/// cooperative interrupt token. [`ExecCtx::uninterruptible`] is the
+/// never-aborts context the legacy `prefill_chunk`/`decode_step` wrappers
+/// use.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecCtx<'a> {
+    /// Request id reported to [`StepHook`]s (purely observational).
+    pub req: u64,
+    /// The call's interrupt token, if it can be aborted.
+    pub interrupt: Option<&'a InterruptToken>,
+}
+
+impl ExecCtx<'_> {
+    /// A context with no interrupt token: the call always runs to
+    /// completion.
+    pub fn uninterruptible(req: u64) -> ExecCtx<'static> {
+        ExecCtx { req, interrupt: None }
+    }
+
+    fn tripped(&self) -> bool {
+        self.interrupt.map(InterruptToken::is_tripped).unwrap_or(false)
+    }
+}
 
 /// Architecture constants read from the manifest (mirrors
 /// `python/compile/model.py`).
@@ -257,6 +368,9 @@ pub struct Engine {
     imp: EngineImpl,
     /// Architecture constants shared by every execution.
     pub arch: TinyArch,
+    /// Optional step-boundary observation hook (fault injection, virtual
+    /// clocks). `None` on the production path.
+    hook: Option<StepHook>,
 }
 
 // SAFETY: all access to the PJRT pointers goes through the Mutex in
@@ -272,7 +386,7 @@ impl Engine {
     #[cfg(feature = "pjrt")]
     pub fn load(dir: &Path) -> Result<Engine> {
         let (inner, arch) = pjrt::Inner::load(dir)?;
-        Ok(Engine { imp: EngineImpl::Pjrt(std::sync::Mutex::new(inner)), arch })
+        Ok(Engine { imp: EngineImpl::Pjrt(std::sync::Mutex::new(inner)), arch, hook: None })
     }
 
     /// Load artifacts from `dir` — requires the `pjrt` feature; this build
@@ -290,7 +404,14 @@ impl Engine {
 
     /// The deterministic stub backend with the given shape.
     pub fn stub(arch: TinyArch) -> Engine {
-        Engine { imp: EngineImpl::Stub, arch }
+        Engine { imp: EngineImpl::Stub, arch, hook: None }
+    }
+
+    /// The stub backend with a [`StepHook`] observing every layer step —
+    /// the deterministic fault-injection seam the test harness builds on
+    /// (virtual step clocks, scripted interrupt trips, injected delays).
+    pub fn stub_with_hook(arch: TinyArch, hook: StepHook) -> Engine {
+        Engine { imp: EngineImpl::Stub, arch, hook: Some(hook) }
     }
 
     /// The stub backend with [`TinyArch::stub_default`] buckets.
@@ -304,7 +425,8 @@ impl Engine {
     }
 
     /// Execute one CDSP chunk: `tokens` padded to `l_bucket`, history cache
-    /// padded to `c_bucket`.
+    /// padded to `c_bucket`. Uninterruptible wrapper over
+    /// [`Engine::prefill_chunk_ctx`].
     pub fn prefill_chunk(
         &self,
         tokens: &[i32],
@@ -313,6 +435,32 @@ impl Engine {
         hist_len: i32,
         chunk_len: i32,
     ) -> Result<PrefillOut> {
+        let out = self.prefill_chunk_ctx(
+            tokens,
+            hist_k,
+            hist_v,
+            hist_len,
+            chunk_len,
+            &ExecCtx::uninterruptible(0),
+        )?;
+        Ok(out.expect("uninterruptible prefill cannot abort"))
+    }
+
+    /// Execute one CDSP chunk under an [`ExecCtx`]. Returns `Ok(None)` when
+    /// the context's [`InterruptToken`] tripped before the chunk finished:
+    /// the stub backend checks the token between layer steps (no partial KV
+    /// is ever returned — an aborted chunk's work is discarded wholesale),
+    /// so a trip lands within one step; the PJRT backend checks once before
+    /// launching the compiled executable.
+    pub fn prefill_chunk_ctx(
+        &self,
+        tokens: &[i32],
+        hist_k: &[f32],
+        hist_v: &[f32],
+        hist_len: i32,
+        chunk_len: i32,
+        ctx: &ExecCtx<'_>,
+    ) -> Result<Option<PrefillOut>> {
         let a = &self.arch;
         anyhow::ensure!(tokens.len() == a.l_bucket, "tokens must be padded to l_bucket");
         anyhow::ensure!(hist_k.len() == a.kv_elems(), "hist_k size");
@@ -323,13 +471,19 @@ impl Engine {
         match &self.imp {
             #[cfg(feature = "pjrt")]
             EngineImpl::Pjrt(inner) => {
-                pjrt_prefill(a, inner, tokens, hist_k, hist_v, hist_len, chunk_len)
+                if ctx.tripped() {
+                    return Ok(None);
+                }
+                pjrt_prefill(a, inner, tokens, hist_k, hist_v, hist_len, chunk_len).map(Some)
             }
-            EngineImpl::Stub => Ok(stub_prefill(a, tokens, hist_len, chunk_len)),
+            EngineImpl::Stub => {
+                Ok(stub_prefill(a, tokens, hist_len, chunk_len, ctx, self.hook.as_ref()))
+            }
         }
     }
 
     /// Execute one decode step against the decode-bucket cache.
+    /// Uninterruptible wrapper over [`Engine::decode_step_ctx`].
     pub fn decode_step(
         &self,
         token: i32,
@@ -337,6 +491,22 @@ impl Engine {
         hist_v: &[f32],
         hist_len: i32,
     ) -> Result<DecodeOut> {
+        let out =
+            self.decode_step_ctx(token, hist_k, hist_v, hist_len, &ExecCtx::uninterruptible(0))?;
+        Ok(out.expect("uninterruptible decode cannot abort"))
+    }
+
+    /// Execute one decode step under an [`ExecCtx`]. Returns `Ok(None)`
+    /// when the context's [`InterruptToken`] tripped before the step
+    /// finished (stub: checked per layer; PJRT: checked before launch).
+    pub fn decode_step_ctx(
+        &self,
+        token: i32,
+        hist_k: &[f32],
+        hist_v: &[f32],
+        hist_len: i32,
+        ctx: &ExecCtx<'_>,
+    ) -> Result<Option<DecodeOut>> {
         let a = &self.arch;
         anyhow::ensure!(hist_k.len() == a.decode_kv_elems(), "hist_k size");
         anyhow::ensure!(hist_v.len() == a.decode_kv_elems(), "hist_v size");
@@ -344,8 +514,13 @@ impl Engine {
 
         match &self.imp {
             #[cfg(feature = "pjrt")]
-            EngineImpl::Pjrt(inner) => pjrt_decode(a, inner, token, hist_k, hist_v, hist_len),
-            EngineImpl::Stub => Ok(stub_decode(a, token, hist_len)),
+            EngineImpl::Pjrt(inner) => {
+                if ctx.tripped() {
+                    return Ok(None);
+                }
+                pjrt_decode(a, inner, token, hist_k, hist_v, hist_len).map(Some)
+            }
+            EngineImpl::Stub => Ok(stub_decode(a, token, hist_len, ctx, self.hook.as_ref())),
         }
     }
 }
@@ -458,12 +633,41 @@ fn stub_logits(vocab: usize, last_token: i32, total_len: usize) -> Vec<f32> {
     (0..vocab).map(|v| unit(mix(base ^ (v as u64)))).collect()
 }
 
-fn stub_prefill(a: &TinyArch, tokens: &[i32], hist_len: i32, chunk_len: i32) -> PrefillOut {
+/// Report one layer step to the engine's hook (if any), then check the
+/// context's interrupt token. Returns `true` when the step must abort —
+/// the ordering (hook first, check second) is what lets a hook that trips
+/// the token at step N abort step N itself, i.e. the interrupt lands
+/// within one engine step of the trip.
+fn step_boundary(
+    hook: Option<&StepHook>,
+    ctx: &ExecCtx<'_>,
+    phase: StepPhase,
+    layer: usize,
+    hist_len: usize,
+    chunk_len: usize,
+) -> bool {
+    if let Some(h) = hook {
+        h(&StepPoint { req: ctx.req, phase, layer, hist_len, chunk_len });
+    }
+    ctx.tripped()
+}
+
+fn stub_prefill(
+    a: &TinyArch,
+    tokens: &[i32],
+    hist_len: i32,
+    chunk_len: i32,
+    ctx: &ExecCtx<'_>,
+    hook: Option<&StepHook>,
+) -> Option<PrefillOut> {
     let (hist, len) = (hist_len as usize, chunk_len as usize);
     let tok = a.tok_elems();
     let mut new_k = vec![0.0f32; a.new_kv_elems()];
     let mut new_v = vec![0.0f32; a.new_kv_elems()];
     for layer in 0..a.n_layers {
+        if step_boundary(hook, ctx, StepPhase::Prefill, layer, hist, len) {
+            return None; // interrupted mid-chunk: discard the partial work
+        }
         for i in 0..len {
             let base = layer * a.l_bucket * tok + i * tok;
             for h in 0..a.n_heads {
@@ -476,15 +680,24 @@ fn stub_prefill(a: &TinyArch, tokens: &[i32], hist_len: i32, chunk_len: i32) -> 
         }
     }
     let logits = stub_logits(a.vocab, tokens[len - 1], hist + len);
-    PrefillOut { logits, new_k, new_v }
+    Some(PrefillOut { logits, new_k, new_v })
 }
 
-fn stub_decode(a: &TinyArch, token: i32, hist_len: i32) -> DecodeOut {
+fn stub_decode(
+    a: &TinyArch,
+    token: i32,
+    hist_len: i32,
+    ctx: &ExecCtx<'_>,
+    hook: Option<&StepHook>,
+) -> Option<DecodeOut> {
     let hist = hist_len as usize;
     let tok = a.tok_elems();
     let mut new_k = vec![0.0f32; a.n_layers * tok];
     let mut new_v = vec![0.0f32; a.n_layers * tok];
     for layer in 0..a.n_layers {
+        if step_boundary(hook, ctx, StepPhase::Decode, layer, hist, 1) {
+            return None;
+        }
         for h in 0..a.n_heads {
             for d in 0..a.head_dim {
                 let off = layer * tok + h * a.head_dim + d;
@@ -494,7 +707,7 @@ fn stub_decode(a: &TinyArch, token: i32, hist_len: i32) -> DecodeOut {
         }
     }
     let logits = stub_logits(a.vocab, token, hist + 1);
-    DecodeOut { logits, new_k, new_v }
+    Some(DecodeOut { logits, new_k, new_v })
 }
 
 /// Argmax sampling (deterministic generation for tests/benches).
@@ -648,6 +861,58 @@ mod tests {
         assert!(e.prefill_chunk(&tokens, &hk, &hv, 0, (a.l_bucket + 1) as i32).is_err());
         assert!(e.prefill_chunk(&tokens, &hk, &hv, 0, 0).is_err());
         assert!(e.prefill_chunk(&tokens, &hk[1..], &hv, 0, 4).is_err());
+    }
+
+    #[test]
+    fn interrupt_token_aborts_prefill_within_one_step() {
+        use std::sync::atomic::AtomicUsize;
+        let steps = Arc::new(AtomicUsize::new(0));
+        let token = InterruptToken::new();
+        let hook: StepHook = {
+            let steps = Arc::clone(&steps);
+            let token = token.clone();
+            Arc::new(move |p: &StepPoint| {
+                let n = steps.fetch_add(1, Ordering::Relaxed);
+                assert_eq!(p.phase, StepPhase::Prefill);
+                if n == 1 {
+                    token.trip(); // trip at the second layer step
+                }
+            })
+        };
+        let e = Engine::stub_with_hook(TinyArch::stub_default(), hook);
+        let a = e.arch.clone();
+        let tokens = vec![1i32; a.l_bucket];
+        let hk = vec![0.0f32; a.kv_elems()];
+        let hv = vec![0.0f32; a.kv_elems()];
+        let ctx = ExecCtx { req: 7, interrupt: Some(&token) };
+        let out = e.prefill_chunk_ctx(&tokens, &hk, &hv, 0, 16, &ctx).unwrap();
+        assert!(out.is_none(), "tripped chunk must abort, not return partial KV");
+        // The trip fired inside step 1's hook; the interrupt check right
+        // after it aborted that very step — no further layers ran.
+        assert_eq!(steps.load(Ordering::Relaxed), 2, "abort within one engine step");
+    }
+
+    #[test]
+    fn untripped_ctx_matches_legacy_output_and_decode_aborts() {
+        let e = Engine::stub_default();
+        let a = e.arch.clone();
+        let tokens = vec![3i32; a.l_bucket];
+        let hk = vec![0.0f32; a.kv_elems()];
+        let hv = vec![0.0f32; a.kv_elems()];
+        let token = InterruptToken::new();
+        let ctx = ExecCtx { req: 1, interrupt: Some(&token) };
+        let via_ctx =
+            e.prefill_chunk_ctx(&tokens, &hk, &hv, 0, 8, &ctx).unwrap().expect("not tripped");
+        let legacy = e.prefill_chunk(&tokens, &hk, &hv, 0, 8).unwrap();
+        assert_eq!(via_ctx.logits, legacy.logits);
+        assert_eq!(via_ctx.new_k, legacy.new_k);
+        // A pre-tripped decode aborts before computing anything.
+        let dk = vec![0.0f32; a.decode_kv_elems()];
+        let dv = vec![0.0f32; a.decode_kv_elems()];
+        token.trip();
+        assert!(token.is_tripped());
+        let out = e.decode_step_ctx(3, &dk, &dv, 10, &ctx).unwrap();
+        assert!(out.is_none(), "tripped decode step must abort");
     }
 
     // PJRT engine execution tests live in rust/tests/integration_runtime.rs

@@ -29,6 +29,29 @@
 //! a QoS-aware [`ParkedQueue`]: class priority across classes, arrival
 //! order within a class, anti-starvation bound for `BestEffort` — is
 //! re-offered to the admission controller and the router under one lock.
+//!
+//! # The deadline monitor
+//!
+//! Admission-time deadline checks (PR 4) can only refuse work before it
+//! starts; once a long prompt's chunks are dispatched, the old server
+//! burned the whole chunk even when the request's TTFT deadline was
+//! already provably blown. The dispatcher now hosts a **deadline
+//! monitor**: every deadline-carrying request is tracked from first sight
+//! until its first token exists, and each tick (every [`DEADLINE_TICK`]
+//! while any are tracked, plus after every message) computes a
+//! conservative per-request TTFT lower bound from the cached
+//! [`LoadSnapshot`](crate::api::LoadSnapshot) lane clocks, the calibrated
+//! prefill quickfit, and live per-chunk progress
+//! ([`TtftEstimator`]). The moment the bound exceeds the deadline the
+//! monitor fires `cancel_execution`: the request's cooperative interrupt
+//! flag trips (a mid-chunk prefill aborts within one engine step on the
+//! stub backend), `on_interrupt` is emitted, the handle resolves as
+//! [`Completion::Shed`] with the
+//! [`DEADLINE_BLOWN`](crate::metrics::DEADLINE_BLOWN) reason, and every
+//! held resource — parked slot, virtual KV, granted transfer backend,
+//! real blocks, the in-flight engine chunk, *and* the committed
+//! queue-clock estimates — returns through the unified release ladder, so
+//! the freed SP workers immediately re-enter the planner's pool.
 
 use crate::api::admission::{
     AdmissionController, AdmissionDecision, AdmissionTicket, ParkedQueue, ScanOutcome,
@@ -36,16 +59,21 @@ use crate::api::admission::{
 use crate::baselines::PrefillScheduler;
 use crate::cluster::WorkerRegistry;
 use crate::latency::prefill::SpCoeffs;
-use crate::latency::DecodeQuickfit;
-use crate::metrics::{CancelStage, Completion};
+use crate::latency::{DecodeQuickfit, TtftEstimator};
+use crate::metrics::{CancelStage, Completion, DEADLINE_BLOWN};
 use crate::runtime::TinyArch;
 use crate::sched::plan::CdspPlan;
-use crate::serve::handle::{Pending, SubmitShared};
+use crate::serve::handle::{Pending, ReqShared, SubmitShared};
 use crate::serve::{need_tokens, KvState, ObserverSet, SharedKv, SharedRouter, WorkerJob};
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// How often the deadline monitor re-evaluates its tracked requests while
+/// any exist. The dispatcher blocks indefinitely when nothing carries a
+/// deadline, so deadline-free servers pay nothing for the monitor.
+const DEADLINE_TICK: Duration = Duration::from_millis(2);
 
 /// Messages driving the dispatcher thread.
 pub(crate) enum DispatcherMsg {
@@ -74,6 +102,32 @@ enum ParkedVerdict {
     Shed(String),
 }
 
+/// Queue-clock estimates a dispatched request committed onto the worker
+/// registry — rolled back (credited) when the deadline monitor interrupts
+/// the request, so the freed SP workers immediately re-enter the
+/// planner's pool instead of looking busy for work that will never run.
+pub(crate) struct CommitRecord {
+    /// Per prefill lane: summed chunk-piece estimates committed there.
+    prefill: Vec<(usize, f64)>,
+    /// The assigned decode lane and the total clock movement (projected
+    /// handoff gap + decode service estimate) this request committed
+    /// on it.
+    decode: (usize, f64),
+}
+
+/// One deadline-carrying request the monitor tracks from the moment the
+/// dispatcher first sees it until its TTFT is decided (first token) or it
+/// reaches a terminal state.
+pub(crate) struct TrackedDeadline {
+    shared: Arc<ReqShared>,
+    prompt_len: usize,
+    /// Whether chunks were dispatched (tracking switches from the
+    /// lane-floor bound to the remaining-prefill bound).
+    dispatched: bool,
+    /// Registry commitments to credit back on interrupt.
+    commits: Option<CommitRecord>,
+}
+
 /// The dispatcher's owned state. Built by `Server::start`, consumed by
 /// [`Dispatcher::run`] on its own thread.
 pub(crate) struct Dispatcher {
@@ -94,6 +148,9 @@ pub(crate) struct Dispatcher {
     /// Calibrated per-step decode latency of *this machine*: folds an
     /// estimated decode service time into the decode-lane clocks.
     pub decode_fit: DecodeQuickfit,
+    /// The deadline monitor's conservative TTFT lower-bound model
+    /// (calibrated chunk latency, widest-group best case).
+    pub estimator: TtftEstimator,
     pub shared: Arc<SubmitShared>,
     /// Self-sender (deferred `CapacityFreed` after dispatcher-side
     /// cancellations, avoiding re-entrant admission).
@@ -101,24 +158,48 @@ pub(crate) struct Dispatcher {
     pub rx: Receiver<DispatcherMsg>,
     /// Requests held back (admission `Park` or router full), QoS-ordered.
     pub parked: ParkedQueue<Pending>,
+    /// The deadline monitor's tracked requests (every deadline-carrying
+    /// submission the dispatcher has seen whose TTFT is still undecided).
+    pub deadlines: Vec<TrackedDeadline>,
 }
 
 impl Dispatcher {
     /// The dispatcher loop. Exits on [`DispatcherMsg::Drain`] or when every
     /// sender is gone (a `Server` dropped without `shutdown`); either way
     /// the parked queue is resolved deterministically first.
+    ///
+    /// While any tracked request carries a TTFT deadline, the loop wakes
+    /// every [`DEADLINE_TICK`] (and after every message) to run the
+    /// deadline monitor; with no deadlines in flight it blocks on the
+    /// channel as before.
     pub fn run(mut self) {
         loop {
-            match self.rx.recv() {
-                Ok(DispatcherMsg::Submit(p)) => self.admit_batch(vec![p]),
-                Ok(DispatcherMsg::SubmitBatch(batch)) => self.admit_batch(batch),
-                Ok(DispatcherMsg::Cancel(id)) => self.cancel_parked(id),
-                Ok(DispatcherMsg::CapacityFreed) => self.try_admit(),
-                Ok(DispatcherMsg::Flush(ack)) => {
+            let msg = if self.deadlines.is_empty() {
+                match self.rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            } else {
+                match self.rx.recv_timeout(DEADLINE_TICK) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => {
+                        self.deadline_tick();
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            };
+            match msg {
+                DispatcherMsg::Submit(p) => self.admit_batch(vec![p]),
+                DispatcherMsg::SubmitBatch(batch) => self.admit_batch(batch),
+                DispatcherMsg::Cancel(id) => self.cancel_parked(id),
+                DispatcherMsg::CapacityFreed => self.try_admit(),
+                DispatcherMsg::Flush(ack) => {
                     let _ = ack.send(());
                 }
-                Ok(DispatcherMsg::Drain) | Err(_) => break,
+                DispatcherMsg::Drain => break,
             }
+            self.deadline_tick();
         }
         self.drain();
     }
@@ -149,16 +230,30 @@ impl Dispatcher {
                 c.on_arrival(p.shared.submitted_at);
             }
         }
-        // One snapshot is taken for the batch, then each admission or park
-        // is projected back onto it (`note_admitted` / parked bump) so a
-        // large burst cannot sail past the QoS thresholds just because all
-        // of its members were judged against the same pre-burst load.
-        let mut load = self.shared.load();
+        // One snapshot is assembled fresh for the batch (admission always
+        // judges exact load; the assembly also refreshes the cache behind
+        // `Server::load()`), then each admission or park is projected back
+        // onto it (`note_admitted` / parked bump) so a large burst cannot
+        // sail past the QoS thresholds just because all of its members
+        // were judged against the same pre-burst load.
+        let mut load = self.shared.refresh_load();
         let mut live = Vec::with_capacity(batch.len());
         for p in batch {
             if p.shared.is_cancelled() {
                 p.shared.resolve(Completion::Cancelled(CancelStage::Queued));
                 continue;
+            }
+            // The deadline monitor tracks every deadline-carrying request
+            // from the moment the dispatcher first sees it, whatever the
+            // admission verdict turns out to be (resolved entries are
+            // pruned on the next tick).
+            if p.shared.opts.ttft_deadline.is_some() {
+                self.deadlines.push(TrackedDeadline {
+                    shared: Arc::clone(&p.shared),
+                    prompt_len: p.req.prompt.len(),
+                    dispatched: false,
+                    commits: None,
+                });
             }
             let t = Self::ticket(&p, load.at, load.block_tokens);
             match self.admission.admit(&t, &load) {
@@ -232,7 +327,8 @@ impl Dispatcher {
                     o.on_plan(p.req.id, &plan, now);
                 }
                 p.shared.n_chunks.store(plan.n_chunks(), Ordering::Relaxed);
-                self.dispatch(&p, inst, &plan, now);
+                let commits = self.dispatch(&p, inst, &plan, now);
+                self.mark_dispatched(&p.shared, commits);
             }
             Err(e) => {
                 self.router.lock().unwrap().cancel(inst, need);
@@ -264,8 +360,10 @@ impl Dispatcher {
     }
 
     /// Register KV state and dispatch the plan's chunks to the prefill
-    /// workers, committing queue-clock estimates as it goes.
-    fn dispatch(&mut self, p: &Pending, inst: usize, plan: &CdspPlan, now: f64) {
+    /// workers, committing queue-clock estimates as it goes. Returns the
+    /// committed estimates so the deadline monitor can credit them back if
+    /// it later interrupts this request.
+    fn dispatch(&mut self, p: &Pending, inst: usize, plan: &CdspPlan, now: f64) -> CommitRecord {
         let a = &self.arch;
         self.kv.lock().unwrap().insert(
             p.req.id,
@@ -285,6 +383,7 @@ impl Dispatcher {
         let n_chunks = plan.chunks.len();
         let mut offset = 0usize;
         let mut finish = now;
+        let mut prefill_commits: Vec<(usize, f64)> = Vec::new();
         let mut reg = self.registry.lock().unwrap();
         for (ci, chunk) in plan.chunks.iter().enumerate() {
             let mut remaining = chunk.len;
@@ -320,6 +419,9 @@ impl Dispatcher {
                     .predict(piece_start as f64, piece as f64)
                     .max(1e-4);
                 finish = reg.prefill_mut().commit(&chunk.group, finish, est);
+                for &w in &chunk.group {
+                    prefill_commits.push((w, est));
+                }
                 piece_start += piece;
                 remaining -= piece;
             }
@@ -333,7 +435,24 @@ impl Dispatcher {
         let svc = self
             .decode_fit
             .service_secs(p.req.prompt.len(), p.req.output_len.max(1));
+        // Record the full clock movement this commit causes (handoff gap +
+        // service), not just `svc`: an interrupt must be able to roll the
+        // lane back to where it stood before this request was projected
+        // onto it.
+        let lane_before = reg.decode_lane(inst).free_at()[0];
         reg.decode_lane_mut(inst).commit(&[0], finish, svc);
+        let lane_delta = reg.decode_lane(inst).free_at()[0] - lane_before;
+        CommitRecord { prefill: prefill_commits, decode: (inst, lane_delta) }
+    }
+
+    /// Mark a just-dispatched request in the deadline monitor (if it is
+    /// tracked): its bound switches to remaining-prefill progress, and the
+    /// queue-clock commitments are remembered for rollback on interrupt.
+    fn mark_dispatched(&mut self, shared: &Arc<ReqShared>, commits: CommitRecord) {
+        if let Some(t) = self.deadlines.iter_mut().find(|t| Arc::ptr_eq(&t.shared, shared)) {
+            t.dispatched = true;
+            t.commits = Some(commits);
+        }
     }
 
     /// Retry the parked queue under one router lock: every entry is
@@ -346,7 +465,7 @@ impl Dispatcher {
         if self.parked.is_empty() {
             return;
         }
-        let mut load = self.shared.load();
+        let mut load = self.shared.refresh_load();
         // One verdict is pushed per removed entry; `ParkedQueue::scan`
         // returns removed items in offer order, so the two line up by
         // position — no keying needed (request ids are not unique).
@@ -396,6 +515,104 @@ impl Dispatcher {
         }
         for (p, inst) in admitted {
             self.plan_and_dispatch(p, inst, load.arrival_rate);
+        }
+    }
+
+    /// One deadline-monitor pass: prune requests whose TTFT is decided,
+    /// then interrupt every tracked request whose TTFT lower bound exceeds
+    /// its deadline. The bound is deliberately conservative (see
+    /// [`TtftEstimator`]): elapsed wait counts exactly, estimated terms at
+    /// the safety weight, remaining prefill from live per-chunk progress —
+    /// so only *provably* blown deadlines fire.
+    fn deadline_tick(&mut self) {
+        self.deadlines.retain(|t| !t.shared.is_resolved() && !t.shared.prefill_done());
+        if self.deadlines.is_empty() {
+            return;
+        }
+        let now = self.epoch.elapsed().as_secs_f64();
+        // The monitor ticks on the cached snapshot (refreshing it once the
+        // staleness bound elapses). Its lane clocks are relative to the
+        // snapshot's assembly time, so age the floor before using it: a
+        // stale snapshot can then only *under*-state the queue, keeping
+        // the bound a true lower bound.
+        let load = self.shared.load();
+        let lane_floor = (load.min_prefill_busy() - (now - load.assembled_at)).max(0.0);
+        let mut blown: Vec<(usize, f64, f64)> = Vec::new();
+        {
+            let kv = self.kv.lock().unwrap();
+            for (i, t) in self.deadlines.iter().enumerate() {
+                let Some(d) = t.shared.opts.ttft_deadline else { continue };
+                let waited = (now - t.shared.submitted_at).max(0.0);
+                // Remaining prefill work, as a lower bound: live per-chunk
+                // progress for dispatched requests (0 if the KV entry is
+                // already gone — the handoff is happening right now), the
+                // whole prompt behind the lane floor otherwise.
+                let (remaining, floor) = if t.dispatched {
+                    let left = kv
+                        .get(&t.shared.id)
+                        .map_or(0, |st| t.prompt_len.saturating_sub(st.hist_len));
+                    (left, 0.0)
+                } else {
+                    (t.prompt_len, lane_floor)
+                };
+                let bound = self.estimator.ttft_bound(waited, remaining, floor);
+                if bound > d {
+                    blown.push((i, bound, d));
+                }
+            }
+        }
+        for &(i, bound, d) in blown.iter().rev() {
+            let t = self.deadlines.swap_remove(i);
+            self.cancel_execution(t, bound, d);
+        }
+    }
+
+    /// Fire the execution-time interrupt for one deadline-blown request:
+    /// trip its cooperative cancel/interrupt flag (a mid-chunk prefill
+    /// aborts within one engine step; queued chunks, transfers, and decode
+    /// residency tear down at their next boundary through the unified
+    /// release ladder), emit `on_interrupt`, resolve the handle as
+    /// [`Completion::Shed`] with the [`DEADLINE_BLOWN`] reason, pull it
+    /// out of the parked queue if held there, and credit its committed
+    /// queue-clock estimates back to the planner's pool so the freed SP
+    /// workers are immediately re-plannable.
+    fn cancel_execution(&mut self, t: TrackedDeadline, bound: f64, deadline: f64) {
+        // Last-instant re-check: if the first token landed between this
+        // tick's prune and now, the deadline is settled — generation is
+        // never cut short retroactively.
+        if t.shared.prefill_done() {
+            return;
+        }
+        let reason = format!(
+            "{DEADLINE_BLOWN}: TTFT lower bound {bound:.3}s exceeds the \
+             {deadline:.3}s deadline"
+        );
+        t.shared.cancelled.store(true, Ordering::Relaxed);
+        let now = self.epoch.elapsed().as_secs_f64();
+        for o in self.observers.iter() {
+            o.on_interrupt(t.shared.id, &reason, now);
+        }
+        // A parked entry holds only its queue slot; free it here so the
+        // zero-resource invariant of sheds holds immediately.
+        let parked = self.parked.remove_where(|p| Arc::ptr_eq(&p.shared, &t.shared));
+        if !parked.is_empty() {
+            self.shared.parked.fetch_sub(parked.len(), Ordering::Relaxed);
+        }
+        // Roll the interrupted request's committed queue-clock estimates
+        // back into the pool: the planner sees the freed capacity on its
+        // very next pass instead of after the phantom estimates drain.
+        if let Some(c) = &t.commits {
+            let mut reg = self.registry.lock().unwrap();
+            for &(lane, est) in &c.prefill {
+                reg.prefill_mut().credit(lane, est, now);
+            }
+            let (inst, lane_delta) = c.decode;
+            reg.decode_lane_mut(inst).credit(0, lane_delta, now);
+        }
+        if t.shared.resolve(Completion::Shed(reason)) {
+            // Freed capacity (parked slot now; router blocks/backends as
+            // the release ladder reaches them) may admit parked work.
+            let _ = self.tx.send(DispatcherMsg::CapacityFreed);
         }
     }
 

@@ -30,6 +30,7 @@
 use crate::api::admission::{LoadSnapshot, SubmitOptions};
 use crate::cluster::WorkerRegistry;
 use crate::metrics::{Completion, StreamedToken};
+use crate::runtime::InterruptToken;
 use crate::sched::ImprovementController;
 use crate::serve::dispatcher::DispatcherMsg;
 use crate::serve::stream::{PushOutcome, TokenStream};
@@ -48,9 +49,15 @@ use std::time::Instant;
 pub(crate) struct ReqShared {
     /// The request's id (terminal observer events carry it).
     pub id: u64,
-    /// Set by [`RequestHandle::cancel`] (or a `Fail`-policy stream
-    /// overflow); checked at every stage boundary.
+    /// Set by [`RequestHandle::cancel`], a `Fail`-policy stream overflow,
+    /// or the dispatcher's deadline monitor; checked at every stage
+    /// boundary *and* between engine layer steps (the same flag backs the
+    /// request's [`InterruptToken`], so a trip aborts a mid-chunk prefill
+    /// within one engine step).
     pub cancelled: Arc<AtomicBool>,
+    /// Set the moment the request's first token exists (prefill done):
+    /// its TTFT is decided, so the deadline monitor stops tracking it.
+    prefill_done: AtomicBool,
     /// Chunks dispatched for this request (0 until planned; the legacy
     /// blocking `submit` reads this after its flush).
     pub n_chunks: Arc<AtomicUsize>,
@@ -79,11 +86,26 @@ impl ReqShared {
         self.cancelled.load(Ordering::Relaxed)
     }
 
+    /// Whether the request's first token exists — its TTFT is decided, so
+    /// no execution-time deadline can still be enforced against it.
+    pub fn prefill_done(&self) -> bool {
+        self.prefill_done.load(Ordering::Relaxed)
+    }
+
+    /// Whether the request already reached a terminal state (outcome sent;
+    /// later [`ReqShared::resolve`] calls are no-ops).
+    pub fn is_resolved(&self) -> bool {
+        self.outcome.lock().unwrap().is_none()
+    }
+
     /// Stream one token to the handle. A bounded stream applies its
     /// backpressure policy here; a `Fail`-policy overflow sheds the
     /// request on the spot (the cancel flag then tears the pipeline down
     /// at the next stage boundary, releasing everything it holds).
     pub fn stream_token(&self, index: usize, token: i32) {
+        if index == 0 {
+            self.prefill_done.store(true, Ordering::Relaxed);
+        }
         let at = self.submitted.elapsed().as_secs_f64();
         match self.tokens.push(&self.cancelled, StreamedToken { index, token, at }) {
             PushOutcome::Overflow => {
@@ -163,6 +185,7 @@ pub(crate) fn make_request_at(
     let shared = Arc::new(ReqShared {
         id: req.id,
         cancelled: Arc::clone(&cancelled),
+        prefill_done: AtomicBool::new(false),
         n_chunks: Arc::clone(&n_chunks),
         tokens: Arc::clone(&tokens),
         outcome: Mutex::new(Some(out_tx)),
@@ -217,6 +240,19 @@ impl RequestHandle {
     /// Whether [`RequestHandle::cancel`] has been called.
     pub fn cancel_requested(&self) -> bool {
         self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// The request's engine-level [`InterruptToken`] — the same flag
+    /// `cancel()` raises, shared with every engine call executing this
+    /// request, so tripping it aborts a mid-chunk prefill within one
+    /// engine step (stub backend). Unlike [`RequestHandle::cancel`],
+    /// tripping the raw token does *not* nudge the dispatcher: a request
+    /// still queued or parked resolves at its next scan rather than
+    /// promptly. Prefer `cancel()` unless you specifically need the
+    /// token (fault-injection scripts, composing with external abort
+    /// machinery).
+    pub fn interrupt_token(&self) -> InterruptToken {
+        InterruptToken::from_flag(Arc::clone(&self.cancelled))
     }
 
     /// Number of prefill chunks dispatched for this request so far (0
@@ -356,6 +392,13 @@ pub(crate) struct SubmitShared {
     pub observers: crate::serve::ObserverSet,
     /// The server epoch all observer timestamps are relative to.
     pub epoch: Instant,
+    /// The most recently assembled [`LoadSnapshot`], serving `load()`
+    /// calls within [`crate::serve::LOAD_SNAPSHOT_STALENESS`] without
+    /// touching the router/registry/receiver locks (the PR 4 follow-up:
+    /// high client fan-in polling `load()` no longer contends the submit
+    /// path). Refreshed by the dispatcher on every admission batch and by
+    /// the deadline monitor's ticks.
+    pub load_cache: Mutex<Option<LoadSnapshot>>,
 }
 
 impl SubmitShared {
@@ -428,10 +471,38 @@ impl SubmitShared {
         )
     }
 
-    /// Assemble a [`LoadSnapshot`] from the live structures. Locks are
-    /// taken one at a time (router → registry → receivers → controller),
-    /// never nested — the crate-wide locking discipline.
+    /// A [`LoadSnapshot`], served from the cache when the cached assembly
+    /// is younger than [`crate::serve::LOAD_SNAPSHOT_STALENESS`] *and* the
+    /// parked count has not moved since (a parked-count change is the
+    /// cheap tell that the dispatcher just reshaped the load, so callers
+    /// never observe a snapshot contradicting `n_parked()`). `at` and
+    /// `parked` are always stamped live; `assembled_at` records when the
+    /// lock-derived parts were actually gathered.
     pub fn load(&self) -> LoadSnapshot {
+        let now = self.epoch.elapsed().as_secs_f64();
+        let parked = self.parked.load(Ordering::Relaxed);
+        {
+            let cache = self.load_cache.lock().unwrap();
+            if let Some(s) = cache.as_ref() {
+                if now - s.assembled_at <= crate::serve::LOAD_SNAPSHOT_STALENESS
+                    && s.parked == parked
+                {
+                    let mut out = s.clone();
+                    out.at = now;
+                    return out;
+                }
+            }
+        }
+        self.refresh_load()
+    }
+
+    /// Assemble a fresh [`LoadSnapshot`] from the live structures and
+    /// store it in the cache. Locks are taken one at a time (cache →
+    /// release → router → registry → receivers → controller), never
+    /// nested — the crate-wide locking discipline. The dispatcher calls
+    /// this for every admission batch (decisions always see exact load);
+    /// everyone else goes through [`SubmitShared::load`].
+    pub fn refresh_load(&self) -> LoadSnapshot {
         let at = self.epoch.elapsed().as_secs_f64();
         let (block_tokens, decode) = {
             let r = self.router.lock().unwrap();
@@ -449,8 +520,9 @@ impl SubmitShared {
             transfers_in_service.push(rm.in_service());
         }
         let arrival_rate = self.controller.lock().unwrap().observed_rate(at);
-        LoadSnapshot {
+        let snap = LoadSnapshot {
             at,
+            assembled_at: at,
             block_tokens,
             decode,
             prefill_busy,
@@ -459,7 +531,9 @@ impl SubmitShared {
             transfers_in_service,
             parked: self.parked.load(Ordering::Relaxed),
             arrival_rate,
-        }
+        };
+        *self.load_cache.lock().unwrap() = Some(snap.clone());
+        snap
     }
 
     /// The live router block geometry, read under one short router lock:

@@ -57,6 +57,21 @@
 //! capacity for parked requests and emits
 //! [`Observer::on_cancel`](crate::api::Observer::on_cancel).
 //!
+//! The same release ladder backs the **execution-time deadline control
+//! plane**: the dispatcher's deadline monitor tracks every request with a
+//! TTFT deadline and, the moment its TTFT lower bound provably exceeds
+//! the deadline, trips the request's cooperative
+//! [`crate::runtime::InterruptToken`] — the engine checks it between
+//! layer steps, so even a *mid-chunk* prefill aborts within one engine
+//! step — emits
+//! [`Observer::on_interrupt`](crate::api::Observer::on_interrupt), and
+//! resolves the handle as `Completion::Shed` with the
+//! [`DEADLINE_BLOWN`](crate::metrics::DEADLINE_BLOWN) reason. Committed
+//! queue-clock estimates are credited back, so the freed SP workers
+//! immediately re-enter the planner's pool and a blown `Batch` request
+//! can no longer starve `Interactive` TTFT (see
+//! `docs/ARCHITECTURE.md` § "Execution-time deadlines & interrupts").
+//!
 //! Construct servers through [`crate::api::Tetris`] —
 //! `Tetris::builder().n_decode_workers(4).build_server(engine, n_workers)`
 //! — which validates the configuration (SP candidates vs. worker count,
@@ -110,9 +125,9 @@ use crate::api::Observer;
 use crate::baselines::PrefillScheduler;
 use crate::cluster::WorkerRegistry;
 use crate::latency::prefill::{PrefillModel, Sample, SpCoeffs};
-use crate::latency::DecodeQuickfit;
+use crate::latency::{DecodeQuickfit, TtftEstimator};
 use crate::metrics::{CancelStage, Completion, RequestMetrics, RunMetrics};
-use crate::runtime::{argmax, Engine};
+use crate::runtime::{argmax, Engine, ExecCtx, InterruptToken};
 use crate::sched::{DecodeRouter, ImprovementController};
 use crate::transfer::{Handshake, HandshakeReply, ReceiveManager};
 use anyhow::Result;
@@ -232,6 +247,14 @@ pub(crate) fn need_tokens(req: &ServeRequest) -> usize {
 /// server with [`crate::api::TetrisBuilder::starvation_bound`].
 pub const DEFAULT_STARVATION_BOUND: usize = 8;
 
+/// Staleness bound (seconds) on the cached [`LoadSnapshot`] behind
+/// [`Server::load`] / [`Client::load`]: the lock-derived parts of a served
+/// snapshot are never older than this. The dispatcher refreshes the cache
+/// on every admission batch and the deadline monitor on its ticks, so
+/// under load the cache is usually much fresher; an idle server re-assembles
+/// on demand once the bound elapses. `at` and `parked` are always live.
+pub const LOAD_SNAPSHOT_STALENESS: f64 = 0.02;
+
 /// The live server: `n_prefill` barrier-grouped prefill workers feeding
 /// [`DecodePool::n_workers`] continuous-batching decode workers through the
 /// shared [`DecodeRouter`], with submissions flowing through a dedicated
@@ -289,6 +312,7 @@ impl Server {
         controller: ImprovementController,
         admission: Box<dyn AdmissionController>,
         starvation_bound: usize,
+        deadline_safety: f64,
         observers: Vec<Arc<dyn Observer>>,
     ) -> Result<Server> {
         anyhow::ensure!(n_prefill >= 1, "need at least one prefill worker");
@@ -378,7 +402,13 @@ impl Server {
             controller: Arc::clone(&controller),
             observers: Arc::clone(&observers),
             epoch,
+            load_cache: Mutex::new(None),
         });
+
+        // The deadline monitor's TTFT lower bound: this machine's
+        // calibrated per-chunk latency, best case the widest group the
+        // worker pool could ever form.
+        let estimator = TtftEstimator::new(engine_coeffs, n_prefill, deadline_safety);
 
         let disp = Dispatcher {
             arch: engine.arch.clone(),
@@ -392,10 +422,12 @@ impl Server {
             epoch,
             engine_coeffs,
             decode_fit,
+            estimator,
             shared: Arc::clone(&submit_shared),
             tx: tx.clone(),
             rx,
             parked: ParkedQueue::new(starvation_bound),
+            deadlines: Vec::new(),
         };
         let dispatcher = std::thread::Builder::new()
             .name("tetris-dispatch".into())
@@ -456,11 +488,14 @@ impl Server {
         self.submit_shared.submit_burst(&self.tx, reqs, opts)
     }
 
-    /// A live [`LoadSnapshot`] of the cluster: decode slot/KV occupancy,
+    /// A [`LoadSnapshot`] of the cluster: decode slot/KV occupancy,
     /// prefill and decode lane clocks, transfer-backend availability,
     /// parked depth, and the sliding-window arrival rate — the same
-    /// coherent signal the dispatcher's admission controller and the
-    /// improvement-rate throttle read.
+    /// coherent signal the dispatcher's admission controller, the
+    /// deadline monitor, and the improvement-rate throttle read. Served
+    /// from a cache no staler than [`LOAD_SNAPSHOT_STALENESS`] (see
+    /// [`LoadSnapshot::assembled_at`]), so high-frequency polling never
+    /// contends the submit path's locks.
     pub fn load(&self) -> LoadSnapshot {
         self.submit_shared.load()
     }
@@ -723,9 +758,13 @@ fn prefill_worker(
             }
             WorkerJob::Lead { start, end, req, tokens, is_last, cancelled } => {
                 start.wait();
-                // A cancelled request's chunks skip their compute; the
-                // final chunk's leader still runs the cleanup below, so
-                // the router reservation is released exactly once.
+                // A cancelled request's chunks skip their compute, and a
+                // chunk already *running* when the flag trips aborts
+                // between engine layer steps (the cooperative interrupt
+                // token is this same flag) — mid-chunk prefill waste is
+                // bounded by one engine step. The final chunk's leader
+                // still runs the cleanup below, so the router reservation
+                // is released exactly once.
                 let mut logits = None;
                 if !cancelled.load(Ordering::Relaxed) {
                     // pull the cache
@@ -736,24 +775,32 @@ fn prefill_worker(
                     };
                     let mut padded = vec![0i32; a.l_bucket];
                     padded[..tokens.len()].copy_from_slice(&tokens);
+                    let token = InterruptToken::from_flag(Arc::clone(&cancelled));
+                    let ctx = ExecCtx { req, interrupt: Some(&token) };
                     let out = engine
-                        .prefill_chunk(
+                        .prefill_chunk_ctx(
                             &padded,
                             &hist_k,
                             &hist_v,
                             hist_len as i32,
                             tokens.len() as i32,
+                            &ctx,
                         )
                         .expect("prefill execution");
-                    // scatter new KV into the cache
-                    {
-                        let mut store = kv.lock().unwrap();
-                        let st = store.get_mut(&req).expect("kv registered");
-                        scatter_new_kv(&a, &mut st.k, &out.new_k, hist_len, tokens.len());
-                        scatter_new_kv(&a, &mut st.v, &out.new_v, hist_len, tokens.len());
-                        st.hist_len = hist_len + tokens.len();
+                    // An interrupted chunk writes no KV (partial layers
+                    // are discarded wholesale) and produces no logits —
+                    // the request is tearing down anyway.
+                    if let Some(out) = out {
+                        // scatter new KV into the cache
+                        {
+                            let mut store = kv.lock().unwrap();
+                            let st = store.get_mut(&req).expect("kv registered");
+                            scatter_new_kv(&a, &mut st.k, &out.new_k, hist_len, tokens.len());
+                            scatter_new_kv(&a, &mut st.v, &out.new_v, hist_len, tokens.len());
+                            st.hist_len = hist_len + tokens.len();
+                        }
+                        logits = Some(out.logits);
                     }
-                    logits = Some(out.logits);
                 }
                 if is_last {
                     let st = kv.lock().unwrap().remove(&req).expect("kv present");
@@ -941,7 +988,8 @@ fn decode_worker(
         for mut st in active {
             // Cancellation joins/leaves at step boundaries, exactly like
             // admission: blocks free before the next step runs. (A
-            // Fail-policy stream overflow raises the same flag.)
+            // Fail-policy stream overflow and the deadline monitor raise
+            // the same flag.)
             if st.job.shared.is_cancelled() {
                 cancel_decode(&router, &notify, st);
                 continue;
@@ -952,9 +1000,17 @@ fn decode_worker(
                 finishing(&router, &notify, st);
                 continue;
             }
+            let token = InterruptToken::from_flag(Arc::clone(&st.job.shared.cancelled));
+            let ctx = ExecCtx { req: st.job.req, interrupt: Some(&token) };
             let out = engine
-                .decode_step(st.last_token, &st.job.k, &st.job.v, st.hist_len as i32)
+                .decode_step_ctx(st.last_token, &st.job.k, &st.job.v, st.hist_len as i32, &ctx)
                 .expect("decode execution");
+            // A flag tripped mid-step aborts the step cooperatively; the
+            // release ladder is the same as the boundary check above.
+            let Some(out) = out else {
+                cancel_decode(&router, &notify, st);
+                continue;
+            };
             // append the token's KV
             let tok = a.tok_elems();
             for layer in 0..a.n_layers {

@@ -203,6 +203,14 @@ impl ReceiveManager {
         self.backends.iter().filter(|b| b.is_none()).count()
     }
 
+    /// Backends currently held by one request — 0 once the request
+    /// finished or was aborted. The interrupt/cancel release ladder's
+    /// leak check: after [`ReceiveManager::abort`] this must be 0 for the
+    /// aborted request, whatever stage the handoff was in.
+    pub fn holds(&self, req: ReqId) -> usize {
+        self.backends.iter().filter(|b| **b == Some(req)).count()
+    }
+
     /// Requests currently admitted to the service order (shards streaming
     /// or queued) — receive-side pressure for load snapshots.
     pub fn in_service(&self) -> usize {
@@ -312,7 +320,9 @@ mod tests {
         assert_eq!(rm.handshake(hs(1, 0, 0.0)), HandshakeReply::Granted { backend: 0 });
         assert_eq!(rm.handshake(hs(2, 0, 0.5)), HandshakeReply::Wait);
         assert_eq!(rm.free_backends(), 0);
+        assert_eq!(rm.holds(1), 1, "req 1 holds the backend pre-abort");
         let grants = rm.abort(1);
+        assert_eq!(rm.holds(1), 0, "abort releases every held backend");
         assert_eq!(grants.len(), 1, "freed backend re-pumped to req 2");
         assert_eq!(grants[0].0.req, 2);
         assert_eq!(rm.outstanding(1), 0, "aborted request fully forgotten");

@@ -1,0 +1,278 @@
+//! Deterministic fault-injection harness for the live serving stack.
+//!
+//! Built on the stub engine's [`StepHook`] seam
+//! ([`Engine::stub_with_hook`]): every engine layer step — the granularity
+//! at which cooperative interrupts are checked — reports to the harness,
+//! which maintains a **virtual step clock** (global and per-request logical
+//! step counters, independent of wall time), fires **scripted interrupt
+//! trips** at exact request steps, and optionally injects a fixed
+//! **per-step delay** so timing-dependent windows (mid-chunk interrupts,
+//! deadline-monitor firings) become wide, deterministic targets instead of
+//! nanosecond races.
+//!
+//! The hook runs *before* the engine's interrupt check for the same step,
+//! so a trip scripted at request step `N` aborts step `N` itself: a
+//! tripped chunk's observed step count is exactly `N + 1` (the hook at `N`
+//! fired, the layer did not run) — the "interrupt lands within one engine
+//! step" bar `integration_deadline.rs` asserts on the virtual clock.
+//!
+//! Conventions: engine calls made outside a request context (the server's
+//! startup calibration, the legacy `prefill_chunk` wrapper) report request
+//! id 0 — keep real request ids ≥ 1 in harness tests. Call
+//! [`FaultHarness::set_step_delay`] *after* `build_server` so the startup
+//! calibration (which runs through the same hook) stays fast and the
+//! calibrated coefficients describe the undelayed engine.
+#![allow(dead_code)] // each test binary includes only the helpers it uses
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use tetris::api::{Tetris, TetrisBuilder, TraceEvent};
+use tetris::config::ClusterConfig;
+use tetris::latency::prefill::{PrefillModel, SpCoeffs};
+use tetris::runtime::{Engine, InterruptToken, StepHook, StepPoint, TinyArch};
+use tetris::serve::{Server, ServeRequest};
+
+/// One scripted interrupt that has fired: which request, at which of its
+/// logical steps, and at which global virtual-clock step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fired {
+    pub req: u64,
+    pub req_step: u64,
+    pub global_step: u64,
+}
+
+struct Trip {
+    req: u64,
+    at_step: u64,
+    token: InterruptToken,
+}
+
+#[derive(Default)]
+struct Script {
+    /// Logical engine steps observed per request id.
+    per_req: HashMap<u64, u64>,
+    /// Scripted trips not yet fired.
+    trips: Vec<Trip>,
+    /// Trips that fired, in firing order.
+    fired: Vec<Fired>,
+}
+
+struct HarnessState {
+    global_steps: AtomicU64,
+    delay_nanos: AtomicU64,
+    script: Mutex<Script>,
+}
+
+/// The harness: build an engine through [`FaultHarness::engine`], script
+/// trips with [`FaultHarness::trip_at`], read the virtual clock with
+/// [`FaultHarness::steps_of`] / [`FaultHarness::global_steps`].
+pub struct FaultHarness {
+    state: Arc<HarnessState>,
+}
+
+impl FaultHarness {
+    pub fn new() -> Self {
+        FaultHarness {
+            state: Arc::new(HarnessState {
+                global_steps: AtomicU64::new(0),
+                delay_nanos: AtomicU64::new(0),
+                script: Mutex::new(Script::default()),
+            }),
+        }
+    }
+
+    /// The harness's [`StepHook`]: virtual-clock bookkeeping, scripted
+    /// trips, injected delay — in that order, all before the engine's own
+    /// interrupt check for the step.
+    pub fn hook(&self) -> StepHook {
+        let st = Arc::clone(&self.state);
+        Arc::new(move |p: &StepPoint| {
+            let g = st.global_steps.fetch_add(1, Ordering::Relaxed);
+            {
+                let mut s = st.script.lock().unwrap();
+                let count = s.per_req.entry(p.req).or_insert(0);
+                let step = *count;
+                *count += 1;
+                let mut hit = Vec::new();
+                for (i, t) in s.trips.iter().enumerate() {
+                    if t.req == p.req && t.at_step == step {
+                        hit.push(i);
+                    }
+                }
+                for i in hit.into_iter().rev() {
+                    let t = s.trips.swap_remove(i);
+                    t.token.trip();
+                    s.fired.push(Fired { req: p.req, req_step: step, global_step: g });
+                }
+            }
+            let nanos = st.delay_nanos.load(Ordering::Relaxed);
+            if nanos > 0 {
+                std::thread::sleep(Duration::from_nanos(nanos));
+            }
+        })
+    }
+
+    /// A stub engine whose every layer step reports to this harness.
+    pub fn engine(&self, arch: TinyArch) -> Arc<Engine> {
+        Arc::new(Engine::stub_with_hook(arch, self.hook()))
+    }
+
+    /// Inject a fixed delay at every engine step from now on (logical time
+    /// stays exact; wall time stretches so scripted windows are wide).
+    pub fn set_step_delay(&self, d: Duration) {
+        self.state.delay_nanos.store(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Script: trip `token` when request `req` reaches its `at_step`-th
+    /// engine step (0-based, prefill and decode steps counted together).
+    pub fn trip_at(&self, req: u64, at_step: u64, token: InterruptToken) {
+        self.state.script.lock().unwrap().trips.push(Trip { req, at_step, token });
+    }
+
+    /// Logical engine steps observed for `req` so far.
+    pub fn steps_of(&self, req: u64) -> u64 {
+        self.state.script.lock().unwrap().per_req.get(&req).copied().unwrap_or(0)
+    }
+
+    /// Global virtual-clock steps across all requests (includes the
+    /// server's startup calibration, which reports as request 0).
+    pub fn global_steps(&self) -> u64 {
+        self.state.global_steps.load(Ordering::Relaxed)
+    }
+
+    /// Scripted trips that have fired, in firing order.
+    pub fn fired(&self) -> Vec<Fired> {
+        self.state.script.lock().unwrap().fired.clone()
+    }
+}
+
+impl Default for FaultHarness {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The harness tests' engine shape: 4 layers over 32-token pieces, so a
+/// 256-token prompt is 32 engine steps — fine-grained interrupt targets.
+/// Buckets match `TinyArch::stub_default` (prompts to 512, decode to 640).
+pub fn harness_arch() -> TinyArch {
+    TinyArch {
+        n_layers: 4,
+        d_model: 8,
+        n_heads: 2,
+        head_dim: 4,
+        vocab: 64,
+        l_bucket: 32,
+        c_bucket: 512,
+        decode_c_bucket: 640,
+    }
+}
+
+/// A scheduler model with A100-like SP shape so multi-chunk CDSP paths get
+/// exercised even on the CPU substrate (DESIGN.md §3) — the same model the
+/// other serve integration suites plan with.
+pub fn sched_model(n: usize) -> PrefillModel {
+    let mut m = PrefillModel::new();
+    let mut sp = 1;
+    while sp <= n {
+        m.insert(
+            sp,
+            SpCoeffs {
+                a: 0.002 * sp as f64,
+                b: 1.0e-4 / sp as f64,
+                c: 2.0e-7 / sp as f64,
+                d: 1.0e-7 / sp as f64,
+            },
+        );
+        sp *= 2;
+    }
+    m
+}
+
+/// The shared server shape for the deadline/fault suites.
+pub fn builder(n_prefill: usize, n_decode: usize) -> TetrisBuilder {
+    let sp: Vec<usize> = [1usize, 2, 4].into_iter().filter(|&s| s <= n_prefill).collect();
+    Tetris::builder()
+        .cluster(ClusterConfig::tiny(n_prefill, n_decode))
+        .n_decode_workers(n_decode)
+        .sp_candidates(sp)
+        .min_chunk(32)
+        .prefill_model(sched_model(n_prefill))
+}
+
+/// A deterministic request shape (ids ≥ 1 in harness tests — id 0 is the
+/// calibration/anonymous engine context).
+pub fn req(id: u64, len: usize, out: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: (0..len).map(|i| ((i * 7 + id as usize) % 64) as i32).collect(),
+        output_len: out,
+    }
+}
+
+/// Poll until `pred` holds (10s guard) — for observing background teardown.
+pub fn wait_until(mut pred: impl FnMut() -> bool, what: &str) {
+    let t0 = Instant::now();
+    while !pred() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// The zero-leak bar every interrupt/shed/cancel path must meet: router
+/// accounting pristine, all KV blocks free, all transfer backends free,
+/// nothing parked.
+pub fn assert_no_leaks(server: &Server, blocks_per_instance: usize, backends: usize) {
+    let router = server.router_state();
+    assert_eq!(router.in_flight_transfers(), 0, "leaked in-flight transfer");
+    assert_eq!(
+        router.available_blocks(),
+        router.total_blocks(),
+        "aggregate router accounting must return to pristine"
+    );
+    for (i, inst) in router.instances.iter().enumerate() {
+        assert_eq!(inst.virtual_blocks, 0, "instance {i} leaked virtual blocks");
+        assert_eq!(inst.active_batch, 0, "instance {i} leaked batch slots");
+        assert_eq!(
+            inst.blocks.free_blocks(),
+            blocks_per_instance,
+            "instance {i} leaked KV blocks"
+        );
+        assert_eq!(
+            server.free_transfer_backends(i),
+            backends,
+            "instance {i} leaked transfer backends"
+        );
+    }
+    assert_eq!(server.n_parked(), 0, "requests left parked");
+}
+
+/// Timestamp-free signature of a recorded event sequence — what the
+/// seeded-determinism test compares across runs (wall-clock timestamps
+/// differ run to run; everything else must not). Shed/interrupt reasons
+/// are dropped, not embedded: they legitimately carry wall-clock-derived
+/// values (bound arithmetic, queue ages), which would make the signature
+/// flaky the moment a deadline shed enters a determinism trace.
+pub fn event_shape(events: &[TraceEvent]) -> Vec<String> {
+    events
+        .iter()
+        .map(|e| match e {
+            TraceEvent::Arrival { req, .. } => format!("arrival:{req}"),
+            TraceEvent::Plan { req, n_chunks, max_sp, .. } => {
+                format!("plan:{req}:{n_chunks}:{max_sp}")
+            }
+            TraceEvent::DecodeAssign { req, instance, .. } => {
+                format!("assign:{req}:{instance}")
+            }
+            TraceEvent::PrefillDone { req, .. } => format!("prefill_done:{req}"),
+            TraceEvent::Transfer { req, backend, .. } => format!("transfer:{req}:{backend}"),
+            TraceEvent::Token { req, .. } => format!("token:{req}"),
+            TraceEvent::Cancel { req, stage, .. } => format!("cancel:{req}:{}", stage.tag()),
+            TraceEvent::Shed { req, .. } => format!("shed:{req}"),
+            TraceEvent::Interrupt { req, .. } => format!("interrupt:{req}"),
+        })
+        .collect()
+}

@@ -207,9 +207,13 @@ fn interactive_ttft_improves_under_overload_vs_no_admission_baseline() {
 #[test]
 fn sheds_release_every_resource_under_mixed_churn() {
     // Acceptance (b) at scale: a mixed-class churn with tight capacity —
-    // sheds, parks, cancels, and completions interleaved — must leave the
-    // router, block pools, and transfer backends pristine, with every
-    // handle resolved and shed events matching shed resolutions 1:1.
+    // admission-time sheds, *execution-time* deadline sheds (the 6ms Batch
+    // deadlines are blown mid-flight and interrupted by the deadline
+    // monitor), parks, cancels, and completions interleaved — must leave
+    // the router, block pools, and transfer backends pristine, with every
+    // handle resolved exactly once (at most one terminal event per
+    // request — no double `Completion` however the resolutions race) and
+    // shed/cancel events matching resolutions 1:1.
     let rec = Arc::new(TraceRecorder::new());
     let server = builder(2, 2)
         .sim_params(SimParams {
@@ -227,7 +231,7 @@ fn sheds_release_every_resource_under_mixed_churn() {
         let (shape, opts) = match i % 4 {
             0 => (req(i, 300, 40), SubmitOptions::best_effort()),
             1 => (req(i, 40, 4), SubmitOptions::interactive()),
-            2 => (req(i, 120, 8), SubmitOptions::batch()),
+            2 => (req(i, 120, 8), SubmitOptions::batch().deadline(0.006)),
             _ => (req(i, 60, 6), SubmitOptions::interactive().deadline(5.0)),
         };
         let h = client.submit_with(&shape, opts).expect("submitted");
@@ -236,12 +240,12 @@ fn sheds_release_every_resource_under_mixed_churn() {
         }
         handles.push(h);
     }
-    let mut finished = 0usize;
+    let mut finished: Vec<u64> = Vec::new();
     let mut shed = 0usize;
     let mut cancelled = 0usize;
     for h in &mut handles {
         match h.wait() {
-            Completion::Finished(_) => finished += 1,
+            Completion::Finished(_) => finished.push(h.id()),
             Completion::Shed(reason) => {
                 assert!(!reason.is_empty());
                 shed += 1;
@@ -250,11 +254,84 @@ fn sheds_release_every_resource_under_mixed_churn() {
             Completion::Dropped(msg) => panic!("dropped: {msg}"),
         }
     }
-    assert_eq!(finished + shed + cancelled, 60, "every handle resolves");
-    assert!(finished > 0, "uncontended requests must finish");
+    assert_eq!(finished.len() + shed + cancelled, 60, "every handle resolves");
+    assert!(!finished.is_empty(), "uncontended requests must finish");
     assert_eq!(rec.count("shed"), shed, "shed events match Shed resolutions");
     assert_eq!(rec.count("cancel"), cancelled, "cancel events match resolutions");
+    // Exactly-once terminal resolution per handle, however execution-time
+    // deadline sheds, admission sheds, and client cancels interleaved:
+    // at most one terminal (cancel|shed) event per request id, none for
+    // finished requests, at most one interrupt per request.
+    let mut terminal: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    let mut interrupts: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    for e in rec.events() {
+        match e.kind() {
+            "cancel" | "shed" => *terminal.entry(e.req()).or_insert(0) += 1,
+            "interrupt" => *interrupts.entry(e.req()).or_insert(0) += 1,
+            _ => {}
+        }
+    }
+    for (id, n) in &terminal {
+        assert_eq!(*n, 1, "request {id} got {n} terminal events (double resolution)");
+    }
+    for (id, n) in &interrupts {
+        assert!(*n <= 1, "request {id} interrupted {n} times");
+    }
+    for id in &finished {
+        assert!(!terminal.contains_key(id), "finished request {id} also got a terminal event");
+    }
+    assert_eq!(terminal.len(), shed + cancelled, "terminal events match resolutions 1:1");
     assert_no_leaks(&server, 50, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn load_snapshots_are_cached_within_the_staleness_bound() {
+    // Satellite (ROADMAP PR 4 follow-up): `Server::load()` serves a cached
+    // snapshot — back-to-back calls share one lock-derived assembly, the
+    // cache reassembles once LOAD_SNAPSHOT_STALENESS elapses, and
+    // dispatcher activity refreshes it without waiting for staleness.
+    use tetris::serve::LOAD_SNAPSHOT_STALENESS;
+    let server = builder(2, 1)
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    // Back-to-back loads share one assembly (retry a few times so a
+    // pathological scheduler pause between the two calls cannot flake).
+    let mut cached = None;
+    for _ in 0..5 {
+        let l1 = server.load();
+        let l2 = server.load();
+        assert!(l2.at >= l1.at, "`at` is stamped live");
+        assert!(
+            l2.at - l2.assembled_at <= LOAD_SNAPSHOT_STALENESS + 1e-9,
+            "served snapshots never exceed the staleness bound \
+             (age {})",
+            l2.at - l2.assembled_at
+        );
+        if l2.assembled_at == l1.assembled_at {
+            cached = Some(l2);
+            break;
+        }
+    }
+    let cached = cached.expect("back-to-back loads must share one cached assembly");
+    // Past the bound, the cache reassembles.
+    std::thread::sleep(Duration::from_secs_f64(LOAD_SNAPSHOT_STALENESS * 2.0));
+    let after = server.load();
+    assert!(
+        after.assembled_at > cached.assembled_at,
+        "a stale cache must reassemble ({} !> {})",
+        after.assembled_at,
+        cached.assembled_at
+    );
+    // Dispatcher activity (an admission batch) refreshes the cache
+    // immediately — callers see post-admission load without re-assembling.
+    let mut h = server.submit_async(&req(1, 40, 2)).expect("submitted");
+    assert!(h.wait().is_finished());
+    let refreshed = server.load();
+    assert!(
+        refreshed.assembled_at > after.assembled_at,
+        "the admission batch must have refreshed the cache"
+    );
     server.shutdown().unwrap();
 }
 

@@ -1,0 +1,455 @@
+//! Integration: the execution-time deadline control plane — engine-level
+//! prefill interrupts driven through the deterministic fault-injection
+//! harness (`tests/harness/mod.rs`).
+//!
+//! The acceptance bars proven here:
+//!
+//! (a) a mid-chunk interrupt lands within **one engine step** on the
+//!     harness's virtual clock;
+//! (b) a 200-request mixed-deadline churn — execution-time sheds,
+//!     admission sheds, client cancels, completions interleaved — leaks
+//!     zero blocks/backends/slots and resolves every handle exactly once;
+//! (c) deadline-blown `Batch` load is interrupted mid-prefill and the
+//!     freed capacity is re-planned: a co-running `Interactive` request's
+//!     measured TTFT improves vs. a no-interrupt baseline in the same
+//!     test;
+//! (d) same trace + same interrupt script ⇒ identical event sequences
+//!     across runs (the harness locked in as a regression tool);
+//! plus proptests for the TTFT lower-bound estimator: monotone in queue
+//! depth and prompt length, never exceeding the true completion time on a
+//! deterministic virtual trace.
+
+mod harness;
+
+use harness::{assert_no_leaks, builder, event_shape, harness_arch, req, wait_until, FaultHarness};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+use tetris::api::{CancelStage, Completion, SubmitOptions, TraceRecorder};
+use tetris::baselines::PrefillScheduler;
+use tetris::cluster::PoolView;
+use tetris::latency::prefill::SpCoeffs;
+use tetris::latency::TtftEstimator;
+use tetris::metrics::DEADLINE_BLOWN;
+use tetris::prop_assert;
+use tetris::sched::plan::{CdspPlan, ChunkPlan};
+use tetris::sim::SimParams;
+use tetris::util::proptest::{check_default, Gen};
+use tetris::util::rng::Pcg64;
+
+/// Roomy decode pool: nothing parks for capacity.
+fn roomy() -> SimParams {
+    SimParams { backends_per_decode: 2, decode_capacity_tokens: 16_000, block_tokens: 16 }
+}
+
+#[test]
+fn mid_chunk_interrupt_lands_within_one_engine_step() {
+    // Acceptance (a), on the virtual clock. 256-token prompts over
+    // 32-token pieces × 4 layers = 32 prefill steps per request.
+    let h = FaultHarness::new();
+    let server = builder(1, 1)
+        .sim_params(roomy())
+        .build_server(h.engine(harness_arch()), 1)
+        .expect("server starts");
+    h.set_step_delay(Duration::from_micros(500));
+
+    // Uninterrupted twin: establishes the full step count.
+    let mut full = server.submit_async(&req(1, 256, 2)).expect("submitted");
+    assert!(full.wait().is_finished());
+    let full_steps = h.steps_of(1);
+    assert!(full_steps >= 32, "4 layers × 8 pieces of prefill, got {full_steps}");
+
+    // Interrupted twin: script a trip at its 10th engine step — squarely
+    // mid-chunk (step 10 is layer 2 of the third 32-token piece).
+    let mut cut = server.submit_async(&req(2, 256, 2)).expect("submitted");
+    h.trip_at(2, 10, cut.interrupt_token());
+    match cut.wait() {
+        Completion::Cancelled(stage) => assert!(
+            matches!(stage, CancelStage::Queued | CancelStage::Prefill | CancelStage::Transfer),
+            "tripped before decode, got {stage:?}"
+        ),
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    // The hook at step 10 tripped the token; the engine's check for that
+    // very step aborted the layer — exactly one more step was *observed*,
+    // none executed, and every later piece was skipped outright.
+    assert_eq!(
+        h.steps_of(2),
+        11,
+        "mid-chunk interrupt must land within one engine step of the trip"
+    );
+    let fired = h.fired();
+    assert_eq!(fired.len(), 1);
+    assert_eq!((fired[0].req, fired[0].req_step), (2, 10));
+    assert!(full_steps > h.steps_of(2), "the interrupt saved real engine work");
+
+    wait_until(
+        || {
+            let r = server.router_state();
+            r.in_flight_transfers() == 0 && r.available_blocks() == r.total_blocks()
+        },
+        "interrupt teardown",
+    );
+    assert_no_leaks(&server, 1000, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn deadline_monitor_interrupts_a_blown_request_mid_prefill() {
+    // A 256-token prompt at 5ms per engine step is ≈ 160ms of prefill;
+    // with an 80ms TTFT deadline the monitor must fire mid-prefill —
+    // resolving the handle as a DEADLINE_BLOWN shed, emitting the
+    // interrupt event, and aborting the engine work well short of the
+    // full 32 steps.
+    let h = FaultHarness::new();
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(1, 1)
+        .sim_params(roomy())
+        .observe(rec.clone())
+        .build_server(h.engine(harness_arch()), 1)
+        .expect("server starts");
+    h.set_step_delay(Duration::from_millis(5));
+
+    let mut a = server
+        .submit_async_with(&req(1, 256, 4), SubmitOptions::batch().deadline(0.080))
+        .expect("submitted");
+    let outcome = a.wait();
+    assert!(
+        outcome.deadline_blown(),
+        "expected an execution-time deadline shed, got {outcome:?}"
+    );
+    if let Completion::Shed(reason) = &outcome {
+        assert!(reason.starts_with(DEADLINE_BLOWN), "{reason}");
+        assert!(reason.contains("deadline"), "{reason}");
+    }
+    let steps = h.steps_of(1);
+    assert!(
+        (1..32).contains(&steps),
+        "the interrupt must land mid-prefill (ran {steps} of 32 steps)"
+    );
+    assert_eq!(rec.count("interrupt"), 1, "one on_interrupt per monitor firing");
+    assert_eq!(rec.count("shed"), 1, "the shed is the terminal event");
+    assert_eq!(rec.count("cancel"), 0, "the losing cancel resolution stays silent");
+
+    wait_until(
+        || {
+            let r = server.router_state();
+            r.in_flight_transfers() == 0 && r.available_blocks() == r.total_blocks()
+        },
+        "deadline-shed teardown",
+    );
+    assert_no_leaks(&server, 1000, 2);
+    server.shutdown().unwrap();
+}
+
+/// Run the capacity-pinned co-running workload once: Batch request A (18
+/// of 20 KV blocks, 32 slow prefill steps) submitted first, Interactive B
+/// (3 blocks) right behind it — B always parks. With `deadline` set on A,
+/// the monitor interrupts A mid-prefill and B's TTFT collapses to ~the
+/// deadline; without it, B waits for A's entire prefill + decode.
+/// Returns (B's TTFT, A blown?).
+fn co_running_interactive_ttft(a_deadline: Option<f64>) -> (f64, bool) {
+    let h = FaultHarness::new();
+    let server = builder(1, 1)
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 320, // 20 blocks of 16
+            block_tokens: 16,
+        })
+        .build_server(h.engine(harness_arch()), 1)
+        .expect("server starts");
+    h.set_step_delay(Duration::from_millis(3));
+
+    let a_opts = match a_deadline {
+        Some(d) => SubmitOptions::batch().deadline(d),
+        None => SubmitOptions::batch(),
+    };
+    // A: 240 prompt + 40 output = 280 tokens → 18 blocks; prefill is 32
+    // steps × (4 layers × 3ms) ≈ 96ms, decode ≈ 39 steps × 12ms more.
+    let mut a = server.submit_async_with(&req(1, 240, 40), a_opts).expect("A submitted");
+    // B: 40 + 3 = 43 tokens → 3 blocks > the 2 left — parks behind A.
+    let mut b = server.submit_async(&req(2, 40, 3)).expect("B submitted");
+
+    let b_ttft = match b.wait() {
+        Completion::Finished(m) => m.ttft(),
+        other => panic!("Interactive B must finish, got {other:?}"),
+    };
+    let a_blown = a.wait().deadline_blown();
+    wait_until(
+        || {
+            let r = server.router_state();
+            r.in_flight_transfers() == 0 && r.available_blocks() == r.total_blocks()
+        },
+        "workload teardown",
+    );
+    assert_no_leaks(&server, 20, 2);
+    server.shutdown().unwrap();
+    (b_ttft, a_blown)
+}
+
+#[test]
+fn interrupting_blown_batch_load_improves_interactive_ttft_vs_baseline() {
+    // Acceptance (c): same workload, same test — the only difference is
+    // whether A carries a deadline the monitor can enforce.
+    let (baseline_ttft, baseline_blown) = co_running_interactive_ttft(None);
+    assert!(!baseline_blown, "no deadline, nothing to blow");
+    let (interrupt_ttft, a_blown) = co_running_interactive_ttft(Some(0.040));
+    assert!(a_blown, "A's 40ms deadline must be blown mid-prefill");
+    assert!(
+        interrupt_ttft < baseline_ttft,
+        "freed capacity must be re-planned: B's TTFT with the interrupt \
+         ({interrupt_ttft:.4}s) must beat the no-interrupt baseline \
+         ({baseline_ttft:.4}s)"
+    );
+    assert!(
+        interrupt_ttft < baseline_ttft * 0.75,
+        "the improvement must be structural, not noise: {interrupt_ttft:.4}s \
+         vs {baseline_ttft:.4}s"
+    );
+}
+
+#[test]
+fn churn_200_mixed_deadlines_resolves_every_handle_once_and_leaks_nothing() {
+    // Acceptance (b): 200 requests across classes, deadlines from
+    // impossible to generous, a cancel sprinkled on every 9th — the
+    // router, block pools, and transfer backends must come back pristine,
+    // every handle resolves, and per request at most one terminal event
+    // (and at most one interrupt) is ever emitted.
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(2, 2)
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 50 * 16,
+            block_tokens: 16,
+        })
+        .observe(rec.clone())
+        .build_server(Arc::new(tetris::runtime::Engine::stub_default()), 2)
+        .expect("server starts");
+    let client = server.client();
+    let mut handles = Vec::new();
+    for i in 1..=200u64 {
+        let (shape, opts) = match i % 5 {
+            0 => (req(i, 300, 40), SubmitOptions::best_effort()),
+            1 => (req(i, 40, 4), SubmitOptions::interactive()),
+            2 => (req(i, 120, 8), SubmitOptions::batch().deadline(0.002)),
+            3 => (req(i, 60, 6), SubmitOptions::interactive().deadline(5.0)),
+            _ => (req(i, 200, 20), SubmitOptions::batch().deadline(0.015)),
+        };
+        let h = client.submit_with(&shape, opts).expect("submitted");
+        if i % 9 == 0 {
+            h.cancel();
+        }
+        handles.push(h);
+    }
+    let mut finished = Vec::new();
+    let mut shed = 0usize;
+    let mut deadline_sheds = 0usize;
+    let mut cancelled = 0usize;
+    for h in &mut handles {
+        match h.wait() {
+            Completion::Finished(_) => finished.push(h.id()),
+            c @ Completion::Shed(_) => {
+                if c.deadline_blown() {
+                    deadline_sheds += 1;
+                }
+                shed += 1;
+            }
+            Completion::Cancelled(_) => cancelled += 1,
+            Completion::Dropped(msg) => panic!("dropped: {msg}"),
+        }
+    }
+    assert_eq!(finished.len() + shed + cancelled, 200, "every handle resolves");
+    assert!(!finished.is_empty(), "uncontended requests must finish");
+    assert!(shed >= 1, "impossible deadlines must shed");
+
+    // Exactly-once terminal resolution, observed through the event stream:
+    // per request at most one cancel-or-shed event, finished requests
+    // none, and the totals match the resolutions 1:1.
+    let mut terminal: HashMap<u64, usize> = HashMap::new();
+    let mut interrupts: HashMap<u64, usize> = HashMap::new();
+    for e in rec.events() {
+        match e.kind() {
+            "cancel" | "shed" => *terminal.entry(e.req()).or_insert(0) += 1,
+            "interrupt" => *interrupts.entry(e.req()).or_insert(0) += 1,
+            _ => {}
+        }
+    }
+    for (req, n) in &terminal {
+        assert_eq!(*n, 1, "request {req} got {n} terminal events (double resolution)");
+    }
+    for (req, n) in &interrupts {
+        assert!(*n <= 1, "request {req} interrupted {n} times");
+    }
+    for id in &finished {
+        assert!(!terminal.contains_key(id), "finished request {id} also got a terminal event");
+    }
+    assert_eq!(terminal.len(), shed + cancelled, "terminal events match resolutions 1:1");
+    assert_eq!(rec.count("shed"), shed);
+    assert_eq!(rec.count("cancel"), cancelled);
+    if deadline_sheds > 0 {
+        assert!(rec.count("interrupt") >= 1, "execution-time sheds emit on_interrupt");
+    }
+
+    wait_until(
+        || {
+            let r = server.router_state();
+            r.in_flight_transfers() == 0 && r.available_blocks() == r.total_blocks()
+        },
+        "churn teardown",
+    );
+    assert_no_leaks(&server, 50, 2);
+    server.shutdown().unwrap();
+}
+
+/// A timing-independent policy for the determinism runs: always one chunk
+/// on instance 0, whatever the queue clocks say.
+struct DetSp1;
+
+impl PrefillScheduler for DetSp1 {
+    fn schedule(&self, prompt_len: usize, _pool: &PoolView, _rate: f64) -> Option<CdspPlan> {
+        Some(CdspPlan {
+            chunks: vec![ChunkPlan { len: prompt_len, group: vec![0] }],
+            est_ttft: 1e-9,
+        })
+    }
+    fn name(&self) -> String {
+        "det-sp1".into()
+    }
+}
+
+/// One fully serialized run of a seeded trace with a fixed interrupt
+/// script: 1 prefill worker, 1 decode worker, each request driven to a
+/// terminal state before the next submits, and — when `script` is on —
+/// every 3rd request tripped at its 5th engine step. Returns the
+/// timestamp-free event signature.
+fn deterministic_run(seed: u64, script: bool) -> Vec<String> {
+    let h = FaultHarness::new();
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(1, 1)
+        .register_policy("det-sp1", |_ctx| Ok(Box::new(DetSp1)))
+        .policy("det-sp1")
+        .sim_params(roomy())
+        .observe(rec.clone())
+        .build_server(h.engine(harness_arch()), 1)
+        .expect("server starts");
+    // Wide, deterministic windows: step 5 is ≥ 2ms after a request's
+    // first engine step, so the trip registered at submission always
+    // precedes it.
+    h.set_step_delay(Duration::from_micros(400));
+    let mut rng = Pcg64::new(seed);
+    for i in 1..=12u64 {
+        let len = 32 + 32 * rng.below(4); // 32..128 tokens
+        let out = 2 + rng.below(3);
+        let mut handle = server.submit_async(&req(i, len, out)).expect("submitted");
+        if script && i % 3 == 0 {
+            h.trip_at(i, 5, handle.interrupt_token());
+        }
+        let _ = handle.wait(); // serialize: terminal before the next submit
+    }
+    server.shutdown().unwrap();
+    event_shape(&rec.events())
+}
+
+#[test]
+fn same_trace_and_interrupt_script_replays_identical_event_sequences() {
+    // Acceptance (d): the fault harness as a regression tool — identical
+    // seeds and scripts must reproduce the event stream exactly.
+    let first = deterministic_run(7, true);
+    let second = deterministic_run(7, true);
+    assert_eq!(first, second, "seeded replay must be event-identical");
+    assert!(
+        first.iter().any(|e| e.starts_with("cancel:")),
+        "the script must actually interrupt something: {first:?}"
+    );
+    assert!(first.iter().any(|e| e.starts_with("token:")), "and others must finish");
+    // The same trace without the interrupt script is a different run —
+    // the signature discriminates behaviour, it is not inert.
+    let unscripted = deterministic_run(7, false);
+    assert_ne!(first, unscripted, "the signature must reflect the interrupt script");
+    assert!(
+        !unscripted.iter().any(|e| e.starts_with("cancel:")),
+        "no script, no interrupts: {unscripted:?}"
+    );
+}
+
+// ---- TTFT lower-bound estimator properties (satellite) ---------------------
+
+fn gen_coeffs(g: &mut Gen) -> SpCoeffs {
+    SpCoeffs {
+        a: g.f64_in(0.0, 0.01),
+        b: g.f64_in(0.0, 1e-4),
+        c: g.f64_in(0.0, 1e-7),
+        d: g.f64_in(0.0, 1e-7),
+    }
+}
+
+#[test]
+fn prop_ttft_bound_is_monotone_in_queue_depth_and_prompt_length() {
+    check_default("ttft-bound-monotone", |g: &mut Gen| {
+        let est = TtftEstimator::new(gen_coeffs(g), g.usize_in(1, 16), g.f64_in(0.05, 1.0));
+        let len = g.usize_in(0, 8192);
+        let longer = len + g.usize_in(1, 8192);
+        let floor = g.f64_in(0.0, 5.0);
+        let deeper = floor + g.f64_in(0.0, 5.0);
+        let waited = g.f64_in(0.0, 10.0);
+        let base = est.ttft_bound(waited, len, floor);
+        prop_assert!(
+            est.ttft_bound(waited, longer, floor) >= base,
+            "longer prompt lowered the bound"
+        );
+        prop_assert!(
+            est.ttft_bound(waited, len, deeper) >= base,
+            "deeper queue lowered the bound"
+        );
+        prop_assert!(
+            est.ttft_bound(waited + 0.1, len, floor) > base,
+            "more elapsed wait lowered the bound"
+        );
+        prop_assert!(base >= waited, "the bound can never undercut time already spent");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ttft_bound_never_exceeds_true_completion_on_virtual_traces() {
+    // A deterministic virtual cluster: `n` FIFO lanes whose chunk cost is
+    // *exactly* the quickfit (the best case the estimator assumes). Each
+    // arrival is scheduled greedily on the earliest-free lane; the bound
+    // taken at arrival — and again mid-wait — must never exceed the true
+    // TTFT.
+    check_default("ttft-bound-below-truth", |g: &mut Gen| {
+        let coeffs = gen_coeffs(g);
+        let est = TtftEstimator::new(coeffs, 1, g.f64_in(0.05, 1.0));
+        let n_lanes = g.usize_in(1, 4);
+        let mut free_at = vec![0.0f64; n_lanes];
+        let mut now = 0.0f64;
+        for _ in 0..g.usize_in(1, 30) {
+            now += g.f64_in(0.0, 0.05);
+            let len = g.usize_in(1, 4096);
+            let floor = free_at.iter().map(|f| (f - now).max(0.0)).fold(f64::INFINITY, f64::min);
+            let bound = est.ttft_bound(0.0, len, floor);
+            // True completion under FIFO best-case service.
+            let lane = (0..n_lanes)
+                .min_by(|&a, &b| free_at[a].partial_cmp(&free_at[b]).unwrap())
+                .unwrap();
+            let start = free_at[lane].max(now);
+            let finish = start + coeffs.predict(0.0, len as f64);
+            free_at[lane] = finish;
+            let true_ttft = finish - now;
+            prop_assert!(
+                bound <= true_ttft + 1e-9,
+                "bound {bound} exceeds true TTFT {true_ttft} (len {len}, floor {floor})"
+            );
+            // Re-evaluating mid-wait stays below truth too: elapsed wait
+            // swaps exactly for the same amount of remaining time.
+            let mid = now + g.f64_in(0.0, (start - now).max(0.0));
+            let mid_floor = (free_at[lane] - coeffs.predict(0.0, len as f64) - mid).max(0.0);
+            let mid_bound = est.ttft_bound(mid - now, len, mid_floor.min(floor));
+            prop_assert!(
+                mid_bound <= true_ttft + 1e-9,
+                "mid-wait bound {mid_bound} exceeds true TTFT {true_ttft}"
+            );
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,115 @@
+//! Bench 6: distributed KV pool capacity (table2 + fig10 style).
+//!
+//! Three numbers, written to `BENCH_6.json` for the CI regression gate:
+//!
+//! * `submits_per_sec` — sustained route→handoff→finish cycles per second
+//!   through a broker-enabled `DecodeRouter` (table2's Instant-loop idiom):
+//!   the broker's feasibility scan and lease bookkeeping must stay cheap
+//!   enough for online placement.
+//! * `ttft_p99` — P99 TTFT of the broker-enabled run at the reference rate
+//!   on the long-context trace.
+//! * `max_capacity` — the highest sustainable arrival rate (fig10's 25×
+//!   light-load SLO) on the long-context trace with borrowing enabled,
+//!   alongside the local-only capacity for comparison: a KV-bound cluster
+//!   admits more load when fragmented free blocks are poolable.
+
+use std::sync::Arc;
+use std::time::Instant;
+use tetris::api::{KvBrokerConfig, Tetris, TetrisBuilder, TraceRecorder};
+use tetris::metrics::{max_sustainable_rate, SloCriterion};
+use tetris::sched::DecodeRouter;
+use tetris::sim::SimParams;
+use tetris::util::bench::{black_box, Table};
+use tetris::util::cli::Args;
+use tetris::util::json::Json;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{scale_rate, Request, TraceKind, WorkloadGen};
+
+/// A KV-bound long-context cluster: 4 decode instances of 200k tokens
+/// (12,500 blocks of 16) — one 190k-token request nearly fills an
+/// instance, so fragmented free blocks decide admission.
+fn kv_bound_builder(broker: bool) -> TetrisBuilder {
+    let b = Tetris::paper_8b().sim_params(SimParams {
+        backends_per_decode: 4,
+        decode_capacity_tokens: 200_000,
+        block_tokens: 16,
+    });
+    if broker {
+        b.kv_broker(KvBrokerConfig::enabled(4_000))
+    } else {
+        b
+    }
+}
+
+/// One seeded long-trace run; returns P99 TTFT.
+fn p99_at(base: &[Request], rate: f64, broker: bool) -> f64 {
+    let rec = Arc::new(TraceRecorder::new());
+    let trace = scale_rate(base, rate);
+    let m = kv_bound_builder(broker)
+        .observe(rec)
+        .build_simulation()
+        .expect("valid configuration")
+        .run(&trace);
+    m.ttft_summary().p99
+}
+
+/// Table2-style sustained placement throughput: route → transfer_complete
+/// → finish cycles on a broker-enabled router, timed as one batch.
+fn submits_per_sec(trials: usize) -> (f64, f64) {
+    let mut r = DecodeRouter::with_broker(8, 2_000, 16, KvBrokerConfig::enabled(512));
+    let mut rng = Pcg64::new(0xb60ca);
+    let t0 = Instant::now();
+    let mut placed = 0usize;
+    for i in 0..trials {
+        let tokens = rng.range_u64(256, 24_000) as usize;
+        if let Some(idx) = black_box(r.route(tokens, i as u64)) {
+            let seq = r.transfer_complete(idx, tokens, i as u64).expect("reserved");
+            r.finish(idx, seq);
+            placed += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    (trials as f64 / dt, placed as f64 / trials as f64)
+}
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let n = args.usize_or("n", 100);
+    let out = args.str_or("out", "BENCH_6.json");
+
+    println!("=== Bench 6: distributed KV pool (long-context trace) ===");
+    let (sps, placed_frac) = submits_per_sec(args.usize_or("trials", 20_000));
+    println!("router: {sps:.0} submits/sec sustained ({:.0}% placed)", placed_frac * 100.0);
+
+    let gen = WorkloadGen::paper_trace(TraceKind::Long);
+    let mut rng = Pcg64::new(10);
+    let base = gen.generate(n, 1.0, &mut rng);
+
+    // fig10's SLO: 25x the light-load mean TTFT of the local-only system.
+    let light = p99_at(&base, 0.02, false);
+    let slo = SloCriterion { light_load: light, factor: 25.0 };
+    let rates: Vec<f64> = (1..=16).map(|i| i as f64 * 0.25).collect();
+    let cap_local =
+        max_sustainable_rate(&rates, &slo, |r| p99_at(&base, r, false)).unwrap_or(rates[0]);
+    let cap_broker =
+        max_sustainable_rate(&rates, &slo, |r| p99_at(&base, r, true)).unwrap_or(rates[0]);
+    let ttft_p99 = p99_at(&base, cap_broker, true);
+
+    let mut t = Table::new(&["config", "max capacity (req/s)", "ttft p99 at broker cap"]);
+    t.row(vec!["local-only".into(), format!("{cap_local:.2}"), "-".into()]);
+    t.row(vec!["kv-broker".into(), format!("{cap_broker:.2}"), format!("{ttft_p99:.2}s")]);
+    t.print();
+    println!("SLO threshold {:.2}s (light-load p99 {light:.2}s x 25)", slo.threshold());
+
+    let j = Json::obj()
+        .set("submits_per_sec", sps)
+        .set("ttft_p99", ttft_p99)
+        .set("max_capacity", cap_broker)
+        .set("max_capacity_local", cap_local)
+        .set("slo_threshold", slo.threshold());
+    if j.to_file(std::path::Path::new(&out)).is_err() {
+        eprintln!("failed to write {out}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
+}

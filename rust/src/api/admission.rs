@@ -193,12 +193,22 @@ pub struct DecodeLoad {
     pub active_batch: usize,
     /// Requests routed here whose KV handoff is still in flight.
     pub pending_transfers: usize,
+    /// Blocks this instance has lent to other instances through the
+    /// distributed KV pool ([`crate::kvbroker`]) — they look free to the
+    /// instance's own block manager but are not admittable here. Always 0
+    /// while the broker is disabled.
+    pub lent_blocks: usize,
+    /// Blocks this instance holds borrowed from other instances (its
+    /// debt). Always 0 while the broker is disabled.
+    pub borrowed_blocks: usize,
 }
 
 impl DecodeLoad {
-    /// Blocks admittable right now (free minus virtual reservations).
+    /// Blocks admittable right now: free minus virtual reservations minus
+    /// blocks lent to other instances. Identical to the pre-broker value
+    /// (free − virtual) while the broker is disabled.
     pub fn available_blocks(&self) -> usize {
-        self.free_blocks.saturating_sub(self.virtual_blocks)
+        self.free_blocks.saturating_sub(self.virtual_blocks).saturating_sub(self.lent_blocks)
     }
 }
 
@@ -240,6 +250,14 @@ pub struct LoadSnapshot {
     /// Sliding-window request arrival rate (req/s) — the same observation
     /// the improvement-rate controller refreshes from.
     pub arrival_rate: f64,
+    /// The KV broker's lease-state epoch at assembly time (see
+    /// [`KvBroker::epoch`](crate::kvbroker::KvBroker::epoch)). The live
+    /// server compares this against the broker's live epoch when serving
+    /// a cached snapshot, so the cluster-KV fields (`lent_blocks`,
+    /// `borrowed_blocks` and everything derived from them) are invalidated
+    /// together with `assembled_at` — admission never decides on a
+    /// mixed-age view. Constant 0 while the broker is disabled.
+    pub kv_lease_epoch: u64,
 }
 
 impl LoadSnapshot {
@@ -251,12 +269,15 @@ impl LoadSnapshot {
         let decode = router
             .instances
             .iter()
-            .map(|i| DecodeLoad {
+            .enumerate()
+            .map(|(idx, i)| DecodeLoad {
                 total_blocks: i.blocks.total_blocks(),
                 free_blocks: i.blocks.free_blocks(),
                 virtual_blocks: i.virtual_blocks,
                 active_batch: i.active_batch,
                 pending_transfers: i.pending_transfers,
+                lent_blocks: router.broker.lent(idx),
+                borrowed_blocks: router.broker.debt(idx),
             })
             .collect();
         (block_tokens, decode)
@@ -281,6 +302,21 @@ impl LoadSnapshot {
             return 0.0;
         }
         1.0 - self.available_blocks() as f64 / total as f64
+    }
+
+    /// Remote KV blocks borrowed cluster-wide right now (summed debt) —
+    /// the distributed KV pool's live exposure. 0 with the broker
+    /// disabled.
+    pub fn borrowed_blocks(&self) -> usize {
+        self.decode.iter().map(|d| d.borrowed_blocks).sum()
+    }
+
+    /// KV blocks lent cluster-wide right now. Equals
+    /// [`LoadSnapshot::borrowed_blocks`] in a coherent snapshot (every
+    /// borrowed block is lent by someone) — the kv-lease-epoch guard
+    /// exists precisely so admission never observes the two apart.
+    pub fn lent_blocks(&self) -> usize {
+        self.decode.iter().map(|d| d.lent_blocks).sum()
     }
 
     /// Requests currently decoding, summed over instances.
@@ -674,6 +710,8 @@ mod tests {
                 virtual_blocks: used - used / 2,
                 active_batch: 1,
                 pending_transfers: 0,
+                lent_blocks: 0,
+                borrowed_blocks: 0,
             }],
             prefill_busy,
             decode_lane_busy: vec![0.0],
@@ -681,6 +719,7 @@ mod tests {
             transfers_in_service: vec![0],
             parked: 0,
             arrival_rate: 0.0,
+            kv_lease_epoch: 0,
         }
     }
 
@@ -716,8 +755,26 @@ mod tests {
             transfers_in_service: vec![],
             parked: 0,
             arrival_rate: 0.0,
+            kv_lease_epoch: 0,
         };
         assert_eq!(empty.kv_occupancy(), 0.0);
+        assert_eq!(empty.borrowed_blocks(), 0);
+        assert_eq!(empty.lent_blocks(), 0);
+    }
+
+    #[test]
+    fn lent_blocks_reduce_cluster_availability() {
+        // Blocks lent through the KV broker look free to their owner's
+        // block manager but must not look admittable to admission.
+        let mut s = snapshot(100, 50, vec![0.0]);
+        let before = s.available_blocks();
+        s.decode[0].lent_blocks = 10;
+        assert_eq!(s.available_blocks(), before - 10);
+        assert_eq!(s.lent_blocks(), 10);
+        assert_eq!(s.borrowed_blocks(), 0);
+        let occ = s.kv_occupancy();
+        s.decode[0].lent_blocks = 0;
+        assert!(occ > s.kv_occupancy(), "lending raises cluster occupancy");
     }
 
     #[test]

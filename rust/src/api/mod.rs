@@ -117,6 +117,7 @@ pub use admission::{
     BackpressurePolicy, DecodeLoad, LoadSnapshot, ParkedQueue, QosAdmission, QosClass,
     ScanOutcome, SubmitOptions,
 };
+pub use crate::kvbroker::{KvBroker, KvBrokerConfig};
 pub use observer::{Observer, TraceEvent, TraceRecorder};
 pub use registry::{PolicyCtx, PolicyFactory, PolicyRegistry, PolicySpec};
 
@@ -201,6 +202,8 @@ pub struct TetrisBuilder {
     admission: AdmissionFactory,
     starvation_bound: usize,
     deadline_safety: f64,
+    kv_broker: KvBrokerConfig,
+    shard_streams: usize,
 }
 
 impl TetrisBuilder {
@@ -222,6 +225,8 @@ impl TetrisBuilder {
             }),
             starvation_bound: crate::serve::DEFAULT_STARVATION_BOUND,
             deadline_safety: crate::latency::DEFAULT_DEADLINE_SAFETY,
+            kv_broker: KvBrokerConfig::disabled(),
+            shard_streams: 1,
         }
     }
 
@@ -322,6 +327,29 @@ impl TetrisBuilder {
     /// unaffected. Live server only.
     pub fn deadline_safety(mut self, safety: f64) -> Self {
         self.deadline_safety = safety;
+        self
+    }
+
+    /// Configure the cluster-wide distributed KV pool (see
+    /// [`crate::kvbroker`]): with an enabled config, a decode instance
+    /// whose local free blocks cannot hold a request may borrow the
+    /// shortfall from its peers under a lease, up to the configured
+    /// per-instance borrow/lend caps, and the decode router's scoring
+    /// penalizes indebted instances (debt-aware placement). The default
+    /// [`KvBrokerConfig::disabled`] reproduces local-only placement
+    /// bit-for-bit — the parity contract the zero-borrow-cap tests pin.
+    /// Applies to both build targets, which route through the same broker
+    /// logic.
+    pub fn kv_broker(mut self, config: KvBrokerConfig) -> Self {
+        self.kv_broker = config;
+        self
+    }
+
+    /// Concurrent shard streams each transfer backend multiplexes
+    /// (default 1 — the classic one-shard-per-backend pool). Applies to
+    /// both build targets.
+    pub fn shard_streams(mut self, streams: usize) -> Self {
+        self.shard_streams = streams.max(1);
         self
     }
 
@@ -498,6 +526,8 @@ impl TetrisBuilder {
             transfer_model: TransferModel::from_cluster(&self.cluster),
             prefill_model: model,
             esp_decode: spec.esp_decode,
+            broker: self.kv_broker.clone(),
+            shard_streams: self.shard_streams,
             observers: self.observers.clone(),
         };
         Ok(Simulation { sim, seed: self.seed })
@@ -549,6 +579,8 @@ impl TetrisBuilder {
             blocks_per_instance: params.decode_capacity_tokens / params.block_tokens,
             block_tokens: params.block_tokens,
             backends: params.backends_per_decode.max(1),
+            broker: self.kv_broker.clone(),
+            shard_streams: self.shard_streams,
         };
         let model = self.resolved_model(&self.sched.sp_candidates);
         let ctx = PolicyCtx { model, sched: self.sched.clone() };

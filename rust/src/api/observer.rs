@@ -96,6 +96,28 @@ pub trait Observer: Send + Sync {
     fn on_interrupt(&self, req: u64, reason: &str, now: f64) {
         let _ = (req, reason, now);
     }
+
+    /// The distributed KV pool ([`crate::kvbroker`]) opened a lease:
+    /// request `req`, placed on decode instance `instance`, borrowed
+    /// `blocks` KV blocks from remote instances at `now`. Fires at
+    /// placement time, right after the `on_decode_assign` of the same
+    /// request. Emitted by both drivers whenever a
+    /// [`KvBrokerConfig`](crate::kvbroker::KvBrokerConfig) with non-zero
+    /// caps is installed; never fires with the broker disabled.
+    fn on_kv_borrow(&self, req: u64, instance: usize, blocks: usize, now: f64) {
+        let _ = (req, instance, blocks, now);
+    }
+
+    /// Request `req`'s lease returned `blocks` KV blocks to their lender
+    /// instances at `now` — on finish, or on any release-ladder path
+    /// (cancel, shed, deadline interrupt, shutdown) that unwinds an open
+    /// lease. Every `on_kv_borrow` is balanced by exactly one
+    /// `on_kv_return` with the same block count unless the blocks were
+    /// repatriated (converted to local blocks) first, which needs no
+    /// event: repatriation keeps the blocks with the same request.
+    fn on_kv_return(&self, req: u64, instance: usize, blocks: usize, now: f64) {
+        let _ = (req, instance, blocks, now);
+    }
 }
 
 /// One recorded lifecycle event.
@@ -179,6 +201,28 @@ pub enum TraceEvent {
         /// Timestamp (seconds from run start).
         at: f64,
     },
+    /// The distributed KV pool opened a lease for the request.
+    KvBorrow {
+        /// Request id.
+        req: u64,
+        /// Decode instance the borrowing request was placed on.
+        instance: usize,
+        /// Remote KV blocks borrowed under the lease.
+        blocks: usize,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
+    /// The request's lease returned its remote blocks to their lenders.
+    KvReturn {
+        /// Request id.
+        req: u64,
+        /// Decode instance the borrowing request was placed on.
+        instance: usize,
+        /// Remote KV blocks returned to lender instances.
+        blocks: usize,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
 }
 
 impl TraceEvent {
@@ -193,7 +237,9 @@ impl TraceEvent {
             | TraceEvent::Token { at, .. }
             | TraceEvent::Cancel { at, .. }
             | TraceEvent::Shed { at, .. }
-            | TraceEvent::Interrupt { at, .. } => *at,
+            | TraceEvent::Interrupt { at, .. }
+            | TraceEvent::KvBorrow { at, .. }
+            | TraceEvent::KvReturn { at, .. } => *at,
         }
     }
 
@@ -210,6 +256,8 @@ impl TraceEvent {
             TraceEvent::Cancel { .. } => "cancel",
             TraceEvent::Shed { .. } => "shed",
             TraceEvent::Interrupt { .. } => "interrupt",
+            TraceEvent::KvBorrow { .. } => "kv_borrow",
+            TraceEvent::KvReturn { .. } => "kv_return",
         }
     }
 
@@ -224,7 +272,9 @@ impl TraceEvent {
             | TraceEvent::Token { req, .. }
             | TraceEvent::Cancel { req, .. }
             | TraceEvent::Shed { req, .. }
-            | TraceEvent::Interrupt { req, .. } => *req,
+            | TraceEvent::Interrupt { req, .. }
+            | TraceEvent::KvBorrow { req, .. }
+            | TraceEvent::KvReturn { req, .. } => *req,
         }
     }
 }
@@ -279,6 +329,10 @@ impl TraceRecorder {
                 }
                 TraceEvent::Shed { reason, .. } | TraceEvent::Interrupt { reason, .. } => {
                     o = o.set("reason", reason.as_str());
+                }
+                TraceEvent::KvBorrow { instance, blocks, .. }
+                | TraceEvent::KvReturn { instance, blocks, .. } => {
+                    o = o.set("instance", *instance).set("blocks", *blocks);
                 }
                 _ => {}
             }
@@ -405,6 +459,14 @@ impl Observer for TraceRecorder {
     fn on_interrupt(&self, req: u64, reason: &str, now: f64) {
         self.push(TraceEvent::Interrupt { req, reason: reason.to_string(), at: now });
     }
+
+    fn on_kv_borrow(&self, req: u64, instance: usize, blocks: usize, now: f64) {
+        self.push(TraceEvent::KvBorrow { req, instance, blocks, at: now });
+    }
+
+    fn on_kv_return(&self, req: u64, instance: usize, blocks: usize, now: f64) {
+        self.push(TraceEvent::KvReturn { req, instance, blocks, at: now });
+    }
 }
 
 #[cfg(test)]
@@ -429,6 +491,8 @@ mod tests {
         rec.on_cancel(4, CancelStage::Decode, 1.9);
         rec.on_shed(5, "KV occupancy 80% ≥ the 75% best-effort bound", 2.0);
         rec.on_interrupt(6, "TTFT deadline blown: bound 0.5s > deadline 0.2s", 2.0);
+        rec.on_kv_borrow(7, 0, 5, 2.1);
+        rec.on_kv_return(7, 0, 5, 2.2);
         assert_eq!(rec.count("arrival"), 1);
         assert_eq!(rec.count("plan"), 1);
         assert_eq!(rec.count("decode_assign"), 1);
@@ -439,9 +503,13 @@ mod tests {
         assert_eq!(rec.reqs_with("token"), vec![3]);
         assert_eq!(rec.reqs_with("shed"), vec![5]);
         assert_eq!(rec.reqs_with("interrupt"), vec![6]);
-        assert!((rec.event_span() - 1.6).abs() < 1e-12, "0.4 → 2.0");
+        assert_eq!(rec.count("kv_borrow"), 1);
+        assert_eq!(rec.count("kv_return"), 1);
+        assert_eq!(rec.reqs_with("kv_borrow"), vec![7]);
+        assert!((rec.event_span() - 1.8).abs() < 1e-12, "0.4 → 2.2");
         let evs = rec.events();
-        assert_eq!(evs.len(), 10);
+        assert_eq!(evs.len(), 12);
+        assert_eq!(evs[10], TraceEvent::KvBorrow { req: 7, instance: 0, blocks: 5, at: 2.1 });
         assert_eq!(evs[0], TraceEvent::Arrival { req: 3, at: 0.4 });
         assert_eq!(evs[2], TraceEvent::DecodeAssign { req: 3, instance: 1, at: 0.5 });
         assert_eq!(
@@ -456,6 +524,8 @@ mod tests {
         assert!(json.contains("arrival"), "{json}");
         assert!(json.contains("\"reason\""), "{json}");
         assert!(json.contains("interrupt"), "{json}");
+        assert!(json.contains("kv_borrow"), "{json}");
+        assert!(json.contains("\"blocks\""), "{json}");
     }
 
     #[test]

@@ -1,0 +1,428 @@
+//! Cluster-wide distributed KV pool: lease-based block borrowing between
+//! decode instances (ROADMAP item 1, Infinite-LLM/DistAttention-style).
+//!
+//! Tetris's CDSP planner exploits fragmented *compute*, but KV memory was
+//! strictly instance-local: a request parked or shed when its decode
+//! instance's [`BlockManager`](crate::kvcache::BlockManager) pool was full
+//! even while the cluster had free blocks elsewhere. The [`KvBroker`] lifts
+//! that wall: a decode instance may *borrow* KV blocks from remote
+//! instances under per-instance caps, with explicit lease/return semantics
+//! and debt tracking.
+//!
+//! The broker is deliberately a plain bookkeeping value owned by the
+//! [`DecodeRouter`](crate::sched::DecodeRouter) — it never touches block
+//! managers itself. The router consults it for feasibility (a shortfall is
+//! coverable when the borrower has borrow headroom and the rest of the
+//! cluster has lendable spare), opens a **pending lease** at placement
+//! time, commits it to a **resident lease** when the KV handoff lands,
+//! and closes it when the request finishes. Every cancellation path of the
+//! release ladder (queued, parked, mid-prefill, mid-transfer, mid-decode,
+//! deadline interrupt, shutdown) unwinds through
+//! [`KvBroker::cancel_lease`] / [`KvBroker::close_lease`], so leases obey
+//! the same zero-leak invariants as blocks and transfer backends.
+//!
+//! A lease's blocks are *remote*: they live on the lender instances and
+//! are counted there as [`KvBroker::lent`] (reducing the lender's
+//! effective availability) and on the borrower as [`KvBroker::debt`].
+//! Placement scoring penalises indebted instances
+//! ([`KvBrokerConfig::debt_penalty`]) and the router *repatriates* debt —
+//! converts remote blocks back to local ones — as local blocks free (see
+//! `DecodeRouter::finish`). Remote-block attention costs a modeled
+//! interconnect-hop term per decode step, proportional to the remote
+//! block fraction (see
+//! [`DecodeModel::remote_hop_secs`](crate::latency::DecodeModel::remote_hop_secs)).
+//!
+//! Every mutation of the cluster lease state bumps [`KvBroker::epoch`];
+//! the live server mirrors the epoch into its cached
+//! [`LoadSnapshot`](crate::api::LoadSnapshot) so admission never decides
+//! on a mixed-age cluster-KV view.
+
+use std::collections::BTreeMap;
+
+/// Configuration of the cluster KV broker. The default is **disabled**
+/// (both caps 0): no request ever borrows, and the router's placement
+/// scores reduce bit-for-bit to the local-only freeness rule — the
+/// property the zero-borrow-cap parity tests pin.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvBrokerConfig {
+    /// Most blocks one instance may hold *borrowed* at a time (its debt
+    /// cap). 0 disables borrowing.
+    pub max_borrow_blocks: usize,
+    /// Most blocks one instance may have *lent out* at a time. 0 disables
+    /// lending.
+    pub max_lend_blocks: usize,
+    /// Placement-score penalty weight: an instance's freeness is reduced
+    /// by `debt_penalty × (debt + shortfall) / total_blocks`, so placement
+    /// prefers debt-free instances and borrowing stays a last resort.
+    /// Only consulted while the broker is enabled.
+    pub debt_penalty: f64,
+}
+
+impl Default for KvBrokerConfig {
+    fn default() -> Self {
+        KvBrokerConfig { max_borrow_blocks: 0, max_lend_blocks: 0, debt_penalty: 1.0 }
+    }
+}
+
+impl KvBrokerConfig {
+    /// The disabled configuration (identical to `default()`): local-only
+    /// placement, no leases ever open.
+    pub fn disabled() -> Self {
+        KvBrokerConfig::default()
+    }
+
+    /// A symmetric configuration: every instance may borrow and lend up
+    /// to `cap` blocks, with the default debt penalty.
+    pub fn enabled(cap: usize) -> Self {
+        KvBrokerConfig { max_borrow_blocks: cap, max_lend_blocks: cap, ..Default::default() }
+    }
+
+    /// Whether any borrowing is possible under this configuration.
+    pub fn is_enabled(&self) -> bool {
+        self.max_borrow_blocks > 0 && self.max_lend_blocks > 0
+    }
+}
+
+/// One open lease: KV blocks a borrower instance holds on remote lenders
+/// on behalf of a single request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    /// The instance the borrowing request decodes on.
+    pub borrower: usize,
+    /// `(lender instance, blocks)` parts, ascending by lender index.
+    pub parts: Vec<(usize, usize)>,
+}
+
+impl Lease {
+    /// Total remote blocks under this lease.
+    pub fn blocks(&self) -> usize {
+        self.parts.iter().map(|&(_, b)| b).sum()
+    }
+}
+
+/// The cluster-level KV block broker: per-instance lent/debt ledgers plus
+/// the open leases, keyed by request id while the KV handoff is in flight
+/// (*pending*) and by `(instance, seq)` once the request decodes
+/// (*resident*). See the module docs for the lifecycle.
+#[derive(Clone, Debug, Default)]
+pub struct KvBroker {
+    config: KvBrokerConfig,
+    /// Per instance: blocks currently lent to other instances.
+    lent: Vec<usize>,
+    /// Per instance: blocks currently borrowed from other instances.
+    debt: Vec<usize>,
+    /// Leases whose borrower's KV handoff is still in flight, by request.
+    pending: BTreeMap<u64, Lease>,
+    /// Leases backing an actively decoding request, by (instance, seq).
+    resident: BTreeMap<(usize, u64), Lease>,
+    /// Bumped on every lent/debt mutation (open, cancel, close,
+    /// repatriate) — the staleness stamp for cached cluster-KV views.
+    epoch: u64,
+    borrowed_total: u64,
+    returned_total: u64,
+    repatriated_total: u64,
+}
+
+impl KvBroker {
+    /// A broker over `n` decode instances with the given configuration.
+    pub fn new(n: usize, config: KvBrokerConfig) -> Self {
+        KvBroker { config, lent: vec![0; n], debt: vec![0; n], ..Default::default() }
+    }
+
+    /// The broker's configuration.
+    pub fn config(&self) -> &KvBrokerConfig {
+        &self.config
+    }
+
+    /// Whether borrowing is possible at all (see
+    /// [`KvBrokerConfig::is_enabled`]).
+    pub fn is_enabled(&self) -> bool {
+        self.config.is_enabled()
+    }
+
+    /// Blocks instance `i` has lent out right now (0 for unknown
+    /// instances — the disabled/default broker tracks nothing).
+    pub fn lent(&self, i: usize) -> usize {
+        self.lent.get(i).copied().unwrap_or(0)
+    }
+
+    /// Blocks instance `i` holds borrowed right now.
+    pub fn debt(&self, i: usize) -> usize {
+        self.debt.get(i).copied().unwrap_or(0)
+    }
+
+    /// How many more blocks instance `i` may still borrow.
+    pub fn borrow_headroom(&self, i: usize) -> usize {
+        self.config.max_borrow_blocks.saturating_sub(self.debt(i))
+    }
+
+    /// How many more blocks instance `i` may still lend.
+    pub fn lend_headroom(&self, i: usize) -> usize {
+        self.config.max_lend_blocks.saturating_sub(self.lent(i))
+    }
+
+    /// Open a pending lease of exactly `shortfall` blocks for request
+    /// `req` placed on `borrower`. `spare[j]` is the lendable spare of
+    /// instance `j` as the router sees it (available blocks minus blocks
+    /// already lent); the broker additionally caps each lender by its
+    /// lend headroom and takes lenders in ascending index order. Returns
+    /// the borrowed block count, or `None` — mutating nothing — when the
+    /// shortfall cannot be fully covered (no partial leases).
+    pub fn open_lease(
+        &mut self,
+        req: u64,
+        borrower: usize,
+        shortfall: usize,
+        spare: &[usize],
+    ) -> Option<usize> {
+        if shortfall == 0 || shortfall > self.borrow_headroom(borrower) {
+            return None;
+        }
+        let mut remaining = shortfall;
+        let mut parts: Vec<(usize, usize)> = Vec::new();
+        for (j, &s) in spare.iter().enumerate() {
+            if j == borrower || remaining == 0 {
+                continue;
+            }
+            let take = s.min(self.lend_headroom(j)).min(remaining);
+            if take > 0 {
+                parts.push((j, take));
+                remaining -= take;
+            }
+        }
+        if remaining > 0 {
+            return None;
+        }
+        for &(j, b) in &parts {
+            self.lent[j] += b;
+        }
+        self.debt[borrower] += shortfall;
+        self.pending.insert(req, Lease { borrower, parts });
+        self.borrowed_total += shortfall as u64;
+        self.epoch += 1;
+        Some(shortfall)
+    }
+
+    /// Remote blocks pending-leased to request `req` (0 if none).
+    pub fn pending_blocks(&self, req: u64) -> usize {
+        self.pending.get(&req).map_or(0, Lease::blocks)
+    }
+
+    /// Remote blocks resident-leased to `(inst, seq)` (0 if none).
+    pub fn resident_blocks(&self, inst: usize, seq: u64) -> usize {
+        self.resident.get(&(inst, seq)).map_or(0, Lease::blocks)
+    }
+
+    /// Unwind the pending lease of request `req` (cancellation before the
+    /// KV handoff landed). Returns the blocks returned to their lenders
+    /// (0 if the request held no lease).
+    pub fn cancel_lease(&mut self, req: u64) -> usize {
+        let Some(lease) = self.pending.remove(&req) else { return 0 };
+        self.unwind(&lease);
+        lease.blocks()
+    }
+
+    /// The KV handoff for request `req` landed as `seq` on `inst`: its
+    /// pending lease (if any) becomes resident. Lent/debt totals are
+    /// unchanged, so the epoch does not move.
+    pub fn commit_lease(&mut self, req: u64, inst: usize, seq: u64) {
+        if let Some(lease) = self.pending.remove(&req) {
+            debug_assert_eq!(lease.borrower, inst);
+            self.resident.insert((inst, seq), lease);
+        }
+    }
+
+    /// Close the resident lease of `(inst, seq)` (the request finished or
+    /// was torn down mid-decode). Returns the blocks returned to their
+    /// lenders (0 if no lease was held).
+    pub fn close_lease(&mut self, inst: usize, seq: u64) -> usize {
+        let Some(lease) = self.resident.remove(&(inst, seq)) else { return 0 };
+        self.unwind(&lease);
+        lease.blocks()
+    }
+
+    fn unwind(&mut self, lease: &Lease) {
+        for &(j, b) in &lease.parts {
+            self.lent[j] = self.lent[j].saturating_sub(b);
+        }
+        self.debt[lease.borrower] = self.debt[lease.borrower].saturating_sub(lease.blocks());
+        self.returned_total += lease.blocks() as u64;
+        self.epoch += 1;
+    }
+
+    /// Resident leases on instance `inst`, ascending by seq — the order
+    /// the router repatriates debt in.
+    pub fn resident_on(&self, inst: usize) -> Vec<(u64, usize)> {
+        self.resident
+            .range((inst, 0)..=(inst, u64::MAX))
+            .map(|(&(_, seq), lease)| (seq, lease.blocks()))
+            .collect()
+    }
+
+    /// Repatriate `blocks` of the resident lease `(inst, seq)`: the
+    /// borrower has converted that many remote blocks into local ones, so
+    /// the lease shrinks (lenders credited in ascending index order) and
+    /// closes entirely when it reaches zero. The caller must have grown
+    /// the local allocation first.
+    pub fn repatriate(&mut self, inst: usize, seq: u64, blocks: usize) {
+        let Some(lease) = self.resident.get_mut(&(inst, seq)) else { return };
+        let mut remaining = blocks.min(lease.blocks());
+        if remaining == 0 {
+            return;
+        }
+        self.debt[inst] = self.debt[inst].saturating_sub(remaining);
+        self.repatriated_total += remaining as u64;
+        for part in lease.parts.iter_mut() {
+            if remaining == 0 {
+                break;
+            }
+            let take = part.1.min(remaining);
+            part.1 -= take;
+            remaining -= take;
+            self.lent[part.0] = self.lent[part.0].saturating_sub(take);
+        }
+        lease.parts.retain(|&(_, b)| b > 0);
+        if lease.parts.is_empty() {
+            self.resident.remove(&(inst, seq));
+        }
+        self.epoch += 1;
+    }
+
+    /// Open leases (pending + resident) — 0 when nothing is borrowed.
+    pub fn outstanding_leases(&self) -> usize {
+        self.pending.len() + self.resident.len()
+    }
+
+    /// Remote blocks currently borrowed cluster-wide (total debt).
+    pub fn outstanding_blocks(&self) -> usize {
+        self.debt.iter().sum()
+    }
+
+    /// The lease-state epoch: bumped on every lent/debt mutation. Cached
+    /// load snapshots compare epochs to detect a stale cluster-KV view.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Blocks ever borrowed (lifetime counter, for benches and traces).
+    pub fn total_borrowed(&self) -> u64 {
+        self.borrowed_total
+    }
+
+    /// Blocks ever returned to lenders at lease close/cancel. Disjoint
+    /// from [`KvBroker::total_repatriated`]: once every lease is closed,
+    /// `total_borrowed() == total_returned() + total_repatriated()`.
+    pub fn total_returned(&self) -> u64 {
+        self.returned_total
+    }
+
+    /// Blocks ever repatriated (remote → local conversions).
+    pub fn total_repatriated(&self) -> u64 {
+        self.repatriated_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn broker(cap: usize) -> KvBroker {
+        KvBroker::new(3, KvBrokerConfig::enabled(cap))
+    }
+
+    #[test]
+    fn disabled_broker_never_leases() {
+        let mut b = KvBroker::new(2, KvBrokerConfig::disabled());
+        assert!(!b.is_enabled());
+        assert_eq!(b.open_lease(1, 0, 4, &[100, 100]), None);
+        assert_eq!(b.epoch(), 0);
+        assert_eq!(b.outstanding_leases(), 0);
+    }
+
+    #[test]
+    fn lease_lifecycle_open_commit_close() {
+        let mut b = broker(10);
+        let got = b.open_lease(7, 0, 6, &[0, 4, 9]);
+        assert_eq!(got, Some(6));
+        assert_eq!(b.pending_blocks(7), 6);
+        assert_eq!(b.debt(0), 6);
+        assert_eq!(b.lent(1), 4, "lenders taken ascending");
+        assert_eq!(b.lent(2), 2);
+        let e = b.epoch();
+        b.commit_lease(7, 0, 42);
+        assert_eq!(b.epoch(), e, "commit moves no blocks");
+        assert_eq!(b.pending_blocks(7), 0);
+        assert_eq!(b.resident_blocks(0, 42), 6);
+        assert_eq!(b.close_lease(0, 42), 6);
+        assert_eq!(b.outstanding_blocks(), 0);
+        assert_eq!(b.outstanding_leases(), 0);
+        assert_eq!(b.lent(1), 0);
+        assert_eq!(b.total_returned(), 6);
+    }
+
+    #[test]
+    fn open_lease_is_all_or_nothing() {
+        let mut b = broker(4);
+        // Shortfall 5 exceeds the borrow cap of 4.
+        assert_eq!(b.open_lease(1, 0, 5, &[0, 100, 100]), None);
+        // Shortfall 4 but only 3 lendable cluster-wide.
+        assert_eq!(b.open_lease(1, 0, 4, &[0, 2, 1]), None);
+        assert_eq!(b.outstanding_blocks(), 0, "failed opens mutate nothing");
+        assert_eq!(b.epoch(), 0);
+        assert_eq!(b.open_lease(1, 0, 4, &[0, 2, 2]), Some(4));
+        assert_eq!(b.lent(1) + b.lent(2), 4);
+    }
+
+    #[test]
+    fn lend_cap_limits_each_lender() {
+        let cfg = KvBrokerConfig { max_borrow_blocks: 10, max_lend_blocks: 3, debt_penalty: 1.0 };
+        let mut b = KvBroker::new(3, cfg);
+        assert_eq!(b.open_lease(1, 0, 6, &[0, 100, 100]), Some(6));
+        assert_eq!(b.lent(1), 3);
+        assert_eq!(b.lent(2), 3);
+        // Both lenders are now at their cap.
+        assert_eq!(b.open_lease(2, 0, 1, &[0, 100, 100]), None);
+    }
+
+    #[test]
+    fn cancel_unwinds_pending_lease() {
+        let mut b = broker(8);
+        b.open_lease(3, 1, 5, &[5, 0, 5]);
+        assert_eq!(b.debt(1), 5);
+        assert_eq!(b.cancel_lease(3), 5);
+        assert_eq!(b.cancel_lease(3), 0, "idempotent");
+        assert_eq!(b.debt(1), 0);
+        assert_eq!(b.lent(0), 0);
+        assert_eq!(b.outstanding_leases(), 0);
+    }
+
+    #[test]
+    fn repatriation_shrinks_and_closes_leases() {
+        let mut b = broker(10);
+        b.open_lease(9, 2, 6, &[4, 4, 0]);
+        b.commit_lease(9, 2, 1);
+        let e = b.epoch();
+        b.repatriate(2, 1, 4);
+        assert!(b.epoch() > e);
+        assert_eq!(b.resident_blocks(2, 1), 2);
+        assert_eq!(b.debt(2), 2);
+        assert_eq!(b.lent(0), 0, "first lender credited first");
+        assert_eq!(b.lent(1), 2);
+        b.repatriate(2, 1, 99);
+        assert_eq!(b.resident_blocks(2, 1), 0);
+        assert_eq!(b.outstanding_leases(), 0);
+        assert_eq!(b.total_repatriated(), 6);
+        assert_eq!(b.resident_on(2), Vec::new());
+    }
+
+    #[test]
+    fn headroom_tracks_debt_and_lending() {
+        let mut b = broker(10);
+        assert_eq!(b.borrow_headroom(0), 10);
+        assert_eq!(b.lend_headroom(1), 10);
+        b.open_lease(1, 0, 7, &[0, 7, 0]);
+        assert_eq!(b.borrow_headroom(0), 3);
+        assert_eq!(b.lend_headroom(1), 3);
+        assert_eq!(b.resident_on(0), Vec::new(), "pending leases are not resident");
+    }
+}

@@ -75,6 +75,19 @@ impl BlockManager {
     /// Allocate a new sequence holding `tokens` tokens. Returns its id.
     pub fn allocate_seq(&mut self, tokens: usize) -> Result<u64> {
         let need = self.blocks_for(tokens);
+        self.allocate_seq_partial(tokens, need)
+    }
+
+    /// Allocate a new sequence logically holding `tokens` tokens but
+    /// backed by only `local_blocks` local blocks — the remainder lives
+    /// on remote instances under a [`crate::kvbroker::KvBroker`] lease.
+    /// An under-backed sequence never grows local blocks through
+    /// [`BlockManager::append_token`] (its token count sits beyond the
+    /// local block boundary) until [`BlockManager::grow_seq`]
+    /// repatriates blocks to it. `allocate_seq` is the
+    /// `local_blocks == blocks_for(tokens)` special case.
+    pub fn allocate_seq_partial(&mut self, tokens: usize, local_blocks: usize) -> Result<u64> {
+        let need = local_blocks.min(self.blocks_for(tokens));
         if need > self.free.len() {
             return Err(anyhow!(
                 "OOM: need {need} blocks, {} free of {}",
@@ -88,6 +101,28 @@ impl BlockManager {
         self.seqs.insert(id, SeqAlloc { blocks, tokens });
         self.peak_used = self.peak_used.max(self.used_blocks());
         Ok(id)
+    }
+
+    /// Grow a sequence by `n` blocks without changing its token count —
+    /// the repatriation path: remote lease blocks become local ones.
+    pub fn grow_seq(&mut self, seq: u64, n: usize) -> Result<()> {
+        if n > self.free.len() {
+            return Err(anyhow!(
+                "OOM growing seq {seq}: need {n} blocks, {} free",
+                self.free.len()
+            ));
+        }
+        let alloc = self.seqs.get_mut(&seq).ok_or_else(|| anyhow!("unknown seq {seq}"))?;
+        for _ in 0..n {
+            alloc.blocks.push(self.free.pop().unwrap());
+        }
+        self.peak_used = self.peak_used.max(self.total_blocks - self.free.len());
+        Ok(())
+    }
+
+    /// Local blocks currently backing a sequence.
+    pub fn seq_blocks(&self, seq: u64) -> Option<usize> {
+        self.seqs.get(&seq).map(|a| a.blocks.len())
     }
 
     /// Append one generated token to a sequence, growing by one block when
@@ -199,6 +234,27 @@ mod tests {
         assert_eq!(m.blocks_for(1), 1);
         assert_eq!(m.blocks_for(16), 1);
         assert_eq!(m.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn partial_allocation_and_repatriation_growth() {
+        let mut m = BlockManager::new(10, 4);
+        // 12 tokens need 3 blocks; back only 1 locally (2 on lease).
+        let s = m.allocate_seq_partial(12, 1).unwrap();
+        assert_eq!(m.used_blocks(), 1);
+        assert_eq!(m.seq_blocks(s), Some(1));
+        // Appending never grows an under-backed sequence locally.
+        m.append_token(s).unwrap();
+        assert_eq!(m.used_blocks(), 1);
+        assert_eq!(m.seq_tokens(s), Some(13));
+        // Repatriation grows it without moving the token count.
+        m.grow_seq(s, 2).unwrap();
+        assert_eq!(m.seq_blocks(s), Some(3));
+        assert_eq!(m.seq_tokens(s), Some(13));
+        assert!(m.grow_seq(s, 99).is_err(), "growth is bounded by free blocks");
+        assert!(m.grow_seq(777, 1).is_err(), "unknown seq");
+        m.free_seq(s);
+        assert_eq!(m.free_blocks(), 10, "grown blocks free with the seq");
     }
 
     #[test]

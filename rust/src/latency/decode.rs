@@ -31,6 +31,12 @@ pub struct DecodeModel {
     ring0: f64,
     /// Constant per-step overhead (scheduler, kernel launches).
     base: f64,
+    /// Interconnect-hop overhead per step at a fully remote KV cache —
+    /// the distributed-KV-pool attention cost (see
+    /// [`DecodeModel::remote_hop_secs`]). Strictly additive: it never
+    /// changes [`DecodeModel::step_secs`] and is 0 at remote fraction 0,
+    /// so the Fig. 2 calibration ratios are unaffected.
+    hop0: f64,
 }
 
 /// Reference point used for calibration: batch 32, context 8k — a typical
@@ -49,6 +55,7 @@ impl DecodeModel {
             ar0: 0.0,
             ring0: 0.0,
             base: 2.0e-4,
+            hop0: 1.0e-3,
         };
         // Solve ar0 from the published TP ratio and ring0 from the SP ratio
         // at the reference point, for the 8B architecture the paper measured.
@@ -107,6 +114,20 @@ impl DecodeModel {
     /// Convenience: pure-TP decode (sp = 1).
     pub fn tp_step_secs(&self, ctx: u64, batch: u64, tp: usize) -> f64 {
         self.step_secs(ctx, batch, 1, tp)
+    }
+
+    /// Modeled remote-block attention cost: the extra per-step time an
+    /// instance pays when `remote_frac` of its resident KV lives on
+    /// lender instances (distributed KV pool,
+    /// [`crate::kvbroker::KvBroker`]). Linear in the remote fraction —
+    /// every remote block's KV read crosses the interconnect once per
+    /// step — and exactly 0.0 for a debt-free instance, so the local-only
+    /// decode times (and the Fig. 2 calibration) are untouched. Add this
+    /// to [`DecodeModel::step_secs`]; the simulator does so per decode
+    /// step from
+    /// [`DecodeRouter::remote_block_fraction`](crate::sched::DecodeRouter::remote_block_fraction).
+    pub fn remote_hop_secs(&self, remote_frac: f64) -> f64 {
+        self.hop0 * remote_frac.clamp(0.0, 1.0)
     }
 }
 
@@ -233,6 +254,19 @@ mod tests {
         assert!(r42 > 1.1 && r42 < 1.6, "sp4tp2 {r42}");
         assert!(r24 > 1.0 && r24 < 1.3, "sp2tp4 {r24}");
         assert!(r81 > r42 && r42 > r24 && r24 > 1.0);
+    }
+
+    #[test]
+    fn remote_hop_is_additive_and_zero_at_zero() {
+        let m = model();
+        assert_eq!(m.remote_hop_secs(0.0), 0.0, "debt-free instances pay nothing");
+        assert_eq!(m.remote_hop_secs(-1.0), 0.0, "clamped below");
+        assert!(m.remote_hop_secs(0.5) > 0.0);
+        assert!(m.remote_hop_secs(1.0) > m.remote_hop_secs(0.5));
+        assert_eq!(m.remote_hop_secs(2.0), m.remote_hop_secs(1.0), "clamped above");
+        // Strictly additive: step_secs itself never moves.
+        let t = m.step_secs(REF_CTX, REF_BATCH, 1, 8);
+        assert!(t + m.remote_hop_secs(1.0) > t);
     }
 
     #[test]

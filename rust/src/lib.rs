@@ -114,6 +114,9 @@ pub mod sched;
 pub mod baselines;
 /// Paged KV-cache block manager (PagedAttention-style).
 pub mod kvcache;
+/// Cluster-wide distributed KV pool: lease-based block borrowing between
+/// decode instances with per-instance caps and debt tracking.
+pub mod kvbroker;
 /// CDSP cache-transfer management: handshake-allocated transfer backends.
 pub mod transfer;
 /// Ring-attention communication schedule model.

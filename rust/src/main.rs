@@ -16,7 +16,7 @@
 //!                     artifacts are available.
 
 use std::sync::Arc;
-use tetris::api::{PolicyRegistry, Tetris, TetrisBuilder, PAPER_POLICIES};
+use tetris::api::{KvBrokerConfig, PolicyRegistry, Tetris, TetrisBuilder, PAPER_POLICIES};
 use tetris::sched::{ImprovementController, RateProfile};
 use tetris::sim::profiler::{profile, ProfileParams};
 use tetris::util::bench::{fmt_secs, Table};
@@ -53,10 +53,16 @@ COMMANDS:
                             a deadline-heavy mix exercising the
                             execution-time deadline monitor and engine
                             interrupts)
+                  [--kv-borrow]  (cluster-wide KV pool demo: decode
+                            instances borrow KV blocks from remote pools
+                            through the KvBroker; prints borrow/return
+                            counts at drain)
+                  [--borrow-cap <blocks>]  (with --kv-borrow: per-instance
+                            borrow/lend cap, default 64)
 ";
 
 fn main() {
-    let args = Args::from_env(&["dynamic-rate", "help", "qos"]);
+    let args = Args::from_env(&["dynamic-rate", "help", "qos", "kv-borrow"]);
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let code = match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
@@ -326,16 +332,21 @@ fn cmd_serve(args: &Args) -> i32 {
         &tetris::modelcfg::ModelArch::llama3_8b(), 1, &sp,
     );
     let recorder = Arc::new(TraceRecorder::new());
-    let server = match Tetris::builder()
+    let kv_borrow = args.flag("kv-borrow");
+    let mut builder = Tetris::builder()
         .policy("tetris-cdsp")
         .cluster(ClusterConfig::tiny(workers, decode_workers))
         .n_decode_workers(decode_workers)
         .sp_candidates(sp)
         .min_chunk(32)
         .prefill_model(sched_model)
-        .observe(recorder.clone())
-        .build_server(engine.clone(), workers)
-    {
+        .observe(recorder.clone());
+    if kv_borrow {
+        let cap = args.usize_or("borrow-cap", 64);
+        builder = builder.kv_broker(KvBrokerConfig::enabled(cap)).shard_streams(2);
+        println!("kv broker: enabled, per-instance borrow/lend cap {cap} blocks");
+    }
+    let server = match builder.build_server(engine.clone(), workers) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("server start failed: {e:#}");
@@ -421,6 +432,13 @@ fn cmd_serve(args: &Args) -> i32 {
         .map(|(i, c)| format!("d{i}:{c}"))
         .collect();
     println!("decode placements: {}", placements.join(" "));
+    if kv_borrow {
+        println!(
+            "kv broker: {} borrows, {} returns",
+            recorder.count("kv_borrow"),
+            recorder.count("kv_return")
+        );
+    }
     let _ = server.shutdown();
     0
 }

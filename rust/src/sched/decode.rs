@@ -45,7 +45,23 @@
 //! mid-transfer; a cancellation that lands after `transfer_complete`
 //! (mid-decode) releases real blocks through [`DecodeRouter::finish`]
 //! instead.
+//!
+//! # The distributed KV pool
+//!
+//! The router owns a [`KvBroker`]: when it is enabled (non-zero borrow and
+//! lend caps), an instance whose local availability falls short of a
+//! request's need may still admit it by *borrowing* the shortfall from
+//! remote instances under a lease (see [`crate::kvbroker`]). Placement
+//! becomes **debt-aware** — scores subtract
+//! `debt_penalty × (debt + shortfall) / total_blocks` so indebted
+//! instances are avoided and borrowing stays the last resort — and
+//! [`DecodeRouter::finish`] *repatriates* outstanding debt into the blocks
+//! it just freed. With the broker disabled (the default), every score
+//! subtracts exactly `0.0` and every availability subtracts exactly `0`
+//! lent blocks, so placements are bit-for-bit the local-only decisions —
+//! the zero-borrow-cap parity tests pin this.
 
+use crate::kvbroker::{KvBroker, KvBrokerConfig};
 use crate::kvcache::BlockManager;
 
 /// State of one decoding instance as the router sees it.
@@ -94,30 +110,80 @@ impl DecodeInstanceState {
 pub struct DecodeRouter {
     /// Per-instance routing state, indexed by decode-instance id.
     pub instances: Vec<DecodeInstanceState>,
+    /// The cluster KV broker: lent/debt ledgers and open leases. Disabled
+    /// (never leases, scores untouched) unless constructed through
+    /// [`DecodeRouter::with_broker`] with an enabled config.
+    pub broker: KvBroker,
 }
 
 impl DecodeRouter {
     /// A router over `n` identical decode instances, each with
-    /// `blocks_per_instance` KV blocks of `block_tokens` tokens.
+    /// `blocks_per_instance` KV blocks of `block_tokens` tokens. The KV
+    /// broker is disabled: local-only placement.
     pub fn new(n: usize, blocks_per_instance: usize, block_tokens: usize) -> Self {
+        Self::with_broker(n, blocks_per_instance, block_tokens, KvBrokerConfig::disabled())
+    }
+
+    /// A router whose instances may borrow KV blocks from each other
+    /// under `broker` (see [`crate::kvbroker`]).
+    pub fn with_broker(
+        n: usize,
+        blocks_per_instance: usize,
+        block_tokens: usize,
+        broker: KvBrokerConfig,
+    ) -> Self {
         DecodeRouter {
             instances: (0..n)
                 .map(|_| DecodeInstanceState::new(blocks_per_instance, block_tokens))
                 .collect(),
+            broker: KvBroker::new(n, broker),
         }
     }
 
-    /// Route a request that will need `tokens` KV slots: pick the
-    /// highest-freeness instance that can (virtually) hold it. Reserves
-    /// virtual usage on the chosen instance. Returns the instance index.
-    pub fn route(&mut self, tokens: usize) -> Option<usize> {
+    /// Instance `i`'s availability net of blocks it has lent out —
+    /// identical to [`DecodeInstanceState::available_blocks`] while the
+    /// broker is disabled (nothing is ever lent).
+    fn lendable_spare(&self, i: usize) -> usize {
+        self.instances[i].available_blocks().saturating_sub(self.broker.lent(i))
+    }
+
+    /// Route request `req` that will need `tokens` KV slots: pick the
+    /// highest-scoring instance that can hold it — locally, or (broker
+    /// enabled) with a remote-block lease covering the shortfall. Reserves
+    /// virtual usage for the local share and opens a pending lease for
+    /// the borrowed share. Returns the instance index.
+    pub fn route(&mut self, tokens: usize, req: u64) -> Option<usize> {
+        let enabled = self.broker.is_enabled();
+        let spare: Vec<usize> = (0..self.instances.len()).map(|i| self.lendable_spare(i)).collect();
         let mut best: Option<(usize, f64)> = None;
         for (i, inst) in self.instances.iter().enumerate() {
             let need = inst.blocks_for(tokens);
-            if inst.available_blocks() < need {
-                continue;
+            let avail = spare[i];
+            let shortfall = need.saturating_sub(avail);
+            if shortfall > 0 {
+                if !enabled || shortfall > self.broker.borrow_headroom(i) {
+                    continue;
+                }
+                let lendable: usize = spare
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, _)| j != i)
+                    .map(|(j, &s)| s.min(self.broker.lend_headroom(j)))
+                    .sum();
+                if lendable < shortfall {
+                    continue;
+                }
             }
-            let f = inst.freeness();
+            // With the broker disabled, `avail` equals the instance's own
+            // availability and the penalty term is exactly 0.0, so `f` is
+            // bit-for-bit the local-only freeness rate.
+            let mut f = avail as f64 / (inst.active_batch + inst.pending_transfers + 1) as f64;
+            if enabled {
+                let total = inst.blocks.total_blocks().max(1);
+                f -= self.broker.config().debt_penalty
+                    * (self.broker.debt(i) + shortfall) as f64
+                    / total as f64;
+            }
             match best {
                 None => best = Some((i, f)),
                 Some((_, bf)) if f > bf => best = Some((i, f)),
@@ -126,32 +192,53 @@ impl DecodeRouter {
         }
         let (idx, _) = best?;
         let need = self.instances[idx].blocks_for(tokens);
-        self.instances[idx].virtual_blocks += need;
+        let shortfall = need.saturating_sub(spare[idx]);
+        if shortfall > 0 {
+            // Feasibility was checked above; an open_lease failure here
+            // would be a bookkeeping bug, not a capacity race (the router
+            // is externally locked).
+            self.broker.open_lease(req, idx, shortfall, &spare)?;
+        }
+        self.instances[idx].virtual_blocks += need - shortfall;
         self.instances[idx].pending_transfers += 1;
         Some(idx)
     }
 
-    /// Cache transfer for a routed request finished: virtual usage becomes a
-    /// real allocation and the request joins the batch (iteration-level
-    /// scheduling inserts it at the next step boundary).
-    pub fn transfer_complete(&mut self, idx: usize, tokens: usize) -> anyhow::Result<u64> {
+    /// Cache transfer for routed request `req` finished: the local share
+    /// of its virtual usage becomes a real allocation, its pending lease
+    /// (if any) becomes resident, and the request joins the batch
+    /// (iteration-level scheduling inserts it at the next step boundary).
+    pub fn transfer_complete(
+        &mut self,
+        idx: usize,
+        tokens: usize,
+        req: u64,
+    ) -> anyhow::Result<u64> {
+        let leased = self.broker.pending_blocks(req);
         let inst = &mut self.instances[idx];
         let need = inst.blocks_for(tokens);
-        inst.virtual_blocks = inst.virtual_blocks.saturating_sub(need);
+        let local = need.saturating_sub(leased);
+        inst.virtual_blocks = inst.virtual_blocks.saturating_sub(local);
         inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
-        let seq = inst.blocks.allocate_seq(tokens)?;
+        let seq = inst.blocks.allocate_seq_partial(tokens, local)?;
         inst.active_batch += 1;
+        self.broker.commit_lease(req, idx, seq);
         Ok(seq)
     }
 
     /// A routed request was abandoned before its transfer completed (e.g.
     /// its prefill could not be scheduled): release the virtual
-    /// reservation made by [`DecodeRouter::route`] without allocating.
-    pub fn cancel(&mut self, idx: usize, tokens: usize) {
+    /// reservation made by [`DecodeRouter::route`] without allocating and
+    /// unwind its pending lease. Returns the remote blocks returned to
+    /// their lenders (0 without a lease) so callers can emit
+    /// `on_kv_return`.
+    pub fn cancel(&mut self, idx: usize, tokens: usize, req: u64) -> usize {
+        let leased = self.broker.cancel_lease(req);
         let inst = &mut self.instances[idx];
         let need = inst.blocks_for(tokens);
-        inst.virtual_blocks = inst.virtual_blocks.saturating_sub(need);
+        inst.virtual_blocks = inst.virtual_blocks.saturating_sub(need.saturating_sub(leased));
         inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
+        leased
     }
 
     /// Number of decode instances the router spans.
@@ -193,11 +280,52 @@ impl DecodeRouter {
         self.instances.iter().map(|i| i.blocks.total_blocks()).max().unwrap_or(0)
     }
 
-    /// A request finished decoding: free its blocks, shrink the batch.
-    pub fn finish(&mut self, idx: usize, seq: u64) {
+    /// A request finished decoding: free its blocks, close its resident
+    /// lease, shrink the batch, then repatriate outstanding debt into the
+    /// freed space. Returns the remote blocks the finishing request
+    /// returned to their lenders (0 without a lease) so callers can emit
+    /// `on_kv_return`.
+    pub fn finish(&mut self, idx: usize, seq: u64) -> usize {
+        let leased = self.broker.close_lease(idx, seq);
         let inst = &mut self.instances[idx];
         inst.blocks.free_seq(seq);
         inst.active_batch = inst.active_batch.saturating_sub(1);
+        self.repatriate_debt(idx);
+        leased
+    }
+
+    /// Convert as much of instance `idx`'s outstanding debt as its local
+    /// spare allows into local blocks (ascending seq order): the
+    /// preference for repatriating debt as local blocks free. No-op while
+    /// the broker is disabled.
+    fn repatriate_debt(&mut self, idx: usize) {
+        if !self.broker.is_enabled() || self.broker.debt(idx) == 0 {
+            return;
+        }
+        let mut spare = self.lendable_spare(idx);
+        for (seq, blocks) in self.broker.resident_on(idx) {
+            if spare == 0 {
+                break;
+            }
+            let take = blocks.min(spare);
+            if self.instances[idx].blocks.grow_seq(seq, take).is_ok() {
+                self.broker.repatriate(idx, seq, take);
+                spare -= take;
+            }
+        }
+    }
+
+    /// Fraction of instance `idx`'s resident KV living on remote lenders:
+    /// `debt / (locally used + debt)`, 0.0 when debt-free. Drives the
+    /// modeled remote-attention interconnect-hop cost (see
+    /// [`DecodeModel::remote_hop_secs`](crate::latency::DecodeModel::remote_hop_secs)).
+    pub fn remote_block_fraction(&self, idx: usize) -> f64 {
+        let debt = self.broker.debt(idx);
+        if debt == 0 {
+            return 0.0;
+        }
+        let used = self.instances[idx].blocks.used_blocks();
+        debt as f64 / (used + debt) as f64
     }
 
     /// One decode step generated a token for `seq`: may need a new block.
@@ -219,7 +347,7 @@ mod tests {
     fn routes_to_freest() {
         let mut r = router();
         r.instances[0].active_batch = 10;
-        let idx = r.route(1600).unwrap();
+        let idx = r.route(1600, 0).unwrap();
         assert_eq!(idx, 1, "instance 1 has no batch, higher freeness");
         assert!(r.instances[1].virtual_blocks > 0);
         assert_eq!(r.instances[1].pending_transfers, 1);
@@ -229,20 +357,20 @@ mod tests {
     fn virtual_usage_counts_against_capacity() {
         let mut r = DecodeRouter::new(1, 100, 16);
         // Fill 90 of 100 blocks virtually (90*16 = 1440 tokens).
-        assert_eq!(r.route(1440), Some(0));
+        assert_eq!(r.route(1440, 0), Some(0));
         // 20 more blocks don't fit (only 10 available).
-        assert_eq!(r.route(320), None);
+        assert_eq!(r.route(320, 1), None);
         // 10 do.
-        assert_eq!(r.route(160), Some(0));
+        assert_eq!(r.route(160, 2), Some(0));
     }
 
     #[test]
     fn transfer_complete_converts_virtual_to_real() {
         let mut r = DecodeRouter::new(1, 100, 16);
-        let idx = r.route(320).unwrap();
+        let idx = r.route(320, 0).unwrap();
         let virt_before = r.instances[0].virtual_blocks;
         assert_eq!(virt_before, 20);
-        let seq = r.transfer_complete(idx, 320).unwrap();
+        let seq = r.transfer_complete(idx, 320, 0).unwrap();
         assert_eq!(r.instances[0].virtual_blocks, 0);
         assert_eq!(r.instances[0].active_batch, 1);
         assert_eq!(r.instances[0].blocks.free_blocks(), 80);
@@ -256,14 +384,14 @@ mod tests {
         let mut r = router();
         // Same free blocks, but instance 0 has pending transfers.
         r.instances[0].pending_transfers = 5;
-        assert_eq!(r.route(16), Some(1));
+        assert_eq!(r.route(16, 0), Some(1));
     }
 
     #[test]
     fn on_token_grows_blocks() {
         let mut r = DecodeRouter::new(1, 10, 4);
-        let idx = r.route(4).unwrap();
-        let seq = r.transfer_complete(idx, 4).unwrap();
+        let idx = r.route(4, 0).unwrap();
+        let seq = r.transfer_complete(idx, 4, 0).unwrap();
         assert_eq!(r.instances[0].blocks.free_blocks(), 9);
         // 4 tokens fill block 0 exactly; next token needs a new block
         r.on_token(idx, seq).unwrap();
@@ -278,19 +406,19 @@ mod tests {
     #[test]
     fn cancel_releases_virtual_reservation() {
         let mut r = DecodeRouter::new(1, 10, 16);
-        let idx = r.route(160).unwrap(); // all 10 blocks virtually held
+        let idx = r.route(160, 0).unwrap(); // all 10 blocks virtually held
         assert_eq!(r.in_flight_transfers(), 1);
-        assert_eq!(r.route(16), None, "no capacity left");
-        r.cancel(idx, 160);
+        assert_eq!(r.route(16, 1), None, "no capacity left");
+        r.cancel(idx, 160, 0);
         assert_eq!(r.in_flight_transfers(), 0);
         assert_eq!(r.instances[0].virtual_blocks, 0);
-        assert_eq!(r.route(16), Some(0), "capacity restored");
+        assert_eq!(r.route(16, 2), Some(0), "capacity restored");
     }
 
     #[test]
     fn route_none_when_all_full() {
         let mut r = DecodeRouter::new(2, 2, 16);
-        assert!(r.route(64).is_none(), "needs 4 blocks, only 2 exist");
+        assert!(r.route(64, 0).is_none(), "needs 4 blocks, only 2 exist");
     }
 
     #[test]
@@ -300,13 +428,122 @@ mod tests {
         assert_eq!(r.available_blocks(), 20);
         assert_eq!(r.block_tokens(), 16);
         assert_eq!(r.max_blocks_per_instance(), 10);
-        let idx = r.route(64).unwrap(); // 4 blocks virtually held
+        let idx = r.route(64, 0).unwrap(); // 4 blocks virtually held
         assert_eq!(r.available_blocks(), 16);
         assert_eq!(r.total_blocks(), 20, "totals never move");
-        r.cancel(idx, 64);
+        r.cancel(idx, 64, 0);
         assert_eq!(r.available_blocks(), 20);
         let empty = DecodeRouter::default();
         assert_eq!(empty.block_tokens(), 1, "empty router degrades safely");
         assert_eq!(empty.max_blocks_per_instance(), 0);
+    }
+
+    #[test]
+    fn borrowing_admits_past_local_capacity() {
+        // 2 instances × 10 blocks. A 12-block request fits nowhere locally
+        // but fits with a 2-block (or larger) lease when the broker is on.
+        let mut local = DecodeRouter::new(2, 10, 16);
+        assert_eq!(local.route(192, 0), None, "local-only: 12 > 10 blocks");
+        let mut r = DecodeRouter::with_broker(2, 10, 16, KvBrokerConfig::enabled(8));
+        let idx = r.route(192, 0).expect("borrowing covers the shortfall");
+        assert_eq!(r.broker.pending_blocks(0), 2, "10 local + 2 borrowed");
+        assert_eq!(r.instances[idx].virtual_blocks, 10, "virtual covers the local share");
+        let lender = 1 - idx;
+        assert_eq!(r.broker.lent(lender), 2);
+        let seq = r.transfer_complete(idx, 192, 0).expect("lease guarantees space");
+        assert_eq!(r.instances[idx].blocks.free_blocks(), 0);
+        assert_eq!(r.broker.resident_blocks(idx, seq), 2);
+        assert!(r.remote_block_fraction(idx) > 0.0);
+        let returned = r.finish(idx, seq);
+        assert_eq!(returned, 2);
+        assert_eq!(r.broker.outstanding_leases(), 0);
+        assert_eq!(r.broker.debt(idx), 0);
+        assert_eq!(r.broker.lent(lender), 0);
+        assert_eq!(r.remote_block_fraction(idx), 0.0);
+    }
+
+    #[test]
+    fn debt_penalty_steers_placement_away_from_borrowers() {
+        let mut r = DecodeRouter::with_broker(2, 10, 16, KvBrokerConfig::enabled(8));
+        // Instance 0 goes into debt (needs 12, has 10).
+        assert_eq!(r.route(192, 0), Some(0), "tie broken to 0, which then borrows");
+        let seq = r.transfer_complete(0, 192, 0).unwrap();
+        // Equal freeness would tie to instance 0 minus its lent blocks —
+        // but debt (and instance 1's lease-reduced spare) must steer the
+        // next small request to the debt-free instance 1.
+        assert_eq!(r.route(16, 1), Some(1));
+        r.cancel(1, 16, 1);
+        r.finish(0, seq);
+    }
+
+    #[test]
+    fn cancel_unwinds_borrowed_reservation() {
+        let mut r = DecodeRouter::with_broker(2, 4, 16, KvBrokerConfig::enabled(4));
+        // Needs 6 blocks: 4 local + 2 borrowed.
+        let idx = r.route(96, 7).expect("borrow admits");
+        assert_eq!(r.broker.outstanding_blocks(), 2);
+        let returned = r.cancel(idx, 96, 7);
+        assert_eq!(returned, 2);
+        assert_eq!(r.broker.outstanding_blocks(), 0);
+        assert_eq!(r.instances[idx].virtual_blocks, 0);
+        assert_eq!(r.in_flight_transfers(), 0);
+        assert_eq!(r.available_blocks(), 8, "all blocks admittable again");
+    }
+
+    #[test]
+    fn finish_repatriates_outstanding_debt() {
+        let mut r = DecodeRouter::with_broker(2, 10, 16, KvBrokerConfig::enabled(8));
+        // Fill instance 0 with a local request, then a borrower on top.
+        let a = r.route(128, 0).unwrap(); // 8 blocks, instance 0 (tie → 0)
+        let seq_a = r.transfer_complete(a, 128, 0).unwrap();
+        assert_eq!(a, 0);
+        // Instance 1 spare is 10 minus nothing; borrower lands where the
+        // penalty-adjusted score says. Place a 12-block request: instance 1
+        // holds 10 locally, borrowing 2 from instance 0? Instance 0 has
+        // only 2 spare — exactly enough.
+        let b = r.route(192, 1).expect("borrow admits");
+        assert_eq!(b, 1);
+        let seq_b = r.transfer_complete(b, 192, 1).unwrap();
+        assert_eq!(r.broker.debt(1), 2);
+        // Free the borrower's lender-side pressure: finishing `a` frees 8
+        // blocks on instance 0, but repatriation happens on the *debtor*'s
+        // instance — finishing a local request on instance 1 would. Here
+        // nothing on 1 finishes yet, so debt persists.
+        r.finish(a, seq_a);
+        assert_eq!(r.broker.debt(1), 2, "repatriation needs local spare on the debtor");
+        // Finishing the borrower itself closes the lease.
+        let returned = r.finish(b, seq_b);
+        assert_eq!(returned, 2);
+        assert_eq!(r.broker.outstanding_blocks(), 0);
+    }
+
+    #[test]
+    fn repatriation_converts_remote_blocks_to_local() {
+        let mut r = DecodeRouter::with_broker(2, 10, 16, KvBrokerConfig::enabled(8));
+        // req 0: 4 blocks → instance 0 (tie breaks low).
+        let a = r.route(64, 0).unwrap();
+        assert_eq!(a, 0);
+        let seq_a = r.transfer_complete(0, 64, 0).unwrap();
+        // req 1: 6 blocks → instance 1 (freer). Leaves 4 spare there.
+        assert_eq!(r.route(96, 1), Some(1));
+        let seq_b = r.transfer_complete(1, 96, 1).unwrap();
+        // req 2: 8 blocks. Instance 0 has 6 spare → borrows 2 from 1.
+        assert_eq!(r.route(128, 2), Some(0));
+        let seq_c = r.transfer_complete(0, 128, 2).unwrap();
+        assert_eq!(r.broker.debt(0), 2);
+        assert_eq!(r.broker.lent(1), 2);
+        assert_eq!(r.instances[0].blocks.seq_blocks(seq_c), Some(6));
+        // req 0 finishes on the debtor: its freed blocks repatriate the
+        // whole debt — the lease closes without the borrower finishing.
+        let returned = r.finish(0, seq_a);
+        assert_eq!(returned, 0, "the finishing request itself held no lease");
+        assert_eq!(r.broker.debt(0), 0, "freed local blocks absorbed the debt");
+        assert_eq!(r.broker.lent(1), 0);
+        assert_eq!(r.broker.outstanding_leases(), 0);
+        assert_eq!(r.instances[0].blocks.seq_blocks(seq_c), Some(8), "lease became local");
+        assert_eq!(r.broker.total_repatriated(), 2);
+        r.finish(0, seq_c);
+        r.finish(1, seq_b);
+        assert_eq!(r.available_blocks(), 20);
     }
 }

@@ -97,7 +97,8 @@ pub(crate) enum DispatcherMsg {
 
 /// How one scanned parked entry should leave (or stay in) the queue.
 enum ParkedVerdict {
-    Admit(usize),
+    /// Admitted to `(instance, borrowed KV blocks)`.
+    Admit(usize, usize),
     Cancel,
     Shed(String),
 }
@@ -271,8 +272,8 @@ impl Dispatcher {
             }
         }
         let routed = self.route_in_order(live);
-        for (p, inst) in routed {
-            self.plan_and_dispatch(p, inst, load.arrival_rate);
+        for (p, inst, borrowed) in routed {
+            self.plan_and_dispatch(p, inst, borrowed, load.arrival_rate);
         }
     }
 
@@ -284,8 +285,11 @@ impl Dispatcher {
 
     /// Phase 1: commit placements under one router lock, in arrival order.
     /// Requests that do not fit park (QoS-laned, arrival order preserved
-    /// within each class).
-    fn route_in_order(&mut self, batch: Vec<Pending>) -> Vec<(Pending, usize)> {
+    /// within each class). Each routed entry carries the KV blocks the
+    /// placement borrowed from remote instances (0 without the broker);
+    /// the matching `on_kv_borrow` is emitted by phase 2, right after
+    /// `on_decode_assign` — mirroring the simulator's event order.
+    fn route_in_order(&mut self, batch: Vec<Pending>) -> Vec<(Pending, usize, usize)> {
         if batch.is_empty() {
             return Vec::new();
         }
@@ -293,11 +297,15 @@ impl Dispatcher {
         let router = Arc::clone(&self.router);
         let mut guard = router.lock().unwrap();
         for p in batch {
-            match guard.route(need_tokens(&p.req)) {
-                Some(inst) => routed.push((p, inst)),
+            match guard.route(need_tokens(&p.req), p.req.id) {
+                Some(inst) => {
+                    let borrowed = guard.broker.pending_blocks(p.req.id);
+                    routed.push((p, inst, borrowed));
+                }
                 None => self.park(p),
             }
         }
+        self.shared.kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
         routed
     }
 
@@ -307,10 +315,19 @@ impl Dispatcher {
     /// `on_decode_assign`/`on_plan` is ever emitted for it) and resolves
     /// the handle as [`Completion::Dropped`] — the same fate the old
     /// blocking path gave refused parked requests.
-    fn plan_and_dispatch(&mut self, p: Pending, inst: usize, observed_rate: f64) {
+    fn plan_and_dispatch(&mut self, p: Pending, inst: usize, borrowed: usize, observed_rate: f64) {
         let need = need_tokens(&p.req);
+        // Roll a committed placement back: releases the virtual reservation
+        // and unwinds any pending lease. No `on_kv_borrow` was emitted yet
+        // for this request (that happens below, with `on_decode_assign`),
+        // so no `on_kv_return` fires either — events stay balanced.
+        let rollback = |disp: &Self| {
+            let mut guard = disp.router.lock().unwrap();
+            guard.cancel(inst, need, p.req.id);
+            disp.shared.kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+        };
         if p.shared.is_cancelled() {
-            self.router.lock().unwrap().cancel(inst, need);
+            rollback(self);
             p.shared.resolve(Completion::Cancelled(CancelStage::Queued));
             let _ = self.tx.send(DispatcherMsg::CapacityFreed);
             return;
@@ -324,6 +341,9 @@ impl Dispatcher {
                 // fast the prefill workers are.
                 for o in self.observers.iter() {
                     o.on_decode_assign(p.req.id, inst, now);
+                    if borrowed > 0 {
+                        o.on_kv_borrow(p.req.id, inst, borrowed, now);
+                    }
                     o.on_plan(p.req.id, &plan, now);
                 }
                 p.shared.n_chunks.store(plan.n_chunks(), Ordering::Relaxed);
@@ -331,7 +351,7 @@ impl Dispatcher {
                 self.mark_dispatched(&p.shared, commits);
             }
             Err(e) => {
-                self.router.lock().unwrap().cancel(inst, need);
+                rollback(self);
                 eprintln!("tetris: dropping request {}: {e:#}", p.req.id);
                 p.shared.resolve(Completion::Dropped(format!("{e:#}")));
                 let _ = self.tx.send(DispatcherMsg::CapacityFreed);
@@ -474,7 +494,7 @@ impl Dispatcher {
             let router = Arc::clone(&self.router);
             let mut guard = router.lock().unwrap();
             let admission = &mut self.admission;
-            self.parked.scan(|_qos, p| {
+            let removed = self.parked.scan(|_qos, p| {
                 if p.shared.is_cancelled() {
                     verdicts.push(ParkedVerdict::Cancel);
                     return ScanOutcome::Remove;
@@ -486,25 +506,30 @@ impl Dispatcher {
                         ScanOutcome::Remove
                     }
                     AdmissionDecision::Park => ScanOutcome::Keep,
-                    AdmissionDecision::Admit => match guard.route(need_tokens(&p.req)) {
-                        Some(inst) => {
-                            // Later candidates in this same scan see the
-                            // admission reflected in the load signal.
-                            load.note_admitted(t.need_blocks);
-                            verdicts.push(ParkedVerdict::Admit(inst));
-                            ScanOutcome::Remove
+                    AdmissionDecision::Admit => {
+                        match guard.route(need_tokens(&p.req), p.req.id) {
+                            Some(inst) => {
+                                // Later candidates in this same scan see the
+                                // admission reflected in the load signal.
+                                load.note_admitted(t.need_blocks);
+                                let borrowed = guard.broker.pending_blocks(p.req.id);
+                                verdicts.push(ParkedVerdict::Admit(inst, borrowed));
+                                ScanOutcome::Remove
+                            }
+                            None => ScanOutcome::Keep,
                         }
-                        None => ScanOutcome::Keep,
-                    },
+                    }
                 }
-            })
+            });
+            self.shared.kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+            removed
         };
         debug_assert_eq!(removed.len(), verdicts.len());
         let mut admitted = Vec::new();
         for (p, verdict) in removed.into_iter().zip(verdicts) {
             self.shared.parked.fetch_sub(1, Ordering::Relaxed);
             match verdict {
-                ParkedVerdict::Admit(inst) => admitted.push((p, inst)),
+                ParkedVerdict::Admit(inst, borrowed) => admitted.push((p, inst, borrowed)),
                 ParkedVerdict::Cancel => {
                     p.shared.resolve(Completion::Cancelled(CancelStage::Parked));
                 }
@@ -513,8 +538,8 @@ impl Dispatcher {
                 }
             }
         }
-        for (p, inst) in admitted {
-            self.plan_and_dispatch(p, inst, load.arrival_rate);
+        for (p, inst, borrowed) in admitted {
+            self.plan_and_dispatch(p, inst, borrowed, load.arrival_rate);
         }
     }
 

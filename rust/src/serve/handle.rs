@@ -35,7 +35,7 @@ use crate::sched::ImprovementController;
 use crate::serve::dispatcher::DispatcherMsg;
 use crate::serve::stream::{PushOutcome, TokenStream};
 use crate::serve::{ServeRequest, SharedReceivers, SharedRouter};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -399,6 +399,13 @@ pub(crate) struct SubmitShared {
     /// path). Refreshed by the dispatcher on every admission batch and by
     /// the deadline monitor's ticks.
     pub load_cache: Mutex<Option<LoadSnapshot>>,
+    /// Mirror of the KV broker's lease epoch (bumped on every borrow /
+    /// return / repatriation), stored under the router lock at every
+    /// lease-mutating site. A cached snapshot whose
+    /// [`LoadSnapshot::kv_lease_epoch`] trails this counter is stale in
+    /// its cluster-KV fields (lent/borrowed blocks) and is re-assembled
+    /// even inside the staleness window.
+    pub kv_epoch: Arc<AtomicU64>,
 }
 
 impl SubmitShared {
@@ -477,7 +484,10 @@ impl SubmitShared {
     /// cheap tell that the dispatcher just reshaped the load, so callers
     /// never observe a snapshot contradicting `n_parked()`). `at` and
     /// `parked` are always stamped live; `assembled_at` records when the
-    /// lock-derived parts were actually gathered.
+    /// lock-derived parts were actually gathered. A lease-epoch mismatch
+    /// (the broker borrowed, returned, or repatriated blocks since the
+    /// snapshot was assembled) also forces a refresh, so the cluster-KV
+    /// fields are covered by the same invalidation as the rest.
     pub fn load(&self) -> LoadSnapshot {
         let now = self.epoch.elapsed().as_secs_f64();
         let parked = self.parked.load(Ordering::Relaxed);
@@ -486,6 +496,7 @@ impl SubmitShared {
             if let Some(s) = cache.as_ref() {
                 if now - s.assembled_at <= crate::serve::LOAD_SNAPSHOT_STALENESS
                     && s.parked == parked
+                    && s.kv_lease_epoch == self.kv_epoch.load(Ordering::Relaxed)
                 {
                     let mut out = s.clone();
                     out.at = now;
@@ -504,10 +515,14 @@ impl SubmitShared {
     /// everyone else goes through [`SubmitShared::load`].
     pub fn refresh_load(&self) -> LoadSnapshot {
         let at = self.epoch.elapsed().as_secs_f64();
-        let (block_tokens, decode) = {
+        let (block_tokens, decode, kv_lease_epoch) = {
             let r = self.router.lock().unwrap();
-            LoadSnapshot::decode_load_of(&r)
+            let (block_tokens, decode) = LoadSnapshot::decode_load_of(&r);
+            (block_tokens, decode, r.broker.epoch())
         };
+        // Keep the mirror coherent with what we just read, so a cached
+        // snapshot built from this read validates against it.
+        self.kv_epoch.store(kv_lease_epoch, Ordering::Relaxed);
         let (prefill_busy, decode_lane_busy) = {
             let reg = self.registry.lock().unwrap();
             (reg.prefill_busy(at), reg.decode_busy(at))
@@ -531,6 +546,7 @@ impl SubmitShared {
             transfers_in_service,
             parked: self.parked.load(Ordering::Relaxed),
             arrival_rate,
+            kv_lease_epoch,
         };
         *self.load_cache.lock().unwrap() = Some(snap.clone());
         snap

@@ -124,6 +124,7 @@ use crate::api::admission::{
 use crate::api::Observer;
 use crate::baselines::PrefillScheduler;
 use crate::cluster::WorkerRegistry;
+use crate::kvbroker::KvBrokerConfig;
 use crate::latency::prefill::{PrefillModel, Sample, SpCoeffs};
 use crate::latency::{DecodeQuickfit, TtftEstimator};
 use crate::metrics::{CancelStage, Completion, RequestMetrics, RunMetrics};
@@ -134,7 +135,7 @@ use anyhow::Result;
 use dispatcher::{Dispatcher, DispatcherMsg};
 use handle::{EngineLimits, ReqShared, SubmitShared};
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 use std::thread::JoinHandle;
@@ -169,13 +170,26 @@ pub struct DecodePool {
     pub block_tokens: usize,
     /// Transfer backends per decode instance (handshake pool size).
     pub backends: usize,
+    /// Distributed KV pool configuration (see [`crate::kvbroker`]). The
+    /// default disabled config reproduces local-only placement exactly.
+    pub broker: KvBrokerConfig,
+    /// Concurrent shard streams each transfer backend multiplexes.
+    pub shard_streams: usize,
 }
 
 impl DecodePool {
     /// A pool of `n_workers` instances with `blocks_per_instance` blocks of
-    /// `block_tokens` tokens each and 4 transfer backends per instance.
+    /// `block_tokens` tokens each, 4 single-stream transfer backends per
+    /// instance, and the KV broker disabled.
     pub fn new(n_workers: usize, blocks_per_instance: usize, block_tokens: usize) -> Self {
-        DecodePool { n_workers, blocks_per_instance, block_tokens, backends: 4 }
+        DecodePool {
+            n_workers,
+            blocks_per_instance,
+            block_tokens,
+            backends: 4,
+            broker: KvBrokerConfig::disabled(),
+            shard_streams: 1,
+        }
     }
 }
 
@@ -325,14 +339,24 @@ impl Server {
         let observers: ObserverSet = Arc::new(observers);
         let epoch = Instant::now();
         let kv: SharedKv = Arc::new(Mutex::new(HashMap::new()));
-        let router: SharedRouter = Arc::new(Mutex::new(DecodeRouter::new(
+        let router: SharedRouter = Arc::new(Mutex::new(DecodeRouter::with_broker(
             decode.n_workers,
             decode.blocks_per_instance,
             decode.block_tokens,
+            decode.broker.clone(),
         )));
+        // Mirror of the broker's lease epoch, updated under the router lock
+        // at every lease-mutating site, so the load-snapshot cache can
+        // detect stale cluster-KV fields without taking the router lock.
+        let kv_epoch = Arc::new(AtomicU64::new(0));
         let receivers: SharedReceivers = Arc::new(
             (0..decode.n_workers)
-                .map(|_| Mutex::new(ReceiveManager::new(decode.backends.max(1), 0)))
+                .map(|_| {
+                    Mutex::new(ReceiveManager::with_streams(
+                        decode.backends.max(1),
+                        decode.shard_streams.max(1),
+                    ))
+                })
                 .collect(),
         );
         let (tx, rx) = channel::<DispatcherMsg>();
@@ -345,10 +369,11 @@ impl Server {
             let engine = Arc::clone(&engine);
             let obs = Arc::clone(&observers);
             let router = Arc::clone(&router);
+            let kv_epoch = Arc::clone(&kv_epoch);
             let notify = tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("tetris-decode-{inst}"))
-                .spawn(move || decode_worker(engine, drx, router, obs, epoch, notify))
+                .spawn(move || decode_worker(engine, drx, router, kv_epoch, obs, epoch, notify))
                 .expect("spawn decode worker");
             decode_txs.push(dtx);
             decode_handles.push(handle);
@@ -364,12 +389,16 @@ impl Server {
             let decode_txs = decode_txs.clone();
             let receivers = Arc::clone(&receivers);
             let router = Arc::clone(&router);
+            let kv_epoch = Arc::clone(&kv_epoch);
             let obs = Arc::clone(&observers);
             let notify = tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("tetris-prefill-{wid}"))
                 .spawn(move || {
-                    prefill_worker(engine, kv, decode_txs, receivers, router, wrx, obs, epoch, notify)
+                    prefill_worker(
+                        engine, kv, decode_txs, receivers, router, kv_epoch, wrx, obs, epoch,
+                        notify,
+                    )
                 })
                 .expect("spawn prefill worker");
             workers.push(wtx);
@@ -403,6 +432,7 @@ impl Server {
             observers: Arc::clone(&observers),
             epoch,
             load_cache: Mutex::new(None),
+            kv_epoch: Arc::clone(&kv_epoch),
         });
 
         // The deadline monitor's TTFT lower bound: this machine's
@@ -743,6 +773,7 @@ fn prefill_worker(
     decode_txs: Vec<Sender<DecodeJob>>,
     receivers: SharedReceivers,
     router: SharedRouter,
+    kv_epoch: Arc<AtomicU64>,
     rx: Receiver<WorkerJob>,
     observers: ObserverSet,
     epoch: Instant,
@@ -805,8 +836,8 @@ fn prefill_worker(
                 if is_last {
                     let st = kv.lock().unwrap().remove(&req).expect("kv present");
                     finish_prefill(
-                        &a, st, req, logits, &decode_txs, &receivers, &router, &observers,
-                        epoch, &notify,
+                        &a, st, req, logits, &decode_txs, &receivers, &router, &kv_epoch,
+                        &observers, epoch, &notify,
                     );
                 }
                 end.wait();
@@ -829,13 +860,25 @@ fn finish_prefill(
     decode_txs: &[Sender<DecodeJob>],
     receivers: &SharedReceivers,
     router: &SharedRouter,
+    kv_epoch: &AtomicU64,
     observers: &ObserverSet,
     epoch: Instant,
     notify: &Sender<DispatcherMsg>,
 ) {
     let inst = st.decode_inst;
     let cancel = |stage: CancelStage| {
-        router.lock().unwrap().cancel(inst, st.need_tokens);
+        let returned = {
+            let mut guard = router.lock().unwrap();
+            let returned = guard.cancel(inst, st.need_tokens, req);
+            kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+            returned
+        };
+        if returned > 0 {
+            let t = epoch.elapsed().as_secs_f64();
+            for o in observers.iter() {
+                o.on_kv_return(req, inst, returned, t);
+            }
+        }
         // resolve() emits the terminal observer event (on_cancel, or
         // on_shed if a stream overflow already resolved the request) for
         // whichever resolution wins.
@@ -887,12 +930,16 @@ fn finish_prefill(
     let Some(backend) = backend else {
         return cancel(CancelStage::Transfer);
     };
-    // virtual reservation becomes a real block allocation
-    let seq = router
-        .lock()
-        .unwrap()
-        .transfer_complete(inst, st.need_tokens)
-        .expect("virtual reservation guaranteed space");
+    // virtual reservation becomes a real block allocation (and any pending
+    // lease becomes resident, keyed by the new seq)
+    let seq = {
+        let mut guard = router.lock().unwrap();
+        let seq = guard
+            .transfer_complete(inst, st.need_tokens, req)
+            .expect("virtual reservation guaranteed space");
+        kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+        seq
+    };
     let t = epoch.elapsed().as_secs_f64();
     for o in observers.iter() {
         o.on_transfer(req, backend, t);
@@ -966,6 +1013,7 @@ fn decode_worker(
     engine: Arc<Engine>,
     rx: Receiver<DecodeJob>,
     router: SharedRouter,
+    kv_epoch: Arc<AtomicU64>,
     observers: ObserverSet,
     epoch: Instant,
     notify: Sender<DispatcherMsg>,
@@ -991,13 +1039,13 @@ fn decode_worker(
             // Fail-policy stream overflow and the deadline monitor raise
             // the same flag.)
             if st.job.shared.is_cancelled() {
-                cancel_decode(&router, &notify, st);
+                cancel_decode(&router, &kv_epoch, &observers, epoch, &notify, st);
                 continue;
             }
             if st.tokens_out >= st.job.output_len
                 || st.hist_len + 1 >= a.decode_c_bucket
             {
-                finishing(&router, &notify, st);
+                finishing(&router, &kv_epoch, &observers, epoch, &notify, st);
                 continue;
             }
             let token = InterruptToken::from_flag(Arc::clone(&st.job.shared.cancelled));
@@ -1008,7 +1056,7 @@ fn decode_worker(
             // A flag tripped mid-step aborts the step cooperatively; the
             // release ladder is the same as the boundary check above.
             let Some(out) = out else {
-                cancel_decode(&router, &notify, st);
+                cancel_decode(&router, &kv_epoch, &observers, epoch, &notify, st);
                 continue;
             };
             // append the token's KV
@@ -1030,7 +1078,7 @@ fn decode_worker(
                 o.on_token(st.job.req, epoch.elapsed().as_secs_f64());
             }
             if st.tokens_out >= st.job.output_len {
-                finishing(&router, &notify, st);
+                finishing(&router, &kv_epoch, &observers, epoch, &notify, st);
             } else {
                 still.push(st);
             }
@@ -1053,11 +1101,30 @@ fn activate(job: DecodeJob) -> ActiveDecode {
     }
 }
 
-/// Release the request's router blocks, report its metrics through the
+/// Release the request's router blocks (unwinding any resident lease and
+/// repatriating debt onto survivors), report its metrics through the
 /// handle, and wake the dispatcher (freed capacity may admit parked
 /// requests).
-fn finishing(router: &SharedRouter, notify: &Sender<DispatcherMsg>, st: ActiveDecode) {
-    router.lock().unwrap().finish(st.job.inst, st.job.seq);
+fn finishing(
+    router: &SharedRouter,
+    kv_epoch: &AtomicU64,
+    observers: &ObserverSet,
+    epoch: Instant,
+    notify: &Sender<DispatcherMsg>,
+    st: ActiveDecode,
+) {
+    let returned = {
+        let mut guard = router.lock().unwrap();
+        let returned = guard.finish(st.job.inst, st.job.seq);
+        kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+        returned
+    };
+    if returned > 0 {
+        let t = epoch.elapsed().as_secs_f64();
+        for o in observers.iter() {
+            o.on_kv_return(st.job.req, st.job.inst, returned, t);
+        }
+    }
     let arrival = st.job.shared.submitted;
     let m = RequestMetrics {
         id: st.job.req,
@@ -1077,8 +1144,26 @@ fn finishing(router: &SharedRouter, notify: &Sender<DispatcherMsg>, st: ActiveDe
 /// winning resolution emits its own terminal event, so an
 /// overflow-shed request keeps its `Shed` outcome and no duplicate
 /// `on_cancel` fires — and wake the dispatcher.
-fn cancel_decode(router: &SharedRouter, notify: &Sender<DispatcherMsg>, st: ActiveDecode) {
-    router.lock().unwrap().finish(st.job.inst, st.job.seq);
+fn cancel_decode(
+    router: &SharedRouter,
+    kv_epoch: &AtomicU64,
+    observers: &ObserverSet,
+    epoch: Instant,
+    notify: &Sender<DispatcherMsg>,
+    st: ActiveDecode,
+) {
+    let returned = {
+        let mut guard = router.lock().unwrap();
+        let returned = guard.finish(st.job.inst, st.job.seq);
+        kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+        returned
+    };
+    if returned > 0 {
+        let t = epoch.elapsed().as_secs_f64();
+        for o in observers.iter() {
+            o.on_kv_return(st.job.req, st.job.inst, returned, t);
+        }
+    }
     st.job.shared.resolve(Completion::Cancelled(CancelStage::Decode));
     let _ = notify.send(DispatcherMsg::CapacityFreed);
 }

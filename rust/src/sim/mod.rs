@@ -31,6 +31,7 @@ use crate::api::Observer;
 use crate::baselines::PrefillScheduler;
 use crate::cluster::DispatchClock;
 use crate::config::ClusterConfig;
+use crate::kvbroker::KvBrokerConfig;
 use crate::latency::{DecodeModel, PrefillModel, TransferModel};
 use crate::metrics::{RequestMetrics, RunMetrics};
 use crate::modelcfg::ModelArch;
@@ -144,6 +145,11 @@ pub struct Simulator {
     /// LoongServe (non-disaggregated) decode runs as SP over TP=prefill_tp
     /// instances instead of large TP — the Fig. 8 TBT gap.
     pub esp_decode: bool,
+    /// Distributed KV pool configuration (see [`crate::kvbroker`]). The
+    /// default disabled config reproduces local-only placement exactly.
+    pub broker: KvBrokerConfig,
+    /// Concurrent shard streams each transfer backend multiplexes.
+    pub shard_streams: usize,
     /// Lifecycle-event subscribers (see [`crate::api::Observer`]).
     pub observers: Vec<Arc<dyn Observer>>,
 }
@@ -157,9 +163,15 @@ impl Simulator {
 
         let n_decode = self.cluster.n_decode_instances().max(1);
         let blocks = self.params.decode_capacity_tokens / self.params.block_tokens;
-        let mut router = DecodeRouter::new(n_decode, blocks, self.params.block_tokens);
+        let mut router = DecodeRouter::with_broker(
+            n_decode,
+            blocks,
+            self.params.block_tokens,
+            self.broker.clone(),
+        );
+        let streams = self.shard_streams.max(1);
         let mut receivers: Vec<ReceiveManager> = (0..n_decode)
-            .map(|_| ReceiveManager::new(self.params.backends_per_decode, 0))
+            .map(|_| ReceiveManager::with_streams(self.params.backends_per_decode, streams))
             .collect();
         // Which receive-manager backend maps to which sim event is implicit:
         // ShardDone events carry (req, backend).
@@ -215,11 +227,17 @@ impl Simulator {
                     }
                     // decode routing first (virtual usage there from now on)
                     let need = reqs[i].prompt_len + reqs[i].output_len;
-                    match router.route(need) {
+                    match router.route(need, i as u64) {
                         Some(d) => {
                             reqs[i].decode_inst = Some(d);
                             for o in &self.observers {
                                 o.on_decode_assign(i as u64, d, now);
+                            }
+                            let borrowed = router.broker.pending_blocks(i as u64);
+                            if borrowed > 0 {
+                                for o in &self.observers {
+                                    o.on_kv_borrow(i as u64, d, borrowed, now);
+                                }
                             }
                             self.start_prefill(i, now, &mut reqs, &mut clock, &mut heap, &mut seq);
                         }
@@ -284,7 +302,7 @@ impl Simulator {
                     if complete {
                         let need = reqs[req].prompt_len + reqs[req].output_len;
                         let sid = router
-                            .transfer_complete(d, need)
+                            .transfer_complete(d, need, req as u64)
                             .expect("virtual reservation guaranteed space");
                         reqs[req].seq_id = Some(sid);
                         reqs[req].last_token_at = now;
@@ -315,7 +333,12 @@ impl Simulator {
                     } else {
                         (1, self.cluster.decode_tp)
                     };
-                    let dt = self.decode_model.step_secs(mean_ctx, batch, sp, tp);
+                    // Remote-block attention: leased blocks live across the
+                    // interconnect, adding a hop term to every step.
+                    let dt = self.decode_model.step_secs(mean_ctx, batch, sp, tp)
+                        + self
+                            .decode_model
+                            .remote_hop_secs(router.remote_block_fraction(inst));
                     let t_end = now + dt;
                     let mut still = Vec::with_capacity(batches[inst].len());
                     for &r in &batches[inst] {
@@ -329,7 +352,12 @@ impl Simulator {
                         if reqs[r].tokens_out >= reqs[r].output_len {
                             reqs[r].finished = true;
                             done += 1;
-                            router.finish(inst, reqs[r].seq_id.unwrap());
+                            let returned = router.finish(inst, reqs[r].seq_id.unwrap());
+                            if returned > 0 {
+                                for o in &self.observers {
+                                    o.on_kv_return(r as u64, inst, returned, t_end);
+                                }
+                            }
                         } else {
                             still.push(r);
                         }
@@ -339,10 +367,16 @@ impl Simulator {
                     let mut admitted = Vec::new();
                     for &w in waiting.iter() {
                         let need = reqs[w].prompt_len + reqs[w].output_len;
-                        if let Some(d) = router.route(need) {
+                        if let Some(d) = router.route(need, w as u64) {
                             reqs[w].decode_inst = Some(d);
                             for o in &self.observers {
                                 o.on_decode_assign(w as u64, d, t_end);
+                            }
+                            let borrowed = router.broker.pending_blocks(w as u64);
+                            if borrowed > 0 {
+                                for o in &self.observers {
+                                    o.on_kv_borrow(w as u64, d, borrowed, t_end);
+                                }
                             }
                             admitted.push(w);
                         }

@@ -48,8 +48,11 @@ pub enum HandshakeReply {
 pub struct ReceiveManager {
     /// Size of the backend pool (for observability/metrics).
     pub n_backends: usize,
-    /// backend -> currently-assigned request (None = free).
-    backends: Vec<Option<ReqId>>,
+    /// backend -> requests of the shards it is currently streaming. Each
+    /// backend multiplexes up to `streams` concurrent shard streams.
+    backends: Vec<Vec<ReqId>>,
+    /// Concurrent shard streams each backend multiplexes (>= 1).
+    streams: usize,
     /// Requests admitted to service, ordered by first handshake timestamp.
     admitted: VecDeque<ReqId>,
     /// Per-request bookkeeping.
@@ -68,17 +71,29 @@ struct ReqState {
 }
 
 impl ReceiveManager {
-    /// A manager over `n_backends` transfer backends
+    /// A manager over `n_backends` single-stream transfer backends
     /// (`shards_expected_default` is unused legacy and ignored).
     pub fn new(n_backends: usize, shards_expected_default: usize) -> Self {
         let _ = shards_expected_default;
+        Self::with_streams(n_backends, 1)
+    }
+
+    /// A manager whose backends each multiplex up to `streams` concurrent
+    /// shard streams; `streams == 1` is exactly [`ReceiveManager::new`].
+    pub fn with_streams(n_backends: usize, streams: usize) -> Self {
         ReceiveManager {
             n_backends,
-            backends: vec![None; n_backends],
+            backends: vec![Vec::new(); n_backends],
+            streams: streams.max(1),
             admitted: VecDeque::new(),
             reqs: BTreeMap::new(),
             buffer_free: false,
         }
+    }
+
+    /// Concurrent shard streams each backend multiplexes.
+    pub fn streams(&self) -> usize {
+        self.streams
     }
 
     /// Register a request before its senders handshake: how many shards
@@ -141,13 +156,14 @@ impl ReceiveManager {
                 else {
                     break;
                 };
-                match self.backends.iter().position(Option::is_none) {
+                let slot = self.backends.iter().position(|b| b.len() < self.streams);
+                match slot {
                     Some(b) => {
-                        self.backends[b] = Some(req);
+                        self.backends[b].push(req);
                         self.reqs.get_mut(&req).unwrap().shards_waiting.pop_front();
                         grants.push((hs, b));
                     }
-                    None => break 'outer, // no free backend; earlier reqs keep priority
+                    None => break 'outer, // no free stream; earlier reqs keep priority
                 }
             }
         }
@@ -159,8 +175,11 @@ impl ReceiveManager {
     /// request finished all shards (decode may start).
     pub fn transfer_done(&mut self, req: ReqId, backend: usize) -> (Vec<(Handshake, usize)>, bool) {
         if backend != usize::MAX {
-            debug_assert_eq!(self.backends[backend], Some(req));
-            self.backends[backend] = None;
+            let pos = self.backends[backend].iter().position(|r| *r == req);
+            debug_assert!(pos.is_some(), "transfer_done for a stream req {req} never held");
+            if let Some(pos) = pos {
+                self.backends[backend].swap_remove(pos);
+            }
         }
         let state = self.reqs.get_mut(&req).unwrap();
         state.shards_done += 1;
@@ -183,9 +202,7 @@ impl ReceiveManager {
         }
         self.admitted.retain(|r| *r != req);
         for b in self.backends.iter_mut() {
-            if *b == Some(req) {
-                *b = None;
-            }
+            b.retain(|r| *r != req);
         }
         self.pump()
     }
@@ -198,17 +215,19 @@ impl ReceiveManager {
             .unwrap_or(0)
     }
 
-    /// Backends not currently carrying a shard.
+    /// Backends with at least one free stream slot, i.e. backends that
+    /// would grant a handshake immediately. With `streams == 1` this is
+    /// exactly the count of idle backends.
     pub fn free_backends(&self) -> usize {
-        self.backends.iter().filter(|b| b.is_none()).count()
+        self.backends.iter().filter(|b| b.len() < self.streams).count()
     }
 
-    /// Backends currently held by one request — 0 once the request
+    /// Stream slots currently held by one request — 0 once the request
     /// finished or was aborted. The interrupt/cancel release ladder's
     /// leak check: after [`ReceiveManager::abort`] this must be 0 for the
     /// aborted request, whatever stage the handoff was in.
     pub fn holds(&self, req: ReqId) -> usize {
-        self.backends.iter().filter(|b| **b == Some(req)).count()
+        self.backends.iter().map(|b| b.iter().filter(|r| **r == req).count()).sum()
     }
 
     /// Requests currently admitted to the service order (shards streaming
@@ -332,6 +351,50 @@ mod tests {
         // idempotent
         assert!(rm.abort(1).is_empty());
         assert!(rm.abort(99).is_empty());
+    }
+
+    #[test]
+    fn streams_multiplex_one_backend() {
+        // Two streams on a single backend: two shards flow concurrently,
+        // the third waits, and completing one shard re-pumps it.
+        let mut rm = ReceiveManager::with_streams(1, 2);
+        assert_eq!(rm.streams(), 2);
+        rm.expect(1, 3, 0.0);
+        assert_eq!(rm.handshake(hs(1, 0, 0.0)), HandshakeReply::Granted { backend: 0 });
+        assert_eq!(rm.handshake(hs(1, 1, 0.1)), HandshakeReply::Granted { backend: 0 });
+        assert_eq!(rm.handshake(hs(1, 2, 0.2)), HandshakeReply::Wait);
+        assert_eq!(rm.holds(1), 2);
+        assert_eq!(rm.free_backends(), 0);
+        let (grants, complete) = rm.transfer_done(1, 0);
+        assert!(!complete);
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].0.shard, 2);
+        rm.transfer_done(1, 0);
+        let (_, complete) = rm.transfer_done(1, 0);
+        assert!(complete);
+        assert_eq!(rm.free_backends(), 1, "all stream slots released");
+    }
+
+    #[test]
+    fn abort_releases_all_stream_slots() {
+        let mut rm = ReceiveManager::with_streams(2, 2);
+        rm.expect(1, 4, 0.0);
+        rm.expect(2, 1, 0.5);
+        for i in 0..4 {
+            assert!(matches!(
+                rm.handshake(hs(1, i, i as f64 * 0.1)),
+                HandshakeReply::Granted { .. }
+            ));
+        }
+        assert_eq!(rm.holds(1), 4);
+        assert_eq!(rm.handshake(hs(2, 0, 0.5)), HandshakeReply::Wait);
+        let grants = rm.abort(1);
+        assert_eq!(rm.holds(1), 0);
+        assert_eq!(grants.len(), 1, "freed slot re-pumped to req 2");
+        assert_eq!(grants[0].0.req, 2);
+        let (_, complete) = rm.transfer_done(2, grants[0].1);
+        assert!(complete);
+        assert_eq!(rm.free_backends(), 2, "no stream slot leaked");
     }
 
     #[test]

@@ -104,6 +104,8 @@ fn api_matches_manually_wired_simulator() {
         transfer_model: TransferModel::from_cluster(&cluster),
         prefill_model: model,
         esp_decode: false,
+        broker: tetris::api::KvBrokerConfig::disabled(),
+        shard_streams: 1,
         observers: Vec::new(),
         arch,
         cluster,

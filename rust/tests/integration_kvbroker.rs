@@ -1,0 +1,291 @@
+//! Integration: the cluster-wide distributed KV pool (`kvbroker`).
+//!
+//! * Zero-borrow-cap parity — with the broker disabled (caps 0), the
+//!   simulator and the live server reproduce the local-only placement
+//!   sequence bit-for-bit, and no borrow/return events are ever emitted.
+//! * Capacity — borrowing admits a request that local-only placement must
+//!   park, and every borrowed block is either returned at finish or
+//!   repatriated into local blocks.
+//! * Churn — 200 requests with mixed cancels, admission/deadline sheds and
+//!   borrows leave zero leaked leases, blocks or transfer backends, with
+//!   exactly-once terminal resolution per request.
+//!
+//! Everything runs on the deterministic stub engine.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use tetris::api::{
+    Completion, KvBrokerConfig, SubmitOptions, Tetris, TetrisBuilder, TraceEvent, TraceRecorder,
+};
+use tetris::config::ClusterConfig;
+use tetris::latency::prefill::{PrefillModel, SpCoeffs};
+use tetris::runtime::Engine;
+use tetris::serve::{Server, ServeRequest};
+use tetris::sim::SimParams;
+use tetris::workload::Request;
+
+/// A scheduler model with A100-like SP shape so multi-chunk CDSP paths get
+/// exercised even on the CPU substrate (DESIGN.md §3).
+fn sched_model(n: usize) -> PrefillModel {
+    let mut m = PrefillModel::new();
+    let mut sp = 1;
+    while sp <= n {
+        m.insert(
+            sp,
+            SpCoeffs {
+                a: 0.002 * sp as f64,
+                b: 1.0e-4 / sp as f64,
+                c: 2.0e-7 / sp as f64,
+                d: 1.0e-7 / sp as f64,
+            },
+        );
+        sp *= 2;
+    }
+    m
+}
+
+/// The shared cluster shape: `n_decode` decode instances with
+/// `blocks_per_instance` blocks of 16 tokens each.
+fn builder(n_decode: usize, blocks_per_instance: usize, rec: Arc<TraceRecorder>) -> TetrisBuilder {
+    Tetris::builder()
+        .cluster(ClusterConfig::tiny(2, n_decode))
+        .n_decode_workers(n_decode)
+        .sp_candidates(vec![1, 2])
+        .min_chunk(32)
+        .prefill_model(sched_model(2))
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: blocks_per_instance * 16,
+            block_tokens: 16,
+        })
+        .observe(rec)
+}
+
+fn req(id: u64, len: usize, out: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: (0..len).map(|i| ((i * 7 + id as usize) % 512) as i32).collect(),
+        output_len: out,
+    }
+}
+
+fn assignments(rec: &TraceRecorder) -> BTreeMap<u64, usize> {
+    let mut m = BTreeMap::new();
+    for e in rec.events() {
+        if let TraceEvent::DecodeAssign { req, instance, .. } = e {
+            m.insert(req, instance);
+        }
+    }
+    m
+}
+
+/// Router, block-pool, transfer-backend AND lease accounting all pristine.
+fn assert_no_leaks(server: &Server, blocks_per_instance: usize, backends: usize) {
+    let router = server.router_state();
+    assert_eq!(router.in_flight_transfers(), 0, "leaked in-flight transfer");
+    for (i, inst) in router.instances.iter().enumerate() {
+        assert_eq!(inst.virtual_blocks, 0, "instance {i} leaked virtual blocks");
+        assert_eq!(inst.active_batch, 0, "instance {i} leaked batch slots");
+        assert_eq!(
+            inst.blocks.free_blocks(),
+            blocks_per_instance,
+            "instance {i} leaked KV blocks"
+        );
+        assert_eq!(
+            server.free_transfer_backends(i),
+            backends,
+            "instance {i} leaked transfer backends"
+        );
+        assert_eq!(router.broker.lent(i), 0, "instance {i} still marked as lending");
+        assert_eq!(router.broker.debt(i), 0, "instance {i} still in debt");
+    }
+    assert_eq!(router.broker.outstanding_leases(), 0, "leaked leases");
+    assert_eq!(router.broker.outstanding_blocks(), 0, "leaked leased blocks");
+    assert_eq!(server.n_parked(), 0, "requests left parked");
+}
+
+/// Burst shapes reused by both parity runs (prompt, output).
+fn parity_shapes() -> Vec<(usize, usize)> {
+    (0..40usize).map(|i| (40 + (i * 29) % 200, 3 + i % 6)).collect()
+}
+
+#[test]
+fn zero_borrow_cap_parity_in_the_simulator() {
+    // With both caps 0 the broker is disabled even when a debt penalty is
+    // configured: placements, completions and latency percentiles must be
+    // bit-for-bit identical to a build that never mentions the broker.
+    let trace: Vec<Request> = parity_shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, &(p, o))| Request { id: i as u64, arrival: 0.0, prompt_len: p, output_len: o })
+        .collect();
+    let mut runs = Vec::new();
+    for enabled_cfg in [false, true] {
+        let rec = Arc::new(TraceRecorder::new());
+        let mut b = builder(2, 256, rec.clone());
+        if enabled_cfg {
+            b = b.kv_broker(KvBrokerConfig {
+                max_borrow_blocks: 0,
+                max_lend_blocks: 0,
+                debt_penalty: 9.0,
+            });
+        }
+        let mut sim = b.build_simulation().expect("sim builds");
+        let m = sim.run(&trace);
+        assert_eq!(m.requests.len(), 40);
+        assert_eq!(rec.count("kv_borrow"), 0, "disabled broker must never borrow");
+        assert_eq!(rec.count("kv_return"), 0);
+        let ttft = m.ttft_summary();
+        runs.push((assignments(&rec), ttft.p50, ttft.p99));
+    }
+    assert_eq!(runs[0], runs[1], "zero-cap broker must be bit-for-bit local-only");
+}
+
+#[test]
+fn zero_borrow_cap_parity_on_the_live_server() {
+    let reqs: Vec<ServeRequest> = parity_shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, &(p, o))| req(i as u64, p, o))
+        .collect();
+    let mut placements = Vec::new();
+    for enabled_cfg in [false, true] {
+        let rec = Arc::new(TraceRecorder::new());
+        let mut b = builder(2, 256, rec.clone());
+        if enabled_cfg {
+            b = b.kv_broker(KvBrokerConfig {
+                max_borrow_blocks: 0,
+                max_lend_blocks: 0,
+                debt_penalty: 9.0,
+            });
+        }
+        let mut server = b.build_server(Arc::new(Engine::stub_default()), 2).expect("server");
+        let m = server.run_trace(&reqs, 0.0).expect("trace");
+        assert_eq!(m.requests.len(), 40);
+        assert_eq!(rec.count("kv_borrow"), 0, "disabled broker must never borrow");
+        assert_eq!(rec.count("kv_return"), 0);
+        assert_no_leaks(&server, 256, 2);
+        server.shutdown().unwrap();
+        placements.push(assignments(&rec));
+    }
+    assert_eq!(placements[0], placements[1], "zero-cap placements must be local-only");
+}
+
+#[test]
+fn borrowing_admits_what_local_only_parks() {
+    // 2 instances × 16 blocks. A and B each hold 10 blocks (one per
+    // instance), so the third 10-block request sees only 6 free everywhere:
+    // local-only placement must park it, while a broker with cap ≥ 4 covers
+    // the shortfall from the sibling instance — the capacity the
+    // distributed pool buys. All three are one atomic burst, so routing is
+    // deterministic on both sides.
+    // 150 tokens = 10 blocks each; A and B decode long, C decodes short.
+    let reqs = vec![req(0, 20, 130), req(1, 20, 130), req(2, 140, 10)];
+
+    let rec = Arc::new(TraceRecorder::new());
+    let mut local = builder(2, 16, rec.clone())
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server");
+    local.submit_burst(&reqs).expect("burst accepted");
+    assert_eq!(local.n_parked(), 1, "local-only must park the third 10-block request");
+    assert_eq!(local.collect(3).len(), 3, "parked request admitted after capacity frees");
+    assert_no_leaks(&local, 16, 2);
+    local.shutdown().unwrap();
+
+    let rec = Arc::new(TraceRecorder::new());
+    let mut server = builder(2, 16, rec.clone())
+        .kv_broker(KvBrokerConfig::enabled(8))
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server");
+    server.submit_burst(&reqs).expect("burst accepted");
+    assert_eq!(server.n_parked(), 0, "borrowing must cover the 4-block shortfall");
+    assert_eq!(rec.count("kv_borrow"), 1, "exactly the third request borrows");
+    assert_eq!(server.collect(3).len(), 3);
+    let broker = server.router_state().broker;
+    assert_eq!(broker.total_borrowed(), 4, "the shortfall was 4 blocks");
+    assert_eq!(
+        broker.total_returned() + broker.total_repatriated(),
+        4,
+        "every borrowed block is returned at finish or repatriated as locals free"
+    );
+    assert_no_leaks(&server, 16, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn borrow_churn_200_requests_leaks_nothing() {
+    // The satellite's churn bar: 200 mixed-class requests on a tight
+    // 2-instance pool with an enabled broker and 2 shard streams per
+    // backend — client cancels, admission sheds, execution-time deadline
+    // sheds and borrows all interleave, and the drain must show zero
+    // leaked leases/blocks/backends plus exactly-once terminal events.
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(2, 50, rec.clone())
+        .kv_broker(KvBrokerConfig::enabled(16))
+        .shard_streams(2)
+        .starvation_bound(4)
+        .build_server(Arc::new(Engine::stub_default()), 2)
+        .expect("server starts");
+    let client = server.client();
+    let mut handles = Vec::new();
+    for i in 0..200u64 {
+        let (shape, opts) = match i % 4 {
+            0 => (req(i, 300, 40), SubmitOptions::best_effort()),
+            1 => (req(i, 40, 4), SubmitOptions::interactive()),
+            2 => (req(i, 120, 8), SubmitOptions::batch().deadline(0.006)),
+            _ => (req(i, 60, 6), SubmitOptions::interactive().deadline(5.0)),
+        };
+        let h = client.submit_with(&shape, opts).expect("submitted");
+        if i % 7 == 0 {
+            h.cancel();
+        }
+        handles.push(h);
+    }
+    let mut finished: Vec<u64> = Vec::new();
+    let mut shed = 0usize;
+    let mut cancelled = 0usize;
+    for h in &mut handles {
+        match h.wait() {
+            Completion::Finished(_) => finished.push(h.id()),
+            Completion::Shed(reason) => {
+                assert!(!reason.is_empty());
+                shed += 1;
+            }
+            Completion::Cancelled(_) => cancelled += 1,
+            Completion::Dropped(msg) => panic!("dropped: {msg}"),
+        }
+    }
+    assert_eq!(finished.len() + shed + cancelled, 200, "every handle resolves");
+    assert!(!finished.is_empty(), "uncontended requests must finish");
+    assert_eq!(rec.count("shed"), shed, "shed events match Shed resolutions");
+    assert_eq!(rec.count("cancel"), cancelled, "cancel events match resolutions");
+    // Exactly-once terminal resolution per handle: at most one terminal
+    // (cancel|shed) event per request id and none for finished requests,
+    // however sheds, cancels and lease unwinds interleave.
+    let mut terminal: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut borrows: BTreeMap<u64, usize> = BTreeMap::new();
+    for e in rec.events() {
+        match e.kind() {
+            "cancel" | "shed" => *terminal.entry(e.req()).or_insert(0) += 1,
+            "kv_borrow" => *borrows.entry(e.req()).or_insert(0) += 1,
+            _ => {}
+        }
+    }
+    for (id, n) in &terminal {
+        assert_eq!(*n, 1, "request {id} got {n} terminal events (double resolution)");
+    }
+    for (id, n) in &borrows {
+        assert_eq!(*n, 1, "request {id} borrowed {n} times (routed twice?)");
+    }
+    assert_eq!(terminal.len(), shed + cancelled, "terminal events match resolutions 1:1");
+    // Lease accounting drains to zero: whatever was borrowed came back as
+    // returns or repatriations, and nothing is outstanding.
+    let broker = server.router_state().broker;
+    assert_eq!(
+        broker.total_borrowed(),
+        broker.total_returned() + broker.total_repatriated(),
+        "borrowed blocks must all be returned or repatriated"
+    );
+    assert_no_leaks(&server, 50, 2);
+    server.shutdown().unwrap();
+}

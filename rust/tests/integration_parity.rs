@@ -272,7 +272,8 @@ fn router_invariants_hold_under_concurrent_handoff() {
             let mut completed = 0usize;
             for i in 0..200usize {
                 let tokens = 16 + ((t as usize * 37 + i * 13) % 200);
-                let routed = { router.lock().unwrap().route(tokens) };
+                let req = t * 1000 + i as u64;
+                let routed = { router.lock().unwrap().route(tokens, req) };
                 if let Some(idx) = routed {
                     // other threads interleave inside this window: the
                     // virtual reservation must protect the allocation
@@ -280,7 +281,7 @@ fn router_invariants_hold_under_concurrent_handoff() {
                         router
                             .lock()
                             .unwrap()
-                            .transfer_complete(idx, tokens)
+                            .transfer_complete(idx, tokens, req)
                             .expect("virtual reservation guarantees space")
                     };
                     router.lock().unwrap().finish(idx, seq);

@@ -1,0 +1,147 @@
+//! Bench 7: elastic membership vs every fixed prefill/decode split.
+//!
+//! The acceptance workload from the membership chaos suite, run as a
+//! regression bench: a two-phase trace on a 4+4-slot cluster where phase 1
+//! (a burst of long prompts) is prefill-bound and phase 2 (a burst of
+//! KV-heavy decodes) is decode-bound. Every fixed split is starved in one
+//! phase; the elastic script runs 4P/2D through phase 1 and converts two
+//! prefill lanes to decode at the phase boundary.
+//!
+//! Three numbers, written to `BENCH_7.json` for the CI regression gate:
+//!
+//! * `ttft_p99_elastic` — P99 TTFT of the elastic membership script;
+//! * `ttft_p99_best_fixed` — P99 TTFT of the *best* fixed split
+//!   (min over 4P/2D, 3P/3D, 2P/4D);
+//! * `elastic_advantage` — `best_fixed / elastic` (> 1 means elastic wins
+//!   against every fixed split; the gate ratchets on this ratio).
+
+use tetris::api::{Tetris, TetrisBuilder};
+use tetris::config::ClusterConfig;
+use tetris::latency::prefill::{PrefillModel, SpCoeffs};
+use tetris::sim::{MemberAction, MembershipEvent, SimParams};
+use tetris::util::bench::{fmt_secs, Table};
+use tetris::util::cli::Args;
+use tetris::util::json::Json;
+use tetris::workload::Request;
+
+/// When phase 2 (the decode-heavy burst) arrives; phase 1 has fully
+/// drained by then under every split.
+const PHASE2_AT: f64 = 5.0;
+
+/// The same A100-like SP-shaped scheduler model the serve integration
+/// suites plan with (DESIGN.md §3).
+fn sched_model(n: usize) -> PrefillModel {
+    let mut m = PrefillModel::new();
+    let mut sp = 1;
+    while sp <= n {
+        m.insert(
+            sp,
+            SpCoeffs {
+                a: 0.002 * sp as f64,
+                b: 1.0e-4 / sp as f64,
+                c: 2.0e-7 / sp as f64,
+                d: 1.0e-7 / sp as f64,
+            },
+        );
+        sp *= 2;
+    }
+    m
+}
+
+/// The 4+4-slot cluster: 210 KV blocks of 64 tokens per decode instance,
+/// so each phase-2 request (6400 tokens = 100 blocks) needs half an
+/// instance — 4 decode instances hold all 8, 2 hold only 4.
+fn elastic_builder() -> TetrisBuilder {
+    Tetris::builder()
+        .cluster(ClusterConfig::tiny(4, 4))
+        .n_decode_workers(4)
+        .sp_candidates(vec![1, 2, 4])
+        .min_chunk(32)
+        .prefill_model(sched_model(4))
+        .sim_params(SimParams {
+            backends_per_decode: 4,
+            decode_capacity_tokens: 13_440,
+            block_tokens: 64,
+        })
+}
+
+/// Phase 1: `n1` long prompts at t=0 (prefill-bound). Phase 2: `n2`
+/// KV-heavy decodes at the phase boundary (decode-bound).
+fn two_phase_trace(n1: usize, n2: usize) -> Vec<Request> {
+    (0..n1 as u64)
+        .map(|i| Request { id: i, arrival: 0.0, prompt_len: 512, output_len: 1 })
+        .chain((0..n2 as u64).map(|i| Request {
+            id: n1 as u64 + i,
+            arrival: PHASE2_AT,
+            prompt_len: 64,
+            output_len: 6336,
+        }))
+        .collect()
+}
+
+fn p99_of(script: Vec<MembershipEvent>, trace: &[Request]) -> f64 {
+    let mut sim =
+        elastic_builder().membership(script).build_simulation().expect("valid configuration");
+    let m = sim.run(trace);
+    assert_eq!(m.requests.len(), trace.len(), "every request completes");
+    m.ttft_summary().p99
+}
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let out = args.str_or("out", "BENCH_7.json");
+    let n1 = args.usize_or("n1", 16);
+    let n2 = args.usize_or("n2", 8);
+    let trace = two_phase_trace(n1, n2);
+    let md = |at: f64, action: MemberAction| MembershipEvent { at, action };
+
+    println!("=== Bench 7: elastic membership vs fixed splits (two-phase trace) ===");
+    let splits: Vec<(&str, Vec<MembershipEvent>)> = vec![
+        (
+            "fixed 4P/2D",
+            vec![md(0.0, MemberAction::DrainDecode(2)), md(0.0, MemberAction::DrainDecode(3))],
+        ),
+        (
+            "fixed 3P/3D",
+            vec![md(0.0, MemberAction::DrainPrefill(3)), md(0.0, MemberAction::DrainDecode(3))],
+        ),
+        (
+            "fixed 2P/4D",
+            vec![md(0.0, MemberAction::DrainPrefill(2)), md(0.0, MemberAction::DrainPrefill(3))],
+        ),
+        (
+            "elastic 4P/2D -> 2P/4D",
+            vec![
+                md(0.0, MemberAction::DrainDecode(2)),
+                md(0.0, MemberAction::DrainDecode(3)),
+                md(PHASE2_AT, MemberAction::ConvertToDecode { lane: 2, inst: 2 }),
+                md(PHASE2_AT, MemberAction::ConvertToDecode { lane: 3, inst: 3 }),
+            ],
+        ),
+    ];
+    let mut t = Table::new(&["membership", "ttft p99"]);
+    let mut best_fixed = f64::INFINITY;
+    let mut elastic = f64::NAN;
+    for (name, script) in splits {
+        let p99 = p99_of(script, &trace);
+        t.row(vec![name.into(), fmt_secs(p99)]);
+        if name.starts_with("elastic") {
+            elastic = p99;
+        } else {
+            best_fixed = best_fixed.min(p99);
+        }
+    }
+    t.print();
+    let advantage = best_fixed / elastic;
+    println!("elastic advantage over best fixed split: {advantage:.2}x");
+
+    let j = Json::obj()
+        .set("ttft_p99_elastic", elastic)
+        .set("ttft_p99_best_fixed", best_fixed)
+        .set("elastic_advantage", advantage);
+    if j.to_file(std::path::Path::new(&out)).is_err() {
+        eprintln!("failed to write {out}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
+}

@@ -13,6 +13,12 @@
 //! by at least the current improvement rate, or the pool keeps its
 //! instances for the next arrival.
 //!
+//! This policy has since been promoted to the stock `loongserve-elastic`
+//! builtin (`tetris::baselines::ElasticSpScheduler`); the plugin copy is
+//! kept verbatim, registered as `loongserve-elastic-plugin`, and compared
+//! against the builtin below — identical rows prove the promotion changed
+//! nothing.
+//!
 //! Run: cargo run --release --example plugin_loongserve
 
 use tetris::api::Tetris;
@@ -70,14 +76,16 @@ fn main() -> anyhow::Result<()> {
     // factory receives the calibrated Eq. (1) model through `PolicyCtx` —
     // the same context the in-crate policies build from.
     let base = Tetris::paper_8b()
-        .register_policy("loongserve-elastic", |ctx| {
+        .register_policy("loongserve-elastic-plugin", |ctx| {
             Ok(Box::new(ElasticSp { model: ctx.model.clone() }))
         })
         .controller(ImprovementController::new(RateProfile::default_trend(4.0), 30.0, 30.0))
         .seed(17);
 
     let mut t = Table::new(&["policy", "ttft p50", "ttft p99", "tok/s"]);
-    for policy in ["loongserve-elastic", "loongserve-disagg", "tetris-cdsp"] {
+    for policy in
+        ["loongserve-elastic-plugin", "loongserve-elastic", "loongserve-disagg", "tetris-cdsp"]
+    {
         let mut sim = base.clone().policy(policy).build_simulation()?;
         let name = sim.scheduler_name();
         let trace = sim.generate(TraceKind::Medium, 60, 1.5);
@@ -93,8 +101,9 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
     println!(
-        "\nthe elastic-SP policy above is defined in this example file and \
-         registered through the public API — no crate edits."
+        "\nthe plugin row is defined in this example file and registered \
+         through the public API — no crate edits; it must match the \
+         promoted `loongserve-elastic` builtin row exactly."
     );
     Ok(())
 }

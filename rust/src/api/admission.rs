@@ -258,6 +258,18 @@ pub struct LoadSnapshot {
     /// together with `assembled_at` — admission never decides on a
     /// mixed-age view. Constant 0 while the broker is disabled.
     pub kv_lease_epoch: u64,
+    /// The cluster's membership epoch at assembly time: the sum of the
+    /// worker registry's and the decode router's monotone membership
+    /// counters (see
+    /// [`WorkerRegistry::membership_epoch`](crate::cluster::WorkerRegistry::membership_epoch)
+    /// and
+    /// [`DecodeRouter::membership_epoch`](crate::sched::DecodeRouter::membership_epoch)).
+    /// Mirrors the `kv_lease_epoch` pattern: the live server compares this
+    /// against the live counters when serving a cached snapshot, so any
+    /// join/drain/depart/role-conversion invalidates the cache — admission
+    /// and the federation router never place work against a pool shape
+    /// that no longer exists. Constant 0 under static membership.
+    pub membership_epoch: u64,
 }
 
 impl LoadSnapshot {
@@ -720,6 +732,7 @@ mod tests {
             parked: 0,
             arrival_rate: 0.0,
             kv_lease_epoch: 0,
+            membership_epoch: 0,
         }
     }
 
@@ -756,6 +769,7 @@ mod tests {
             parked: 0,
             arrival_rate: 0.0,
             kv_lease_epoch: 0,
+            membership_epoch: 0,
         };
         assert_eq!(empty.kv_occupancy(), 0.0);
         assert_eq!(empty.borrowed_blocks(), 0);

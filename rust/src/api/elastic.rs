@@ -1,0 +1,436 @@
+//! Elastic role control and multi-replica federation.
+//!
+//! Two pieces sit on top of the live server's membership operations
+//! (`Server::drain_*` / `Server::join_*` / `Server::convert_*`):
+//!
+//! * [`RoleController`] — a load-driven policy that reads the shared
+//!   [`LoadSnapshot`] and converts an idle prefill lane into decode
+//!   service (or back) when the lane clocks invert: the paper's
+//!   elastic-SP insight applied to the prefill/decode split itself.
+//!   [`RoleController::decide`] is pure (snapshot + membership in, action
+//!   out), so the trigger is unit-testable without a server;
+//!   [`RoleController::tick`] applies the decision to a live [`Server`].
+//! * [`Federation`] — a front tier running N independent [`Server`]
+//!   replicas behind one submission surface with load-aware routing:
+//!   every submit reads each alive replica's [`LoadSnapshot`] and picks
+//!   the least-loaded one (ties break to the lowest replica index, so
+//!   routing is deterministic under equal load).
+//!
+//! # Federation failure semantics
+//!
+//! [`Federation::fail_replica`] kills one replica abruptly. Every handle
+//! the federation ever routed there resolves — nothing hangs:
+//!
+//! 1. the replica is marked dead (no new submissions route to it),
+//! 2. each of its tracked requests gets a pending
+//!    [`Completion::Shed`] override and has its cooperative interrupt
+//!    token tripped (mid-chunk prefills abort within one engine step,
+//!    decode residents tear down at the next step boundary),
+//! 3. the replica's server is shut down, resolving every handle through
+//!    the normal release ladder.
+//!
+//! A request that genuinely finished before the failure keeps its
+//! [`Completion::Finished`] metrics; everything else surfaces as
+//! `Shed("replica N failed")` through [`FederationHandle::wait`].
+//! Surviving replicas are untouched — their placements do not depend on
+//! the dead replica in any way (each replica owns its full stack), which
+//! the federation chaos test pins.
+
+use crate::api::admission::{LoadSnapshot, SubmitOptions};
+use crate::cluster::MemberState;
+use crate::metrics::Completion;
+use crate::runtime::InterruptToken;
+use crate::serve::{Client, RequestHandle, ServeRequest, Server};
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+/// One role conversion the [`RoleController`] wants applied. Both sides
+/// name preallocated slots: elasticity never spawns threads, it re-masks
+/// existing ones (see `docs/ARCHITECTURE.md` § "Elastic membership").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoleAction {
+    /// Drain prefill lane `lane`, activate decode instance `inst`.
+    ToDecode {
+        /// Prefill lane that leaves the planning pool.
+        lane: usize,
+        /// Decode instance that joins the placement pool.
+        inst: usize,
+    },
+    /// Drain decode instance `inst`, activate prefill lane `lane`.
+    ToPrefill {
+        /// Decode instance that leaves the placement pool.
+        inst: usize,
+        /// Prefill lane that rejoins the planning pool.
+        lane: usize,
+    },
+}
+
+/// Load-driven prefill↔decode role conversion policy.
+///
+/// Reads the busiest *active* lane clock on each side of the
+/// prefill/decode split and flips a role when one side's pressure exceeds
+/// the other's by [`RoleController::invert_factor`] — the "lane clocks
+/// invert" trigger. Conversions only ever target inactive slots, and the
+/// controller never converts below its configured role minima, so repeated
+/// ticks are safe to drive from any loop.
+#[derive(Clone, Debug)]
+pub struct RoleController {
+    /// A role flips when one side's busiest active lane clock exceeds the
+    /// other side's by this factor (> 1; default 2.0).
+    pub invert_factor: f64,
+    /// Minimum active prefill lanes the controller leaves behind.
+    pub min_prefill: usize,
+    /// Minimum active decode instances the controller leaves behind.
+    pub min_decode: usize,
+    /// Absolute pressure floor (seconds of lane busy time): below it the
+    /// cluster is idle and no conversion fires, preventing flapping on an
+    /// empty cluster where both sides read ~0.
+    pub min_pressure: f64,
+}
+
+impl Default for RoleController {
+    fn default() -> Self {
+        RoleController { invert_factor: 2.0, min_prefill: 1, min_decode: 1, min_pressure: 1e-3 }
+    }
+}
+
+impl RoleController {
+    /// Pure decision: given the load snapshot and the current membership
+    /// states of both roles, which conversion (if any) should fire?
+    ///
+    /// `ToDecode` picks the most idle active prefill lane and the lowest
+    /// inactive decode slot; `ToPrefill` the mirror image. Returns `None`
+    /// when pressure is balanced, the cluster is idle, a role minimum
+    /// would be violated, or the target role has no inactive slot left.
+    pub fn decide(
+        &self,
+        load: &LoadSnapshot,
+        prefill: &[MemberState],
+        decode: &[MemberState],
+    ) -> Option<RoleAction> {
+        let pb = |i: usize| load.prefill_busy.get(i).copied().unwrap_or(0.0);
+        let db = |i: usize| load.decode_lane_busy.get(i).copied().unwrap_or(0.0);
+        let active_p: Vec<usize> =
+            (0..prefill.len()).filter(|&i| prefill[i].is_active()).collect();
+        let active_d: Vec<usize> = (0..decode.len()).filter(|&i| decode[i].is_active()).collect();
+        let p_busy = active_p.iter().map(|&i| pb(i)).fold(0.0f64, f64::max);
+        let d_busy = active_d.iter().map(|&i| db(i)).fold(0.0f64, f64::max);
+        if p_busy.max(d_busy) < self.min_pressure {
+            return None;
+        }
+        if d_busy > self.invert_factor * p_busy && active_p.len() > self.min_prefill {
+            let lane = *active_p.iter().min_by(|&&a, &&b| pb(a).total_cmp(&pb(b)))?;
+            let inst = decode.iter().position(|s| !s.is_active())?;
+            return Some(RoleAction::ToDecode { lane, inst });
+        }
+        if p_busy > self.invert_factor * d_busy && active_d.len() > self.min_decode {
+            let inst = *active_d.iter().min_by(|&&a, &&b| db(a).total_cmp(&db(b)))?;
+            let lane = prefill.iter().position(|s| !s.is_active())?;
+            return Some(RoleAction::ToPrefill { inst, lane });
+        }
+        None
+    }
+
+    /// One control-loop step against a live server: snapshot the load and
+    /// membership, decide, and apply the conversion (emitting the
+    /// `on_role_convert` observer event through the server's membership
+    /// ops). Returns the action applied, if any.
+    pub fn tick(&self, server: &Server) -> Result<Option<RoleAction>> {
+        let load = server.load();
+        let (prefill, decode) = server.membership();
+        let Some(action) = self.decide(&load, &prefill, &decode) else {
+            return Ok(None);
+        };
+        match action {
+            RoleAction::ToDecode { lane, inst } => server.convert_prefill_to_decode(lane, inst)?,
+            RoleAction::ToPrefill { inst, lane } => server.convert_decode_to_prefill(inst, lane)?,
+        }
+        Ok(Some(action))
+    }
+}
+
+/// The pending-override slot a federation keeps per routed request: set
+/// exactly once, when the owning replica fails before the request
+/// finished.
+type ShedSlot = Arc<Mutex<Option<Completion>>>;
+
+struct Replica {
+    /// `None` once the replica has failed (its server was consumed by the
+    /// shutdown that resolved its handles).
+    server: Option<Server>,
+    client: Client,
+    alive: bool,
+    /// Every request this federation routed here: its shed-override slot
+    /// plus its cooperative interrupt token (tripped on replica failure).
+    tracked: Vec<(ShedSlot, InterruptToken)>,
+}
+
+/// N independent [`Server`] replicas behind one submission surface with
+/// load-aware routing. See the module docs for the failure semantics.
+///
+/// Tracking note: the federation keeps one small override slot per routed
+/// request for the lifetime of the federation — it is built for bounded
+/// runs (benches, chaos tests, request-scoped drivers), not an unbounded
+/// daemon.
+pub struct Federation {
+    replicas: Vec<Replica>,
+}
+
+impl Federation {
+    /// Front `replicas` with one federation. At least one replica is
+    /// required; all start alive.
+    pub fn new(replicas: Vec<Server>) -> Result<Federation> {
+        anyhow::ensure!(!replicas.is_empty(), "a federation needs at least one replica");
+        Ok(Federation {
+            replicas: replicas
+                .into_iter()
+                .map(|s| Replica {
+                    client: s.client(),
+                    server: Some(s),
+                    alive: true,
+                    tracked: Vec::new(),
+                })
+                .collect(),
+        })
+    }
+
+    /// Total replica count (alive or failed).
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Replicas still accepting submissions.
+    pub fn n_alive(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive).count()
+    }
+
+    /// Whether replica `i` is still alive.
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.replicas.get(i).is_some_and(|r| r.alive)
+    }
+
+    /// Load snapshot of replica `i` (`None` once it failed).
+    pub fn load_of(&self, i: usize) -> Option<LoadSnapshot> {
+        let r = self.replicas.get(i)?;
+        r.alive.then(|| r.client.load())
+    }
+
+    /// The replica the next submission would route to: the alive replica
+    /// with the lowest load score (resident + in-flight + parked
+    /// requests), ties to the lowest index. `None` if every replica
+    /// failed.
+    pub fn route(&self) -> Option<usize> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.alive)
+            .map(|(i, r)| {
+                let load = r.client.load();
+                (load.active_requests() + load.in_flight_prefills() + load.parked, i)
+            })
+            .min()
+            .map(|(_, i)| i)
+    }
+
+    /// Submit with default options to the least-loaded alive replica.
+    pub fn submit(&mut self, req: &ServeRequest) -> Result<FederationHandle> {
+        self.submit_with(req, SubmitOptions::default())
+    }
+
+    /// Submit with explicit options to the least-loaded alive replica.
+    pub fn submit_with(
+        &mut self,
+        req: &ServeRequest,
+        opts: SubmitOptions,
+    ) -> Result<FederationHandle> {
+        let i = self.route().ok_or_else(|| anyhow::anyhow!("every replica has failed"))?;
+        self.submit_to(i, req, opts)
+    }
+
+    /// Submit to a specific replica — the deterministic escape hatch the
+    /// chaos tests use to place requests before killing their replica.
+    pub fn submit_to(
+        &mut self,
+        i: usize,
+        req: &ServeRequest,
+        opts: SubmitOptions,
+    ) -> Result<FederationHandle> {
+        let r = self
+            .replicas
+            .get_mut(i)
+            .ok_or_else(|| anyhow::anyhow!("replica {i} out of range"))?;
+        anyhow::ensure!(r.alive, "replica {i} has failed");
+        let inner = r.client.submit_with(req, opts)?;
+        let shed: ShedSlot = Arc::new(Mutex::new(None));
+        r.tracked.push((Arc::clone(&shed), inner.interrupt_token()));
+        Ok(FederationHandle { inner, replica: i, shed })
+    }
+
+    /// Kill replica `i`: mark it dead, override and interrupt every
+    /// request routed there, and shut its server down so all of its
+    /// handles resolve (see the module docs). Idempotent — failing a dead
+    /// replica is a no-op. Surviving replicas are untouched.
+    pub fn fail_replica(&mut self, i: usize) -> Result<()> {
+        let r = self
+            .replicas
+            .get_mut(i)
+            .ok_or_else(|| anyhow::anyhow!("replica {i} out of range"))?;
+        if !r.alive {
+            return Ok(());
+        }
+        r.alive = false;
+        let reason = format!("replica {i} failed");
+        for (slot, token) in &r.tracked {
+            let mut s = slot.lock().unwrap();
+            if s.is_none() {
+                *s = Some(Completion::Shed(reason.clone()));
+            }
+            token.trip();
+        }
+        if let Some(server) = r.server.take() {
+            server.shutdown()?;
+        }
+        Ok(())
+    }
+
+    /// Shut down every replica still alive. Handles of live replicas
+    /// resolve through the normal shutdown semantics.
+    pub fn shutdown(mut self) -> Result<()> {
+        for r in &mut self.replicas {
+            r.alive = false;
+            if let Some(server) = r.server.take() {
+                server.shutdown()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A [`RequestHandle`] routed through a [`Federation`]: same surface,
+/// plus the replica-failure override. [`Completion::Finished`] always
+/// wins; any other outcome on a failed replica surfaces as the
+/// federation's `Shed("replica N failed")`.
+pub struct FederationHandle {
+    inner: RequestHandle,
+    replica: usize,
+    shed: ShedSlot,
+}
+
+impl FederationHandle {
+    /// The request id.
+    pub fn id(&self) -> u64 {
+        self.inner.id()
+    }
+
+    /// The replica this request was routed to.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Request cancellation (delegates to the underlying handle).
+    pub fn cancel(&self) {
+        self.inner.cancel();
+    }
+
+    /// The underlying per-replica handle (token streaming, diagnostics).
+    pub fn inner(&mut self) -> &mut RequestHandle {
+        &mut self.inner
+    }
+
+    /// Block until the request resolves, applying the replica-failure
+    /// override to non-`Finished` outcomes.
+    pub fn wait(&mut self) -> Completion {
+        let c = self.inner.wait();
+        self.apply_override(c)
+    }
+
+    /// Non-blocking [`FederationHandle::wait`].
+    pub fn try_wait(&mut self) -> Option<Completion> {
+        self.inner.try_wait().map(|c| self.apply_override(c))
+    }
+
+    fn apply_override(&self, c: Completion) -> Completion {
+        match c {
+            Completion::Finished(_) => c,
+            other => self.shed.lock().unwrap().clone().unwrap_or(other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::admission::DecodeLoad;
+
+    fn snapshot(prefill_busy: Vec<f64>, decode_lane_busy: Vec<f64>) -> LoadSnapshot {
+        let decode = (0..decode_lane_busy.len())
+            .map(|_| DecodeLoad {
+                total_blocks: 8,
+                free_blocks: 8,
+                virtual_blocks: 0,
+                active_batch: 0,
+                pending_transfers: 0,
+                lent_blocks: 0,
+                borrowed_blocks: 0,
+            })
+            .collect();
+        LoadSnapshot {
+            at: 1.0,
+            assembled_at: 1.0,
+            block_tokens: 16,
+            decode,
+            prefill_busy,
+            decode_lane_busy,
+            free_backends: Vec::new(),
+            transfers_in_service: Vec::new(),
+            parked: 0,
+            arrival_rate: 0.0,
+            kv_lease_epoch: 0,
+            membership_epoch: 0,
+        }
+    }
+
+    const A: MemberState = MemberState::Active;
+    const D: MemberState = MemberState::Draining;
+
+    #[test]
+    fn converts_idle_prefill_when_decode_pressure_inverts() {
+        let ctl = RoleController::default();
+        // Decode side 5.0s busy vs prefill 0.02s: lanes inverted hard.
+        // Lane 0 is the most idle active prefill lane; decode slot 1 is
+        // the inactive slot that should be activated.
+        let load = snapshot(vec![0.01, 0.02], vec![5.0, 0.0]);
+        let action = ctl.decide(&load, &[A, A], &[A, D]);
+        assert_eq!(action, Some(RoleAction::ToDecode { lane: 0, inst: 1 }));
+    }
+
+    #[test]
+    fn converts_back_when_prefill_bound() {
+        let ctl = RoleController::default();
+        // Prefill queue deep, decode idle; prefill lane 1 is the drained
+        // slot to re-activate, decode instance 1 the most idle active one.
+        let load = snapshot(vec![4.0, 0.0], vec![0.2, 0.1]);
+        let action = ctl.decide(&load, &[A, D], &[A, A]);
+        assert_eq!(action, Some(RoleAction::ToPrefill { inst: 1, lane: 1 }));
+    }
+
+    #[test]
+    fn respects_role_minima_and_slot_availability() {
+        let ctl = RoleController { min_prefill: 2, ..RoleController::default() };
+        let load = snapshot(vec![0.01, 0.02], vec![5.0, 0.0]);
+        // Would convert, but both prefill lanes are the minimum.
+        assert_eq!(ctl.decide(&load, &[A, A], &[A, D]), None);
+        // Pressure inverted but every decode slot is already active: no
+        // target slot, no action.
+        let ctl = RoleController::default();
+        assert_eq!(ctl.decide(&load, &[A, A], &[A, A]), None);
+    }
+
+    #[test]
+    fn idle_cluster_never_flaps() {
+        let ctl = RoleController::default();
+        // Both sides ~0: a 10x "inversion" of nothing must not convert.
+        let load = snapshot(vec![1e-6, 0.0], vec![1e-5, 0.0]);
+        assert_eq!(ctl.decide(&load, &[A, A], &[A, D]), None);
+    }
+}

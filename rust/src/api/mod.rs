@@ -105,6 +105,9 @@
 /// The load-aware admission & QoS control plane (submit options, load
 /// snapshots, admission controllers, the QoS parked queue).
 pub mod admission;
+/// Elastic role control (prefill↔decode conversion policy) and the
+/// multi-replica federation front tier.
+pub mod elastic;
 /// Run observability: lifecycle event hooks and the JSON trace recorder.
 pub mod observer;
 /// The pluggable policy registry (names → scheduler factories).
@@ -118,6 +121,7 @@ pub use admission::{
     ScanOutcome, SubmitOptions,
 };
 pub use crate::kvbroker::{KvBroker, KvBrokerConfig};
+pub use elastic::{Federation, FederationHandle, RoleAction, RoleController};
 pub use observer::{Observer, TraceEvent, TraceRecorder};
 pub use registry::{PolicyCtx, PolicyFactory, PolicyRegistry, PolicySpec};
 
@@ -130,7 +134,7 @@ use crate::modelcfg::ModelArch;
 use crate::runtime::Engine;
 use crate::sched::ImprovementController;
 use crate::serve::{DecodePool, Server};
-use crate::sim::{SimParams, Simulator};
+use crate::sim::{MembershipEvent, SimParams, Simulator};
 use crate::util::rng::Pcg64;
 use crate::workload::{Request, TraceKind, WorkloadGen};
 use anyhow::{anyhow, bail, Result};
@@ -139,10 +143,11 @@ use std::sync::Arc;
 /// The paper's Fig. 8 comparison set, by registered name — one list shared
 /// by the CLI `compare` command and the examples, so adding a policy is a
 /// single edit.
-pub const PAPER_POLICIES: [&str; 6] = [
+pub const PAPER_POLICIES: [&str; 7] = [
     "tetris-cdsp",
     "tetris-single-chunk",
     "loongserve",
+    "loongserve-elastic",
     "loongserve-disagg",
     "fixed-sp8",
     "fixed-sp16",
@@ -204,6 +209,7 @@ pub struct TetrisBuilder {
     deadline_safety: f64,
     kv_broker: KvBrokerConfig,
     shard_streams: usize,
+    membership: Vec<MembershipEvent>,
 }
 
 impl TetrisBuilder {
@@ -227,6 +233,7 @@ impl TetrisBuilder {
             deadline_safety: crate::latency::DEFAULT_DEADLINE_SAFETY,
             kv_broker: KvBrokerConfig::disabled(),
             shard_streams: 1,
+            membership: Vec::new(),
         }
     }
 
@@ -350,6 +357,18 @@ impl TetrisBuilder {
     /// both build targets.
     pub fn shard_streams(mut self, streams: usize) -> Self {
         self.shard_streams = streams.max(1);
+        self
+    }
+
+    /// Scripted membership events for [`TetrisBuilder::build_simulation`]:
+    /// elastic scale-up/down and prefill↔decode role conversions applied on
+    /// the simulator's virtual clock (see [`MembershipEvent`]). The default
+    /// empty script reproduces the static cluster bit-for-bit — the third
+    /// leg of the parity tests pins exactly that. Simulation only; the live
+    /// server's membership is driven through its `Server::drain_*` /
+    /// `Server::join_*` / `Server::convert_*` operations instead.
+    pub fn membership(mut self, events: Vec<MembershipEvent>) -> Self {
+        self.membership = events;
         self
     }
 
@@ -529,6 +548,7 @@ impl TetrisBuilder {
             broker: self.kv_broker.clone(),
             shard_streams: self.shard_streams,
             observers: self.observers.clone(),
+            membership: self.membership.clone(),
         };
         Ok(Simulation { sim, seed: self.seed })
     }

@@ -7,6 +7,7 @@
 //! batteries-included implementation: it collects the events and exports
 //! them as JSON for offline analysis.
 
+use crate::cluster::ClusterRole;
 use crate::metrics::CancelStage;
 use crate::sched::plan::CdspPlan;
 use crate::util::json::Json;
@@ -118,6 +119,32 @@ pub trait Observer: Send + Sync {
     fn on_kv_return(&self, req: u64, instance: usize, blocks: usize, now: f64) {
         let _ = (req, instance, blocks, now);
     }
+
+    /// Cluster member `instance` of the given `role` (re)joined the
+    /// serving pool at `now`: it immediately competes for new placements.
+    /// Membership events are cluster-scoped, not request-scoped — their
+    /// [`TraceEvent::req`] is 0 by convention (like the engine's
+    /// calibration probes; real request ids start at 1).
+    fn on_member_join(&self, role: ClusterRole, instance: usize, now: f64) {
+        let _ = (role, instance, now);
+    }
+
+    /// Cluster member `instance` of the given `role` began draining at
+    /// `now`: no new placements land on it; in-flight work finishes (or
+    /// cancels) through the normal release ladder.
+    fn on_member_drain(&self, role: ClusterRole, instance: usize, now: f64) {
+        let _ = (role, instance, now);
+    }
+
+    /// A prefill↔decode role conversion at `now`: prefill lane `lane` and
+    /// decode instance `instance` swapped roles. `to_decode` is true when
+    /// the prefill lane drained in favour of activating the decode
+    /// instance, false for the reverse conversion. An
+    /// `on_member_drain`/`on_member_join` pair for the two members fires
+    /// alongside this event.
+    fn on_role_convert(&self, lane: usize, instance: usize, to_decode: bool, now: f64) {
+        let _ = (lane, instance, to_decode, now);
+    }
 }
 
 /// One recorded lifecycle event.
@@ -223,6 +250,39 @@ pub enum TraceEvent {
         /// Timestamp (seconds from run start).
         at: f64,
     },
+    /// A cluster member (re)joined the serving pool. Cluster-scoped:
+    /// [`TraceEvent::req`] reports 0.
+    MemberJoin {
+        /// Which half of the cluster the member belongs to.
+        role: ClusterRole,
+        /// Prefill lane or decode instance index (per `role`).
+        instance: usize,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
+    /// A cluster member began draining. Cluster-scoped: [`TraceEvent::req`]
+    /// reports 0.
+    MemberDrain {
+        /// Which half of the cluster the member belongs to.
+        role: ClusterRole,
+        /// Prefill lane or decode instance index (per `role`).
+        instance: usize,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
+    /// A prefill↔decode role conversion. Cluster-scoped:
+    /// [`TraceEvent::req`] reports 0.
+    RoleConvert {
+        /// Prefill lane involved in the swap.
+        lane: usize,
+        /// Decode instance involved in the swap.
+        instance: usize,
+        /// True when the prefill lane drained to activate the decode
+        /// instance; false for the reverse conversion.
+        to_decode: bool,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
 }
 
 impl TraceEvent {
@@ -239,7 +299,10 @@ impl TraceEvent {
             | TraceEvent::Shed { at, .. }
             | TraceEvent::Interrupt { at, .. }
             | TraceEvent::KvBorrow { at, .. }
-            | TraceEvent::KvReturn { at, .. } => *at,
+            | TraceEvent::KvReturn { at, .. }
+            | TraceEvent::MemberJoin { at, .. }
+            | TraceEvent::MemberDrain { at, .. }
+            | TraceEvent::RoleConvert { at, .. } => *at,
         }
     }
 
@@ -258,10 +321,16 @@ impl TraceEvent {
             TraceEvent::Interrupt { .. } => "interrupt",
             TraceEvent::KvBorrow { .. } => "kv_borrow",
             TraceEvent::KvReturn { .. } => "kv_return",
+            TraceEvent::MemberJoin { .. } => "member_join",
+            TraceEvent::MemberDrain { .. } => "member_drain",
+            TraceEvent::RoleConvert { .. } => "role_convert",
         }
     }
 
-    /// The request the event belongs to.
+    /// The request the event belongs to. Cluster-scoped membership events
+    /// ([`TraceEvent::MemberJoin`], [`TraceEvent::MemberDrain`],
+    /// [`TraceEvent::RoleConvert`]) report 0 — the same reserved id the
+    /// engine's calibration probes use; real request ids start at 1.
     pub fn req(&self) -> u64 {
         match self {
             TraceEvent::Arrival { req, .. }
@@ -275,6 +344,9 @@ impl TraceEvent {
             | TraceEvent::Interrupt { req, .. }
             | TraceEvent::KvBorrow { req, .. }
             | TraceEvent::KvReturn { req, .. } => *req,
+            TraceEvent::MemberJoin { .. }
+            | TraceEvent::MemberDrain { .. }
+            | TraceEvent::RoleConvert { .. } => 0,
         }
     }
 }
@@ -333,6 +405,16 @@ impl TraceRecorder {
                 TraceEvent::KvBorrow { instance, blocks, .. }
                 | TraceEvent::KvReturn { instance, blocks, .. } => {
                     o = o.set("instance", *instance).set("blocks", *blocks);
+                }
+                TraceEvent::MemberJoin { role, instance, .. }
+                | TraceEvent::MemberDrain { role, instance, .. } => {
+                    o = o.set("role", role.tag()).set("instance", *instance);
+                }
+                TraceEvent::RoleConvert { lane, instance, to_decode, .. } => {
+                    o = o
+                        .set("lane", *lane)
+                        .set("instance", *instance)
+                        .set("to_decode", *to_decode);
                 }
                 _ => {}
             }
@@ -467,6 +549,18 @@ impl Observer for TraceRecorder {
     fn on_kv_return(&self, req: u64, instance: usize, blocks: usize, now: f64) {
         self.push(TraceEvent::KvReturn { req, instance, blocks, at: now });
     }
+
+    fn on_member_join(&self, role: ClusterRole, instance: usize, now: f64) {
+        self.push(TraceEvent::MemberJoin { role, instance, at: now });
+    }
+
+    fn on_member_drain(&self, role: ClusterRole, instance: usize, now: f64) {
+        self.push(TraceEvent::MemberDrain { role, instance, at: now });
+    }
+
+    fn on_role_convert(&self, lane: usize, instance: usize, to_decode: bool, now: f64) {
+        self.push(TraceEvent::RoleConvert { lane, instance, to_decode, at: now });
+    }
 }
 
 #[cfg(test)]
@@ -526,6 +620,29 @@ mod tests {
         assert!(json.contains("interrupt"), "{json}");
         assert!(json.contains("kv_borrow"), "{json}");
         assert!(json.contains("\"blocks\""), "{json}");
+    }
+
+    #[test]
+    fn recorder_captures_membership_events() {
+        let rec = TraceRecorder::new();
+        rec.on_member_drain(ClusterRole::Decode, 1, 0.5);
+        rec.on_member_join(ClusterRole::Decode, 1, 1.0);
+        rec.on_role_convert(0, 1, true, 1.5);
+        assert_eq!(rec.count("member_drain"), 1);
+        assert_eq!(rec.count("member_join"), 1);
+        assert_eq!(rec.count("role_convert"), 1);
+        let evs = rec.events();
+        assert_eq!(
+            evs[0],
+            TraceEvent::MemberDrain { role: ClusterRole::Decode, instance: 1, at: 0.5 }
+        );
+        assert_eq!(evs[0].req(), 0, "membership events are cluster-scoped");
+        assert_eq!(evs[2].at(), 1.5);
+        let json = rec.to_json().to_string();
+        assert!(json.contains("\"role\""), "{json}");
+        assert!(json.contains("member_join"), "{json}");
+        assert!(json.contains("\"to_decode\""), "{json}");
+        assert!(json.contains("decode"), "{json}");
     }
 
     #[test]

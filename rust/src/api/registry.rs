@@ -6,7 +6,9 @@
 //! [`PolicyRegistry::register`] call, whether it lives in this crate or in
 //! a downstream one.
 
-use crate::baselines::{FixedSpScheduler, LoongServeScheduler, PrefillScheduler};
+use crate::baselines::{
+    ElasticSpScheduler, FixedSpScheduler, LoongServeScheduler, PrefillScheduler,
+};
 use crate::config::SchedConfig;
 use crate::latency::PrefillModel;
 use crate::sched::CdspScheduler;
@@ -83,13 +85,15 @@ impl PolicyRegistry {
         }
     }
 
-    /// The five papers' policies, under their canonical names:
+    /// The papers' policies, under their canonical names:
     ///
     /// * `tetris-cdsp` (aliases: `cdsp`, `tetris`) — Algorithms 1–3;
     /// * `tetris-single-chunk` (alias: `single-chunk`) — the Fig. 13
     ///   chunking ablation;
     /// * `loongserve` — ESP over a unified pool, ESP decode;
     /// * `loongserve-disagg` — the same greedy policy, disaggregated;
+    /// * `loongserve-elastic` — improvement-rate-gated SP growth
+    ///   (disaggregated decode), promoted from the plugin example;
     /// * `fixed-spN` (family) — rigid SP groups of N.
     pub fn with_builtins() -> Self {
         let mut r = Self::empty();
@@ -127,6 +131,10 @@ impl PolicyRegistry {
                     true,
                 )))
             }),
+        );
+        r.register_spec(
+            "loongserve-elastic",
+            PolicySpec::new(|ctx| Ok(Box::new(ElasticSpScheduler::new(ctx.model.clone())))),
         );
         r.register_family("fixed-spN", |name| {
             let k: usize = name.strip_prefix("fixed-sp")?.parse().ok()?;
@@ -244,6 +252,7 @@ mod tests {
             ("single-chunk", "tetris-single-chunk"),
             ("loongserve", "loongserve"),
             ("loongserve-disagg", "loongserve-disagg"),
+            ("loongserve-elastic", "loongserve-elastic"),
             ("fixed-sp8", "fixed-sp8"),
             ("fixed-sp16", "fixed-sp16"),
         ] {
@@ -266,6 +275,7 @@ mod tests {
         let r = PolicyRegistry::with_builtins();
         assert!(r.spec("loongserve").unwrap().esp_decode);
         assert!(!r.spec("loongserve-disagg").unwrap().esp_decode);
+        assert!(!r.spec("loongserve-elastic").unwrap().esp_decode);
         assert!(!r.spec("tetris-cdsp").unwrap().esp_decode);
         assert!(!r.spec("fixed-sp8").unwrap().esp_decode);
     }

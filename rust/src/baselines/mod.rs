@@ -105,6 +105,66 @@ impl PrefillScheduler for LoongServeScheduler {
     }
 }
 
+/// LoongServe's *elastic* scale-up variant, promoted to a stock policy
+/// from the `plugin_loongserve` example (which still registers its own
+/// copy out-of-crate as `loongserve-elastic-plugin`): single-chunk
+/// planning with improvement-rate-gated SP growth. Starting from the
+/// smallest fitted SP size, each widening of the instance group must cut
+/// the estimated TTFT by at least the current improvement rate, or the
+/// pool keeps its instances for the next arrival — under load the rate
+/// rises and the pool stays elastic.
+#[derive(Clone, Debug)]
+pub struct ElasticSpScheduler {
+    /// Eq. (1) latency model used for the gated growth estimates.
+    pub model: PrefillModel,
+}
+
+impl ElasticSpScheduler {
+    /// An elastic-SP policy growing through `model`'s fitted SP sizes.
+    pub fn new(model: PrefillModel) -> Self {
+        ElasticSpScheduler { model }
+    }
+
+    /// Estimated TTFT of running the whole prompt as one chunk on `group`.
+    fn estimate(
+        &self,
+        sp: usize,
+        prompt_len: usize,
+        pool: &PoolView,
+        group: &[InstanceId],
+    ) -> f64 {
+        pool.group_ready(group) + self.model.predict(sp, 0.0, prompt_len as f64)
+    }
+}
+
+impl PrefillScheduler for ElasticSpScheduler {
+    fn schedule(&self, prompt_len: usize, pool: &PoolView, rate: f64) -> Option<CdspPlan> {
+        if pool.is_empty() || prompt_len == 0 {
+            return None;
+        }
+        let mut best: Option<(Vec<InstanceId>, f64)> = None;
+        for sp in self.model.sp_sizes() {
+            let base = best.as_ref().map(|(g, _)| g.clone()).unwrap_or_default();
+            let Some(group) = pool.get_group(&base, sp) else { continue };
+            let est = self.estimate(sp, prompt_len, pool, &group);
+            match best.as_ref().map(|(_, cur)| *cur) {
+                None => best = Some((group, est)),
+                Some(cur) if est < cur * (1.0 - rate) => best = Some((group, est)),
+                Some(_) => break, // wider SP no longer pays for itself
+            }
+        }
+        let (group, est) = best?;
+        Some(CdspPlan {
+            chunks: vec![ChunkPlan { len: prompt_len, group }],
+            est_ttft: est.max(1e-9),
+        })
+    }
+
+    fn name(&self) -> String {
+        "loongserve-elastic".into()
+    }
+}
+
 /// Fixed-SP(k): rigid groups of k instances, route to the least-loaded
 /// group. Groups are instance-id-contiguous (co-located on nodes where the
 /// pool layout allows, matching the paper's setup).
@@ -202,6 +262,19 @@ mod tests {
         s.decode_reserved = 12;
         let plan = s.schedule(131_072, &pool(), 0.0).unwrap();
         assert!(plan.max_sp() <= 4, "decode reservation must cap SP: {}", plan.max_sp());
+    }
+
+    #[test]
+    fn elastic_sp_growth_is_rate_gated() {
+        let s = ElasticSpScheduler::new(table1_model());
+        // Rate 0: keep widening while the estimate improves at all.
+        let wide = s.schedule(131_072, &pool(), 0.0).unwrap();
+        wide.validate(131_072).unwrap();
+        // A prohibitive rate stops growth at the smallest SP size.
+        let narrow = s.schedule(131_072, &pool(), 0.99).unwrap();
+        assert_eq!(narrow.max_sp(), 1);
+        assert!(narrow.max_sp() <= wide.max_sp());
+        assert_eq!(narrow.n_chunks(), 1);
     }
 
     #[test]

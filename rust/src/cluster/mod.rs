@@ -9,6 +9,64 @@
 /// Identifier of a prefill instance (dense, 0-based).
 pub type InstanceId = usize;
 
+/// Lifecycle state of one cluster member (a prefill lane or a decode
+/// instance) under elastic membership.
+///
+/// | state      | new placements | in-flight work        | transition out      |
+/// |------------|----------------|-----------------------|---------------------|
+/// | `Active`   | yes            | —                     | drain               |
+/// | `Draining` | no             | finishes normally     | depart (once empty) |
+/// | `Departed` | no             | none (asserted empty) | join → `Active`     |
+///
+/// Every slot is preallocated at startup, so membership is pure scheduling
+/// state: joining revives a departed slot, it never spawns threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberState {
+    /// In the serving pool: the scheduler and router may place work here.
+    Active,
+    /// Leaving the pool: no new placements, in-flight work finishes (or is
+    /// cancelled through the release ladder).
+    Draining,
+    /// Out of the pool with no residual state (blocks free, leases closed,
+    /// queue clock drained).
+    Departed,
+}
+
+impl MemberState {
+    /// Whether this member may receive new placements.
+    pub fn is_active(self) -> bool {
+        matches!(self, MemberState::Active)
+    }
+
+    /// Stable lowercase tag (trace export and logs).
+    pub fn tag(self) -> &'static str {
+        match self {
+            MemberState::Active => "active",
+            MemberState::Draining => "draining",
+            MemberState::Departed => "departed",
+        }
+    }
+}
+
+/// Which half of the disaggregated cluster a member belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterRole {
+    /// A prefill lane (SP group member).
+    Prefill,
+    /// A decode instance (KV residency + batched decode).
+    Decode,
+}
+
+impl ClusterRole {
+    /// Stable lowercase tag (trace export and logs).
+    pub fn tag(self) -> &'static str {
+        match self {
+            ClusterRole::Prefill => "prefill",
+            ClusterRole::Decode => "decode",
+        }
+    }
+}
+
 /// Snapshot of the prefill pool the scheduler plans against.
 ///
 /// `delays[i]` is instance i's queuing delay **relative to now** (seconds,
@@ -289,6 +347,20 @@ impl DispatchClock {
         }
     }
 
+    /// Snapshot restricted to `lanes` (physical instance ids, ascending):
+    /// the scheduler plans over a compacted pool in which view-instance `k`
+    /// is physical instance `lanes[k]`, so a drained lane is invisible to
+    /// placement. Callers translate planned group ids back through `lanes`.
+    /// With the identity lane set this is exactly [`DispatchClock::pool_view`]
+    /// — the static-membership parity pin relies on that.
+    pub fn pool_view_of(&self, now: f64, lanes: &[InstanceId]) -> PoolView {
+        PoolView {
+            delays: lanes.iter().map(|&i| (self.free_at[i] - now).max(0.0)).collect(),
+            node_of: lanes.iter().map(|&i| self.node_of[i]).collect(),
+            per_node: self.per_node,
+        }
+    }
+
     /// Commit one chunk onto `group`: the group starts once every member is
     /// free and `after` has passed (ring attention mandates a synchronous
     /// start), runs for `cost` seconds, and every member is busy until the
@@ -342,19 +414,30 @@ impl DispatchClock {
 /// answers "how long until this lane drains its expected handoffs *and*
 /// its resident batch" — cheap load observability for operators without
 /// touching the decode threads.
+/// Elastic membership: every lane additionally carries a [`MemberState`];
+/// draining/departed prefill lanes are masked out of the planning snapshot
+/// (see [`WorkerRegistry::active_prefill_lanes`]) and every membership
+/// mutation bumps a monotone epoch so cached load snapshots invalidate.
 #[derive(Clone, Debug)]
 pub struct WorkerRegistry {
     prefill: DispatchClock,
     decode: Vec<DispatchClock>,
+    prefill_state: Vec<MemberState>,
+    decode_state: Vec<MemberState>,
+    membership_epoch: u64,
 }
 
 impl WorkerRegistry {
     /// A single-node registry: `n_prefill` co-located prefill workers and
-    /// `n_decode` decode lanes (the live mini-cluster shape).
+    /// `n_decode` decode lanes (the live mini-cluster shape). All members
+    /// start [`MemberState::Active`].
     pub fn single_node(n_prefill: usize, n_decode: usize) -> Self {
         WorkerRegistry {
             prefill: DispatchClock::single_node(n_prefill),
             decode: (0..n_decode).map(|_| DispatchClock::single_node(1)).collect(),
+            prefill_state: vec![MemberState::Active; n_prefill],
+            decode_state: vec![MemberState::Active; n_decode],
+            membership_epoch: 0,
         }
     }
 
@@ -422,12 +505,110 @@ impl WorkerRegistry {
         (0..self.decode.len()).map(|i| self.decode_lane_busy(i, now)).collect()
     }
 
+    /// Membership state of prefill lane `i`.
+    pub fn prefill_state(&self, i: usize) -> MemberState {
+        self.prefill_state[i]
+    }
+
+    /// Membership state of decode lane `i`.
+    pub fn decode_state(&self, i: usize) -> MemberState {
+        self.decode_state[i]
+    }
+
+    /// Membership states of every prefill lane, in lane order.
+    pub fn prefill_states(&self) -> &[MemberState] {
+        &self.prefill_state
+    }
+
+    /// Membership states of every decode lane, in lane order.
+    pub fn decode_states(&self) -> &[MemberState] {
+        &self.decode_state
+    }
+
+    /// Monotone counter bumped on every membership mutation — the
+    /// registry's contribution to
+    /// [`LoadSnapshot::membership_epoch`](crate::api::LoadSnapshot::membership_epoch).
+    pub fn membership_epoch(&self) -> u64 {
+        self.membership_epoch
+    }
+
+    /// Physical ids of the prefill lanes currently accepting placements,
+    /// ascending — the lane set behind [`DispatchClock::pool_view_of`].
+    pub fn active_prefill_lanes(&self) -> Vec<InstanceId> {
+        (0..self.prefill_state.len()).filter(|&i| self.prefill_state[i].is_active()).collect()
+    }
+
+    /// Number of prefill lanes currently accepting placements.
+    pub fn n_active_prefill(&self) -> usize {
+        self.prefill_state.iter().filter(|s| s.is_active()).count()
+    }
+
+    /// Number of decode lanes currently accepting placements.
+    pub fn n_active_decode(&self) -> usize {
+        self.decode_state.iter().filter(|s| s.is_active()).count()
+    }
+
+    fn set_state(slot: &mut MemberState, to: MemberState, epoch: &mut u64) -> bool {
+        if *slot == to {
+            return false;
+        }
+        *slot = to;
+        *epoch += 1;
+        true
+    }
+
+    /// Mark prefill lane `i` [`MemberState::Draining`]: it is masked out of
+    /// the planning snapshot from the next plan onward; committed chunks
+    /// run to completion on its clock. Returns whether the state changed.
+    pub fn drain_prefill(&mut self, i: usize) -> bool {
+        let to = MemberState::Draining;
+        Self::set_state(&mut self.prefill_state[i], to, &mut self.membership_epoch)
+    }
+
+    /// Revive prefill lane `i` to [`MemberState::Active`] (join or rejoin).
+    /// Returns whether the state changed.
+    pub fn join_prefill(&mut self, i: usize) -> bool {
+        let to = MemberState::Active;
+        Self::set_state(&mut self.prefill_state[i], to, &mut self.membership_epoch)
+    }
+
+    /// Mark prefill lane `i` [`MemberState::Departed`]. Callers assert the
+    /// lane's clock has drained first. Returns whether the state changed.
+    pub fn depart_prefill(&mut self, i: usize) -> bool {
+        let to = MemberState::Departed;
+        Self::set_state(&mut self.prefill_state[i], to, &mut self.membership_epoch)
+    }
+
+    /// Mark decode lane `i` [`MemberState::Draining`] (registry-side mirror
+    /// of [`crate::sched::DecodeRouter::drain_instance`]). Returns whether
+    /// the state changed.
+    pub fn drain_decode(&mut self, i: usize) -> bool {
+        let to = MemberState::Draining;
+        Self::set_state(&mut self.decode_state[i], to, &mut self.membership_epoch)
+    }
+
+    /// Revive decode lane `i` to [`MemberState::Active`]. Returns whether
+    /// the state changed.
+    pub fn join_decode(&mut self, i: usize) -> bool {
+        let to = MemberState::Active;
+        Self::set_state(&mut self.decode_state[i], to, &mut self.membership_epoch)
+    }
+
+    /// Mark decode lane `i` [`MemberState::Departed`]. Callers assert the
+    /// instance is fully drained first. Returns whether the state changed.
+    pub fn depart_decode(&mut self, i: usize) -> bool {
+        let to = MemberState::Departed;
+        Self::set_state(&mut self.decode_state[i], to, &mut self.membership_epoch)
+    }
+
     /// One-line topology description for logs and the CLI.
     pub fn summary(&self) -> String {
         format!(
-            "{} prefill worker(s) + {} decode lane(s)",
+            "{} prefill worker(s) ({} active) + {} decode lane(s) ({} active)",
             self.n_prefill(),
-            self.n_decode()
+            self.n_active_prefill(),
+            self.n_decode(),
+            self.n_active_decode()
         )
     }
 }

@@ -59,10 +59,15 @@ COMMANDS:
                             counts at drain)
                   [--borrow-cap <blocks>]  (with --kv-borrow: per-instance
                             borrow/lend cap, default 64)
+                  [--elastic]  (elastic-membership demo: drain a prefill
+                            lane and a decode instance mid-burst, rejoin
+                            them, round-trip a prefill↔decode role
+                            conversion; needs --workers >= 2 and
+                            --decode-workers >= 2)
 ";
 
 fn main() {
-    let args = Args::from_env(&["dynamic-rate", "help", "qos", "kv-borrow"]);
+    let args = Args::from_env(&["dynamic-rate", "help", "qos", "kv-borrow", "elastic"]);
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let code = match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
@@ -368,6 +373,9 @@ fn cmd_serve(args: &Args) -> i32 {
         let deadline_ms = args.usize_or("deadline-ms", 0);
         return serve_qos_demo(server, &reqs, &recorder, deadline_ms);
     }
+    if args.flag("elastic") {
+        return serve_elastic_demo(server, &reqs, &recorder, workers, decode_workers);
+    }
     // Drive the run through the handle-based async API: the burst routes
     // atomically on the dispatcher, the caller streams tokens and awaits
     // per-request completions.
@@ -440,6 +448,100 @@ fn cmd_serve(args: &Args) -> i32 {
         );
     }
     let _ = server.shutdown();
+    0
+}
+
+/// The `serve --elastic` demo: runtime membership churn under live load.
+/// One prefill lane and one decode instance drain mid-burst (in-flight
+/// work keeps running; new admissions avoid the draining members), the
+/// second half of the burst lands on the shrunk cluster, both members
+/// rejoin, and a role conversion round-trips the prefill lane through the
+/// decode tier — every handle must still resolve `Finished`.
+fn serve_elastic_demo(
+    server: tetris::serve::Server,
+    reqs: &[tetris::serve::ServeRequest],
+    recorder: &tetris::api::TraceRecorder,
+    workers: usize,
+    decode_workers: usize,
+) -> i32 {
+    use tetris::api::{Completion, RoleController};
+    if workers < 2 || decode_workers < 2 {
+        eprintln!("--elastic needs --workers >= 2 and --decode-workers >= 2");
+        let _ = server.shutdown();
+        return 2;
+    }
+    let client = server.client();
+    let (p_last, d_last) = (workers - 1, decode_workers - 1);
+    let mid = reqs.len() / 2;
+    let mut handles = match client.submit_burst(&reqs[..mid]) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            return 1;
+        }
+    };
+    // Shrink under load: draining is an admission mask, never a kill.
+    if let Err(e) = server.drain_prefill(p_last).and_then(|()| server.drain_decode(d_last)) {
+        eprintln!("drain failed: {e:#}");
+        let _ = server.shutdown();
+        return 1;
+    }
+    println!("drained prefill lane {p_last} and decode instance {d_last} under load");
+    match client.submit_burst(&reqs[mid..]) {
+        Ok(h) => handles.extend(h),
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            return 1;
+        }
+    }
+    // Report (without applying) what the load-driven controller would do
+    // right now — the explicit ops below keep the demo deterministic.
+    let (prefill, decode) = server.membership();
+    match RoleController::default().decide(&client.load(), &prefill, &decode) {
+        Some(a) => println!("role controller under load would apply: {a:?}"),
+        None => println!("role controller under load: no conversion indicated"),
+    }
+    // Scale back up: rejoining wakes any parked admissions.
+    if let Err(e) = server.join_prefill(p_last).and_then(|()| server.join_decode(d_last)) {
+        eprintln!("rejoin failed: {e:#}");
+        let _ = server.shutdown();
+        return 1;
+    }
+    let mut failures = 0usize;
+    for h in &mut handles {
+        match h.wait() {
+            Completion::Finished(_) => {}
+            other => {
+                eprintln!("request {} did not finish: {other:?}", h.id());
+                failures += 1;
+            }
+        }
+    }
+    // Role-conversion round-trip on the quiesced cluster: prefill lane
+    // p_last serves a stint as decode instance d_last, then converts back.
+    let roles = server
+        .drain_decode(d_last)
+        .and_then(|()| server.convert_prefill_to_decode(p_last, d_last))
+        .and_then(|()| server.convert_decode_to_prefill(d_last, p_last))
+        .and_then(|()| server.join_decode(d_last));
+    if let Err(e) = roles {
+        eprintln!("role conversion failed: {e:#}");
+        failures += 1;
+    }
+    let (prefill, decode) = server.membership();
+    println!("membership at drain: prefill {prefill:?} decode {decode:?}");
+    println!(
+        "observer: {} joins, {} drains, {} role conversions, {} tokens",
+        recorder.count("member_join"),
+        recorder.count("member_drain"),
+        recorder.count("role_convert"),
+        recorder.count("token")
+    );
+    let _ = server.shutdown();
+    if failures > 0 {
+        eprintln!("serving failed: {failures} requests did not finish");
+        return 1;
+    }
     0
 }
 

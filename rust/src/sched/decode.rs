@@ -61,6 +61,7 @@
 //! lent blocks, so placements are bit-for-bit the local-only decisions —
 //! the zero-borrow-cap parity tests pin this.
 
+use crate::cluster::MemberState;
 use crate::kvbroker::{KvBroker, KvBrokerConfig};
 use crate::kvcache::BlockManager;
 
@@ -106,6 +107,17 @@ impl DecodeInstanceState {
 }
 
 /// The router over all decoding instances.
+///
+/// # Elastic membership
+///
+/// Each instance carries a [`MemberState`]; [`DecodeRouter::route`] only
+/// places on (and only borrows from) `Active` instances, while every other
+/// lifecycle transition — `transfer_complete`, `cancel`, `finish` — keeps
+/// working on a `Draining` instance so in-flight requests release through
+/// the normal ladder. With every instance `Active` (the static-membership
+/// default) the membership checks pass for every index in the identical
+/// iteration order, so placements are bit-for-bit the non-elastic
+/// decisions — the third parity leg pins this.
 #[derive(Clone, Debug, Default)]
 pub struct DecodeRouter {
     /// Per-instance routing state, indexed by decode-instance id.
@@ -114,6 +126,10 @@ pub struct DecodeRouter {
     /// (never leases, scores untouched) unless constructed through
     /// [`DecodeRouter::with_broker`] with an enabled config.
     pub broker: KvBroker,
+    /// Per-instance membership state (parallel to `instances`).
+    status: Vec<MemberState>,
+    /// Monotone counter bumped on every membership mutation.
+    membership_epoch: u64,
 }
 
 impl DecodeRouter {
@@ -137,7 +153,16 @@ impl DecodeRouter {
                 .map(|_| DecodeInstanceState::new(blocks_per_instance, block_tokens))
                 .collect(),
             broker: KvBroker::new(n, broker),
+            status: vec![MemberState::Active; n],
+            membership_epoch: 0,
         }
+    }
+
+    /// Whether instance `i` may receive new placements (and lend blocks).
+    /// Instances beyond the tracked range — e.g. on a default-constructed
+    /// empty router — are treated as active.
+    fn is_active(&self, i: usize) -> bool {
+        self.status.get(i).map_or(true, |s| s.is_active())
     }
 
     /// Instance `i`'s availability net of blocks it has lent out —
@@ -152,11 +177,20 @@ impl DecodeRouter {
     /// enabled) with a remote-block lease covering the shortfall. Reserves
     /// virtual usage for the local share and opens a pending lease for
     /// the borrowed share. Returns the instance index.
+    ///
+    /// Draining and departed instances are never chosen and never lend:
+    /// their spare is reported as 0, so the broker's lender walk skips
+    /// them too.
     pub fn route(&mut self, tokens: usize, req: u64) -> Option<usize> {
         let enabled = self.broker.is_enabled();
-        let spare: Vec<usize> = (0..self.instances.len()).map(|i| self.lendable_spare(i)).collect();
+        let spare: Vec<usize> = (0..self.instances.len())
+            .map(|i| if self.is_active(i) { self.lendable_spare(i) } else { 0 })
+            .collect();
         let mut best: Option<(usize, f64)> = None;
         for (i, inst) in self.instances.iter().enumerate() {
+            if !self.is_active(i) {
+                continue;
+            }
             let need = inst.blocks_for(tokens);
             let avail = spare[i];
             let shortfall = need.saturating_sub(avail);
@@ -331,6 +365,91 @@ impl DecodeRouter {
     /// One decode step generated a token for `seq`: may need a new block.
     pub fn on_token(&mut self, idx: usize, seq: u64) -> anyhow::Result<()> {
         self.instances[idx].blocks.append_token(seq)?;
+        Ok(())
+    }
+
+    /// Membership state of instance `i` (instances beyond the tracked
+    /// range report `Active`, matching [`DecodeRouter::route`]'s view).
+    pub fn instance_state(&self, i: usize) -> MemberState {
+        self.status.get(i).copied().unwrap_or(MemberState::Active)
+    }
+
+    /// Membership states of every instance, in instance order.
+    pub fn instance_states(&self) -> &[MemberState] {
+        &self.status
+    }
+
+    /// Monotone counter bumped on every membership mutation — the router's
+    /// contribution to
+    /// [`LoadSnapshot::membership_epoch`](crate::api::LoadSnapshot::membership_epoch).
+    pub fn membership_epoch(&self) -> u64 {
+        self.membership_epoch
+    }
+
+    /// Number of instances currently accepting placements.
+    pub fn n_active_instances(&self) -> usize {
+        (0..self.instances.len()).filter(|&i| self.is_active(i)).count()
+    }
+
+    /// Begin draining instance `i`: no new placements land on it and it
+    /// stops lending, while its in-flight transfers, batch, and leases
+    /// release through the normal ladder. Returns whether the state
+    /// changed.
+    pub fn drain_instance(&mut self, i: usize) -> bool {
+        if self.status[i] == MemberState::Draining {
+            return false;
+        }
+        self.status[i] = MemberState::Draining;
+        self.membership_epoch += 1;
+        true
+    }
+
+    /// Revive a draining or departed instance to `Active` (join or
+    /// rejoin): it immediately competes for placements again. Returns
+    /// whether the state changed.
+    pub fn join_instance(&mut self, i: usize) -> bool {
+        if self.status[i] == MemberState::Active {
+            return false;
+        }
+        self.status[i] = MemberState::Active;
+        self.membership_epoch += 1;
+        true
+    }
+
+    /// Whether instance `i` holds no residual state: every block free, no
+    /// virtual reservations, no batch, no in-flight transfers, and no
+    /// broker entanglement (nothing lent out, no outstanding debt).
+    pub fn is_drained(&self, i: usize) -> bool {
+        let inst = &self.instances[i];
+        inst.virtual_blocks == 0
+            && inst.active_batch == 0
+            && inst.pending_transfers == 0
+            && inst.blocks.free_blocks() == inst.blocks.total_blocks()
+            && self.broker.lent(i) == 0
+            && self.broker.debt(i) == 0
+    }
+
+    /// Complete a drain: mark instance `i` `Departed`. Fails (leaving the
+    /// state unchanged) unless the instance is fully drained per
+    /// [`DecodeRouter::is_drained`] — departing may never strand blocks,
+    /// leases, or in-flight requests.
+    pub fn depart_instance(&mut self, i: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.is_drained(i),
+            "decode instance {i} still holds state (batch {}, transfers {}, virtual {}, \
+             free {}/{}, lent {}, debt {})",
+            self.instances[i].active_batch,
+            self.instances[i].pending_transfers,
+            self.instances[i].virtual_blocks,
+            self.instances[i].blocks.free_blocks(),
+            self.instances[i].blocks.total_blocks(),
+            self.broker.lent(i),
+            self.broker.debt(i)
+        );
+        if self.status[i] != MemberState::Departed {
+            self.status[i] = MemberState::Departed;
+            self.membership_epoch += 1;
+        }
         Ok(())
     }
 }
@@ -545,5 +664,72 @@ mod tests {
         r.finish(0, seq_c);
         r.finish(1, seq_b);
         assert_eq!(r.available_blocks(), 20);
+    }
+
+    #[test]
+    fn draining_instance_gets_no_placements() {
+        let mut r = router();
+        // Instance 1 is freer (no batch) — but draining, so 0 wins.
+        r.instances[0].active_batch = 10;
+        assert!(r.drain_instance(1));
+        assert!(!r.drain_instance(1), "idempotent");
+        assert_eq!(r.route(1600, 0), Some(0));
+        assert_eq!(r.n_active_instances(), 1);
+        // Rejoining restores placement eligibility.
+        assert!(r.join_instance(1));
+        assert_eq!(r.route(1600, 1), Some(1));
+        assert!(r.membership_epoch() >= 2);
+    }
+
+    #[test]
+    fn draining_instance_still_releases_in_flight_work() {
+        let mut r = router();
+        let idx = r.route(320, 0).unwrap();
+        r.drain_instance(idx);
+        assert!(!r.is_drained(idx), "transfer still in flight");
+        let seq = r.transfer_complete(idx, 320, 0).unwrap();
+        assert!(!r.is_drained(idx), "batch still resident");
+        r.finish(idx, seq);
+        assert!(r.is_drained(idx));
+        r.depart_instance(idx).expect("fully drained");
+        assert_eq!(r.instance_state(idx), MemberState::Departed);
+    }
+
+    #[test]
+    fn depart_refuses_undrained_instance() {
+        let mut r = router();
+        let idx = r.route(320, 0).unwrap();
+        r.drain_instance(idx);
+        assert!(r.depart_instance(idx).is_err(), "virtual reservation pending");
+        let epoch = r.membership_epoch();
+        assert_eq!(r.membership_epoch(), epoch, "failed depart does not bump the epoch");
+        r.cancel(idx, 320, 0);
+        r.depart_instance(idx).expect("drained after cancel");
+    }
+
+    #[test]
+    fn draining_instance_never_lends() {
+        // Instance 1 drains; a request that would need to borrow from it
+        // must be refused (no other lender exists).
+        let mut r = DecodeRouter::with_broker(2, 10, 16, KvBrokerConfig::enabled(8));
+        r.drain_instance(1);
+        assert_eq!(r.route(192, 0), None, "12 blocks need a lender, but 1 is draining");
+        assert_eq!(r.route(128, 1), Some(0), "local-only placement still works");
+    }
+
+    #[test]
+    fn all_active_routing_is_unchanged() {
+        // The membership-aware route must make the identical decisions the
+        // pre-elastic router made while every instance is Active.
+        let mut a = router();
+        let mut b = router();
+        for i in 0..2 {
+            assert_eq!(b.instance_state(i), MemberState::Active);
+        }
+        b.drain_instance(0);
+        b.join_instance(0); // state round-trip must not perturb placement
+        for (req, tokens) in [(0u64, 320), (1, 1600), (2, 64), (3, 320)] {
+            assert_eq!(a.route(tokens, req), b.route(tokens, req));
+        }
     }
 }

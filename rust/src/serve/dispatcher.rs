@@ -367,15 +367,33 @@ impl Dispatcher {
     /// in this batch were made against.
     fn plan(&mut self, prompt: &[i32], now: f64, observed_rate: f64) -> anyhow::Result<CdspPlan> {
         let rate = self.shared.controller.lock().unwrap().rate_given(now, observed_rate);
-        let pool = self.registry.lock().unwrap().prefill().pool_view(now);
-        let plan = self.scheduler.schedule(prompt.len(), &pool, rate).ok_or_else(|| {
+        // Elastic membership: the scheduler plans over the *active* prefill
+        // lanes only, as a compacted pool (view lane `k` = physical lane
+        // `lanes[k]`). Under all-Active membership `lanes` is the identity
+        // and the view is bit-for-bit `pool_view(now)` — the static parity
+        // pin relies on that.
+        let (pool, lanes) = {
+            let reg = self.registry.lock().unwrap();
+            let lanes = reg.active_prefill_lanes();
+            (reg.prefill().pool_view_of(now, &lanes), lanes)
+        };
+        let mut plan = self.scheduler.schedule(prompt.len(), &pool, rate).ok_or_else(|| {
             anyhow::anyhow!(
-                "scheduling failed ({} prompt tokens on {} workers)",
+                "scheduling failed ({} prompt tokens on {} active workers)",
                 prompt.len(),
                 pool.len()
             )
         })?;
         debug_assert!(plan.validate(prompt.len()).is_ok());
+        // Translate the plan's compact group ids back to physical lanes
+        // before any chunk is dispatched or clock-committed.
+        if lanes.iter().enumerate().any(|(k, &l)| k != l) {
+            for chunk in plan.chunks.iter_mut() {
+                for g in chunk.group.iter_mut() {
+                    *g = lanes[*g];
+                }
+            }
+        }
         Ok(plan)
     }
 

@@ -406,6 +406,15 @@ pub(crate) struct SubmitShared {
     /// its cluster-KV fields (lent/borrowed blocks) and is re-assembled
     /// even inside the staleness window.
     pub kv_epoch: Arc<AtomicU64>,
+    /// Mirror of the cluster membership epoch (registry + router membership
+    /// counters summed), stored by every membership operation and by
+    /// [`SubmitShared::refresh_load`]. A cached snapshot whose
+    /// [`LoadSnapshot::membership_epoch`] trails this counter was assembled
+    /// against a pool shape that no longer exists (a member joined,
+    /// drained, departed, or converted roles) and is re-assembled even
+    /// inside the staleness window — admission and the federation router
+    /// never place work against a stale membership view.
+    pub membership_epoch: Arc<AtomicU64>,
 }
 
 impl SubmitShared {
@@ -487,7 +496,9 @@ impl SubmitShared {
     /// lock-derived parts were actually gathered. A lease-epoch mismatch
     /// (the broker borrowed, returned, or repatriated blocks since the
     /// snapshot was assembled) also forces a refresh, so the cluster-KV
-    /// fields are covered by the same invalidation as the rest.
+    /// fields are covered by the same invalidation as the rest; so does a
+    /// membership-epoch mismatch (a member joined, drained, departed, or
+    /// converted roles since assembly).
     pub fn load(&self) -> LoadSnapshot {
         let now = self.epoch.elapsed().as_secs_f64();
         let parked = self.parked.load(Ordering::Relaxed);
@@ -497,6 +508,7 @@ impl SubmitShared {
                 if now - s.assembled_at <= crate::serve::LOAD_SNAPSHOT_STALENESS
                     && s.parked == parked
                     && s.kv_lease_epoch == self.kv_epoch.load(Ordering::Relaxed)
+                    && s.membership_epoch == self.membership_epoch.load(Ordering::Relaxed)
                 {
                     let mut out = s.clone();
                     out.at = now;
@@ -515,18 +527,20 @@ impl SubmitShared {
     /// everyone else goes through [`SubmitShared::load`].
     pub fn refresh_load(&self) -> LoadSnapshot {
         let at = self.epoch.elapsed().as_secs_f64();
-        let (block_tokens, decode, kv_lease_epoch) = {
+        let (block_tokens, decode, kv_lease_epoch, router_members) = {
             let r = self.router.lock().unwrap();
             let (block_tokens, decode) = LoadSnapshot::decode_load_of(&r);
-            (block_tokens, decode, r.broker.epoch())
+            (block_tokens, decode, r.broker.epoch(), r.membership_epoch())
         };
         // Keep the mirror coherent with what we just read, so a cached
         // snapshot built from this read validates against it.
         self.kv_epoch.store(kv_lease_epoch, Ordering::Relaxed);
-        let (prefill_busy, decode_lane_busy) = {
+        let (prefill_busy, decode_lane_busy, registry_members) = {
             let reg = self.registry.lock().unwrap();
-            (reg.prefill_busy(at), reg.decode_busy(at))
+            (reg.prefill_busy(at), reg.decode_busy(at), reg.membership_epoch())
         };
+        let membership_epoch = router_members + registry_members;
+        self.membership_epoch.store(membership_epoch, Ordering::Relaxed);
         let mut free_backends = Vec::with_capacity(self.receivers.len());
         let mut transfers_in_service = Vec::with_capacity(self.receivers.len());
         for m in self.receivers.iter() {
@@ -547,6 +561,7 @@ impl SubmitShared {
             parked: self.parked.load(Ordering::Relaxed),
             arrival_rate,
             kv_lease_epoch,
+            membership_epoch,
         };
         *self.load_cache.lock().unwrap() = Some(snap.clone());
         snap

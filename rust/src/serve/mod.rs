@@ -123,7 +123,7 @@ use crate::api::admission::{
 };
 use crate::api::Observer;
 use crate::baselines::PrefillScheduler;
-use crate::cluster::WorkerRegistry;
+use crate::cluster::{ClusterRole, MemberState, WorkerRegistry};
 use crate::kvbroker::KvBrokerConfig;
 use crate::latency::prefill::{PrefillModel, Sample, SpCoeffs};
 use crate::latency::{DecodeQuickfit, TtftEstimator};
@@ -433,6 +433,7 @@ impl Server {
             epoch,
             load_cache: Mutex::new(None),
             kv_epoch: Arc::clone(&kv_epoch),
+            membership_epoch: Arc::new(AtomicU64::new(0)),
         });
 
         // The deadline monitor's TTFT lower bound: this machine's
@@ -622,6 +623,166 @@ impl Server {
     /// moment of the call).
     pub fn topology(&self) -> WorkerRegistry {
         self.registry.lock().unwrap().clone()
+    }
+
+    // ------------------------------------------------------------------
+    // Elastic membership: runtime join / drain / remove + role conversion
+    // ------------------------------------------------------------------
+
+    /// Per-slot membership states, as `(prefill lanes, decode instances)`.
+    ///
+    /// Prefill lane states live in the [`WorkerRegistry`] (the dispatcher
+    /// masks its planning pool off them); decode instance states live in
+    /// the shared [`DecodeRouter`], which masks both placement and KV-block
+    /// lending. All slots start `Active`; membership ops flip them at run
+    /// time without spawning or killing any thread (see
+    /// [`crate::cluster::MemberState`] for the drain state machine).
+    pub fn membership(&self) -> (Vec<MemberState>, Vec<MemberState>) {
+        let prefill = self.registry.lock().unwrap().prefill_states().to_vec();
+        let decode = self.router.lock().unwrap().instance_states().to_vec();
+        (prefill, decode)
+    }
+
+    /// Stop routing new placements to decode instance `inst` and stop
+    /// lending its spare KV blocks through the broker. Everything already
+    /// in flight keeps running — granted transfers complete, batched
+    /// requests decode to the end, and every release path (cancel, finish,
+    /// lease unwind) stays live — so a drain never hangs a handle; it is
+    /// purely an admission mask. Refuses to drain the last active decode
+    /// instance. Returns `Ok` idempotently if `inst` is already draining.
+    pub fn drain_decode(&self, inst: usize) -> Result<()> {
+        let changed = {
+            let mut r = self.router.lock().unwrap();
+            anyhow::ensure!(inst < r.n_instances(), "decode instance {inst} out of range");
+            anyhow::ensure!(
+                !(r.instance_state(inst).is_active() && r.n_active_instances() == 1),
+                "cannot drain the last active decode instance"
+            );
+            r.drain_instance(inst)
+        };
+        self.registry.lock().unwrap().drain_decode(inst);
+        if changed {
+            self.sync_membership_epoch();
+            let now = self.submit_shared.epoch.elapsed().as_secs_f64();
+            for o in self.submit_shared.observers.iter() {
+                o.on_member_drain(ClusterRole::Decode, inst, now);
+            }
+        }
+        Ok(())
+    }
+
+    /// (Re-)activate decode instance `inst`: it immediately rejoins the
+    /// placement scoring pool and the broker's lender set, and the
+    /// dispatcher is nudged so parked requests can take the new capacity.
+    pub fn join_decode(&self, inst: usize) -> Result<()> {
+        let changed = {
+            let mut r = self.router.lock().unwrap();
+            anyhow::ensure!(inst < r.n_instances(), "decode instance {inst} out of range");
+            r.join_instance(inst)
+        };
+        self.registry.lock().unwrap().join_decode(inst);
+        if changed {
+            self.sync_membership_epoch();
+            let now = self.submit_shared.epoch.elapsed().as_secs_f64();
+            for o in self.submit_shared.observers.iter() {
+                o.on_member_join(ClusterRole::Decode, inst, now);
+            }
+            let _ = self.tx.send(DispatcherMsg::CapacityFreed);
+        }
+        Ok(())
+    }
+
+    /// Finalize a drained decode instance's departure. Errors (leaving the
+    /// instance `Draining`) unless the drain has fully completed: no
+    /// virtual or real KV blocks held, no batched work, no pending
+    /// transfers, and no outstanding broker leases in either direction —
+    /// the same zero-leak invariant the membership chaos tests assert.
+    pub fn remove_decode(&self, inst: usize) -> Result<()> {
+        self.router.lock().unwrap().depart_instance(inst)?;
+        self.registry.lock().unwrap().depart_decode(inst);
+        self.sync_membership_epoch();
+        Ok(())
+    }
+
+    /// Stop planning new prefill chunk groups onto lane `lane`. Chunks of
+    /// already-committed plans still execute there (the barrier groups are
+    /// formed), and the lane's queue clock keeps crediting back normally.
+    /// Refuses to drain the last active prefill lane.
+    pub fn drain_prefill(&self, lane: usize) -> Result<()> {
+        let changed = {
+            let mut reg = self.registry.lock().unwrap();
+            anyhow::ensure!(lane < reg.prefill().len(), "prefill lane {lane} out of range");
+            anyhow::ensure!(
+                !(reg.prefill_state(lane).is_active() && reg.n_active_prefill() == 1),
+                "cannot drain the last active prefill lane"
+            );
+            reg.drain_prefill(lane)
+        };
+        if changed {
+            self.sync_membership_epoch();
+            let now = self.submit_shared.epoch.elapsed().as_secs_f64();
+            for o in self.submit_shared.observers.iter() {
+                o.on_member_drain(ClusterRole::Prefill, lane, now);
+            }
+        }
+        Ok(())
+    }
+
+    /// (Re-)activate prefill lane `lane` and nudge the dispatcher — the
+    /// very next plan may form wider SP groups across it.
+    pub fn join_prefill(&self, lane: usize) -> Result<()> {
+        let changed = {
+            let mut reg = self.registry.lock().unwrap();
+            anyhow::ensure!(lane < reg.prefill().len(), "prefill lane {lane} out of range");
+            reg.join_prefill(lane)
+        };
+        if changed {
+            self.sync_membership_epoch();
+            let now = self.submit_shared.epoch.elapsed().as_secs_f64();
+            for o in self.submit_shared.observers.iter() {
+                o.on_member_join(ClusterRole::Prefill, lane, now);
+            }
+            let _ = self.tx.send(DispatcherMsg::CapacityFreed);
+        }
+        Ok(())
+    }
+
+    /// Load-driven role conversion, prefill → decode: drain prefill lane
+    /// `lane` and activate decode instance `inst` (both preallocated
+    /// slots), then emit
+    /// [`Observer::on_role_convert`](crate::api::Observer::on_role_convert).
+    /// The usual guards apply — the last active prefill lane cannot leave.
+    pub fn convert_prefill_to_decode(&self, lane: usize, inst: usize) -> Result<()> {
+        self.drain_prefill(lane)?;
+        self.join_decode(inst)?;
+        let now = self.submit_shared.epoch.elapsed().as_secs_f64();
+        for o in self.submit_shared.observers.iter() {
+            o.on_role_convert(lane, inst, true, now);
+        }
+        Ok(())
+    }
+
+    /// Load-driven role conversion, decode → prefill: drain decode
+    /// instance `inst` (its in-flight batch finishes normally) and activate
+    /// prefill lane `lane`. The last active decode instance cannot leave.
+    pub fn convert_decode_to_prefill(&self, inst: usize, lane: usize) -> Result<()> {
+        self.drain_decode(inst)?;
+        self.join_prefill(lane)?;
+        let now = self.submit_shared.epoch.elapsed().as_secs_f64();
+        for o in self.submit_shared.observers.iter() {
+            o.on_role_convert(lane, inst, false, now);
+        }
+        Ok(())
+    }
+
+    /// Recompute the submit path's membership-epoch mirror from the two
+    /// authoritative counters (router + registry), taken one lock at a
+    /// time, so the next [`Server::load`] call rebuilds its cached
+    /// snapshot — the same invalidation pattern as the KV lease epoch.
+    fn sync_membership_epoch(&self) {
+        let router = self.router.lock().unwrap().membership_epoch();
+        let registry = self.registry.lock().unwrap().membership_epoch();
+        self.submit_shared.membership_epoch.store(router + registry, Ordering::Relaxed);
     }
 
     /// Wait for up to `n` legacy-submitted requests (oldest first) and

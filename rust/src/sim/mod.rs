@@ -29,7 +29,7 @@ pub mod profiler;
 
 use crate::api::Observer;
 use crate::baselines::PrefillScheduler;
-use crate::cluster::DispatchClock;
+use crate::cluster::{ClusterRole, DispatchClock, MemberState};
 use crate::config::ClusterConfig;
 use crate::kvbroker::KvBrokerConfig;
 use crate::latency::{DecodeModel, PrefillModel, TransferModel};
@@ -52,6 +52,53 @@ enum Event {
     PrefillDone { req: usize },
     ShardDone { req: usize, backend: usize },
     DecodeStep { inst: usize },
+    /// A scripted membership change (index into `Simulator::membership`).
+    Membership(usize),
+}
+
+/// One scripted change to cluster membership, applied at a virtual time.
+///
+/// The simulator's slot model mirrors the live server's: every lane and
+/// instance is preallocated, and membership is pure scheduling state — a
+/// drain masks the slot out of planning/placement while everything already
+/// in flight runs to completion, and a join unmasks it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MemberAction {
+    /// Stop planning new prefill chunk groups onto this lane.
+    DrainPrefill(usize),
+    /// (Re-)activate this prefill lane.
+    JoinPrefill(usize),
+    /// Stop routing placements to (and lending KV from) this decode
+    /// instance.
+    DrainDecode(usize),
+    /// (Re-)activate this decode instance; waiting requests retry
+    /// admission immediately.
+    JoinDecode(usize),
+    /// Role conversion prefill → decode: drain `lane`, activate `inst`.
+    ConvertToDecode {
+        /// Prefill lane that leaves the planning pool.
+        lane: usize,
+        /// Decode instance that joins the placement pool.
+        inst: usize,
+    },
+    /// Role conversion decode → prefill: drain `inst`, activate `lane`.
+    ConvertToPrefill {
+        /// Decode instance that leaves the placement pool.
+        inst: usize,
+        /// Prefill lane that rejoins the planning pool.
+        lane: usize,
+    },
+}
+
+/// A scripted membership event on the simulator's virtual clock. An event
+/// scheduled at the same virtual time as an arrival applies *before* that
+/// arrival routes (membership events enter the heap first).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MembershipEvent {
+    /// Virtual time at which the action applies.
+    pub at: f64,
+    /// The membership change.
+    pub action: MemberAction,
 }
 
 struct Timed {
@@ -152,6 +199,11 @@ pub struct Simulator {
     pub shard_streams: usize,
     /// Lifecycle-event subscribers (see [`crate::api::Observer`]).
     pub observers: Vec<Arc<dyn Observer>>,
+    /// Scripted membership events (elastic scale-up/down and role
+    /// conversions) applied on the virtual clock. Empty = static cluster,
+    /// bit-for-bit the pre-elastic behaviour. Scripts must keep the active
+    /// prefill pool schedulable for the configured SP candidates.
+    pub membership: Vec<MembershipEvent>,
 }
 
 impl Simulator {
@@ -199,9 +251,18 @@ impl Simulator {
             *seq += 1;
             heap.push(Timed { at, seq: *seq, ev });
         };
+        // Membership events enter the heap before arrivals, so an action
+        // scheduled at an arrival's exact time applies before it routes.
+        for k in 0..self.membership.len() {
+            let at = self.membership[k].at;
+            push(&mut heap, at, Event::Membership(k), &mut seq);
+        }
         for (i, r) in trace.iter().enumerate() {
             push(&mut heap, r.arrival, Event::Arrival(i), &mut seq);
         }
+        // Per-lane prefill membership (all slots start Active; decode
+        // membership lives inside the router).
+        let mut prefill_state = vec![MemberState::Active; n_prefill];
 
         // decode batches: per instance, the set of active request ids and
         // whether a step event is in flight.
@@ -239,9 +300,58 @@ impl Simulator {
                                     o.on_kv_borrow(i as u64, d, borrowed, now);
                                 }
                             }
-                            self.start_prefill(i, now, &mut reqs, &mut clock, &mut heap, &mut seq);
+                            self.start_prefill(
+                                i,
+                                now,
+                                &mut reqs,
+                                &mut clock,
+                                &mut heap,
+                                &mut seq,
+                                &prefill_state,
+                            );
                         }
                         None => waiting.push_back(i),
+                    }
+                }
+                Event::Membership(k) => {
+                    let grew = self.apply_membership(
+                        self.membership[k].action,
+                        now,
+                        &mut prefill_state,
+                        &mut router,
+                    );
+                    // New decode capacity: retry the waiting queue in
+                    // arrival order, exactly like a decode-step release.
+                    if grew {
+                        let mut admitted = Vec::new();
+                        for &w in waiting.iter() {
+                            let need = reqs[w].prompt_len + reqs[w].output_len;
+                            if let Some(d) = router.route(need, w as u64) {
+                                reqs[w].decode_inst = Some(d);
+                                for o in &self.observers {
+                                    o.on_decode_assign(w as u64, d, now);
+                                }
+                                let borrowed = router.broker.pending_blocks(w as u64);
+                                if borrowed > 0 {
+                                    for o in &self.observers {
+                                        o.on_kv_borrow(w as u64, d, borrowed, now);
+                                    }
+                                }
+                                admitted.push(w);
+                            }
+                        }
+                        waiting.retain(|w| !admitted.contains(w));
+                        for w in admitted {
+                            self.start_prefill(
+                                w,
+                                now,
+                                &mut reqs,
+                                &mut clock,
+                                &mut heap,
+                                &mut seq,
+                                &prefill_state,
+                            );
+                        }
                     }
                 }
                 Event::PrefillDone { req } => {
@@ -383,7 +493,15 @@ impl Simulator {
                     }
                     waiting.retain(|w| !admitted.contains(w));
                     for w in admitted {
-                        self.start_prefill(w, t_end, &mut reqs, &mut clock, &mut heap, &mut seq);
+                        self.start_prefill(
+                            w,
+                            t_end,
+                            &mut reqs,
+                            &mut clock,
+                            &mut heap,
+                            &mut seq,
+                            &prefill_state,
+                        );
                     }
                     if batches[inst].is_empty() {
                         step_scheduled[inst] = false;
@@ -414,9 +532,87 @@ impl Simulator {
         RunMetrics { requests, span: last_t.max(1e-9) }
     }
 
+    /// Apply one scripted membership action against the live sim state,
+    /// emitting the matching observer events. Guarded exactly like the
+    /// server's membership ops: the last active lane/instance of a role
+    /// never drains, and no-op transitions emit nothing. Returns `true`
+    /// when decode capacity may have grown (the caller then retries the
+    /// waiting queue).
+    fn apply_membership(
+        &self,
+        action: MemberAction,
+        now: f64,
+        prefill: &mut [MemberState],
+        router: &mut DecodeRouter,
+    ) -> bool {
+        match action {
+            MemberAction::DrainPrefill(lane) => {
+                let actives = prefill.iter().filter(|s| s.is_active()).count();
+                if lane < prefill.len() && prefill[lane].is_active() && actives > 1 {
+                    prefill[lane] = MemberState::Draining;
+                    for o in &self.observers {
+                        o.on_member_drain(ClusterRole::Prefill, lane, now);
+                    }
+                }
+                false
+            }
+            MemberAction::JoinPrefill(lane) => {
+                if lane < prefill.len() && !prefill[lane].is_active() {
+                    prefill[lane] = MemberState::Active;
+                    for o in &self.observers {
+                        o.on_member_join(ClusterRole::Prefill, lane, now);
+                    }
+                }
+                false
+            }
+            MemberAction::DrainDecode(inst) => {
+                if inst < router.n_instances()
+                    && router.n_active_instances() > 1
+                    && router.drain_instance(inst)
+                {
+                    for o in &self.observers {
+                        o.on_member_drain(ClusterRole::Decode, inst, now);
+                    }
+                }
+                false
+            }
+            MemberAction::JoinDecode(inst) => {
+                if inst < router.n_instances() && router.join_instance(inst) {
+                    for o in &self.observers {
+                        o.on_member_join(ClusterRole::Decode, inst, now);
+                    }
+                    true
+                } else {
+                    false
+                }
+            }
+            MemberAction::ConvertToDecode { lane, inst } => {
+                self.apply_membership(MemberAction::DrainPrefill(lane), now, prefill, router);
+                let grew =
+                    self.apply_membership(MemberAction::JoinDecode(inst), now, prefill, router);
+                for o in &self.observers {
+                    o.on_role_convert(lane, inst, true, now);
+                }
+                grew
+            }
+            MemberAction::ConvertToPrefill { inst, lane } => {
+                self.apply_membership(MemberAction::DrainDecode(inst), now, prefill, router);
+                self.apply_membership(MemberAction::JoinPrefill(lane), now, prefill, router);
+                for o in &self.observers {
+                    o.on_role_convert(lane, inst, false, now);
+                }
+                false
+            }
+        }
+    }
+
     /// Schedule one request's prefill at time `now`, committing chunk
     /// finishes (incl. cache-balancing exposure) onto the dispatch clock
-    /// and pushing the PrefillDone event.
+    /// and pushing the PrefillDone event. The scheduler sees only the
+    /// *active* prefill lanes, as a compacted pool whose ids are translated
+    /// back to physical lanes before commit — with every lane active the
+    /// view (and therefore every placement) is bit-for-bit the static one.
+    #[allow(clippy::too_many_arguments)]
     fn start_prefill(
         &mut self,
         i: usize,
@@ -425,14 +621,28 @@ impl Simulator {
         clock: &mut DispatchClock,
         heap: &mut BinaryHeap<Timed>,
         seq: &mut u64,
+        prefill_state: &[MemberState],
     ) {
-        let pool = clock.pool_view(now);
+        let lanes: Vec<usize> = prefill_state
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_active())
+            .map(|(k, _)| k)
+            .collect();
+        let pool = clock.pool_view_of(now, &lanes);
         let rate = self.controller.rate(now);
-        let plan = self
+        let mut plan = self
             .scheduler
             .schedule(reqs[i].prompt_len, &pool, rate)
-            .expect("non-empty pool");
+            .expect("schedulable active prefill pool");
         debug_assert!(plan.validate(reqs[i].prompt_len).is_ok());
+        if lanes.iter().enumerate().any(|(k, &l)| k != l) {
+            for chunk in plan.chunks.iter_mut() {
+                for g in chunk.group.iter_mut() {
+                    *g = lanes[*g];
+                }
+            }
+        }
         for o in &self.observers {
             o.on_plan(i as u64, &plan, now);
         }

@@ -34,6 +34,7 @@ use tetris::config::ClusterConfig;
 use tetris::latency::prefill::{PrefillModel, SpCoeffs};
 use tetris::runtime::{Engine, InterruptToken, StepHook, StepPoint, TinyArch};
 use tetris::serve::{Server, ServeRequest};
+use tetris::sim::MemberAction;
 
 /// One scripted interrupt that has fired: which request, at which of its
 /// logical steps, and at which global virtual-clock step.
@@ -250,6 +251,24 @@ pub fn assert_no_leaks(server: &Server, blocks_per_instance: usize, backends: us
     assert_eq!(server.n_parked(), 0, "requests left parked");
 }
 
+/// Apply one simulator-vocabulary membership action to a live server, so
+/// membership tests script both substrates (virtual clock and live
+/// threads) with the same [`MemberAction`] scripts.
+pub fn apply_member_action(server: &Server, action: MemberAction) -> anyhow::Result<()> {
+    match action {
+        MemberAction::DrainPrefill(lane) => server.drain_prefill(lane),
+        MemberAction::JoinPrefill(lane) => server.join_prefill(lane),
+        MemberAction::DrainDecode(inst) => server.drain_decode(inst),
+        MemberAction::JoinDecode(inst) => server.join_decode(inst),
+        MemberAction::ConvertToDecode { lane, inst } => {
+            server.convert_prefill_to_decode(lane, inst)
+        }
+        MemberAction::ConvertToPrefill { inst, lane } => {
+            server.convert_decode_to_prefill(inst, lane)
+        }
+    }
+}
+
 /// Timestamp-free signature of a recorded event sequence — what the
 /// seeded-determinism test compares across runs (wall-clock timestamps
 /// differ run to run; everything else must not). Shed/interrupt reasons
@@ -273,6 +292,21 @@ pub fn event_shape(events: &[TraceEvent]) -> Vec<String> {
             TraceEvent::Cancel { req, stage, .. } => format!("cancel:{req}:{}", stage.tag()),
             TraceEvent::Shed { req, .. } => format!("shed:{req}"),
             TraceEvent::Interrupt { req, .. } => format!("interrupt:{req}"),
+            TraceEvent::KvBorrow { req, instance, blocks, .. } => {
+                format!("kv_borrow:{req}:{instance}:{blocks}")
+            }
+            TraceEvent::KvReturn { req, instance, blocks, .. } => {
+                format!("kv_return:{req}:{instance}:{blocks}")
+            }
+            TraceEvent::MemberJoin { role, instance, .. } => {
+                format!("member_join:{}:{instance}", role.tag())
+            }
+            TraceEvent::MemberDrain { role, instance, .. } => {
+                format!("member_drain:{}:{instance}", role.tag())
+            }
+            TraceEvent::RoleConvert { lane, instance, to_decode, .. } => {
+                format!("role_convert:{lane}:{instance}:{to_decode}")
+            }
         })
         .collect()
 }

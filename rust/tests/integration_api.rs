@@ -107,6 +107,7 @@ fn api_matches_manually_wired_simulator() {
         broker: tetris::api::KvBrokerConfig::disabled(),
         shard_streams: 1,
         observers: Vec::new(),
+        membership: Vec::new(),
         arch,
         cluster,
     };

@@ -1,0 +1,609 @@
+//! Membership-chaos integration: elastic cluster membership, role
+//! conversion, and multi-replica federation under the fault harness.
+//!
+//! The tier this suite pins:
+//!
+//! * draining members under live load leaks nothing and every handle
+//!   resolves exactly once (the release ladder never forks or strands);
+//! * a member crash/departure mid-flight resolves its work through the
+//!   normal ladder before the slot may depart;
+//! * a deterministic two-phase trace where elastic role conversion beats
+//!   *every* fixed prefill/decode split on TTFT p99 — the PR's
+//!   acceptance bar;
+//! * killing one federation replica resolves all of its handles while the
+//!   survivors' placements are untouched;
+//! * property tests: random join/drain/submit/cancel interleavings never
+//!   strand a request or double-release, and seeded membership scripts
+//!   replay to identical timestamp-free event sequences.
+
+mod harness;
+
+use harness::{
+    apply_member_action, assert_no_leaks, builder, event_shape, harness_arch, req, wait_until,
+    FaultHarness,
+};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tetris::api::{Completion, Federation, SubmitOptions, TraceEvent, TraceRecorder};
+use tetris::cluster::{ClusterRole, MemberState};
+use tetris::sched::DecodeRouter;
+use tetris::sim::{MemberAction, MembershipEvent, SimParams};
+use tetris::util::proptest::{check, Config};
+use tetris::workload::Request;
+use tetris::{prop_assert, prop_fail};
+
+/// Router geometry shared by the live-server tests: roomy enough that KV
+/// capacity never interferes with membership semantics.
+fn roomy() -> SimParams {
+    SimParams { backends_per_decode: 4, decode_capacity_tokens: 16_000, block_tokens: 16 }
+}
+
+fn assignments(rec: &TraceRecorder) -> BTreeMap<u64, usize> {
+    let mut m = BTreeMap::new();
+    for e in rec.events() {
+        if let TraceEvent::DecodeAssign { req, instance, .. } = e {
+            m.insert(req, instance);
+        }
+    }
+    m
+}
+
+fn count_for(rec: &TraceRecorder, id: u64, kind: &str) -> usize {
+    rec.events()
+        .iter()
+        .filter(|e| e.req() == id && e.kind() == kind)
+        .count()
+}
+
+#[test]
+fn drain_under_load_leaks_nothing_and_resolves_exactly_once() {
+    let h = FaultHarness::new();
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(4, 2)
+        .sim_params(roomy())
+        .observe(rec.clone())
+        .build_server(h.engine(harness_arch()), 4)
+        .expect("server starts");
+    h.set_step_delay(Duration::from_millis(2));
+
+    // Phase A: a burst lands on the full 4-prefill / 2-decode cluster.
+    let a: Vec<_> = (1..=6).map(|id| req(id, 256, 4)).collect();
+    let mut handles = server.submit_burst_async(&a).expect("burst accepted");
+    wait_until(|| rec.count("decode_assign") == 6, "phase A placements");
+    assert!(
+        server.router_state().in_flight_transfers() > 0,
+        "drain must land while work is in flight"
+    );
+
+    // Shrink under load: draining masks admission, never kills work.
+    server.drain_decode(1).expect("drain decode 1");
+    server.drain_prefill(3).expect("drain prefill 3");
+    let (prefill, decode) = server.membership();
+    assert_eq!(prefill[3], MemberState::Draining);
+    assert_eq!(decode[1], MemberState::Draining);
+
+    // Phase B: new work must avoid the draining members entirely.
+    let b: Vec<_> = (11..=16).map(|id| req(id, 256, 4)).collect();
+    handles.extend(server.submit_burst_async(&b).expect("burst accepted"));
+    wait_until(|| rec.count("decode_assign") == 12, "phase B placements");
+    let assign = assignments(&rec);
+    for id in 11..=16u64 {
+        assert_eq!(assign[&id], 0, "request {id} routed to the draining instance");
+    }
+
+    // Scale back up; the rejoined instance competes for placements again.
+    server.join_decode(1).expect("rejoin decode 1");
+    server.join_prefill(3).expect("rejoin prefill 3");
+    let c: Vec<_> = (21..=24).map(|id| req(id, 256, 4)).collect();
+    handles.extend(server.submit_burst_async(&c).expect("burst accepted"));
+
+    for h in &mut handles {
+        match h.wait() {
+            Completion::Finished(_) => {}
+            other => panic!("request {} did not finish: {other:?}", h.id()),
+        }
+    }
+    let assign = assignments(&rec);
+    assert!(
+        (21..=24u64).any(|id| assign[&id] == 1),
+        "rejoined instance never won a placement: {assign:?}"
+    );
+
+    // Exactly-once terminal accounting per request, and exactly one
+    // membership event per op.
+    for id in (1..=6).chain(11..=16).chain(21..=24) {
+        assert_eq!(count_for(&rec, id, "decode_assign"), 1, "req {id} assigned twice");
+        assert_eq!(count_for(&rec, id, "prefill_done"), 1, "req {id} prefilled twice");
+        assert_eq!(count_for(&rec, id, "token"), 4, "req {id} token count");
+    }
+    assert_eq!(rec.count("member_drain"), 2);
+    assert_eq!(rec.count("member_join"), 2);
+    assert!(rec.events().iter().any(|e| matches!(
+        e,
+        TraceEvent::MemberDrain { role: ClusterRole::Prefill, instance: 3, .. }
+    )));
+
+    wait_until(
+        || {
+            let r = server.router_state();
+            r.in_flight_transfers() == 0 && r.available_blocks() == r.total_blocks()
+        },
+        "drain-under-load teardown",
+    );
+    assert_no_leaks(&server, 1000, 4);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn member_departs_only_after_its_work_resolves() {
+    let h = FaultHarness::new();
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(2, 2)
+        .sim_params(roomy())
+        .observe(rec.clone())
+        .build_server(h.engine(harness_arch()), 2)
+        .expect("server starts");
+    h.set_step_delay(Duration::from_millis(2));
+
+    let mut handle = server.submit_async(&req(1, 256, 4)).expect("submitted");
+    wait_until(|| rec.count("decode_assign") == 1, "placement");
+    let inst = assignments(&rec)[&1];
+
+    // Crash-style removal mid-flight must be refused: the slot still holds
+    // the request's state (virtual blocks or batch residency).
+    server.drain_decode(inst).expect("drain");
+    let err = server.remove_decode(inst).expect_err("undrained depart must fail");
+    assert!(err.to_string().contains("still holds state"), "{err}");
+
+    // The in-flight request resolves through the normal ladder even though
+    // its instance is draining.
+    match handle.wait() {
+        Completion::Finished(_) => {}
+        other => panic!("draining must not kill in-flight work: {other:?}"),
+    }
+    wait_until(|| server.router_state().is_drained(inst), "drain completion");
+    server.remove_decode(inst).expect("depart after drain");
+    let (_, decode) = server.membership();
+    assert_eq!(decode[inst], MemberState::Departed);
+
+    // New work avoids the departed slot; rejoining revives it.
+    let mut h2 = server.submit_async(&req(2, 128, 2)).expect("submitted");
+    wait_until(|| rec.count("decode_assign") == 2, "re-placement");
+    assert_eq!(assignments(&rec)[&2], 1 - inst, "departed slot must not win placements");
+    assert!(matches!(h2.wait(), Completion::Finished(_)));
+    server.join_decode(inst).expect("rejoin departed slot");
+
+    // A cancel mid-flight on a draining member releases through the same
+    // ladder ("crash mid-transfer resolves").
+    let h3 = server.submit_async(&req(3, 256, 4)).expect("submitted");
+    wait_until(|| rec.count("decode_assign") == 3, "third placement");
+    let inst3 = assignments(&rec)[&3];
+    server.drain_decode(inst3).expect("drain under in-flight transfer");
+    h3.cancel();
+    let mut h3 = h3;
+    match h3.wait() {
+        Completion::Cancelled(_) | Completion::Finished(_) => {}
+        other => panic!("cancel on a draining member must resolve: {other:?}"),
+    }
+    wait_until(|| server.router_state().is_drained(inst3), "post-cancel drain");
+    server.join_decode(inst3).expect("rejoin");
+
+    wait_until(
+        || {
+            let r = server.router_state();
+            r.in_flight_transfers() == 0 && r.available_blocks() == r.total_blocks()
+        },
+        "departure teardown",
+    );
+    assert_no_leaks(&server, 1000, 4);
+    server.shutdown().unwrap();
+}
+
+/// The acceptance trace: two phases on a 4+4 slot cluster. Phase 1 is a
+/// burst of long prompts (prefill-bound — wants 4 prefill lanes); phase 2
+/// is a burst of KV-heavy decodes (decode-bound — wants 4 decode
+/// instances). Every fixed split is starved in one phase; the elastic
+/// script runs 4P/2D through phase 1 and converts two prefill lanes to
+/// decode at the phase boundary.
+#[test]
+fn elastic_role_conversion_beats_every_fixed_split_on_ttft_p99() {
+    const PHASE2_AT: f64 = 5.0;
+    let trace: Vec<Request> = (0..16)
+        .map(|i| Request { id: i, arrival: 0.0, prompt_len: 512, output_len: 1 })
+        .chain((16..24).map(|i| Request {
+            id: i,
+            arrival: PHASE2_AT,
+            prompt_len: 64,
+            output_len: 6336,
+        }))
+        .collect();
+    let md = |at: f64, action: MemberAction| MembershipEvent { at, action };
+    let run = |script: Vec<MembershipEvent>, rec: Option<Arc<TraceRecorder>>| {
+        let mut b = builder(4, 4).sim_params(SimParams {
+            backends_per_decode: 4,
+            decode_capacity_tokens: 13_440, // 210 blocks of 64 tokens
+            block_tokens: 64,
+        });
+        if let Some(rec) = rec {
+            b = b.observe(rec);
+        }
+        let mut sim = b.membership(script).build_simulation().expect("sim builds");
+        let m = sim.run(&trace);
+        assert_eq!(m.requests.len(), 24, "every request completes");
+        m.ttft_summary().p99
+    };
+
+    let p_4p2d = run(
+        vec![md(0.0, MemberAction::DrainDecode(2)), md(0.0, MemberAction::DrainDecode(3))],
+        None,
+    );
+    let p_2p4d = run(
+        vec![md(0.0, MemberAction::DrainPrefill(2)), md(0.0, MemberAction::DrainPrefill(3))],
+        None,
+    );
+    let p_3p3d = run(
+        vec![md(0.0, MemberAction::DrainPrefill(3)), md(0.0, MemberAction::DrainDecode(3))],
+        None,
+    );
+    let elastic_script = || {
+        vec![
+            md(0.0, MemberAction::DrainDecode(2)),
+            md(0.0, MemberAction::DrainDecode(3)),
+            md(PHASE2_AT, MemberAction::ConvertToDecode { lane: 2, inst: 2 }),
+            md(PHASE2_AT, MemberAction::ConvertToDecode { lane: 3, inst: 3 }),
+        ]
+    };
+    let rec = Arc::new(TraceRecorder::new());
+    let p_elastic = run(elastic_script(), Some(rec.clone()));
+
+    assert!(
+        p_elastic < p_2p4d,
+        "elastic ({p_elastic:.3}s) must beat fixed 2P/4D ({p_2p4d:.3}s): phase-1 prefill queue"
+    );
+    assert!(
+        p_elastic * 2.0 < p_4p2d,
+        "elastic ({p_elastic:.3}s) must crush fixed 4P/2D ({p_4p2d:.3}s): phase-2 KV starvation"
+    );
+    assert!(
+        p_elastic * 2.0 < p_3p3d,
+        "elastic ({p_elastic:.3}s) must crush fixed 3P/3D ({p_3p3d:.3}s): starved in both phases"
+    );
+
+    // The conversions actually happened, with their primitive events.
+    assert_eq!(rec.count("role_convert"), 2);
+    assert_eq!(rec.count("member_join"), 2, "each conversion joins one decode slot");
+    assert_eq!(rec.count("member_drain"), 4, "2 scripted drains + 2 conversion drains");
+
+    // Determinism: the same script replays to the identical event shape.
+    let rec2 = Arc::new(TraceRecorder::new());
+    let p_again = run(elastic_script(), Some(rec2.clone()));
+    assert_eq!(p_elastic, p_again);
+    assert_eq!(event_shape(&rec.events()), event_shape(&rec2.events()));
+}
+
+#[test]
+fn federation_replica_failure_resolves_all_handles_and_spares_survivors() {
+    let h0 = FaultHarness::new();
+    let h1 = FaultHarness::new();
+    let rec0 = Arc::new(TraceRecorder::new());
+    let rec1 = Arc::new(TraceRecorder::new());
+    let s0 = builder(2, 2)
+        .sim_params(roomy())
+        .observe(rec0.clone())
+        .build_server(h0.engine(harness_arch()), 2)
+        .expect("replica 0 starts");
+    let s1 = builder(2, 2)
+        .sim_params(roomy())
+        .observe(rec1.clone())
+        .build_server(h1.engine(harness_arch()), 2)
+        .expect("replica 1 starts");
+    let s1_state = s1.client();
+    let mut fed = Federation::new(vec![s0, s1]).expect("federation");
+    assert_eq!(fed.n_replicas(), 2);
+    assert_eq!(fed.n_alive(), 2);
+    // Slow both engines so the kill lands while work is in flight: a
+    // 448-token prompt is >= 56 harness steps >= 280ms of injected delay.
+    h0.set_step_delay(Duration::from_millis(5));
+    h1.set_step_delay(Duration::from_millis(2));
+
+    // One quick request on replica 0 finishes *before* the failure; three
+    // heavy ones cannot (their prefills alone outlast the kill window).
+    let mut quick = fed.submit_to(0, &req(4, 64, 1), SubmitOptions::default()).expect("submit");
+    let mut doomed: Vec<_> = (1..=3)
+        .map(|id| fed.submit_to(0, &req(id, 448, 8), SubmitOptions::default()).expect("submit"))
+        .collect();
+    let survivors_reqs: Vec<_> = (11..=14).map(|id| req(id, 256, 4)).collect();
+    let mut survivors: Vec<_> = survivors_reqs
+        .iter()
+        .map(|r| fed.submit_to(1, r, SubmitOptions::default()).expect("submit"))
+        .collect();
+    wait_until(|| rec1.count("decode_assign") == 4, "survivor placements");
+    let placed_before = assignments(&rec1);
+
+    let t0 = Instant::now();
+    loop {
+        if let Some(c) = quick.try_wait() {
+            assert!(matches!(c, Completion::Finished(_)), "quick request finishes: {c:?}");
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "quick request stranded");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Kill replica 0. Every handle routed there resolves; the finished one
+    // keeps its metrics, everything in flight sheds with the replica tag.
+    fed.fail_replica(0).expect("fail replica 0");
+    assert!(!fed.is_alive(0));
+    assert_eq!(fed.n_alive(), 1);
+    assert!(fed.load_of(0).is_none());
+    assert_eq!(fed.route(), Some(1), "routing falls over to the survivor");
+    fed.fail_replica(0).expect("failing a dead replica is a no-op");
+    for h in &mut doomed {
+        match h.wait() {
+            Completion::Shed(reason) => {
+                assert!(reason.contains("replica 0 failed"), "{reason}");
+            }
+            other => panic!("request {} on the dead replica: {other:?}", h.id()),
+        }
+    }
+
+    // Survivors: untouched placements, normal completions, no control
+    // events, pristine router.
+    for h in &mut survivors {
+        match h.wait() {
+            Completion::Finished(_) => {}
+            other => panic!("survivor request {} disturbed: {other:?}", h.id()),
+        }
+    }
+    assert_eq!(assignments(&rec1), placed_before, "survivor placements moved");
+    assert_eq!(rec1.count("cancel"), 0);
+    assert_eq!(rec1.count("shed"), 0);
+    assert_eq!(rec1.count("interrupt"), 0);
+    // A post-failure submission routes to the survivor and completes.
+    let mut late = fed.submit(&req(15, 128, 2)).expect("post-failure submit");
+    assert_eq!(late.replica(), 1);
+    assert!(matches!(late.wait(), Completion::Finished(_)));
+    wait_until(
+        || {
+            let r = s1_state.load();
+            r.active_requests() == 0 && r.in_flight_prefills() == 0
+        },
+        "survivor teardown",
+    );
+    fed.shutdown().expect("federation shutdown");
+}
+
+#[test]
+fn prop_router_membership_interleavings_never_strand_or_double_release() {
+    check(
+        "router-membership-interleavings",
+        Config { cases: 150, ..Config::default() },
+        |g| {
+            let n = g.usize_in(2, 4);
+            let blocks = g.usize_in(8, 40);
+            let mut r = DecodeRouter::new(n, blocks, 16);
+            let mut in_flight: Vec<(usize, usize, u64)> = Vec::new();
+            let mut resident: Vec<(usize, u64)> = Vec::new();
+            let mut next_req = 0u64;
+            for _ in 0..g.usize_in(5, 40) {
+                match g.usize_in(0, 5) {
+                    0 => {
+                        let tokens = g.usize_in(16, blocks * 16);
+                        if let Some(idx) = r.route(tokens, next_req) {
+                            prop_assert!(
+                                r.instance_state(idx).is_active(),
+                                "routed req {next_req} to non-active instance {idx}"
+                            );
+                            in_flight.push((idx, tokens, next_req));
+                        }
+                        next_req += 1;
+                    }
+                    1 => {
+                        if !in_flight.is_empty() {
+                            let k = g.usize_in(0, in_flight.len() - 1);
+                            let (idx, tokens, req) = in_flight.swap_remove(k);
+                            match r.transfer_complete(idx, tokens, req) {
+                                Ok(seq) => resident.push((idx, seq)),
+                                Err(e) => prop_fail!("virtual reservation violated: {e:#}"),
+                            }
+                        }
+                    }
+                    2 => {
+                        if !in_flight.is_empty() {
+                            let k = g.usize_in(0, in_flight.len() - 1);
+                            let (idx, tokens, req) = in_flight.swap_remove(k);
+                            r.cancel(idx, tokens, req);
+                        }
+                    }
+                    3 => {
+                        if !resident.is_empty() {
+                            let k = g.usize_in(0, resident.len() - 1);
+                            let (idx, seq) = resident.swap_remove(k);
+                            r.finish(idx, seq);
+                        }
+                    }
+                    4 => {
+                        r.drain_instance(g.usize_in(0, n - 1));
+                    }
+                    _ => {
+                        r.join_instance(g.usize_in(0, n - 1));
+                    }
+                }
+            }
+            // Resolve everything still open — each exactly once — and the
+            // router must return to pristine on every instance, drained or
+            // not.
+            for (idx, tokens, req) in in_flight.drain(..) {
+                r.cancel(idx, tokens, req);
+            }
+            for (idx, seq) in resident.drain(..) {
+                r.finish(idx, seq);
+            }
+            prop_assert!(r.in_flight_transfers() == 0, "transfers leaked");
+            for i in 0..n {
+                prop_assert!(r.is_drained(i), "instance {i} stranded state");
+            }
+            prop_assert!(
+                r.available_blocks() == r.total_blocks(),
+                "double-release or leak: {} of {} blocks",
+                r.available_blocks(),
+                r.total_blocks()
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_server_membership_scripts_never_strand_requests() {
+    let drains = [
+        MemberAction::DrainDecode(0),
+        MemberAction::DrainDecode(1),
+        MemberAction::DrainPrefill(1),
+        MemberAction::DrainPrefill(2),
+    ];
+    let joins = [
+        MemberAction::JoinDecode(0),
+        MemberAction::JoinDecode(1),
+        MemberAction::JoinPrefill(1),
+        MemberAction::JoinPrefill(2),
+    ];
+    check(
+        "server-membership-scripts",
+        Config { cases: 5, ..Config::default() },
+        |g| {
+            let h = FaultHarness::new();
+            let server = builder(3, 2)
+                .sim_params(roomy())
+                .build_server(h.engine(harness_arch()), 3)
+                .map_err(|e| format!("server start: {e:#}"))?;
+            h.set_step_delay(Duration::from_micros(200));
+            let mut handles = Vec::new();
+            let mut id = 1u64;
+            for _ in 0..g.usize_in(6, 14) {
+                match g.usize_in(0, 4) {
+                    0 | 1 => {
+                        let len = g.pick(&[64usize, 128, 256]);
+                        let out = g.usize_in(1, 4);
+                        match server.submit_async(&req(id, len, out)) {
+                            Ok(hd) => handles.push(hd),
+                            Err(e) => prop_fail!("submit {id} refused: {e:#}"),
+                        }
+                        id += 1;
+                    }
+                    2 => {
+                        // Guarded ops: draining the last active member is
+                        // refused by the server, which is itself the point.
+                        let _ = apply_member_action(&server, g.pick(&drains));
+                    }
+                    3 => {
+                        let _ = apply_member_action(&server, g.pick(&joins));
+                    }
+                    _ => {
+                        if !handles.is_empty() {
+                            let k = g.usize_in(0, handles.len() - 1);
+                            handles[k].cancel();
+                        }
+                    }
+                }
+            }
+            // Rejoin everything so parked admissions can drain, then every
+            // handle must resolve exactly once — no strands, no hangs.
+            for a in joins {
+                let _ = apply_member_action(&server, a);
+            }
+            for hd in &mut handles {
+                let t0 = Instant::now();
+                loop {
+                    if hd.try_wait().is_some() {
+                        break;
+                    }
+                    if t0.elapsed() > Duration::from_secs(10) {
+                        prop_fail!("request {} stranded", hd.id());
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            let t0 = Instant::now();
+            loop {
+                let r = server.router_state();
+                if r.in_flight_transfers() == 0
+                    && r.available_blocks() == r.total_blocks()
+                    && server.n_parked() == 0
+                {
+                    break;
+                }
+                if t0.elapsed() > Duration::from_secs(10) {
+                    prop_fail!(
+                        "router never returned to pristine: {} transfers, {}/{} blocks, {} parked",
+                        r.in_flight_transfers(),
+                        r.available_blocks(),
+                        r.total_blocks(),
+                        server.n_parked()
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            server.shutdown().map_err(|e| format!("shutdown: {e:#}"))?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_seeded_membership_replay_is_deterministic() {
+    check(
+        "membership-replay-determinism",
+        Config { cases: 10, ..Config::default() },
+        |g| {
+            let trace: Vec<Request> = (0..g.usize_in(5, 20))
+                .map(|i| Request {
+                    id: i as u64,
+                    arrival: g.f64_in(0.0, 2.0),
+                    prompt_len: g.usize_in(64, 2048),
+                    output_len: g.usize_in(1, 12),
+                })
+                .collect();
+            let script: Vec<MembershipEvent> = g.vec_of(0, 6, |g| MembershipEvent {
+                at: g.f64_in(0.0, 2.5),
+                action: match g.usize_in(0, 5) {
+                    0 => MemberAction::DrainPrefill(g.usize_in(0, 3)),
+                    1 => MemberAction::JoinPrefill(g.usize_in(0, 3)),
+                    2 => MemberAction::DrainDecode(g.usize_in(0, 3)),
+                    3 => MemberAction::JoinDecode(g.usize_in(0, 3)),
+                    4 => MemberAction::ConvertToDecode {
+                        lane: g.usize_in(0, 3),
+                        inst: g.usize_in(0, 3),
+                    },
+                    _ => MemberAction::ConvertToPrefill {
+                        inst: g.usize_in(0, 3),
+                        lane: g.usize_in(0, 3),
+                    },
+                },
+            });
+            let run = || {
+                let rec = Arc::new(TraceRecorder::new());
+                let mut sim = builder(4, 4)
+                    .sim_params(roomy())
+                    .observe(rec.clone())
+                    .membership(script.clone())
+                    .build_simulation()
+                    .expect("sim builds");
+                let m = sim.run(&trace);
+                (m, event_shape(&rec.events()))
+            };
+            let (m1, shape1) = run();
+            let (m2, shape2) = run();
+            prop_assert!(m1 == m2, "metrics diverged under replay");
+            prop_assert!(shape1 == shape2, "event sequences diverged under replay");
+            prop_assert!(
+                m1.requests.len() == trace.len(),
+                "membership script stranded {} of {} requests",
+                trace.len() - m1.requests.len(),
+                trace.len()
+            );
+            Ok(())
+        },
+    );
+}

@@ -17,7 +17,7 @@ use tetris::latency::prefill::{PrefillModel, SpCoeffs};
 use tetris::runtime::Engine;
 use tetris::sched::DecodeRouter;
 use tetris::serve::ServeRequest;
-use tetris::sim::SimParams;
+use tetris::sim::{MemberAction, MembershipEvent, SimParams};
 use tetris::util::rng::Pcg64;
 use tetris::workload::Request;
 
@@ -257,6 +257,74 @@ fn decode_assign_precedes_transfer_per_request() {
     }
     assert_eq!(rec.count("decode_assign"), 12);
     assert_eq!(rec.count("transfer"), 12);
+}
+
+#[test]
+fn membership_round_trip_preserves_placements_bit_for_bit() {
+    // The elastic-membership parity pin: a static-membership cluster that
+    // merely *passed through* a drain/rejoin round-trip must place exactly
+    // like one that never heard of membership. Elasticity is pure
+    // scheduling state — when every member is Active, the masked pool view
+    // and the translated placement path must be bit-for-bit the code path
+    // the fixed cluster ran.
+    let shapes = burst_shapes(0x717e, 40);
+
+    // Server leg: round-trip both roles before the burst.
+    let run_server = |round_trip: bool| {
+        let rec = Arc::new(TraceRecorder::new());
+        let engine = Arc::new(Engine::stub_default());
+        let mut server =
+            parity_builder(rec.clone()).build_server(engine, 4).expect("server starts");
+        if round_trip {
+            server.drain_decode(2).expect("drain decode");
+            server.drain_prefill(3).expect("drain prefill");
+            server.join_decode(2).expect("rejoin decode");
+            server.join_prefill(3).expect("rejoin prefill");
+        }
+        let m = server.run_trace(&serve_requests(&shapes), 0.0).expect("trace");
+        assert_eq!(m.requests.len(), 40);
+        server.shutdown().unwrap();
+        assignments(&rec)
+    };
+    let static_assign = run_server(false);
+    assert_eq!(static_assign.len(), 40);
+    assert_eq!(
+        run_server(true),
+        static_assign,
+        "a membership round-trip must not perturb live placements"
+    );
+
+    // Sim leg: a scripted drain/rejoin round-trip that completes before the
+    // first arrival must be invisible to the whole run.
+    let run_sim = |script: Vec<MembershipEvent>| {
+        let rec = Arc::new(TraceRecorder::new());
+        let mut sim =
+            parity_builder(rec.clone()).membership(script).build_simulation().expect("sim");
+        let trace: Vec<Request> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(prompt, out))| Request {
+                id: i as u64,
+                arrival: 1.0,
+                prompt_len: prompt,
+                output_len: out,
+            })
+            .collect();
+        let m = sim.run(&trace);
+        assert_eq!(m.requests.len(), 40);
+        assignments(&rec)
+    };
+    let script = vec![
+        MembershipEvent { at: 0.0, action: MemberAction::DrainDecode(1) },
+        MembershipEvent { at: 0.2, action: MemberAction::DrainPrefill(3) },
+        MembershipEvent { at: 0.5, action: MemberAction::JoinDecode(1) },
+        MembershipEvent { at: 0.5, action: MemberAction::JoinPrefill(3) },
+    ];
+    assert_eq!(
+        run_sim(script),
+        run_sim(Vec::new()),
+        "a pre-arrival membership round-trip must be invisible to sim placements"
+    );
 }
 
 #[test]

@@ -15,6 +15,7 @@ use tetris::metrics::{max_sustainable_rate, SloCriterion};
 use tetris::sched::{ImprovementController, RateProfile};
 use tetris::util::bench::Table;
 use tetris::util::cli::Args;
+use tetris::util::json::Json;
 use tetris::util::rng::Pcg64;
 use tetris::util::stats::percentile_sorted;
 use tetris::workload::{scale_rate, Request, TraceKind, WorkloadGen};
@@ -48,6 +49,16 @@ fn throughput_from_events(rec: &TraceRecorder, trace: &[Request]) -> f64 {
 fn main() {
     let args = Args::from_env(&[]);
     let n = args.usize_or("n", 120);
+    // `--policies a,b,c` restricts the comparison set (the CI perf gate
+    // runs only tetris-cdsp vs fixed-sp8 to keep wall time bounded);
+    // fixed-sp8 is always included as the throughput reference.
+    let policies: Vec<String> = args
+        .str_or("policies", "tetris-cdsp,loongserve-disagg,fixed-sp8,fixed-sp16")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut summary = Json::obj().set("n", n);
     for kind in [TraceKind::Short, TraceKind::Medium] {
         let gen = WorkloadGen::paper_trace(kind);
         let mut rng = Pcg64::new(10);
@@ -74,22 +85,35 @@ fn main() {
         println!("\n=== Fig. 10 [{} trace] (threshold {:.1}s) ===", kind.name(), slo.threshold());
         let mut t = Table::new(&["policy", "critical rate", "tok/s at critical rate", "vs fixed-sp8"]);
         let mut rows = Vec::new();
-        for policy in ["tetris-cdsp", "loongserve-disagg", "fixed-sp8", "fixed-sp16"] {
+        for policy in &policies {
             let cap = max_sustainable_rate(&rates, &slo, |r| p99_from_events(&run(policy, r).0))
                 .unwrap_or(0.25);
             let (rec, trace) = run(policy, cap);
             let thru = throughput_from_events(&rec, &trace);
-            rows.push((policy.to_string(), cap, thru));
+            rows.push((policy.clone(), cap, thru));
         }
         let base_thru = rows.iter().find(|r| r.0 == "fixed-sp8").map(|r| r.2).unwrap_or(1.0);
-        for (name, cap, thru) in rows {
+        for (name, cap, thru) in &rows {
             t.row(vec![
-                name,
+                name.clone(),
                 format!("{cap:.2}"),
                 format!("{thru:.0}"),
                 format!("{:.2}x", thru / base_thru),
             ]);
         }
         t.print();
+        if let Some((_, cap, thru)) = rows.iter().find(|r| r.0 == "tetris-cdsp") {
+            summary = summary
+                .set(&format!("tetris_capacity_{}", kind.name()), *cap)
+                .set(&format!("tetris_throughput_{}", kind.name()), *thru)
+                .set(&format!("tetris_vs_fixed8_{}", kind.name()), *thru / base_thru);
+        }
+    }
+    if let Some(out) = args.get("out") {
+        if summary.to_file(std::path::Path::new(out)).is_err() {
+            eprintln!("failed to write {out}");
+            std::process::exit(1);
+        }
+        println!("summary written to {out}");
     }
 }

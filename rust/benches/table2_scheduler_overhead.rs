@@ -2,22 +2,31 @@
 //!
 //! The paper reports avg/max ≤ 86.8 µs up to SP=128 — the scheduler must
 //! meet online real-time requirements. Random request lengths + random
-//! instance queuing delays, 1000 trials per SP size, exactly as Sec. 7.4.
+//! instance queuing delays, `--trials` trials per SP size (default 1000),
+//! exactly as Sec. 7.4. `--out` additionally emits the cross-SP summary
+//! (`sched_avg_us`: mean of the per-SP averages, `sched_max_us`: worst
+//! single schedule call) as JSON for the CI perf-trajectory gate.
 
+use std::time::Instant;
 use tetris::cluster::PoolView;
 use tetris::config::SchedConfig;
 use tetris::latency::a100_model_for;
 use tetris::modelcfg::ModelArch;
 use tetris::sched::CdspScheduler;
 use tetris::util::bench::{black_box, Table};
+use tetris::util::cli::Args;
+use tetris::util::json::Json;
 use tetris::util::rng::Pcg64;
-use std::time::Instant;
 
 fn main() {
+    let args = Args::from_env(&[]);
+    let trials = args.usize_or("trials", 1000).max(1);
     println!("=== Table 2: scheduler overhead vs max SP size ===");
     let arch = ModelArch::llama3_8b();
     let mut t = Table::new(&["max SP", "avg (us)", "max (us)", "paper avg/max (us)"]);
     let paper = [(8, "22.8/52.5"), (16, "25.8/86.8"), (32, "22.9/53.4"), (64, "24.9/45.1"), (128, "30.6/73.7")];
+    let mut avgs = Vec::new();
+    let mut worst_overall = 0.0f64;
     for &(max_sp, paper_cell) in &paper {
         let sp_candidates: Vec<usize> =
             (0..=7).map(|e| 1usize << e).filter(|&s| s <= max_sp).collect();
@@ -30,7 +39,6 @@ fn main() {
         let mut pool = PoolView::idle(n_nodes.max(1), per_node.min(max_sp));
         let mut rng = Pcg64::new(0x7ab1e2 + max_sp as u64);
 
-        let trials = 1000;
         let mut total = 0.0f64;
         let mut worst = 0.0f64;
         for _ in 0..trials {
@@ -45,12 +53,27 @@ fn main() {
             total += dt;
             worst = worst.max(dt);
         }
+        let avg = total / trials as f64;
+        avgs.push(avg);
+        worst_overall = worst_overall.max(worst);
         t.row(vec![
             max_sp.to_string(),
-            format!("{:.1}", total / trials as f64),
+            format!("{avg:.1}"),
             format!("{worst:.1}"),
             paper_cell.to_string(),
         ]);
     }
     t.print();
+    if let Some(out) = args.get("out") {
+        let sched_avg_us = avgs.iter().sum::<f64>() / avgs.len() as f64;
+        let j = Json::obj()
+            .set("trials", trials)
+            .set("sched_avg_us", sched_avg_us)
+            .set("sched_max_us", worst_overall);
+        if j.to_file(std::path::Path::new(out)).is_err() {
+            eprintln!("failed to write {out}");
+            std::process::exit(1);
+        }
+        println!("summary written to {out}");
+    }
 }

@@ -149,6 +149,22 @@ impl RoleController {
     }
 }
 
+/// Configuration for the dispatcher-side background role-control loop:
+/// the [`RoleController`] policy plus the hysteresis cooldown that keeps
+/// it from flapping roles back and forth on an oscillating load signal.
+///
+/// Passed to the builder via `TetrisBuilder::role_control`; the live
+/// dispatcher then re-evaluates the controller on its idle ticks and
+/// after each message, applying at most one conversion per `cooldown`
+/// window (see `docs/ARCHITECTURE.md` § "Experiment harness").
+#[derive(Clone, Debug)]
+pub struct RoleControlConfig {
+    /// The conversion policy (trigger factor, role minima, idle floor).
+    pub controller: RoleController,
+    /// Minimum wall-clock seconds between two applied conversions.
+    pub cooldown: f64,
+}
+
 /// The pending-override slot a federation keeps per routed request: set
 /// exactly once, when the owning replica fails before the request
 /// finished.

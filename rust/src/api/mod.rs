@@ -121,13 +121,13 @@ pub use admission::{
     ScanOutcome, SubmitOptions,
 };
 pub use crate::kvbroker::{KvBroker, KvBrokerConfig};
-pub use elastic::{Federation, FederationHandle, RoleAction, RoleController};
+pub use elastic::{Federation, FederationHandle, RoleAction, RoleControlConfig, RoleController};
 pub use observer::{Observer, TraceEvent, TraceRecorder};
 pub use registry::{PolicyCtx, PolicyFactory, PolicyRegistry, PolicySpec};
 
 use crate::baselines::PrefillScheduler;
 use crate::cluster::DispatchClock;
-use crate::config::{ClusterConfig, Config, SchedConfig};
+use crate::config::{ClusterConfig, Config, SchedConfig, TuningConfig};
 use crate::latency::{a100_model_for, DecodeModel, PrefillModel, TransferModel};
 use crate::metrics::RunMetrics;
 use crate::modelcfg::ModelArch;
@@ -179,13 +179,23 @@ impl Tetris {
     }
 
     /// Build from a (possibly file-loaded) [`Config`]: model resolved by
-    /// name, policy carried over.
+    /// name, policy and improvement rate carried over, and — when the
+    /// config carries a `tuning` section (e.g. one exported by
+    /// [`crate::experiment::TunedProfile`]) — every serving knob applied:
+    /// admission thresholds, `deadline_safety`, `starvation_bound`, the KV
+    /// borrow cap, and the optional background role controller.
     pub fn from_config(cfg: &Config) -> Result<TetrisBuilder> {
         let arch = ModelArch::by_name(&cfg.model)
             .ok_or_else(|| anyhow!("unknown model '{}' in config", cfg.model))?;
-        Ok(TetrisBuilder::from_parts(arch, cfg.cluster.clone(), cfg.sched.clone())
+        let mut b = TetrisBuilder::from_parts(arch, cfg.cluster.clone(), cfg.sched.clone())
             .policy(&cfg.policy.name())
-            .seed(cfg.seed))
+            .controller(ImprovementController::fixed(cfg.sched.improvement_rate))
+            .seed(cfg.seed);
+        if let Some(t) = &cfg.tuning {
+            t.validate()?;
+            b = b.tuning(t);
+        }
+        Ok(b)
     }
 }
 
@@ -210,6 +220,7 @@ pub struct TetrisBuilder {
     kv_broker: KvBrokerConfig,
     shard_streams: usize,
     membership: Vec<MembershipEvent>,
+    role_control: Option<RoleControlConfig>,
 }
 
 impl TetrisBuilder {
@@ -234,6 +245,7 @@ impl TetrisBuilder {
             kv_broker: KvBrokerConfig::disabled(),
             shard_streams: 1,
             membership: Vec::new(),
+            role_control: None,
         }
     }
 
@@ -360,6 +372,55 @@ impl TetrisBuilder {
         self
     }
 
+    /// Run a background role-conversion control loop on the live server's
+    /// dispatcher: every idle tick (and after every message) the given
+    /// [`RoleController`] re-reads the cached load snapshot and the
+    /// membership states and applies at most one prefill↔decode
+    /// conversion per `cooldown` seconds — the hysteresis window that
+    /// keeps an oscillating load signal from flapping roles back and
+    /// forth. Conversions go through the same membership surface as
+    /// `Server::convert_*`, so the usual guards and observer events
+    /// apply. Live server only; the simulator scripts membership via
+    /// [`TetrisBuilder::membership`].
+    pub fn role_control(mut self, controller: RoleController, cooldown: f64) -> Self {
+        self.role_control = Some(RoleControlConfig { controller, cooldown });
+        self
+    }
+
+    /// Apply a whole [`TuningConfig`] — the serving knobs an exported
+    /// [`crate::experiment::TunedProfile`] carries — in one call:
+    /// `deadline_safety`, `starvation_bound`, admission thresholds, the
+    /// KV borrow cap (0 leaves the broker disabled), and the optional
+    /// background role controller. [`Tetris::from_config`] routes a
+    /// config file's `tuning` section through here.
+    pub fn tuning(mut self, t: &TuningConfig) -> Self {
+        self = self.deadline_safety(t.deadline_safety).starvation_bound(t.starvation_bound);
+        let adm = t.admission;
+        self = self.admission(move || -> Box<dyn AdmissionController> {
+            Box::new(admission::QosAdmission {
+                batch_park_occupancy: adm.batch_park_occupancy,
+                best_effort_shed_occupancy: adm.best_effort_shed_occupancy,
+                best_effort_inflight_per_lane: adm.best_effort_inflight_per_lane,
+                max_parked: adm.max_parked,
+            })
+        });
+        if t.kv_borrow_cap > 0 {
+            self = self.kv_broker(KvBrokerConfig::enabled(t.kv_borrow_cap));
+        }
+        if let Some(r) = &t.role {
+            self = self.role_control(
+                RoleController {
+                    invert_factor: r.invert_factor,
+                    min_prefill: r.min_prefill,
+                    min_decode: r.min_decode,
+                    min_pressure: r.min_pressure,
+                },
+                r.cooldown,
+            );
+        }
+        self
+    }
+
     /// Scripted membership events for [`TetrisBuilder::build_simulation`]:
     /// elastic scale-up/down and prefill↔decode role conversions applied on
     /// the simulator's virtual clock (see [`MembershipEvent`]). The default
@@ -433,6 +494,12 @@ impl TetrisBuilder {
     /// The configured model's name (read access for tooling).
     pub fn model_name(&self) -> &str {
         &self.arch.name
+    }
+
+    /// The builder's scheduler knobs (read access for tooling; the
+    /// experiment harness seeds its baseline profile from these).
+    pub fn sched_ref(&self) -> &SchedConfig {
+        &self.sched
     }
 
     fn validate_common(&self) -> Result<()> {
@@ -615,6 +682,7 @@ impl TetrisBuilder {
             (self.admission)(),
             self.starvation_bound,
             self.deadline_safety,
+            self.role_control.clone(),
             self.observers.clone(),
         )
     }

@@ -222,6 +222,226 @@ impl SchedConfig {
     }
 }
 
+/// [`crate::api::QosAdmission`] thresholds as plain config data: the four
+/// knobs that were builder-only before the tuning harness existed. All
+/// fields mirror the controller's defaults, so a config without an
+/// `admission` override reproduces stock admission bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionThresholds {
+    /// KV occupancy in `(0, 1]` at which `Batch` requests park.
+    pub batch_park_occupancy: f64,
+    /// KV occupancy in `(0, 1]` at which `BestEffort` requests are shed.
+    pub best_effort_shed_occupancy: f64,
+    /// In-flight prefills per lane above which `BestEffort` sheds (>= 1).
+    pub best_effort_inflight_per_lane: usize,
+    /// Parked-queue length at which non-`Interactive` requests shed.
+    pub max_parked: usize,
+}
+
+impl Default for AdmissionThresholds {
+    fn default() -> Self {
+        AdmissionThresholds {
+            batch_park_occupancy: 0.90,
+            best_effort_shed_occupancy: 0.75,
+            best_effort_inflight_per_lane: 4,
+            max_parked: 1024,
+        }
+    }
+}
+
+impl AdmissionThresholds {
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("batch_park_occupancy", self.batch_park_occupancy)
+            .set("best_effort_shed_occupancy", self.best_effort_shed_occupancy)
+            .set("best_effort_inflight_per_lane", self.best_effort_inflight_per_lane)
+            .set("max_parked", self.max_parked)
+    }
+
+    /// Deserialize from JSON (all fields required).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(AdmissionThresholds {
+            batch_park_occupancy: j.req_f64("batch_park_occupancy")?,
+            best_effort_shed_occupancy: j.req_f64("best_effort_shed_occupancy")?,
+            best_effort_inflight_per_lane: j.req_usize("best_effort_inflight_per_lane")?,
+            max_parked: j.req_usize("max_parked")?,
+        })
+    }
+
+    /// Reject degenerate thresholds with a descriptive error.
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("batch_park_occupancy", self.batch_park_occupancy),
+            ("best_effort_shed_occupancy", self.best_effort_shed_occupancy),
+        ] {
+            anyhow::ensure!(
+                v > 0.0 && v <= 1.0 && v.is_finite(),
+                "admission.{name} must be in (0, 1], got {v}"
+            );
+        }
+        anyhow::ensure!(
+            self.best_effort_inflight_per_lane >= 1,
+            "admission.best_effort_inflight_per_lane must be >= 1"
+        );
+        Ok(())
+    }
+}
+
+/// [`crate::api::RoleController`] trigger/minima plus the background
+/// control loop's hysteresis cooldown, as plain config data. Present in a
+/// config's `tuning.role` section only when the live server should run the
+/// dispatcher-side role-conversion loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoleControlParams {
+    /// A role flips when one side's busiest active lane clock exceeds the
+    /// other side's by this factor (> 1).
+    pub invert_factor: f64,
+    /// Minimum active prefill lanes the controller leaves behind (>= 1).
+    pub min_prefill: usize,
+    /// Minimum active decode instances the controller leaves behind (>= 1).
+    pub min_decode: usize,
+    /// Absolute pressure floor (seconds of lane busy time) below which the
+    /// cluster counts as idle and no conversion fires.
+    pub min_pressure: f64,
+    /// Hysteresis cooldown (seconds): minimum wall time between two
+    /// applied conversions, so an oscillating load signal cannot flap
+    /// roles back and forth.
+    pub cooldown: f64,
+}
+
+impl Default for RoleControlParams {
+    fn default() -> Self {
+        RoleControlParams {
+            invert_factor: 2.0,
+            min_prefill: 1,
+            min_decode: 1,
+            min_pressure: 1e-3,
+            cooldown: 1.0,
+        }
+    }
+}
+
+impl RoleControlParams {
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("invert_factor", self.invert_factor)
+            .set("min_prefill", self.min_prefill)
+            .set("min_decode", self.min_decode)
+            .set("min_pressure", self.min_pressure)
+            .set("cooldown", self.cooldown)
+    }
+
+    /// Deserialize from JSON (all fields required).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(RoleControlParams {
+            invert_factor: j.req_f64("invert_factor")?,
+            min_prefill: j.req_usize("min_prefill")?,
+            min_decode: j.req_usize("min_decode")?,
+            min_pressure: j.req_f64("min_pressure")?,
+            cooldown: j.req_f64("cooldown")?,
+        })
+    }
+
+    /// Reject degenerate role-control parameters.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.invert_factor > 1.0 && self.invert_factor.is_finite(),
+            "role.invert_factor must be > 1, got {}",
+            self.invert_factor
+        );
+        anyhow::ensure!(self.min_prefill >= 1, "role.min_prefill must be >= 1");
+        anyhow::ensure!(self.min_decode >= 1, "role.min_decode must be >= 1");
+        anyhow::ensure!(
+            self.min_pressure >= 0.0 && self.min_pressure.is_finite(),
+            "role.min_pressure must be >= 0"
+        );
+        anyhow::ensure!(
+            self.cooldown >= 0.0 && self.cooldown.is_finite(),
+            "role.cooldown must be >= 0"
+        );
+        Ok(())
+    }
+}
+
+/// The serving knobs that were builder-only before PR 8 — admission
+/// thresholds, the deadline monitor's safety factor, the anti-starvation
+/// bound, the KV-broker borrow cap, and the optional background role
+/// controller — exposed in the config file format so an exported
+/// [`crate::experiment::TunedProfile`] round-trips through
+/// `Tetris::from_config`. A config without a `tuning` section keeps the
+/// stock defaults for all of them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningConfig {
+    /// Safety factor in `(0, 1]` on the deadline monitor's estimated TTFT
+    /// lower-bound terms.
+    pub deadline_safety: f64,
+    /// Scans a parked `BestEffort` request may be bypassed before it jumps
+    /// to the front of re-admission.
+    pub starvation_bound: usize,
+    /// QoS admission thresholds.
+    pub admission: AdmissionThresholds,
+    /// Background role-conversion control loop; `None` disables it.
+    pub role: Option<RoleControlParams>,
+    /// Per-instance KV borrow/lend cap in blocks; 0 disables the broker.
+    pub kv_borrow_cap: usize,
+}
+
+impl Default for TuningConfig {
+    fn default() -> Self {
+        TuningConfig {
+            deadline_safety: crate::latency::DEFAULT_DEADLINE_SAFETY,
+            starvation_bound: crate::serve::DEFAULT_STARVATION_BOUND,
+            admission: AdmissionThresholds::default(),
+            role: None,
+            kv_borrow_cap: 0,
+        }
+    }
+}
+
+impl TuningConfig {
+    /// Serialize to JSON (`role` omitted when `None`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("deadline_safety", self.deadline_safety)
+            .set("starvation_bound", self.starvation_bound)
+            .set("admission", self.admission.to_json())
+            .set("kv_borrow_cap", self.kv_borrow_cap);
+        if let Some(r) = &self.role {
+            j = j.set("role", r.to_json());
+        }
+        j
+    }
+
+    /// Deserialize from JSON (`role` optional, everything else required).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(TuningConfig {
+            deadline_safety: j.req_f64("deadline_safety")?,
+            starvation_bound: j.req_usize("starvation_bound")?,
+            admission: AdmissionThresholds::from_json(
+                j.get("admission").ok_or_else(|| anyhow::anyhow!("missing admission"))?,
+            )?,
+            role: j.get("role").map(RoleControlParams::from_json).transpose()?,
+            kv_borrow_cap: j.req_usize("kv_borrow_cap")?,
+        })
+    }
+
+    /// Reject degenerate tuning values with a descriptive error.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.deadline_safety > 0.0 && self.deadline_safety <= 1.0,
+            "tuning.deadline_safety must be in (0, 1], got {}",
+            self.deadline_safety
+        );
+        self.admission.validate()?;
+        if let Some(r) = &self.role {
+            r.validate()?;
+        }
+        Ok(())
+    }
+}
+
 /// Top-level experiment/serving config.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -235,6 +455,10 @@ pub struct Config {
     pub policy: Policy,
     /// Workload-synthesis seed.
     pub seed: u64,
+    /// Optional serving-knob overrides (admission, deadline safety,
+    /// starvation bound, KV borrow cap, role control). `None` keeps every
+    /// stock default — old config files load unchanged.
+    pub tuning: Option<TuningConfig>,
 }
 
 impl Config {
@@ -246,6 +470,7 @@ impl Config {
             sched: SchedConfig::default(),
             policy: Policy::Cdsp,
             seed: 42,
+            tuning: None,
         }
     }
 
@@ -260,21 +485,31 @@ impl Config {
             sched,
             policy: Policy::Cdsp,
             seed: 42,
+            tuning: None,
         }
     }
 
-    /// Serialize the full configuration to JSON.
+    /// Serialize the full configuration to JSON (`tuning` omitted when
+    /// `None`, so untouched configs serialize exactly as before PR 8).
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("model", self.model.as_str())
             .set("cluster", self.cluster.to_json())
             .set("sched", self.sched.to_json())
             .set("policy", self.policy.name())
-            .set("seed", self.seed)
+            .set("seed", self.seed);
+        if let Some(t) = &self.tuning {
+            j = j.set("tuning", t.to_json());
+        }
+        j
     }
 
     /// Deserialize a full configuration from JSON.
     pub fn from_json(j: &Json) -> Result<Self> {
+        let tuning = j.get("tuning").map(TuningConfig::from_json).transpose()?;
+        if let Some(t) = &tuning {
+            t.validate()?;
+        }
         Ok(Config {
             model: j.req_str("model")?.to_string(),
             cluster: ClusterConfig::from_json(
@@ -286,6 +521,7 @@ impl Config {
             policy: Policy::parse(j.req_str("policy")?)
                 .ok_or_else(|| anyhow::anyhow!("unknown policy"))?,
             seed: j.req_f64("seed")? as u64,
+            tuning,
         })
     }
 
@@ -356,5 +592,67 @@ mod tests {
         c.save(&p).unwrap();
         let back = Config::load(&p).unwrap();
         assert_eq!(back.cluster, c.cluster);
+    }
+
+    fn tuned_config() -> Config {
+        let mut c = Config::paper_8b();
+        c.tuning = Some(TuningConfig {
+            deadline_safety: 0.85,
+            starvation_bound: 6,
+            admission: AdmissionThresholds {
+                batch_park_occupancy: 0.8,
+                best_effort_shed_occupancy: 0.6,
+                best_effort_inflight_per_lane: 2,
+                max_parked: 256,
+            },
+            role: Some(RoleControlParams {
+                invert_factor: 3.0,
+                min_prefill: 2,
+                min_decode: 1,
+                min_pressure: 0.01,
+                cooldown: 0.5,
+            }),
+            kv_borrow_cap: 32,
+        });
+        c
+    }
+
+    #[test]
+    fn tuning_serialize_load_serialize_equality() {
+        // The satellite-1 contract: every tuned knob survives the file
+        // format bit-for-bit, byte-identical on the second serialization.
+        let dir = std::env::temp_dir().join("tetris_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tuned.json");
+        let c = tuned_config();
+        c.save(&p).unwrap();
+        let back = Config::load(&p).unwrap();
+        assert_eq!(back.tuning, c.tuning);
+        assert_eq!(back.to_json().to_string(), c.to_json().to_string());
+    }
+
+    #[test]
+    fn tuning_absent_keeps_old_format() {
+        // Pre-PR-8 config files carry no "tuning" key and must keep
+        // loading; serializing a tuning-free config emits no such key.
+        let c = Config::paper_8b();
+        assert!(!c.to_json().to_string().contains("tuning"));
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert!(back.tuning.is_none());
+    }
+
+    #[test]
+    fn tuning_validation_rejects_bad_values() {
+        let mut c = tuned_config();
+        c.tuning.as_mut().unwrap().deadline_safety = 1.5;
+        assert!(Config::from_json(&c.to_json()).is_err());
+
+        let mut c = tuned_config();
+        c.tuning.as_mut().unwrap().admission.batch_park_occupancy = 0.0;
+        assert!(Config::from_json(&c.to_json()).is_err());
+
+        let mut c = tuned_config();
+        c.tuning.as_mut().unwrap().role.as_mut().unwrap().invert_factor = 1.0;
+        assert!(Config::from_json(&c.to_json()).is_err());
     }
 }

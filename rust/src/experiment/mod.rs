@@ -1,0 +1,947 @@
+//! Deterministic auto-tuning: sweep, score, and export serving profiles.
+//!
+//! The default serving constants — admission thresholds, `deadline_safety`,
+//! chunk-size candidates, the starvation bound, the role-controller
+//! trigger — were hand-picked. This module finds them per trace kind
+//! instead:
+//!
+//! 1. a [`ParamSpace`] declares tunable axes over the real builder knobs
+//!    and expands them into a cartesian grid of [`TunedProfile`]s;
+//! 2. an [`Experiment`] replicates a seeded simulation across the grid,
+//!    running trials in parallel on the existing
+//!    [`ThreadPool`](crate::util::threadpool::ThreadPool) — each trial's
+//!    workload RNG is `Pcg64::with_stream(master_seed, trial_index)`, so
+//!    the report is bit-for-bit identical regardless of how threads
+//!    interleave — and optionally refines the grid's best cell via
+//!    simulated annealing on a dedicated RNG stream;
+//! 3. an [`Objective`] scores each trial from recorded
+//!    [`TraceRecorder`] events (TTFT p99, median TBT, shed fraction,
+//!    completion fraction, max sustainable capacity), with hard
+//!    constraint floors that map a violating trial to an infinite score;
+//! 4. the winner and the static-default baseline are re-evaluated on
+//!    *paired* held-out trace streams, and the winner is exported as a
+//!    [`TunedProfile`] whose [`TunedProfile::to_config`] output loads
+//!    straight back through [`Tetris::from_config`](crate::api::Tetris)
+//!    (the `tuning` section of the config file format).
+//!
+//! Scoring runs on the simulator, which has no admission or deadline
+//! layer — the TTFT/TBT/capacity terms react to the scheduler knobs,
+//! while the serve-only knobs (admission thresholds, role cooldown, KV
+//! borrow cap) ride through the grid into the exported profile and take
+//! effect when the profile is served via `build_server`.
+//!
+//! # Seeding scheme
+//!
+//! | stream                        | purpose                               |
+//! |-------------------------------|---------------------------------------|
+//! | `(master_seed, trial_index)`  | trial workload (grid, then annealing) |
+//! | `(master_seed, ANNEAL_STREAM)`| neighbor picks + acceptance draws     |
+//! | `(master_seed, EVAL bases)`   | paired held-out evaluation traces     |
+//!
+//! Infinite scores (constraint violations, build failures) serialize as
+//! JSON `null` — a [`TrialResult`] additionally carries a `feasible`
+//! flag, so reports never depend on parsing infinity back.
+
+use crate::api::{TetrisBuilder, TraceRecorder};
+use crate::config::{Config, RoleControlParams, SchedConfig, TuningConfig};
+use crate::sched::ImprovementController;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats::percentile_sorted;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::{scale_rate, Request, TraceKind, WorkloadGen};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// RNG stream id of the annealing chain (neighbor picks and acceptance
+/// draws), disjoint from every trial-index stream.
+const ANNEAL_STREAM: u64 = u64::MAX;
+
+/// Number of paired held-out trace streams the final baseline-vs-winner
+/// evaluation averages over.
+const EVAL_REPLICAS: u64 = 3;
+
+/// First RNG stream id of the held-out evaluation traces, counted down
+/// from the annealing stream so no realistic grid ever collides with it.
+const EVAL_STREAM_BASE: u64 = u64::MAX - EVAL_REPLICAS;
+
+/// One point in the parameter space: the full set of knobs a trial runs
+/// with and the exact content of an exported profile. The scheduler knobs
+/// (`improvement_rate`, `min_chunk`, `sp_candidates`) live beside the
+/// serving knobs ([`TuningConfig`]) so one profile configures both build
+/// targets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedProfile {
+    /// Minimum marginal improvement rate the SP-expansion throttle
+    /// requires (the builder's fixed [`ImprovementController`] rate).
+    pub improvement_rate: f64,
+    /// Minimum legal CDSP chunk length in tokens.
+    pub min_chunk: usize,
+    /// SP size candidates.
+    pub sp_candidates: Vec<usize>,
+    /// The serving knobs (admission, deadline safety, starvation bound,
+    /// KV borrow cap, optional role control).
+    pub tuning: TuningConfig,
+}
+
+impl TunedProfile {
+    /// The static-default profile for a builder's scheduler knobs: what
+    /// the system runs with when nobody tunes anything. This is the
+    /// baseline every experiment's winner is judged against.
+    pub fn baseline(sched: &SchedConfig) -> Self {
+        TunedProfile {
+            improvement_rate: sched.improvement_rate,
+            min_chunk: sched.min_chunk,
+            sp_candidates: sched.sp_candidates.clone(),
+            tuning: TuningConfig::default(),
+        }
+    }
+
+    /// Apply every knob onto a builder (both build targets): scheduler
+    /// knobs directly, serving knobs via
+    /// [`TetrisBuilder::tuning`](crate::api::TetrisBuilder::tuning).
+    pub fn apply(&self, b: TetrisBuilder) -> TetrisBuilder {
+        b.sp_candidates(self.sp_candidates.clone())
+            .min_chunk(self.min_chunk)
+            .controller(ImprovementController::fixed(self.improvement_rate))
+            .tuning(&self.tuning)
+    }
+
+    /// Export as a loadable [`Config`]: `base`'s model/cluster/policy/seed
+    /// with this profile's scheduler knobs and a `tuning` section —
+    /// `Tetris::from_config` reconstructs the exact tuned builder.
+    pub fn to_config(&self, base: &Config) -> Config {
+        let mut cfg = base.clone();
+        cfg.sched.improvement_rate = self.improvement_rate;
+        cfg.sched.min_chunk = self.min_chunk;
+        cfg.sched.sp_candidates = self.sp_candidates.clone();
+        cfg.tuning = Some(self.tuning.clone());
+        cfg
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let mut sp = Json::arr();
+        for &s in &self.sp_candidates {
+            sp.push(s);
+        }
+        Json::obj()
+            .set("improvement_rate", self.improvement_rate)
+            .set("min_chunk", self.min_chunk)
+            .set("sp_candidates", sp)
+            .set("tuning", self.tuning.to_json())
+    }
+
+    /// Deserialize from JSON (all fields required).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let sp = j
+            .req_arr("sp_candidates")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad sp candidate")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TunedProfile {
+            improvement_rate: j.req_f64("improvement_rate")?,
+            min_chunk: j.req_usize("min_chunk")?,
+            sp_candidates: sp,
+            tuning: TuningConfig::from_json(
+                j.get("tuning").ok_or_else(|| anyhow::anyhow!("missing tuning"))?,
+            )?,
+        })
+    }
+}
+
+/// Tunable axes over the real builder knobs. Every axis is a list of
+/// candidate values; an empty axis keeps the base profile's value and
+/// contributes no grid dimension, so the grid size is the product of the
+/// non-empty axis lengths. The same axes drive both the cartesian grid
+/// and the annealing neighborhood (one single-axis mutation per step).
+#[derive(Clone, Debug, Default)]
+pub struct ParamSpace {
+    /// The profile every axis mutates from (typically
+    /// [`TunedProfile::baseline`]).
+    pub base: TunedProfile,
+    /// SP-expansion improvement-rate candidates.
+    pub improvement_rate: Vec<f64>,
+    /// Minimum CDSP chunk length candidates (tokens).
+    pub min_chunk: Vec<usize>,
+    /// SP candidate-set candidates (each entry is a full candidate list).
+    pub sp_candidates: Vec<Vec<usize>>,
+    /// Deadline-safety factor candidates.
+    pub deadline_safety: Vec<f64>,
+    /// Anti-starvation bound candidates (parked-queue scans).
+    pub starvation_bound: Vec<usize>,
+    /// `Batch` park-occupancy threshold candidates.
+    pub batch_park_occupancy: Vec<f64>,
+    /// `BestEffort` shed-occupancy threshold candidates.
+    pub best_effort_shed_occupancy: Vec<f64>,
+    /// Role-controller invert-factor candidates (activates role control
+    /// on profiles whose base has none).
+    pub invert_factor: Vec<f64>,
+    /// Role-control hysteresis cooldown candidates (seconds).
+    pub role_cooldown: Vec<f64>,
+    /// KV-broker per-instance borrow-cap candidates (blocks; 0 disables).
+    pub kv_borrow_cap: Vec<usize>,
+}
+
+impl Default for TunedProfile {
+    fn default() -> Self {
+        TunedProfile::baseline(&SchedConfig::default())
+    }
+}
+
+/// Expand `profiles` by one axis: cartesian product with `values` (or
+/// unchanged when the axis is empty).
+fn expand<T: Clone>(
+    profiles: Vec<TunedProfile>,
+    values: &[T],
+    apply: impl Fn(&mut TunedProfile, &T),
+) -> Vec<TunedProfile> {
+    if values.is_empty() {
+        return profiles;
+    }
+    let mut out = Vec::with_capacity(profiles.len() * values.len());
+    for p in &profiles {
+        for v in values {
+            let mut q = p.clone();
+            apply(&mut q, v);
+            out.push(q);
+        }
+    }
+    out
+}
+
+impl ParamSpace {
+    /// A space with no axes around `base` (fill in the axes you sweep).
+    pub fn new(base: TunedProfile) -> Self {
+        ParamSpace { base, ..Default::default() }
+    }
+
+    /// Number of grid cells (product of non-empty axis lengths).
+    pub fn n_trials(&self) -> usize {
+        [
+            self.improvement_rate.len(),
+            self.min_chunk.len(),
+            self.sp_candidates.len(),
+            self.deadline_safety.len(),
+            self.starvation_bound.len(),
+            self.batch_park_occupancy.len(),
+            self.best_effort_shed_occupancy.len(),
+            self.invert_factor.len(),
+            self.role_cooldown.len(),
+            self.kv_borrow_cap.len(),
+        ]
+        .iter()
+        .filter(|&&n| n > 0)
+        .product::<usize>()
+        .max(1)
+    }
+
+    /// The full cartesian grid, in a deterministic axis-major order (the
+    /// trial index of each cell is its position here).
+    pub fn grid(&self) -> Vec<TunedProfile> {
+        let mut g = vec![self.base.clone()];
+        g = expand(g, &self.improvement_rate, |p, v| p.improvement_rate = *v);
+        g = expand(g, &self.min_chunk, |p, v| p.min_chunk = *v);
+        g = expand(g, &self.sp_candidates, |p, v| p.sp_candidates = v.clone());
+        g = expand(g, &self.deadline_safety, |p, v| p.tuning.deadline_safety = *v);
+        g = expand(g, &self.starvation_bound, |p, v| p.tuning.starvation_bound = *v);
+        g = expand(g, &self.batch_park_occupancy, |p, v| {
+            p.tuning.admission.batch_park_occupancy = *v;
+        });
+        g = expand(g, &self.best_effort_shed_occupancy, |p, v| {
+            p.tuning.admission.best_effort_shed_occupancy = *v;
+        });
+        g = expand(g, &self.invert_factor, |p, v| {
+            p.tuning.role.get_or_insert_with(RoleControlParams::default).invert_factor = *v;
+        });
+        g = expand(g, &self.role_cooldown, |p, v| {
+            p.tuning.role.get_or_insert_with(RoleControlParams::default).cooldown = *v;
+        });
+        g = expand(g, &self.kv_borrow_cap, |p, v| p.tuning.kv_borrow_cap = *v);
+        g
+    }
+
+    /// A random single-axis mutation of `p`: every axis value that
+    /// differs from `p`'s current value is one candidate move, and `rng`
+    /// picks uniformly among them. With no possible move (every axis
+    /// empty or single-valued at `p`'s value) returns `p` unchanged.
+    pub fn neighbor(&self, p: &TunedProfile, rng: &mut Pcg64) -> TunedProfile {
+        let role = p.tuning.role.unwrap_or_default();
+        let mut moves: Vec<TunedProfile> = Vec::new();
+        let mut push = |q: TunedProfile| moves.push(q);
+        for &v in &self.improvement_rate {
+            if v != p.improvement_rate {
+                let mut q = p.clone();
+                q.improvement_rate = v;
+                push(q);
+            }
+        }
+        for &v in &self.min_chunk {
+            if v != p.min_chunk {
+                let mut q = p.clone();
+                q.min_chunk = v;
+                push(q);
+            }
+        }
+        for v in &self.sp_candidates {
+            if *v != p.sp_candidates {
+                let mut q = p.clone();
+                q.sp_candidates = v.clone();
+                push(q);
+            }
+        }
+        for &v in &self.deadline_safety {
+            if v != p.tuning.deadline_safety {
+                let mut q = p.clone();
+                q.tuning.deadline_safety = v;
+                push(q);
+            }
+        }
+        for &v in &self.starvation_bound {
+            if v != p.tuning.starvation_bound {
+                let mut q = p.clone();
+                q.tuning.starvation_bound = v;
+                push(q);
+            }
+        }
+        for &v in &self.batch_park_occupancy {
+            if v != p.tuning.admission.batch_park_occupancy {
+                let mut q = p.clone();
+                q.tuning.admission.batch_park_occupancy = v;
+                push(q);
+            }
+        }
+        for &v in &self.best_effort_shed_occupancy {
+            if v != p.tuning.admission.best_effort_shed_occupancy {
+                let mut q = p.clone();
+                q.tuning.admission.best_effort_shed_occupancy = v;
+                push(q);
+            }
+        }
+        for &v in &self.invert_factor {
+            if p.tuning.role.is_none() || v != role.invert_factor {
+                let mut q = p.clone();
+                q.tuning.role.get_or_insert_with(RoleControlParams::default).invert_factor = v;
+                push(q);
+            }
+        }
+        for &v in &self.role_cooldown {
+            if p.tuning.role.is_none() || v != role.cooldown {
+                let mut q = p.clone();
+                q.tuning.role.get_or_insert_with(RoleControlParams::default).cooldown = v;
+                push(q);
+            }
+        }
+        for &v in &self.kv_borrow_cap {
+            if v != p.tuning.kv_borrow_cap {
+                let mut q = p.clone();
+                q.tuning.kv_borrow_cap = v;
+                push(q);
+            }
+        }
+        if moves.is_empty() {
+            p.clone()
+        } else {
+            let i = rng.below(moves.len());
+            moves.swap_remove(i)
+        }
+    }
+}
+
+/// The scored signals of one trial, derived entirely from recorded
+/// [`TraceRecorder`] events.
+#[derive(Clone, Copy, Debug)]
+pub struct TrialMetrics {
+    /// 99th-percentile TTFT in seconds (`f64::INFINITY` when no request
+    /// completed prefill).
+    pub ttft_p99: f64,
+    /// Median time-between-tokens in seconds (0 when no request decoded
+    /// two tokens).
+    pub tbt_median: f64,
+    /// Shed arrivals over total arrivals (0 in the simulator, which has
+    /// no admission layer).
+    pub shed_frac: f64,
+    /// Arrivals that completed prefill, over total arrivals.
+    pub completed_frac: f64,
+    /// Max sustainable request rate found on the capacity ladder (0 when
+    /// [`ExperimentParams::capacity_rates`] is empty or the first rung
+    /// already violates the SLO).
+    pub capacity: f64,
+}
+
+impl TrialMetrics {
+    /// The metrics of a trial that could not run (build failure): every
+    /// floor violated, so any [`Objective`] scores it infinite.
+    pub fn infeasible() -> Self {
+        TrialMetrics {
+            ttft_p99: f64::INFINITY,
+            tbt_median: f64::INFINITY,
+            shed_frac: 1.0,
+            completed_frac: 0.0,
+            capacity: 0.0,
+        }
+    }
+
+    /// Serialize to JSON (infinite values become `null`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ttft_p99", self.ttft_p99)
+            .set("tbt_median", self.tbt_median)
+            .set("shed_frac", self.shed_frac)
+            .set("completed_frac", self.completed_frac)
+            .set("capacity", self.capacity)
+    }
+}
+
+/// Weighted composite objective with hard constraint floors. Lower is
+/// better. A trial violating any floor scores `f64::INFINITY` — it can
+/// never win, no matter its weighted terms.
+///
+/// | term             | weight       | direction        |
+/// |------------------|--------------|------------------|
+/// | TTFT p99 (s)     | `w_ttft_p99` | minimized        |
+/// | median TBT (s)   | `w_tbt`      | minimized        |
+/// | shed fraction    | `w_shed`     | minimized        |
+/// | capacity (req/s) | `w_capacity` | maximized (subtracted) |
+#[derive(Clone, Copy, Debug)]
+pub struct Objective {
+    /// Weight on 99th-percentile TTFT.
+    pub w_ttft_p99: f64,
+    /// Weight on median TBT.
+    pub w_tbt: f64,
+    /// Weight on the shed fraction.
+    pub w_shed: f64,
+    /// Weight on max sustainable capacity (subtracted: higher is better).
+    pub w_capacity: f64,
+    /// Hard floor: TTFT p99 above this is a constraint violation.
+    pub ttft_p99_ceiling: f64,
+    /// Hard floor: shed fraction above this is a constraint violation.
+    pub shed_ceiling: f64,
+    /// Hard floor: completion fraction below this is a constraint
+    /// violation.
+    pub completed_floor: f64,
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        Objective {
+            w_ttft_p99: 1.0,
+            w_tbt: 1.0,
+            w_shed: 10.0,
+            w_capacity: 1.0,
+            ttft_p99_ceiling: f64::INFINITY,
+            shed_ceiling: 1.0,
+            completed_floor: 0.0,
+        }
+    }
+}
+
+impl Objective {
+    /// Score one trial (lower is better; `f64::INFINITY` on any floor
+    /// violation, including the always-infeasible metrics of a trial
+    /// whose build failed).
+    pub fn score(&self, m: &TrialMetrics) -> f64 {
+        if m.ttft_p99 > self.ttft_p99_ceiling
+            || m.shed_frac > self.shed_ceiling
+            || m.completed_frac < self.completed_floor
+            || !m.ttft_p99.is_finite()
+        {
+            return f64::INFINITY;
+        }
+        self.w_ttft_p99 * m.ttft_p99 + self.w_tbt * m.tbt_median + self.w_shed * m.shed_frac
+            - self.w_capacity * m.capacity
+    }
+}
+
+/// The workload one experiment replicates per trial.
+#[derive(Clone, Debug)]
+pub struct ExperimentParams {
+    /// Stock trace kind the per-trial workloads are drawn from.
+    pub kind: TraceKind,
+    /// Requests per trial trace.
+    pub n_requests: usize,
+    /// Poisson arrival rate of the trial trace (requests/second).
+    pub rate: f64,
+    /// Ascending rate ladder for the capacity term: the trial's trace is
+    /// re-scaled to each rate and the highest rate whose TTFT p99 stays
+    /// under [`ExperimentParams::capacity_slo`] is the trial's capacity.
+    /// Empty (the default) skips capacity measurement entirely — each
+    /// rung costs one extra simulation run per trial.
+    pub capacity_rates: Vec<f64>,
+    /// TTFT p99 SLO (seconds) the capacity ladder is judged against.
+    pub capacity_slo: f64,
+    /// The experiment's master seed: trial `i` draws its workload from
+    /// `Pcg64::with_stream(master_seed, i)`.
+    pub master_seed: u64,
+}
+
+impl ExperimentParams {
+    /// Default workload: 60 requests at 0.5 req/s, no capacity ladder.
+    pub fn new(kind: TraceKind, master_seed: u64) -> Self {
+        ExperimentParams {
+            kind,
+            n_requests: 60,
+            rate: 0.5,
+            capacity_rates: Vec::new(),
+            capacity_slo: f64::INFINITY,
+            master_seed,
+        }
+    }
+}
+
+/// Simulated-annealing schedule refining the grid's best cell.
+#[derive(Clone, Copy, Debug)]
+pub struct AnnealSchedule {
+    /// Annealing steps (one neighbor trial each).
+    pub steps: usize,
+    /// Initial temperature (in score units).
+    pub t0: f64,
+    /// Multiplicative cooling factor per step, in `(0, 1)`.
+    pub cooling: f64,
+}
+
+impl Default for AnnealSchedule {
+    fn default() -> Self {
+        AnnealSchedule { steps: 8, t0: 1.0, cooling: 0.7 }
+    }
+}
+
+/// Metropolis acceptance, made pure so it is unit-testable under a fixed
+/// draw: a candidate at least as good is always accepted; a worse one is
+/// accepted when `u < exp((current - candidate) / temperature)`, never at
+/// non-positive temperature. `u` is the chain's uniform draw in `[0, 1)`.
+pub fn anneal_accept(current: f64, candidate: f64, temperature: f64, u: f64) -> bool {
+    if candidate <= current {
+        return true;
+    }
+    if temperature <= 0.0 {
+        return false;
+    }
+    u < ((current - candidate) / temperature).exp()
+}
+
+/// One completed trial: the profile, its event-derived metrics, and its
+/// objective score.
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    /// Trial index (grid position, then `grid_len + step` for annealing
+    /// trials) — also the trial's workload RNG stream.
+    pub index: usize,
+    /// The profile the trial ran with.
+    pub profile: TunedProfile,
+    /// Event-derived metrics.
+    pub metrics: TrialMetrics,
+    /// Objective score (lower is better; `f64::INFINITY` = infeasible).
+    pub score: f64,
+    /// Diagnostic note (build error text for infeasible trials).
+    pub note: Option<String>,
+}
+
+impl TrialResult {
+    /// Serialize to JSON. The score key is `null` for infeasible trials;
+    /// `feasible` carries that bit explicitly so nothing ever needs to
+    /// parse infinity back.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("index", self.index)
+            .set("profile", self.profile.to_json())
+            .set("metrics", self.metrics.to_json())
+            .set("score", self.score)
+            .set("feasible", self.score.is_finite());
+        if let Some(n) = &self.note {
+            j = j.set("note", n.as_str());
+        }
+        j
+    }
+}
+
+/// The scores of one profile on the paired held-out evaluation streams.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    /// The evaluated profile.
+    pub profile: TunedProfile,
+    /// Per-stream objective scores, in stream order.
+    pub scores: Vec<f64>,
+    /// Mean of the per-stream scores (infinite if any stream is).
+    pub mean_score: f64,
+}
+
+impl EvalResult {
+    /// Serialize to JSON (infinite scores become `null`; `feasible`
+    /// carries finiteness explicitly).
+    pub fn to_json(&self) -> Json {
+        let mut scores = Json::arr();
+        for &s in &self.scores {
+            scores.push(s);
+        }
+        Json::obj()
+            .set("profile", self.profile.to_json())
+            .set("scores", scores)
+            .set("mean_score", self.mean_score)
+            .set("feasible", self.mean_score.is_finite())
+    }
+}
+
+/// The full deterministic record of one experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentReport {
+    /// Trace kind the experiment tuned for.
+    pub kind: TraceKind,
+    /// The experiment's master seed.
+    pub master_seed: u64,
+    /// Every grid trial, in grid order.
+    pub grid: Vec<TrialResult>,
+    /// Every annealing trial, in chain order (empty without a schedule).
+    pub annealed: Vec<TrialResult>,
+    /// The winning trial (lowest score across grid + annealing; ties
+    /// break to the lowest trial index).
+    pub best: TrialResult,
+    /// The static-default baseline on the held-out evaluation streams.
+    pub baseline_eval: EvalResult,
+    /// The winner on the *same* held-out evaluation streams.
+    pub best_eval: EvalResult,
+}
+
+impl ExperimentReport {
+    /// The winning profile.
+    pub fn best_profile(&self) -> &TunedProfile {
+        &self.best.profile
+    }
+
+    /// Whether the winner strictly beats the static defaults on the
+    /// paired held-out evaluation (the CI acceptance criterion).
+    pub fn improves(&self) -> bool {
+        self.best_eval.mean_score < self.baseline_eval.mean_score
+    }
+
+    /// Serialize the whole report to JSON (deterministic: same grid and
+    /// master seed produce a byte-identical string).
+    pub fn to_json(&self) -> Json {
+        let mut grid = Json::arr();
+        for t in &self.grid {
+            grid.push(t.to_json());
+        }
+        let mut annealed = Json::arr();
+        for t in &self.annealed {
+            annealed.push(t.to_json());
+        }
+        Json::obj()
+            .set("kind", self.kind.name())
+            .set("master_seed", self.master_seed)
+            .set("grid", grid)
+            .set("annealed", annealed)
+            .set("best", self.best.to_json())
+            .set("baseline_eval", self.baseline_eval.to_json())
+            .set("best_eval", self.best_eval.to_json())
+            .set("improves", self.improves())
+    }
+}
+
+/// Run one trial: draw the trial's workload from
+/// `Pcg64::with_stream(master_seed, index)`, apply the profile to a clone
+/// of the base builder, simulate, and score recorded events. A profile
+/// the builder rejects yields an infeasible result carrying the error
+/// text — it loses every comparison but never aborts the sweep.
+fn run_trial(
+    base: &TetrisBuilder,
+    objective: &Objective,
+    params: &ExperimentParams,
+    index: usize,
+    profile: TunedProfile,
+) -> TrialResult {
+    let gen = WorkloadGen::paper_trace(params.kind);
+    let mut rng = Pcg64::with_stream(params.master_seed, index as u64);
+    let trace = gen.generate(params.n_requests, params.rate, &mut rng);
+    let metrics = match measure(base, &profile, &trace, params) {
+        Ok(m) => m,
+        Err(e) => {
+            return TrialResult {
+                index,
+                profile,
+                metrics: TrialMetrics::infeasible(),
+                score: f64::INFINITY,
+                note: Some(e.to_string()),
+            };
+        }
+    };
+    let score = objective.score(&metrics);
+    TrialResult { index, profile, metrics, score, note: None }
+}
+
+/// Simulate `trace` under `profile` and derive the trial metrics from
+/// recorded events (plus the optional capacity ladder).
+fn measure(
+    base: &TetrisBuilder,
+    profile: &TunedProfile,
+    trace: &[Request],
+    params: &ExperimentParams,
+) -> Result<TrialMetrics> {
+    let run_once = |reqs: &[Request]| -> Result<(f64, f64, f64, f64)> {
+        let rec = Arc::new(TraceRecorder::new());
+        let mut sim = profile.apply(base.clone()).observe(rec.clone()).build_simulation()?;
+        sim.run(reqs);
+        let mut ttfts = rec.ttfts_from_events();
+        ttfts.sort_by(|a, b| a.total_cmp(b));
+        let ttft_p99 =
+            if ttfts.is_empty() { f64::INFINITY } else { percentile_sorted(&ttfts, 99.0) };
+        let mut tbts = rec.tbts_from_events();
+        tbts.sort_by(|a, b| a.total_cmp(b));
+        let tbt_median = if tbts.is_empty() { 0.0 } else { percentile_sorted(&tbts, 50.0) };
+        let arrivals = rec.count("arrival").max(1);
+        let shed_frac = rec.count("shed") as f64 / arrivals as f64;
+        let completed_frac = rec.reqs_with("prefill_done").len() as f64 / arrivals as f64;
+        Ok((ttft_p99, tbt_median, shed_frac, completed_frac))
+    };
+    let (ttft_p99, tbt_median, shed_frac, completed_frac) = run_once(trace)?;
+    let mut capacity = 0.0;
+    for &rate in &params.capacity_rates {
+        let (p99, _, _, _) = run_once(&scale_rate(trace, rate))?;
+        if p99 <= params.capacity_slo {
+            capacity = rate;
+        } else {
+            break;
+        }
+    }
+    Ok(TrialMetrics { ttft_p99, tbt_median, shed_frac, completed_frac, capacity })
+}
+
+/// The lowest-scoring trial (ties break to the lowest index), cloned.
+fn best_of<'a>(trials: impl Iterator<Item = &'a TrialResult>) -> Option<TrialResult> {
+    trials
+        .min_by(|a, b| a.score.total_cmp(&b.score).then(a.index.cmp(&b.index)))
+        .cloned()
+}
+
+/// A reproducible auto-tuning run: replicate a seeded simulation across
+/// [`ParamSpace::grid`] in parallel, optionally refine by simulated
+/// annealing, evaluate the winner against the static-default baseline on
+/// paired held-out streams, and report everything. See the module docs
+/// for the seeding scheme.
+pub struct Experiment {
+    /// The builder every trial forks (cluster, model, policy — everything
+    /// the profiles do not override).
+    pub base: TetrisBuilder,
+    /// The tunable axes.
+    pub space: ParamSpace,
+    /// The trial-scoring objective.
+    pub objective: Objective,
+    /// The per-trial workload.
+    pub params: ExperimentParams,
+    /// Optional annealing refinement from the grid's best cell.
+    pub anneal: Option<AnnealSchedule>,
+}
+
+impl Experiment {
+    /// Run the experiment on `pool`. The grid fans out via
+    /// [`ThreadPool::scope_map`] (slot-indexed, order-preserving) and each
+    /// trial's RNG depends only on `(master_seed, trial_index)`, so the
+    /// returned report — including its JSON serialization — is
+    /// bit-for-bit identical for any pool size or thread interleaving.
+    /// The annealing chain is inherently sequential and runs on the
+    /// calling thread.
+    pub fn run(&self, pool: &ThreadPool) -> Result<ExperimentReport> {
+        let cells = self.space.grid();
+        anyhow::ensure!(!cells.is_empty(), "empty parameter grid");
+        let n_grid = cells.len();
+        let base = self.base.clone();
+        let objective = self.objective;
+        let params = self.params.clone();
+        let inputs: Vec<(usize, TunedProfile)> = cells.into_iter().enumerate().collect();
+        let grid: Vec<TrialResult> =
+            pool.scope_map(inputs, move |(i, prof)| run_trial(&base, &objective, &params, i, prof));
+        let mut best = best_of(grid.iter()).expect("non-empty grid");
+
+        let mut annealed = Vec::new();
+        if let Some(s) = self.anneal {
+            let mut rng = Pcg64::with_stream(self.params.master_seed, ANNEAL_STREAM);
+            let mut current = best.clone();
+            let mut temp = s.t0;
+            for step in 0..s.steps {
+                let cand_profile = self.space.neighbor(&current.profile, &mut rng);
+                let cand = run_trial(
+                    &self.base,
+                    &self.objective,
+                    &self.params,
+                    n_grid + step,
+                    cand_profile,
+                );
+                let u = rng.f64();
+                if anneal_accept(current.score, cand.score, temp, u) {
+                    current = cand.clone();
+                }
+                annealed.push(cand);
+                temp *= s.cooling;
+            }
+            if let Some(b) = best_of(annealed.iter()) {
+                if b.score < best.score {
+                    best = b;
+                }
+            }
+        }
+
+        let baseline = TunedProfile::baseline(self.base.sched_ref());
+        let baseline_eval = self.evaluate(&baseline);
+        let best_eval = self.evaluate(&best.profile);
+        Ok(ExperimentReport {
+            kind: self.params.kind,
+            master_seed: self.params.master_seed,
+            grid,
+            annealed,
+            best,
+            baseline_eval,
+            best_eval,
+        })
+    }
+
+    /// Score `profile` on the [`EVAL_REPLICAS`] held-out trace streams.
+    /// Both the baseline and the winner go through this with identical
+    /// streams, so the comparison is paired: same traces, different
+    /// knobs.
+    fn evaluate(&self, profile: &TunedProfile) -> EvalResult {
+        let gen = WorkloadGen::paper_trace(self.params.kind);
+        let mut scores = Vec::with_capacity(EVAL_REPLICAS as usize);
+        for k in 0..EVAL_REPLICAS {
+            let mut rng = Pcg64::with_stream(self.params.master_seed, EVAL_STREAM_BASE + k);
+            let trace = gen.generate(self.params.n_requests, self.params.rate, &mut rng);
+            let score = match measure(&self.base, profile, &trace, &self.params) {
+                Ok(m) => self.objective.score(&m),
+                Err(_) => f64::INFINITY,
+            };
+            scores.push(score);
+        }
+        let mean_score = scores.iter().sum::<f64>() / scores.len() as f64;
+        EvalResult { profile: profile.clone(), scores, mean_score }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(ttft: f64, tbt: f64, shed: f64, done: f64, cap: f64) -> TrialMetrics {
+        TrialMetrics {
+            ttft_p99: ttft,
+            tbt_median: tbt,
+            shed_frac: shed,
+            completed_frac: done,
+            capacity: cap,
+        }
+    }
+
+    #[test]
+    fn objective_floors_reject() {
+        let obj = Objective {
+            ttft_p99_ceiling: 5.0,
+            shed_ceiling: 0.2,
+            completed_floor: 0.5,
+            ..Default::default()
+        };
+        assert!(obj.score(&metrics(1.0, 0.1, 0.0, 1.0, 0.0)).is_finite());
+        assert_eq!(obj.score(&metrics(6.0, 0.1, 0.0, 1.0, 0.0)), f64::INFINITY);
+        assert_eq!(obj.score(&metrics(1.0, 0.1, 0.3, 1.0, 0.0)), f64::INFINITY);
+        assert_eq!(obj.score(&metrics(1.0, 0.1, 0.0, 0.4, 0.0)), f64::INFINITY);
+        assert_eq!(obj.score(&TrialMetrics::infeasible()), f64::INFINITY);
+    }
+
+    #[test]
+    fn objective_weights_order() {
+        let obj = Objective::default();
+        // Lower TTFT wins, everything else equal.
+        let fast = obj.score(&metrics(1.0, 0.1, 0.0, 1.0, 0.0));
+        let slow = obj.score(&metrics(2.0, 0.1, 0.0, 1.0, 0.0));
+        assert!(fast < slow);
+        // Higher capacity lowers (improves) the score.
+        let cap = obj.score(&metrics(1.0, 0.1, 0.0, 1.0, 2.0));
+        assert!(cap < fast);
+        // Shedding is penalized 10x per unit.
+        let shed = obj.score(&metrics(1.0, 0.1, 0.1, 1.0, 0.0));
+        assert!((shed - fast - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn anneal_accept_truth_table() {
+        // Better (or equal) candidates are always accepted.
+        assert!(anneal_accept(5.0, 4.0, 1.0, 0.999));
+        assert!(anneal_accept(5.0, 5.0, 0.0, 0.999));
+        assert!(anneal_accept(f64::INFINITY, f64::INFINITY, 1.0, 0.999));
+        // Worse by 1.0 at T=1.0: threshold e^-1 ≈ 0.3679.
+        assert!(anneal_accept(4.0, 5.0, 1.0, 0.3));
+        assert!(!anneal_accept(4.0, 5.0, 1.0, 0.4));
+        // Zero temperature never accepts worse.
+        assert!(!anneal_accept(4.0, 5.0, 0.0, 0.0));
+        // A finite candidate always beats an infinite current.
+        assert!(anneal_accept(f64::INFINITY, 5.0, 1.0, 0.999));
+        // An infinite candidate never replaces a finite current.
+        assert!(!anneal_accept(5.0, f64::INFINITY, 1.0, 0.0));
+    }
+
+    #[test]
+    fn grid_is_cartesian() {
+        let mut space = ParamSpace::new(TunedProfile::default());
+        space.improvement_rate = vec![0.1, 0.3];
+        space.min_chunk = vec![256, 512, 1024];
+        space.role_cooldown = vec![0.5];
+        assert_eq!(space.n_trials(), 6);
+        let g = space.grid();
+        assert_eq!(g.len(), 6);
+        // Axis-major order: improvement_rate varies slowest.
+        assert_eq!(g[0].improvement_rate, 0.1);
+        assert_eq!(g[0].min_chunk, 256);
+        assert_eq!(g[2].min_chunk, 1024);
+        assert_eq!(g[3].improvement_rate, 0.3);
+        // The single-valued role axis applied everywhere.
+        assert!(g.iter().all(|p| p.tuning.role.unwrap().cooldown == 0.5));
+    }
+
+    #[test]
+    fn neighbor_mutates_one_axis_deterministically() {
+        let mut space = ParamSpace::new(TunedProfile::default());
+        space.improvement_rate = vec![0.1, 0.3];
+        space.min_chunk = vec![256, 512];
+        let base = space.base.clone();
+        let mut a = Pcg64::with_stream(7, ANNEAL_STREAM);
+        let mut b = Pcg64::with_stream(7, ANNEAL_STREAM);
+        for _ in 0..20 {
+            let na = space.neighbor(&base, &mut a);
+            let nb = space.neighbor(&base, &mut b);
+            assert_eq!(na, nb, "same stream, same neighbor");
+            // Exactly one scheduler axis differs from the base.
+            let diffs = usize::from(na.improvement_rate != base.improvement_rate)
+                + usize::from(na.min_chunk != base.min_chunk);
+            assert_eq!(diffs, 1);
+        }
+        // No possible move: returned unchanged.
+        let frozen = ParamSpace::new(base.clone());
+        assert_eq!(frozen.neighbor(&base, &mut a), base);
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let p = TunedProfile {
+            improvement_rate: 0.15,
+            tuning: TuningConfig {
+                kv_borrow_cap: 16,
+                role: Some(RoleControlParams { cooldown: 0.25, ..Default::default() }),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let back = TunedProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_json().to_string(), p.to_json().to_string());
+    }
+
+    #[test]
+    fn profile_to_config_loads_back() {
+        let base = Config::paper_8b();
+        let mut p = TunedProfile::baseline(&base.sched);
+        p.min_chunk = 256;
+        p.tuning.deadline_safety = 0.8;
+        let cfg = p.to_config(&base);
+        let reloaded = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(reloaded.sched.min_chunk, 256);
+        assert_eq!(reloaded.tuning.as_ref().unwrap().deadline_safety, 0.8);
+        // And the tuned config builds.
+        crate::api::Tetris::from_config(&reloaded).unwrap().build_simulation().unwrap();
+    }
+}

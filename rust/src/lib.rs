@@ -133,6 +133,10 @@ pub mod runtime;
 pub mod serve;
 /// The unified entry point: validated builder, policy registry, observers.
 pub mod api;
+/// Deterministic auto-tuning: parameter sweeps + simulated annealing over
+/// the builder knobs, scored from recorded events, exported as loadable
+/// tuned profiles.
+pub mod experiment;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -41,6 +41,18 @@ COMMANDS:
   policies      list the names the policy registry resolves
   profile-rate  offline improvement-rate profiling
                   --trace ... --rates 0.5,1.0,...  --out <profile.json>
+  tune          deterministic auto-tuning sweep (tetris::experiment):
+                grid over improvement rate x min chunk, optional annealing,
+                winner exported as a loadable tuned config
+                  --trace <short|medium|long>  --n <requests>  --rate <req/s>
+                  --model <8b|70b>  --seed <u64>  [--config cfg.json]
+                  --anneal-steps <n>  --threads <n>
+                  --out <tuned.json>     (winning profile as a full config,
+                                          loadable via --config)
+                  --report <report.json> (full deterministic trial report)
+                  [--assert-improves]    (exit 1 unless the winner beats the
+                                          static defaults on the held-out
+                                          paired evaluation)
   fit           print the Eq. (1) coefficient tables (Table 1 calibration)
   gen-trace     synthesize a trace --trace ... --rate ... --n ... --out t.json
   serve         live E2E server over artifacts/ (or the stub engine)
@@ -67,13 +79,21 @@ COMMANDS:
 ";
 
 fn main() {
-    let args = Args::from_env(&["dynamic-rate", "help", "qos", "kv-borrow", "elastic"]);
+    let args = Args::from_env(&[
+        "dynamic-rate",
+        "help",
+        "qos",
+        "kv-borrow",
+        "elastic",
+        "assert-improves",
+    ]);
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let code = match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
         "compare" => cmd_compare(&args),
         "policies" => cmd_policies(),
         "profile-rate" => cmd_profile_rate(&args),
+        "tune" => cmd_tune(&args),
         "fit" => cmd_fit(&args),
         "gen-trace" => cmd_gen_trace(&args),
         "serve" => cmd_serve(&args),
@@ -260,6 +280,123 @@ fn cmd_profile_rate(args: &Args) -> i32 {
             return 1;
         }
         println!("profile written to {out}");
+    }
+    0
+}
+
+/// Resolve the base `Config` the tuner sweeps around (and exports the
+/// winner against): `--config` loads a file, otherwise the `--model`
+/// preset; `--policy`/`--seed` override either.
+fn base_config(args: &Args) -> anyhow::Result<tetris::config::Config> {
+    use tetris::config::{Config, Policy};
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => {
+            if args.str_or("model", "8b") == "70b" {
+                Config::paper_70b()
+            } else {
+                Config::paper_8b()
+            }
+        }
+    };
+    if let Some(p) = args.get("policy") {
+        cfg.policy = Policy::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("policy '{p}' is not config-representable"))?;
+    }
+    if let Some(seed) = args.get("seed").and_then(|v| v.parse().ok()) {
+        cfg.seed = seed;
+    }
+    Ok(cfg)
+}
+
+fn cmd_tune(args: &Args) -> i32 {
+    use tetris::experiment::{
+        AnnealSchedule, Experiment, ExperimentParams, Objective, ParamSpace, TunedProfile,
+    };
+    use tetris::util::threadpool::ThreadPool;
+    let cfg = match base_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("invalid configuration: {e:#}");
+            return 2;
+        }
+    };
+    let base = match Tetris::from_config(&cfg) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("invalid configuration: {e:#}");
+            return 2;
+        }
+    };
+    let kind = TraceKind::parse(&args.str_or("trace", "medium")).unwrap_or(TraceKind::Medium);
+    let mut params = ExperimentParams::new(kind, args.u64_or("seed", cfg.seed));
+    params.n_requests = args.usize_or("n", 60);
+    params.rate = args.f64_or("rate", 0.5);
+    // The stock grid sweeps the two sim-scorable scheduler axes (12
+    // cells); serve-only knobs join via annealing-free defaults and ride
+    // into the exported profile unchanged.
+    let mut space = ParamSpace::new(TunedProfile::baseline(base.sched_ref()));
+    space.improvement_rate = vec![0.05, 0.15, 0.3, 0.6];
+    space.min_chunk = vec![256, 512, 1024];
+    let anneal_steps = args.usize_or("anneal-steps", 0);
+    let anneal =
+        (anneal_steps > 0).then(|| AnnealSchedule { steps: anneal_steps, ..Default::default() });
+    let exp = Experiment { base, space, objective: Objective::default(), params, anneal };
+    let pool = ThreadPool::new(args.usize_or("threads", 4).max(1));
+    let report = match exp.run(&pool) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("experiment failed: {e:#}");
+            return 1;
+        }
+    };
+    let mut t = Table::new(&["trial", "improvement rate", "min chunk", "ttft p99", "score"]);
+    for trial in report.grid.iter().chain(report.annealed.iter()) {
+        t.row(vec![
+            trial.index.to_string(),
+            format!("{:.2}", trial.profile.improvement_rate),
+            trial.profile.min_chunk.to_string(),
+            fmt_secs(trial.metrics.ttft_p99),
+            if trial.score.is_finite() {
+                format!("{:.3}", trial.score)
+            } else {
+                "infeasible".into()
+            },
+        ]);
+    }
+    t.print();
+    println!(
+        "best trial {}: improvement rate {:.2}, min chunk {} (score {:.3})",
+        report.best.index,
+        report.best.profile.improvement_rate,
+        report.best.profile.min_chunk,
+        report.best.score
+    );
+    println!(
+        "held-out eval ({} trace): tuned {:.3} vs static defaults {:.3} -> {}",
+        kind.name(),
+        report.best_eval.mean_score,
+        report.baseline_eval.mean_score,
+        if report.improves() { "improves" } else { "no improvement" }
+    );
+    if let Some(out) = args.get("out") {
+        let tuned = report.best_profile().to_config(&cfg);
+        if tuned.save(std::path::Path::new(out)).is_err() {
+            eprintln!("failed to write {out}");
+            return 1;
+        }
+        println!("tuned config written to {out}");
+    }
+    if let Some(out) = args.get("report") {
+        if report.to_json().to_file(std::path::Path::new(out)).is_err() {
+            eprintln!("failed to write {out}");
+            return 1;
+        }
+        println!("trial report written to {out}");
+    }
+    if args.flag("assert-improves") && !report.improves() {
+        eprintln!("tuned profile does not beat the static defaults on the held-out evaluation");
+        return 1;
     }
     0
 }

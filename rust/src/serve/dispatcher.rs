@@ -56,6 +56,7 @@
 use crate::api::admission::{
     AdmissionController, AdmissionDecision, AdmissionTicket, ParkedQueue, ScanOutcome,
 };
+use crate::api::{RoleAction, RoleControlConfig};
 use crate::baselines::PrefillScheduler;
 use crate::cluster::WorkerRegistry;
 use crate::latency::prefill::SpCoeffs;
@@ -64,7 +65,9 @@ use crate::metrics::{CancelStage, Completion, DEADLINE_BLOWN};
 use crate::runtime::TinyArch;
 use crate::sched::plan::CdspPlan;
 use crate::serve::handle::{Pending, ReqShared, SubmitShared};
-use crate::serve::{need_tokens, KvState, ObserverSet, SharedKv, SharedRouter, WorkerJob};
+use crate::serve::{
+    need_tokens, KvState, MembershipCtl, ObserverSet, SharedKv, SharedRouter, WorkerJob,
+};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier, Mutex};
@@ -74,6 +77,31 @@ use std::time::{Duration, Instant};
 /// any exist. The dispatcher blocks indefinitely when nothing carries a
 /// deadline, so deadline-free servers pay nothing for the monitor.
 const DEADLINE_TICK: Duration = Duration::from_millis(2);
+
+/// How often the background role-control loop re-evaluates the
+/// [`RoleController`](crate::api::RoleController) while one is configured
+/// and no deadline is in flight (deadline ticks are finer-grained and
+/// also drive the role loop). Servers without role control still block
+/// indefinitely on an idle channel.
+const ROLE_TICK: Duration = Duration::from_millis(20);
+
+/// The dispatcher-side state of the background role-control loop: the
+/// configured policy plus the wall-clock time of the last conversion it
+/// applied (the hysteresis anchor).
+pub(crate) struct RoleCtlState {
+    cfg: RoleControlConfig,
+    /// Seconds since the server epoch of the last applied conversion;
+    /// `-inf` until the first one, so the first decision is never
+    /// cooldown-gated.
+    last_convert: f64,
+}
+
+impl RoleCtlState {
+    /// Fresh state for a configured role-control loop.
+    pub fn new(cfg: RoleControlConfig) -> Self {
+        RoleCtlState { cfg, last_convert: f64::NEG_INFINITY }
+    }
+}
 
 /// Messages driving the dispatcher thread.
 pub(crate) enum DispatcherMsg {
@@ -162,6 +190,9 @@ pub(crate) struct Dispatcher {
     /// The deadline monitor's tracked requests (every deadline-carrying
     /// submission the dispatcher has seen whose TTFT is still undecided).
     pub deadlines: Vec<TrackedDeadline>,
+    /// The background role-control loop, when configured via
+    /// [`TetrisBuilder::role_control`](crate::api::TetrisBuilder::role_control).
+    pub role_ctl: Option<RoleCtlState>,
 }
 
 impl Dispatcher {
@@ -175,16 +206,21 @@ impl Dispatcher {
     /// channel as before.
     pub fn run(mut self) {
         loop {
-            let msg = if self.deadlines.is_empty() {
+            let msg = if self.deadlines.is_empty() && self.role_ctl.is_none() {
                 match self.rx.recv() {
                     Ok(m) => m,
                     Err(_) => break,
                 }
             } else {
-                match self.rx.recv_timeout(DEADLINE_TICK) {
+                // Deadline ticks are finer-grained than role ticks; when
+                // both are live the shorter period drives the loop and the
+                // role controller rides along on every wake-up.
+                let tick = if self.deadlines.is_empty() { ROLE_TICK } else { DEADLINE_TICK };
+                match self.rx.recv_timeout(tick) {
                     Ok(m) => m,
                     Err(RecvTimeoutError::Timeout) => {
                         self.deadline_tick();
+                        self.role_tick();
                         continue;
                     }
                     Err(RecvTimeoutError::Disconnected) => break,
@@ -201,8 +237,49 @@ impl Dispatcher {
                 DispatcherMsg::Drain => break,
             }
             self.deadline_tick();
+            self.role_tick();
         }
         self.drain();
+    }
+
+    /// One background role-control step: skip inside the hysteresis
+    /// cooldown window, otherwise read the cached load snapshot and the
+    /// live membership states, ask the controller for a conversion, and
+    /// apply it through the same [`MembershipCtl`] surface the `Server`
+    /// facade uses (identical guards, observer events, and epoch bumps).
+    /// A decision that loses a race with a concurrent membership change
+    /// fails its guard and is skipped — the next tick re-decides from
+    /// fresh state.
+    fn role_tick(&mut self) {
+        let (cooldown, last_convert, controller) = match &self.role_ctl {
+            Some(rc) => (rc.cfg.cooldown, rc.last_convert, rc.cfg.controller.clone()),
+            None => return,
+        };
+        let now = self.epoch.elapsed().as_secs_f64();
+        if now - last_convert < cooldown {
+            return;
+        }
+        let load = self.shared.load();
+        let prefill = self.registry.lock().unwrap().prefill_states().to_vec();
+        let decode = self.router.lock().unwrap().instance_states().to_vec();
+        let Some(action) = controller.decide(&load, &prefill, &decode) else {
+            return;
+        };
+        let ctl = MembershipCtl {
+            router: &self.router,
+            registry: &self.registry,
+            shared: &self.shared,
+            tx: &self.tx,
+        };
+        let applied = match action {
+            RoleAction::ToDecode { lane, inst } => ctl.convert_prefill_to_decode(lane, inst),
+            RoleAction::ToPrefill { inst, lane } => ctl.convert_decode_to_prefill(inst, lane),
+        };
+        if applied.is_ok() {
+            if let Some(rc) = self.role_ctl.as_mut() {
+                rc.last_convert = now;
+            }
+        }
     }
 
     /// The admission ticket for one pending request at `now`.

@@ -121,7 +121,7 @@ pub use handle::{Client, RequestHandle};
 use crate::api::admission::{
     AdmissionController, LoadSnapshot, ParkedQueue, SubmitOptions,
 };
-use crate::api::Observer;
+use crate::api::{Observer, RoleControlConfig};
 use crate::baselines::PrefillScheduler;
 use crate::cluster::{ClusterRole, MemberState, WorkerRegistry};
 use crate::kvbroker::KvBrokerConfig;
@@ -306,6 +306,136 @@ pub struct Server {
     pending: VecDeque<RequestHandle>,
 }
 
+/// The membership-operation surface shared by the [`Server`] facade and
+/// the dispatcher's background role-control loop: both borrow the same
+/// four shared handles and go through these bodies, so guards (never
+/// drain the last active slot), observer events, epoch bumps, and the
+/// `CapacityFreed` nudge are identical no matter who converts a role.
+pub(crate) struct MembershipCtl<'a> {
+    /// Decode instance states + placement admission.
+    pub router: &'a SharedRouter,
+    /// Prefill lane states + queue clocks.
+    pub registry: &'a Arc<Mutex<WorkerRegistry>>,
+    /// Submission-side shared state (observers, epoch, membership mirror).
+    pub shared: &'a Arc<SubmitShared>,
+    /// Dispatcher channel, for the capacity nudge on joins.
+    pub tx: &'a Sender<DispatcherMsg>,
+}
+
+impl MembershipCtl<'_> {
+    /// See [`Server::drain_decode`].
+    pub fn drain_decode(&self, inst: usize) -> Result<()> {
+        let changed = {
+            let mut r = self.router.lock().unwrap();
+            anyhow::ensure!(inst < r.n_instances(), "decode instance {inst} out of range");
+            anyhow::ensure!(
+                !(r.instance_state(inst).is_active() && r.n_active_instances() == 1),
+                "cannot drain the last active decode instance"
+            );
+            r.drain_instance(inst)
+        };
+        self.registry.lock().unwrap().drain_decode(inst);
+        if changed {
+            self.sync_membership_epoch();
+            let now = self.shared.epoch.elapsed().as_secs_f64();
+            for o in self.shared.observers.iter() {
+                o.on_member_drain(ClusterRole::Decode, inst, now);
+            }
+        }
+        Ok(())
+    }
+
+    /// See [`Server::join_decode`].
+    pub fn join_decode(&self, inst: usize) -> Result<()> {
+        let changed = {
+            let mut r = self.router.lock().unwrap();
+            anyhow::ensure!(inst < r.n_instances(), "decode instance {inst} out of range");
+            r.join_instance(inst)
+        };
+        self.registry.lock().unwrap().join_decode(inst);
+        if changed {
+            self.sync_membership_epoch();
+            let now = self.shared.epoch.elapsed().as_secs_f64();
+            for o in self.shared.observers.iter() {
+                o.on_member_join(ClusterRole::Decode, inst, now);
+            }
+            let _ = self.tx.send(DispatcherMsg::CapacityFreed);
+        }
+        Ok(())
+    }
+
+    /// See [`Server::drain_prefill`].
+    pub fn drain_prefill(&self, lane: usize) -> Result<()> {
+        let changed = {
+            let mut reg = self.registry.lock().unwrap();
+            anyhow::ensure!(lane < reg.prefill().len(), "prefill lane {lane} out of range");
+            anyhow::ensure!(
+                !(reg.prefill_state(lane).is_active() && reg.n_active_prefill() == 1),
+                "cannot drain the last active prefill lane"
+            );
+            reg.drain_prefill(lane)
+        };
+        if changed {
+            self.sync_membership_epoch();
+            let now = self.shared.epoch.elapsed().as_secs_f64();
+            for o in self.shared.observers.iter() {
+                o.on_member_drain(ClusterRole::Prefill, lane, now);
+            }
+        }
+        Ok(())
+    }
+
+    /// See [`Server::join_prefill`].
+    pub fn join_prefill(&self, lane: usize) -> Result<()> {
+        let changed = {
+            let mut reg = self.registry.lock().unwrap();
+            anyhow::ensure!(lane < reg.prefill().len(), "prefill lane {lane} out of range");
+            reg.join_prefill(lane)
+        };
+        if changed {
+            self.sync_membership_epoch();
+            let now = self.shared.epoch.elapsed().as_secs_f64();
+            for o in self.shared.observers.iter() {
+                o.on_member_join(ClusterRole::Prefill, lane, now);
+            }
+            let _ = self.tx.send(DispatcherMsg::CapacityFreed);
+        }
+        Ok(())
+    }
+
+    /// See [`Server::convert_prefill_to_decode`].
+    pub fn convert_prefill_to_decode(&self, lane: usize, inst: usize) -> Result<()> {
+        self.drain_prefill(lane)?;
+        self.join_decode(inst)?;
+        let now = self.shared.epoch.elapsed().as_secs_f64();
+        for o in self.shared.observers.iter() {
+            o.on_role_convert(lane, inst, true, now);
+        }
+        Ok(())
+    }
+
+    /// See [`Server::convert_decode_to_prefill`].
+    pub fn convert_decode_to_prefill(&self, inst: usize, lane: usize) -> Result<()> {
+        self.drain_decode(inst)?;
+        self.join_prefill(lane)?;
+        let now = self.shared.epoch.elapsed().as_secs_f64();
+        for o in self.shared.observers.iter() {
+            o.on_role_convert(lane, inst, false, now);
+        }
+        Ok(())
+    }
+
+    /// Recompute the submit path's membership-epoch mirror from the two
+    /// authoritative counters (router + registry), taken one lock at a
+    /// time, so the next [`Server::load`] call rebuilds its cached
+    /// snapshot — the same invalidation pattern as the KV lease epoch.
+    pub fn sync_membership_epoch(&self) {
+        let router = self.router.lock().unwrap().membership_epoch();
+        let registry = self.registry.lock().unwrap().membership_epoch();
+        self.shared.membership_epoch.store(router + registry, Ordering::Relaxed);
+    }
+}
+
 impl Server {
     /// Start `n_prefill` prefill workers, `decode.n_workers` decode
     /// workers, and the dispatcher thread, scheduling through `scheduler`,
@@ -327,6 +457,7 @@ impl Server {
         admission: Box<dyn AdmissionController>,
         starvation_bound: usize,
         deadline_safety: f64,
+        role_control: Option<RoleControlConfig>,
         observers: Vec<Arc<dyn Observer>>,
     ) -> Result<Server> {
         anyhow::ensure!(n_prefill >= 1, "need at least one prefill worker");
@@ -459,6 +590,7 @@ impl Server {
             rx,
             parked: ParkedQueue::new(starvation_bound),
             deadlines: Vec::new(),
+            role_ctl: role_control.map(dispatcher::RoleCtlState::new),
         };
         let dispatcher = std::thread::Builder::new()
             .name("tetris-dispatch".into())
@@ -643,6 +775,18 @@ impl Server {
         (prefill, decode)
     }
 
+    /// Borrow the shared membership surface: the same guards, observer
+    /// events, and epoch bumps whether the caller is this `Server` facade
+    /// or the dispatcher's background role-control loop.
+    fn membership_ctl(&self) -> MembershipCtl<'_> {
+        MembershipCtl {
+            router: &self.router,
+            registry: &self.registry,
+            shared: &self.submit_shared,
+            tx: &self.tx,
+        }
+    }
+
     /// Stop routing new placements to decode instance `inst` and stop
     /// lending its spare KV blocks through the broker. Everything already
     /// in flight keeps running — granted transfers complete, batched
@@ -651,45 +795,14 @@ impl Server {
     /// purely an admission mask. Refuses to drain the last active decode
     /// instance. Returns `Ok` idempotently if `inst` is already draining.
     pub fn drain_decode(&self, inst: usize) -> Result<()> {
-        let changed = {
-            let mut r = self.router.lock().unwrap();
-            anyhow::ensure!(inst < r.n_instances(), "decode instance {inst} out of range");
-            anyhow::ensure!(
-                !(r.instance_state(inst).is_active() && r.n_active_instances() == 1),
-                "cannot drain the last active decode instance"
-            );
-            r.drain_instance(inst)
-        };
-        self.registry.lock().unwrap().drain_decode(inst);
-        if changed {
-            self.sync_membership_epoch();
-            let now = self.submit_shared.epoch.elapsed().as_secs_f64();
-            for o in self.submit_shared.observers.iter() {
-                o.on_member_drain(ClusterRole::Decode, inst, now);
-            }
-        }
-        Ok(())
+        self.membership_ctl().drain_decode(inst)
     }
 
     /// (Re-)activate decode instance `inst`: it immediately rejoins the
     /// placement scoring pool and the broker's lender set, and the
     /// dispatcher is nudged so parked requests can take the new capacity.
     pub fn join_decode(&self, inst: usize) -> Result<()> {
-        let changed = {
-            let mut r = self.router.lock().unwrap();
-            anyhow::ensure!(inst < r.n_instances(), "decode instance {inst} out of range");
-            r.join_instance(inst)
-        };
-        self.registry.lock().unwrap().join_decode(inst);
-        if changed {
-            self.sync_membership_epoch();
-            let now = self.submit_shared.epoch.elapsed().as_secs_f64();
-            for o in self.submit_shared.observers.iter() {
-                o.on_member_join(ClusterRole::Decode, inst, now);
-            }
-            let _ = self.tx.send(DispatcherMsg::CapacityFreed);
-        }
-        Ok(())
+        self.membership_ctl().join_decode(inst)
     }
 
     /// Finalize a drained decode instance's departure. Errors (leaving the
@@ -700,7 +813,7 @@ impl Server {
     pub fn remove_decode(&self, inst: usize) -> Result<()> {
         self.router.lock().unwrap().depart_instance(inst)?;
         self.registry.lock().unwrap().depart_decode(inst);
-        self.sync_membership_epoch();
+        self.membership_ctl().sync_membership_epoch();
         Ok(())
     }
 
@@ -709,42 +822,13 @@ impl Server {
     /// formed), and the lane's queue clock keeps crediting back normally.
     /// Refuses to drain the last active prefill lane.
     pub fn drain_prefill(&self, lane: usize) -> Result<()> {
-        let changed = {
-            let mut reg = self.registry.lock().unwrap();
-            anyhow::ensure!(lane < reg.prefill().len(), "prefill lane {lane} out of range");
-            anyhow::ensure!(
-                !(reg.prefill_state(lane).is_active() && reg.n_active_prefill() == 1),
-                "cannot drain the last active prefill lane"
-            );
-            reg.drain_prefill(lane)
-        };
-        if changed {
-            self.sync_membership_epoch();
-            let now = self.submit_shared.epoch.elapsed().as_secs_f64();
-            for o in self.submit_shared.observers.iter() {
-                o.on_member_drain(ClusterRole::Prefill, lane, now);
-            }
-        }
-        Ok(())
+        self.membership_ctl().drain_prefill(lane)
     }
 
     /// (Re-)activate prefill lane `lane` and nudge the dispatcher — the
     /// very next plan may form wider SP groups across it.
     pub fn join_prefill(&self, lane: usize) -> Result<()> {
-        let changed = {
-            let mut reg = self.registry.lock().unwrap();
-            anyhow::ensure!(lane < reg.prefill().len(), "prefill lane {lane} out of range");
-            reg.join_prefill(lane)
-        };
-        if changed {
-            self.sync_membership_epoch();
-            let now = self.submit_shared.epoch.elapsed().as_secs_f64();
-            for o in self.submit_shared.observers.iter() {
-                o.on_member_join(ClusterRole::Prefill, lane, now);
-            }
-            let _ = self.tx.send(DispatcherMsg::CapacityFreed);
-        }
-        Ok(())
+        self.membership_ctl().join_prefill(lane)
     }
 
     /// Load-driven role conversion, prefill → decode: drain prefill lane
@@ -753,36 +837,14 @@ impl Server {
     /// [`Observer::on_role_convert`](crate::api::Observer::on_role_convert).
     /// The usual guards apply — the last active prefill lane cannot leave.
     pub fn convert_prefill_to_decode(&self, lane: usize, inst: usize) -> Result<()> {
-        self.drain_prefill(lane)?;
-        self.join_decode(inst)?;
-        let now = self.submit_shared.epoch.elapsed().as_secs_f64();
-        for o in self.submit_shared.observers.iter() {
-            o.on_role_convert(lane, inst, true, now);
-        }
-        Ok(())
+        self.membership_ctl().convert_prefill_to_decode(lane, inst)
     }
 
     /// Load-driven role conversion, decode → prefill: drain decode
     /// instance `inst` (its in-flight batch finishes normally) and activate
     /// prefill lane `lane`. The last active decode instance cannot leave.
     pub fn convert_decode_to_prefill(&self, inst: usize, lane: usize) -> Result<()> {
-        self.drain_decode(inst)?;
-        self.join_prefill(lane)?;
-        let now = self.submit_shared.epoch.elapsed().as_secs_f64();
-        for o in self.submit_shared.observers.iter() {
-            o.on_role_convert(lane, inst, false, now);
-        }
-        Ok(())
-    }
-
-    /// Recompute the submit path's membership-epoch mirror from the two
-    /// authoritative counters (router + registry), taken one lock at a
-    /// time, so the next [`Server::load`] call rebuilds its cached
-    /// snapshot — the same invalidation pattern as the KV lease epoch.
-    fn sync_membership_epoch(&self) {
-        let router = self.router.lock().unwrap().membership_epoch();
-        let registry = self.registry.lock().unwrap().membership_epoch();
-        self.submit_shared.membership_epoch.store(router + registry, Ordering::Relaxed);
+        self.membership_ctl().convert_decode_to_prefill(inst, lane)
     }
 
     /// Wait for up to `n` legacy-submitted requests (oldest first) and

@@ -25,7 +25,9 @@ use harness::{
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use tetris::api::{Completion, Federation, SubmitOptions, TraceEvent, TraceRecorder};
+use tetris::api::{
+    Completion, Federation, RoleController, SubmitOptions, TraceEvent, TraceRecorder,
+};
 use tetris::cluster::{ClusterRole, MemberState};
 use tetris::sched::DecodeRouter;
 use tetris::sim::{MemberAction, MembershipEvent, SimParams};
@@ -280,6 +282,51 @@ fn elastic_role_conversion_beats_every_fixed_split_on_ttft_p99() {
     let p_again = run(elastic_script(), Some(rec2.clone()));
     assert_eq!(p_elastic, p_again);
     assert_eq!(event_shape(&rec.events()), event_shape(&rec2.events()));
+}
+
+#[test]
+fn background_role_loop_is_idle_safe_and_cooldown_prevents_flapping() {
+    let h = FaultHarness::new();
+    let rec = Arc::new(TraceRecorder::new());
+    // An eager controller (low invert factor) behind a cooldown far longer
+    // than the test: without hysteresis an oscillating load signal would
+    // flap roles back and forth; with it at most one conversion can fire.
+    let server = builder(4, 2)
+        .sim_params(roomy())
+        .role_control(RoleController { invert_factor: 1.2, ..Default::default() }, 30.0)
+        .observe(rec.clone())
+        .build_server(h.engine(harness_arch()), 4)
+        .expect("server starts");
+    h.set_step_delay(Duration::from_millis(2));
+
+    // Idle cluster: the loop ticks but the pressure floor keeps it quiet.
+    std::thread::sleep(Duration::from_millis(120));
+    assert_eq!(rec.count("role_convert"), 0, "idle cluster must never convert");
+
+    // Decode-heavy burst: long outputs pile pressure onto the two decode
+    // instances, which is exactly the signal that tempts the controller.
+    let reqs: Vec<_> = (1..=8).map(|id| req(id, 64, 32)).collect();
+    let mut handles = server.submit_burst_async(&reqs).expect("burst accepted");
+    for hd in &mut handles {
+        match hd.wait() {
+            Completion::Finished(_) | Completion::Shed(_) => {}
+            other => panic!("request {} stranded by the role loop: {other:?}", hd.id()),
+        }
+    }
+    assert!(
+        rec.count("role_convert") <= 1,
+        "cooldown must bound conversions to one, saw {}",
+        rec.count("role_convert")
+    );
+
+    wait_until(
+        || {
+            let r = server.router_state();
+            r.in_flight_transfers() == 0 && r.available_blocks() == r.total_blocks()
+        },
+        "role-loop teardown",
+    );
+    server.shutdown().unwrap();
 }
 
 #[test]

@@ -1,0 +1,180 @@
+//! Bench 9: multi-turn prefix KV reuse (PR 9).
+//!
+//! Numbers written to `BENCH_9.json` for the CI regression gate:
+//!
+//! * `ttft_p50_multi_turn` / `ttft_p99_multi_turn` — TTFT of the
+//!   conversation trace (short-family turns, chat-like think times) at the
+//!   reference rate with prefix reuse on.
+//! * `reuse_ttft_ratio` — mean follow-up-turn TTFT with reuse **off**
+//!   divided by the same mean with reuse **on** (same seed, same trace).
+//!   The acceptance bar for the session subsystem: strictly above 1.0 —
+//!   prefilling only the suffix of a retained transcript must beat
+//!   re-prefilling the whole concatenated prompt.
+//! * `max_capacity_reuse` / `max_capacity_cold` — the highest sustainable
+//!   first-turn arrival rate (fig10's 25× light-load SLO) on the
+//!   conversation trace, with and without retention.
+//! * `mixed_capacity` — the same SLO scan on the heterogeneous
+//!   `TraceKind::Mixed` conversations (chat turns plus ~4% near-million-
+//!   token documents, whose transcripts exceed the retention cap and are
+//!   deliberately refused) through a pool sized for the heavy mode.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use tetris::api::{SessionConfig, Tetris, TetrisBuilder, TraceRecorder};
+use tetris::metrics::{max_sustainable_rate, RunMetrics, SloCriterion};
+use tetris::sim::SimParams;
+use tetris::util::bench::Table;
+use tetris::util::cli::Args;
+use tetris::util::json::Json;
+use tetris::util::rng::Pcg64;
+use tetris::workload::conversation::ConversationGen;
+use tetris::workload::TraceKind;
+
+/// The paper-scale cluster over a pool of `capacity_tokens` per decode
+/// instance; with `reuse` on, each instance retains up to 8192 blocks
+/// (128k tokens) of finished-session prefixes.
+fn conv_builder(reuse: bool, capacity_tokens: usize) -> TetrisBuilder {
+    let b = Tetris::paper_8b().sim_params(SimParams {
+        backends_per_decode: 4,
+        decode_capacity_tokens: capacity_tokens,
+        block_tokens: 16,
+    });
+    if reuse {
+        b.sessions(SessionConfig::enabled(8_192))
+    } else {
+        b
+    }
+}
+
+struct ConvRun {
+    metrics: RunMetrics,
+    sessions: BTreeMap<u64, u64>,
+    hits: usize,
+    evictions: usize,
+}
+
+/// One seeded conversation-trace run. The trace (and the request→session
+/// map) is a pure function of `(kind, n_sessions, rate, seed)`, so the
+/// reuse-on and reuse-off arms see the identical workload.
+fn run_conversations(
+    kind: TraceKind,
+    n_sessions: usize,
+    rate: f64,
+    reuse: bool,
+    capacity_tokens: usize,
+) -> ConvRun {
+    let gen = ConversationGen::paper_trace(kind);
+    let mut rng = Pcg64::new(0x9e55);
+    let (trace, sessions) = gen.generate(n_sessions, rate, &mut rng);
+    let rec = Arc::new(TraceRecorder::new());
+    let mut sim = conv_builder(reuse, capacity_tokens)
+        .observe(rec.clone())
+        .build_simulation()
+        .expect("valid configuration");
+    sim.simulator_mut().sessions_of = sessions.clone();
+    let metrics = sim.run(&trace);
+    ConvRun { metrics, sessions, hits: rec.count("prefix_hit"), evictions: rec.count("prefix_evict") }
+}
+
+/// Mean TTFT over follow-up turns only (every session's first turn is
+/// cold by construction and identical across the two arms).
+fn follow_up_ttft_mean(run: &ConvRun) -> f64 {
+    let mut first: BTreeMap<u64, u64> = BTreeMap::new();
+    for (&req, &s) in &run.sessions {
+        let e = first.entry(s).or_insert(req);
+        if req < *e {
+            *e = req;
+        }
+    }
+    let leaders: BTreeSet<u64> = first.values().copied().collect();
+    let ts: Vec<f64> = run
+        .metrics
+        .requests
+        .iter()
+        .filter(|r| run.sessions.contains_key(&r.id) && !leaders.contains(&r.id))
+        .map(|r| r.ttft())
+        .collect();
+    ts.iter().sum::<f64>() / ts.len().max(1) as f64
+}
+
+/// The fig10-style SLO capacity scan over first-turn arrival rates.
+fn capacity(
+    kind: TraceKind,
+    n_sessions: usize,
+    reuse: bool,
+    capacity_tokens: usize,
+    rates: &[f64],
+) -> (f64, f64) {
+    let light = run_conversations(kind, n_sessions, 0.02, false, capacity_tokens)
+        .metrics
+        .ttft_summary()
+        .p99;
+    let slo = SloCriterion { light_load: light, factor: 25.0 };
+    let cap = max_sustainable_rate(rates, &slo, |r| {
+        run_conversations(kind, n_sessions, r, reuse, capacity_tokens).metrics.ttft_summary().p99
+    })
+    .unwrap_or(rates[0]);
+    (cap, slo.threshold())
+}
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let n = args.usize_or("n", 24);
+    let rate = args.f64_or("rate", 0.4);
+    let out = args.str_or("out", "BENCH_9.json");
+    let rates: Vec<f64> = (1..=10).map(|i| i as f64 * 0.2).collect();
+
+    println!("=== Bench 9: multi-turn prefix reuse (conversation traces) ===");
+
+    // Reference-rate TTFT, reuse on vs off over the identical trace.
+    let on = run_conversations(TraceKind::Short, n, rate, true, 200_000);
+    let off = run_conversations(TraceKind::Short, n, rate, false, 200_000);
+    let s_on = on.metrics.ttft_summary();
+    let s_off = off.metrics.ttft_summary();
+    let follow_on = follow_up_ttft_mean(&on);
+    let follow_off = follow_up_ttft_mean(&off);
+    let reuse_ratio = follow_off / follow_on.max(1e-12);
+
+    let mut t = Table::new(&["config", "ttft p50", "ttft p99", "follow-up mean", "hits/evicts"]);
+    t.row(vec![
+        "reuse on".into(),
+        format!("{:.3}s", s_on.p50),
+        format!("{:.3}s", s_on.p99),
+        format!("{follow_on:.3}s"),
+        format!("{}/{}", on.hits, on.evictions),
+    ]);
+    t.row(vec![
+        "reuse off".into(),
+        format!("{:.3}s", s_off.p50),
+        format!("{:.3}s", s_off.p99),
+        format!("{follow_off:.3}s"),
+        "-".into(),
+    ]);
+    t.print();
+    println!("reuse TTFT ratio (off/on, follow-up turns): {reuse_ratio:.3}");
+
+    // Capacity: conversation trace with and without retention, then the
+    // heterogeneous Mixed conversations through a heavy-mode-sized pool.
+    let (cap_reuse, thresh) = capacity(TraceKind::Short, n, true, 200_000, &rates);
+    let (cap_cold, _) = capacity(TraceKind::Short, n, false, 200_000, &rates);
+    let (cap_mixed, _) = capacity(TraceKind::Mixed, n, true, 1_100_000, &rates);
+    println!(
+        "capacity: reuse {cap_reuse:.2} vs cold {cap_cold:.2} sessions/s \
+         (SLO {thresh:.2}s), mixed {cap_mixed:.2} sessions/s"
+    );
+
+    let j = Json::obj()
+        .set("ttft_p50_multi_turn", s_on.p50)
+        .set("ttft_p99_multi_turn", s_on.p99)
+        .set("reuse_ttft_ratio", reuse_ratio)
+        .set("max_capacity_reuse", cap_reuse)
+        .set("max_capacity_cold", cap_cold)
+        .set("mixed_capacity", cap_mixed)
+        .set("prefix_hits", on.hits as f64)
+        .set("prefix_evictions", on.evictions as f64);
+    if j.to_file(std::path::Path::new(&out)).is_err() {
+        eprintln!("failed to write {out}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
+}

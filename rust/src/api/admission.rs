@@ -134,6 +134,13 @@ pub struct SubmitOptions {
     pub stream_capacity: Option<usize>,
     /// What a full stream buffer does (ignored while unbounded).
     pub backpressure: BackpressurePolicy,
+    /// Multi-turn session this request belongs to (see
+    /// [`crate::session`]). A follow-up turn whose session still holds a
+    /// retained prefix routes to the holder with affinity, prefills only
+    /// the suffix, and is *charged* only its uncached blocks by
+    /// admission. `None` (the default) is a session-less request —
+    /// byte-identical to the pre-session API.
+    pub session: Option<u64>,
 }
 
 impl Default for SubmitOptions {
@@ -143,6 +150,7 @@ impl Default for SubmitOptions {
             ttft_deadline: None,
             stream_capacity: None,
             backpressure: BackpressurePolicy::Block,
+            session: None,
         }
     }
 }
@@ -174,6 +182,13 @@ impl SubmitOptions {
     pub fn bounded(mut self, capacity: usize, policy: BackpressurePolicy) -> Self {
         self.stream_capacity = Some(capacity);
         self.backpressure = policy;
+        self
+    }
+
+    /// Attach the request to a multi-turn session (prefix reuse across
+    /// turns; see [`crate::session`]).
+    pub fn session(mut self, id: u64) -> Self {
+        self.session = Some(id);
         self
     }
 }
@@ -397,8 +412,14 @@ pub struct AdmissionTicket {
     pub prompt_len: usize,
     /// Tokens the request will generate.
     pub output_len: usize,
-    /// KV blocks the request needs on its decode instance.
+    /// KV blocks the request needs *allocated* on its decode instance —
+    /// net of any retained session prefix it will reuse, so admission
+    /// charges only uncached work.
     pub need_blocks: usize,
+    /// KV blocks already resident as the request's retained session
+    /// prefix (0 for session-less requests and misses). Informational:
+    /// `need_blocks` has them subtracted already.
+    pub cached_blocks: usize,
     /// The request's QoS class.
     pub qos: QosClass,
     /// The request's TTFT deadline, if any (seconds from submission).
@@ -742,6 +763,7 @@ mod tests {
             prompt_len: 100,
             output_len: 10,
             need_blocks: 7,
+            cached_blocks: 0,
             qos,
             ttft_deadline: None,
             waited: 0.0,
@@ -954,6 +976,8 @@ mod tests {
         let o = SubmitOptions::default();
         assert_eq!(o.qos, QosClass::Interactive);
         assert_eq!(o.stream_capacity, None);
+        assert_eq!(o.session, None);
+        assert_eq!(SubmitOptions::batch().session(42).session, Some(42));
         let o = SubmitOptions::best_effort().deadline(2.5).bounded(8, BackpressurePolicy::DropOldest);
         assert_eq!(o.qos, QosClass::BestEffort);
         assert_eq!(o.ttft_deadline, Some(2.5));

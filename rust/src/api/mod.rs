@@ -122,6 +122,7 @@ pub use admission::{
 };
 pub use crate::kvbroker::{KvBroker, KvBrokerConfig};
 pub use elastic::{Federation, FederationHandle, RoleAction, RoleControlConfig, RoleController};
+pub use crate::session::{PrefixEviction, SessionConfig, SessionStore};
 pub use observer::{Observer, TraceEvent, TraceRecorder};
 pub use registry::{PolicyCtx, PolicyFactory, PolicyRegistry, PolicySpec};
 
@@ -136,6 +137,7 @@ use crate::sched::ImprovementController;
 use crate::serve::{DecodePool, Server};
 use crate::sim::{MembershipEvent, SimParams, Simulator};
 use crate::util::rng::Pcg64;
+use crate::workload::conversation::ConversationGen;
 use crate::workload::{Request, TraceKind, WorkloadGen};
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
@@ -221,6 +223,7 @@ pub struct TetrisBuilder {
     shard_streams: usize,
     membership: Vec<MembershipEvent>,
     role_control: Option<RoleControlConfig>,
+    sessions: SessionConfig,
 }
 
 impl TetrisBuilder {
@@ -246,6 +249,7 @@ impl TetrisBuilder {
             shard_streams: 1,
             membership: Vec::new(),
             role_control: None,
+            sessions: SessionConfig::disabled(),
         }
     }
 
@@ -372,6 +376,24 @@ impl TetrisBuilder {
         self
     }
 
+    /// Configure the multi-turn session layer (see [`crate::session`]):
+    /// with an enabled config, a finished request submitted under a
+    /// session id leaves its prompt+output KV pinned to its decode
+    /// instance as an LRU-evictable prefix; the session's next turn routes
+    /// with prefix affinity, prefills only the uncached suffix (pass-KV or
+    /// pass-Q attention against the retained history, whichever moves
+    /// fewer bytes), and is admission-charged only for the uncached
+    /// blocks. Retained prefixes are reclaimed *before* any request parks
+    /// or borrows remote blocks. The default
+    /// [`SessionConfig::disabled`] is bit-for-bit the session-less
+    /// system — the parity contract the session tests pin. Applies to
+    /// both build targets, which share the session store inside the
+    /// decode router.
+    pub fn sessions(mut self, config: SessionConfig) -> Self {
+        self.sessions = config;
+        self
+    }
+
     /// Run a background role-conversion control loop on the live server's
     /// dispatcher: every idle tick (and after every message) the given
     /// [`RoleController`] re-reads the cached load snapshot and the
@@ -417,6 +439,12 @@ impl TetrisBuilder {
                 },
                 r.cooldown,
             );
+        }
+        if let Some(s) = &t.session {
+            self = self.sessions(SessionConfig {
+                retention_blocks: s.retention_blocks,
+                affinity_weight: s.affinity_weight,
+            });
         }
         self
     }
@@ -616,6 +644,8 @@ impl TetrisBuilder {
             shard_streams: self.shard_streams,
             observers: self.observers.clone(),
             membership: self.membership.clone(),
+            session_cfg: self.sessions.clone(),
+            sessions_of: Default::default(),
         };
         Ok(Simulation { sim, seed: self.seed })
     }
@@ -668,6 +698,7 @@ impl TetrisBuilder {
             backends: params.backends_per_decode.max(1),
             broker: self.kv_broker.clone(),
             shard_streams: self.shard_streams,
+            sessions: self.sessions.clone(),
         };
         let model = self.resolved_model(&self.sched.sp_candidates);
         let ctx = PolicyCtx { model, sched: self.sched.clone() };
@@ -713,6 +744,26 @@ impl Simulation {
     pub fn run_generated(&mut self, kind: TraceKind, n: usize, rate: f64) -> RunMetrics {
         let trace = self.generate(kind, n, rate);
         self.run(&trace)
+    }
+
+    /// Synthesize a multi-turn conversation trace from the builder's seed
+    /// — `n_sessions` conversations whose first turns arrive
+    /// Poisson(`rate`), follow-up turns after think-time gaps — and
+    /// install the request→session map on the simulator so session-id
+    /// requests hit their retained prefixes. Replaces any previously
+    /// installed map; single-turn [`Simulation::generate`] traces leave
+    /// it untouched (requests without a mapping carry no session).
+    pub fn generate_conversations(
+        &mut self,
+        kind: TraceKind,
+        n_sessions: usize,
+        rate: f64,
+    ) -> Vec<Request> {
+        let gen = ConversationGen::paper_trace(kind);
+        let mut rng = Pcg64::new(self.seed);
+        let (trace, sessions) = gen.generate(n_sessions, rate, &mut rng);
+        self.sim.sessions_of = sessions;
+        trace
     }
 
     /// The resolved policy's self-reported name.
@@ -816,6 +867,49 @@ mod tests {
         let mut sim = Tetris::from_config(&cfg).unwrap().build_simulation().unwrap();
         let m = sim.run_generated(TraceKind::Medium, 8, 0.3);
         assert_eq!(m.requests.len(), 8);
+    }
+
+    #[test]
+    fn sessions_knob_flows_into_both_targets() {
+        // Default off.
+        let mut sim = Tetris::builder().build_simulation().unwrap();
+        assert!(!sim.simulator_mut().session_cfg.is_enabled());
+        // Enabled via the builder knob.
+        let mut sim = Tetris::builder()
+            .sessions(SessionConfig::enabled(64))
+            .build_simulation()
+            .unwrap();
+        assert!(sim.simulator_mut().session_cfg.is_enabled());
+        assert_eq!(sim.simulator_mut().session_cfg.retention_blocks, 64);
+        // Enabled via a config file's tuning section.
+        let mut cfg = Config::paper_8b();
+        cfg.tuning = Some(crate::config::TuningConfig {
+            session: Some(crate::config::SessionParams {
+                retention_blocks: 48,
+                affinity_weight: 2.0,
+            }),
+            ..Default::default()
+        });
+        let mut sim = Tetris::from_config(&cfg).unwrap().build_simulation().unwrap();
+        assert_eq!(sim.simulator_mut().session_cfg.retention_blocks, 48);
+        assert_eq!(sim.simulator_mut().session_cfg.affinity_weight, 2.0);
+    }
+
+    #[test]
+    fn conversation_trace_installs_session_map() {
+        let mut sim = Tetris::builder()
+            .sessions(SessionConfig::enabled(128))
+            .build_simulation()
+            .unwrap();
+        let trace = sim.generate_conversations(TraceKind::Short, 10, 1.0);
+        assert!(trace.len() >= 10, "at least one turn per session");
+        assert_eq!(sim.simulator_mut().sessions_of.len(), trace.len());
+        // Deterministic in the builder's seed.
+        let mut sim2 = Tetris::builder()
+            .sessions(SessionConfig::enabled(128))
+            .build_simulation()
+            .unwrap();
+        assert_eq!(sim2.generate_conversations(TraceKind::Short, 10, 1.0), trace);
     }
 
     #[test]

@@ -120,6 +120,27 @@ pub trait Observer: Send + Sync {
         let _ = (req, instance, blocks, now);
     }
 
+    /// Session-bound request `req`, placed on decode instance `instance`,
+    /// hit its session's retained prefix at `now`: `cached_tokens` tokens
+    /// of KV transfer into the new sequence and only the suffix is
+    /// prefilled. Fires right after the `on_decode_assign` of the same
+    /// request (and before any `on_kv_borrow`). Emitted by both drivers
+    /// whenever an enabled [`SessionConfig`](crate::session::SessionConfig)
+    /// is installed; never fires with sessions disabled.
+    fn on_prefix_hit(&self, req: u64, instance: usize, cached_tokens: usize, now: f64) {
+        let _ = (req, instance, cached_tokens, now);
+    }
+
+    /// Session `session`'s retained prefix was evicted from decode
+    /// instance `instance` at `now`, freeing `blocks` KV blocks — under
+    /// pool pressure (LRU, before parking or borrowing), displaced by the
+    /// session's own newer turn, over the retention cap, or purged by a
+    /// membership drain. Session-scoped, not request-scoped: its
+    /// [`TraceEvent::req`] reports the *session* id.
+    fn on_prefix_evict(&self, session: u64, instance: usize, blocks: usize, now: f64) {
+        let _ = (session, instance, blocks, now);
+    }
+
     /// Cluster member `instance` of the given `role` (re)joined the
     /// serving pool at `now`: it immediately competes for new placements.
     /// Membership events are cluster-scoped, not request-scoped — their
@@ -250,6 +271,31 @@ pub enum TraceEvent {
         /// Timestamp (seconds from run start).
         at: f64,
     },
+    /// A session-bound request hit its session's retained prefix: only
+    /// the suffix beyond `cached_tokens` is prefilled.
+    PrefixHit {
+        /// Request id.
+        req: u64,
+        /// Decode instance holding the reused prefix.
+        instance: usize,
+        /// Tokens of KV reused from the retained prefix.
+        cached_tokens: usize,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
+    /// A retained session prefix was evicted (pressure, displacement,
+    /// cap, or drain). Session-scoped: [`TraceEvent::req`] reports the
+    /// session id.
+    PrefixEvict {
+        /// Session whose prefix was dropped.
+        session: u64,
+        /// Decode instance the freed blocks returned to.
+        instance: usize,
+        /// KV blocks freed by the eviction.
+        blocks: usize,
+        /// Timestamp (seconds from run start).
+        at: f64,
+    },
     /// A cluster member (re)joined the serving pool. Cluster-scoped:
     /// [`TraceEvent::req`] reports 0.
     MemberJoin {
@@ -300,6 +346,8 @@ impl TraceEvent {
             | TraceEvent::Interrupt { at, .. }
             | TraceEvent::KvBorrow { at, .. }
             | TraceEvent::KvReturn { at, .. }
+            | TraceEvent::PrefixHit { at, .. }
+            | TraceEvent::PrefixEvict { at, .. }
             | TraceEvent::MemberJoin { at, .. }
             | TraceEvent::MemberDrain { at, .. }
             | TraceEvent::RoleConvert { at, .. } => *at,
@@ -321,6 +369,8 @@ impl TraceEvent {
             TraceEvent::Interrupt { .. } => "interrupt",
             TraceEvent::KvBorrow { .. } => "kv_borrow",
             TraceEvent::KvReturn { .. } => "kv_return",
+            TraceEvent::PrefixHit { .. } => "prefix_hit",
+            TraceEvent::PrefixEvict { .. } => "prefix_evict",
             TraceEvent::MemberJoin { .. } => "member_join",
             TraceEvent::MemberDrain { .. } => "member_drain",
             TraceEvent::RoleConvert { .. } => "role_convert",
@@ -331,6 +381,7 @@ impl TraceEvent {
     /// ([`TraceEvent::MemberJoin`], [`TraceEvent::MemberDrain`],
     /// [`TraceEvent::RoleConvert`]) report 0 — the same reserved id the
     /// engine's calibration probes use; real request ids start at 1.
+    /// Session-scoped [`TraceEvent::PrefixEvict`] reports the session id.
     pub fn req(&self) -> u64 {
         match self {
             TraceEvent::Arrival { req, .. }
@@ -343,7 +394,9 @@ impl TraceEvent {
             | TraceEvent::Shed { req, .. }
             | TraceEvent::Interrupt { req, .. }
             | TraceEvent::KvBorrow { req, .. }
-            | TraceEvent::KvReturn { req, .. } => *req,
+            | TraceEvent::KvReturn { req, .. }
+            | TraceEvent::PrefixHit { req, .. } => *req,
+            TraceEvent::PrefixEvict { session, .. } => *session,
             TraceEvent::MemberJoin { .. }
             | TraceEvent::MemberDrain { .. }
             | TraceEvent::RoleConvert { .. } => 0,
@@ -404,6 +457,12 @@ impl TraceRecorder {
                 }
                 TraceEvent::KvBorrow { instance, blocks, .. }
                 | TraceEvent::KvReturn { instance, blocks, .. } => {
+                    o = o.set("instance", *instance).set("blocks", *blocks);
+                }
+                TraceEvent::PrefixHit { instance, cached_tokens, .. } => {
+                    o = o.set("instance", *instance).set("cached_tokens", *cached_tokens);
+                }
+                TraceEvent::PrefixEvict { instance, blocks, .. } => {
                     o = o.set("instance", *instance).set("blocks", *blocks);
                 }
                 TraceEvent::MemberJoin { role, instance, .. }
@@ -550,6 +609,14 @@ impl Observer for TraceRecorder {
         self.push(TraceEvent::KvReturn { req, instance, blocks, at: now });
     }
 
+    fn on_prefix_hit(&self, req: u64, instance: usize, cached_tokens: usize, now: f64) {
+        self.push(TraceEvent::PrefixHit { req, instance, cached_tokens, at: now });
+    }
+
+    fn on_prefix_evict(&self, session: u64, instance: usize, blocks: usize, now: f64) {
+        self.push(TraceEvent::PrefixEvict { session, instance, blocks, at: now });
+    }
+
     fn on_member_join(&self, role: ClusterRole, instance: usize, now: f64) {
         self.push(TraceEvent::MemberJoin { role, instance, at: now });
     }
@@ -643,6 +710,32 @@ mod tests {
         assert!(json.contains("member_join"), "{json}");
         assert!(json.contains("\"to_decode\""), "{json}");
         assert!(json.contains("decode"), "{json}");
+    }
+
+    #[test]
+    fn recorder_captures_session_events() {
+        let rec = TraceRecorder::new();
+        rec.on_decode_assign(5, 0, 1.0);
+        rec.on_prefix_hit(5, 0, 4096, 1.0);
+        rec.on_prefix_evict(42, 1, 8, 1.5);
+        assert_eq!(rec.count("prefix_hit"), 1);
+        assert_eq!(rec.count("prefix_evict"), 1);
+        let evs = rec.events();
+        assert_eq!(
+            evs[1],
+            TraceEvent::PrefixHit { req: 5, instance: 0, cached_tokens: 4096, at: 1.0 }
+        );
+        assert_eq!(evs[1].req(), 5);
+        assert_eq!(
+            evs[2],
+            TraceEvent::PrefixEvict { session: 42, instance: 1, blocks: 8, at: 1.5 }
+        );
+        assert_eq!(evs[2].req(), 42, "evictions are session-scoped");
+        assert_eq!(rec.reqs_with("prefix_hit"), vec![5]);
+        let json = rec.to_json().to_string();
+        assert!(json.contains("prefix_hit"), "{json}");
+        assert!(json.contains("\"cached_tokens\""), "{json}");
+        assert!(json.contains("prefix_evict"), "{json}");
     }
 
     #[test]

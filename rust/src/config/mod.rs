@@ -365,6 +365,58 @@ impl RoleControlParams {
     }
 }
 
+/// [`crate::session::SessionConfig`] as plain config data: present in a
+/// config's `tuning.session` section only when multi-turn prefix reuse
+/// should be enabled. Mirrors the session layer's own validation — a cap
+/// of zero is expressed by omitting the section, not by a zero here.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SessionParams {
+    /// Per-decode-instance cap, in KV blocks, on retained prefixes (>= 1).
+    pub retention_blocks: usize,
+    /// Weight of the decode router's prefix-affinity bonus (>= 0, finite).
+    pub affinity_weight: f64,
+}
+
+impl Default for SessionParams {
+    fn default() -> Self {
+        SessionParams {
+            retention_blocks: 64,
+            affinity_weight: crate::session::DEFAULT_AFFINITY_WEIGHT,
+        }
+    }
+}
+
+impl SessionParams {
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("retention_blocks", self.retention_blocks)
+            .set("affinity_weight", self.affinity_weight)
+    }
+
+    /// Deserialize from JSON (all fields required).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(SessionParams {
+            retention_blocks: j.req_usize("retention_blocks")?,
+            affinity_weight: j.req_f64("affinity_weight")?,
+        })
+    }
+
+    /// Reject degenerate session parameters.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.retention_blocks >= 1,
+            "session.retention_blocks must be >= 1 (omit the section to disable sessions)"
+        );
+        anyhow::ensure!(
+            self.affinity_weight >= 0.0 && self.affinity_weight.is_finite(),
+            "session.affinity_weight must be >= 0 and finite, got {}",
+            self.affinity_weight
+        );
+        Ok(())
+    }
+}
+
 /// The serving knobs that were builder-only before PR 8 — admission
 /// thresholds, the deadline monitor's safety factor, the anti-starvation
 /// bound, the KV-broker borrow cap, and the optional background role
@@ -386,6 +438,9 @@ pub struct TuningConfig {
     pub role: Option<RoleControlParams>,
     /// Per-instance KV borrow/lend cap in blocks; 0 disables the broker.
     pub kv_borrow_cap: usize,
+    /// Multi-turn session layer (prefix retention cap + affinity weight);
+    /// `None` disables it.
+    pub session: Option<SessionParams>,
 }
 
 impl Default for TuningConfig {
@@ -396,12 +451,13 @@ impl Default for TuningConfig {
             admission: AdmissionThresholds::default(),
             role: None,
             kv_borrow_cap: 0,
+            session: None,
         }
     }
 }
 
 impl TuningConfig {
-    /// Serialize to JSON (`role` omitted when `None`).
+    /// Serialize to JSON (`role` and `session` omitted when `None`).
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj()
             .set("deadline_safety", self.deadline_safety)
@@ -411,10 +467,14 @@ impl TuningConfig {
         if let Some(r) = &self.role {
             j = j.set("role", r.to_json());
         }
+        if let Some(s) = &self.session {
+            j = j.set("session", s.to_json());
+        }
         j
     }
 
-    /// Deserialize from JSON (`role` optional, everything else required).
+    /// Deserialize from JSON (`role` and `session` optional, everything
+    /// else required).
     pub fn from_json(j: &Json) -> Result<Self> {
         Ok(TuningConfig {
             deadline_safety: j.req_f64("deadline_safety")?,
@@ -424,6 +484,7 @@ impl TuningConfig {
             )?,
             role: j.get("role").map(RoleControlParams::from_json).transpose()?,
             kv_borrow_cap: j.req_usize("kv_borrow_cap")?,
+            session: j.get("session").map(SessionParams::from_json).transpose()?,
         })
     }
 
@@ -437,6 +498,9 @@ impl TuningConfig {
         self.admission.validate()?;
         if let Some(r) = &self.role {
             r.validate()?;
+        }
+        if let Some(s) = &self.session {
+            s.validate()?;
         }
         Ok(())
     }
@@ -613,6 +677,7 @@ mod tests {
                 cooldown: 0.5,
             }),
             kv_borrow_cap: 32,
+            session: Some(SessionParams { retention_blocks: 96, affinity_weight: 1.5 }),
         });
         c
     }
@@ -654,5 +719,24 @@ mod tests {
         let mut c = tuned_config();
         c.tuning.as_mut().unwrap().role.as_mut().unwrap().invert_factor = 1.0;
         assert!(Config::from_json(&c.to_json()).is_err());
+
+        let mut c = tuned_config();
+        c.tuning.as_mut().unwrap().session.as_mut().unwrap().retention_blocks = 0;
+        assert!(Config::from_json(&c.to_json()).is_err());
+
+        let mut c = tuned_config();
+        c.tuning.as_mut().unwrap().session.as_mut().unwrap().affinity_weight = -1.0;
+        assert!(Config::from_json(&c.to_json()).is_err());
+    }
+
+    #[test]
+    fn session_absent_keeps_old_tuning_format() {
+        // Pre-session tuned configs carry no "session" key and must keep
+        // loading; serializing a session-free tuning emits no such key.
+        let mut c = tuned_config();
+        c.tuning.as_mut().unwrap().session = None;
+        assert!(!c.to_json().to_string().contains("session"));
+        let back = Config::from_json(&c.to_json()).unwrap();
+        assert!(back.tuning.unwrap().session.is_none());
     }
 }

@@ -43,7 +43,7 @@
 //! flag, so reports never depend on parsing infinity back.
 
 use crate::api::{TetrisBuilder, TraceRecorder};
-use crate::config::{Config, RoleControlParams, SchedConfig, TuningConfig};
+use crate::config::{Config, RoleControlParams, SchedConfig, SessionParams, TuningConfig};
 use crate::sched::ImprovementController;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -181,6 +181,12 @@ pub struct ParamSpace {
     pub role_cooldown: Vec<f64>,
     /// KV-broker per-instance borrow-cap candidates (blocks; 0 disables).
     pub kv_borrow_cap: Vec<usize>,
+    /// Session retained-prefix cap candidates (blocks per decode
+    /// instance; activates the session layer on profiles whose base has
+    /// none).
+    pub session_retention: Vec<usize>,
+    /// Session prefix-affinity weight candidates.
+    pub session_affinity: Vec<f64>,
 }
 
 impl Default for TunedProfile {
@@ -229,6 +235,8 @@ impl ParamSpace {
             self.invert_factor.len(),
             self.role_cooldown.len(),
             self.kv_borrow_cap.len(),
+            self.session_retention.len(),
+            self.session_affinity.len(),
         ]
         .iter()
         .filter(|&&n| n > 0)
@@ -258,6 +266,12 @@ impl ParamSpace {
             p.tuning.role.get_or_insert_with(RoleControlParams::default).cooldown = *v;
         });
         g = expand(g, &self.kv_borrow_cap, |p, v| p.tuning.kv_borrow_cap = *v);
+        g = expand(g, &self.session_retention, |p, v| {
+            p.tuning.session.get_or_insert_with(SessionParams::default).retention_blocks = *v;
+        });
+        g = expand(g, &self.session_affinity, |p, v| {
+            p.tuning.session.get_or_insert_with(SessionParams::default).affinity_weight = *v;
+        });
         g
     }
 
@@ -336,6 +350,22 @@ impl ParamSpace {
             if v != p.tuning.kv_borrow_cap {
                 let mut q = p.clone();
                 q.tuning.kv_borrow_cap = v;
+                push(q);
+            }
+        }
+        let session = p.tuning.session.unwrap_or_default();
+        for &v in &self.session_retention {
+            if p.tuning.session.is_none() || v != session.retention_blocks {
+                let mut q = p.clone();
+                q.tuning.session.get_or_insert_with(SessionParams::default).retention_blocks =
+                    v;
+                push(q);
+            }
+        }
+        for &v in &self.session_affinity {
+            if p.tuning.session.is_none() || v != session.affinity_weight {
+                let mut q = p.clone();
+                q.tuning.session.get_or_insert_with(SessionParams::default).affinity_weight = v;
                 push(q);
             }
         }
@@ -913,6 +943,24 @@ mod tests {
         // No possible move: returned unchanged.
         let frozen = ParamSpace::new(base.clone());
         assert_eq!(frozen.neighbor(&base, &mut a), base);
+    }
+
+    #[test]
+    fn session_axes_sweep_and_activate() {
+        let mut space = ParamSpace::new(TunedProfile::default());
+        space.session_retention = vec![32, 64];
+        space.session_affinity = vec![0.5];
+        assert_eq!(space.n_trials(), 2);
+        let g = space.grid();
+        assert_eq!(g[0].tuning.session.unwrap().retention_blocks, 32);
+        assert_eq!(g[1].tuning.session.unwrap().retention_blocks, 64);
+        assert!(g.iter().all(|p| p.tuning.session.unwrap().affinity_weight == 0.5));
+        // A neighbor move can activate the session layer on a
+        // session-less base profile.
+        let mut rng = Pcg64::with_stream(3, ANNEAL_STREAM);
+        assert!(space.base.tuning.session.is_none());
+        let n = space.neighbor(&space.base, &mut rng);
+        assert!(n.tuning.session.is_some());
     }
 
     #[test]

@@ -141,6 +141,41 @@ impl BlockManager {
         Ok(())
     }
 
+    /// Reuse a retained sequence's blocks as the prefix of a new sequence
+    /// (multi-turn prefix KV reuse, see [`crate::session`]): the old
+    /// sequence `prefix` is consumed, `extra_local` fresh blocks are
+    /// appended behind its blocks, and the result is a *new* sequence
+    /// logically holding `tokens` tokens. Like
+    /// [`BlockManager::allocate_seq_partial`], `extra_local` may
+    /// under-back the suffix when part of it lives on a remote lease. On
+    /// OOM the retained sequence is left exactly as it was — nothing
+    /// leaks, nothing is consumed.
+    pub fn reuse_seq(&mut self, prefix: u64, tokens: usize, extra_local: usize) -> Result<u64> {
+        if !self.seqs.contains_key(&prefix) {
+            return Err(anyhow!("unknown prefix seq {prefix}"));
+        }
+        let room = self.blocks_for(tokens);
+        let have = self.seqs[&prefix].blocks.len();
+        let need = extra_local.min(room.saturating_sub(have));
+        if need > self.free.len() {
+            return Err(anyhow!(
+                "OOM reusing seq {prefix}: need {need} suffix blocks, {} free of {}",
+                self.free.len(),
+                self.total_blocks
+            ));
+        }
+        let mut alloc = self.seqs.remove(&prefix).expect("checked above");
+        for _ in 0..need {
+            alloc.blocks.push(self.free.pop().unwrap());
+        }
+        alloc.tokens = tokens;
+        let id = self.next_seq;
+        self.next_seq += 1;
+        self.seqs.insert(id, alloc);
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Ok(id)
+    }
+
     /// Release a sequence's blocks.
     pub fn free_seq(&mut self, seq: u64) {
         if let Some(alloc) = self.seqs.remove(&seq) {
@@ -255,6 +290,36 @@ mod tests {
         assert!(m.grow_seq(777, 1).is_err(), "unknown seq");
         m.free_seq(s);
         assert_eq!(m.free_blocks(), 10, "grown blocks free with the seq");
+    }
+
+    #[test]
+    fn reuse_transfers_prefix_blocks_into_a_new_seq() {
+        let mut m = BlockManager::new(10, 4);
+        let p = m.allocate_seq(10).unwrap(); // 3 blocks, 10 tokens
+        assert_eq!(m.used_blocks(), 3);
+        // Next turn: 18 tokens total -> 5 blocks, 2 fresh behind the 3 kept.
+        let s = m.reuse_seq(p, 18, 2).unwrap();
+        assert_ne!(s, p);
+        assert!(m.seq_tokens(p).is_none(), "prefix seq is consumed");
+        assert_eq!(m.seq_tokens(s), Some(18));
+        assert_eq!(m.seq_blocks(s), Some(5));
+        assert_eq!(m.used_blocks(), 5, "3 reused + 2 fresh");
+        m.free_seq(s);
+        assert_eq!(m.free_blocks(), 10);
+    }
+
+    #[test]
+    fn reuse_oom_leaves_the_prefix_intact() {
+        let mut m = BlockManager::new(4, 4);
+        let p = m.allocate_seq(12).unwrap(); // 3 blocks
+        assert!(m.reuse_seq(p, 40, 7).is_err(), "only 1 block free");
+        assert_eq!(m.seq_tokens(p), Some(12), "prefix survives the failure");
+        assert_eq!(m.used_blocks(), 3);
+        assert!(m.reuse_seq(999, 8, 1).is_err(), "unknown prefix");
+        // Under-backed reuse (part of the suffix on a remote lease).
+        let s = m.reuse_seq(p, 40, 1).unwrap();
+        assert_eq!(m.seq_blocks(s), Some(4));
+        assert_eq!(m.seq_tokens(s), Some(40));
     }
 
     #[test]

@@ -91,6 +91,26 @@ impl TtftEstimator {
         waited.max(0.0) + self.remaining_bound(remaining_tokens, lane_floor)
     }
 
+    /// [`TtftEstimator::ttft_bound`] with decode-lane pressure folded in.
+    /// A finished prefill still cannot produce its first token until a
+    /// decode lane accepts its KV handoff; `decode_pressure` is a lower
+    /// bound (seconds) on that admission delay — the live monitor feeds it
+    /// from the decode-lane queue clocks, saturated at 0 when any lane is
+    /// idle. Like the lane floor it is an estimate, so it enters scaled by
+    /// the safety factor; with `decode_pressure = 0.0` this is *exactly*
+    /// `ttft_bound(waited, remaining_tokens, lane_floor)`, and the bound
+    /// stays monotone in every argument.
+    pub fn ttft_bound_with_decode(
+        &self,
+        waited: f64,
+        remaining_tokens: usize,
+        lane_floor: f64,
+        decode_pressure: f64,
+    ) -> f64 {
+        self.ttft_bound(waited, remaining_tokens, lane_floor)
+            + self.safety * decode_pressure.max(0.0)
+    }
+
     /// Whether a deadline is provably blown: the bound strictly exceeds it.
     pub fn blown(&self, deadline: f64, waited: f64, remaining: usize, lane_floor: f64) -> bool {
         self.ttft_bound(waited, remaining, lane_floor) > deadline
@@ -127,6 +147,29 @@ mod tests {
         assert!((with_floor - 0.5).abs() < 1e-12);
         assert!(e.blown(1.0, 1.5, 0, 0.0), "elapsed wait past the deadline is blown");
         assert!(!e.blown(1.0, 0.1, 0, 0.0));
+    }
+
+    #[test]
+    fn decode_pressure_tightens_the_bound_monotonically() {
+        let e = est();
+        // Zero pressure is bit-for-bit the pressure-free bound.
+        assert_eq!(
+            e.ttft_bound_with_decode(0.7, 100, 0.2, 0.0),
+            e.ttft_bound(0.7, 100, 0.2)
+        );
+        // Monotone in the new argument, scaled by safety like the floor.
+        let delta = e.ttft_bound_with_decode(0.0, 0, 0.0, 1.0)
+            - e.ttft_bound_with_decode(0.0, 0, 0.0, 0.0);
+        assert!((delta - 0.5).abs() < 1e-12);
+        assert!(
+            e.ttft_bound_with_decode(0.0, 100, 0.0, 0.3)
+                <= e.ttft_bound_with_decode(0.0, 100, 0.0, 0.6)
+        );
+        // Negative pressure clamps — never loosens the bound.
+        assert_eq!(
+            e.ttft_bound_with_decode(0.7, 100, 0.2, -3.0),
+            e.ttft_bound(0.7, 100, 0.2)
+        );
     }
 
     #[test]

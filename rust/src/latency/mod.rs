@@ -37,5 +37,5 @@ pub mod transfer;
 pub use calibration::a100_model_for;
 pub use deadline::{TtftEstimator, DEFAULT_DEADLINE_SAFETY};
 pub use decode::{DecodeModel, DecodeQuickfit};
-pub use prefill::{PrefillModel, SpCoeffs};
+pub use prefill::{AttnVariant, PrefillModel, SpCoeffs, PASS_KV_COMM, PASS_Q_COMM};
 pub use transfer::TransferModel;

@@ -17,6 +17,46 @@ use crate::util::json::Json;
 use anyhow::Result;
 use std::collections::BTreeMap;
 
+/// Per-token communication cost of the **pass-KV** attention variant,
+/// as a fraction of the fitted fully-connected coefficient `b`: the
+/// cached K/V tensors stream from the holding decode instance to the
+/// prefill workers, so its cost scales with the *cached* token count.
+pub const PASS_KV_COMM: f64 = 0.15;
+
+/// Per-token communication cost of the **pass-Q** attention variant, as a
+/// fraction of `b`: the suffix chunk's Q tensors travel to the KV holder
+/// and the attention output travels back, so its cost scales with the
+/// *chunk* token count (Q + output ≈ twice the one-way KV density, hence
+/// the 2× ratio over [`PASS_KV_COMM`]).
+pub const PASS_Q_COMM: f64 = 0.30;
+
+/// Which attention-communication variant a suffix-prefill chunk uses
+/// (Context Parallelism, PAPERS.md): ship the cached KV to the chunk's
+/// workers (**pass-KV**) or ship the chunk's queries to the KV holder
+/// (**pass-Q**). Chosen per chunk by comparing the two communication
+/// volumes, which reduces to CP's cache-hit-fraction threshold: pass-Q
+/// wins exactly when `cached / (cached + l)` is high enough that moving
+/// queries beats moving the cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnVariant {
+    /// Stream the cached K/V to the prefill workers (low cache-hit
+    /// fraction; the only variant when nothing is cached).
+    PassKv,
+    /// Stream the chunk's queries to the KV holder (high cache-hit
+    /// fraction — the cache is too big to move).
+    PassQ,
+}
+
+impl AttnVariant {
+    /// Stable string tag (`"pass_kv"` / `"pass_q"`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            AttnVariant::PassKv => "pass_kv",
+            AttnVariant::PassQ => "pass_q",
+        }
+    }
+}
+
 /// Eq. (1) coefficients for one SP size.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SpCoeffs {
@@ -36,6 +76,27 @@ impl SpCoeffs {
     #[inline]
     pub fn predict(&self, c_hist: f64, l: f64) -> f64 {
         self.a + self.b * l + self.c * c_hist * l + self.d * l * l
+    }
+
+    /// Predicted latency for a *suffix* chunk of `l` tokens whose request
+    /// reuses `cached` tokens of retained session KV, with `c_hist` total
+    /// historical tokens (cached prefix included). Adds the cheaper of the
+    /// pass-KV / pass-Q attention-communication costs on top of
+    /// [`SpCoeffs::predict`] and reports which variant won. With
+    /// `cached == 0` this is *exactly* `predict(c_hist, l)` with
+    /// [`AttnVariant::PassKv`] — the sessions-off parity guarantee.
+    pub fn predict_suffix(&self, cached: f64, c_hist: f64, l: f64) -> (f64, AttnVariant) {
+        if cached <= 0.0 {
+            return (self.predict(c_hist, l), AttnVariant::PassKv);
+        }
+        let pass_kv = PASS_KV_COMM * self.b * cached;
+        let pass_q = PASS_Q_COMM * self.b * l;
+        let (comm, variant) = if pass_q < pass_kv {
+            (pass_q, AttnVariant::PassQ)
+        } else {
+            (pass_kv, AttnVariant::PassKv)
+        };
+        (self.predict(c_hist, l) + comm, variant)
     }
 
     /// Solve `predict(c_hist, L) = budget` for L ≥ 0. Returns 0 when even an
@@ -116,6 +177,21 @@ impl PrefillModel {
             .get(&sp)
             .unwrap_or_else(|| panic!("no Eq.(1) coefficients for SP={sp}"))
             .predict(c_hist, l)
+    }
+
+    /// Suffix-chunk prediction with the pass-KV/pass-Q rule (see
+    /// [`SpCoeffs::predict_suffix`]); panics if `sp` was never fit.
+    pub fn predict_suffix(
+        &self,
+        sp: usize,
+        cached: f64,
+        c_hist: f64,
+        l: f64,
+    ) -> (f64, AttnVariant) {
+        self.coeffs
+            .get(&sp)
+            .unwrap_or_else(|| panic!("no Eq.(1) coefficients for SP={sp}"))
+            .predict_suffix(cached, c_hist, l)
     }
 
     /// Inverse solve (Algorithm 3).
@@ -267,6 +343,38 @@ mod tests {
         let co = SpCoeffs { a: 0.01, b: 1e-5, c: 0.0, d: 0.0 };
         let l = co.solve_len(0.0, 0.01 + 1e-5 * 2000.0);
         assert!((l - 2000.0).abs() < 1e-6, "l={l}");
+    }
+
+    #[test]
+    fn suffix_without_cache_is_exactly_predict() {
+        let co = toy_coeffs();
+        let (t, v) = co.predict_suffix(0.0, 10_000.0, 4_000.0);
+        assert_eq!(t, co.predict(10_000.0, 4_000.0), "bit-for-bit when nothing is cached");
+        assert_eq!(v, AttnVariant::PassKv);
+    }
+
+    #[test]
+    fn suffix_variant_follows_cache_hit_fraction() {
+        let co = toy_coeffs();
+        // Small cache, big chunk: moving the cache (pass-KV) is cheaper.
+        let (t_kv, v) = co.predict_suffix(1_000.0, 9_000.0, 8_000.0);
+        assert_eq!(v, AttnVariant::PassKv);
+        assert!((t_kv - (co.predict(9_000.0, 8_000.0) + PASS_KV_COMM * co.b * 1_000.0)).abs()
+            < 1e-12);
+        // Big cache, small chunk: moving the queries (pass-Q) is cheaper.
+        let (t_q, v) = co.predict_suffix(100_000.0, 100_000.0, 2_000.0);
+        assert_eq!(v, AttnVariant::PassQ);
+        assert!((t_q - (co.predict(100_000.0, 2_000.0) + PASS_Q_COMM * co.b * 2_000.0)).abs()
+            < 1e-12);
+        // The crossover sits exactly at PASS_Q·l = PASS_KV·cached.
+        let l = 3_000.0;
+        let crossover = PASS_Q_COMM / PASS_KV_COMM * l;
+        assert_eq!(co.predict_suffix(crossover * 0.99, 50_000.0, l).1, AttnVariant::PassKv);
+        assert_eq!(co.predict_suffix(crossover * 1.01, 50_000.0, l).1, AttnVariant::PassQ);
+        // Suffix prefill of the cheap variant always beats re-prefilling
+        // the cached tokens from scratch.
+        let full = co.predict(0.0, 102_000.0);
+        assert!(t_q < full, "reuse must be cheaper than recompute");
     }
 
     #[test]

@@ -117,6 +117,9 @@ pub mod kvcache;
 /// Cluster-wide distributed KV pool: lease-based block borrowing between
 /// decode instances with per-instance caps and debt tracking.
 pub mod kvbroker;
+/// Multi-turn sessions: prefix KV retention, LRU eviction, and reuse
+/// bookkeeping shared verbatim by the simulator and the live server.
+pub mod session;
 /// CDSP cache-transfer management: handshake-allocated transfer backends.
 pub mod transfer;
 /// Ring-attention communication schedule model.

@@ -33,9 +33,14 @@ USAGE: tetris <COMMAND> [OPTIONS]
 COMMANDS:
   simulate      run the calibrated cluster simulator
                   --policy <name>  (see `tetris policies`)
-                  --trace <short|medium|long>  --rate <req/s>  --n <requests>
+                  --trace <short|medium|long|mixed>  --rate <req/s>  --n <requests>
                   --model <8b|70b>  --seed <u64>  [--dynamic-rate]
                   --config <cfg.json>  (full config file; CLI flags override)
+                  [--sessions <blocks>]  (multi-turn prefix reuse: retain
+                            finished prompts as session prefixes up to
+                            <blocks> KV blocks per decode instance, drive a
+                            multi-turn conversation trace of --n sessions,
+                            print reuse counters)
   compare       the paper's policy set on one trace (Fig. 8 row)
                   --trace ... --rate ... --n ... --model ...  [--config cfg.json]
   policies      list the names the policy registry resolves
@@ -76,6 +81,11 @@ COMMANDS:
                             them, round-trip a prefill↔decode role
                             conversion; needs --workers >= 2 and
                             --decode-workers >= 2)
+                  [--sessions <blocks>]  (multi-turn session demo: every
+                            request runs a two-turn conversation whose
+                            follow-up reuses the retained prefix — only
+                            the suffix is prefilled; prints per-turn TTFT
+                            and prefix hit/evict counts)
 ";
 
 fn main() {
@@ -148,6 +158,7 @@ fn gen_trace(args: &Args) -> Vec<tetris::workload::Request> {
 }
 
 fn cmd_simulate(args: &Args) -> i32 {
+    use tetris::api::{SessionConfig, TraceRecorder};
     let mut b = match base_builder(args) {
         Ok(b) => b,
         Err(e) => {
@@ -156,9 +167,6 @@ fn cmd_simulate(args: &Args) -> i32 {
         }
     };
     let model_label = b.model_name().to_string();
-    // The trace seed follows the resolved configuration (config file or
-    // --seed override), so one config file pins the whole experiment.
-    let trace = gen_trace_with_seed(args, b.seed_value());
     if args.flag("dynamic-rate") {
         b = b.controller(ImprovementController::new(
             RateProfile::default_trend(4.0),
@@ -166,12 +174,29 @@ fn cmd_simulate(args: &Args) -> i32 {
             30.0,
         ));
     }
+    let session_blocks = args.usize_or("sessions", 0);
+    let recorder = Arc::new(TraceRecorder::new());
+    if session_blocks > 0 {
+        b = b.sessions(SessionConfig::enabled(session_blocks)).observe(recorder.clone());
+    }
+    // The trace seed follows the resolved configuration (config file or
+    // --seed override), so one config file pins the whole experiment.
+    let seed = b.seed_value();
     let mut sim = match b.build_simulation() {
         Ok(s) => s,
         Err(e) => {
             eprintln!("invalid configuration: {e:#}");
             return 2;
         }
+    };
+    // With --sessions, --n counts conversations (multi-turn sessions)
+    // rather than single requests.
+    let trace = if session_blocks > 0 {
+        let kind =
+            TraceKind::parse(&args.str_or("trace", "medium")).unwrap_or(TraceKind::Medium);
+        sim.generate_conversations(kind, args.usize_or("n", 100), args.f64_or("rate", 1.0))
+    } else {
+        gen_trace_with_seed(args, seed)
     };
     let m = sim.run(&trace);
     let ttft = m.ttft_summary();
@@ -191,6 +216,14 @@ fn cmd_simulate(args: &Args) -> i32 {
         "throughput: {:.0} tok/s, {:.2} req/s",
         m.token_throughput(), m.request_throughput()
     );
+    if session_blocks > 0 {
+        println!(
+            "prefix reuse: {} hits, {} evictions over {} turns",
+            recorder.count("prefix_hit"),
+            recorder.count("prefix_evict"),
+            trace.len()
+        );
+    }
     0
 }
 
@@ -475,6 +508,7 @@ fn cmd_serve(args: &Args) -> i32 {
     );
     let recorder = Arc::new(TraceRecorder::new());
     let kv_borrow = args.flag("kv-borrow");
+    let session_blocks = args.usize_or("sessions", 0);
     let mut builder = Tetris::builder()
         .policy("tetris-cdsp")
         .cluster(ClusterConfig::tiny(workers, decode_workers))
@@ -487,6 +521,12 @@ fn cmd_serve(args: &Args) -> i32 {
         let cap = args.usize_or("borrow-cap", 64);
         builder = builder.kv_broker(KvBrokerConfig::enabled(cap)).shard_streams(2);
         println!("kv broker: enabled, per-instance borrow/lend cap {cap} blocks");
+    }
+    if session_blocks > 0 {
+        builder = builder.sessions(tetris::api::SessionConfig::enabled(session_blocks));
+        println!(
+            "sessions: enabled, retained-prefix cap {session_blocks} blocks per instance"
+        );
     }
     let server = match builder.build_server(engine.clone(), workers) {
         Ok(s) => s,
@@ -512,6 +552,9 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     if args.flag("elastic") {
         return serve_elastic_demo(server, &reqs, &recorder, workers, decode_workers);
+    }
+    if session_blocks > 0 {
+        return serve_sessions_demo(server, &reqs, &recorder, vocab);
     }
     // Drive the run through the handle-based async API: the burst routes
     // atomically on the dispatcher, the caller streams tokens and awaits
@@ -585,6 +628,90 @@ fn cmd_serve(args: &Args) -> i32 {
         );
     }
     let _ = server.shutdown();
+    0
+}
+
+/// The `serve --sessions` demo: every base request becomes a two-turn
+/// conversation. Turn 1 is submitted under a session id and awaited; its
+/// prompt+output KV stays retained on its decode instance. Turn 2 extends
+/// turn 1's transcript with fresh tokens and is submitted under the same
+/// session id — the dispatcher routes it back to the holder, prefills only
+/// the suffix, and the recorder counts the prefix hit.
+fn serve_sessions_demo(
+    server: tetris::serve::Server,
+    reqs: &[tetris::serve::ServeRequest],
+    recorder: &tetris::api::TraceRecorder,
+    vocab: usize,
+) -> i32 {
+    use tetris::api::{Completion, SubmitOptions};
+    use tetris::serve::ServeRequest;
+    let client = server.client();
+    let n = reqs.len() as u64;
+    let mut turn1 = Vec::new();
+    let mut turn2 = Vec::new();
+    let mut failures = 0usize;
+    for r in reqs {
+        let session = r.id + 1;
+        let mut h = match client.submit_with(r, SubmitOptions::interactive().session(session)) {
+            Ok(h) => h,
+            Err(e) => {
+                eprintln!("submission failed: {e:#}");
+                let _ = server.shutdown();
+                return 1;
+            }
+        };
+        let first = match h.wait() {
+            Completion::Finished(m) => m,
+            other => {
+                eprintln!("turn 1 of session {session} did not finish: {other:?}");
+                failures += 1;
+                continue;
+            }
+        };
+        turn1.push(first.ttft());
+        // Turn 2: the full transcript so far plus fresh user tokens.
+        let mut prompt = r.prompt.clone();
+        let start = prompt.len();
+        prompt.extend((0..32).map(|i| (((start + i) * 13 + 5) % vocab) as i32));
+        let follow = ServeRequest { id: r.id + n, prompt, output_len: r.output_len };
+        let mut h =
+            match client.submit_with(&follow, SubmitOptions::interactive().session(session)) {
+                Ok(h) => h,
+                Err(e) => {
+                    eprintln!("submission failed: {e:#}");
+                    let _ = server.shutdown();
+                    return 1;
+                }
+            };
+        match h.wait() {
+            Completion::Finished(m) => turn2.push(m.ttft()),
+            other => {
+                eprintln!("turn 2 of session {session} did not finish: {other:?}");
+                failures += 1;
+            }
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "sessions: {} conversations, turn-1 mean TTFT {}, turn-2 mean TTFT {}",
+        reqs.len(),
+        fmt_secs(mean(&turn1)),
+        fmt_secs(mean(&turn2))
+    );
+    println!(
+        "prefix reuse: {} hits, {} evictions",
+        recorder.count("prefix_hit"),
+        recorder.count("prefix_evict")
+    );
+    let _ = server.shutdown();
+    if failures > 0 {
+        eprintln!("serving failed: {failures} turns did not finish");
+        return 1;
+    }
+    if recorder.count("prefix_hit") == 0 {
+        eprintln!("expected at least one prefix hit across the follow-up turns");
+        return 1;
+    }
     0
 }
 

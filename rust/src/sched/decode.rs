@@ -61,9 +61,23 @@
 //! lent blocks, so placements are bit-for-bit the local-only decisions —
 //! the zero-borrow-cap parity tests pin this.
 
+//! # Sessions & prefix reuse
+//!
+//! The router also owns a [`SessionStore`]: when sessions are enabled, a
+//! finished session-bound request *retains* its KV blocks on its decode
+//! instance instead of freeing them, and the session's next turn may
+//! route back onto that prefix ([`DecodeRouter::route_session`]) and
+//! reserve only the suffix. Retained blocks stay reclaimable: every
+//! instance's effective availability is `spare + evictable`, and the
+//! commit path evicts LRU prefixes *before* it ever opens a lease or
+//! refuses a request — eviction strictly precedes parking and borrowing.
+//! With [`SessionConfig::disabled`] every session term is exactly zero
+//! and [`DecodeRouter::route`] is bit-for-bit the pre-session router.
+
 use crate::cluster::MemberState;
 use crate::kvbroker::{KvBroker, KvBrokerConfig};
 use crate::kvcache::BlockManager;
+use crate::session::{SessionConfig, SessionStore};
 
 /// State of one decoding instance as the router sees it.
 #[derive(Clone, Debug)]
@@ -126,6 +140,13 @@ pub struct DecodeRouter {
     /// (never leases, scores untouched) unless constructed through
     /// [`DecodeRouter::with_broker`] with an enabled config.
     pub broker: KvBroker,
+    /// Multi-turn session bookkeeping: retained prefixes, pending turn
+    /// bindings, LRU eviction. Disabled (inert, every term exactly zero)
+    /// unless constructed through [`DecodeRouter::with_sessions`] with an
+    /// enabled config. Drivers drain
+    /// [`SessionStore::take_evictions`] after router calls to emit
+    /// `on_prefix_evict` outside any lock.
+    pub sessions: SessionStore,
     /// Per-instance membership state (parallel to `instances`).
     status: Vec<MemberState>,
     /// Monotone counter bumped on every membership mutation.
@@ -148,11 +169,24 @@ impl DecodeRouter {
         block_tokens: usize,
         broker: KvBrokerConfig,
     ) -> Self {
+        Self::with_sessions(n, blocks_per_instance, block_tokens, broker, SessionConfig::disabled())
+    }
+
+    /// A router whose instances additionally retain multi-turn session
+    /// prefixes under `sessions` (see [`crate::session`]).
+    pub fn with_sessions(
+        n: usize,
+        blocks_per_instance: usize,
+        block_tokens: usize,
+        broker: KvBrokerConfig,
+        sessions: SessionConfig,
+    ) -> Self {
         DecodeRouter {
             instances: (0..n)
                 .map(|_| DecodeInstanceState::new(blocks_per_instance, block_tokens))
                 .collect(),
             broker: KvBroker::new(n, broker),
+            sessions: SessionStore::new(sessions, n),
             status: vec![MemberState::Active; n],
             membership_epoch: 0,
         }
@@ -182,17 +216,63 @@ impl DecodeRouter {
     /// their spare is reported as 0, so the broker's lender walk skips
     /// them too.
     pub fn route(&mut self, tokens: usize, req: u64) -> Option<usize> {
+        self.route_session(tokens, tokens, req, None)
+    }
+
+    /// [`DecodeRouter::route`] with multi-turn session awareness. If
+    /// `session` names a session whose retained prefix is usable (held on
+    /// an `Active` instance and strictly shorter than `prompt_tokens`),
+    /// the holding instance's need shrinks by the cached blocks and its
+    /// score gains the prefix-affinity bonus
+    /// `affinity_weight × cached_blocks / total_blocks`; routing onto the
+    /// holder is a *hit* (the prefix pins until the turn consumes or
+    /// aborts it). Every instance's availability counts its unpinned
+    /// retained blocks, and the commit path evicts LRU prefixes before
+    /// opening a lease — eviction strictly precedes parking and
+    /// borrowing. With sessions disabled every added term is exactly
+    /// zero, so `route` delegates here without changing a single
+    /// placement.
+    pub fn route_session(
+        &mut self,
+        tokens: usize,
+        prompt_tokens: usize,
+        req: u64,
+        session: Option<u64>,
+    ) -> Option<usize> {
         let enabled = self.broker.is_enabled();
+        // The usable prefix, if the request's session holds one on an
+        // active instance and the new prompt strictly extends it.
+        let prefix = session
+            .and_then(|s| self.sessions.usable_prefix(s))
+            .filter(|p| p.tokens > 0 && p.tokens < prompt_tokens)
+            .map(|p| (p.instance, p.blocks));
+        let (holder, cached_blocks) = match prefix.filter(|&(h, _)| self.is_active(h)) {
+            Some((h, b)) => (Some(h), b),
+            None => (None, 0),
+        };
         let spare: Vec<usize> = (0..self.instances.len())
             .map(|i| if self.is_active(i) { self.lendable_spare(i) } else { 0 })
             .collect();
+        let affinity = self.sessions.config().affinity_weight;
         let mut best: Option<(usize, f64)> = None;
         for (i, inst) in self.instances.iter().enumerate() {
             if !self.is_active(i) {
                 continue;
             }
-            let need = inst.blocks_for(tokens);
-            let avail = spare[i];
+            let hit_here = holder == Some(i);
+            let need = if hit_here {
+                inst.blocks_for(tokens).saturating_sub(cached_blocks)
+            } else {
+                inst.blocks_for(tokens)
+            };
+            // Unpinned retained blocks are reclaimable-on-demand, so they
+            // count as available — except the very prefix this request
+            // wants to reuse. Exactly 0 while sessions are disabled.
+            let mut evictable = self.sessions.evictable_on(i);
+            if hit_here {
+                evictable = evictable.saturating_sub(cached_blocks);
+            }
+            let avail = spare[i] + evictable;
             let shortfall = need.saturating_sub(avail);
             if shortfall > 0 {
                 if !enabled || shortfall > self.broker.borrow_headroom(i) {
@@ -210,13 +290,24 @@ impl DecodeRouter {
             }
             // With the broker disabled, `avail` equals the instance's own
             // availability and the penalty term is exactly 0.0, so `f` is
-            // bit-for-bit the local-only freeness rate.
-            let mut f = avail as f64 / (inst.active_batch + inst.pending_transfers + 1) as f64;
+            // bit-for-bit the local-only freeness rate. On the holder the
+            // cached blocks serve this request without consuming headroom,
+            // so they count toward the *score* (though never toward
+            // allocation feasibility above) — otherwise retention would
+            // make the holder look exactly `cached_blocks` less free and
+            // hits would flee their own prefix.
+            let score_avail = if hit_here { avail + cached_blocks } else { avail };
+            let mut f =
+                score_avail as f64 / (inst.active_batch + inst.pending_transfers + 1) as f64;
             if enabled {
                 let total = inst.blocks.total_blocks().max(1);
                 f -= self.broker.config().debt_penalty
                     * (self.broker.debt(i) + shortfall) as f64
                     / total as f64;
+            }
+            if hit_here {
+                let total = inst.blocks.total_blocks().max(1);
+                f += affinity * cached_blocks as f64 / total as f64;
             }
             match best {
                 None => best = Some((i, f)),
@@ -225,23 +316,67 @@ impl DecodeRouter {
             }
         }
         let (idx, _) = best?;
-        let need = self.instances[idx].blocks_for(tokens);
-        let shortfall = need.saturating_sub(spare[idx]);
+        let hit = holder == Some(idx);
+        if let Some(sess) = session {
+            // Record the turn (pins the prefix on a hit, so the eviction
+            // sweep below can never reclaim it out from under us).
+            self.sessions.begin_turn(req, sess, hit);
+        }
+        let mut need = self.instances[idx].blocks_for(tokens);
+        if hit {
+            need = need.saturating_sub(cached_blocks);
+        }
+        // Evict LRU prefixes before borrowing: reclaim just enough
+        // retained blocks to cover what local spare cannot.
+        if need > spare[idx] {
+            for seq in self.sessions.evict_for_room(idx, need - spare[idx]) {
+                self.instances[idx].blocks.free_seq(seq);
+            }
+        }
+        let spare_now = self.lendable_spare(idx);
+        let shortfall = need.saturating_sub(spare_now);
         if shortfall > 0 {
             // Feasibility was checked above; an open_lease failure here
             // would be a bookkeeping bug, not a capacity race (the router
             // is externally locked).
-            self.broker.open_lease(req, idx, shortfall, &spare)?;
+            if self.broker.open_lease(req, idx, shortfall, &spare).is_none() {
+                self.sessions.abort_turn(req);
+                return None;
+            }
         }
         self.instances[idx].virtual_blocks += need - shortfall;
         self.instances[idx].pending_transfers += 1;
         Some(idx)
     }
 
+    /// The cached-prefix tokens routed request `req` will reuse (0 for
+    /// misses, session-less requests, and unknown ids). Valid between
+    /// [`DecodeRouter::route_session`] and the turn's transfer/cancel —
+    /// drivers read it to emit `on_prefix_hit` and plan the suffix.
+    pub fn cached_tokens(&self, req: u64) -> usize {
+        self.sessions.pending_prefix(req).map(|(_, t, _, _)| t).unwrap_or(0)
+    }
+
+    /// The usable retained prefix of `session` on an `Active` instance:
+    /// `(instance, cached tokens, cached blocks)`. Admission reads this to
+    /// charge only uncached tokens against load thresholds.
+    pub fn session_cached(&self, session: u64) -> Option<(usize, usize, usize)> {
+        self.sessions
+            .usable_prefix(session)
+            .filter(|p| self.is_active(p.instance))
+            .map(|p| (p.instance, p.tokens, p.blocks))
+    }
+
     /// Cache transfer for routed request `req` finished: the local share
     /// of its virtual usage becomes a real allocation, its pending lease
     /// (if any) becomes resident, and the request joins the batch
     /// (iteration-level scheduling inserts it at the next step boundary).
+    ///
+    /// A session *hit* transfers its retained prefix's blocks into the new
+    /// sequence instead of allocating them (see
+    /// [`BlockManager::reuse_seq`]); only the suffix blocks are newly
+    /// taken. Any session-bound request — hit or miss — is recorded so
+    /// [`DecodeRouter::finish`] can retain its blocks for the next turn.
     pub fn transfer_complete(
         &mut self,
         idx: usize,
@@ -249,14 +384,26 @@ impl DecodeRouter {
         req: u64,
     ) -> anyhow::Result<u64> {
         let leased = self.broker.pending_blocks(req);
+        let reuse = self.sessions.pending_prefix(req).filter(|&(h, _, _, _)| h == idx);
+        let consumed = self.sessions.consume_turn(req);
         let inst = &mut self.instances[idx];
         let need = inst.blocks_for(tokens);
-        let local = need.saturating_sub(leased);
-        inst.virtual_blocks = inst.virtual_blocks.saturating_sub(local);
-        inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
-        let seq = inst.blocks.allocate_seq_partial(tokens, local)?;
+        let seq = if let Some((_, _, cached_blocks, prefix_seq)) = reuse {
+            let local = need.saturating_sub(cached_blocks).saturating_sub(leased);
+            inst.virtual_blocks = inst.virtual_blocks.saturating_sub(local);
+            inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
+            inst.blocks.reuse_seq(prefix_seq, tokens, local)?
+        } else {
+            let local = need.saturating_sub(leased);
+            inst.virtual_blocks = inst.virtual_blocks.saturating_sub(local);
+            inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
+            inst.blocks.allocate_seq_partial(tokens, local)?
+        };
         inst.active_batch += 1;
         self.broker.commit_lease(req, idx, seq);
+        if let Some((sess, _)) = consumed {
+            self.sessions.bind_active(idx, seq, sess);
+        }
         Ok(seq)
     }
 
@@ -268,10 +415,26 @@ impl DecodeRouter {
     /// `on_kv_return`.
     pub fn cancel(&mut self, idx: usize, tokens: usize, req: u64) -> usize {
         let leased = self.broker.cancel_lease(req);
+        // A cancelled session hit reserved only the suffix — unwind just
+        // that and unpin the prefix (it stays retained for a later turn).
+        let cached = self
+            .sessions
+            .pending_prefix(req)
+            .filter(|&(h, _, _, _)| h == idx)
+            .map(|(_, _, b, _)| b)
+            .unwrap_or(0);
+        self.sessions.abort_turn(req);
         let inst = &mut self.instances[idx];
-        let need = inst.blocks_for(tokens);
+        let need = inst.blocks_for(tokens).saturating_sub(cached);
         inst.virtual_blocks = inst.virtual_blocks.saturating_sub(need.saturating_sub(leased));
         inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
+        if !self.is_active(idx) {
+            // A drained instance may hold nothing: the unpinned prefix the
+            // aborted turn was protecting must go now.
+            for seq in self.sessions.purge_instance(idx) {
+                self.instances[idx].blocks.free_seq(seq);
+            }
+        }
         leased
     }
 
@@ -321,11 +484,63 @@ impl DecodeRouter {
     /// `on_kv_return`.
     pub fn finish(&mut self, idx: usize, seq: u64) -> usize {
         let leased = self.broker.close_lease(idx, seq);
+        if self.try_retain(idx, seq, leased) {
+            self.instances[idx].active_batch =
+                self.instances[idx].active_batch.saturating_sub(1);
+            self.repatriate_debt(idx);
+            return leased;
+        }
         let inst = &mut self.instances[idx];
         inst.blocks.free_seq(seq);
         inst.active_batch = inst.active_batch.saturating_sub(1);
         self.repatriate_debt(idx);
         leased
+    }
+
+    /// A request finished but its output must not seed a future turn
+    /// (client cancellation mid-decode): identical to
+    /// [`DecodeRouter::finish`] except the blocks are always freed, never
+    /// retained as a session prefix.
+    pub fn finish_abort(&mut self, idx: usize, seq: u64) -> usize {
+        self.sessions.on_finish(idx, seq);
+        let leased = self.broker.close_lease(idx, seq);
+        let inst = &mut self.instances[idx];
+        inst.blocks.free_seq(seq);
+        inst.active_batch = inst.active_batch.saturating_sub(1);
+        self.repatriate_debt(idx);
+        leased
+    }
+
+    /// Retain a finishing session-bound sequence as its session's prefix,
+    /// evicting older prefixes to make room under the retention cap.
+    /// Returns whether the blocks were retained (and must NOT be freed).
+    /// Never retains when the request borrowed remote blocks (`leased >
+    /// 0`: part of its KV already went home — a partial prefix is
+    /// unsound) or when the instance is draining.
+    fn try_retain(&mut self, idx: usize, seq: u64, leased: usize) -> bool {
+        let Some(sess) = self.sessions.on_finish(idx, seq) else { return false };
+        if leased > 0 || !self.is_active(idx) || !self.sessions.is_enabled() {
+            return false;
+        }
+        let tokens = self.instances[idx].blocks.seq_tokens(seq).unwrap_or(0);
+        let blocks = self.instances[idx].blocks.seq_blocks(seq).unwrap_or(0);
+        let cap = self.sessions.config().retention_blocks;
+        if blocks == 0 || blocks > cap {
+            return false;
+        }
+        let held = self.sessions.retained_blocks_on(idx);
+        if held + blocks > cap {
+            for victim in self.sessions.evict_for_room(idx, held + blocks - cap) {
+                self.instances[idx].blocks.free_seq(victim);
+            }
+        }
+        if !self.sessions.room_on(idx, blocks) {
+            return false;
+        }
+        if let Some(old) = self.sessions.retain(sess, idx, seq, tokens, blocks) {
+            self.instances[idx].blocks.free_seq(old);
+        }
+        true
     }
 
     /// Convert as much of instance `idx`'s outstanding debt as its local
@@ -401,6 +616,12 @@ impl DecodeRouter {
         }
         self.status[i] = MemberState::Draining;
         self.membership_epoch += 1;
+        // Retained prefixes would strand the drain: drop the unpinned ones
+        // now; pinned ones resolve through their in-flight turns (which
+        // free rather than re-retain on a non-active instance).
+        for seq in self.sessions.purge_instance(i) {
+            self.instances[i].blocks.free_seq(seq);
+        }
         true
     }
 
@@ -715,6 +936,173 @@ mod tests {
         r.drain_instance(1);
         assert_eq!(r.route(192, 0), None, "12 blocks need a lender, but 1 is draining");
         assert_eq!(r.route(128, 1), Some(0), "local-only placement still works");
+    }
+
+    fn session_router(cap: usize) -> DecodeRouter {
+        DecodeRouter::with_sessions(
+            2,
+            100,
+            16,
+            KvBrokerConfig::disabled(),
+            SessionConfig::enabled(cap),
+        )
+    }
+
+    #[test]
+    fn finish_retains_and_next_turn_reuses_the_prefix() {
+        let mut r = session_router(50);
+        // Turn 1: 320 tokens (20 blocks), session 7, instance chosen by
+        // freeness (tie → 0).
+        let idx = r.route_session(320, 256, 1, Some(7)).unwrap();
+        let seq = r.transfer_complete(idx, 320, 1).unwrap();
+        assert_eq!(r.finish(idx, seq), 0);
+        assert_eq!(r.sessions.n_retained(), 1, "blocks retained, not freed");
+        assert_eq!(r.sessions.misses(), 1, "first turn had nothing to hit");
+        let (h, ctok, cblk) = r.session_cached(7).expect("usable prefix");
+        assert_eq!((h, ctok, cblk), (idx, 320, 20));
+        assert_eq!(r.instances[idx].blocks.free_blocks(), 80, "prefix still allocated");
+        // Turn 2: prompt extends the 320 cached tokens; needs 480 total.
+        let idx2 = r.route_session(480, 400, 2, Some(7)).unwrap();
+        assert_eq!(idx2, idx, "affinity routes back onto the holder");
+        assert_eq!(r.cached_tokens(2), 320);
+        assert_eq!(r.instances[idx].virtual_blocks, 10, "suffix-only reservation");
+        let seq2 = r.transfer_complete(idx2, 480, 2).unwrap();
+        assert_eq!(r.sessions.hits(), 1);
+        assert_eq!(r.sessions.n_retained(), 0, "prefix moved into the new seq");
+        assert_eq!(r.instances[idx].blocks.seq_blocks(seq2), Some(30));
+        assert_eq!(r.instances[idx].blocks.free_blocks(), 70);
+        r.finish(idx2, seq2);
+        assert_eq!(r.sessions.n_retained(), 1, "turn 2 retained in turn");
+    }
+
+    #[test]
+    fn eviction_frees_prefixes_before_refusing_requests() {
+        let mut r = DecodeRouter::with_sessions(
+            1,
+            100,
+            16,
+            KvBrokerConfig::disabled(),
+            SessionConfig::enabled(100),
+        );
+        // Session 7 retains 60 blocks (960 tokens).
+        let idx = r.route_session(960, 960, 1, Some(7)).unwrap();
+        let seq = r.transfer_complete(idx, 960, 1).unwrap();
+        r.finish(idx, seq);
+        assert_eq!(r.instances[0].blocks.free_blocks(), 40);
+        // A session-less 80-block request exceeds free space but fits once
+        // the retained prefix is evicted (evict-before-park).
+        assert_eq!(r.route(1280, 2), Some(0));
+        assert_eq!(r.sessions.n_retained(), 0, "prefix evicted for room");
+        let evs = r.sessions.take_evictions();
+        assert_eq!(evs.len(), 1);
+        assert_eq!((evs[0].session, evs[0].instance, evs[0].blocks), (7, 0, 60));
+        let seq2 = r.transfer_complete(0, 1280, 2).unwrap();
+        r.finish(0, seq2);
+        assert_eq!(r.instances[0].blocks.free_blocks(), 100, "no leak");
+    }
+
+    #[test]
+    fn pinned_prefix_survives_pressure_and_cancel_unpins() {
+        let mut r = DecodeRouter::with_sessions(
+            1,
+            100,
+            16,
+            KvBrokerConfig::disabled(),
+            SessionConfig::enabled(100),
+        );
+        let idx = r.route_session(320, 320, 1, Some(7)).unwrap();
+        let seq = r.transfer_complete(idx, 320, 1).unwrap();
+        r.finish(idx, seq);
+        // Turn 2 pins the prefix...
+        let idx2 = r.route_session(480, 400, 2, Some(7)).unwrap();
+        assert_eq!(idx2, 0);
+        // ...so a full-pool request cannot evict it and is refused.
+        assert_eq!(r.route(1600, 3), None, "pinned prefix is not reclaimable");
+        // Cancelling turn 2 unpins without losing the prefix.
+        r.cancel(idx2, 480, 2);
+        assert!(r.session_cached(7).is_some());
+        assert_eq!(r.instances[0].virtual_blocks, 0);
+        // Turn 3 can still hit it.
+        let idx3 = r.route_session(480, 400, 4, Some(7)).unwrap();
+        assert_eq!(r.cached_tokens(4), 320);
+        let seq3 = r.transfer_complete(idx3, 480, 4).unwrap();
+        r.finish_abort(idx3, seq3);
+        assert_eq!(r.sessions.n_retained(), 0, "finish_abort never retains");
+        assert_eq!(r.instances[0].blocks.free_blocks(), 100);
+    }
+
+    #[test]
+    fn retention_cap_evicts_lru_and_oversize_is_freed() {
+        let mut r = session_router(25);
+        // 20-block prefix retains (≤ cap)...
+        let i1 = r.route_session(320, 320, 1, Some(7)).unwrap();
+        let s1 = r.transfer_complete(i1, 320, 1).unwrap();
+        r.finish(i1, s1);
+        assert_eq!(r.sessions.n_retained(), 1);
+        // ...a 30-block one on the same instance is simply freed (> cap).
+        r.instances[1 - i1].active_batch = 100; // force same-instance placement
+        let i2 = r.route_session(480, 480, 2, Some(8)).unwrap();
+        assert_eq!(i2, i1);
+        let s2 = r.transfer_complete(i2, 480, 2).unwrap();
+        r.finish(i2, s2);
+        assert_eq!(r.sessions.n_retained(), 1, "oversize prefix not retained");
+        assert_eq!(r.session_cached(8), None);
+        // A second 20-block session on the same instance busts the 25-block
+        // cap: the LRU (session 7) is evicted to make room.
+        let i3 = r.route_session(320, 320, 3, Some(9)).unwrap();
+        assert_eq!(i3, i1);
+        let s3 = r.transfer_complete(i3, 320, 3).unwrap();
+        r.finish(i3, s3);
+        assert_eq!(r.session_cached(7), None, "LRU evicted under the cap");
+        assert!(r.session_cached(9).is_some());
+        assert_eq!(r.sessions.total_retained_blocks(), 20);
+    }
+
+    #[test]
+    fn drain_purges_retained_prefixes() {
+        let mut r = session_router(50);
+        let idx = r.route_session(320, 320, 1, Some(7)).unwrap();
+        let seq = r.transfer_complete(idx, 320, 1).unwrap();
+        r.finish(idx, seq);
+        assert_eq!(r.sessions.n_retained(), 1);
+        assert!(!r.is_drained(idx), "retained blocks hold real allocations");
+        r.drain_instance(idx);
+        assert_eq!(r.sessions.n_retained(), 0, "drain purges prefixes");
+        assert!(r.is_drained(idx));
+        r.depart_instance(idx).expect("nothing stranded");
+        // The surviving instance misses (holder departed) but still works.
+        let idx2 = r.route_session(480, 400, 2, Some(7)).unwrap();
+        assert_ne!(idx2, idx);
+        assert_eq!(r.cached_tokens(2), 0);
+        let seq2 = r.transfer_complete(idx2, 480, 2).unwrap();
+        r.finish(idx2, seq2);
+    }
+
+    #[test]
+    fn sessions_disabled_routing_is_unchanged() {
+        // A sessions-capable router with the disabled config must make
+        // bit-for-bit the placements of the pre-session router, even for
+        // requests that carry a session id.
+        let mut a = router();
+        let mut b = DecodeRouter::with_sessions(
+            2,
+            1000,
+            16,
+            KvBrokerConfig::disabled(),
+            SessionConfig::disabled(),
+        );
+        for (req, tokens) in [(0u64, 320), (1, 1600), (2, 64), (3, 320)] {
+            assert_eq!(a.route(tokens, req), b.route_session(tokens, tokens, req, Some(99)));
+        }
+        assert_eq!(b.sessions.n_pending(), 0, "disabled store records nothing");
+        let sa = a.transfer_complete(0, 320, 0).unwrap();
+        let sb = b.transfer_complete(0, 320, 0).unwrap();
+        assert_eq!(sa, sb);
+        assert_eq!(a.finish(0, sa), b.finish(0, sb));
+        assert_eq!(
+            a.instances[0].blocks.free_blocks(),
+            b.instances[0].blocks.free_blocks()
+        );
     }
 
     #[test]

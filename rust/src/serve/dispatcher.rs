@@ -125,8 +125,8 @@ pub(crate) enum DispatcherMsg {
 
 /// How one scanned parked entry should leave (or stay in) the queue.
 enum ParkedVerdict {
-    /// Admitted to `(instance, borrowed KV blocks)`.
-    Admit(usize, usize),
+    /// Admitted to `(instance, borrowed KV blocks, cached prefix tokens)`.
+    Admit(usize, usize, usize),
     Cancel,
     Shed(String),
 }
@@ -282,16 +282,45 @@ impl Dispatcher {
         }
     }
 
-    /// The admission ticket for one pending request at `now`.
-    fn ticket(p: &Pending, now: f64, block_tokens: usize) -> AdmissionTicket {
+    /// The admission ticket for one pending request at `now`. A session
+    /// hit's retained blocks are already resident, so admission charges
+    /// only the uncached remainder (`need_blocks` net of `cached_blocks`).
+    fn ticket(p: &Pending, now: f64, block_tokens: usize, cached_blocks: usize) -> AdmissionTicket {
+        let total = need_tokens(&p.req).div_ceil(block_tokens.max(1));
         AdmissionTicket {
             id: p.req.id,
             prompt_len: p.req.prompt.len(),
             output_len: p.req.output_len,
-            need_blocks: need_tokens(&p.req).div_ceil(block_tokens.max(1)),
+            need_blocks: total.saturating_sub(cached_blocks),
+            cached_blocks: cached_blocks.min(total),
             qos: p.shared.opts.qos,
             ttft_deadline: p.shared.opts.ttft_deadline,
             waited: (now - p.shared.submitted_at).max(0.0),
+        }
+    }
+
+    /// The KV blocks `p` would reuse from its session's retained prefix,
+    /// judged exactly like [`DecodeRouter::route_session`] will (usable
+    /// prefix on an active instance, strictly shorter than the prompt).
+    /// 0 for session-less requests and misses.
+    fn cached_blocks_of(guard: &crate::sched::DecodeRouter, p: &Pending) -> usize {
+        p.shared
+            .opts
+            .session
+            .and_then(|s| guard.session_cached(s))
+            .filter(|&(_, tokens, _)| tokens > 0 && tokens < p.req.prompt.len())
+            .map(|(_, _, blocks)| blocks)
+            .unwrap_or(0)
+    }
+
+    /// Emit `on_prefix_evict` for every session prefix the router evicted
+    /// or purged since the last drain. Call *outside* the router lock with
+    /// the drained list.
+    fn emit_evictions(&self, evicted: Vec<crate::session::PrefixEviction>, now: f64) {
+        for ev in evicted {
+            for o in self.observers.iter() {
+                o.on_prefix_evict(ev.session, ev.instance, ev.blocks, now);
+            }
         }
     }
 
@@ -315,8 +344,14 @@ impl Dispatcher {
         // sail past the QoS thresholds just because all of its members
         // were judged against the same pre-burst load.
         let mut load = self.shared.refresh_load();
+        // Session-cached blocks per candidate, read under one short router
+        // lock so every ticket in the batch charges only uncached work.
+        let cached: Vec<usize> = {
+            let guard = self.router.lock().unwrap();
+            batch.iter().map(|p| Self::cached_blocks_of(&guard, p)).collect()
+        };
         let mut live = Vec::with_capacity(batch.len());
-        for p in batch {
+        for (p, cached_blocks) in batch.into_iter().zip(cached) {
             if p.shared.is_cancelled() {
                 p.shared.resolve(Completion::Cancelled(CancelStage::Queued));
                 continue;
@@ -333,7 +368,7 @@ impl Dispatcher {
                     commits: None,
                 });
             }
-            let t = Self::ticket(&p, load.at, load.block_tokens);
+            let t = Self::ticket(&p, load.at, load.block_tokens, cached_blocks);
             match self.admission.admit(&t, &load) {
                 AdmissionDecision::Admit => {
                     load.note_admitted(t.need_blocks);
@@ -349,8 +384,8 @@ impl Dispatcher {
             }
         }
         let routed = self.route_in_order(live);
-        for (p, inst, borrowed) in routed {
-            self.plan_and_dispatch(p, inst, borrowed, load.arrival_rate);
+        for (p, inst, borrowed, cached) in routed {
+            self.plan_and_dispatch(p, inst, borrowed, cached, load.arrival_rate);
         }
     }
 
@@ -366,23 +401,37 @@ impl Dispatcher {
     /// placement borrowed from remote instances (0 without the broker);
     /// the matching `on_kv_borrow` is emitted by phase 2, right after
     /// `on_decode_assign` — mirroring the simulator's event order.
-    fn route_in_order(&mut self, batch: Vec<Pending>) -> Vec<(Pending, usize, usize)> {
+    fn route_in_order(&mut self, batch: Vec<Pending>) -> Vec<(Pending, usize, usize, usize)> {
         if batch.is_empty() {
             return Vec::new();
         }
         let mut routed = Vec::with_capacity(batch.len());
         let router = Arc::clone(&self.router);
-        let mut guard = router.lock().unwrap();
-        for p in batch {
-            match guard.route(need_tokens(&p.req), p.req.id) {
-                Some(inst) => {
-                    let borrowed = guard.broker.pending_blocks(p.req.id);
-                    routed.push((p, inst, borrowed));
+        let (evicted, now) = {
+            let mut guard = router.lock().unwrap();
+            for p in batch {
+                let sess = p.shared.opts.session;
+                match guard.route_session(
+                    need_tokens(&p.req),
+                    p.req.prompt.len(),
+                    p.req.id,
+                    sess,
+                ) {
+                    Some(inst) => {
+                        let borrowed = guard.broker.pending_blocks(p.req.id);
+                        let cached = guard.cached_tokens(p.req.id);
+                        routed.push((p, inst, borrowed, cached));
+                    }
+                    None => self.park(p),
                 }
-                None => self.park(p),
             }
-        }
-        self.shared.kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+            self.shared.kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+            // Route commits may have evicted LRU prefixes to make room;
+            // drain under the lock, emit outside it (the sim's event order:
+            // evictions precede the burst's `decode_assign`s).
+            (guard.sessions.take_evictions(), self.epoch.elapsed().as_secs_f64())
+        };
+        self.emit_evictions(evicted, now);
         routed
     }
 
@@ -392,16 +441,31 @@ impl Dispatcher {
     /// `on_decode_assign`/`on_plan` is ever emitted for it) and resolves
     /// the handle as [`Completion::Dropped`] — the same fate the old
     /// blocking path gave refused parked requests.
-    fn plan_and_dispatch(&mut self, p: Pending, inst: usize, borrowed: usize, observed_rate: f64) {
+    ///
+    /// A session hit (`cached > 0`) plans and prefills only the prompt
+    /// *suffix* beyond the retained prefix; the KV state starts with the
+    /// cached history already resident.
+    fn plan_and_dispatch(
+        &mut self,
+        p: Pending,
+        inst: usize,
+        borrowed: usize,
+        cached: usize,
+        observed_rate: f64,
+    ) {
         let need = need_tokens(&p.req);
         // Roll a committed placement back: releases the virtual reservation
         // and unwinds any pending lease. No `on_kv_borrow` was emitted yet
         // for this request (that happens below, with `on_decode_assign`),
         // so no `on_kv_return` fires either — events stay balanced.
         let rollback = |disp: &Self| {
-            let mut guard = disp.router.lock().unwrap();
-            guard.cancel(inst, need, p.req.id);
-            disp.shared.kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+            let (evicted, at) = {
+                let mut guard = disp.router.lock().unwrap();
+                guard.cancel(inst, need, p.req.id);
+                disp.shared.kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
+                (guard.sessions.take_evictions(), disp.epoch.elapsed().as_secs_f64())
+            };
+            disp.emit_evictions(evicted, at);
         };
         if p.shared.is_cancelled() {
             rollback(self);
@@ -410,21 +474,25 @@ impl Dispatcher {
             return;
         }
         let now = self.epoch.elapsed().as_secs_f64();
-        match self.plan(&p.req.prompt, now, observed_rate) {
+        match self.plan(&p.req.prompt[cached..], now, observed_rate) {
             Ok(plan) => {
                 // The placement and plan become observable only now, and
                 // strictly before any chunk is dispatched — so a request's
                 // `decode_assign` always precedes its `transfer`, however
-                // fast the prefill workers are.
+                // fast the prefill workers are. Event order mirrors the
+                // simulator: assign → prefix_hit → kv_borrow → plan.
                 for o in self.observers.iter() {
                     o.on_decode_assign(p.req.id, inst, now);
+                    if cached > 0 {
+                        o.on_prefix_hit(p.req.id, inst, cached, now);
+                    }
                     if borrowed > 0 {
                         o.on_kv_borrow(p.req.id, inst, borrowed, now);
                     }
                     o.on_plan(p.req.id, &plan, now);
                 }
                 p.shared.n_chunks.store(plan.n_chunks(), Ordering::Relaxed);
-                let commits = self.dispatch(&p, inst, &plan, now);
+                let commits = self.dispatch(&p, inst, &plan, cached, now);
                 self.mark_dispatched(&p.shared, commits);
             }
             Err(e) => {
@@ -478,14 +546,23 @@ impl Dispatcher {
     /// workers, committing queue-clock estimates as it goes. Returns the
     /// committed estimates so the deadline monitor can credit them back if
     /// it later interrupts this request.
-    fn dispatch(&mut self, p: &Pending, inst: usize, plan: &CdspPlan, now: f64) -> CommitRecord {
+    fn dispatch(
+        &mut self,
+        p: &Pending,
+        inst: usize,
+        plan: &CdspPlan,
+        cached: usize,
+        now: f64,
+    ) -> CommitRecord {
         let a = &self.arch;
         self.kv.lock().unwrap().insert(
             p.req.id,
             KvState {
                 k: vec![0.0; a.kv_elems()],
                 v: vec![0.0; a.kv_elems()],
-                hist_len: 0,
+                // A session hit starts with the retained prefix already
+                // resident: the engine only processes the suffix.
+                hist_len: cached,
                 output_len: p.req.output_len.max(1),
                 decode_inst: inst,
                 need_tokens: need_tokens(&p.req),
@@ -494,9 +571,11 @@ impl Dispatcher {
         );
 
         // Dispatch chunks in order. Chunks may exceed the engine's
-        // l_bucket: split into bucket-sized pieces on the same group.
+        // l_bucket: split into bucket-sized pieces on the same group. The
+        // plan covers the suffix only; `piece_start` is the absolute
+        // prompt offset (suffix offset + cached prefix).
         let n_chunks = plan.chunks.len();
-        let mut offset = 0usize;
+        let mut offset = cached;
         let mut finish = now;
         let mut prefill_commits: Vec<(usize, f64)> = Vec::new();
         let mut reg = self.registry.lock().unwrap();
@@ -524,14 +603,19 @@ impl Dispatcher {
                         WorkerJob::Member {
                             start: Arc::clone(&start),
                             end: Arc::clone(&end),
+                            cancelled: Arc::clone(&p.shared.cancelled),
                         }
                     };
                     self.workers[w].send(job).expect("worker alive");
                 }
-                // queue-clock bookkeeping (estimates; real time may drift)
+                // queue-clock bookkeeping (estimates; real time may
+                // drift). Suffix pieces carry the pass-KV/pass-Q
+                // communication term; with `cached == 0` this is exactly
+                // the plain Eq. (1) prediction.
                 let est = self
                     .engine_coeffs
-                    .predict(piece_start as f64, piece as f64)
+                    .predict_suffix(cached as f64, piece_start as f64, piece as f64)
+                    .0
                     .max(1e-4);
                 finish = reg.prefill_mut().commit(&chunk.group, finish, est);
                 for &w in &chunk.group {
@@ -585,7 +669,7 @@ impl Dispatcher {
         // returns removed items in offer order, so the two line up by
         // position — no keying needed (request ids are not unique).
         let mut verdicts: Vec<ParkedVerdict> = Vec::new();
-        let removed = {
+        let (removed, evicted, evict_at) = {
             let router = Arc::clone(&self.router);
             let mut guard = router.lock().unwrap();
             let admission = &mut self.admission;
@@ -594,7 +678,8 @@ impl Dispatcher {
                     verdicts.push(ParkedVerdict::Cancel);
                     return ScanOutcome::Remove;
                 }
-                let t = Self::ticket(p, load.at, load.block_tokens);
+                let cached_blocks = Self::cached_blocks_of(&guard, p);
+                let t = Self::ticket(p, load.at, load.block_tokens, cached_blocks);
                 match admission.admit(&t, &load) {
                     AdmissionDecision::Shed(reason) => {
                         verdicts.push(ParkedVerdict::Shed(reason));
@@ -602,13 +687,19 @@ impl Dispatcher {
                     }
                     AdmissionDecision::Park => ScanOutcome::Keep,
                     AdmissionDecision::Admit => {
-                        match guard.route(need_tokens(&p.req), p.req.id) {
+                        match guard.route_session(
+                            need_tokens(&p.req),
+                            p.req.prompt.len(),
+                            p.req.id,
+                            p.shared.opts.session,
+                        ) {
                             Some(inst) => {
                                 // Later candidates in this same scan see the
                                 // admission reflected in the load signal.
                                 load.note_admitted(t.need_blocks);
                                 let borrowed = guard.broker.pending_blocks(p.req.id);
-                                verdicts.push(ParkedVerdict::Admit(inst, borrowed));
+                                let cached = guard.cached_tokens(p.req.id);
+                                verdicts.push(ParkedVerdict::Admit(inst, borrowed, cached));
                                 ScanOutcome::Remove
                             }
                             None => ScanOutcome::Keep,
@@ -617,14 +708,21 @@ impl Dispatcher {
                 }
             });
             self.shared.kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
-            removed
+            (
+                removed,
+                guard.sessions.take_evictions(),
+                self.epoch.elapsed().as_secs_f64(),
+            )
         };
+        self.emit_evictions(evicted, evict_at);
         debug_assert_eq!(removed.len(), verdicts.len());
         let mut admitted = Vec::new();
         for (p, verdict) in removed.into_iter().zip(verdicts) {
             self.shared.parked.fetch_sub(1, Ordering::Relaxed);
             match verdict {
-                ParkedVerdict::Admit(inst, borrowed) => admitted.push((p, inst, borrowed)),
+                ParkedVerdict::Admit(inst, borrowed, cached) => {
+                    admitted.push((p, inst, borrowed, cached))
+                }
                 ParkedVerdict::Cancel => {
                     p.shared.resolve(Completion::Cancelled(CancelStage::Parked));
                 }
@@ -633,8 +731,8 @@ impl Dispatcher {
                 }
             }
         }
-        for (p, inst, borrowed) in admitted {
-            self.plan_and_dispatch(p, inst, borrowed, load.arrival_rate);
+        for (p, inst, borrowed, cached) in admitted {
+            self.plan_and_dispatch(p, inst, borrowed, cached, load.arrival_rate);
         }
     }
 
@@ -657,6 +755,19 @@ impl Dispatcher {
         // the bound a true lower bound.
         let load = self.shared.load();
         let lane_floor = (load.min_prefill_busy() - (now - load.assembled_at)).max(0.0);
+        // Decode-lane pressure: a finished prefill still waits for a decode
+        // lane to accept its KV handoff. The earliest-free decode lane is a
+        // lower bound on that delay — aged like the prefill floor so a
+        // stale snapshot only understates it, and 0 whenever any lane is
+        // idle.
+        let decode_pressure = {
+            let m = load.decode_lane_busy.iter().copied().fold(f64::INFINITY, f64::min);
+            if m.is_finite() {
+                (m - (now - load.assembled_at)).max(0.0)
+            } else {
+                0.0
+            }
+        };
         let mut blown: Vec<(usize, f64, f64)> = Vec::new();
         {
             let kv = self.kv.lock().unwrap();
@@ -675,7 +786,8 @@ impl Dispatcher {
                 } else {
                     (t.prompt_len, lane_floor)
                 };
-                let bound = self.estimator.ttft_bound(waited, remaining, floor);
+                let bound =
+                    self.estimator.ttft_bound_with_decode(waited, remaining, floor, decode_pressure);
                 if bound > d {
                     blown.push((i, bound, d));
                 }

@@ -130,6 +130,7 @@ use crate::latency::{DecodeQuickfit, TtftEstimator};
 use crate::metrics::{CancelStage, Completion, RequestMetrics, RunMetrics};
 use crate::runtime::{argmax, Engine, ExecCtx, InterruptToken};
 use crate::sched::{DecodeRouter, ImprovementController};
+use crate::session::SessionConfig;
 use crate::transfer::{Handshake, HandshakeReply, ReceiveManager};
 use anyhow::Result;
 use dispatcher::{Dispatcher, DispatcherMsg};
@@ -175,6 +176,10 @@ pub struct DecodePool {
     pub broker: KvBrokerConfig,
     /// Concurrent shard streams each transfer backend multiplexes.
     pub shard_streams: usize,
+    /// Multi-turn session layer (see [`crate::session`]): retained-prefix
+    /// reuse with affinity routing. The default disabled config is
+    /// bit-for-bit the session-less server.
+    pub sessions: SessionConfig,
 }
 
 impl DecodePool {
@@ -189,6 +194,7 @@ impl DecodePool {
             backends: 4,
             broker: KvBrokerConfig::disabled(),
             shard_streams: 1,
+            sessions: SessionConfig::disabled(),
         }
     }
 }
@@ -211,7 +217,15 @@ pub(crate) struct KvState {
 pub(crate) enum WorkerJob {
     /// Hold the instance slot: wait at the start barrier, then at the end
     /// barrier while the leader computes (ring-synchronous occupation).
-    Member { start: Arc<Barrier>, end: Arc<Barrier> },
+    Member {
+        start: Arc<Barrier>,
+        end: Arc<Barrier>,
+        /// The request's cancel flag, shared with the group leader: a
+        /// tripped flag means the leader runs no compute, so the member
+        /// falls straight through to the end barrier — the whole SP
+        /// group releases at the same barrier (group-level interrupt).
+        cancelled: Arc<AtomicBool>,
+    },
     /// Compute the chunk between the two barriers.
     Lead {
         start: Arc<Barrier>,
@@ -470,11 +484,12 @@ impl Server {
         let observers: ObserverSet = Arc::new(observers);
         let epoch = Instant::now();
         let kv: SharedKv = Arc::new(Mutex::new(HashMap::new()));
-        let router: SharedRouter = Arc::new(Mutex::new(DecodeRouter::with_broker(
+        let router: SharedRouter = Arc::new(Mutex::new(DecodeRouter::with_sessions(
             decode.n_workers,
             decode.blocks_per_instance,
             decode.block_tokens,
             decode.broker.clone(),
+            decode.sessions.clone(),
         )));
         // Mirror of the broker's lease epoch, updated under the router lock
         // at every lease-mutating site, so the load-snapshot cache can
@@ -1006,8 +1021,17 @@ fn prefill_worker(
     while let Ok(job) = rx.recv() {
         match job {
             WorkerJob::Stop => break,
-            WorkerJob::Member { start, end } => {
+            WorkerJob::Member { start, end, cancelled } => {
                 start.wait();
+                // Group-level interrupt: when `cancelled` is tripped the
+                // leader skips (or aborts) the chunk's compute, so this
+                // end-barrier rendezvous returns immediately and every
+                // slot the group occupies frees at the same barrier. The
+                // member holds no per-request state, so observing the
+                // flag needs no action here; it is carried so member-side
+                // work added later (shard prefetch, ring warmup) inherits
+                // the same short-circuit as the leader.
+                let _interrupted = cancelled.load(Ordering::Relaxed);
                 end.wait();
             }
             WorkerJob::Lead { start, end, req, tokens, is_last, cancelled } => {
@@ -1090,16 +1114,21 @@ fn finish_prefill(
 ) {
     let inst = st.decode_inst;
     let cancel = |stage: CancelStage| {
-        let returned = {
+        let (returned, evicted) = {
             let mut guard = router.lock().unwrap();
             let returned = guard.cancel(inst, st.need_tokens, req);
             kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
-            returned
+            (returned, guard.sessions.take_evictions())
         };
+        let t = epoch.elapsed().as_secs_f64();
         if returned > 0 {
-            let t = epoch.elapsed().as_secs_f64();
             for o in observers.iter() {
                 o.on_kv_return(req, inst, returned, t);
+            }
+        }
+        for ev in &evicted {
+            for o in observers.iter() {
+                o.on_prefix_evict(ev.session, ev.instance, ev.blocks, t);
             }
         }
         // resolve() emits the terminal observer event (on_cancel, or
@@ -1336,16 +1365,24 @@ fn finishing(
     notify: &Sender<DispatcherMsg>,
     st: ActiveDecode,
 ) {
-    let returned = {
+    // `finish` may retain the sequence's prompt KV as a session prefix;
+    // retention under the cap can displace colder prefixes, so drain the
+    // eviction queue under the same lock.
+    let (returned, evicted) = {
         let mut guard = router.lock().unwrap();
         let returned = guard.finish(st.job.inst, st.job.seq);
         kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
-        returned
+        (returned, guard.sessions.take_evictions())
     };
+    let t = epoch.elapsed().as_secs_f64();
     if returned > 0 {
-        let t = epoch.elapsed().as_secs_f64();
         for o in observers.iter() {
             o.on_kv_return(st.job.req, st.job.inst, returned, t);
+        }
+    }
+    for ev in &evicted {
+        for o in observers.iter() {
+            o.on_prefix_evict(ev.session, ev.instance, ev.blocks, t);
         }
     }
     let arrival = st.job.shared.submitted;
@@ -1375,9 +1412,12 @@ fn cancel_decode(
     notify: &Sender<DispatcherMsg>,
     st: ActiveDecode,
 ) {
+    // `finish_abort`, not `finish`: a cancelled decode must not retain
+    // its prefix for the session — the transcript it would seed the next
+    // turn with was never delivered.
     let returned = {
         let mut guard = router.lock().unwrap();
-        let returned = guard.finish(st.job.inst, st.job.seq);
+        let returned = guard.finish_abort(st.job.inst, st.job.seq);
         kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
         returned
     };

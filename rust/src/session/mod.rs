@@ -1,0 +1,519 @@
+//! Multi-turn sessions: prefix KV retention, reuse, and eviction.
+//!
+//! A conversation's follow-up turn re-submits everything the user and the
+//! model already said plus the new user text — so its prompt *begins with*
+//! the KV the previous turn just computed. This module is the bookkeeping
+//! layer that lets the cluster keep that KV around and skip re-prefilling
+//! it (Context Parallelism's persistent-KV idea, PAPERS.md):
+//!
+//! * when a request carrying a `SessionId` **finishes decoding**, its KV
+//!   blocks are *retained* on the decode instance that holds them instead
+//!   of being freed — an LRU-stamped, per-instance-capped prefix;
+//! * when the session's **next turn** arrives, the router scores the
+//!   holding instance with a prefix-affinity bonus and, on a hit, reserves
+//!   only the *suffix* blocks — the retained blocks transfer into the new
+//!   request's sequence and prefill starts after the cached tokens;
+//! * under **pool pressure**, retained prefixes are the first thing to go:
+//!   the router evicts unpinned prefixes (LRU) *before* it ever parks a
+//!   request or borrows remote blocks through the KV broker.
+//!
+//! [`SessionStore`] is plain data — no locks, no clocks, no observers — and
+//! lives inside [`DecodeRouter`](crate::sched::DecodeRouter), the component
+//! the simulator and the live server already share, so both paths get
+//! bit-for-bit identical retention, hits, and evictions. Drivers drain
+//! [`SessionStore::take_evictions`] after router calls to emit
+//! [`Observer::on_prefix_evict`](crate::api::Observer::on_prefix_evict)
+//! events outside any lock.
+//!
+//! With [`SessionConfig::disabled`] every method is a no-op returning the
+//! empty answer, and the router's affinity term contributes exactly `0.0`
+//! — the parity tests pin that the sessions-off cluster is bit-for-bit the
+//! pre-session cluster.
+
+use std::collections::BTreeMap;
+
+/// Default prefix-affinity weight: how strongly the router prefers the
+/// instance holding a session's retained prefix (see
+/// [`DecodeRouter::route_session`](crate::sched::DecodeRouter::route_session);
+/// the bonus is `weight * cached_blocks / total_blocks`).
+pub const DEFAULT_AFFINITY_WEIGHT: f64 = 1.0;
+
+/// Session-layer knobs, shared verbatim by the simulator and the live
+/// server (both embed them in the router they share).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionConfig {
+    /// Per-decode-instance cap, in KV blocks, on retained prefixes.
+    /// `0` disables the session layer entirely (nothing is ever retained,
+    /// every lookup misses, the affinity bonus is exactly `0.0`).
+    pub retention_blocks: usize,
+    /// Weight of the router's prefix-affinity bonus (≥ 0).
+    pub affinity_weight: f64,
+}
+
+impl SessionConfig {
+    /// The disabled configuration: the pre-session cluster, bit-for-bit.
+    pub fn disabled() -> Self {
+        SessionConfig { retention_blocks: 0, affinity_weight: 0.0 }
+    }
+
+    /// Retention enabled with the given per-instance block cap and the
+    /// default affinity weight.
+    pub fn enabled(retention_blocks: usize) -> Self {
+        SessionConfig { retention_blocks, affinity_weight: DEFAULT_AFFINITY_WEIGHT }
+    }
+
+    /// Whether the session layer does anything at all.
+    pub fn is_enabled(&self) -> bool {
+        self.retention_blocks > 0
+    }
+}
+
+/// One retained prefix: the KV a finished turn left behind for its
+/// session's next turn.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetainedPrefix {
+    /// Decode instance whose block manager holds the prefix.
+    pub instance: usize,
+    /// The block-manager sequence id holding the blocks.
+    pub seq: u64,
+    /// Tokens of KV the prefix covers (previous prompt + previous output).
+    pub tokens: usize,
+    /// KV blocks the prefix occupies.
+    pub blocks: usize,
+    /// LRU stamp (monotone logical clock; larger = more recently used).
+    last_used: u64,
+    /// A follow-up turn routed against this prefix is in flight: the
+    /// prefix may not be evicted until that turn consumes or aborts it.
+    pinned: bool,
+}
+
+/// A queued eviction notice: drivers drain these after router calls and
+/// emit [`Observer::on_prefix_evict`](crate::api::Observer::on_prefix_evict)
+/// outside any lock, in queue order — identical in sim and serve.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrefixEviction {
+    /// The session whose prefix was dropped.
+    pub session: u64,
+    /// The instance the blocks returned to.
+    pub instance: usize,
+    /// KV blocks freed by the eviction.
+    pub blocks: usize,
+}
+
+impl Default for SessionConfig {
+    /// Defaults to [`SessionConfig::disabled`].
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// An in-flight turn's session binding, recorded at route time.
+#[derive(Clone, Copy, Debug)]
+struct PendingTurn {
+    session: u64,
+    /// Whether the turn routed onto its session's retained prefix (a
+    /// *hit*: suffix-only reservation, prefix pinned until consumed).
+    hit: bool,
+}
+
+/// The session-layer bookkeeping: retained prefixes, in-flight turn
+/// bindings, LRU eviction, and per-instance retention accounting. Owned by
+/// [`DecodeRouter`](crate::sched::DecodeRouter); all block-manager
+/// mutations stay in the router — the store only says *which* sequences to
+/// free.
+#[derive(Clone, Debug)]
+pub struct SessionStore {
+    config: SessionConfig,
+    /// Session id → its retained prefix (at most one per session).
+    retained: BTreeMap<u64, RetainedPrefix>,
+    /// Request id → its session binding, route-time to transfer/cancel.
+    pending: BTreeMap<u64, PendingTurn>,
+    /// `(instance, seq)` of a live request → its session id (finish
+    /// consults this to retain instead of free).
+    active: BTreeMap<(usize, u64), u64>,
+    /// Retained blocks per decode instance (cap accounting).
+    per_instance: Vec<usize>,
+    /// Monotone LRU clock — logical, so sim and serve stamp identically.
+    clock: u64,
+    /// Eviction notices awaiting [`SessionStore::take_evictions`].
+    evictions: Vec<PrefixEviction>,
+    hits: u64,
+    misses: u64,
+    evicted: u64,
+}
+
+impl Default for SessionStore {
+    /// A disabled store over zero instances (the pre-session cluster).
+    fn default() -> Self {
+        Self::new(SessionConfig::disabled(), 0)
+    }
+}
+
+impl SessionStore {
+    /// An empty store for `n_instances` decode instances.
+    pub fn new(config: SessionConfig, n_instances: usize) -> Self {
+        SessionStore {
+            config,
+            retained: BTreeMap::new(),
+            pending: BTreeMap::new(),
+            active: BTreeMap::new(),
+            per_instance: vec![0; n_instances],
+            clock: 0,
+            evictions: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evicted: 0,
+        }
+    }
+
+    /// The store's configuration.
+    pub fn config(&self) -> &SessionConfig {
+        &self.config
+    }
+
+    /// Whether retention is enabled at all.
+    pub fn is_enabled(&self) -> bool {
+        self.config.is_enabled()
+    }
+
+    /// The usable (unpinned) retained prefix of `session`, if any.
+    pub fn usable_prefix(&self, session: u64) -> Option<&RetainedPrefix> {
+        self.retained.get(&session).filter(|p| !p.pinned)
+    }
+
+    /// Unpinned retained blocks on `inst` — blocks the router may reclaim
+    /// by eviction before parking or borrowing. `0` while disabled.
+    pub fn evictable_on(&self, inst: usize) -> usize {
+        self.retained
+            .values()
+            .filter(|p| p.instance == inst && !p.pinned)
+            .map(|p| p.blocks)
+            .sum()
+    }
+
+    /// Retained blocks on `inst` (pinned included).
+    pub fn retained_blocks_on(&self, inst: usize) -> usize {
+        self.per_instance.get(inst).copied().unwrap_or(0)
+    }
+
+    /// Record a routed turn's session binding. A `hit` pins the session's
+    /// retained prefix (it survives eviction until consumed or aborted)
+    /// and bumps its LRU stamp.
+    pub fn begin_turn(&mut self, req: u64, session: u64, hit: bool) {
+        if !self.is_enabled() {
+            return;
+        }
+        if hit {
+            self.hits += 1;
+            self.clock += 1;
+            if let Some(p) = self.retained.get_mut(&session) {
+                p.pinned = true;
+                p.last_used = self.clock;
+            }
+        } else {
+            self.misses += 1;
+        }
+        self.pending.insert(req, PendingTurn { session, hit });
+    }
+
+    /// The retained prefix a pending *hit* turn will reuse: `(instance,
+    /// cached tokens, cached blocks, seq)`. `None` for misses and unknown
+    /// requests.
+    pub fn pending_prefix(&self, req: u64) -> Option<(usize, usize, usize, u64)> {
+        let t = self.pending.get(&req)?;
+        if !t.hit {
+            return None;
+        }
+        let p = self.retained.get(&t.session)?;
+        Some((p.instance, p.tokens, p.blocks, p.seq))
+    }
+
+    /// Consume a pending turn at transfer time: removes the binding and,
+    /// for a hit, removes + returns the retained prefix (its blocks move
+    /// into the new request's sequence). Misses return `(session, None)`.
+    pub fn consume_turn(&mut self, req: u64) -> Option<(u64, Option<RetainedPrefix>)> {
+        let t = self.pending.remove(&req)?;
+        if !t.hit {
+            return Some((t.session, None));
+        }
+        let p = self.retained.remove(&t.session);
+        if let Some(p) = &p {
+            if let Some(b) = self.per_instance.get_mut(p.instance) {
+                *b = b.saturating_sub(p.blocks);
+            }
+        }
+        Some((t.session, p))
+    }
+
+    /// Abort a pending turn (route rollback or cancel): the binding is
+    /// dropped and a hit's prefix is unpinned — it stays retained for a
+    /// retry or a later turn.
+    pub fn abort_turn(&mut self, req: u64) {
+        if let Some(t) = self.pending.remove(&req) {
+            if t.hit {
+                if let Some(p) = self.retained.get_mut(&t.session) {
+                    p.pinned = false;
+                }
+            }
+        }
+    }
+
+    /// Bind a live request's `(instance, seq)` to its session so finish
+    /// can retain the blocks.
+    pub fn bind_active(&mut self, inst: usize, seq: u64, session: u64) {
+        if self.is_enabled() {
+            self.active.insert((inst, seq), session);
+        }
+    }
+
+    /// Look up (and clear) the session bound to a finishing `(inst, seq)`.
+    pub fn on_finish(&mut self, inst: usize, seq: u64) -> Option<u64> {
+        self.active.remove(&(inst, seq))
+    }
+
+    /// Evict unpinned prefixes on `inst`, LRU-first, until at least `need`
+    /// blocks were reclaimed or nothing evictable remains. Returns the
+    /// freed sequence ids — the *router* frees them in its block manager;
+    /// eviction notices are queued for [`SessionStore::take_evictions`].
+    pub fn evict_for_room(&mut self, inst: usize, need: usize) -> Vec<u64> {
+        let mut freed_seqs = Vec::new();
+        let mut reclaimed = 0usize;
+        while reclaimed < need {
+            let victim = self
+                .retained
+                .iter()
+                .filter(|(_, p)| p.instance == inst && !p.pinned)
+                .min_by_key(|(_, p)| p.last_used)
+                .map(|(&s, _)| s);
+            let Some(sess) = victim else { break };
+            let p = self.retained.remove(&sess).expect("victim exists");
+            reclaimed += p.blocks;
+            if let Some(b) = self.per_instance.get_mut(inst) {
+                *b = b.saturating_sub(p.blocks);
+            }
+            freed_seqs.push(p.seq);
+            self.evicted += 1;
+            self.evictions.push(PrefixEviction { session: sess, instance: inst, blocks: p.blocks });
+        }
+        freed_seqs
+    }
+
+    /// Whether `blocks` more retained blocks fit on `inst` under the
+    /// per-instance retention cap.
+    pub fn room_on(&self, inst: usize, blocks: usize) -> bool {
+        blocks <= self.config.retention_blocks
+            && self.retained_blocks_on(inst) + blocks <= self.config.retention_blocks
+    }
+
+    /// Retain a finished request's sequence as its session's prefix. The
+    /// caller has already made room ([`SessionStore::room_on`] /
+    /// [`SessionStore::evict_for_room`]). If the session somehow still
+    /// holds an older prefix (two concurrent turns), the older one is
+    /// displaced: its seq is returned for the router to free and an
+    /// eviction notice is queued.
+    pub fn retain(
+        &mut self,
+        session: u64,
+        inst: usize,
+        seq: u64,
+        tokens: usize,
+        blocks: usize,
+    ) -> Option<u64> {
+        self.clock += 1;
+        let old = self.retained.insert(
+            session,
+            RetainedPrefix {
+                instance: inst,
+                seq,
+                tokens,
+                blocks,
+                last_used: self.clock,
+                pinned: false,
+            },
+        );
+        if let Some(b) = self.per_instance.get_mut(inst) {
+            *b += blocks;
+        }
+        old.map(|p| {
+            if let Some(b) = self.per_instance.get_mut(p.instance) {
+                *b = b.saturating_sub(p.blocks);
+            }
+            self.evicted += 1;
+            self.evictions.push(PrefixEviction {
+                session,
+                instance: p.instance,
+                blocks: p.blocks,
+            });
+            p.seq
+        })
+    }
+
+    /// Drop every unpinned prefix on `inst` (drain / depart / role
+    /// conversion), returning the seqs for the router to free. Pinned
+    /// prefixes resolve through their in-flight turns.
+    pub fn purge_instance(&mut self, inst: usize) -> Vec<u64> {
+        self.evict_for_room(inst, usize::MAX)
+    }
+
+    /// Drain queued eviction notices (drivers emit `on_prefix_evict` from
+    /// these, outside any lock).
+    pub fn take_evictions(&mut self) -> Vec<PrefixEviction> {
+        std::mem::take(&mut self.evictions)
+    }
+
+    /// Grow the per-instance accounting to `n` instances (elastic join).
+    pub fn grow_to(&mut self, n: usize) {
+        if self.per_instance.len() < n {
+            self.per_instance.resize(n, 0);
+        }
+    }
+
+    /// Prefix hits so far (turns that reserved suffix-only blocks).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Session-carrying turns that found no usable prefix.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Prefixes evicted or displaced so far.
+    pub fn n_evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Retained prefixes right now.
+    pub fn n_retained(&self) -> usize {
+        self.retained.len()
+    }
+
+    /// Retained blocks right now, summed over instances.
+    pub fn total_retained_blocks(&self) -> usize {
+        self.per_instance.iter().sum()
+    }
+
+    /// In-flight session-bound turns (routed, not yet transferred).
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Live decoding requests bound to a session.
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(cap: usize) -> SessionStore {
+        SessionStore::new(SessionConfig::enabled(cap), 2)
+    }
+
+    #[test]
+    fn disabled_store_is_inert() {
+        let mut s = SessionStore::new(SessionConfig::disabled(), 2);
+        assert!(!s.is_enabled());
+        s.begin_turn(1, 10, false);
+        s.bind_active(0, 5, 10);
+        assert_eq!(s.n_pending(), 0);
+        assert_eq!(s.n_active(), 0);
+        assert_eq!(s.on_finish(0, 5), None);
+        assert_eq!(s.evictable_on(0), 0);
+        assert!(s.take_evictions().is_empty());
+    }
+
+    #[test]
+    fn retain_lookup_consume_roundtrip() {
+        let mut s = store(100);
+        assert_eq!(s.retain(7, 0, 11, 96, 6), None);
+        assert_eq!(s.retained_blocks_on(0), 6);
+        let p = s.usable_prefix(7).expect("retained");
+        assert_eq!((p.instance, p.tokens, p.blocks, p.seq), (0, 96, 6, 11));
+        // Next turn hits: the prefix pins, then transfers into the new seq.
+        s.begin_turn(42, 7, true);
+        assert!(s.usable_prefix(7).is_none(), "pinned prefix is not usable twice");
+        assert_eq!(s.pending_prefix(42), Some((0, 96, 6, 11)));
+        let (sess, p) = s.consume_turn(42).expect("pending");
+        assert_eq!(sess, 7);
+        assert_eq!(p.expect("hit consumes the prefix").seq, 11);
+        assert_eq!(s.retained_blocks_on(0), 0);
+        assert_eq!(s.n_retained(), 0);
+        assert_eq!(s.hits(), 1);
+    }
+
+    #[test]
+    fn abort_unpins_without_losing_the_prefix() {
+        let mut s = store(100);
+        s.retain(7, 0, 11, 96, 6);
+        s.begin_turn(42, 7, true);
+        s.abort_turn(42);
+        assert!(s.usable_prefix(7).is_some(), "aborted turn leaves the prefix usable");
+        assert_eq!(s.n_pending(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_oldest_and_skips_pinned() {
+        let mut s = store(100);
+        s.retain(1, 0, 10, 32, 2); // oldest
+        s.retain(2, 0, 20, 32, 3);
+        s.retain(3, 0, 30, 32, 4);
+        s.begin_turn(99, 1, true); // pin session 1 (also bumps its LRU)
+        let freed = s.evict_for_room(0, 3);
+        assert_eq!(freed, vec![20], "oldest unpinned goes first");
+        let freed = s.evict_for_room(0, 100);
+        assert_eq!(freed, vec![30], "pinned survives even a full sweep");
+        let evs = s.take_evictions();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0], PrefixEviction { session: 2, instance: 0, blocks: 3 });
+        assert_eq!(s.n_evicted(), 2);
+        assert_eq!(s.retained_blocks_on(0), 2, "only the pinned prefix remains");
+    }
+
+    #[test]
+    fn room_respects_per_instance_cap() {
+        let mut s = store(10);
+        assert!(s.room_on(0, 10));
+        assert!(!s.room_on(0, 11));
+        s.retain(1, 0, 11, 64, 4);
+        assert!(s.room_on(0, 6));
+        assert!(!s.room_on(0, 7));
+        assert!(s.room_on(1, 10), "caps are per instance");
+    }
+
+    #[test]
+    fn displacement_queues_an_eviction() {
+        let mut s = store(100);
+        s.retain(7, 0, 11, 96, 6);
+        let displaced = s.retain(7, 1, 22, 128, 8);
+        assert_eq!(displaced, Some(11));
+        assert_eq!(s.retained_blocks_on(0), 0);
+        assert_eq!(s.retained_blocks_on(1), 8);
+        assert_eq!(s.take_evictions().len(), 1);
+    }
+
+    #[test]
+    fn active_binding_survives_to_finish() {
+        let mut s = store(100);
+        s.begin_turn(42, 7, false);
+        assert_eq!(s.misses(), 1);
+        let (sess, p) = s.consume_turn(42).unwrap();
+        assert_eq!((sess, p), (7, None));
+        s.bind_active(1, 33, 7);
+        assert_eq!(s.on_finish(1, 33), Some(7));
+        assert_eq!(s.on_finish(1, 33), None, "binding clears");
+    }
+
+    #[test]
+    fn purge_instance_clears_only_that_instance() {
+        let mut s = store(100);
+        s.retain(1, 0, 10, 32, 2);
+        s.retain(2, 1, 20, 32, 3);
+        let freed = s.purge_instance(0);
+        assert_eq!(freed, vec![10]);
+        assert_eq!(s.n_retained(), 1);
+        assert!(s.usable_prefix(2).is_some());
+    }
+}

@@ -36,6 +36,7 @@ use crate::latency::{DecodeModel, PrefillModel, TransferModel};
 use crate::metrics::{RequestMetrics, RunMetrics};
 use crate::modelcfg::ModelArch;
 use crate::sched::{DecodeRouter, ImprovementController};
+use crate::session::SessionConfig;
 use crate::transfer::{Handshake, HandshakeReply, ReceiveManager};
 use crate::workload::Request;
 use std::cmp::Ordering;
@@ -134,6 +135,9 @@ struct ReqState {
     prompt_len: usize,
     output_len: usize,
     decode_inst: Option<usize>,
+    /// Retained-prefix tokens this request reuses (0 = no session hit):
+    /// prefill covers only the suffix and only suffix KV streams P→D.
+    cached: usize,
     n_senders: usize,
     first_token: Option<f64>,
     tokens_out: usize,
@@ -204,6 +208,13 @@ pub struct Simulator {
     /// bit-for-bit the pre-elastic behaviour. Scripts must keep the active
     /// prefill pool schedulable for the configured SP candidates.
     pub membership: Vec<MembershipEvent>,
+    /// Multi-turn session layer (see [`crate::session`]). The default
+    /// disabled config reproduces the pre-session cluster exactly.
+    pub session_cfg: SessionConfig,
+    /// Request id → session id side table (from
+    /// [`crate::workload::conversation::ConversationGen::generate`]).
+    /// Requests absent from the table are session-less.
+    pub sessions_of: BTreeMap<u64, u64>,
 }
 
 impl Simulator {
@@ -215,11 +226,12 @@ impl Simulator {
 
         let n_decode = self.cluster.n_decode_instances().max(1);
         let blocks = self.params.decode_capacity_tokens / self.params.block_tokens;
-        let mut router = DecodeRouter::with_broker(
+        let mut router = DecodeRouter::with_sessions(
             n_decode,
             blocks,
             self.params.block_tokens,
             self.broker.clone(),
+            self.session_cfg.clone(),
         );
         let streams = self.shard_streams.max(1);
         let mut receivers: Vec<ReceiveManager> = (0..n_decode)
@@ -235,6 +247,7 @@ impl Simulator {
                 prompt_len: r.prompt_len,
                 output_len: r.output_len.max(1),
                 decode_inst: None,
+                cached: 0,
                 n_senders: 0,
                 first_token: None,
                 tokens_out: 0,
@@ -288,11 +301,19 @@ impl Simulator {
                     }
                     // decode routing first (virtual usage there from now on)
                     let need = reqs[i].prompt_len + reqs[i].output_len;
-                    match router.route(need, i as u64) {
+                    let sess = self.sessions_of.get(&(i as u64)).copied();
+                    match router.route_session(need, reqs[i].prompt_len, i as u64, sess) {
                         Some(d) => {
+                            self.emit_evictions(&mut router, now);
                             reqs[i].decode_inst = Some(d);
+                            reqs[i].cached = router.cached_tokens(i as u64);
                             for o in &self.observers {
                                 o.on_decode_assign(i as u64, d, now);
+                            }
+                            if reqs[i].cached > 0 {
+                                for o in &self.observers {
+                                    o.on_prefix_hit(i as u64, d, reqs[i].cached, now);
+                                }
                             }
                             let borrowed = router.broker.pending_blocks(i as u64);
                             if borrowed > 0 {
@@ -322,14 +343,25 @@ impl Simulator {
                     );
                     // New decode capacity: retry the waiting queue in
                     // arrival order, exactly like a decode-step release.
+                    self.emit_evictions(&mut router, now);
                     if grew {
                         let mut admitted = Vec::new();
                         for &w in waiting.iter() {
                             let need = reqs[w].prompt_len + reqs[w].output_len;
-                            if let Some(d) = router.route(need, w as u64) {
+                            let sess = self.sessions_of.get(&(w as u64)).copied();
+                            if let Some(d) =
+                                router.route_session(need, reqs[w].prompt_len, w as u64, sess)
+                            {
+                                self.emit_evictions(&mut router, now);
                                 reqs[w].decode_inst = Some(d);
+                                reqs[w].cached = router.cached_tokens(w as u64);
                                 for o in &self.observers {
                                     o.on_decode_assign(w as u64, d, now);
+                                }
+                                if reqs[w].cached > 0 {
+                                    for o in &self.observers {
+                                        o.on_prefix_hit(w as u64, d, reqs[w].cached, now);
+                                    }
                                 }
                                 let borrowed = router.broker.pending_blocks(w as u64);
                                 if borrowed > 0 {
@@ -361,11 +393,14 @@ impl Simulator {
                         o.on_prefill_done(req as u64, now);
                     }
                     // stream KV to the decode instance through the handshake
+                    // — only the suffix: a session hit's cached prefix
+                    // already lives on the decode instance.
                     let d = reqs[req].decode_inst.expect("routed");
                     let senders = reqs[req].n_senders.max(1);
+                    let suffix = reqs[req].prompt_len - reqs[req].cached;
                     let (shard_secs, per_sender_bytes) = self.transfer_model.pd_stream_secs(
                         &self.arch,
-                        reqs[req].prompt_len as u64,
+                        suffix as u64,
                         senders,
                         true,
                     );
@@ -473,14 +508,26 @@ impl Simulator {
                         }
                     }
                     batches[inst] = still;
+                    // Retention at finish may displace LRU prefixes.
+                    self.emit_evictions(&mut router, t_end);
                     // admit waiting requests now that capacity may exist
                     let mut admitted = Vec::new();
                     for &w in waiting.iter() {
                         let need = reqs[w].prompt_len + reqs[w].output_len;
-                        if let Some(d) = router.route(need, w as u64) {
+                        let sess = self.sessions_of.get(&(w as u64)).copied();
+                        if let Some(d) =
+                            router.route_session(need, reqs[w].prompt_len, w as u64, sess)
+                        {
+                            self.emit_evictions(&mut router, t_end);
                             reqs[w].decode_inst = Some(d);
+                            reqs[w].cached = router.cached_tokens(w as u64);
                             for o in &self.observers {
                                 o.on_decode_assign(w as u64, d, t_end);
+                            }
+                            if reqs[w].cached > 0 {
+                                for o in &self.observers {
+                                    o.on_prefix_hit(w as u64, d, reqs[w].cached, t_end);
+                                }
                             }
                             let borrowed = router.broker.pending_blocks(w as u64);
                             if borrowed > 0 {
@@ -606,12 +653,31 @@ impl Simulator {
         }
     }
 
+    /// Emit [`Observer::on_prefix_evict`] for every session prefix the
+    /// router evicted or purged since the last drain. Called after every
+    /// router call that can evict (route commit, finish-time retention,
+    /// membership drain); a no-op while sessions are disabled.
+    fn emit_evictions(&self, router: &mut DecodeRouter, now: f64) {
+        for ev in router.sessions.take_evictions() {
+            for o in &self.observers {
+                o.on_prefix_evict(ev.session, ev.instance, ev.blocks, now);
+            }
+        }
+    }
+
     /// Schedule one request's prefill at time `now`, committing chunk
     /// finishes (incl. cache-balancing exposure) onto the dispatch clock
     /// and pushing the PrefillDone event. The scheduler sees only the
     /// *active* prefill lanes, as a compacted pool whose ids are translated
     /// back to physical lanes before commit — with every lane active the
     /// view (and therefore every placement) is bit-for-bit the static one.
+    ///
+    /// A session hit prefills only the *suffix* beyond the retained
+    /// prefix: the plan covers `prompt_len − cached` tokens, every chunk's
+    /// attention history starts at the cached length
+    /// ([`PrefillModel::predict_suffix`] adds the pass-KV/pass-Q
+    /// communication term), while cache-balancing moves only lane-resident
+    /// suffix KV.
     #[allow(clippy::too_many_arguments)]
     fn start_prefill(
         &mut self,
@@ -631,11 +697,13 @@ impl Simulator {
             .collect();
         let pool = clock.pool_view_of(now, &lanes);
         let rate = self.controller.rate(now);
+        let cached = reqs[i].cached;
+        let suffix = reqs[i].prompt_len - cached;
         let mut plan = self
             .scheduler
-            .schedule(reqs[i].prompt_len, &pool, rate)
+            .schedule(suffix, &pool, rate)
             .expect("schedulable active prefill pool");
-        debug_assert!(plan.validate(reqs[i].prompt_len).is_ok());
+        debug_assert!(plan.validate(suffix).is_ok());
         if lanes.iter().enumerate().any(|(k, &l)| k != l) {
             for chunk in plan.chunks.iter_mut() {
                 for g in chunk.group.iter_mut() {
@@ -647,15 +715,20 @@ impl Simulator {
             o.on_plan(i as u64, &plan, now);
         }
 
-        // Walk chunks to absolute times.
+        // Walk chunks to absolute times. `hist` counts suffix tokens
+        // already on the lanes; attention history additionally spans the
+        // retained prefix.
         let mut hist = 0usize;
         let mut prev_sp = 0usize;
         let mut finish = now;
         for chunk in &plan.chunks {
             let sp = chunk.group.len();
-            let compute = self
-                .prefill_model
-                .predict(sp, hist as f64, chunk.len as f64);
+            let (compute, _variant) = self.prefill_model.predict_suffix(
+                sp,
+                cached as f64,
+                (cached + hist) as f64,
+                chunk.len as f64,
+            );
             let balance = if prev_sp > 0 && sp > prev_sp {
                 let cross = clock.spans_nodes(&chunk.group);
                 self.transfer_model.balance_exposed_secs(

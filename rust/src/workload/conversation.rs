@@ -1,0 +1,159 @@
+//! Multi-turn conversation traces.
+//!
+//! A conversation is a sequence of *turns*: each turn's prompt is the full
+//! transcript so far (previous prompt + previous output) plus the new user
+//! text, so turn `t+1`'s prompt strictly extends the KV a session prefix
+//! retained at turn `t`'s finish (previous prompt + previous output —
+//! exactly [`BlockManager::seq_tokens`](crate::kvcache::BlockManager) at
+//! retention time). Turns are separated by think-time gaps (the user
+//! reading and typing), which is what makes retained prefixes worth
+//! keeping: the next turn arrives seconds later, not immediately.
+//!
+//! [`ConversationGen::generate`] interleaves many sessions into one
+//! arrival-ordered trace and returns the request→session mapping as a
+//! side table, leaving [`Request`] itself untouched — single-turn callers
+//! never see session plumbing.
+
+use super::{Request, TraceKind, WorkloadGen};
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+/// Multi-turn conversation generator over a base [`WorkloadGen`].
+#[derive(Clone, Debug)]
+pub struct ConversationGen {
+    /// First-turn prompt/output sampler (per-trace-family lengths).
+    pub base: WorkloadGen,
+    /// Mean turns per session (geometric-ish, ≥ 1).
+    pub mean_turns: f64,
+    /// Hard cap on turns per session.
+    pub max_turns: usize,
+    /// Mean think time between a turn's finish-able arrival and the next
+    /// turn's arrival, in seconds (exponential).
+    pub mean_think: f64,
+    /// Mean new user tokens appended per follow-up turn.
+    pub mean_followup: f64,
+}
+
+impl ConversationGen {
+    /// A conversation generator over one of the stock trace families with
+    /// chat-like turn structure: ~4 turns per session, ~30 s think time,
+    /// ~512 new tokens per follow-up.
+    pub fn paper_trace(kind: TraceKind) -> Self {
+        ConversationGen {
+            base: WorkloadGen::paper_trace(kind),
+            mean_turns: 4.0,
+            max_turns: 8,
+            mean_think: 30.0,
+            mean_followup: 512.0,
+        }
+    }
+
+    /// Generate `n_sessions` sessions whose first turns arrive
+    /// Poisson(`rate`); follow-up turns arrive after think-time gaps.
+    /// Returns the trace sorted by arrival with dense ids, plus the
+    /// request-id → session-id side table (session ids are 1-based and
+    /// dense). Deterministic in `rng`.
+    pub fn generate(
+        &self,
+        n_sessions: usize,
+        rate: f64,
+        rng: &mut Pcg64,
+    ) -> (Vec<Request>, BTreeMap<u64, u64>) {
+        let mut raw: Vec<(f64, usize, usize, u64)> = Vec::new(); // (arrival, prompt, output, session)
+        let mut t = 0.0;
+        for sess in 1..=n_sessions as u64 {
+            t += rng.exponential(rate);
+            let turns = (rng.exponential(1.0 / self.mean_turns).round() as usize)
+                .clamp(1, self.max_turns);
+            let mut prompt = self.base.lengths.sample(rng).round().max(1.0) as usize;
+            let mut at = t;
+            for turn in 0..turns {
+                let output = {
+                    let v = rng.exponential(1.0 / self.base.mean_output).round() as usize;
+                    v.clamp(1, self.base.max_output)
+                };
+                raw.push((at, prompt, output, sess));
+                if turn + 1 < turns {
+                    // Next turn: full transcript + fresh user text, after a
+                    // think-time gap.
+                    let extra = rng.exponential(1.0 / self.mean_followup).round().max(1.0);
+                    prompt += output + extra as usize;
+                    at += rng.exponential(1.0 / self.mean_think);
+                }
+            }
+        }
+        raw.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut sessions = BTreeMap::new();
+        let reqs = raw
+            .into_iter()
+            .enumerate()
+            .map(|(id, (arrival, prompt_len, output_len, sess))| {
+                let id = id as u64;
+                sessions.insert(id, sess);
+                Request { id, arrival, prompt_len, output_len }
+            })
+            .collect();
+        (reqs, sessions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_gen() -> ConversationGen {
+        let mut g = ConversationGen::paper_trace(TraceKind::Short);
+        // Keep prompts small enough for unit-test clusters.
+        g.base = WorkloadGen::paper_trace(TraceKind::Mixed);
+        g
+    }
+
+    #[test]
+    fn turns_strictly_extend_the_transcript() {
+        let g = small_gen();
+        let mut rng = Pcg64::new(7);
+        let (reqs, sessions) = g.generate(200, 1.0, &mut rng);
+        assert_eq!(reqs.len(), sessions.len());
+        // Group by session, in arrival order (the trace is sorted).
+        let mut by_sess: BTreeMap<u64, Vec<&Request>> = BTreeMap::new();
+        for r in &reqs {
+            by_sess.entry(sessions[&r.id]).or_default().push(r);
+        }
+        assert_eq!(by_sess.len(), 200);
+        let mut multi = 0;
+        for turns in by_sess.values() {
+            for w in turns.windows(2) {
+                multi += 1;
+                assert!(w[1].arrival > w[0].arrival, "think time separates turns");
+                assert!(
+                    w[1].prompt_len > w[0].prompt_len + w[0].output_len,
+                    "prompt {} must extend prev prompt {} + output {}",
+                    w[1].prompt_len,
+                    w[0].prompt_len,
+                    w[0].output_len
+                );
+            }
+        }
+        assert!(multi > 50, "enough multi-turn sessions to be meaningful: {multi}");
+    }
+
+    #[test]
+    fn trace_is_sorted_with_dense_ids() {
+        let g = small_gen();
+        let (reqs, _) = g.generate(100, 2.0, &mut Pcg64::new(3));
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "dense ids in arrival order");
+        }
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn seeded_replay_is_deterministic() {
+        let g = small_gen();
+        let a = g.generate(150, 1.5, &mut Pcg64::new(42));
+        let b = g.generate(150, 1.5, &mut Pcg64::new(42));
+        assert_eq!(a, b);
+    }
+}

@@ -18,6 +18,9 @@ use crate::util::json::Json;
 use crate::util::rng::{Pcg64, TruncLogNormal};
 use anyhow::Result;
 
+/// Multi-turn conversation traces with think-time gaps and session ids.
+pub mod conversation;
+
 /// One serving request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
@@ -31,7 +34,9 @@ pub struct Request {
     pub output_len: usize,
 }
 
-/// The paper's three trace families.
+/// The paper's three trace families, plus the Medha-style `Mixed` stress
+/// trace: extreme length heterogeneity — chat-scale requests interleaved
+/// with a thin stream of near-million-token ones.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TraceKind {
     /// 4k–95k tokens, mean 23.6k.
@@ -40,7 +45,15 @@ pub enum TraceKind {
     Medium,
     /// 16k–190k tokens, mean 50.1k.
     Long,
+    /// Chat traffic (256–8k tokens) with a [`MIXED_HEAVY_PROB`] fraction
+    /// of 400k–1M-token requests (Medha, PAPERS.md) — the heterogeneity
+    /// that collapses naive schedulers.
+    Mixed,
 }
+
+/// Fraction of [`TraceKind::Mixed`] requests drawn from the heavy
+/// (near-million-token) component.
+pub const MIXED_HEAVY_PROB: f64 = 0.04;
 
 impl TraceKind {
     /// CLI name of the trace family.
@@ -49,6 +62,7 @@ impl TraceKind {
             TraceKind::Short => "short",
             TraceKind::Medium => "medium",
             TraceKind::Long => "long",
+            TraceKind::Mixed => "mixed",
         }
     }
 
@@ -58,16 +72,25 @@ impl TraceKind {
             "short" => Some(TraceKind::Short),
             "medium" => Some(TraceKind::Medium),
             "long" => Some(TraceKind::Long),
+            "mixed" => Some(TraceKind::Mixed),
             _ => None,
         }
     }
 
-    /// (min, max, mean) prompt lengths in tokens.
+    /// (min, max, mean) prompt lengths in tokens. For [`TraceKind::Mixed`]
+    /// the range spans both mixture components and the mean is the
+    /// mixture mean.
     pub fn moments(&self) -> (f64, f64, f64) {
         match self {
             TraceKind::Short => (4_000.0, 95_000.0, 23_600.0),
             TraceKind::Medium => (8_000.0, 142_000.0, 32_800.0),
             TraceKind::Long => (16_000.0, 190_000.0, 50_100.0),
+            TraceKind::Mixed => {
+                let (base_mean, heavy_mean) = (2_000.0, 600_000.0);
+                let mean =
+                    (1.0 - MIXED_HEAVY_PROB) * base_mean + MIXED_HEAVY_PROB * heavy_mean;
+                (256.0, 1_000_000.0, mean)
+            }
         }
     }
 }
@@ -77,6 +100,11 @@ impl TraceKind {
 pub struct WorkloadGen {
     /// Prompt-length distribution.
     pub lengths: TruncLogNormal,
+    /// Heavy-tail mixture component: `(distribution, probability)`. Each
+    /// request draws from it with the given probability instead of
+    /// `lengths` — `None` (every stock trace but `Mixed`) keeps sampling
+    /// bit-for-bit the single-component behaviour.
+    pub heavy: Option<(TruncLogNormal, f64)>,
     /// Mean output length (decode tokens), geometric-ish spread.
     pub mean_output: f64,
     /// Hard cap on output length.
@@ -86,9 +114,26 @@ pub struct WorkloadGen {
 impl WorkloadGen {
     /// Generator matched to one of the paper's traces.
     pub fn paper_trace(kind: TraceKind) -> Self {
+        if kind == TraceKind::Mixed {
+            return WorkloadGen {
+                lengths: TruncLogNormal::from_min_max_mean(256.0, 8_000.0, 2_000.0, 0x7e7a15),
+                heavy: Some((
+                    TruncLogNormal::from_min_max_mean(
+                        400_000.0,
+                        1_000_000.0,
+                        600_000.0,
+                        0x3a9d71,
+                    ),
+                    MIXED_HEAVY_PROB,
+                )),
+                mean_output: 256.0,
+                max_output: 1024,
+            };
+        }
         let (lo, hi, mean) = kind.moments();
         WorkloadGen {
             lengths: TruncLogNormal::from_min_max_mean(lo, hi, mean, 0x7e7a15),
+            heavy: None,
             // Long-context services are prompt-heavy; outputs are short
             // relative to prompts (chat/report generation).
             mean_output: 256.0,
@@ -105,11 +150,20 @@ impl WorkloadGen {
                 Request {
                     id,
                     arrival: t,
-                    prompt_len: self.lengths.sample(rng).round() as usize,
+                    prompt_len: self.sample_prompt(rng),
                     output_len: self.sample_output(rng),
                 }
             })
             .collect()
+    }
+
+    fn sample_prompt(&self, rng: &mut Pcg64) -> usize {
+        if let Some((heavy, p)) = &self.heavy {
+            if rng.bool(*p) {
+                return heavy.sample(rng).round() as usize;
+            }
+        }
+        self.lengths.sample(rng).round() as usize
     }
 
     fn sample_output(&self, rng: &mut Pcg64) -> usize {
@@ -240,9 +294,30 @@ mod tests {
 
     #[test]
     fn kind_parse() {
-        for k in [TraceKind::Short, TraceKind::Medium, TraceKind::Long] {
+        for k in [TraceKind::Short, TraceKind::Medium, TraceKind::Long, TraceKind::Mixed] {
             assert_eq!(TraceKind::parse(k.name()), Some(k));
         }
         assert_eq!(TraceKind::parse("x"), None);
+    }
+
+    #[test]
+    fn mixed_trace_is_bimodal() {
+        let gen = WorkloadGen::paper_trace(TraceKind::Mixed);
+        let mut rng = Pcg64::new(11);
+        let reqs = gen.generate(20_000, 1.0, &mut rng);
+        let heavy = reqs.iter().filter(|r| r.prompt_len >= 400_000).count();
+        let chat = reqs.iter().filter(|r| r.prompt_len <= 8_001).count();
+        assert_eq!(heavy + chat, reqs.len(), "nothing between the modes");
+        let frac = heavy as f64 / reqs.len() as f64;
+        assert!(
+            (frac - MIXED_HEAVY_PROB).abs() < 0.01,
+            "heavy fraction {frac} vs {MIXED_HEAVY_PROB}"
+        );
+        assert!(heavy > 0, "million-token mode must appear");
+        let max = reqs.iter().map(|r| r.prompt_len).max().unwrap();
+        assert!(max <= 1_000_001, "max {max}");
+        // Determinism: same seed, same trace.
+        let again = gen.generate(20_000, 1.0, &mut Pcg64::new(11));
+        assert_eq!(again, reqs);
     }
 }

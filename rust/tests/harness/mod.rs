@@ -298,6 +298,12 @@ pub fn event_shape(events: &[TraceEvent]) -> Vec<String> {
             TraceEvent::KvReturn { req, instance, blocks, .. } => {
                 format!("kv_return:{req}:{instance}:{blocks}")
             }
+            TraceEvent::PrefixHit { req, instance, cached_tokens, .. } => {
+                format!("prefix_hit:{req}:{instance}:{cached_tokens}")
+            }
+            TraceEvent::PrefixEvict { session, instance, blocks, .. } => {
+                format!("prefix_evict:{session}:{instance}:{blocks}")
+            }
             TraceEvent::MemberJoin { role, instance, .. } => {
                 format!("member_join:{}:{instance}", role.tag())
             }

@@ -25,7 +25,7 @@ use harness::{assert_no_leaks, builder, event_shape, harness_arch, req, wait_unt
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
-use tetris::api::{CancelStage, Completion, SubmitOptions, TraceRecorder};
+use tetris::api::{CancelStage, Completion, SubmitOptions, TraceEvent, TraceRecorder};
 use tetris::baselines::PrefillScheduler;
 use tetris::cluster::PoolView;
 use tetris::latency::prefill::SpCoeffs;
@@ -89,6 +89,67 @@ fn mid_chunk_interrupt_lands_within_one_engine_step() {
             r.in_flight_transfers() == 0 && r.available_blocks() == r.total_blocks()
         },
         "interrupt teardown",
+    );
+    assert_no_leaks(&server, 1000, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn group_interrupt_frees_every_sp_worker_at_the_next_barrier() {
+    // Group-level interrupt: an SP group's Lead *and* Members share the
+    // request's cancel flag, and the Lead skips its compute once the flag
+    // trips — so the whole group falls through the chunk's end barrier
+    // together and every occupied worker slot frees at once. Proven by
+    // reassembly: after cancelling a multi-worker prefill mid-chunk, a
+    // follow-up that plans the same full-width group must complete (a
+    // stranded Member would deadlock its start barrier forever).
+    let h = FaultHarness::new();
+    let rec = Arc::new(TraceRecorder::new());
+    let server = builder(4, 2)
+        .sim_params(roomy())
+        .observe(rec.clone())
+        .build_server(h.engine(harness_arch()), 4)
+        .expect("server starts");
+    h.set_step_delay(Duration::from_millis(2));
+
+    // 1024 tokens: long enough that the planner spreads the chunk over
+    // sp > 1 workers under this suite's A100-like coefficients.
+    let mut a = server.submit_async(&req(1, 1024, 2)).expect("submitted");
+    wait_until(|| h.steps_of(1) >= 8, "first chunk underway");
+    a.cancel();
+    match a.wait() {
+        Completion::Cancelled(_) => {}
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    let steps = h.steps_of(1);
+    assert!(steps < 128, "the group aborted mid-prefill, observed {steps} steps");
+
+    let mut b = server.submit_async(&req(2, 1024, 2)).expect("submitted");
+    assert!(b.wait().is_finished(), "full-width group must reassemble after the cancel");
+
+    let plans: Vec<(u64, usize)> = rec
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Plan { req, max_sp, .. } => Some((*req, *max_sp)),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        plans.iter().any(|&(r, sp)| r == 1 && sp > 1),
+        "the cancelled request must have planned an SP group, got {plans:?}"
+    );
+    assert!(
+        plans.iter().any(|&(r, sp)| r == 2 && sp > 1),
+        "the follow-up must re-plan a multi-worker group, got {plans:?}"
+    );
+
+    wait_until(
+        || {
+            let r = server.router_state();
+            r.in_flight_transfers() == 0 && r.available_blocks() == r.total_blocks()
+        },
+        "group-cancel teardown",
     );
     assert_no_leaks(&server, 1000, 2);
     server.shutdown().unwrap();

@@ -1,0 +1,548 @@
+//! Integration: multi-turn prefix KV reuse (`tetris::session`) across both
+//! drivers.
+//!
+//! The acceptance bars proven here:
+//!
+//! (a) **sim-vs-serve parity** — for the same two-turn conversations the
+//!     live server and the simulator emit identical decode placements AND
+//!     identical `prefix_hit` events (request, holder instance, cached
+//!     tokens), because both drive the same `DecodeRouter`/`SessionStore`;
+//! (b) **default-off is bit-for-bit** — a session-enabled build serving
+//!     session-less traffic produces exactly the event stream of a build
+//!     that never heard of sessions;
+//! (c) **reuse pays** — with retention on, every second-turn hit's TTFT is
+//!     strictly below the same request's TTFT with retention off;
+//! (d) **eviction never strands a live session** — under pool pressure
+//!     prefixes are evicted LRU, but never between a turn's hit (pin) and
+//!     its KV handoff (consume);
+//! (e) **churn leaks nothing** — a 200-request multi-turn churn with
+//!     client cancels and admission sheds resolves every handle exactly
+//!     once and returns every block, lease, backend, and parked slot,
+//!     counting retained prefixes as accounted-for (not leaked) blocks;
+//! (f) **seeded replay is deterministic** — same seed ⇒ identical event
+//!     streams, on the simulator (heterogeneous `Mixed` conversations,
+//!     timestamps included) and on the live server (sequential turns,
+//!     timestamp-free shapes).
+
+mod harness;
+
+use harness::{builder, event_shape, req, wait_until};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use tetris::api::{
+    Completion, SessionConfig, SubmitOptions, TetrisBuilder, TraceEvent, TraceRecorder,
+};
+use tetris::runtime::Engine;
+use tetris::serve::Server;
+use tetris::sim::SimParams;
+use tetris::util::rng::Pcg64;
+use tetris::workload::{Request, TraceKind};
+
+/// Router geometry shared by every sim/serve pair in this suite: 4 decode
+/// instances of 1000 blocks × 16 tokens, 4 transfer backends each.
+fn roomy() -> SimParams {
+    SimParams { backends_per_decode: 4, decode_capacity_tokens: 16_000, block_tokens: 16 }
+}
+
+/// The suite's shared shape: the harness cluster plus an enabled session
+/// store (`cap` retained blocks per decode instance).
+fn session_builder(rec: Arc<TraceRecorder>, cap: usize) -> TetrisBuilder {
+    builder(4, 4).sim_params(roomy()).sessions(SessionConfig::enabled(cap)).observe(rec)
+}
+
+/// One turn of a scripted conversation.
+#[derive(Clone, Copy)]
+struct Turn {
+    id: u64,
+    session: u64,
+    prompt: usize,
+    out: usize,
+}
+
+/// Seeded two-turn conversations: turn 2's prompt extends turn 1's full
+/// transcript (prompt + output) by a follow-up, the shape the session
+/// store retains for. Ids are dense in trace order — turn-1 ids (which
+/// double as the session ids) are `0..n`, turn-2 ids `n..2n` — because
+/// the simulator identifies a request by its trace position, exactly like
+/// `ConversationGen`'s dense-id contract.
+fn two_turn_shapes(seed: u64, n: usize, p_lo: u64, p_hi: u64) -> (Vec<Turn>, Vec<Turn>) {
+    let mut rng = Pcg64::new(seed);
+    let mut t1 = Vec::with_capacity(n);
+    let mut t2 = Vec::with_capacity(n);
+    for i in 0..n {
+        let sid = i as u64;
+        let prompt = rng.range_u64(p_lo, p_hi) as usize;
+        let out = rng.range_u64(4, 9) as usize;
+        let follow = rng.range_u64(16, 63) as usize;
+        t1.push(Turn { id: sid, session: sid, prompt, out });
+        t2.push(Turn {
+            id: n as u64 + sid,
+            session: sid,
+            prompt: prompt + out + follow,
+            out: rng.range_u64(4, 9) as usize,
+        });
+    }
+    (t1, t2)
+}
+
+fn sim_request(t: &Turn, arrival: f64) -> Request {
+    Request { id: t.id, arrival, prompt_len: t.prompt, output_len: t.out }
+}
+
+fn assignments(events: &[TraceEvent]) -> BTreeMap<u64, usize> {
+    let mut m = BTreeMap::new();
+    for e in events {
+        if let TraceEvent::DecodeAssign { req, instance, .. } = e {
+            m.insert(*req, *instance);
+        }
+    }
+    m
+}
+
+/// `req → (holder instance, cached tokens)` for every recorded hit.
+fn prefix_hits(events: &[TraceEvent]) -> BTreeMap<u64, (usize, usize)> {
+    let mut m = BTreeMap::new();
+    for e in events {
+        if let TraceEvent::PrefixHit { req, instance, cached_tokens, .. } = e {
+            m.insert(*req, (*instance, *cached_tokens));
+        }
+    }
+    m
+}
+
+fn n_evictions(events: &[TraceEvent]) -> usize {
+    events.iter().filter(|e| matches!(e, TraceEvent::PrefixEvict { .. })).count()
+}
+
+/// Event-derived TTFT (arrival → prefill_done) per request.
+fn ttfts_by_req(events: &[TraceEvent]) -> BTreeMap<u64, f64> {
+    let mut arrival = BTreeMap::new();
+    let mut out = BTreeMap::new();
+    for e in events {
+        match e {
+            TraceEvent::Arrival { req, at } => {
+                arrival.entry(*req).or_insert(*at);
+            }
+            TraceEvent::PrefillDone { req, at } => {
+                if let Some(a) = arrival.get(req) {
+                    out.entry(*req).or_insert(at - a);
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// The churn suite's zero-leak bar, session-aware: blocks held by retained
+/// prefixes are *accounted for*, not leaked — free + retained must equal
+/// the instance's total, with every virtual reservation, batch slot,
+/// transfer backend, and parked slot returned.
+fn assert_no_leaks_with_sessions(server: &Server, blocks_per_instance: usize, backends: usize) {
+    let router = server.router_state();
+    assert_eq!(router.in_flight_transfers(), 0, "leaked in-flight transfer");
+    for (i, inst) in router.instances.iter().enumerate() {
+        assert_eq!(inst.virtual_blocks, 0, "instance {i} leaked virtual blocks");
+        assert_eq!(inst.active_batch, 0, "instance {i} leaked batch slots");
+        let retained = router.sessions.retained_blocks_on(i);
+        assert_eq!(
+            inst.blocks.free_blocks() + retained,
+            blocks_per_instance,
+            "instance {i} leaked KV blocks ({} free + {retained} retained)",
+            inst.blocks.free_blocks(),
+        );
+        assert_eq!(
+            server.free_transfer_backends(i),
+            backends,
+            "instance {i} leaked transfer backends"
+        );
+    }
+    assert_eq!(server.n_parked(), 0, "requests left parked");
+}
+
+#[test]
+fn prefix_hits_and_placements_match_sim_vs_serve() {
+    // Acceptance (a). Eight two-turn conversations, second turns arriving
+    // long after the first turns finish. The retention cap (256 blocks per
+    // instance) is roomy enough that no prefix is ever displaced, so the
+    // retained set at turn-2 time is identical on both substrates no
+    // matter in which wall-clock order the live turn-1 decodes finished.
+    let (t1, t2) = two_turn_shapes(0x5e55, 8, 100, 360);
+
+    // Simulator: turn-1 burst at t=0, turn-2 staggered from t=500.
+    let sim_rec = Arc::new(TraceRecorder::new());
+    let mut sim = session_builder(sim_rec.clone(), 256).build_simulation().expect("sim builds");
+    for t in t1.iter().chain(t2.iter()) {
+        sim.simulator_mut().sessions_of.insert(t.id, t.session);
+    }
+    let trace: Vec<Request> = t1
+        .iter()
+        .map(|t| sim_request(t, 0.0))
+        .chain(t2.iter().enumerate().map(|(i, t)| sim_request(t, 500.0 + i as f64)))
+        .collect();
+    let m = sim.run(&trace);
+    assert_eq!(m.requests.len(), 16);
+
+    // Live server: same shapes, turn-1 burst, every turn-1 awaited (its
+    // retention is committed before the handle resolves), then the turn-2
+    // burst in the same order.
+    let srv_rec = Arc::new(TraceRecorder::new());
+    let mut server = session_builder(srv_rec.clone(), 256)
+        .build_server(Arc::new(Engine::stub_default()), 4)
+        .expect("server starts");
+    for wave in [&t1, &t2] {
+        let mut handles: Vec<_> = wave
+            .iter()
+            .map(|t| {
+                server
+                    .submit_async_with(
+                        &req(t.id, t.prompt, t.out),
+                        SubmitOptions::interactive().session(t.session),
+                    )
+                    .expect("submitted")
+            })
+            .collect();
+        for h in &mut handles {
+            assert!(h.wait().is_finished(), "session turn must finish");
+        }
+    }
+    server.shutdown().unwrap();
+
+    let sim_events = sim_rec.events();
+    let srv_events = srv_rec.events();
+    let sim_hits = prefix_hits(&sim_events);
+    let srv_hits = prefix_hits(&srv_events);
+    assert_eq!(sim_hits.len(), 8, "every second turn hits its retained prefix");
+    assert_eq!(
+        sim_hits, srv_hits,
+        "live prefix hits (request, holder, cached tokens) must match the simulator's"
+    );
+    let sim_assign = assignments(&sim_events);
+    assert_eq!(
+        sim_assign,
+        assignments(&srv_events),
+        "live decode placements must match the simulator's"
+    );
+    for t in &t2 {
+        let (inst, cached) = sim_hits[&t.id];
+        assert!(cached > 0 && cached <= t.prompt, "cached {cached} of a {}-token turn", t.prompt);
+        assert_eq!(
+            inst, sim_assign[&t.session],
+            "affinity must route the follow-up turn onto its prefix's holder"
+        );
+    }
+    assert_eq!(n_evictions(&sim_events), 0, "roomy cap: the sim must not evict");
+    assert_eq!(n_evictions(&srv_events), 0, "roomy cap: the server must not evict");
+}
+
+#[test]
+fn sessionless_traffic_with_sessions_enabled_matches_disabled_baseline() {
+    // Acceptance (b), simulator side (timestamps included): requests that
+    // carry no session id must take bit-for-bit the session-less path even
+    // when a session store is installed.
+    let (t1, _) = two_turn_shapes(0xb17, 12, 100, 360);
+    let trace: Vec<Request> = t1.iter().map(|t| sim_request(t, 0.0)).collect();
+
+    let rec_off = Arc::new(TraceRecorder::new());
+    let mut off = builder(4, 4)
+        .sim_params(roomy())
+        .observe(rec_off.clone())
+        .build_simulation()
+        .expect("sim builds");
+    let m_off = off.run(&trace);
+
+    let rec_on = Arc::new(TraceRecorder::new());
+    let mut on = session_builder(rec_on.clone(), 64).build_simulation().expect("sim builds");
+    // No sessions_of entries: the trace is session-less.
+    let m_on = on.run(&trace);
+
+    assert_eq!(m_off.requests.len(), 12);
+    assert_eq!(m_on.requests.len(), 12);
+    assert_eq!(
+        rec_off.events(),
+        rec_on.events(),
+        "an enabled-but-unused session store must not perturb a single event"
+    );
+}
+
+#[test]
+fn prefix_reuse_strictly_improves_second_turn_ttft() {
+    // Acceptance (c): the same two-turn trace with retention on vs off.
+    // On a hit only the suffix is prefilled (plus the cheaper of the
+    // pass-KV / pass-Q communication terms), which Eq. (1) prices strictly
+    // below prefilling the full concatenated prompt.
+    let (t1, t2) = two_turn_shapes(0x77f7, 10, 200, 440);
+    let trace: Vec<Request> = t1
+        .iter()
+        .map(|t| sim_request(t, 0.0))
+        .chain(t2.iter().enumerate().map(|(i, t)| sim_request(t, 500.0 + 2.0 * i as f64)))
+        .collect();
+
+    let run = |cap: usize| {
+        let rec = Arc::new(TraceRecorder::new());
+        let b = if cap > 0 {
+            session_builder(rec.clone(), cap)
+        } else {
+            builder(4, 4).sim_params(roomy()).observe(rec.clone())
+        };
+        let mut sim = b.build_simulation().expect("sim builds");
+        for t in t1.iter().chain(t2.iter()) {
+            sim.simulator_mut().sessions_of.insert(t.id, t.session);
+        }
+        assert_eq!(sim.run(&trace).requests.len(), 20);
+        rec.events()
+    };
+
+    let on = run(256);
+    let off = run(0);
+    let hits = prefix_hits(&on);
+    assert_eq!(hits.len(), 10, "every second turn hits with a roomy cap");
+    assert!(prefix_hits(&off).is_empty(), "retention off must never hit");
+
+    let ttft_on = ttfts_by_req(&on);
+    let ttft_off = ttfts_by_req(&off);
+    for t in &t2 {
+        assert!(
+            ttft_on[&t.id] < ttft_off[&t.id],
+            "req {}: reuse TTFT {} must beat cold TTFT {}",
+            t.id,
+            ttft_on[&t.id],
+            ttft_off[&t.id]
+        );
+    }
+}
+
+#[test]
+fn eviction_under_pressure_never_strands_a_live_session() {
+    // Acceptance (d): 12 conversations whose retained prefixes cannot all
+    // fit under a 64-blocks-per-instance cap on 2 instances, so retention
+    // must displace LRU prefixes. Displaced sessions simply miss on their
+    // second turn; a hit turn's prefix is pinned and must never appear in
+    // an eviction between the hit (pin) and the KV handoff (consume).
+    let (t1, t2) = two_turn_shapes(0xe71c, 12, 220, 300);
+    let rec = Arc::new(TraceRecorder::new());
+    let mut sim = builder(4, 2)
+        .sim_params(SimParams {
+            backends_per_decode: 4,
+            decode_capacity_tokens: 1_600,
+            block_tokens: 16,
+        })
+        .sessions(SessionConfig::enabled(64))
+        .observe(rec.clone())
+        .build_simulation()
+        .expect("sim builds");
+    for t in t1.iter().chain(t2.iter()) {
+        sim.simulator_mut().sessions_of.insert(t.id, t.session);
+    }
+    let trace: Vec<Request> = t1
+        .iter()
+        .enumerate()
+        .map(|(i, t)| sim_request(t, 2.0 * i as f64))
+        .chain(t2.iter().enumerate().map(|(i, t)| sim_request(t, 1_000.0 + 2.0 * i as f64)))
+        .collect();
+    let m = sim.run(&trace);
+    assert_eq!(m.requests.len(), 24, "every turn completes, hit or miss");
+
+    let events = rec.events();
+    let hits = prefix_hits(&events);
+    assert!(n_evictions(&events) > 0, "12 × ~17-block prefixes must overflow a 2×64 cap");
+    assert!(!hits.is_empty(), "the freshest prefixes must survive to a hit");
+    assert!(hits.len() < 12, "an evicted session's next turn must be a miss");
+
+    // The pin window: between a turn's prefix_hit and its transfer, its
+    // session must never be evicted.
+    for t in &t2 {
+        let Some(hit_at) = events
+            .iter()
+            .position(|e| matches!(e, TraceEvent::PrefixHit { req, .. } if *req == t.id))
+        else {
+            continue;
+        };
+        let consumed_at = events
+            .iter()
+            .position(|e| matches!(e, TraceEvent::Transfer { req, .. } if *req == t.id))
+            .expect("a hit turn hands off its KV");
+        assert!(hit_at < consumed_at, "hit precedes the handoff");
+        let stranded = events[hit_at..consumed_at].iter().any(
+            |e| matches!(e, TraceEvent::PrefixEvict { session, .. } if *session == t.session),
+        );
+        assert!(!stranded, "session {} evicted while its turn {} was pinned", t.session, t.id);
+    }
+}
+
+#[test]
+fn multi_turn_churn_with_cancels_and_sheds_leaks_nothing() {
+    // Acceptance (e): 100 conversations × 2 turns = 200 requests in ten
+    // waves, with client cancels (turn 1: no retention may survive; turn
+    // 2: a pinned prefix must unwind) and unmeetable-deadline admission
+    // sheds interleaved. Every handle resolves exactly once and the
+    // router returns to free + retained == total on every instance.
+    let (t1, t2) = two_turn_shapes(0xc0ffee, 100, 64, 224);
+    let rec = Arc::new(TraceRecorder::new());
+    let mut server = builder(4, 4)
+        .sim_params(SimParams {
+            backends_per_decode: 4,
+            decode_capacity_tokens: 4_000,
+            block_tokens: 16,
+        })
+        .sessions(SessionConfig::enabled(64))
+        .observe(rec.clone())
+        .build_server(Arc::new(Engine::stub_default()), 4)
+        .expect("server starts");
+
+    let (mut finished, mut cancelled, mut shed) = (0usize, 0usize, 0usize);
+    let mut cancelled_turn1: Vec<u64> = Vec::new();
+    for wave in 0..10 {
+        let lo = wave * 10;
+        let hi = lo + 10;
+        // Turn-1 wave: submit all ten, cancel every ninth conversation.
+        let mut h1: Vec<_> = t1[lo..hi]
+            .iter()
+            .map(|t| {
+                let h = server
+                    .submit_async_with(
+                        &req(t.id, t.prompt, t.out),
+                        SubmitOptions::interactive().session(t.session),
+                    )
+                    .expect("submitted");
+                if t.session % 9 == 0 {
+                    h.cancel();
+                }
+                h
+            })
+            .collect();
+        for (h, t) in h1.iter_mut().zip(&t1[lo..hi]) {
+            match h.wait() {
+                Completion::Finished(_) => finished += 1,
+                Completion::Cancelled(_) => {
+                    cancelled += 1;
+                    cancelled_turn1.push(t.session);
+                }
+                Completion::Shed(_) => shed += 1,
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        // Turn-2 wave: every seventh conversation carries an unmeetable
+        // deadline (admission shed), every thirteenth is cancelled.
+        let mut h2: Vec<_> = t2[lo..hi]
+            .iter()
+            .map(|t| {
+                let mut opts = SubmitOptions::interactive().session(t.session);
+                if t.session % 7 == 0 {
+                    opts = opts.deadline(1e-6);
+                }
+                let h = server
+                    .submit_async_with(&req(t.id, t.prompt, t.out), opts)
+                    .expect("submitted");
+                if t.session % 7 != 0 && t.session % 13 == 0 {
+                    h.cancel();
+                }
+                h
+            })
+            .collect();
+        for h in &mut h2 {
+            match h.wait() {
+                Completion::Finished(_) => finished += 1,
+                Completion::Cancelled(_) => cancelled += 1,
+                Completion::Shed(_) => shed += 1,
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+    }
+    assert_eq!(finished + cancelled + shed, 200, "every handle resolved exactly once");
+    assert!(finished > 0 && cancelled > 0 && shed > 0, "{finished}/{cancelled}/{shed}");
+
+    let events = rec.events();
+    let hits = prefix_hits(&events);
+    assert!(!hits.is_empty(), "wave-local second turns must hit retained prefixes");
+    // finish_abort's contract: a conversation whose first turn was
+    // cancelled delivered no transcript, so its second turn can never hit.
+    for s in &cancelled_turn1 {
+        assert!(
+            !hits.contains_key(&(100 + s)),
+            "session {s}: cancelled first turn must not seed a prefix hit"
+        );
+    }
+
+    wait_until(
+        || {
+            let r = server.router_state();
+            r.in_flight_transfers() == 0
+                && r.instances.iter().enumerate().all(|(i, inst)| {
+                    inst.virtual_blocks == 0
+                        && inst.active_batch == 0
+                        && inst.blocks.free_blocks() + r.sessions.retained_blocks_on(i) == 250
+                })
+        },
+        "churn teardown",
+    );
+    assert_no_leaks_with_sessions(&server, 250, 4);
+    let router = server.router_state();
+    assert!(
+        (0..4).any(|i| router.sessions.retained_blocks_on(i) > 0),
+        "the final wave's prefixes stay retained for a next turn"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn seeded_mixed_conversation_replay_is_deterministic_in_sim() {
+    // Acceptance (f), simulator side: the heterogeneous `Mixed`
+    // conversation trace (chat turns plus ~4% near-million-token
+    // documents) through a paper-scale pool. Heavy transcripts exceed the
+    // retention cap and are refused; chat sessions retain and hit. Same
+    // seed ⇒ identical event streams, timestamps included.
+    let run = || {
+        let rec = Arc::new(TraceRecorder::new());
+        let mut sim = builder(4, 4)
+            .sim_params(SimParams {
+                backends_per_decode: 4,
+                decode_capacity_tokens: 2_000_000,
+                block_tokens: 16,
+            })
+            .sessions(SessionConfig::enabled(4_096))
+            .seed(0x5e551)
+            .observe(rec.clone())
+            .build_simulation()
+            .expect("sim builds");
+        let trace = sim.generate_conversations(TraceKind::Mixed, 30, 2.0);
+        assert!(trace.len() > 30, "conversations must contribute follow-up turns");
+        sim.run(&trace);
+        rec.events()
+    };
+    let a = run();
+    let b = run();
+    assert!(!prefix_hits(&a).is_empty(), "chat follow-up turns must hit");
+    assert_eq!(a, b, "same seed must replay the identical event stream");
+}
+
+#[test]
+fn sequential_multi_turn_replay_is_deterministic_on_serve() {
+    // Acceptance (f), live side: one conversation of three awaited turns,
+    // run twice on fresh servers — the timestamp-free event shapes
+    // (including the two prefix hits and their cached token counts) must
+    // be identical.
+    let run = || {
+        let rec = Arc::new(TraceRecorder::new());
+        let mut server = session_builder(rec.clone(), 256)
+            .build_server(Arc::new(Engine::stub_default()), 4)
+            .expect("server starts");
+        let mut prompt = 128usize;
+        for turn in 0..3u64 {
+            let mut h = server
+                .submit_async_with(
+                    &req(1 + turn, prompt, 6),
+                    SubmitOptions::interactive().session(1),
+                )
+                .expect("submitted");
+            assert!(h.wait().is_finished());
+            prompt += 6 + 32;
+        }
+        server.shutdown().unwrap();
+        rec.events()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(prefix_hits(&a).len(), 2, "turns 2 and 3 hit");
+    assert_eq!(event_shape(&a), event_shape(&b), "same script must replay the same shape");
+}

@@ -1,11 +1,16 @@
 //! Bench 6: distributed KV pool capacity (table2 + fig10 style).
 //!
-//! Three numbers, written to `BENCH_6.json` for the CI regression gate:
+//! Four numbers, written to `BENCH_6.json` for the CI regression gate:
 //!
 //! * `submits_per_sec` — sustained route→handoff→finish cycles per second
 //!   through a broker-enabled `DecodeRouter` (table2's Instant-loop idiom):
 //!   the broker's feasibility scan and lease bookkeeping must stay cheap
 //!   enough for online placement.
+//! * `shard_speedup` — contended submitter throughput with the lifecycle
+//!   traffic (transfer-complete, finish) moved onto per-instance shard
+//!   handles, divided by the same workload forced through one router lock.
+//!   This is the number the sharded-lock refactor exists for: routing must
+//!   not queue behind block bookkeeping.
 //! * `ttft_p99` — P99 TTFT of the broker-enabled run at the reference rate
 //!   on the long-context trace.
 //! * `max_capacity` — the highest sustainable arrival rate (fig10's 25×
@@ -13,7 +18,9 @@
 //!   alongside the local-only capacity for comparison: a KV-bound cluster
 //!   admits more load when fragmented free blocks are poolable.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
 use std::time::Instant;
 use tetris::api::{KvBrokerConfig, Tetris, TetrisBuilder, TraceRecorder};
 use tetris::metrics::{max_sustainable_rate, SloCriterion};
@@ -72,6 +79,74 @@ fn submits_per_sec(trials: usize) -> (f64, f64) {
     (trials as f64 / dt, placed as f64 / trials as f64)
 }
 
+/// Contended submitter throughput: one submitter routes while `finishers`
+/// threads drive the lifecycle (transfer-complete → finish) of everything
+/// it places. `sharded = false` forces every lifecycle op through the
+/// control lock the submitter needs, so routing queues behind block
+/// bookkeeping; `sharded = true` sends the lifecycle through per-instance
+/// [`DecodeShard`](tetris::sched::DecodeShard) handles and the submitter's
+/// lock is never held across an allocation loop. Returns sustained
+/// placements per second as seen by the submitter.
+fn contended_submits_per_sec(trials: usize, finishers: usize, sharded: bool) -> f64 {
+    let ctl = Mutex::new(DecodeRouter::new(8, 2_000, 16));
+    let shards = {
+        let r = ctl.lock().unwrap();
+        assert!(r.shardable(), "no broker, no sessions: shard handles are valid");
+        r.shard_handles()
+    };
+    // Placed-but-unfinished work handed from the submitter to the
+    // finisher pool: (instance, tokens, request id).
+    let queue: Mutex<Vec<(usize, usize, u64)>> = Mutex::new(Vec::new());
+    let done = AtomicBool::new(false);
+    let mut rng = Pcg64::new(0x5eed);
+    let mut rate = 0.0;
+    thread::scope(|s| {
+        let ctl = &ctl;
+        let shards = &shards;
+        let queue = &queue;
+        let done = &done;
+        for _ in 0..finishers {
+            s.spawn(move || loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((inst, tokens, id)) => {
+                        if sharded {
+                            let seq = shards[inst].transfer_complete(tokens).expect("reserved");
+                            shards[inst].finish(seq);
+                        } else {
+                            let mut r = ctl.lock().unwrap();
+                            let seq = r.transfer_complete(inst, tokens, id).expect("reserved");
+                            r.finish(inst, seq);
+                        }
+                    }
+                    None if done.load(Ordering::Acquire) => break,
+                    None => thread::yield_now(),
+                }
+            });
+        }
+        let mut placed = 0usize;
+        let mut id = 0u64;
+        let t0 = Instant::now();
+        while placed < trials {
+            let tokens = rng.range_u64(256, 8_000) as usize;
+            let routed = black_box(ctl.lock().unwrap().route(tokens, id));
+            id += 1;
+            match routed {
+                Some(inst) => {
+                    queue.lock().unwrap().push((inst, tokens, id));
+                    placed += 1;
+                }
+                // Backlogged: capacity is virtually reserved for queued
+                // work — wait for the finisher pool to drain.
+                None => thread::yield_now(),
+            }
+        }
+        rate = placed as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        done.store(true, Ordering::Release);
+    });
+    rate
+}
+
 fn main() {
     let args = Args::from_env(&[]);
     let n = args.usize_or("n", 100);
@@ -80,6 +155,14 @@ fn main() {
     println!("=== Bench 6: distributed KV pool (long-context trace) ===");
     let (sps, placed_frac) = submits_per_sec(args.usize_or("trials", 20_000));
     println!("router: {sps:.0} submits/sec sustained ({:.0}% placed)", placed_frac * 100.0);
+
+    let contended = args.usize_or("contended-trials", 20_000);
+    let single = contended_submits_per_sec(contended, 3, false);
+    let sharded = contended_submits_per_sec(contended, 3, true);
+    let speedup = sharded / single.max(1e-9);
+    println!(
+        "contended: {single:.0} submits/sec single-lock, {sharded:.0} sharded ({speedup:.1}x)"
+    );
 
     let gen = WorkloadGen::paper_trace(TraceKind::Long);
     let mut rng = Pcg64::new(10);
@@ -103,6 +186,9 @@ fn main() {
 
     let j = Json::obj()
         .set("submits_per_sec", sps)
+        .set("submits_contended_single", single)
+        .set("submits_contended_sharded", sharded)
+        .set("shard_speedup", speedup)
         .set("ttft_p99", ttft_p99)
         .set("max_capacity", cap_broker)
         .set("max_capacity_local", cap_local)

@@ -293,18 +293,18 @@ impl LoadSnapshot {
     /// lock guards the router; the result is a plain copy.)
     pub fn decode_load_of(router: &DecodeRouter) -> (usize, Vec<DecodeLoad>) {
         let block_tokens = router.block_tokens();
-        let decode = router
-            .instances
-            .iter()
-            .enumerate()
-            .map(|(idx, i)| DecodeLoad {
-                total_blocks: i.blocks.total_blocks(),
-                free_blocks: i.blocks.free_blocks(),
-                virtual_blocks: i.virtual_blocks,
-                active_batch: i.active_batch,
-                pending_transfers: i.pending_transfers,
-                lent_blocks: router.broker.lent(idx),
-                borrowed_blocks: router.broker.debt(idx),
+        let decode = (0..router.n_instances())
+            .map(|idx| {
+                let i = router.instance(idx);
+                DecodeLoad {
+                    total_blocks: i.blocks.total_blocks(),
+                    free_blocks: i.blocks.free_blocks(),
+                    virtual_blocks: i.virtual_blocks,
+                    active_batch: i.active_batch,
+                    pending_transfers: i.pending_transfers,
+                    lent_blocks: router.broker.lent(idx),
+                    borrowed_blocks: router.broker.debt(idx),
+                }
             })
             .collect();
         (block_tokens, decode)

@@ -10,18 +10,46 @@
 //!
 //! Slot statistics refresh whenever a decode iteration returns output.
 //!
-//! The router is deliberately a plain (non-thread-safe) value: the
-//! simulator owns one directly, while the live server wraps the same type
-//! in an `Arc<Mutex<_>>` and shares it between the dispatcher thread
-//! (placement commits), the prefill workers (in-flight transfer
-//! completion), and the decode workers (slot release on finish). Keeping
-//! one implementation is what makes sim-vs-serve placement parity
-//! testable: both paths run the identical routing code over the identical
-//! state machine.
+//! # Sharded locking
+//!
+//! Per-instance state lives behind one lock *per shard*
+//! (`Arc<Mutex<DecodeInstanceState>>`), while cross-instance control state —
+//! the KV broker ledgers, the session store, membership — stays plain data
+//! inside `DecodeRouter`. The simulator owns a router directly (its shard
+//! locks are always uncontended); the live server wraps the router in an
+//! `Arc<Mutex<_>>` — the **control lock** — and additionally hands its
+//! workers [`DecodeShard`] handles cloned once at startup.
+//!
+//! The locking discipline, in order of acquisition (never reversed, never
+//! two shard guards at once):
+//!
+//! 1. **control lock** (the server's `Arc<Mutex<DecodeRouter>>`) — taken by
+//!    everything that routes, reads aggregates, or touches broker/session/
+//!    membership state. Placement for a whole burst commits under one
+//!    control acquisition, so burst placement stays a pure function of the
+//!    request sequence.
+//! 2. **shard lock** — taken briefly inside router methods, and directly by
+//!    [`DecodeShard`] fast paths.
+//!
+//! While the broker and sessions are both disabled ([`DecodeRouter::shardable`]),
+//! `transfer_complete` / `finish` / `finish_abort` / `cancel` touch *only*
+//! shard state, so workers may run them through [`DecodeShard`] without the
+//! control lock: finish and token-stream paths never contend with
+//! `schedule()`. The handles stay valid across membership changes —
+//! draining only masks an instance out of *placement*; the release ladder
+//! keeps operating on its shard.
+//!
+//! [`DecodeRouter::route_session`] itself is snapshot-then-commit: it reads
+//! each shard's counters under a brief shard lock into reusable scratch
+//! vectors (no per-call allocation), scores purely over the snapshot, then
+//! commits on the winner's shard. Concurrent shard-side operations only ever
+//! *increase* availability (finish frees, cancel releases, a transfer is
+//! freeness-neutral), so a commit can never fail for space that the
+//! snapshot promised.
 //!
 //! The live server's submission path is **two-phase**: CDSP planning runs
-//! on the dispatcher thread with no router lock held, and the lock is
-//! taken only around [`DecodeRouter::route`] to commit placements in
+//! on the dispatcher thread with no router lock held, and the control lock
+//! is taken only around [`DecodeRouter::route`] to commit placements in
 //! arrival order (one lock across a whole burst). The phases are safe to
 //! split because `route` depends only on the request's token need and the
 //! router state — never on the plan — so narrowing the lock cannot change
@@ -78,6 +106,7 @@ use crate::cluster::MemberState;
 use crate::kvbroker::{KvBroker, KvBrokerConfig};
 use crate::kvcache::BlockManager;
 use crate::session::{SessionConfig, SessionStore};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// State of one decoding instance as the router sees it.
 #[derive(Clone, Debug)]
@@ -118,6 +147,134 @@ impl DecodeInstanceState {
     pub fn blocks_for(&self, tokens: usize) -> usize {
         self.blocks.blocks_for(tokens)
     }
+
+    /// Commit a routed placement: reserve `local` virtual blocks and count
+    /// the in-flight transfer. The instance-local half of
+    /// [`DecodeRouter::route_session`]'s commit phase.
+    fn commit_route(&mut self, local: usize) {
+        self.virtual_blocks += local;
+        self.pending_transfers += 1;
+    }
+
+    /// Instance-local transfer completion: convert the local share of the
+    /// virtual reservation into a real allocation (reusing a retained
+    /// prefix's blocks when `reuse = (cached_blocks, prefix_seq)` is set)
+    /// and join the batch. One implementation shared by
+    /// [`DecodeRouter::transfer_complete`] and the [`DecodeShard`] fast
+    /// path (which always passes `leased = 0`, `reuse = None`).
+    fn complete_transfer(
+        &mut self,
+        tokens: usize,
+        leased: usize,
+        reuse: Option<(usize, u64)>,
+    ) -> anyhow::Result<u64> {
+        let need = self.blocks_for(tokens);
+        let seq = if let Some((cached_blocks, prefix_seq)) = reuse {
+            let local = need.saturating_sub(cached_blocks).saturating_sub(leased);
+            self.virtual_blocks = self.virtual_blocks.saturating_sub(local);
+            self.pending_transfers = self.pending_transfers.saturating_sub(1);
+            self.blocks.reuse_seq(prefix_seq, tokens, local)?
+        } else {
+            let local = need.saturating_sub(leased);
+            self.virtual_blocks = self.virtual_blocks.saturating_sub(local);
+            self.pending_transfers = self.pending_transfers.saturating_sub(1);
+            self.blocks.allocate_seq_partial(tokens, local)?
+        };
+        self.active_batch += 1;
+        Ok(seq)
+    }
+
+    /// Instance-local cancellation of a routed-but-untransferred request:
+    /// release the virtual reservation (net of `cached` prefix blocks and
+    /// `leased` remote blocks) and drop the in-flight transfer count. One
+    /// implementation shared by [`DecodeRouter::cancel`] and the
+    /// [`DecodeShard`] fast path (`cached = leased = 0`).
+    fn cancel_reservation(&mut self, tokens: usize, cached: usize, leased: usize) {
+        let need = self.blocks_for(tokens).saturating_sub(cached);
+        self.virtual_blocks = self.virtual_blocks.saturating_sub(need.saturating_sub(leased));
+        self.pending_transfers = self.pending_transfers.saturating_sub(1);
+    }
+
+    /// Instance-local finish: free the sequence's blocks and shrink the
+    /// batch. One implementation shared by [`DecodeRouter::finish`] /
+    /// [`DecodeRouter::finish_abort`] and the [`DecodeShard`] fast path.
+    fn finish_release(&mut self, seq: u64) {
+        self.blocks.free_seq(seq);
+        self.active_batch = self.active_batch.saturating_sub(1);
+    }
+}
+
+/// Reusable per-route scoring buffers: cleared, never reallocated, so the
+/// routing hot path is allocation-free after warm-up. Deliberately *not*
+/// cloned with the router (a clone starts with empty scratch).
+#[derive(Debug, Default)]
+struct RouteScratch {
+    /// Per-instance lendable spare (0 for non-active instances).
+    spare: Vec<usize>,
+    /// Per-instance score denominator: `active_batch + pending_transfers + 1`.
+    denom: Vec<usize>,
+    /// Per-instance total blocks.
+    total: Vec<usize>,
+}
+
+impl RouteScratch {
+    fn clear(&mut self) {
+        self.spare.clear();
+        self.denom.clear();
+        self.total.clear();
+    }
+}
+
+/// A cloneable handle onto one decode instance's shard lock, valid for the
+/// lifecycle transitions that touch *only* instance-local state.
+///
+/// The live server clones one handle per instance at startup and gives the
+/// set to every worker. While the router is [`DecodeRouter::shardable`]
+/// (broker and sessions both disabled), `transfer_complete` / `finish` /
+/// `finish_abort` / `cancel` are bit-for-bit the full-router methods — the
+/// control-plane steps they skip (lease close, prefix retention, turn
+/// bookkeeping) are all provably no-ops — so workers run them here without
+/// ever taking the control lock. The shard `Arc`s are stable for the
+/// router's lifetime (membership only flips status flags; shards are never
+/// resized), so handles never go stale.
+#[derive(Clone, Debug)]
+pub struct DecodeShard {
+    shard: Arc<Mutex<DecodeInstanceState>>,
+    idx: usize,
+}
+
+impl DecodeShard {
+    /// The decode-instance index this handle operates on.
+    pub fn index(&self) -> usize {
+        self.idx
+    }
+
+    /// Shard-only [`DecodeRouter::transfer_complete`]: the routed request's
+    /// virtual reservation becomes a real allocation and it joins the
+    /// batch. Only valid on a [`DecodeRouter::shardable`] router.
+    pub fn transfer_complete(&self, tokens: usize) -> anyhow::Result<u64> {
+        self.shard.lock().unwrap().complete_transfer(tokens, 0, None)
+    }
+
+    /// Shard-only [`DecodeRouter::finish`]: free the sequence and shrink
+    /// the batch. Only valid on a [`DecodeRouter::shardable`] router.
+    pub fn finish(&self, seq: u64) {
+        self.shard.lock().unwrap().finish_release(seq);
+    }
+
+    /// Shard-only [`DecodeRouter::finish_abort`] — identical to
+    /// [`DecodeShard::finish`] on a shardable router (no session could have
+    /// retained the blocks).
+    pub fn finish_abort(&self, seq: u64) {
+        self.shard.lock().unwrap().finish_release(seq);
+    }
+
+    /// Shard-only [`DecodeRouter::cancel`]: release a virtual reservation
+    /// that will never convert. Only valid on a [`DecodeRouter::shardable`]
+    /// router.
+    pub fn cancel(&self, tokens: usize) {
+        self.shard.lock().unwrap().cancel_reservation(tokens, 0, 0);
+    }
 }
 
 /// The router over all decoding instances.
@@ -132,10 +289,12 @@ impl DecodeInstanceState {
 /// default) the membership checks pass for every index in the identical
 /// iteration order, so placements are bit-for-bit the non-elastic
 /// decisions — the third parity leg pins this.
-#[derive(Clone, Debug, Default)]
+#[derive(Debug, Default)]
 pub struct DecodeRouter {
-    /// Per-instance routing state, indexed by decode-instance id.
-    pub instances: Vec<DecodeInstanceState>,
+    /// Per-instance routing state behind per-shard locks, indexed by
+    /// decode-instance id. Access through [`DecodeRouter::instance`] or a
+    /// [`DecodeShard`] handle.
+    shards: Vec<Arc<Mutex<DecodeInstanceState>>>,
     /// The cluster KV broker: lent/debt ledgers and open leases. Disabled
     /// (never leases, scores untouched) unless constructed through
     /// [`DecodeRouter::with_broker`] with an enabled config.
@@ -147,10 +306,38 @@ pub struct DecodeRouter {
     /// [`SessionStore::take_evictions`] after router calls to emit
     /// `on_prefix_evict` outside any lock.
     pub sessions: SessionStore,
-    /// Per-instance membership state (parallel to `instances`).
+    /// Per-instance membership state (parallel to `shards`).
     status: Vec<MemberState>,
     /// Monotone counter bumped on every membership mutation.
     membership_epoch: u64,
+    /// Tokens per KV block, cached at construction (uniform across shards)
+    /// so geometry reads never take a shard lock. 0 only on a
+    /// default-constructed empty router.
+    block_tokens: usize,
+    /// Reusable route-scoring buffers (see [`RouteScratch`]).
+    scratch: RouteScratch,
+}
+
+impl Clone for DecodeRouter {
+    /// Deep snapshot: each shard's state is copied out from under its lock
+    /// (a derived clone would alias the shard `Arc`s and the "clone" would
+    /// keep mutating with the original — `router_state()` and the tests
+    /// rely on true snapshot semantics).
+    fn clone(&self) -> Self {
+        DecodeRouter {
+            shards: self
+                .shards
+                .iter()
+                .map(|s| Arc::new(Mutex::new(s.lock().unwrap().clone())))
+                .collect(),
+            broker: self.broker.clone(),
+            sessions: self.sessions.clone(),
+            status: self.status.clone(),
+            membership_epoch: self.membership_epoch,
+            block_tokens: self.block_tokens,
+            scratch: RouteScratch::default(),
+        }
+    }
 }
 
 impl DecodeRouter {
@@ -182,14 +369,50 @@ impl DecodeRouter {
         sessions: SessionConfig,
     ) -> Self {
         DecodeRouter {
-            instances: (0..n)
-                .map(|_| DecodeInstanceState::new(blocks_per_instance, block_tokens))
+            shards: (0..n)
+                .map(|_| {
+                    Arc::new(Mutex::new(DecodeInstanceState::new(
+                        blocks_per_instance,
+                        block_tokens,
+                    )))
+                })
                 .collect(),
             broker: KvBroker::new(n, broker),
             sessions: SessionStore::new(sessions, n),
             status: vec![MemberState::Active; n],
             membership_epoch: 0,
+            block_tokens,
+            scratch: RouteScratch::default(),
         }
+    }
+
+    /// Lock and return instance `i`'s state. The guard is a full view —
+    /// tests and diagnostics read (or seed) per-instance counters through
+    /// it. Never call while already holding another shard's guard from
+    /// this router, and never re-enter a `&self`-locking router method
+    /// while holding one.
+    pub fn instance(&self, i: usize) -> MutexGuard<'_, DecodeInstanceState> {
+        self.shards[i].lock().unwrap()
+    }
+
+    /// Whether every lifecycle transition after placement touches only
+    /// shard-local state: no broker (nothing to lease or repatriate) and
+    /// no sessions (nothing to retain, pin, or evict). When true, workers
+    /// may drive `transfer_complete`/`finish`/`finish_abort`/`cancel`
+    /// through [`DecodeShard`] handles without the control lock.
+    pub fn shardable(&self) -> bool {
+        !self.broker.is_enabled() && !self.sessions.is_enabled()
+    }
+
+    /// One [`DecodeShard`] handle per instance, in instance order. Handles
+    /// clone the shard `Arc`s, so they remain valid (and see all state) for
+    /// the router's whole lifetime.
+    pub fn shard_handles(&self) -> Vec<DecodeShard> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(idx, s)| DecodeShard { shard: Arc::clone(s), idx })
+            .collect()
     }
 
     /// Whether instance `i` may receive new placements (and lend blocks).
@@ -199,11 +422,10 @@ impl DecodeRouter {
         self.status.get(i).map_or(true, |s| s.is_active())
     }
 
-    /// Instance `i`'s availability net of blocks it has lent out —
-    /// identical to [`DecodeInstanceState::available_blocks`] while the
-    /// broker is disabled (nothing is ever lent).
-    fn lendable_spare(&self, i: usize) -> usize {
-        self.instances[i].available_blocks().saturating_sub(self.broker.lent(i))
+    /// Blocks required for `tokens` tokens — the geometry is uniform
+    /// across shards by construction, so this never takes a lock.
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens())
     }
 
     /// Route request `req` that will need `tokens` KV slots: pick the
@@ -232,6 +454,13 @@ impl DecodeRouter {
     /// borrowing. With sessions disabled every added term is exactly
     /// zero, so `route` delegates here without changing a single
     /// placement.
+    ///
+    /// Internally snapshot-then-commit: per-shard counters are read under
+    /// one brief shard lock each into reusable scratch (allocation-free),
+    /// scoring runs over the snapshot, and the winner commits under its
+    /// own shard lock. Under the server's control lock the snapshot is
+    /// exact; concurrent shard-side releases can only make the commit see
+    /// *more* room than scored, never less.
     pub fn route_session(
         &mut self,
         tokens: usize,
@@ -250,21 +479,34 @@ impl DecodeRouter {
             Some((h, b)) => (Some(h), b),
             None => (None, 0),
         };
-        let spare: Vec<usize> = (0..self.instances.len())
-            .map(|i| if self.is_active(i) { self.lendable_spare(i) } else { 0 })
-            .collect();
+        // Snapshot phase: one brief lock per shard, into reused buffers.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        for i in 0..self.shards.len() {
+            let (avail, denom, total) = {
+                let s = self.shards[i].lock().unwrap();
+                (
+                    s.available_blocks(),
+                    s.active_batch + s.pending_transfers + 1,
+                    s.blocks.total_blocks(),
+                )
+            };
+            let spare =
+                if self.is_active(i) { avail.saturating_sub(self.broker.lent(i)) } else { 0 };
+            scratch.spare.push(spare);
+            scratch.denom.push(denom);
+            scratch.total.push(total);
+        }
         let affinity = self.sessions.config().affinity_weight;
+        let need_full = self.blocks_for(tokens);
         let mut best: Option<(usize, f64)> = None;
-        for (i, inst) in self.instances.iter().enumerate() {
+        for i in 0..self.shards.len() {
             if !self.is_active(i) {
                 continue;
             }
             let hit_here = holder == Some(i);
-            let need = if hit_here {
-                inst.blocks_for(tokens).saturating_sub(cached_blocks)
-            } else {
-                inst.blocks_for(tokens)
-            };
+            let need =
+                if hit_here { need_full.saturating_sub(cached_blocks) } else { need_full };
             // Unpinned retained blocks are reclaimable-on-demand, so they
             // count as available — except the very prefix this request
             // wants to reuse. Exactly 0 while sessions are disabled.
@@ -272,13 +514,14 @@ impl DecodeRouter {
             if hit_here {
                 evictable = evictable.saturating_sub(cached_blocks);
             }
-            let avail = spare[i] + evictable;
+            let avail = scratch.spare[i] + evictable;
             let shortfall = need.saturating_sub(avail);
             if shortfall > 0 {
                 if !enabled || shortfall > self.broker.borrow_headroom(i) {
                     continue;
                 }
-                let lendable: usize = spare
+                let lendable: usize = scratch
+                    .spare
                     .iter()
                     .enumerate()
                     .filter(|&(j, _)| j != i)
@@ -297,16 +540,15 @@ impl DecodeRouter {
             // make the holder look exactly `cached_blocks` less free and
             // hits would flee their own prefix.
             let score_avail = if hit_here { avail + cached_blocks } else { avail };
-            let mut f =
-                score_avail as f64 / (inst.active_batch + inst.pending_transfers + 1) as f64;
+            let mut f = score_avail as f64 / scratch.denom[i] as f64;
             if enabled {
-                let total = inst.blocks.total_blocks().max(1);
+                let total = scratch.total[i].max(1);
                 f -= self.broker.config().debt_penalty
                     * (self.broker.debt(i) + shortfall) as f64
                     / total as f64;
             }
             if hit_here {
-                let total = inst.blocks.total_blocks().max(1);
+                let total = scratch.total[i].max(1);
                 f += affinity * cached_blocks as f64 / total as f64;
             }
             match best {
@@ -315,38 +557,48 @@ impl DecodeRouter {
                 _ => {}
             }
         }
-        let (idx, _) = best?;
-        let hit = holder == Some(idx);
-        if let Some(sess) = session {
-            // Record the turn (pins the prefix on a hit, so the eviction
-            // sweep below can never reclaim it out from under us).
-            self.sessions.begin_turn(req, sess, hit);
-        }
-        let mut need = self.instances[idx].blocks_for(tokens);
-        if hit {
-            need = need.saturating_sub(cached_blocks);
-        }
-        // Evict LRU prefixes before borrowing: reclaim just enough
-        // retained blocks to cover what local spare cannot.
-        if need > spare[idx] {
-            for seq in self.sessions.evict_for_room(idx, need - spare[idx]) {
-                self.instances[idx].blocks.free_seq(seq);
+        // Commit phase: everything instance-local happens under the
+        // winner's shard lock; broker/session bookkeeping is control state.
+        let routed = if let Some((idx, _)) = best {
+            let hit = holder == Some(idx);
+            if let Some(sess) = session {
+                // Record the turn (pins the prefix on a hit, so the
+                // eviction sweep below can never reclaim it out from
+                // under us).
+                self.sessions.begin_turn(req, sess, hit);
             }
-        }
-        let spare_now = self.lendable_spare(idx);
-        let shortfall = need.saturating_sub(spare_now);
-        if shortfall > 0 {
-            // Feasibility was checked above; an open_lease failure here
-            // would be a bookkeeping bug, not a capacity race (the router
-            // is externally locked).
-            if self.broker.open_lease(req, idx, shortfall, &spare).is_none() {
+            let mut need = need_full;
+            if hit {
+                need = need.saturating_sub(cached_blocks);
+            }
+            let mut g = self.shards[idx].lock().unwrap();
+            // Evict LRU prefixes before borrowing: reclaim just enough
+            // retained blocks to cover what local spare cannot.
+            let spare_idx = g.available_blocks().saturating_sub(self.broker.lent(idx));
+            if need > spare_idx {
+                for seq in self.sessions.evict_for_room(idx, need - spare_idx) {
+                    g.blocks.free_seq(seq);
+                }
+            }
+            let spare_now = g.available_blocks().saturating_sub(self.broker.lent(idx));
+            let shortfall = need.saturating_sub(spare_now);
+            if shortfall > 0
+                && self.broker.open_lease(req, idx, shortfall, &scratch.spare).is_none()
+            {
+                // Feasibility was checked above; an open_lease failure here
+                // would be a bookkeeping bug, not a capacity race (broker
+                // paths run under the control lock).
                 self.sessions.abort_turn(req);
-                return None;
+                None
+            } else {
+                g.commit_route(need - shortfall);
+                Some(idx)
             }
-        }
-        self.instances[idx].virtual_blocks += need - shortfall;
-        self.instances[idx].pending_transfers += 1;
-        Some(idx)
+        } else {
+            None
+        };
+        self.scratch = scratch;
+        routed
     }
 
     /// The cached-prefix tokens routed request `req` will reuse (0 for
@@ -384,22 +636,13 @@ impl DecodeRouter {
         req: u64,
     ) -> anyhow::Result<u64> {
         let leased = self.broker.pending_blocks(req);
-        let reuse = self.sessions.pending_prefix(req).filter(|&(h, _, _, _)| h == idx);
+        let reuse = self
+            .sessions
+            .pending_prefix(req)
+            .filter(|&(h, _, _, _)| h == idx)
+            .map(|(_, _, b, s)| (b, s));
         let consumed = self.sessions.consume_turn(req);
-        let inst = &mut self.instances[idx];
-        let need = inst.blocks_for(tokens);
-        let seq = if let Some((_, _, cached_blocks, prefix_seq)) = reuse {
-            let local = need.saturating_sub(cached_blocks).saturating_sub(leased);
-            inst.virtual_blocks = inst.virtual_blocks.saturating_sub(local);
-            inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
-            inst.blocks.reuse_seq(prefix_seq, tokens, local)?
-        } else {
-            let local = need.saturating_sub(leased);
-            inst.virtual_blocks = inst.virtual_blocks.saturating_sub(local);
-            inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
-            inst.blocks.allocate_seq_partial(tokens, local)?
-        };
-        inst.active_batch += 1;
+        let seq = self.shards[idx].lock().unwrap().complete_transfer(tokens, leased, reuse)?;
         self.broker.commit_lease(req, idx, seq);
         if let Some((sess, _)) = consumed {
             self.sessions.bind_active(idx, seq, sess);
@@ -424,15 +667,13 @@ impl DecodeRouter {
             .map(|(_, _, b, _)| b)
             .unwrap_or(0);
         self.sessions.abort_turn(req);
-        let inst = &mut self.instances[idx];
-        let need = inst.blocks_for(tokens).saturating_sub(cached);
-        inst.virtual_blocks = inst.virtual_blocks.saturating_sub(need.saturating_sub(leased));
-        inst.pending_transfers = inst.pending_transfers.saturating_sub(1);
+        let mut g = self.shards[idx].lock().unwrap();
+        g.cancel_reservation(tokens, cached, leased);
         if !self.is_active(idx) {
             // A drained instance may hold nothing: the unpinned prefix the
             // aborted turn was protecting must go now.
             for seq in self.sessions.purge_instance(idx) {
-                self.instances[idx].blocks.free_seq(seq);
+                g.blocks.free_seq(seq);
             }
         }
         leased
@@ -440,41 +681,37 @@ impl DecodeRouter {
 
     /// Number of decode instances the router spans.
     pub fn n_instances(&self) -> usize {
-        self.instances.len()
+        self.shards.len()
     }
 
     /// Requests whose prefill→decode transfer is still in flight, summed
     /// over all instances (the router's total virtual-usage exposure).
     pub fn in_flight_transfers(&self) -> usize {
-        self.instances.iter().map(|i| i.pending_transfers).sum()
+        self.shards.iter().map(|s| s.lock().unwrap().pending_transfers).sum()
     }
 
     /// Total KV blocks managed across all instances.
     pub fn total_blocks(&self) -> usize {
-        self.instances.iter().map(|i| i.blocks.total_blocks()).sum()
+        self.shards.iter().map(|s| s.lock().unwrap().blocks.total_blocks()).sum()
     }
 
     /// KV blocks admittable right now across all instances (free minus
     /// virtual reservations) — the router-side half of a load snapshot.
     pub fn available_blocks(&self) -> usize {
-        self.instances.iter().map(DecodeInstanceState::available_blocks).sum()
+        self.shards.iter().map(|s| s.lock().unwrap().available_blocks()).sum()
     }
 
     /// Tokens per KV block — the router's admission granularity (1 on an
     /// empty router). The single source the submission-time validators
     /// and load snapshots read, so the geometry rule lives in one place.
     pub fn block_tokens(&self) -> usize {
-        self.instances
-            .first()
-            .map(|i| i.blocks.block_tokens())
-            .unwrap_or(1)
-            .max(1)
+        self.block_tokens.max(1)
     }
 
     /// The largest per-instance block capacity — the most KV any single
     /// request could ever be granted (0 on an empty router).
     pub fn max_blocks_per_instance(&self) -> usize {
-        self.instances.iter().map(|i| i.blocks.total_blocks()).max().unwrap_or(0)
+        self.shards.iter().map(|s| s.lock().unwrap().blocks.total_blocks()).max().unwrap_or(0)
     }
 
     /// A request finished decoding: free its blocks, close its resident
@@ -485,14 +722,13 @@ impl DecodeRouter {
     pub fn finish(&mut self, idx: usize, seq: u64) -> usize {
         let leased = self.broker.close_lease(idx, seq);
         if self.try_retain(idx, seq, leased) {
-            self.instances[idx].active_batch =
-                self.instances[idx].active_batch.saturating_sub(1);
+            let mut g = self.shards[idx].lock().unwrap();
+            g.active_batch = g.active_batch.saturating_sub(1);
+            drop(g);
             self.repatriate_debt(idx);
             return leased;
         }
-        let inst = &mut self.instances[idx];
-        inst.blocks.free_seq(seq);
-        inst.active_batch = inst.active_batch.saturating_sub(1);
+        self.shards[idx].lock().unwrap().finish_release(seq);
         self.repatriate_debt(idx);
         leased
     }
@@ -504,9 +740,7 @@ impl DecodeRouter {
     pub fn finish_abort(&mut self, idx: usize, seq: u64) -> usize {
         self.sessions.on_finish(idx, seq);
         let leased = self.broker.close_lease(idx, seq);
-        let inst = &mut self.instances[idx];
-        inst.blocks.free_seq(seq);
-        inst.active_batch = inst.active_batch.saturating_sub(1);
+        self.shards[idx].lock().unwrap().finish_release(seq);
         self.repatriate_debt(idx);
         leased
     }
@@ -522,8 +756,9 @@ impl DecodeRouter {
         if leased > 0 || !self.is_active(idx) || !self.sessions.is_enabled() {
             return false;
         }
-        let tokens = self.instances[idx].blocks.seq_tokens(seq).unwrap_or(0);
-        let blocks = self.instances[idx].blocks.seq_blocks(seq).unwrap_or(0);
+        let mut g = self.shards[idx].lock().unwrap();
+        let tokens = g.blocks.seq_tokens(seq).unwrap_or(0);
+        let blocks = g.blocks.seq_blocks(seq).unwrap_or(0);
         let cap = self.sessions.config().retention_blocks;
         if blocks == 0 || blocks > cap {
             return false;
@@ -531,14 +766,14 @@ impl DecodeRouter {
         let held = self.sessions.retained_blocks_on(idx);
         if held + blocks > cap {
             for victim in self.sessions.evict_for_room(idx, held + blocks - cap) {
-                self.instances[idx].blocks.free_seq(victim);
+                g.blocks.free_seq(victim);
             }
         }
         if !self.sessions.room_on(idx, blocks) {
             return false;
         }
         if let Some(old) = self.sessions.retain(sess, idx, seq, tokens, blocks) {
-            self.instances[idx].blocks.free_seq(old);
+            g.blocks.free_seq(old);
         }
         true
     }
@@ -551,13 +786,14 @@ impl DecodeRouter {
         if !self.broker.is_enabled() || self.broker.debt(idx) == 0 {
             return;
         }
-        let mut spare = self.lendable_spare(idx);
+        let mut g = self.shards[idx].lock().unwrap();
+        let mut spare = g.available_blocks().saturating_sub(self.broker.lent(idx));
         for (seq, blocks) in self.broker.resident_on(idx) {
             if spare == 0 {
                 break;
             }
             let take = blocks.min(spare);
-            if self.instances[idx].blocks.grow_seq(seq, take).is_ok() {
+            if g.blocks.grow_seq(seq, take).is_ok() {
                 self.broker.repatriate(idx, seq, take);
                 spare -= take;
             }
@@ -573,13 +809,13 @@ impl DecodeRouter {
         if debt == 0 {
             return 0.0;
         }
-        let used = self.instances[idx].blocks.used_blocks();
+        let used = self.shards[idx].lock().unwrap().blocks.used_blocks();
         debt as f64 / (used + debt) as f64
     }
 
     /// One decode step generated a token for `seq`: may need a new block.
     pub fn on_token(&mut self, idx: usize, seq: u64) -> anyhow::Result<()> {
-        self.instances[idx].blocks.append_token(seq)?;
+        self.shards[idx].lock().unwrap().blocks.append_token(seq)?;
         Ok(())
     }
 
@@ -603,7 +839,7 @@ impl DecodeRouter {
 
     /// Number of instances currently accepting placements.
     pub fn n_active_instances(&self) -> usize {
-        (0..self.instances.len()).filter(|&i| self.is_active(i)).count()
+        (0..self.shards.len()).filter(|&i| self.is_active(i)).count()
     }
 
     /// Begin draining instance `i`: no new placements land on it and it
@@ -619,8 +855,9 @@ impl DecodeRouter {
         // Retained prefixes would strand the drain: drop the unpinned ones
         // now; pinned ones resolve through their in-flight turns (which
         // free rather than re-retain on a non-active instance).
+        let mut g = self.shards[i].lock().unwrap();
         for seq in self.sessions.purge_instance(i) {
-            self.instances[i].blocks.free_seq(seq);
+            g.blocks.free_seq(seq);
         }
         true
     }
@@ -641,7 +878,7 @@ impl DecodeRouter {
     /// virtual reservations, no batch, no in-flight transfers, and no
     /// broker entanglement (nothing lent out, no outstanding debt).
     pub fn is_drained(&self, i: usize) -> bool {
-        let inst = &self.instances[i];
+        let inst = self.shards[i].lock().unwrap();
         inst.virtual_blocks == 0
             && inst.active_batch == 0
             && inst.pending_transfers == 0
@@ -655,18 +892,20 @@ impl DecodeRouter {
     /// [`DecodeRouter::is_drained`] — departing may never strand blocks,
     /// leases, or in-flight requests.
     pub fn depart_instance(&mut self, i: usize) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            self.is_drained(i),
-            "decode instance {i} still holds state (batch {}, transfers {}, virtual {}, \
-             free {}/{}, lent {}, debt {})",
-            self.instances[i].active_batch,
-            self.instances[i].pending_transfers,
-            self.instances[i].virtual_blocks,
-            self.instances[i].blocks.free_blocks(),
-            self.instances[i].blocks.total_blocks(),
-            self.broker.lent(i),
-            self.broker.debt(i)
-        );
+        if !self.is_drained(i) {
+            let inst = self.shards[i].lock().unwrap();
+            anyhow::bail!(
+                "decode instance {i} still holds state (batch {}, transfers {}, virtual {}, \
+                 free {}/{}, lent {}, debt {})",
+                inst.active_batch,
+                inst.pending_transfers,
+                inst.virtual_blocks,
+                inst.blocks.free_blocks(),
+                inst.blocks.total_blocks(),
+                self.broker.lent(i),
+                self.broker.debt(i)
+            );
+        }
         if self.status[i] != MemberState::Departed {
             self.status[i] = MemberState::Departed;
             self.membership_epoch += 1;
@@ -686,11 +925,11 @@ mod tests {
     #[test]
     fn routes_to_freest() {
         let mut r = router();
-        r.instances[0].active_batch = 10;
+        r.instance(0).active_batch = 10;
         let idx = r.route(1600, 0).unwrap();
         assert_eq!(idx, 1, "instance 1 has no batch, higher freeness");
-        assert!(r.instances[1].virtual_blocks > 0);
-        assert_eq!(r.instances[1].pending_transfers, 1);
+        assert!(r.instance(1).virtual_blocks > 0);
+        assert_eq!(r.instance(1).pending_transfers, 1);
     }
 
     #[test]
@@ -708,22 +947,22 @@ mod tests {
     fn transfer_complete_converts_virtual_to_real() {
         let mut r = DecodeRouter::new(1, 100, 16);
         let idx = r.route(320, 0).unwrap();
-        let virt_before = r.instances[0].virtual_blocks;
+        let virt_before = r.instance(0).virtual_blocks;
         assert_eq!(virt_before, 20);
         let seq = r.transfer_complete(idx, 320, 0).unwrap();
-        assert_eq!(r.instances[0].virtual_blocks, 0);
-        assert_eq!(r.instances[0].active_batch, 1);
-        assert_eq!(r.instances[0].blocks.free_blocks(), 80);
+        assert_eq!(r.instance(0).virtual_blocks, 0);
+        assert_eq!(r.instance(0).active_batch, 1);
+        assert_eq!(r.instance(0).blocks.free_blocks(), 80);
         r.finish(idx, seq);
-        assert_eq!(r.instances[0].blocks.free_blocks(), 100);
-        assert_eq!(r.instances[0].active_batch, 0);
+        assert_eq!(r.instance(0).blocks.free_blocks(), 100);
+        assert_eq!(r.instance(0).active_batch, 0);
     }
 
     #[test]
     fn freeness_prefers_fewer_pending() {
         let mut r = router();
         // Same free blocks, but instance 0 has pending transfers.
-        r.instances[0].pending_transfers = 5;
+        r.instance(0).pending_transfers = 5;
         assert_eq!(r.route(16, 0), Some(1));
     }
 
@@ -732,15 +971,15 @@ mod tests {
         let mut r = DecodeRouter::new(1, 10, 4);
         let idx = r.route(4, 0).unwrap();
         let seq = r.transfer_complete(idx, 4, 0).unwrap();
-        assert_eq!(r.instances[0].blocks.free_blocks(), 9);
+        assert_eq!(r.instance(0).blocks.free_blocks(), 9);
         // 4 tokens fill block 0 exactly; next token needs a new block
         r.on_token(idx, seq).unwrap();
-        assert_eq!(r.instances[0].blocks.free_blocks(), 8);
+        assert_eq!(r.instance(0).blocks.free_blocks(), 8);
         for _ in 0..3 {
             r.on_token(idx, seq).unwrap(); // fills block 1
         }
         r.on_token(idx, seq).unwrap(); // block 2
-        assert_eq!(r.instances[0].blocks.free_blocks(), 7);
+        assert_eq!(r.instance(0).blocks.free_blocks(), 7);
     }
 
     #[test]
@@ -751,7 +990,7 @@ mod tests {
         assert_eq!(r.route(16, 1), None, "no capacity left");
         r.cancel(idx, 160, 0);
         assert_eq!(r.in_flight_transfers(), 0);
-        assert_eq!(r.instances[0].virtual_blocks, 0);
+        assert_eq!(r.instance(0).virtual_blocks, 0);
         assert_eq!(r.route(16, 2), Some(0), "capacity restored");
     }
 
@@ -779,6 +1018,72 @@ mod tests {
     }
 
     #[test]
+    fn clone_is_a_deep_snapshot() {
+        let mut r = DecodeRouter::new(2, 10, 16);
+        let idx = r.route(64, 0).unwrap();
+        let snap = r.clone();
+        let seq = r.transfer_complete(idx, 64, 0).unwrap();
+        r.finish(idx, seq);
+        // The snapshot still shows the pre-transfer virtual reservation:
+        // a shallow clone would have aliased the shard and moved with it.
+        assert_eq!(snap.instance(idx).virtual_blocks, 4);
+        assert_eq!(snap.instance(idx).pending_transfers, 1);
+        assert_eq!(r.instance(idx).virtual_blocks, 0);
+        assert_eq!(r.instance(idx).pending_transfers, 0);
+    }
+
+    #[test]
+    fn shard_handles_match_full_router_lifecycle() {
+        // On a shardable router the DecodeShard fast path must be
+        // bit-for-bit the full-router methods.
+        let mut a = DecodeRouter::new(2, 100, 16);
+        let mut b = DecodeRouter::new(2, 100, 16);
+        assert!(a.shardable() && b.shardable());
+        let hb = b.shard_handles();
+        assert_eq!(hb.len(), 2);
+        assert_eq!(hb[1].index(), 1);
+        // route under control lock on both; lifecycle via shards on b.
+        let ia = a.route(320, 0).unwrap();
+        let ib = b.route(320, 0).unwrap();
+        assert_eq!(ia, ib);
+        let sa = a.transfer_complete(ia, 320, 0).unwrap();
+        let sb = hb[ib].transfer_complete(320).unwrap();
+        assert_eq!(sa, sb);
+        // a second request, cancelled on both paths
+        let ja = a.route(160, 1).unwrap();
+        let jb = b.route(160, 1).unwrap();
+        assert_eq!(ja, jb);
+        a.cancel(ja, 160, 1);
+        hb[jb].cancel(160);
+        a.finish(ia, sa);
+        hb[ib].finish(sb);
+        for i in 0..2 {
+            assert_eq!(a.instance(i).blocks.free_blocks(), b.instance(i).blocks.free_blocks());
+            assert_eq!(a.instance(i).virtual_blocks, b.instance(i).virtual_blocks);
+            assert_eq!(a.instance(i).active_batch, b.instance(i).active_batch);
+            assert_eq!(a.instance(i).pending_transfers, b.instance(i).pending_transfers);
+        }
+        // and the control-plane view agrees with shard-side mutations
+        assert_eq!(b.available_blocks(), 200);
+        assert_eq!(b.in_flight_transfers(), 0);
+    }
+
+    #[test]
+    fn broker_or_sessions_disable_the_fast_path() {
+        let r = DecodeRouter::with_broker(2, 10, 16, KvBrokerConfig::enabled(8));
+        assert!(!r.shardable(), "broker state needs the control lock");
+        let s = DecodeRouter::with_sessions(
+            2,
+            10,
+            16,
+            KvBrokerConfig::disabled(),
+            SessionConfig::enabled(8),
+        );
+        assert!(!s.shardable(), "session state needs the control lock");
+        assert!(DecodeRouter::new(2, 10, 16).shardable());
+    }
+
+    #[test]
     fn borrowing_admits_past_local_capacity() {
         // 2 instances × 10 blocks. A 12-block request fits nowhere locally
         // but fits with a 2-block (or larger) lease when the broker is on.
@@ -787,11 +1092,11 @@ mod tests {
         let mut r = DecodeRouter::with_broker(2, 10, 16, KvBrokerConfig::enabled(8));
         let idx = r.route(192, 0).expect("borrowing covers the shortfall");
         assert_eq!(r.broker.pending_blocks(0), 2, "10 local + 2 borrowed");
-        assert_eq!(r.instances[idx].virtual_blocks, 10, "virtual covers the local share");
+        assert_eq!(r.instance(idx).virtual_blocks, 10, "virtual covers the local share");
         let lender = 1 - idx;
         assert_eq!(r.broker.lent(lender), 2);
         let seq = r.transfer_complete(idx, 192, 0).expect("lease guarantees space");
-        assert_eq!(r.instances[idx].blocks.free_blocks(), 0);
+        assert_eq!(r.instance(idx).blocks.free_blocks(), 0);
         assert_eq!(r.broker.resident_blocks(idx, seq), 2);
         assert!(r.remote_block_fraction(idx) > 0.0);
         let returned = r.finish(idx, seq);
@@ -825,7 +1130,7 @@ mod tests {
         let returned = r.cancel(idx, 96, 7);
         assert_eq!(returned, 2);
         assert_eq!(r.broker.outstanding_blocks(), 0);
-        assert_eq!(r.instances[idx].virtual_blocks, 0);
+        assert_eq!(r.instance(idx).virtual_blocks, 0);
         assert_eq!(r.in_flight_transfers(), 0);
         assert_eq!(r.available_blocks(), 8, "all blocks admittable again");
     }
@@ -872,7 +1177,7 @@ mod tests {
         let seq_c = r.transfer_complete(0, 128, 2).unwrap();
         assert_eq!(r.broker.debt(0), 2);
         assert_eq!(r.broker.lent(1), 2);
-        assert_eq!(r.instances[0].blocks.seq_blocks(seq_c), Some(6));
+        assert_eq!(r.instance(0).blocks.seq_blocks(seq_c), Some(6));
         // req 0 finishes on the debtor: its freed blocks repatriate the
         // whole debt — the lease closes without the borrower finishing.
         let returned = r.finish(0, seq_a);
@@ -880,7 +1185,7 @@ mod tests {
         assert_eq!(r.broker.debt(0), 0, "freed local blocks absorbed the debt");
         assert_eq!(r.broker.lent(1), 0);
         assert_eq!(r.broker.outstanding_leases(), 0);
-        assert_eq!(r.instances[0].blocks.seq_blocks(seq_c), Some(8), "lease became local");
+        assert_eq!(r.instance(0).blocks.seq_blocks(seq_c), Some(8), "lease became local");
         assert_eq!(r.broker.total_repatriated(), 2);
         r.finish(0, seq_c);
         r.finish(1, seq_b);
@@ -891,7 +1196,7 @@ mod tests {
     fn draining_instance_gets_no_placements() {
         let mut r = router();
         // Instance 1 is freer (no batch) — but draining, so 0 wins.
-        r.instances[0].active_batch = 10;
+        r.instance(0).active_batch = 10;
         assert!(r.drain_instance(1));
         assert!(!r.drain_instance(1), "idempotent");
         assert_eq!(r.route(1600, 0), Some(0));
@@ -960,17 +1265,17 @@ mod tests {
         assert_eq!(r.sessions.misses(), 1, "first turn had nothing to hit");
         let (h, ctok, cblk) = r.session_cached(7).expect("usable prefix");
         assert_eq!((h, ctok, cblk), (idx, 320, 20));
-        assert_eq!(r.instances[idx].blocks.free_blocks(), 80, "prefix still allocated");
+        assert_eq!(r.instance(idx).blocks.free_blocks(), 80, "prefix still allocated");
         // Turn 2: prompt extends the 320 cached tokens; needs 480 total.
         let idx2 = r.route_session(480, 400, 2, Some(7)).unwrap();
         assert_eq!(idx2, idx, "affinity routes back onto the holder");
         assert_eq!(r.cached_tokens(2), 320);
-        assert_eq!(r.instances[idx].virtual_blocks, 10, "suffix-only reservation");
+        assert_eq!(r.instance(idx).virtual_blocks, 10, "suffix-only reservation");
         let seq2 = r.transfer_complete(idx2, 480, 2).unwrap();
         assert_eq!(r.sessions.hits(), 1);
         assert_eq!(r.sessions.n_retained(), 0, "prefix moved into the new seq");
-        assert_eq!(r.instances[idx].blocks.seq_blocks(seq2), Some(30));
-        assert_eq!(r.instances[idx].blocks.free_blocks(), 70);
+        assert_eq!(r.instance(idx).blocks.seq_blocks(seq2), Some(30));
+        assert_eq!(r.instance(idx).blocks.free_blocks(), 70);
         r.finish(idx2, seq2);
         assert_eq!(r.sessions.n_retained(), 1, "turn 2 retained in turn");
     }
@@ -988,7 +1293,7 @@ mod tests {
         let idx = r.route_session(960, 960, 1, Some(7)).unwrap();
         let seq = r.transfer_complete(idx, 960, 1).unwrap();
         r.finish(idx, seq);
-        assert_eq!(r.instances[0].blocks.free_blocks(), 40);
+        assert_eq!(r.instance(0).blocks.free_blocks(), 40);
         // A session-less 80-block request exceeds free space but fits once
         // the retained prefix is evicted (evict-before-park).
         assert_eq!(r.route(1280, 2), Some(0));
@@ -998,7 +1303,7 @@ mod tests {
         assert_eq!((evs[0].session, evs[0].instance, evs[0].blocks), (7, 0, 60));
         let seq2 = r.transfer_complete(0, 1280, 2).unwrap();
         r.finish(0, seq2);
-        assert_eq!(r.instances[0].blocks.free_blocks(), 100, "no leak");
+        assert_eq!(r.instance(0).blocks.free_blocks(), 100, "no leak");
     }
 
     #[test]
@@ -1021,14 +1326,14 @@ mod tests {
         // Cancelling turn 2 unpins without losing the prefix.
         r.cancel(idx2, 480, 2);
         assert!(r.session_cached(7).is_some());
-        assert_eq!(r.instances[0].virtual_blocks, 0);
+        assert_eq!(r.instance(0).virtual_blocks, 0);
         // Turn 3 can still hit it.
         let idx3 = r.route_session(480, 400, 4, Some(7)).unwrap();
         assert_eq!(r.cached_tokens(4), 320);
         let seq3 = r.transfer_complete(idx3, 480, 4).unwrap();
         r.finish_abort(idx3, seq3);
         assert_eq!(r.sessions.n_retained(), 0, "finish_abort never retains");
-        assert_eq!(r.instances[0].blocks.free_blocks(), 100);
+        assert_eq!(r.instance(0).blocks.free_blocks(), 100);
     }
 
     #[test]
@@ -1040,7 +1345,7 @@ mod tests {
         r.finish(i1, s1);
         assert_eq!(r.sessions.n_retained(), 1);
         // ...a 30-block one on the same instance is simply freed (> cap).
-        r.instances[1 - i1].active_batch = 100; // force same-instance placement
+        r.instance(1 - i1).active_batch = 100; // force same-instance placement
         let i2 = r.route_session(480, 480, 2, Some(8)).unwrap();
         assert_eq!(i2, i1);
         let s2 = r.transfer_complete(i2, 480, 2).unwrap();
@@ -1099,10 +1404,7 @@ mod tests {
         let sb = b.transfer_complete(0, 320, 0).unwrap();
         assert_eq!(sa, sb);
         assert_eq!(a.finish(0, sa), b.finish(0, sb));
-        assert_eq!(
-            a.instances[0].blocks.free_blocks(),
-            b.instances[0].blocks.free_blocks()
-        );
+        assert_eq!(a.instance(0).blocks.free_blocks(), b.instance(0).blocks.free_blocks());
     }
 
     #[test]

@@ -132,6 +132,24 @@ impl ImprovementController {
         self.evict(now);
     }
 
+    /// Retract one previously recorded arrival at `at` (seconds).
+    ///
+    /// Requests that go terminal *before* planning — shed at admission or
+    /// cancelled while queued — never consume prefill capacity, so leaving
+    /// them in the sliding window inflates the observed arrival rate and
+    /// throttles SP expansion for the survivors (a shed storm would read as
+    /// a load spike precisely when capacity just freed). The dispatcher
+    /// calls this for every terminal-before-plan verdict. Removes at most
+    /// one matching entry; a no-op when the entry already aged out of the
+    /// window.
+    pub fn retract_arrival(&mut self, at: f64) {
+        // Scan from the back: retractions concern recent arrivals, and the
+        // deque is time-ordered so the match is near the tail.
+        if let Some(pos) = self.arrivals.iter().rposition(|&t| t == at) {
+            self.arrivals.remove(pos);
+        }
+    }
+
     fn evict(&mut self, now: f64) {
         while let Some(&t) = self.arrivals.front() {
             if now - t > self.window {
@@ -266,6 +284,28 @@ mod tests {
         assert_eq!(c.rate_given(5.0, 0.0), 0.7);
         // At the next refresh it follows the new observation.
         assert_eq!(c.rate_given(10.0, 0.0), 0.1);
+    }
+
+    #[test]
+    fn retracted_arrivals_leave_the_window() {
+        let profile = RateProfile::new(vec![(0.0, 0.1), (2.0, 0.5), (5.0, 0.7)]);
+        let mut c = ImprovementController::new(profile, 30.0, 30.0);
+        // 60 real arrivals (2 req/s over the window) plus 90 that are shed
+        // before planning. Counting the shed ones would read 5 req/s.
+        for i in 0..60 {
+            c.on_arrival(i as f64 * 0.5);
+        }
+        for i in 0..90 {
+            let t = 0.25 + i as f64 * 0.33;
+            c.on_arrival(t);
+            c.retract_arrival(t);
+        }
+        assert_eq!(c.observed_rate(30.0), 2.0, "shed arrivals must not count");
+        assert_eq!(c.rate(30.0), 0.5);
+        // Retracting a time that was never recorded (or already evicted)
+        // is a no-op.
+        c.retract_arrival(123.456);
+        assert_eq!(c.observed_rate(30.0), 2.0);
     }
 
     #[test]

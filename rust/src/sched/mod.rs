@@ -21,6 +21,6 @@ pub mod improvement;
 pub mod decode;
 
 pub use cdsp::CdspScheduler;
-pub use decode::DecodeRouter;
+pub use decode::{DecodeRouter, DecodeShard};
 pub use improvement::{ImprovementController, RateProfile};
 pub use plan::{CdspPlan, ChunkPlan};

@@ -56,7 +56,7 @@
 use crate::api::admission::{
     AdmissionController, AdmissionDecision, AdmissionTicket, ParkedQueue, ScanOutcome,
 };
-use crate::api::{RoleAction, RoleControlConfig};
+use crate::api::{LoadSnapshot, RoleAction, RoleControlConfig};
 use crate::baselines::PrefillScheduler;
 use crate::cluster::WorkerRegistry;
 use crate::latency::prefill::SpCoeffs;
@@ -76,7 +76,10 @@ use std::time::{Duration, Instant};
 /// How often the deadline monitor re-evaluates its tracked requests while
 /// any exist. The dispatcher blocks indefinitely when nothing carries a
 /// deadline, so deadline-free servers pay nothing for the monitor.
-const DEADLINE_TICK: Duration = Duration::from_millis(2);
+/// Defined from [`crate::serve::DEADLINE_TICK_SECS`] so tests can pin the
+/// staleness bound against the same number the loop actually sleeps on.
+const DEADLINE_TICK: Duration =
+    Duration::from_micros((crate::serve::DEADLINE_TICK_SECS * 1e6) as u64);
 
 /// How often the background role-control loop re-evaluates the
 /// [`RoleController`](crate::api::RoleController) while one is configured
@@ -94,13 +97,44 @@ pub(crate) struct RoleCtlState {
     /// `-inf` until the first one, so the first decision is never
     /// cooldown-gated.
     last_convert: f64,
+    /// Whether the last evaluation saw a quiescent server (nothing in
+    /// flight on any decode instance, nothing parked). A quiescent load
+    /// signal can only change through a dispatcher message — every
+    /// submission, finish, and cancellation sends one — so while this is
+    /// set the loop blocks on its channel instead of polling every
+    /// [`ROLE_TICK`]; the controller re-evaluates on the next message.
+    idle: bool,
 }
 
 impl RoleCtlState {
-    /// Fresh state for a configured role-control loop.
+    /// Fresh state for a configured role-control loop. Starts non-idle so
+    /// the first tick always evaluates the controller once.
     pub fn new(cfg: RoleControlConfig) -> Self {
-        RoleCtlState { cfg, last_convert: f64::NEG_INFINITY }
+        RoleCtlState { cfg, last_convert: f64::NEG_INFINITY, idle: false }
     }
+}
+
+/// Reusable buffers for the dispatcher's batch-shaped hot paths. Every
+/// admission batch, parked-queue scan, and deadline tick used to allocate
+/// fresh `Vec`s; under sustained load that is four-plus allocations per
+/// submit on the dispatch critical path. The scratch is `take`n at the top
+/// of each pass, cleared (capacity kept), and put back before the pass
+/// returns, so steady-state batch processing is allocation-free once the
+/// high-water capacity is reached.
+#[derive(Default)]
+pub(crate) struct DispatchScratch {
+    /// `admit_batch`: per-candidate session-cached block counts.
+    cached: Vec<usize>,
+    /// `admit_batch`: the members that passed admission (phase 0 → 1).
+    live: Vec<Pending>,
+    /// `route_in_order`: placements committed this pass (phase 1 → 2).
+    routed: Vec<(Pending, usize, usize, usize)>,
+    /// `try_admit`: one verdict per entry removed from the parked queue.
+    verdicts: Vec<ParkedVerdict>,
+    /// `try_admit`: entries admitted by the scan, awaiting phase 2.
+    admitted: Vec<(Pending, usize, usize, usize)>,
+    /// `deadline_tick`: `(index, bound, deadline)` of blown requests.
+    blown: Vec<(usize, f64, f64)>,
 }
 
 /// Messages driving the dispatcher thread.
@@ -193,6 +227,8 @@ pub(crate) struct Dispatcher {
     /// The background role-control loop, when configured via
     /// [`TetrisBuilder::role_control`](crate::api::TetrisBuilder::role_control).
     pub role_ctl: Option<RoleCtlState>,
+    /// Reusable batch-processing buffers (see [`DispatchScratch`]).
+    pub scratch: DispatchScratch,
 }
 
 impl Dispatcher {
@@ -200,13 +236,20 @@ impl Dispatcher {
     /// sender is gone (a `Server` dropped without `shutdown`); either way
     /// the parked queue is resolved deterministically first.
     ///
-    /// While any tracked request carries a TTFT deadline, the loop wakes
-    /// every [`DEADLINE_TICK`] (and after every message) to run the
-    /// deadline monitor; with no deadlines in flight it blocks on the
-    /// channel as before.
+    /// While any tracked request carries an undecided TTFT deadline, the
+    /// loop wakes every [`DEADLINE_TICK`] (and after every message) to run
+    /// the deadline monitor; with both monitors idle it blocks on the
+    /// channel. Tracked entries whose TTFT is already decided are pruned
+    /// *before* the wait mode is chosen — a server whose last
+    /// deadline-carrying request just resolved must fall back to a plain
+    /// blocking `recv`, not keep ticking on stale entries. Likewise a
+    /// configured-but-quiescent role controller (see
+    /// [`RoleCtlState::idle`]) does not keep the loop polling.
     pub fn run(mut self) {
         loop {
-            let msg = if self.deadlines.is_empty() && self.role_ctl.is_none() {
+            self.deadlines.retain(|t| !t.shared.is_resolved() && !t.shared.prefill_done());
+            let role_idle = self.role_ctl.as_ref().map_or(true, |rc| rc.idle);
+            let msg = if self.deadlines.is_empty() && role_idle {
                 match self.rx.recv() {
                     Ok(m) => m,
                     Err(_) => break,
@@ -219,6 +262,7 @@ impl Dispatcher {
                 match self.rx.recv_timeout(tick) {
                     Ok(m) => m,
                     Err(RecvTimeoutError::Timeout) => {
+                        self.shared.timer_wakeups.fetch_add(1, Ordering::Relaxed);
                         self.deadline_tick();
                         self.role_tick();
                         continue;
@@ -255,11 +299,24 @@ impl Dispatcher {
             Some(rc) => (rc.cfg.cooldown, rc.last_convert, rc.cfg.controller.clone()),
             None => return,
         };
+        let load = self.shared.load();
+        // Quiescence: nothing resident or in flight on any decode instance
+        // and nothing parked. Such a load signal can only change through a
+        // dispatcher message, so the loop may block instead of polling —
+        // any decision the controller could make later, it can make on the
+        // next message (a cooldown-deferred decision included).
+        let quiescent = load.parked == 0
+            && load
+                .decode
+                .iter()
+                .all(|d| d.active_batch == 0 && d.pending_transfers == 0);
+        if let Some(rc) = self.role_ctl.as_mut() {
+            rc.idle = quiescent;
+        }
         let now = self.epoch.elapsed().as_secs_f64();
         if now - last_convert < cooldown {
             return;
         }
-        let load = self.shared.load();
         let prefill = self.registry.lock().unwrap().prefill_states().to_vec();
         let decode = self.router.lock().unwrap().instance_states().to_vec();
         let Some(action) = controller.decide(&load, &prefill, &decode) else {
@@ -346,14 +403,20 @@ impl Dispatcher {
         let mut load = self.shared.refresh_load();
         // Session-cached blocks per candidate, read under one short router
         // lock so every ticket in the batch charges only uncached work.
-        let cached: Vec<usize> = {
+        // Scratch-backed: steady-state batches allocate nothing here.
+        let mut cached = std::mem::take(&mut self.scratch.cached);
+        cached.clear();
+        {
             let guard = self.router.lock().unwrap();
-            batch.iter().map(|p| Self::cached_blocks_of(&guard, p)).collect()
-        };
-        let mut live = Vec::with_capacity(batch.len());
-        for (p, cached_blocks) in batch.into_iter().zip(cached) {
+            cached.extend(batch.iter().map(|p| Self::cached_blocks_of(&guard, p)));
+        }
+        let mut live = std::mem::take(&mut self.scratch.live);
+        live.clear();
+        for (p, cached_blocks) in batch.into_iter().zip(cached.drain(..)) {
             if p.shared.is_cancelled() {
-                p.shared.resolve(Completion::Cancelled(CancelStage::Queued));
+                if p.shared.resolve(Completion::Cancelled(CancelStage::Queued)) {
+                    self.retract_arrival(p.shared.submitted_at);
+                }
                 continue;
             }
             // The deadline monitor tracks every deadline-carrying request
@@ -379,14 +442,29 @@ impl Dispatcher {
                     self.park(p);
                 }
                 AdmissionDecision::Shed(reason) => {
-                    p.shared.resolve(Completion::Shed(reason));
+                    if p.shared.resolve(Completion::Shed(reason)) {
+                        self.retract_arrival(p.shared.submitted_at);
+                    }
                 }
             }
         }
-        let routed = self.route_in_order(live);
-        for (p, inst, borrowed, cached) in routed {
+        self.scratch.cached = cached;
+        let mut routed = self.route_in_order(&mut live);
+        self.scratch.live = live;
+        for (p, inst, borrowed, cached) in routed.drain(..) {
             self.plan_and_dispatch(p, inst, borrowed, cached, load.arrival_rate);
         }
+        self.scratch.routed = routed;
+    }
+
+    /// A request that went terminal *before planning* never consumed any
+    /// prefill capacity: retract its arrival from the shared sliding
+    /// window so the improvement-rate throttle does not tighten SP
+    /// expansion against demand that was shed or cancelled on sight.
+    /// Dispatched requests keep their arrivals — they did the work the
+    /// rate signal exists to predict.
+    fn retract_arrival(&self, at: f64) {
+        self.shared.controller.lock().unwrap().retract_arrival(at);
     }
 
     /// Park one request (admission verdict or router full).
@@ -401,15 +479,19 @@ impl Dispatcher {
     /// placement borrowed from remote instances (0 without the broker);
     /// the matching `on_kv_borrow` is emitted by phase 2, right after
     /// `on_decode_assign` — mirroring the simulator's event order.
-    fn route_in_order(&mut self, batch: Vec<Pending>) -> Vec<(Pending, usize, usize, usize)> {
+    /// `batch` is drained in place (its capacity survives in the caller's
+    /// scratch); the returned vector is the routed scratch buffer, which
+    /// the caller drains and puts back.
+    fn route_in_order(&mut self, batch: &mut Vec<Pending>) -> Vec<(Pending, usize, usize, usize)> {
+        let mut routed = std::mem::take(&mut self.scratch.routed);
+        routed.clear();
         if batch.is_empty() {
-            return Vec::new();
+            return routed;
         }
-        let mut routed = Vec::with_capacity(batch.len());
         let router = Arc::clone(&self.router);
         let (evicted, now) = {
             let mut guard = router.lock().unwrap();
-            for p in batch {
+            for p in batch.drain(..) {
                 let sess = p.shared.opts.session;
                 match guard.route_session(
                     need_tokens(&p.req),
@@ -469,7 +551,9 @@ impl Dispatcher {
         };
         if p.shared.is_cancelled() {
             rollback(self);
-            p.shared.resolve(Completion::Cancelled(CancelStage::Queued));
+            if p.shared.resolve(Completion::Cancelled(CancelStage::Queued)) {
+                self.retract_arrival(p.shared.submitted_at);
+            }
             let _ = self.tx.send(DispatcherMsg::CapacityFreed);
             return;
         }
@@ -668,7 +752,8 @@ impl Dispatcher {
         // One verdict is pushed per removed entry; `ParkedQueue::scan`
         // returns removed items in offer order, so the two line up by
         // position — no keying needed (request ids are not unique).
-        let mut verdicts: Vec<ParkedVerdict> = Vec::new();
+        let mut verdicts = std::mem::take(&mut self.scratch.verdicts);
+        verdicts.clear();
         let (removed, evicted, evict_at) = {
             let router = Arc::clone(&self.router);
             let mut guard = router.lock().unwrap();
@@ -716,24 +801,31 @@ impl Dispatcher {
         };
         self.emit_evictions(evicted, evict_at);
         debug_assert_eq!(removed.len(), verdicts.len());
-        let mut admitted = Vec::new();
-        for (p, verdict) in removed.into_iter().zip(verdicts) {
+        let mut admitted = std::mem::take(&mut self.scratch.admitted);
+        admitted.clear();
+        for (p, verdict) in removed.into_iter().zip(verdicts.drain(..)) {
             self.shared.parked.fetch_sub(1, Ordering::Relaxed);
             match verdict {
                 ParkedVerdict::Admit(inst, borrowed, cached) => {
                     admitted.push((p, inst, borrowed, cached))
                 }
                 ParkedVerdict::Cancel => {
-                    p.shared.resolve(Completion::Cancelled(CancelStage::Parked));
+                    if p.shared.resolve(Completion::Cancelled(CancelStage::Parked)) {
+                        self.retract_arrival(p.shared.submitted_at);
+                    }
                 }
                 ParkedVerdict::Shed(reason) => {
-                    p.shared.resolve(Completion::Shed(reason));
+                    if p.shared.resolve(Completion::Shed(reason)) {
+                        self.retract_arrival(p.shared.submitted_at);
+                    }
                 }
             }
         }
-        for (p, inst, borrowed, cached) in admitted {
+        self.scratch.verdicts = verdicts;
+        for (p, inst, borrowed, cached) in admitted.drain(..) {
             self.plan_and_dispatch(p, inst, borrowed, cached, load.arrival_rate);
         }
+        self.scratch.admitted = admitted;
     }
 
     /// One deadline-monitor pass: prune requests whose TTFT is decided,
@@ -750,10 +842,42 @@ impl Dispatcher {
         let now = self.epoch.elapsed().as_secs_f64();
         // The monitor ticks on the cached snapshot (refreshing it once the
         // staleness bound elapses). Its lane clocks are relative to the
-        // snapshot's assembly time, so age the floor before using it: a
-        // stale snapshot can then only *under*-state the queue, keeping
-        // the bound a true lower bound.
+        // snapshot's assembly time, so `collect_blown` ages the floors
+        // before using them: a stale snapshot can then only *under*-state
+        // the queue, keeping the bound a true lower bound.
         let load = self.shared.load();
+        let mut blown = std::mem::take(&mut self.scratch.blown);
+        blown.clear();
+        self.collect_blown(&load, now, &mut blown);
+        if !blown.is_empty() {
+            // The cache staleness window (LOAD_SNAPSHOT_STALENESS) is an
+            // order of magnitude coarser than the monitor tick, and a shed
+            // is irreversible — so any tick that *would* fire re-decides
+            // against a freshly assembled snapshot. Aged stale floors only
+            // understate the queue, so the re-check can never lose a shed
+            // that was genuinely due; it only rescues requests whose
+            // capacity already freed inside the staleness window.
+            let load = self.shared.refresh_load();
+            let now = self.epoch.elapsed().as_secs_f64();
+            blown.clear();
+            self.collect_blown(&load, now, &mut blown);
+            if !blown.is_empty() {
+                let age_us = ((now - load.assembled_at).max(0.0) * 1e6) as u64;
+                self.shared.shed_snapshot_age_us.store(age_us, Ordering::Relaxed);
+            }
+            for &(i, bound, d) in blown.iter().rev() {
+                let t = self.deadlines.swap_remove(i);
+                self.cancel_execution(t, bound, d);
+            }
+        }
+        blown.clear();
+        self.scratch.blown = blown;
+    }
+
+    /// Evaluate every tracked deadline against `load` at `now`, pushing
+    /// `(index, bound, deadline)` for each whose conservative TTFT lower
+    /// bound already exceeds its deadline.
+    fn collect_blown(&self, load: &LoadSnapshot, now: f64, blown: &mut Vec<(usize, f64, f64)>) {
         let lane_floor = (load.min_prefill_busy() - (now - load.assembled_at)).max(0.0);
         // Decode-lane pressure: a finished prefill still waits for a decode
         // lane to accept its KV handoff. The earliest-free decode lane is a
@@ -768,34 +892,27 @@ impl Dispatcher {
                 0.0
             }
         };
-        let mut blown: Vec<(usize, f64, f64)> = Vec::new();
-        {
-            let kv = self.kv.lock().unwrap();
-            for (i, t) in self.deadlines.iter().enumerate() {
-                let Some(d) = t.shared.opts.ttft_deadline else { continue };
-                let waited = (now - t.shared.submitted_at).max(0.0);
-                // Remaining prefill work, as a lower bound: live per-chunk
-                // progress for dispatched requests (0 if the KV entry is
-                // already gone — the handoff is happening right now), the
-                // whole prompt behind the lane floor otherwise.
-                let (remaining, floor) = if t.dispatched {
-                    let left = kv
-                        .get(&t.shared.id)
-                        .map_or(0, |st| t.prompt_len.saturating_sub(st.hist_len));
-                    (left, 0.0)
-                } else {
-                    (t.prompt_len, lane_floor)
-                };
-                let bound =
-                    self.estimator.ttft_bound_with_decode(waited, remaining, floor, decode_pressure);
-                if bound > d {
-                    blown.push((i, bound, d));
-                }
+        let kv = self.kv.lock().unwrap();
+        for (i, t) in self.deadlines.iter().enumerate() {
+            let Some(d) = t.shared.opts.ttft_deadline else { continue };
+            let waited = (now - t.shared.submitted_at).max(0.0);
+            // Remaining prefill work, as a lower bound: live per-chunk
+            // progress for dispatched requests (0 if the KV entry is
+            // already gone — the handoff is happening right now), the
+            // whole prompt behind the lane floor otherwise.
+            let (remaining, floor) = if t.dispatched {
+                let left = kv
+                    .get(&t.shared.id)
+                    .map_or(0, |st| t.prompt_len.saturating_sub(st.hist_len));
+                (left, 0.0)
+            } else {
+                (t.prompt_len, lane_floor)
+            };
+            let bound =
+                self.estimator.ttft_bound_with_decode(waited, remaining, floor, decode_pressure);
+            if bound > d {
+                blown.push((i, bound, d));
             }
-        }
-        for &(i, bound, d) in blown.iter().rev() {
-            let t = self.deadlines.swap_remove(i);
-            self.cancel_execution(t, bound, d);
         }
     }
 
@@ -842,6 +959,12 @@ impl Dispatcher {
             reg.decode_lane_mut(inst).credit(0, lane_delta, now);
         }
         if t.shared.resolve(Completion::Shed(reason)) {
+            // A request interrupted before any chunk was dispatched never
+            // consumed prefill capacity — drop its arrival from the rate
+            // window like any other pre-plan shed.
+            if !t.dispatched {
+                self.retract_arrival(t.shared.submitted_at);
+            }
             // Freed capacity (parked slot now; router blocks/backends as
             // the release ladder reaches them) may admit parked work.
             let _ = self.tx.send(DispatcherMsg::CapacityFreed);
@@ -854,7 +977,9 @@ impl Dispatcher {
     fn cancel_parked(&mut self, id: u64) {
         for p in self.parked.remove_where(|p| p.req.id == id && p.shared.is_cancelled()) {
             self.shared.parked.fetch_sub(1, Ordering::Relaxed);
-            p.shared.resolve(Completion::Cancelled(CancelStage::Parked));
+            if p.shared.resolve(Completion::Cancelled(CancelStage::Parked)) {
+                self.retract_arrival(p.shared.submitted_at);
+            }
         }
     }
 

@@ -415,6 +415,19 @@ pub(crate) struct SubmitShared {
     /// inside the staleness window — admission and the federation router
     /// never place work against a stale membership view.
     pub membership_epoch: Arc<AtomicU64>,
+    /// Cumulative count of dispatcher loop wake-ups caused by a timer
+    /// expiry (as opposed to an arriving message). The regression surface
+    /// for the idle-wake fix: a server with nothing tracked by the
+    /// deadline monitor and a quiescent role controller must block on its
+    /// channel, so this counter must stay flat while the server idles.
+    pub timer_wakeups: AtomicU64,
+    /// Age, in microseconds, of the [`LoadSnapshot`] the deadline monitor
+    /// acted on when it most recently shed a request ([`u64::MAX`] until
+    /// the first shed). The monitor re-assembles the snapshot before
+    /// firing, so this age is bounded by the monitor tick — an assertion
+    /// `integration_deadline` pins (the cache staleness window is 10× the
+    /// tick, which is too coarse a basis for an irreversible shed).
+    pub shed_snapshot_age_us: AtomicU64,
 }
 
 impl SubmitShared {

@@ -95,12 +95,21 @@
 //! Four shared structures, four mutexes: the KV store (scatter/repack),
 //! the per-decode-instance `ReceiveManager` (one whole handoff is atomic
 //! under its lock, so a handshake can never observe a half-finished
-//! transfer), the `DecodeRouter`, and the `WorkerRegistry` queue clocks.
-//! No thread ever holds two of them at once: the dispatcher takes router →
-//! *release* → kv → *release* → registry in sequence, and workers take
-//! each lock in a scope of its own. In particular the router lock is never
-//! held across `schedule()` or chunk dispatch — decode `finish()` is never
-//! blocked by a submitting caller.
+//! transfer), the `DecodeRouter` control lock, and the `WorkerRegistry`
+//! queue clocks. No thread ever holds two of them at once: the dispatcher
+//! takes router → *release* → kv → *release* → registry in sequence, and
+//! workers take each lock in a scope of its own. In particular the router
+//! lock is never held across `schedule()` or chunk dispatch.
+//!
+//! The router is itself internally sharded (see [`crate::sched::decode`]):
+//! per-instance state sits behind per-shard locks under the control lock.
+//! When the KV broker and sessions are both disabled, the post-placement
+//! lifecycle (`transfer_complete`, `finish`, `finish_abort`, `cancel`) is
+//! provably instance-local, and the workers drive it through
+//! [`crate::sched::DecodeShard`] handles snapshotted at startup
+//! ([`RouterAccess`]) — so decode `finish()` and the token-stream path
+//! never contend with a submitting caller at all, not even on the
+//! control mutex.
 //!
 //! Substitution note (DESIGN.md §3): on this CPU substrate a chunk's
 //! compute executes on the group leader while members hold their slot at
@@ -129,7 +138,7 @@ use crate::latency::prefill::{PrefillModel, Sample, SpCoeffs};
 use crate::latency::{DecodeQuickfit, TtftEstimator};
 use crate::metrics::{CancelStage, Completion, RequestMetrics, RunMetrics};
 use crate::runtime::{argmax, Engine, ExecCtx, InterruptToken};
-use crate::sched::{DecodeRouter, ImprovementController};
+use crate::sched::{DecodeRouter, DecodeShard, ImprovementController};
 use crate::session::SessionConfig;
 use crate::transfer::{Handshake, HandshakeReply, ReceiveManager};
 use anyhow::Result;
@@ -261,6 +270,25 @@ pub(crate) type SharedRouter = Arc<Mutex<DecodeRouter>>;
 pub(crate) type SharedReceivers = Arc<Vec<Mutex<ReceiveManager>>>;
 pub(crate) type SharedKv = Arc<Mutex<HashMap<u64, KvState>>>;
 
+/// The decode-router access bundle every worker holds: the control lock
+/// plus the per-instance shard handles, snapshotted once at server start.
+/// While `shardable` (broker and sessions both disabled — see
+/// [`DecodeRouter::shardable`]), workers drive `transfer_complete` /
+/// `finish` / `finish_abort` / `cancel` through their instance's
+/// [`DecodeShard`] without ever taking the control lock, so the
+/// finish/token-stream hot paths never contend with the dispatcher's
+/// `schedule()`/`route()` commits. The handles stay valid across
+/// membership changes (shards are never resized), so one snapshot at
+/// startup is enough.
+pub(crate) struct RouterAccess {
+    /// The control lock (placement commits, broker/session state, clones).
+    pub ctl: SharedRouter,
+    /// One shard handle per decode instance, in instance order.
+    pub shards: Vec<DecodeShard>,
+    /// Whether the shard fast path is valid for this server's config.
+    pub shardable: bool,
+}
+
 /// Router admission size for a request: prompt plus generated tokens (a
 /// zero-output request still decodes one token, mirroring the simulator's
 /// accounting). Every route/reserve/release for one request must use this
@@ -282,6 +310,13 @@ pub const DEFAULT_STARVATION_BOUND: usize = 8;
 /// under load the cache is usually much fresher; an idle server re-assembles
 /// on demand once the bound elapses. `at` and `parked` are always live.
 pub const LOAD_SNAPSHOT_STALENESS: f64 = 0.02;
+
+/// Period, in seconds, of the dispatcher's deadline-monitor tick. A shed
+/// fired by the monitor is always decided on a load snapshot no older than
+/// this (the monitor re-assembles the snapshot before firing — see
+/// [`Server::deadline_shed_snapshot_age`]), even though the general-purpose
+/// cache above tolerates [`LOAD_SNAPSHOT_STALENESS`], 10× coarser.
+pub const DEADLINE_TICK_SECS: f64 = 0.002;
 
 /// The live server: `n_prefill` barrier-grouped prefill workers feeding
 /// [`DecodePool::n_workers`] continuous-batching decode workers through the
@@ -495,6 +530,16 @@ impl Server {
         // at every lease-mutating site, so the load-snapshot cache can
         // detect stale cluster-KV fields without taking the router lock.
         let kv_epoch = Arc::new(AtomicU64::new(0));
+        // Snapshot the shard fast-path handles once: they alias the
+        // router's per-instance locks for the lifetime of the server.
+        let router_access = {
+            let r = router.lock().unwrap();
+            Arc::new(RouterAccess {
+                ctl: Arc::clone(&router),
+                shards: r.shard_handles(),
+                shardable: r.shardable(),
+            })
+        };
         let receivers: SharedReceivers = Arc::new(
             (0..decode.n_workers)
                 .map(|_| {
@@ -514,7 +559,7 @@ impl Server {
             let (dtx, drx) = channel::<DecodeJob>();
             let engine = Arc::clone(&engine);
             let obs = Arc::clone(&observers);
-            let router = Arc::clone(&router);
+            let router = Arc::clone(&router_access);
             let kv_epoch = Arc::clone(&kv_epoch);
             let notify = tx.clone();
             let handle = std::thread::Builder::new()
@@ -534,7 +579,7 @@ impl Server {
             let kv = Arc::clone(&kv);
             let decode_txs = decode_txs.clone();
             let receivers = Arc::clone(&receivers);
-            let router = Arc::clone(&router);
+            let router = Arc::clone(&router_access);
             let kv_epoch = Arc::clone(&kv_epoch);
             let obs = Arc::clone(&observers);
             let notify = tx.clone();
@@ -580,6 +625,8 @@ impl Server {
             load_cache: Mutex::new(None),
             kv_epoch: Arc::clone(&kv_epoch),
             membership_epoch: Arc::new(AtomicU64::new(0)),
+            timer_wakeups: AtomicU64::new(0),
+            shed_snapshot_age_us: AtomicU64::new(u64::MAX),
         });
 
         // The deadline monitor's TTFT lower bound: this machine's
@@ -606,6 +653,7 @@ impl Server {
             parked: ParkedQueue::new(starvation_bound),
             deadlines: Vec::new(),
             role_ctl: role_control.map(dispatcher::RoleCtlState::new),
+            scratch: dispatcher::DispatchScratch::default(),
         };
         let dispatcher = std::thread::Builder::new()
             .name("tetris-dispatch".into())
@@ -750,6 +798,29 @@ impl Server {
     /// Requests currently parked for decode capacity.
     pub fn n_parked(&self) -> usize {
         self.submit_shared.parked.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative count of dispatcher loop wake-ups caused by a timer
+    /// expiry rather than an arriving message. An idle server — nothing
+    /// tracked by the deadline monitor, role controller quiescent — blocks
+    /// on its channel, so this counter staying flat is the regression
+    /// surface for the idle-wake fix.
+    pub fn dispatcher_timer_wakeups(&self) -> u64 {
+        self.submit_shared.timer_wakeups.load(Ordering::Relaxed)
+    }
+
+    /// Age, in seconds, of the [`LoadSnapshot`] the deadline monitor acted
+    /// on when it most recently shed a request; `None` until the first
+    /// monitor-fired shed. The monitor re-assembles the snapshot before
+    /// firing, so this is bounded by [`DEADLINE_TICK_SECS`] — far inside
+    /// the [`LOAD_SNAPSHOT_STALENESS`] window ordinary readers tolerate.
+    pub fn deadline_shed_snapshot_age(&self) -> Option<f64> {
+        let v = self.submit_shared.shed_snapshot_age_us.load(Ordering::Relaxed);
+        if v == u64::MAX {
+            None
+        } else {
+            Some(v as f64 / 1e6)
+        }
     }
 
     /// Snapshot of the shared decode router's state (placement load,
@@ -1010,7 +1081,7 @@ fn prefill_worker(
     kv: SharedKv,
     decode_txs: Vec<Sender<DecodeJob>>,
     receivers: SharedReceivers,
-    router: SharedRouter,
+    router: Arc<RouterAccess>,
     kv_epoch: Arc<AtomicU64>,
     rx: Receiver<WorkerJob>,
     observers: ObserverSet,
@@ -1106,7 +1177,7 @@ fn finish_prefill(
     logits: Option<Vec<f32>>,
     decode_txs: &[Sender<DecodeJob>],
     receivers: &SharedReceivers,
-    router: &SharedRouter,
+    router: &RouterAccess,
     kv_epoch: &AtomicU64,
     observers: &ObserverSet,
     epoch: Instant,
@@ -1114,8 +1185,14 @@ fn finish_prefill(
 ) {
     let inst = st.decode_inst;
     let cancel = |stage: CancelStage| {
-        let (returned, evicted) = {
-            let mut guard = router.lock().unwrap();
+        // Shard fast path: with no broker there is no lease to unwind (and
+        // no epoch to mirror), with no sessions nothing to unpin or evict —
+        // the release touches only instance-local state.
+        let (returned, evicted) = if router.shardable {
+            router.shards[inst].cancel(st.need_tokens);
+            (0, Vec::new())
+        } else {
+            let mut guard = router.ctl.lock().unwrap();
             let returned = guard.cancel(inst, st.need_tokens, req);
             kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
             (returned, guard.sessions.take_evictions())
@@ -1184,8 +1261,15 @@ fn finish_prefill(
     };
     // virtual reservation becomes a real block allocation (and any pending
     // lease becomes resident, keyed by the new seq)
-    let seq = {
-        let mut guard = router.lock().unwrap();
+    let seq = if router.shardable {
+        // No lease can be pending and no prefix can be reused, so the
+        // conversion is instance-local: it never blocks behind a routing
+        // burst on the control lock.
+        router.shards[inst]
+            .transfer_complete(st.need_tokens)
+            .expect("virtual reservation guaranteed space")
+    } else {
+        let mut guard = router.ctl.lock().unwrap();
         let seq = guard
             .transfer_complete(inst, st.need_tokens, req)
             .expect("virtual reservation guaranteed space");
@@ -1264,7 +1348,7 @@ struct ActiveDecode {
 fn decode_worker(
     engine: Arc<Engine>,
     rx: Receiver<DecodeJob>,
-    router: SharedRouter,
+    router: Arc<RouterAccess>,
     kv_epoch: Arc<AtomicU64>,
     observers: ObserverSet,
     epoch: Instant,
@@ -1358,7 +1442,7 @@ fn activate(job: DecodeJob) -> ActiveDecode {
 /// handle, and wake the dispatcher (freed capacity may admit parked
 /// requests).
 fn finishing(
-    router: &SharedRouter,
+    router: &RouterAccess,
     kv_epoch: &AtomicU64,
     observers: &ObserverSet,
     epoch: Instant,
@@ -1367,9 +1451,14 @@ fn finishing(
 ) {
     // `finish` may retain the sequence's prompt KV as a session prefix;
     // retention under the cap can displace colder prefixes, so drain the
-    // eviction queue under the same lock.
-    let (returned, evicted) = {
-        let mut guard = router.lock().unwrap();
+    // eviction queue under the same lock. On a shardable router none of
+    // that state exists — the release is instance-local and never
+    // contends with the dispatcher's routing commits.
+    let (returned, evicted) = if router.shardable {
+        router.shards[st.job.inst].finish(st.job.seq);
+        (0, Vec::new())
+    } else {
+        let mut guard = router.ctl.lock().unwrap();
         let returned = guard.finish(st.job.inst, st.job.seq);
         kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
         (returned, guard.sessions.take_evictions())
@@ -1405,7 +1494,7 @@ fn finishing(
 /// overflow-shed request keeps its `Shed` outcome and no duplicate
 /// `on_cancel` fires — and wake the dispatcher.
 fn cancel_decode(
-    router: &SharedRouter,
+    router: &RouterAccess,
     kv_epoch: &AtomicU64,
     observers: &ObserverSet,
     epoch: Instant,
@@ -1415,8 +1504,11 @@ fn cancel_decode(
     // `finish_abort`, not `finish`: a cancelled decode must not retain
     // its prefix for the session — the transcript it would seed the next
     // turn with was never delivered.
-    let returned = {
-        let mut guard = router.lock().unwrap();
+    let returned = if router.shardable {
+        router.shards[st.job.inst].finish_abort(st.job.seq);
+        0
+    } else {
+        let mut guard = router.ctl.lock().unwrap();
         let returned = guard.finish_abort(st.job.inst, st.job.seq);
         kv_epoch.store(guard.broker.epoch(), Ordering::Relaxed);
         returned

@@ -23,6 +23,17 @@
 //! * `DecodeStep` — one iteration of continuous batching on one decode
 //!   instance; every active request emits a token (TBT sample), finished
 //!   requests free their blocks and may unblock queued arrivals.
+//!
+//! The loop is strictly next-event: virtual time jumps from one queued
+//! event to the next with no idle ticks. Two skips keep the per-event cost
+//! flat under load: a decode step that finishes nobody does not rescan the
+//! waiting queue (router availability is provably unchanged — routing has
+//! no side effects on failure, transfers are freeness-neutral, and every
+//! capacity-growing event triggers its own rescan), and consecutive steps
+//! of one instance run inline without heap churn while every other queued
+//! event lies strictly later than the step boundary (an equal-time event
+//! holds an older sequence number and must pop first, so the skip preserves
+//! determinism bit-for-bit).
 
 /// Offline improvement-rate profiling (paper Sec. 5.1 / 6).
 pub mod profiler;
@@ -304,23 +315,7 @@ impl Simulator {
                     let sess = self.sessions_of.get(&(i as u64)).copied();
                     match router.route_session(need, reqs[i].prompt_len, i as u64, sess) {
                         Some(d) => {
-                            self.emit_evictions(&mut router, now);
-                            reqs[i].decode_inst = Some(d);
-                            reqs[i].cached = router.cached_tokens(i as u64);
-                            for o in &self.observers {
-                                o.on_decode_assign(i as u64, d, now);
-                            }
-                            if reqs[i].cached > 0 {
-                                for o in &self.observers {
-                                    o.on_prefix_hit(i as u64, d, reqs[i].cached, now);
-                                }
-                            }
-                            let borrowed = router.broker.pending_blocks(i as u64);
-                            if borrowed > 0 {
-                                for o in &self.observers {
-                                    o.on_kv_borrow(i as u64, d, borrowed, now);
-                                }
-                            }
+                            self.record_placement(&mut router, &mut reqs, i, d, now);
                             self.start_prefill(
                                 i,
                                 now,
@@ -345,45 +340,16 @@ impl Simulator {
                     // arrival order, exactly like a decode-step release.
                     self.emit_evictions(&mut router, now);
                     if grew {
-                        let mut admitted = Vec::new();
-                        for &w in waiting.iter() {
-                            let need = reqs[w].prompt_len + reqs[w].output_len;
-                            let sess = self.sessions_of.get(&(w as u64)).copied();
-                            if let Some(d) =
-                                router.route_session(need, reqs[w].prompt_len, w as u64, sess)
-                            {
-                                self.emit_evictions(&mut router, now);
-                                reqs[w].decode_inst = Some(d);
-                                reqs[w].cached = router.cached_tokens(w as u64);
-                                for o in &self.observers {
-                                    o.on_decode_assign(w as u64, d, now);
-                                }
-                                if reqs[w].cached > 0 {
-                                    for o in &self.observers {
-                                        o.on_prefix_hit(w as u64, d, reqs[w].cached, now);
-                                    }
-                                }
-                                let borrowed = router.broker.pending_blocks(w as u64);
-                                if borrowed > 0 {
-                                    for o in &self.observers {
-                                        o.on_kv_borrow(w as u64, d, borrowed, now);
-                                    }
-                                }
-                                admitted.push(w);
-                            }
-                        }
-                        waiting.retain(|w| !admitted.contains(w));
-                        for w in admitted {
-                            self.start_prefill(
-                                w,
-                                now,
-                                &mut reqs,
-                                &mut clock,
-                                &mut heap,
-                                &mut seq,
-                                &prefill_state,
-                            );
-                        }
+                        self.retry_waiting(
+                            now,
+                            &mut reqs,
+                            &mut waiting,
+                            &mut router,
+                            &mut clock,
+                            &mut heap,
+                            &mut seq,
+                            &prefill_state,
+                        );
                     }
                 }
                 Event::PrefillDone { req } => {
@@ -463,97 +429,92 @@ impl Simulator {
                         step_scheduled[inst] = false;
                         continue;
                     }
-                    let batch = batches[inst].len() as u64;
-                    let mean_ctx = (batches[inst]
-                        .iter()
-                        .map(|&r| reqs[r].prompt_len + reqs[r].tokens_out)
-                        .sum::<usize>()
-                        / batches[inst].len()) as u64;
-                    let (sp, tp) = if self.esp_decode {
-                        // ESP decode: ring over small-TP instances.
-                        (
-                            (self.cluster.decode_tp / self.cluster.prefill_tp).max(1),
-                            self.cluster.prefill_tp,
-                        )
-                    } else {
-                        (1, self.cluster.decode_tp)
-                    };
-                    // Remote-block attention: leased blocks live across the
-                    // interconnect, adding a hop term to every step.
-                    let dt = self.decode_model.step_secs(mean_ctx, batch, sp, tp)
-                        + self
-                            .decode_model
-                            .remote_hop_secs(router.remote_block_fraction(inst));
-                    let t_end = now + dt;
-                    let mut still = Vec::with_capacity(batches[inst].len());
-                    for &r in &batches[inst] {
-                        reqs[r].tokens_out += 1;
-                        let gap = t_end - reqs[r].last_token_at;
-                        reqs[r].tbt.push(gap);
-                        reqs[r].last_token_at = t_end;
-                        for o in &self.observers {
-                            o.on_token(r as u64, t_end);
-                        }
-                        if reqs[r].tokens_out >= reqs[r].output_len {
-                            reqs[r].finished = true;
-                            done += 1;
-                            let returned = router.finish(inst, reqs[r].seq_id.unwrap());
-                            if returned > 0 {
-                                for o in &self.observers {
-                                    o.on_kv_return(r as u64, inst, returned, t_end);
-                                }
-                            }
+                    let mut step_at = now;
+                    loop {
+                        let batch = batches[inst].len() as u64;
+                        let mean_ctx = (batches[inst]
+                            .iter()
+                            .map(|&r| reqs[r].prompt_len + reqs[r].tokens_out)
+                            .sum::<usize>()
+                            / batches[inst].len()) as u64;
+                        let (sp, tp) = if self.esp_decode {
+                            // ESP decode: ring over small-TP instances.
+                            (
+                                (self.cluster.decode_tp / self.cluster.prefill_tp).max(1),
+                                self.cluster.prefill_tp,
+                            )
                         } else {
-                            still.push(r);
-                        }
-                    }
-                    batches[inst] = still;
-                    // Retention at finish may displace LRU prefixes.
-                    self.emit_evictions(&mut router, t_end);
-                    // admit waiting requests now that capacity may exist
-                    let mut admitted = Vec::new();
-                    for &w in waiting.iter() {
-                        let need = reqs[w].prompt_len + reqs[w].output_len;
-                        let sess = self.sessions_of.get(&(w as u64)).copied();
-                        if let Some(d) =
-                            router.route_session(need, reqs[w].prompt_len, w as u64, sess)
-                        {
-                            self.emit_evictions(&mut router, t_end);
-                            reqs[w].decode_inst = Some(d);
-                            reqs[w].cached = router.cached_tokens(w as u64);
+                            (1, self.cluster.decode_tp)
+                        };
+                        // Remote-block attention: leased blocks live across
+                        // the interconnect, adding a hop term to every step.
+                        let dt = self.decode_model.step_secs(mean_ctx, batch, sp, tp)
+                            + self
+                                .decode_model
+                                .remote_hop_secs(router.remote_block_fraction(inst));
+                        let t_end = step_at + dt;
+                        let mut still = Vec::with_capacity(batches[inst].len());
+                        let mut n_finished = 0usize;
+                        for &r in &batches[inst] {
+                            reqs[r].tokens_out += 1;
+                            let gap = t_end - reqs[r].last_token_at;
+                            reqs[r].tbt.push(gap);
+                            reqs[r].last_token_at = t_end;
                             for o in &self.observers {
-                                o.on_decode_assign(w as u64, d, t_end);
+                                o.on_token(r as u64, t_end);
                             }
-                            if reqs[w].cached > 0 {
-                                for o in &self.observers {
-                                    o.on_prefix_hit(w as u64, d, reqs[w].cached, t_end);
+                            if reqs[r].tokens_out >= reqs[r].output_len {
+                                reqs[r].finished = true;
+                                done += 1;
+                                n_finished += 1;
+                                let returned = router.finish(inst, reqs[r].seq_id.unwrap());
+                                if returned > 0 {
+                                    for o in &self.observers {
+                                        o.on_kv_return(r as u64, inst, returned, t_end);
+                                    }
                                 }
+                            } else {
+                                still.push(r);
                             }
-                            let borrowed = router.broker.pending_blocks(w as u64);
-                            if borrowed > 0 {
-                                for o in &self.observers {
-                                    o.on_kv_borrow(w as u64, d, borrowed, t_end);
-                                }
-                            }
-                            admitted.push(w);
                         }
-                    }
-                    waiting.retain(|w| !admitted.contains(w));
-                    for w in admitted {
-                        self.start_prefill(
-                            w,
-                            t_end,
-                            &mut reqs,
-                            &mut clock,
-                            &mut heap,
-                            &mut seq,
-                            &prefill_state,
-                        );
-                    }
-                    if batches[inst].is_empty() {
-                        step_scheduled[inst] = false;
-                    } else {
-                        push(&mut heap, t_end, Event::DecodeStep { inst }, &mut seq);
+                        batches[inst] = still;
+                        // A step that finishes nobody frees nothing: the
+                        // waiting queue would see the exact availability it
+                        // already failed against, so skip the rescan.
+                        if n_finished > 0 {
+                            // Retention at finish may displace LRU prefixes.
+                            self.emit_evictions(&mut router, t_end);
+                            self.retry_waiting(
+                                t_end,
+                                &mut reqs,
+                                &mut waiting,
+                                &mut router,
+                                &mut clock,
+                                &mut heap,
+                                &mut seq,
+                                &prefill_state,
+                            );
+                        }
+                        if batches[inst].is_empty() {
+                            step_scheduled[inst] = false;
+                            break;
+                        }
+                        // Next-event skip: when every queued event lies
+                        // strictly after this step's end, the re-pushed
+                        // DecodeStep would pop next anyway (an equal-time
+                        // event has an older seq and must go first) — run
+                        // it inline without the heap round-trip.
+                        let next_is_later = match heap.peek() {
+                            Some(t) => t.at > t_end,
+                            None => true,
+                        };
+                        if next_is_later {
+                            last_t = last_t.max(t_end);
+                            step_at = t_end;
+                        } else {
+                            push(&mut heap, t_end, Event::DecodeStep { inst }, &mut seq);
+                            break;
+                        }
                     }
                 }
             }
@@ -662,6 +623,83 @@ impl Simulator {
             for o in &self.observers {
                 o.on_prefix_evict(ev.session, ev.instance, ev.blocks, now);
             }
+        }
+    }
+
+    /// Record a committed placement: drain evictions, cache the prefix-hit
+    /// length, and emit the assign → prefix-hit → kv-borrow observer events
+    /// in the contract order. One implementation for arrivals, membership
+    /// retries, and decode-step retries.
+    fn record_placement(
+        &self,
+        router: &mut DecodeRouter,
+        reqs: &mut [ReqState],
+        i: usize,
+        d: usize,
+        now: f64,
+    ) {
+        self.emit_evictions(router, now);
+        reqs[i].decode_inst = Some(d);
+        reqs[i].cached = router.cached_tokens(i as u64);
+        for o in &self.observers {
+            o.on_decode_assign(i as u64, d, now);
+        }
+        if reqs[i].cached > 0 {
+            for o in &self.observers {
+                o.on_prefix_hit(i as u64, d, reqs[i].cached, now);
+            }
+        }
+        let borrowed = router.broker.pending_blocks(i as u64);
+        if borrowed > 0 {
+            for o in &self.observers {
+                o.on_kv_borrow(i as u64, d, borrowed, now);
+            }
+        }
+    }
+
+    /// Retry the waiting queue in arrival order after capacity grew.
+    /// Placements commit for every admissible request first (so later
+    /// placements see earlier commits, exactly like a burst), then the
+    /// admitted requests leave the queue in one ordered O(W) sweep and
+    /// start prefill.
+    #[allow(clippy::too_many_arguments)]
+    fn retry_waiting(
+        &mut self,
+        now: f64,
+        reqs: &mut [ReqState],
+        waiting: &mut VecDeque<usize>,
+        router: &mut DecodeRouter,
+        clock: &mut DispatchClock,
+        heap: &mut BinaryHeap<Timed>,
+        seq: &mut u64,
+        prefill_state: &[MemberState],
+    ) {
+        if waiting.is_empty() {
+            return;
+        }
+        let mut admitted = Vec::new();
+        for &w in waiting.iter() {
+            let need = reqs[w].prompt_len + reqs[w].output_len;
+            let sess = self.sessions_of.get(&(w as u64)).copied();
+            if let Some(d) = router.route_session(need, reqs[w].prompt_len, w as u64, sess) {
+                self.record_placement(router, reqs, w, d, now);
+                admitted.push(w);
+            }
+        }
+        // `admitted` is an ordered subsequence of `waiting`, so one
+        // two-pointer sweep removes them without the quadratic
+        // `contains` scan.
+        let mut ai = 0;
+        waiting.retain(|&w| {
+            if ai < admitted.len() && admitted[ai] == w {
+                ai += 1;
+                false
+            } else {
+                true
+            }
+        });
+        for w in admitted {
+            self.start_prefill(w, now, reqs, clock, heap, seq, prefill_state);
         }
     }
 

@@ -234,7 +234,8 @@ pub fn assert_no_leaks(server: &Server, blocks_per_instance: usize, backends: us
         router.total_blocks(),
         "aggregate router accounting must return to pristine"
     );
-    for (i, inst) in router.instances.iter().enumerate() {
+    for i in 0..router.n_instances() {
+        let inst = router.instance(i);
         assert_eq!(inst.virtual_blocks, 0, "instance {i} leaked virtual blocks");
         assert_eq!(inst.active_batch, 0, "instance {i} leaked batch slots");
         assert_eq!(

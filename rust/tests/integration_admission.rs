@@ -84,7 +84,8 @@ fn assert_no_leaks(server: &Server, blocks_per_instance: usize, backends: usize)
         router.total_blocks(),
         "aggregate router accounting must return to pristine"
     );
-    for (i, inst) in router.instances.iter().enumerate() {
+    for i in 0..router.n_instances() {
+        let inst = router.instance(i);
         assert_eq!(inst.virtual_blocks, 0, "instance {i} leaked virtual blocks");
         assert_eq!(inst.active_batch, 0, "instance {i} leaked batch slots");
         assert_eq!(
@@ -419,7 +420,7 @@ fn fail_stream_overflow_sheds_the_request_and_releases_everything() {
         }
         other => panic!("expected Shed, got {other:?}"),
     }
-    wait_until(|| server.router_state().instances[0].active_batch == 0, "decode teardown");
+    wait_until(|| server.router_state().instance(0).active_batch == 0, "decode teardown");
     assert_eq!(rec.count("shed"), 1, "exactly one terminal event");
     assert_eq!(rec.count("cancel"), 0, "the losing cancel resolution stays silent");
     assert_no_leaks(&server, 1000, 2);

@@ -82,7 +82,8 @@ fn wait_until(mut pred: impl FnMut() -> bool, what: &str) {
 fn assert_no_leaks(server: &Server, blocks_per_instance: usize, backends: usize) {
     let router = server.router_state();
     assert_eq!(router.in_flight_transfers(), 0, "leaked in-flight transfer");
-    for (i, inst) in router.instances.iter().enumerate() {
+    for i in 0..router.n_instances() {
+        let inst = router.instance(i);
         assert_eq!(inst.virtual_blocks, 0, "instance {i} leaked virtual blocks");
         assert_eq!(inst.active_batch, 0, "instance {i} leaked batch slots");
         assert_eq!(

@@ -362,6 +362,42 @@ fn churn_200_mixed_deadlines_resolves_every_handle_once_and_leaks_nothing() {
     server.shutdown().unwrap();
 }
 
+#[test]
+fn monitor_sheds_decide_on_a_snapshot_no_staler_than_the_tick() {
+    // The general-purpose load-snapshot cache tolerates
+    // LOAD_SNAPSHOT_STALENESS (20ms) — an order of magnitude coarser than
+    // the 2ms monitor tick. An irreversible shed must not act on that
+    // cache: any tick that would fire re-assembles the snapshot first, so
+    // the age of the snapshot behind every monitor shed is bounded by the
+    // tick itself.
+    assert!(
+        tetris::serve::DEADLINE_TICK_SECS < tetris::serve::LOAD_SNAPSHOT_STALENESS,
+        "the monitor tick must be finer than the cache staleness window"
+    );
+    let h = FaultHarness::new();
+    let server = builder(1, 1)
+        .sim_params(roomy())
+        .build_server(h.engine(harness_arch()), 1)
+        .expect("server starts");
+    h.set_step_delay(Duration::from_millis(5));
+    assert!(server.deadline_shed_snapshot_age().is_none(), "no monitor shed yet");
+
+    let mut a = server
+        .submit_async_with(&req(1, 256, 4), SubmitOptions::batch().deadline(0.080))
+        .expect("submitted");
+    assert!(a.wait().deadline_blown(), "the 80ms deadline must blow mid-prefill");
+    let age = server
+        .deadline_shed_snapshot_age()
+        .expect("a monitor-fired shed records the age of the snapshot it acted on");
+    assert!(
+        age <= tetris::serve::DEADLINE_TICK_SECS,
+        "shed decided on a {age:.6}s-old snapshot; the bound is the \
+         {:.6}s monitor tick",
+        tetris::serve::DEADLINE_TICK_SECS
+    );
+    server.shutdown().unwrap();
+}
+
 /// A timing-independent policy for the determinism runs: always one chunk
 /// on instance 0, whatever the queue clocks say.
 struct DetSp1;

@@ -1,0 +1,295 @@
+//! Integration: hot-path concurrency regressions from the speed campaign.
+//!
+//! * The sharded decode router hammered from concurrent submitter and
+//!   finisher threads must place exactly like the single-lock baseline on
+//!   a seeded trace, and drain back to pristine (no stranded or
+//!   double-released blocks).
+//! * An idle dispatcher — nothing tracked by the deadline monitor, role
+//!   controller quiescent — must block on its channel instead of waking
+//!   on every tick.
+//! * Requests that go terminal before planning (shed or cancelled on
+//!   sight) must leave the arrival-rate sliding window, so the
+//!   improvement-rate throttle only sees demand that consumed capacity.
+
+mod harness;
+
+use harness::{builder, harness_arch, req, wait_until, FaultHarness};
+use std::sync::Mutex;
+use std::thread;
+use std::time::Duration;
+use tetris::api::{Completion, RoleController, SubmitOptions};
+use tetris::sched::{DecodeRouter, ImprovementController, RateProfile};
+use tetris::sim::SimParams;
+use tetris::util::rng::Pcg64;
+
+/// One routed entry as the concurrent run observed it: recorded under the
+/// same control-lock critical section that committed the placement, so the
+/// log is exactly the request sequence the router saw.
+struct Logged {
+    id: u64,
+    tokens: usize,
+    cancel: bool,
+    inst: Option<usize>,
+}
+
+#[test]
+fn shard_hammer_matches_single_lock_baseline() {
+    const N_INST: usize = 4;
+    const BLOCKS: usize = 64;
+    const BLOCK_TOKENS: usize = 16;
+    const ROUNDS: usize = 30;
+    const PER_ROUND: usize = 24;
+    const N_SUB: usize = 4;
+    const FINISHERS: usize = 6;
+
+    // Baseline: the same trace fully serialized through one router.
+    let mut baseline = DecodeRouter::new(N_INST, BLOCKS, BLOCK_TOKENS);
+    // Concurrent twin: routes go through the control lock; the lifecycle
+    // (transfer-complete, finish, cancel) goes through per-instance shard
+    // handles only, from many threads at once.
+    let ctl = Mutex::new(DecodeRouter::new(N_INST, BLOCKS, BLOCK_TOKENS));
+    let shards = {
+        let r = ctl.lock().unwrap();
+        assert!(r.shardable(), "no broker, no sessions: shard handles are valid");
+        r.shard_handles()
+    };
+
+    let mut rng = Pcg64::new(0xB0A7);
+    let mut req_id = 0u64;
+    // Requests surviving into the next round, per twin: (instance, seq).
+    let mut base_live: Vec<(usize, u64)> = Vec::new();
+    let mut conc_live: Vec<(usize, u64)> = Vec::new();
+
+    for round in 0..ROUNDS {
+        // Finish the previous round's survivors first — concurrently via
+        // the shard handles, serially on the baseline — so both twins
+        // route this round's burst against identical availability.
+        let shards_ref = &shards;
+        thread::scope(|s| {
+            for chunk in conc_live.chunks(conc_live.len().div_ceil(FINISHERS).max(1)) {
+                s.spawn(move || {
+                    for &(inst, seq) in chunk {
+                        shards_ref[inst].finish(seq);
+                    }
+                });
+            }
+        });
+        conc_live.clear();
+        for (inst, seq) in base_live.drain(..) {
+            baseline.finish(inst, seq);
+        }
+
+        // Seeded burst: 1..=20 blocks each, every 5th cancels in-flight.
+        let burst: Vec<(u64, usize, bool)> = (0..PER_ROUND)
+            .map(|_| {
+                req_id += 1;
+                (req_id, 16 + 16 * rng.below(20) as usize, rng.below(5) == 0)
+            })
+            .collect();
+
+        // Phase A: concurrent submitters. Placement must be a pure
+        // function of the request sequence, so the observed global order
+        // is logged under the routing lock and replayed on the baseline.
+        let log: Mutex<Vec<Logged>> = Mutex::new(Vec::new());
+        let ctl_ref = &ctl;
+        let log_ref = &log;
+        thread::scope(|s| {
+            for chunk in burst.chunks(burst.len().div_ceil(N_SUB).max(1)) {
+                s.spawn(move || {
+                    for &(id, tokens, cancel) in chunk {
+                        let mut r = ctl_ref.lock().unwrap();
+                        let inst = r.route(tokens, id);
+                        log_ref.lock().unwrap().push(Logged { id, tokens, cancel, inst });
+                    }
+                });
+            }
+        });
+        let log = log.into_inner().unwrap();
+        for e in &log {
+            assert_eq!(
+                baseline.route(e.tokens, e.id),
+                e.inst,
+                "round {round}, request {}: placement diverged from the \
+                 single-lock baseline",
+                e.id
+            );
+        }
+
+        // Phase B: finisher threads hammer the shard handles. Cancels
+        // unwind their reservation; even-positioned placements complete
+        // their whole lifecycle now; odd-positioned ones survive into the
+        // next round so load carries across bursts.
+        let routed: Vec<(usize, usize, bool, bool)> = log
+            .iter()
+            .enumerate()
+            .filter_map(|(k, e)| e.inst.map(|i| (i, e.tokens, e.cancel, k % 2 == 1)))
+            .collect();
+        let kept: Mutex<Vec<(usize, u64)>> = Mutex::new(Vec::new());
+        let kept_ref = &kept;
+        thread::scope(|s| {
+            for chunk in routed.chunks(routed.len().div_ceil(FINISHERS).max(1)) {
+                s.spawn(move || {
+                    for &(inst, tokens, cancel, keep) in chunk {
+                        if cancel {
+                            shards_ref[inst].cancel(tokens);
+                        } else {
+                            let seq = shards_ref[inst]
+                                .transfer_complete(tokens)
+                                .expect("virtual reservation guarantees space");
+                            if keep {
+                                kept_ref.lock().unwrap().push((inst, seq));
+                            } else {
+                                shards_ref[inst].finish(seq);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        conc_live = kept.into_inner().unwrap();
+        for (k, e) in log.iter().enumerate() {
+            let Some(inst) = e.inst else { continue };
+            if e.cancel {
+                baseline.cancel(inst, e.tokens, e.id);
+            } else {
+                let seq = baseline
+                    .transfer_complete(inst, e.tokens, e.id)
+                    .expect("virtual reservation guarantees space");
+                if k % 2 == 1 {
+                    base_live.push((inst, seq));
+                } else {
+                    baseline.finish(inst, seq);
+                }
+            }
+        }
+
+        // The twins must agree instance-by-instance after every round —
+        // any strand or double release shows up as an availability skew.
+        let conc = ctl.lock().unwrap();
+        for i in 0..N_INST {
+            assert_eq!(
+                baseline.instance(i).available_blocks(),
+                conc.instance(i).available_blocks(),
+                "round {round}: instance {i} availability diverged"
+            );
+        }
+    }
+
+    // Drain the tail and require both twins pristine: every block free,
+    // every counter zero, bit-for-bit equal per instance.
+    for &(inst, seq) in &conc_live {
+        shards[inst].finish(seq);
+    }
+    for (inst, seq) in base_live.drain(..) {
+        baseline.finish(inst, seq);
+    }
+    let conc = ctl.lock().unwrap();
+    assert_eq!(conc.available_blocks(), conc.total_blocks(), "blocks stranded or double-freed");
+    assert_eq!(conc.in_flight_transfers(), 0);
+    for i in 0..N_INST {
+        let b = baseline.instance(i);
+        let c = conc.instance(i);
+        assert_eq!(
+            (b.active_batch, b.virtual_blocks, b.pending_transfers, b.blocks.free_blocks()),
+            (c.active_batch, c.virtual_blocks, c.pending_transfers, c.blocks.free_blocks()),
+            "instance {i}: final state diverged"
+        );
+    }
+}
+
+#[test]
+fn idle_dispatcher_blocks_instead_of_ticking() {
+    // A configured role controller used to keep the dispatcher waking
+    // every 20ms forever, even on a completely idle server. Once the
+    // controller observes quiescence the loop must fall back to a plain
+    // blocking recv.
+    let server = builder(1, 1)
+        .role_control(RoleController::default(), 0.05)
+        .build_server(std::sync::Arc::new(tetris::runtime::Engine::stub_default()), 1)
+        .expect("server starts");
+    thread::sleep(Duration::from_millis(250));
+    let settled = server.dispatcher_timer_wakeups();
+    thread::sleep(Duration::from_millis(300));
+    let after = server.dispatcher_timer_wakeups();
+    assert!(
+        after - settled < 5,
+        "an idle dispatcher must block on its channel, not poll: \
+         {settled} -> {after} timer wake-ups across an idle 300ms window \
+         (a 20ms role tick would take ~15)"
+    );
+
+    // A deadline-carrying request that resolves must not leave the loop
+    // ticking on its stale monitor entry either: resolved entries are
+    // pruned before the wait mode is chosen.
+    let mut h = server
+        .submit_async_with(&req(1, 64, 4), SubmitOptions::batch().deadline(30.0))
+        .expect("submitted");
+    assert!(h.wait().is_finished());
+    thread::sleep(Duration::from_millis(250));
+    let settled = server.dispatcher_timer_wakeups();
+    thread::sleep(Duration::from_millis(300));
+    let after = server.dispatcher_timer_wakeups();
+    assert!(
+        after - settled < 5,
+        "resolved deadline entries must be pruned before choosing the wait \
+         mode: {settled} -> {after} wake-ups across an idle 300ms window"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn pre_plan_terminal_arrivals_leave_the_rate_window() {
+    // Five requests park behind a capacity-pinning one and are cancelled
+    // before ever being planned. The arrival-rate window backing the
+    // improvement-rate throttle must end up holding only the one arrival
+    // that actually consumed capacity.
+    const WINDOW: f64 = 30.0;
+    let h = FaultHarness::new();
+    let server = builder(1, 1)
+        .controller(ImprovementController::new(
+            RateProfile::new(vec![(0.0, 0.3)]),
+            WINDOW,
+            1e9,
+        ))
+        .sim_params(SimParams {
+            backends_per_decode: 2,
+            decode_capacity_tokens: 320, // 20 blocks of 16
+            block_tokens: 16,
+        })
+        .build_server(h.engine(harness_arch()), 1)
+        .expect("server starts");
+    h.set_step_delay(Duration::from_millis(5));
+
+    // A pins 18 of the 20 blocks through a long, slow prefill + decode.
+    let mut a = server.submit_async(&req(1, 240, 40)).expect("A submitted");
+    // Five more needing 3 blocks each: all park behind A.
+    let mut parked = Vec::new();
+    for i in 2..=6 {
+        parked.push(server.submit_async(&req(i, 40, 3)).expect("submitted"));
+    }
+    wait_until(|| server.n_parked() == 5, "all five parked");
+    for p in &parked {
+        p.cancel();
+    }
+    for p in &mut parked {
+        assert!(
+            matches!(p.wait(), Completion::Cancelled(_)),
+            "parked requests must resolve as cancelled"
+        );
+    }
+    // The retraction lands right after the resolution; poll until the
+    // freshly assembled snapshot reflects it, then pin the exact count.
+    wait_until(
+        || (server.load().arrival_rate * WINDOW).round() as i64 == 1,
+        "window drains to A's arrival",
+    );
+    let rate = server.load().arrival_rate;
+    assert!(
+        (rate * WINDOW - 1.0).abs() < 1e-6,
+        "window must hold exactly A's arrival: rate {rate} over {WINDOW}s \
+         counts {} arrivals",
+        rate * WINDOW
+    );
+    assert!(a.wait().is_finished());
+    server.shutdown().unwrap();
+}

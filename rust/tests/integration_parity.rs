@@ -210,9 +210,9 @@ fn admission_parks_when_decode_full_and_recovers() {
     // in-flight transfer counts return to zero, all blocks free.
     let router = server.router_state();
     assert_eq!(router.in_flight_transfers(), 0);
-    assert_eq!(router.instances[0].virtual_blocks, 0);
-    assert_eq!(router.instances[0].active_batch, 0);
-    assert_eq!(router.instances[0].blocks.free_blocks(), 16);
+    assert_eq!(router.instance(0).virtual_blocks, 0);
+    assert_eq!(router.instance(0).active_batch, 0);
+    assert_eq!(router.instance(0).blocks.free_blocks(), 16);
     assert_eq!(server.free_transfer_backends(0), 2, "no backend leaked");
     // All three were placed on the single instance.
     let assign = assignments(&rec);
@@ -363,7 +363,8 @@ fn router_invariants_hold_under_concurrent_handoff() {
     assert!(total > 0, "some requests must have routed");
     let r = router.lock().unwrap();
     assert_eq!(r.in_flight_transfers(), 0);
-    for inst in &r.instances {
+    for i in 0..r.n_instances() {
+        let inst = r.instance(i);
         assert_eq!(inst.virtual_blocks, 0);
         assert_eq!(inst.active_batch, 0);
         assert_eq!(inst.blocks.free_blocks(), 64);

@@ -141,7 +141,8 @@ fn ttfts_by_req(events: &[TraceEvent]) -> BTreeMap<u64, f64> {
 fn assert_no_leaks_with_sessions(server: &Server, blocks_per_instance: usize, backends: usize) {
     let router = server.router_state();
     assert_eq!(router.in_flight_transfers(), 0, "leaked in-flight transfer");
-    for (i, inst) in router.instances.iter().enumerate() {
+    for i in 0..router.n_instances() {
+        let inst = router.instance(i);
         assert_eq!(inst.virtual_blocks, 0, "instance {i} leaked virtual blocks");
         assert_eq!(inst.active_batch, 0, "instance {i} leaked batch slots");
         let retained = router.sessions.retained_blocks_on(i);
@@ -468,7 +469,8 @@ fn multi_turn_churn_with_cancels_and_sheds_leaks_nothing() {
         || {
             let r = server.router_state();
             r.in_flight_transfers() == 0
-                && r.instances.iter().enumerate().all(|(i, inst)| {
+                && (0..r.n_instances()).all(|i| {
+                    let inst = r.instance(i);
                     inst.virtual_blocks == 0
                         && inst.active_batch == 0
                         && inst.blocks.free_blocks() + r.sessions.retained_blocks_on(i) == 250
